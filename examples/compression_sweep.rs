@@ -1,0 +1,28 @@
+//! Fig. 3 / Table 2: the accuracy-vs-compression trade-off of Local
+//! Zampling across weight degrees d.
+//!
+//!     cargo run --release --example compression_sweep [-- --scale paper]
+//!
+//! `--scale ci` (default) runs a minutes-scale grid; `--scale paper` is
+//! the full §3.1 sweep (d ∈ {1,5,10,50,100} × m/n = 2^0..2^10, 5 seeds).
+
+use zampling::experiments::{compression_sweep, Scale};
+use zampling::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let scale = Scale::parse(&args.str_or("scale", "ci")).expect("scale");
+    let cells = compression_sweep::run(scale);
+    compression_sweep::print_table(&cells);
+    // The headline trend of Fig. 3: roughly constant drop per doubling.
+    println!("\nper-doubling accuracy drop (d=5 row):");
+    let row: Vec<_> = cells.iter().filter(|c| c.d == 5).collect();
+    for pair in row.windows(2) {
+        println!(
+            "  m/n {:>4} -> {:>4}: {:+.2} pts",
+            pair[0].factor,
+            pair[1].factor,
+            (pair[1].mean_sampled_acc - pair[0].mean_sampled_acc) * 100.0
+        );
+    }
+}

@@ -1,0 +1,79 @@
+//! Fig. 4 + Table 1: the END-TO-END DRIVER (DESIGN.md §validation).
+//!
+//! Runs Federated Zampling at m/n ∈ {1, 8, 32} plus the FedAvg and FedPM
+//! baselines on the MNIST-like task, logging the accuracy curve per round
+//! and the Table 1 savings factors.
+//!
+//!     cargo run --release --example federated_mnist [-- --scale paper]
+//!                                                   [--rounds N] [--clients K]
+//!
+//! At `--scale paper` this is the paper's §3.2 configuration (MnistFc,
+//! m = 266,610, 10 clients, 100 rounds); `ci` shrinks to minutes.
+
+use std::path::Path;
+
+use zampling::experiments::federated::{
+    fed_config, load_fed_data, print_table1, run_fedavg_row, run_fedpm_row,
+    run_zampling_row_with, Table1Row,
+};
+use zampling::experiments::Scale;
+use zampling::runtime::PjrtRuntime;
+use zampling::util::cli::Args;
+use zampling::zampling::{DenseExecutor, NativeExecutor};
+
+fn main() {
+    let args = Args::from_env();
+    let scale = Scale::parse(&args.str_or("scale", "ci")).expect("scale");
+    let rounds_override = args.get("rounds").map(|r| r.parse::<usize>().expect("rounds"));
+    let clients_override = args.get("clients").map(|c| c.parse::<usize>().expect("clients"));
+    let eval_every = args.usize_or("eval-every", if scale == Scale::Ci { 2 } else { 5 });
+
+    let mut rows: Vec<Table1Row> = Vec::new();
+    println!("== baselines ==");
+    rows.push(run_fedavg_row(scale, eval_every));
+    rows.push(run_fedpm_row(scale, eval_every));
+
+    for factor in [1usize, 8, 32] {
+        let mut cfg = fed_config(factor, scale);
+        if let Some(r) = rounds_override {
+            cfg.rounds = r;
+        }
+        if let Some(c) = clients_override {
+            cfg.clients = c;
+        }
+        let (shards, test) = load_fed_data(&cfg);
+        println!(
+            "== federated zampling m/n={} (n={}) clients={} rounds={} ==",
+            factor, cfg.train.n, cfg.clients, cfg.rounds
+        );
+        // Three-layer path when artifacts exist; native oracle otherwise.
+        let row = match PjrtRuntime::new(Path::new("artifacts")) {
+            Ok(rt) => {
+                let mut exec = rt.dense_executor(&cfg.train.arch.name).expect("pjrt exec");
+                run_zampling_row_with(&cfg, &mut exec, &shards, &test, scale, eval_every)
+            }
+            Err(_) => {
+                let mut exec =
+                    NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500);
+                run_zampling_row_with(
+                    &cfg,
+                    &mut exec as &mut dyn DenseExecutor as &mut dyn DenseExecutor,
+                    &shards,
+                    &test,
+                    scale,
+                    eval_every,
+                )
+            }
+        };
+        for r in &row.log.rounds {
+            println!(
+                "  round {:>3}  sampled {:.4} ± {:.4}  expected {:.4}",
+                r.round, r.mean_sampled_acc, r.sampled_acc_std, r.expected_acc
+            );
+        }
+        row.log.save(Path::new("results")).expect("save log");
+        rows.push(row);
+    }
+
+    print_table1(&rows);
+}

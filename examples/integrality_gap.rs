@@ -1,0 +1,17 @@
+//! Fig. 5 (Appendix A): the integrality gap — train the expected network
+//! WITHOUT sampling from Beta(α,α) initializations and watch the sampled
+//! network collapse unless the init is extreme.
+//!
+//!     cargo run --release --example integrality_gap [-- --scale paper]
+
+use zampling::experiments::{integrality_gap, Scale};
+use zampling::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let scale = Scale::parse(&args.str_or("scale", "ci")).expect("scale");
+    let points = integrality_gap::run(scale);
+    integrality_gap::print_figure(&points);
+    println!("\n(the gap column is the Fig. 5 blue-vs-red separation; small α pins");
+    println!(" p near {{0,1}} and closes it, α → 1 reopens it)");
+}

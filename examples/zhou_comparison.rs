@@ -1,0 +1,14 @@
+//! Fig. 6 (Appendix B.1): Local Zampling vs the Zhou et al. supermask
+//! baseline, best-of-100-masks metric.
+//!
+//!     cargo run --release --example zhou_comparison [-- --scale paper]
+
+use zampling::experiments::{zhou_comparison, Scale};
+use zampling::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let scale = Scale::parse(&args.str_or("scale", "ci")).expect("scale");
+    let bars = zhou_comparison::run(scale);
+    zhou_comparison::print_figure(&bars);
+}

@@ -1,0 +1,191 @@
+"""AOT compile path: lower every artifact to HLO *text* + a JSON manifest.
+
+Run once via ``make artifacts`` (no-op when inputs are unchanged); the Rust
+runtime (`rust/src/runtime/`) loads the text with
+``HloModuleProto::from_text_file`` and compiles it on the PJRT CPU client.
+
+HLO text — NOT ``lowered.compile().serialize()`` — is the interchange
+format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids which
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (shapes recorded in ``artifacts/manifest.json``):
+
+* ``train_step_{arch}.hlo.txt``  (w, x[B,784], y1h[B,10]) → (loss, grad_w, correct)
+* ``eval_step_{arch}.hlo.txt``   (w, x[E,784], y1h[E,10]) → (loss, correct)
+* ``fused_step_{arch}_n{n}_d{d}.hlo.txt``
+      (z[n], rid[m,d] i32, rv[m,d], cid[n,c] i32, cv[n,c], x, y1h)
+      → (loss, grad_s_raw, correct)   — L1 Pallas kernels lowered inside.
+
+The padded-CSC width ``c`` must match between this file and the Rust
+``sparse::csc_pad_width`` — both implement the same closed-form bound.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+TRAIN_BATCH = 128  # §3 Experimental Constant: "batches of size 128"
+EVAL_BATCH = 500   # divides both 60k and 10k; eval is throughput-bound
+
+# Flagship fused configs: the federated experiment grid of §3.2
+# (MnistFc, d = 10, m/n ∈ {1, 8, 32}) plus a small-arch smoke config.
+FUSED_CONFIGS = [
+    ("small", 8, 4),     # (arch, compression m/n, d) — smoke / tests
+    ("mnistfc", 1, 10),
+    ("mnistfc", 8, 10),
+    ("mnistfc", 32, 10),
+]
+
+
+def csc_pad_width(m: int, n: int, d: int) -> int:
+    """Padded CSC width: a high-probability bound on the max column degree.
+
+    Column degrees are Binomial(m, d/n) (d draws/row without replacement,
+    uniform columns); mean μ = m·d/n.  μ + 6√μ + 16, rounded up to a
+    multiple of 8, bounds the max of n such binomials except with
+    negligible probability.  Rust's ``sparse::csc_pad_width`` MUST match.
+    """
+    mu = m * d / n
+    return int(math.ceil((mu + 6.0 * math.sqrt(mu) + 16.0) / 8.0) * 8)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_train_step(arch: M.Arch, batch: int) -> str:
+    step = M.make_train_step(arch)
+    lowered = jax.jit(step).lower(
+        _spec((arch.num_params,)),
+        _spec((batch, arch.layers[0])),
+        _spec((batch, arch.layers[-1])),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_eval_step(arch: M.Arch, batch: int) -> str:
+    step = M.make_eval_step(arch)
+    lowered = jax.jit(step).lower(
+        _spec((arch.num_params,)),
+        _spec((batch, arch.layers[0])),
+        _spec((batch, arch.layers[-1])),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_fused_step(arch: M.Arch, n: int, d: int, batch: int, use_pallas: bool) -> str:
+    m = arch.num_params
+    c = csc_pad_width(m, n, d)
+    step = M.make_fused_train_step(arch, use_pallas=use_pallas)
+    lowered = jax.jit(step).lower(
+        _spec((n,)),
+        _spec((m, d), jnp.int32),
+        _spec((m, d)),
+        _spec((n, c), jnp.int32),
+        _spec((n, c)),
+        _spec((batch, arch.layers[0])),
+        _spec((batch, arch.layers[-1])),
+    )
+    return to_hlo_text(lowered)
+
+
+def _write(path: str, text: str) -> dict:
+    with open(path, "w") as f:
+        f.write(text)
+    digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+    return {"path": os.path.basename(path), "sha256_16": digest, "bytes": len(text)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--no-pallas",
+        action="store_true",
+        help="lower fused steps through the pure-jnp reference instead of "
+        "the Pallas kernels (debug aid; artifacts are numerically identical)",
+    )
+    ap.add_argument(
+        "--skip-fused",
+        action="store_true",
+        help="only dense train/eval artifacts (fast CI path)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "train_batch": TRAIN_BATCH,
+        "eval_batch": EVAL_BATCH,
+        "archs": {},
+        "fused": [],
+    }
+
+    for arch in M.ARCHS.values():
+        print(f"[aot] {arch.name}: m={arch.num_params} layers={arch.layers}")
+        t = _write(
+            os.path.join(args.out_dir, f"train_step_{arch.name}.hlo.txt"),
+            lower_train_step(arch, TRAIN_BATCH),
+        )
+        e = _write(
+            os.path.join(args.out_dir, f"eval_step_{arch.name}.hlo.txt"),
+            lower_eval_step(arch, EVAL_BATCH),
+        )
+        manifest["archs"][arch.name] = {
+            "layers": list(arch.layers),
+            "num_params": arch.num_params,
+            "train": t,
+            "eval": e,
+        }
+
+    if not args.skip_fused:
+        for arch_name, factor, d in FUSED_CONFIGS:
+            arch = M.ARCHS[arch_name]
+            m = arch.num_params
+            n = m // factor
+            c = csc_pad_width(m, n, d)
+            print(f"[aot] fused {arch_name} n={n} (m/n={factor}) d={d} c={c}")
+            f = _write(
+                os.path.join(
+                    args.out_dir, f"fused_step_{arch_name}_n{n}_d{d}.hlo.txt"
+                ),
+                lower_fused_step(arch, n, d, TRAIN_BATCH, not args.no_pallas),
+            )
+            manifest["fused"].append(
+                {
+                    "arch": arch_name,
+                    "n": n,
+                    "d": d,
+                    "c": c,
+                    "compression": factor,
+                    "pallas": not args.no_pallas,
+                    **f,
+                }
+            )
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

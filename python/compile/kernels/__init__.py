@@ -1,0 +1,7 @@
+"""L1 Pallas kernels for the Zampling hot-spot (``w = Qz`` / ``g_s = Qᵀg_w``)."""
+
+from .qz_gather import qz_matvec
+from .qt_gather import qt_matvec
+from . import ref
+
+__all__ = ["qz_matvec", "qt_matvec", "ref"]

@@ -1,0 +1,99 @@
+"""L1 Pallas kernel: ``w = Q z`` as a blocked VMEM-resident gather.
+
+The Zampling hot-spot.  ``Q`` is stored row-major as exactly-``d``-entry
+gather rows (``rid[m, d]`` indices into ``z``, ``rv[m, d]`` values); the
+kernel tiles the ``m`` rows over a 1-D grid and keeps the full mask ``z``
+in VMEM (``n ≤ m`` and even the flagship MnistFc ``n = m = 266,610`` is
+~1 MiB as f32 — far under the ~16 MiB VMEM budget).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the GPU-native version of
+this op stages ``z`` in shared memory per threadblock; on TPU the analogue
+is a whole-vector VMEM residency with row tiles streamed HBM→VMEM by the
+BlockSpec pipeline.  The gather itself is VPU work (no MXU), so the roof is
+memory bandwidth on the ``rid``/``rv`` streams: 8 bytes per stored entry.
+
+Lowered with ``interpret=True`` everywhere in this repo — the CPU PJRT
+plugin cannot execute Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per grid step.  8 sublanes × 128 lanes is the native f32 VPU tile;
+# 512 rows keeps the per-step VMEM traffic (512·d·8 B) comfortably inside
+# the pipeline's double-buffering budget for every d used in the paper
+# (d ≤ 256 → ≤ 1 MiB/step) while amortizing grid overhead.
+DEFAULT_TILE_M = 512
+
+
+def _qz_kernel(z_ref, rid_ref, rv_ref, w_ref):
+    """One grid step: rows [i*TILE_M, (i+1)*TILE_M) of ``w = Q z``.
+
+    ``z_ref`` is the full mask in VMEM (index_map pins block 0 for every
+    step, so the pipeline loads it once); ``rid_ref``/``rv_ref`` are the
+    row tile; the gather+multiply+row-sum is a pure VPU expression.
+    """
+    z = z_ref[...]
+    rid = rid_ref[...]
+    rv = rv_ref[...]
+    w_ref[...] = jnp.sum(rv * z[rid], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m",))
+def qz_matvec(
+    rid: jnp.ndarray,
+    rv: jnp.ndarray,
+    z: jnp.ndarray,
+    *,
+    tile_m: int = DEFAULT_TILE_M,
+) -> jnp.ndarray:
+    """Compute ``w = Q z`` with the Pallas gather kernel.
+
+    Args:
+      rid: ``[m, d]`` int32 column indices (one row of Q per row).
+      rv:  ``[m, d]`` float32 values.
+      z:   ``[n]`` float32 mask or probability vector.
+      tile_m: rows per grid step; ``m`` is padded up to a multiple.
+
+    Returns:
+      ``[m]`` float32 weight vector.
+    """
+    m, d = rid.shape
+    (n,) = z.shape
+    # Pad the row count so the grid divides evenly; padded rows gather
+    # z[0] * 0.0 and are sliced off at the end.
+    m_pad = (-m) % tile_m
+    if m_pad:
+        rid = jnp.concatenate([rid, jnp.zeros((m_pad, d), rid.dtype)], axis=0)
+        rv = jnp.concatenate([rv, jnp.zeros((m_pad, d), rv.dtype)], axis=0)
+    grid = (rid.shape[0] // tile_m,)
+
+    w = pl.pallas_call(
+        _qz_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),          # z: whole vector, every step
+            pl.BlockSpec((tile_m, d), lambda i: (i, 0)),  # rid: row tile
+            pl.BlockSpec((tile_m, d), lambda i: (i, 0)),  # rv: row tile
+        ],
+        out_specs=pl.BlockSpec((tile_m,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rid.shape[0],), rv.dtype),
+        interpret=True,
+    )(z, rid, rv)
+    return w[:m]
+
+
+def vmem_bytes_per_step(d: int, n: int, tile_m: int = DEFAULT_TILE_M) -> int:
+    """Static VMEM footprint estimate of one grid step (for DESIGN.md §Perf).
+
+    z (n·4) + rid tile (tile_m·d·4) + rv tile (tile_m·d·4) + out (tile_m·4),
+    ×2 for the pipeline's double buffering of the streamed operands.
+    """
+    streamed = 2 * (tile_m * d * 4 * 2 + tile_m * 4)
+    resident = n * 4
+    return streamed + resident

@@ -1,0 +1,64 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+These are the ground truth the pytest suite checks the Pallas kernels
+against (``assert_allclose``).  They are also what the L2 model falls back
+to when ``use_pallas=False`` so the dense/fused artifact split can be
+validated end-to-end without the kernels in the loop.
+
+Sparse layout
+-------------
+The influence matrix ``Q ∈ R^{m×n}`` (Eq. 1 of the paper) is carried in two
+padded gather layouts, both produced by the Rust ``sparse`` module and fed
+to the fused artifact as runtime buffers:
+
+* row layout  (CSR-like): ``rid[m, d]`` int32 column indices and
+  ``rv[m, d]`` float32 values — exactly ``d`` non-zeros per row by
+  construction, so no padding is needed.
+* column layout (padded CSC): ``cid[n, c]`` int32 row indices and
+  ``cv[n, c]`` float32 values, padded with ``(0, 0.0)`` up to the max
+  column degree ``c``; padding contributes ``0 * g_w[0] = 0``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def qz_matvec_ref(rid: jnp.ndarray, rv: jnp.ndarray, z: jnp.ndarray) -> jnp.ndarray:
+    """Reference ``w = Q z`` over the row gather layout.
+
+    Args:
+      rid: ``[m, d]`` int32 — column index of each stored entry.
+      rv:  ``[m, d]`` float32 — value of each stored entry.
+      z:   ``[n]`` float32 — mask / probability vector.
+
+    Returns:
+      ``[m]`` float32 — ``w_i = sum_k rv[i, k] * z[rid[i, k]]``.
+    """
+    return jnp.sum(rv * z[rid], axis=1)
+
+
+def qt_matvec_ref(cid: jnp.ndarray, cv: jnp.ndarray, g_w: jnp.ndarray) -> jnp.ndarray:
+    """Reference ``g_s = Qᵀ g_w`` over the padded column gather layout.
+
+    Args:
+      cid: ``[n, c]`` int32 — row index of each stored entry (0-padded).
+      cv:  ``[n, c]`` float32 — value of each stored entry (0.0-padded).
+      g_w: ``[m]`` float32 — upstream gradient w.r.t. the weights.
+
+    Returns:
+      ``[n]`` float32 — ``g_s_j = sum_k cv[j, k] * g_w[cid[j, k]]``.
+    """
+    return jnp.sum(cv * g_w[cid], axis=1)
+
+
+def dense_q_from_row_layout(rid: jnp.ndarray, rv: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Materialize the dense ``[m, n]`` Q from the row gather layout.
+
+    Only used in tests (small shapes) to cross-check both sparse oracles
+    against plain dense matmuls.
+    """
+    m, d = rid.shape
+    q = jnp.zeros((m, n), dtype=rv.dtype)
+    rows = jnp.repeat(jnp.arange(m), d)
+    return q.at[rows, rid.reshape(-1)].add(rv.reshape(-1))

@@ -1,0 +1,192 @@
+"""L2: the paper's model (MLP fwd/bwd + softmax-CE) in JAX.
+
+Two architectures, exactly as §3 "Experimental Constant":
+
+* ``SMALL_ARCH``  — 784-20-20-10 feedforward ("two hidden layers and twenty
+  neurons per layer"), used for the compression (Fig. 3 / Table 2) and
+  sensitivity (Table 4) experiments.
+* ``MNISTFC``     — 784-300-100-10 ("exactly as the one in Zhou"), used in
+  the federated experiments (Fig. 4 / Table 1) and the Zhou comparison.
+
+Three jitted entry points are AOT-lowered by ``aot.py``:
+
+* ``train_step(w, x, y1h)``      → ``(loss, grad_w, correct)`` — the dense
+  path.  Independent of ``(n, d)``: the Rust coordinator owns the sparse
+  ``w = Qz`` / ``g_s = Qᵀ g_w ⊙ 1{0<p<1}`` wrapping, so one artifact per
+  architecture serves every compression level.
+* ``eval_step(w, x, y1h)``       → ``(loss, correct)``.
+* ``fused_train_step(z, rid, rv, cid, cv, x, y1h)`` → ``(loss, grad_s,
+  correct)`` — the three-layer flagship: the L1 Pallas gather kernels are
+  lowered *into* the artifact via a ``jax.custom_vjp`` pair, so the rust
+  hot path feeds masks directly.
+
+Weight layout: the flat ``w[m]`` packs each layer as ``W_l`` (row-major,
+``[fan_in, fan_out]``) followed by ``b_l``; the Rust ``nn::ArchSpec`` uses
+the identical packing so fan-in values for the σ_i of Eq. (1) line up.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import qt_matvec, qz_matvec
+from .kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class Arch:
+    """Feedforward architecture description (mirrors rust ``nn::ArchSpec``)."""
+
+    name: str
+    layers: tuple  # (in, h1, ..., out)
+
+    @property
+    def num_params(self) -> int:
+        m = 0
+        for fi, fo in zip(self.layers[:-1], self.layers[1:]):
+            m += fi * fo + fo
+        return m
+
+    def slices(self):
+        """Yield ``(offset, fan_in, fan_out, w_len, b_len)`` per layer."""
+        off = 0
+        for fi, fo in zip(self.layers[:-1], self.layers[1:]):
+            yield off, fi, fo, fi * fo, fo
+            off += fi * fo + fo
+
+
+SMALL_ARCH = Arch("small", (784, 20, 20, 10))
+MNISTFC = Arch("mnistfc", (784, 300, 100, 10))
+ARCHS = {a.name: a for a in (SMALL_ARCH, MNISTFC)}
+
+# m = 266,610 for MNISTFC — matches the paper's §3.2 figure exactly.
+assert MNISTFC.num_params == 266_610, MNISTFC.num_params
+assert SMALL_ARCH.num_params == 784 * 20 + 20 + 20 * 20 + 20 + 20 * 10 + 10
+
+
+def unflatten(arch: Arch, w: jnp.ndarray):
+    """Split the flat parameter vector into per-layer ``(W, b)`` pairs."""
+    params = []
+    for off, fi, fo, wl, bl in arch.slices():
+        W = w[off : off + wl].reshape(fi, fo)
+        b = w[off + wl : off + wl + bl]
+        params.append((W, b))
+    return params
+
+
+def forward(arch: Arch, w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """MLP forward pass → logits ``[B, 10]`` (ReLU hidden, linear head)."""
+    params = unflatten(arch, w)
+    h = x
+    for i, (W, b) in enumerate(params):
+        h = h @ W + b
+        if i + 1 < len(params):
+            h = jax.nn.relu(h)
+    return h
+
+
+def loss_and_correct(arch: Arch, w: jnp.ndarray, x: jnp.ndarray, y1h: jnp.ndarray):
+    """Weighted-mean softmax cross-entropy and number of correct predictions.
+
+    Labels arrive one-hot (``y1h[B, 10]`` f32) so the artifact signature is
+    all-float — the rust side one-hots labels when staging batches.
+    Rows whose one-hot sums to zero are *padding* (rust zero-pads partial
+    batches to the artifact's fixed batch size): they contribute nothing to
+    the loss denominator or the correct count.
+    """
+    logits = forward(arch, w, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    roww = jnp.sum(y1h, axis=-1)  # 1.0 real row, 0.0 padding
+    denom = jnp.maximum(jnp.sum(roww), 1.0)
+    loss = jnp.sum(-jnp.sum(y1h * logp, axis=-1)) / denom
+    match = (jnp.argmax(logits, axis=-1) == jnp.argmax(y1h, axis=-1)).astype(
+        jnp.float32
+    )
+    correct = jnp.sum(match * roww)
+    return loss, correct
+
+
+def make_train_step(arch: Arch) -> Callable:
+    """Dense train step: ``(w, x, y1h) → (loss, grad_w, correct)``."""
+
+    def step(w, x, y1h):
+        (loss, correct), grad_w = jax.value_and_grad(
+            lambda w_: loss_and_correct(arch, w_, x, y1h), has_aux=True
+        )(w)
+        return loss, grad_w, correct
+
+    return step
+
+
+def make_eval_step(arch: Arch) -> Callable:
+    """Eval step: ``(w, x, y1h) → (loss, correct)``."""
+
+    def step(w, x, y1h):
+        return loss_and_correct(arch, w, x, y1h)
+
+    return step
+
+
+def _sparse_pair(use_pallas: bool):
+    if use_pallas:
+        return qz_matvec, qt_matvec
+    return kref.qz_matvec_ref, kref.qt_matvec_ref
+
+
+def make_qz_with_vjp(use_pallas: bool = True):
+    """``w = Qz`` with a custom VJP routing the cotangent through Qᵀ.
+
+    The sparse layouts (row gather + padded CSC) are non-differentiable
+    constants; the VJP w.r.t. ``z`` is exactly the transpose gather kernel,
+    so both L1 kernels end up inside the lowered fused artifact.
+    """
+    fwd_k, bwd_k = _sparse_pair(use_pallas)
+
+    @jax.custom_vjp
+    def qz(z, rid, rv, cid, cv):
+        return fwd_k(rid, rv, z)
+
+    def qz_fwd(z, rid, rv, cid, cv):
+        return fwd_k(rid, rv, z), (cid, cv)
+
+    def qz_bwd(res, g_w):
+        cid, cv = res
+        g_z = bwd_k(cid, cv, g_w)
+        return (g_z, None, None, None, None)
+
+    qz.defvjp(qz_fwd, qz_bwd)
+    return qz
+
+
+def make_fused_train_step(arch: Arch, use_pallas: bool = True) -> Callable:
+    """Fused step: mask in, score-gradient out, Pallas kernels inside.
+
+    ``(z, rid, rv, cid, cv, x, y1h) → (loss, grad_s_raw, correct)``.
+    The returned gradient is the *raw* ``Qᵀ ∇_w L``; the coordinator applies
+    the paper's straight-through indicator ``⊙ 1{0 < p < 1}`` (it owns ``p``).
+    """
+    qz = make_qz_with_vjp(use_pallas)
+
+    def step(z, rid, rv, cid, cv, x, y1h):
+        def loss_fn(z_):
+            w = qz(z_, rid, rv, cid, cv)
+            return loss_and_correct(arch, w, x, y1h)
+
+        (loss, correct), grad_s = jax.value_and_grad(loss_fn, has_aux=True)(z)
+        return loss, grad_s, correct
+
+    return step
+
+
+def init_weights_kaiming(arch: Arch, key) -> jnp.ndarray:
+    """He-normal init of the flat weight vector (baseline/FedAvg paths)."""
+    parts = []
+    for off, fi, fo, wl, bl in arch.slices():
+        key, sub = jax.random.split(key)
+        parts.append(jax.random.normal(sub, (wl,)) * jnp.sqrt(2.0 / fi))
+        parts.append(jnp.zeros((bl,)))
+    return jnp.concatenate(parts)

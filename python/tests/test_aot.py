@@ -1,0 +1,58 @@
+"""AOT path: lowering produces parseable HLO text with the right signature."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+def test_csc_pad_width_monotone_and_sufficient():
+    # larger d → wider pad; pad always exceeds the binomial mean m*d/n
+    for m, n in [(16_330, 2041), (266_610, 8331), (1000, 1000)]:
+        prev = 0
+        for d in (1, 2, 5, 10, 50):
+            c = aot.csc_pad_width(m, n, d)
+            assert c % 8 == 0
+            assert c > m * d / n
+            assert c >= prev
+            prev = c
+
+
+def test_lower_train_step_small_produces_hlo():
+    text = aot.lower_train_step(M.SMALL_ARCH, batch=8)
+    assert "HloModule" in text
+    # entry computation carries the three f32 params and tuple of three results
+    assert "f32[16330]" in text  # w and grad_w
+    assert "f32[8,784]" in text
+
+
+def test_lower_eval_step_small_produces_hlo():
+    text = aot.lower_eval_step(M.SMALL_ARCH, batch=8)
+    assert "HloModule" in text
+    assert "f32[8,10]" in text
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_lower_fused_step_small(use_pallas):
+    n, d = M.SMALL_ARCH.num_params // 8, 4
+    text = aot.lower_fused_step(M.SMALL_ARCH, n=n, d=d, batch=8, use_pallas=use_pallas)
+    assert "HloModule" in text
+    assert f"f32[{n}]" in text  # z and grad_s
+    assert f"s32[{M.SMALL_ARCH.num_params},{d}]" in text  # rid
+
+
+def test_manifest_written(tmp_path, monkeypatch):
+    monkeypatch.setattr(
+        "sys.argv",
+        ["aot", "--out-dir", str(tmp_path), "--skip-fused"],
+    )
+    aot.main()
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert set(manifest["archs"]) == {"small", "mnistfc"}
+    for a in manifest["archs"].values():
+        assert (tmp_path / a["train"]["path"]).exists()
+        assert (tmp_path / a["eval"]["path"]).exists()

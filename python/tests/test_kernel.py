@@ -1,0 +1,180 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (and dense Q).
+
+This is the core correctness signal for the kernels that end up inside the
+fused HLO artifacts.  Hypothesis sweeps shapes (m, n, d, tile sizes) and
+mask dtypes; every case asserts allclose against ``ref.py`` and, for small
+shapes, against a dense-Q matmul.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import qt_gather, qz_gather, ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def make_row_layout(rng, m, n, d):
+    """Random row gather layout: d distinct column ids per row, N(0,1) vals."""
+    rid = np.stack([rng.choice(n, size=d, replace=False) for _ in range(m)]).astype(
+        np.int32
+    )
+    rv = rng.standard_normal((m, d)).astype(np.float32)
+    return rid, rv
+
+
+def row_to_padded_csc(rid, rv, n):
+    """Transpose the row layout into the padded CSC the backward kernel uses."""
+    m, d = rid.shape
+    cols = [[] for _ in range(n)]
+    for i in range(m):
+        for k in range(d):
+            cols[rid[i, k]].append((i, rv[i, k]))
+    c = max(1, max(len(col) for col in cols))
+    cid = np.zeros((n, c), dtype=np.int32)
+    cv = np.zeros((n, c), dtype=np.float32)
+    for j, col in enumerate(cols):
+        for k, (i, v) in enumerate(col):
+            cid[j, k] = i
+            cv[j, k] = v
+    return cid, cv
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel: w = Q z
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 600),
+    n=st.integers(1, 300),
+    d=st.integers(1, 8),
+    tile_m=st.sampled_from([8, 64, 512]),
+    binary=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qz_matvec_matches_ref(m, n, d, tile_m, binary, seed):
+    rng = np.random.default_rng(seed)
+    d = min(d, n)
+    rid, rv = make_row_layout(rng, m, n, d)
+    if binary:
+        z = (rng.random(n) < 0.5).astype(np.float32)
+    else:
+        z = rng.random(n).astype(np.float32)
+    got = qz_gather.qz_matvec(jnp.asarray(rid), jnp.asarray(rv), jnp.asarray(z), tile_m=tile_m)
+    want = ref.qz_matvec_ref(jnp.asarray(rid), jnp.asarray(rv), jnp.asarray(z))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_qz_matvec_matches_dense():
+    rng = np.random.default_rng(0)
+    m, n, d = 64, 32, 4
+    rid, rv = make_row_layout(rng, m, n, d)
+    z = rng.random(n).astype(np.float32)
+    q = ref.dense_q_from_row_layout(jnp.asarray(rid), jnp.asarray(rv), n)
+    want = q @ jnp.asarray(z)
+    got = qz_gather.qz_matvec(jnp.asarray(rid), jnp.asarray(rv), jnp.asarray(z))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_qz_zero_mask_gives_zero_weights():
+    rng = np.random.default_rng(1)
+    rid, rv = make_row_layout(rng, 100, 50, 3)
+    z = np.zeros(50, dtype=np.float32)
+    got = qz_gather.qz_matvec(jnp.asarray(rid), jnp.asarray(rv), jnp.asarray(z))
+    np.testing.assert_array_equal(np.asarray(got), np.zeros(100, np.float32))
+
+
+def test_qz_ones_mask_gives_row_sums():
+    rng = np.random.default_rng(2)
+    rid, rv = make_row_layout(rng, 100, 50, 3)
+    z = np.ones(50, dtype=np.float32)
+    got = qz_gather.qz_matvec(jnp.asarray(rid), jnp.asarray(rv), jnp.asarray(z))
+    np.testing.assert_allclose(np.asarray(got), rv.sum(axis=1), rtol=1e-6)
+
+
+def test_qz_m_not_multiple_of_tile():
+    """Row padding path: m that is not a multiple of tile_m."""
+    rng = np.random.default_rng(3)
+    m, n, d = 777, 128, 5
+    rid, rv = make_row_layout(rng, m, n, d)
+    z = rng.random(n).astype(np.float32)
+    got = qz_gather.qz_matvec(jnp.asarray(rid), jnp.asarray(rv), jnp.asarray(z), tile_m=512)
+    want = ref.qz_matvec_ref(jnp.asarray(rid), jnp.asarray(rv), jnp.asarray(z))
+    assert got.shape == (m,)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Backward kernel: g_s = Qᵀ g_w
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 400),
+    n=st.integers(1, 200),
+    d=st.integers(1, 6),
+    tile_n=st.sampled_from([8, 64, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qt_matvec_matches_ref(m, n, d, tile_n, seed):
+    rng = np.random.default_rng(seed)
+    d = min(d, n)
+    rid, rv = make_row_layout(rng, m, n, d)
+    cid, cv = row_to_padded_csc(rid, rv, n)
+    g_w = rng.standard_normal(m).astype(np.float32)
+    got = qt_gather.qt_matvec(jnp.asarray(cid), jnp.asarray(cv), jnp.asarray(g_w), tile_n=tile_n)
+    want = ref.qt_matvec_ref(jnp.asarray(cid), jnp.asarray(cv), jnp.asarray(g_w))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_qt_matches_dense_transpose():
+    rng = np.random.default_rng(4)
+    m, n, d = 80, 40, 4
+    rid, rv = make_row_layout(rng, m, n, d)
+    cid, cv = row_to_padded_csc(rid, rv, n)
+    g_w = rng.standard_normal(m).astype(np.float32)
+    q = ref.dense_q_from_row_layout(jnp.asarray(rid), jnp.asarray(rv), n)
+    want = q.T @ jnp.asarray(g_w)
+    got = qt_gather.qt_matvec(jnp.asarray(cid), jnp.asarray(cv), jnp.asarray(g_w))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_qt_padding_slots_are_inert():
+    """Padding (cid=0, cv=0) must not pick up g_w[0]."""
+    cid = np.array([[0, 0, 0]], dtype=np.int32)  # all padding except first
+    cv = np.array([[2.0, 0.0, 0.0]], dtype=np.float32)
+    g_w = np.array([10.0, -1.0], dtype=np.float32)
+    got = qt_gather.qt_matvec(jnp.asarray(cid), jnp.asarray(cv), jnp.asarray(g_w))
+    np.testing.assert_allclose(np.asarray(got), [20.0])
+
+
+# ---------------------------------------------------------------------------
+# Round trip: forward/backward are mutual transposes  <u, Qv> == <Qᵀu, v>
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(2, 300),
+    n=st.integers(2, 150),
+    d=st.integers(1, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_adjoint_identity(m, n, d, seed):
+    rng = np.random.default_rng(seed)
+    d = min(d, n)
+    rid, rv = make_row_layout(rng, m, n, d)
+    cid, cv = row_to_padded_csc(rid, rv, n)
+    u = rng.standard_normal(m).astype(np.float32)
+    v = rng.standard_normal(n).astype(np.float32)
+    qv = qz_gather.qz_matvec(jnp.asarray(rid), jnp.asarray(rv), jnp.asarray(v))
+    qtu = qt_gather.qt_matvec(jnp.asarray(cid), jnp.asarray(cv), jnp.asarray(u))
+    lhs = float(jnp.dot(jnp.asarray(u), qv))
+    rhs = float(jnp.dot(qtu, jnp.asarray(v)))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=1e-3)

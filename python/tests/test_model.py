@@ -1,0 +1,125 @@
+"""L2 correctness: model shapes, gradients, fused-vs-dense agreement."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from tests.test_kernel import make_row_layout, row_to_padded_csc
+
+
+@pytest.fixture(scope="module")
+def small_batch():
+    rng = np.random.default_rng(7)
+    x = rng.random((16, 784)).astype(np.float32)
+    y = rng.integers(0, 10, size=16)
+    y1h = np.eye(10, dtype=np.float32)[y]
+    return jnp.asarray(x), jnp.asarray(y1h)
+
+
+def test_param_counts():
+    assert M.MNISTFC.num_params == 266_610  # paper §3.2
+    assert M.SMALL_ARCH.num_params == 16_330
+
+
+def test_forward_shapes(small_batch):
+    x, _ = small_batch
+    w = M.init_weights_kaiming(M.SMALL_ARCH, jax.random.PRNGKey(0))
+    logits = M.forward(M.SMALL_ARCH, w, x)
+    assert logits.shape == (16, 10)
+
+
+def test_unflatten_roundtrip():
+    arch = M.SMALL_ARCH
+    w = jnp.arange(arch.num_params, dtype=jnp.float32)
+    params = M.unflatten(arch, w)
+    flat = jnp.concatenate([jnp.concatenate([W.reshape(-1), b]) for W, b in params])
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(w))
+
+
+def test_train_step_grad_matches_autodiff(small_batch):
+    """make_train_step's grad equals direct jax.grad of the loss."""
+    x, y1h = small_batch
+    arch = M.SMALL_ARCH
+    w = M.init_weights_kaiming(arch, jax.random.PRNGKey(1))
+    step = M.make_train_step(arch)
+    loss, grad_w, correct = step(w, x, y1h)
+    direct = jax.grad(lambda w_: M.loss_and_correct(arch, w_, x, y1h)[0])(w)
+    np.testing.assert_allclose(np.asarray(grad_w), np.asarray(direct), rtol=1e-5)
+    assert 0 <= float(correct) <= 16
+
+
+def test_train_step_finite_differences(small_batch):
+    """Spot-check ∂loss/∂w_i against central finite differences."""
+    x, y1h = small_batch
+    arch = M.SMALL_ARCH
+    w = M.init_weights_kaiming(arch, jax.random.PRNGKey(2))
+    step = M.make_train_step(arch)
+    _, grad_w, _ = step(w, x, y1h)
+    eps = 1e-3
+    rng = np.random.default_rng(0)
+    for idx in rng.choice(arch.num_params, size=5, replace=False):
+        e = jnp.zeros_like(w).at[idx].set(eps)
+        lp, _ = M.loss_and_correct(arch, w + e, x, y1h)
+        lm, _ = M.loss_and_correct(arch, w - e, x, y1h)
+        fd = (float(lp) - float(lm)) / (2 * eps)
+        np.testing.assert_allclose(float(grad_w[idx]), fd, rtol=5e-2, atol=1e-4)
+
+
+def test_padding_rows_are_inert(small_batch):
+    """Zero one-hot rows (batch padding) change neither loss nor correct."""
+    x, y1h = small_batch
+    arch = M.SMALL_ARCH
+    w = M.init_weights_kaiming(arch, jax.random.PRNGKey(3))
+    loss_a, corr_a = M.loss_and_correct(arch, w, x, y1h)
+    x_pad = jnp.concatenate([x, jnp.zeros((8, 784))])
+    y_pad = jnp.concatenate([y1h, jnp.zeros((8, 10))])
+    loss_b, corr_b = M.loss_and_correct(arch, w, x_pad, y_pad)
+    np.testing.assert_allclose(float(loss_a), float(loss_b), rtol=1e-6)
+    np.testing.assert_allclose(float(corr_a), float(corr_b))
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_fused_step_matches_dense_composition(small_batch, use_pallas):
+    """fused(z, Q, batch) == dense(train_step(Qz, batch)) chained through Qᵀ."""
+    x, y1h = small_batch
+    arch = M.SMALL_ARCH
+    m = arch.num_params
+    n, d = m // 8, 4
+    rng = np.random.default_rng(11)
+    rid, rv = make_row_layout(rng, m, n, d)
+    cid, cv = row_to_padded_csc(rid, rv, n)
+    z = (rng.random(n) < 0.5).astype(np.float32)
+
+    fused = M.make_fused_train_step(arch, use_pallas=use_pallas)
+    loss_f, grad_s, corr_f = fused(
+        jnp.asarray(z),
+        jnp.asarray(rid),
+        jnp.asarray(rv),
+        jnp.asarray(cid),
+        jnp.asarray(cv),
+        x,
+        y1h,
+    )
+
+    # Dense composition: w = Qz, dense grad, then g_s = Qᵀ g_w.
+    w = jnp.sum(jnp.asarray(rv) * jnp.asarray(z)[jnp.asarray(rid)], axis=1)
+    step = M.make_train_step(arch)
+    loss_d, grad_w, corr_d = step(w, x, y1h)
+    g_s_ref = jnp.sum(jnp.asarray(cv) * grad_w[jnp.asarray(cid)], axis=1)
+
+    np.testing.assert_allclose(float(loss_f), float(loss_d), rtol=1e-5)
+    np.testing.assert_allclose(float(corr_f), float(corr_d))
+    np.testing.assert_allclose(
+        np.asarray(grad_s), np.asarray(g_s_ref), rtol=1e-4, atol=1e-6
+    )
+
+
+def test_kaiming_init_variance():
+    """Lemma 2.1 sanity: He init gives Var(W_l) ≈ 2/fan_in per layer."""
+    arch = M.MNISTFC
+    w = M.init_weights_kaiming(arch, jax.random.PRNGKey(9))
+    params = M.unflatten(arch, w)
+    for (W, _), fi in zip(params, arch.layers[:-1]):
+        np.testing.assert_allclose(float(jnp.var(W)), 2.0 / fi, rtol=0.15)

@@ -1,0 +1,40 @@
+//! Bench: regenerate Fig. 3 / Table 2 (compression-accuracy trade-off)
+//! and time one training cell.  `cargo bench --bench bench_fig3_compression`.
+//!
+//! Scale: BENCH_SCALE=paper env var upgrades to the full §3.1 grid.
+
+use zampling::experiments::{compression_sweep, Scale};
+use zampling::util::bench::Bencher;
+
+fn scale() -> Scale {
+    match std::env::var("BENCH_SCALE").as_deref() {
+        Ok("paper") => Scale::Paper,
+        _ => Scale::Ci,
+    }
+}
+
+fn main() {
+    let s = scale();
+    // Timing row: one (d=5, m/n=8) training cell end-to-end.
+    let b = Bencher::heavy();
+    b.run("fig3/train_cell d=5 m/n=8", || {
+        std::hint::black_box(compression_sweep::run_cell(5, 8, Scale::Ci));
+    });
+
+    // The table itself.
+    let cells = compression_sweep::run(s);
+    compression_sweep::print_table(&cells);
+
+    // Shape assertions mirroring the paper's qualitative claims: d=1 is
+    // consistently worst; accuracy decreases with compression.
+    let acc = |d: usize, f: usize| {
+        cells.iter().find(|c| c.d == d && c.factor == f).map(|c| c.mean_sampled_acc)
+    };
+    if let (Some(a1), Some(a5)) = (acc(1, 4), acc(5, 4)) {
+        println!("\nshape check: d=5 ({a5:.3}) vs d=1 ({a1:.3}) at m/n=4 → {}",
+            if a5 >= a1 { "d>1 wins (paper ✓)" } else { "UNEXPECTED" });
+    }
+    let d5: Vec<f64> = cells.iter().filter(|c| c.d == 5).map(|c| c.mean_sampled_acc).collect();
+    let monotone_drop = d5.windows(2).filter(|w| w[1] <= w[0] + 0.03).count();
+    println!("compression hurts in {}/{} d=5 steps (paper: monotone trend)", monotone_drop, d5.len().saturating_sub(1));
+}

@@ -1,0 +1,55 @@
+//! Bench: regenerate Fig. 4 (federated accuracy curves at m/n ∈ {1,8,32})
+//! and time one federated round.
+
+use zampling::experiments::federated::{fed_config, load_fed_data, run_zampling_row_with};
+use zampling::experiments::Scale;
+use zampling::federated::run_federated;
+use zampling::util::bench::Bencher;
+use zampling::zampling::NativeExecutor;
+
+fn scale() -> Scale {
+    match std::env::var("BENCH_SCALE").as_deref() {
+        Ok("paper") => Scale::Paper,
+        _ => Scale::Ci,
+    }
+}
+
+fn main() {
+    let s = scale();
+    // Timing row: one round of the CI federated config.
+    let mut cfg = fed_config(8, Scale::Ci);
+    cfg.rounds = 1;
+    let (shards, test) = load_fed_data(&cfg);
+    let b = Bencher::heavy();
+    b.run("fig4/one_round m/n=8 (4 clients)", || {
+        let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500);
+        std::hint::black_box(run_federated(&cfg, &mut exec, &shards, &test, 2, 1));
+    });
+
+    // The figure: per-round series at the three compression levels.
+    println!("\n=== Fig. 4 series (mean sampled accuracy per round) ===");
+    let mut finals = Vec::new();
+    for factor in [1usize, 8, 32] {
+        let cfg = fed_config(factor, s);
+        let (shards, test) = load_fed_data(&cfg);
+        let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500);
+        let eval_every = if s == Scale::Ci { 2 } else { 5 };
+        let row = run_zampling_row_with(&cfg, &mut exec, &shards, &test, s, eval_every);
+        print!("m/n={factor:>2}: ");
+        for r in &row.log.rounds {
+            print!("{:.3} ", r.mean_sampled_acc);
+        }
+        println!();
+        finals.push((factor, row.test_accuracy));
+    }
+    println!("\nshape check (paper: small loss at 8x, modest at 32x):");
+    for (f, acc) in &finals {
+        println!("  m/n={f:>2}: final acc {acc:.4}");
+    }
+    let base = finals[0].1;
+    println!(
+        "  drop at 8x: {:.2} pts, at 32x: {:.2} pts (paper: 0.22 / 2.55 pts)",
+        (base - finals[1].1) * 100.0,
+        (base - finals[2].1) * 100.0
+    );
+}

@@ -1,0 +1,32 @@
+//! Bench: regenerate Fig. 5 (integrality gap vs Beta(α,α) init).
+
+use zampling::experiments::{integrality_gap, Scale};
+use zampling::util::bench::Bencher;
+
+fn scale() -> Scale {
+    match std::env::var("BENCH_SCALE").as_deref() {
+        Ok("paper") => Scale::Paper,
+        _ => Scale::Ci,
+    }
+}
+
+fn main() {
+    let b = Bencher::heavy();
+    b.run("fig5/one_alpha_point ci", || {
+        std::hint::black_box(integrality_gap::run_point(0.5, Scale::Ci));
+    });
+
+    let points = integrality_gap::run(scale());
+    integrality_gap::print_figure(&points);
+
+    let first = points.first().unwrap();
+    let last = points.last().unwrap();
+    println!(
+        "\nshape check (paper: gap grows with α): gap(α={:.2})={:.4} vs gap(α={:.2})={:.4} → {}",
+        first.alpha,
+        first.gap,
+        last.alpha,
+        last.gap,
+        if last.gap >= first.gap - 0.02 { "✓" } else { "UNEXPECTED" }
+    );
+}

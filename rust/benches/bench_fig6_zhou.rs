@@ -1,0 +1,33 @@
+//! Bench: regenerate Fig. 6 (Local Zampling vs Zhou et al. supermask).
+
+use zampling::experiments::{zhou_comparison, Scale};
+use zampling::util::bench::Bencher;
+
+fn scale() -> Scale {
+    match std::env::var("BENCH_SCALE").as_deref() {
+        Ok("paper") => Scale::Paper,
+        _ => Scale::Ci,
+    }
+}
+
+fn main() {
+    let b = Bencher::heavy();
+    b.run("fig6/zhou_baseline ci", || {
+        std::hint::black_box(zhou_comparison::run_zhou_bar(Scale::Ci));
+    });
+
+    let bars = zhou_comparison::run(scale());
+    zhou_comparison::print_figure(&bars);
+
+    let zhou = bars.last().unwrap();
+    let best = bars[..bars.len() - 1]
+        .iter()
+        .map(|b| b.best_mask_acc)
+        .fold(f64::NEG_INFINITY, f64::max);
+    println!(
+        "\nshape check (paper: zampling ≥ zhou across d): best zampling {:.4} vs zhou {:.4} → {}",
+        best,
+        zhou.best_mask_acc,
+        if best + 0.05 >= zhou.best_mask_acc { "✓" } else { "UNEXPECTED" }
+    );
+}

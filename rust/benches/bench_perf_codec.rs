@@ -1,0 +1,44 @@
+//! Perf bench (L3 wire): codec throughput on protocol-sized payloads.
+
+use zampling::comm::{arith, rle, BitPack, FloatVec};
+use zampling::rng::{Rng, Xoshiro256pp};
+use zampling::util::bench::Bencher;
+
+fn main() {
+    let b = Bencher::default();
+    let mut rng = Xoshiro256pp::seed_from(0);
+    for n in [8_331usize, 266_610] {
+        for q in [0.5f64, 0.1] {
+            let mask: Vec<bool> = (0..n).map(|_| rng.bernoulli(q)).collect();
+            let bytes = (n / 8) as u64;
+            b.run_bytes(&format!("bitpack/enc n={n} q={q}"), bytes, || {
+                std::hint::black_box(BitPack::encode(&mask));
+            });
+            let enc = BitPack::encode(&mask);
+            b.run_bytes(&format!("bitpack/dec n={n} q={q}"), bytes, || {
+                std::hint::black_box(BitPack::decode(&enc, n));
+            });
+            b.run_bytes(&format!("arith/enc   n={n} q={q}"), bytes, || {
+                std::hint::black_box(arith::encode(&mask));
+            });
+            let aenc = arith::encode(&mask);
+            b.run_bytes(&format!("arith/dec   n={n} q={q}"), bytes, || {
+                std::hint::black_box(arith::decode(&aenc, n));
+            });
+            b.run_bytes(&format!("rle/enc     n={n} q={q}"), bytes, || {
+                std::hint::black_box(rle::encode(&mask));
+            });
+            println!(
+                "  sizes: raw {} B, arith {} B ({:.3} bits/entry), rle {} B",
+                BitPack::wire_bytes(n),
+                aenc.len(),
+                aenc.len() as f64 * 8.0 / n as f64,
+                rle::encode(&mask).len()
+            );
+        }
+        let probs: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+        b.run_bytes(&format!("floatvec/enc n={n}"), (n * 4) as u64, || {
+            std::hint::black_box(FloatVec::encode(&probs));
+        });
+    }
+}

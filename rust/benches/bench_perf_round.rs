@@ -1,0 +1,111 @@
+//! Perf bench (end-to-end): one federated round and one training epoch
+//! through both backends (native oracle and, when artifacts exist, the
+//! PJRT path), plus the fused-vs-split step comparison.  The coordination
+//! share of a round (everything except the dense step) is the L3 claim
+//! DESIGN.md §Perf makes: < 10%.
+
+use std::path::Path;
+
+use zampling::config::TrainConfig;
+use zampling::data::Dataset;
+use zampling::experiments::federated::{fed_config, load_fed_data};
+use zampling::experiments::Scale;
+use zampling::federated::run_federated;
+use zampling::nn::ArchSpec;
+use zampling::rng::{Rng, SeedTree, Xoshiro256pp};
+use zampling::runtime::{fused_buffers, PjrtRuntime};
+use zampling::sparse::{csc_pad_width, QMatrix};
+use zampling::util::bench::Bencher;
+use zampling::zampling::{DenseExecutor, LocalZampling, NativeExecutor};
+
+fn main() {
+    let b = Bencher::heavy();
+
+    // --- one federated round, native backend ---
+    let mut cfg = fed_config(8, Scale::Ci);
+    cfg.rounds = 1;
+    let (shards, test) = load_fed_data(&cfg);
+    b.run("round/native m/n=8 4 clients", || {
+        let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500);
+        std::hint::black_box(run_federated(&cfg, &mut exec, &shards, &test, 1, 1));
+    });
+
+    // --- single train steps: native vs pjrt vs fused ---
+    let arch = ArchSpec::small();
+    let tc = TrainConfig::local(arch.clone(), 8, 4, 0);
+    let seeds = SeedTree::new(0);
+    let (train, _) = Dataset::synthetic_pair(512, 64, &seeds);
+    let mut state = LocalZampling::new(&tc, &seeds);
+    let mut native = NativeExecutor::new(arch.clone(), 128, 500);
+    let batch: Vec<f32> = train.x[..128 * 784].to_vec();
+    let labels: Vec<u8> = train.y[..128].to_vec();
+    b.run("step/native small batch=128", || {
+        std::hint::black_box(state.step_batch(&mut native, &batch, &labels));
+    });
+
+    if let Ok(rt) = PjrtRuntime::new(Path::new("artifacts")) {
+        let mut pjrt = rt.dense_executor("small").expect("pjrt");
+        let mut state2 = LocalZampling::new(&tc, &seeds);
+        b.run("step/pjrt   small batch=128", || {
+            std::hint::black_box(state2.step_batch(&mut pjrt, &batch, &labels));
+        });
+
+        // Fused step (Pallas kernels inside the artifact) vs split path.
+        let m = arch.num_params();
+        let (n, d) = (m / 8, 4);
+        let mut fused = rt.fused_executor("small", n, d).expect("fused");
+        let q = QMatrix::generate(&arch, n, d, &seeds);
+        let csc = q.to_csc(Some(csc_pad_width(m, n, d)));
+        let (rid, rv, cid, cv) = fused_buffers(&q, &csc);
+        let mut rng = Xoshiro256pp::seed_from(5);
+        let z: Vec<f32> = (0..n).map(|_| rng.bernoulli(0.5) as u8 as f32).collect();
+        let mut y1h = vec![0.0f32; 128 * 10];
+        zampling::nn::one_hot_into(&labels, 10, &mut y1h);
+        b.run("step/fused  small batch=128 (z->grad_s)", || {
+            std::hint::black_box(
+                fused.step(&z, &rid, &rv, &cid, &cv, &batch, &y1h, 128).expect("fused step"),
+            );
+        });
+
+        // Device-resident Q: upload once, ship only z/x/y per step.
+        fused.load_q(&rid, &rv, &cid, &cv).expect("load_q");
+        b.run("step/fused-resident small batch=128", || {
+            std::hint::black_box(fused.step_resident(&z, &batch, &y1h, 128).expect("resident"));
+        });
+
+        // Split equivalent: rust spmv + pjrt dense + rust spmv_t.
+        let mut g_w = vec![0.0f32; m];
+        b.run("step/split  small batch=128 (z->grad_s)", || {
+            let w = q.spmv(&z);
+            pjrt.train_step(&w, &batch, &y1h, 128, &mut g_w);
+            std::hint::black_box(csc.spmv_t(&g_w));
+        });
+    } else {
+        println!("(artifacts not built; pjrt/fused rows skipped)");
+    }
+
+    // --- coordination share: round minus dense-step time ---
+    let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500);
+    let steps_per_round: usize = shards.iter().map(|s| s.len().div_ceil(cfg.train.batch)).sum();
+    let mut st = LocalZampling::new(&cfg.train, &SeedTree::new(1));
+    let rows = cfg.train.batch.min(shards[0].len());
+    let step_stats = b.run("round/dense_step_unit", || {
+        std::hint::black_box(st.step_batch(
+            &mut exec,
+            &shards[0].x[..rows * 784],
+            &shards[0].y[..rows],
+        ));
+    });
+    let round_stats = b.run("round/total_no_eval", || {
+        let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500);
+        std::hint::black_box(run_federated(&cfg, &mut exec, &shards, &test, 0, usize::MAX));
+    });
+    let dense = step_stats.mean_secs() * steps_per_round as f64;
+    let total = round_stats.mean_secs();
+    println!(
+        "\ncoordination share: round {:.1} ms, dense-step est {:.1} ms → overhead {:.1}%",
+        total * 1e3,
+        dense * 1e3,
+        ((total - dense) / total * 100.0).max(0.0)
+    );
+}

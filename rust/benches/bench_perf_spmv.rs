@@ -1,0 +1,58 @@
+//! Perf bench (L3 hot path): sparse products `w = Qz` and `g_s = Qᵀ g_w`
+//! at the paper's flagship sizes — serial vs parallel vs the bitmask
+//! specialization.  Feeds EXPERIMENTS.md §Perf.
+
+use zampling::nn::ArchSpec;
+use zampling::rng::{Rng, SeedTree, Xoshiro256pp};
+use zampling::sparse::{spmv_par_into, spmv_t_par_into, QMatrix};
+use zampling::util::bench::Bencher;
+
+fn main() {
+    let arch = ArchSpec::mnistfc();
+    let m = arch.num_params();
+    let b = Bencher::default();
+    for (factor, d) in [(8usize, 10usize), (32, 10)] {
+        let n = m / factor;
+        let q = QMatrix::generate(&arch, n, d, &SeedTree::new(1));
+        let csc = q.to_csc(None);
+        let mut rng = Xoshiro256pp::seed_from(2);
+        let z: Vec<f32> = (0..n).map(|_| rng.bernoulli(0.5) as u8 as f32).collect();
+        let mut bits = vec![0u64; n.div_ceil(64)];
+        for (j, &zf) in z.iter().enumerate() {
+            if zf != 0.0 {
+                bits[j >> 6] |= 1 << (j & 63);
+            }
+        }
+        let g: Vec<f32> = (0..m).map(|_| rng.next_f32() - 0.5).collect();
+        let mut w = vec![0.0f32; m];
+        let mut gs = vec![0.0f32; n];
+        // 8 bytes per stored entry (id + value) is the streamed traffic.
+        let nnz_bytes = (q.nnz() * 8) as u64;
+
+        b.run_bytes(&format!("spmv/serial m/n={factor} d={d}"), nnz_bytes, || {
+            q.spmv_into(&z, &mut w);
+            std::hint::black_box(&w);
+        });
+        b.run_bytes(&format!("spmv/bits   m/n={factor} d={d}"), nnz_bytes, || {
+            q.spmv_bits_into(&bits, &mut w);
+            std::hint::black_box(&w);
+        });
+        b.run_bytes(&format!("spmv/par    m/n={factor} d={d}"), nnz_bytes, || {
+            spmv_par_into(&q, &z, &mut w);
+            std::hint::black_box(&w);
+        });
+        b.run_bytes(&format!("spmv_t/serial m/n={factor} d={d}"), nnz_bytes, || {
+            csc.spmv_t_into(&g, &mut gs);
+            std::hint::black_box(&gs);
+        });
+        b.run_bytes(&format!("spmv_t/par    m/n={factor} d={d}"), nnz_bytes, || {
+            spmv_t_par_into(&csc, &g, &mut gs);
+            std::hint::black_box(&gs);
+        });
+    }
+
+    // Q generation cost (initialisation, §2.2: O(md)).
+    b.run("qgen/mnistfc n=m/32 d=10", || {
+        std::hint::black_box(QMatrix::generate(&arch, m / 32, 10, &SeedTree::new(3)));
+    });
+}

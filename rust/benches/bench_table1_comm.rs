@@ -1,0 +1,58 @@
+//! Bench: regenerate Table 1 (client/server savings vs naive) including
+//! the FedPM and FedAvg comparators, and time the wire codecs on
+//! protocol-sized payloads.
+
+use zampling::comm::{arith, BitPack, FloatVec};
+use zampling::experiments::federated::{
+    ideal_savings, print_table1, run_fedavg_row, run_fedpm_row, run_zampling_row,
+};
+use zampling::experiments::Scale;
+use zampling::rng::{Rng, Xoshiro256pp};
+use zampling::util::bench::Bencher;
+
+fn scale() -> Scale {
+    match std::env::var("BENCH_SCALE").as_deref() {
+        Ok("paper") => Scale::Paper,
+        _ => Scale::Ci,
+    }
+}
+
+fn main() {
+    let s = scale();
+    // Codec timings at the paper's uplink size (n = 8331 → m/n = 32).
+    let mut rng = Xoshiro256pp::seed_from(0);
+    let mask: Vec<bool> = (0..8331).map(|_| rng.bernoulli(0.4)).collect();
+    let probs: Vec<f32> = (0..8331).map(|_| rng.next_f32()).collect();
+    let b = Bencher::default();
+    b.run_bytes("table1/bitpack_encode n=8331", 8331 / 8, || {
+        std::hint::black_box(BitPack::encode(&mask));
+    });
+    b.run_bytes("table1/arith_encode n=8331", 8331 / 8, || {
+        std::hint::black_box(arith::encode(&mask));
+    });
+    b.run_bytes("table1/float_downlink n=8331", 8331 * 4, || {
+        std::hint::black_box(FloatVec::encode(&probs));
+    });
+
+    // The table.
+    let rows = vec![
+        run_fedavg_row(s, 5),
+        run_fedpm_row(s, 5),
+        run_zampling_row(8, s, 5),
+        run_zampling_row(32, s, 5),
+    ];
+    print_table1(&rows);
+
+    println!("\nideal (framing-free) factors for MnistFc:");
+    for factor in [8usize, 32] {
+        let m = 266_610;
+        let ideal = ideal_savings(m, m / factor);
+        println!(
+            "  m/n={factor:>2}: client {:.0}x server {:.0}x (paper: {} / {})",
+            ideal.client_savings,
+            ideal.server_savings,
+            if factor == 8 { "256" } else { "1024" },
+            factor
+        );
+    }
+}

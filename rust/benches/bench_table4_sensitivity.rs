@@ -1,0 +1,36 @@
+//! Bench: regenerate Table 4 (sensitivity under C_τ perturbations) and
+//! time one perturb-and-evaluate pass.
+
+use zampling::experiments::{sensitivity, Scale};
+use zampling::util::bench::Bencher;
+
+fn scale() -> Scale {
+    match std::env::var("BENCH_SCALE").as_deref() {
+        Ok("paper") => Scale::Paper,
+        _ => Scale::Ci,
+    }
+}
+
+fn main() {
+    let b = Bencher::heavy();
+    b.run("table4/full_run ci", || {
+        std::hint::black_box(sensitivity::run(Scale::Ci, 0));
+    });
+
+    let rows = sensitivity::run(scale(), 0);
+    sensitivity::print_table(&rows);
+
+    let mean = |regime: &str, below: f64| {
+        let xs: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.regime == regime && r.tau < below)
+            .map(|r| r.avg_sensitivity)
+            .collect();
+        xs.iter().sum::<f64>() / xs.len() as f64
+    };
+    println!(
+        "\nshape check (paper: sampled ≪ regular): regular {:.4} vs sampled {:.4}",
+        mean("Regular", 0.5),
+        mean("Sampled", 0.5)
+    );
+}

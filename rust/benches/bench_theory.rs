@@ -1,0 +1,72 @@
+//! Bench: validate every §2 closed form on fresh Q draws (Lemmas 2.1-2.3,
+//! Props 2.4-2.6) and time the Monte-Carlo volume estimator.
+
+use zampling::rng::{Rng, Xoshiro256pp};
+use zampling::util::bench::{row, table, Bencher};
+use zampling::zonotope as z;
+
+fn main() {
+    let b = Bencher::default();
+    b.run("theory/mc_volume n=3 20k trials", || {
+        std::hint::black_box(z::mc_zonotope_volume(3, 3, 8.0, 20_000, 7));
+    });
+    b.run("theory/empty_column_census n=8192 d=3", || {
+        std::hint::black_box(z::square_q(8192, 3, 64, 1).empty_columns());
+    });
+
+    table("§2 theory validation", &["claim", "measured", "predicted", "rel err"]);
+    // Lemma 2.3: empty columns ≈ e^{-d}.
+    for d in [1usize, 3, 6] {
+        let q = z::square_q(16_384, d, 64, d as u64);
+        let m = q.empty_columns() as f64 / q.n as f64;
+        let p = (-(d as f64)).exp();
+        row(&[format!("L2.3 e^-d (d={d})"), format!("{m:.5}"), format!("{p:.5}"),
+              format!("{:.3}", (m - p).abs() / p.max(1e-12))]);
+    }
+    // Lemma 2.2: E #nnz(w).
+    for d in [1usize, 2, 4, 8] {
+        let q = z::square_q(8192, d, 64, 10 + d as u64);
+        let m = z::measure_nonzero_weights(&q, 6, 3);
+        let p = z::expected_nonzero_weights(q.m, d);
+        row(&[format!("L2.2 nnz(w) (d={d})"), format!("{m:.0}"), format!("{p:.0}"),
+              format!("{:.4}", (m - p).abs() / p)]);
+    }
+    // Lemma 2.1: Var(w) = 2/fan.
+    for fan in [64usize, 256] {
+        let q = z::square_q(4096, 16, fan, 20 + fan as u64);
+        let m = z::measure_w_variance(&q, 0..q.m, 6, 5);
+        let p = 2.0 / fan as f64;
+        row(&[format!("L2.1 Var(w) (fan={fan})"), format!("{m:.6}"), format!("{p:.6}"),
+              format!("{:.3}", (m - p).abs() / p)]);
+    }
+    // Prop 2.4: max activation in [d/2, d]·σ√(2/π), scaling √d.
+    for d in [2usize, 8, 32, 128] {
+        let q = z::square_q(4096, d, 128, 30 + d as u64);
+        let m = z::mean_max_row_activation(&q);
+        let (lo, hi) = z::predicted_max_row_activation(d, 128);
+        row(&[format!("P2.4 max|Qp| (d={d})"), format!("{m:.4}"),
+              format!("[{lo:.4},{hi:.4}]"),
+              format!("{}", if m >= lo * 0.9 && m <= hi * 1.1 { "in-band" } else { "OUT" })]);
+    }
+    // Prop 2.5: E|det| of the dense Gaussian square case.
+    for n in [2usize, 3, 4, 5] {
+        let mc = z::mc_zonotope_volume(n, n, 8.0, 40_000, 17 + n as u64);
+        let closed = z::expected_zonotope_volume(n, n, 8.0);
+        row(&[format!("P2.5 E vol=E|det| (n={n})"), format!("{mc:.6}"), format!("{closed:.6}"),
+              format!("{:.3}", (mc - closed).abs() / closed)]);
+    }
+    // Prop 2.6: Jensen dimension inequality on random client vectors.
+    let mut rng = Xoshiro256pp::seed_from(9);
+    let mut holds = 0;
+    const TRIALS: usize = 200;
+    for _ in 0..TRIALS {
+        let clients: Vec<Vec<f32>> = (0..8)
+            .map(|_| (0..128).map(|_| if rng.bernoulli(0.4) { rng.next_f32() } else { (rng.bernoulli(0.5)) as u8 as f32 }).collect())
+            .collect();
+        let (lhs, rhs) = z::jensen_dimension_check(&clients, 0.05);
+        if lhs as f64 >= rhs - 1e-9 {
+            holds += 1;
+        }
+    }
+    row(&[format!("P2.6 Jensen dim"), format!("{holds}/{TRIALS} hold"), "all".to_string(), "-".to_string()]);
+}

@@ -1,0 +1,14 @@
+//! Baselines the paper compares against.
+//!
+//! * [`fedavg`] — the naive protocol: floats both directions (the "1×"
+//!   row every savings factor in Table 1 is measured against).
+//! * [`fedpm`] — Isik et al. [13]: training-by-pruning with a *diagonal*
+//!   Q (n = m, d = 1), 1-bit uplink masks + arithmetic coding, float
+//!   downlink.  The paper's Table 1 comparator (33.69× client savings).
+//! * [`zhou`] — Zhou et al. [31] supermask training: the Local-Zampling
+//!   special case n = m, d = 1 with *sigmoid* scores instead of the clip
+//!   (Fig. 6's comparator).
+
+pub mod fedavg;
+pub mod fedpm;
+pub mod zhou;

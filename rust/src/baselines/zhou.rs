@@ -1,0 +1,141 @@
+//! Zhou et al. [31] supermask training — the Fig. 6 comparator.
+//!
+//! Local (centralized) training-by-pruning: a frozen random diagonal
+//! weight bank, a trainable score per weight squashed by a **sigmoid**
+//! into a sampling probability, a fresh mask per batch, straight-through
+//! gradients.  Equivalent to Local Zampling at n = m, d = 1 modulo the
+//! sigmoid-vs-clip parametrization (paper footnote 5).  Reported metric
+//! in Fig. 6 is **best mask** over 100 end-of-training samples.
+
+use super::fedpm::DiagonalQ;
+use crate::config::TrainConfig;
+use crate::data::Dataset;
+use crate::metrics::Summary;
+use crate::nn::one_hot_into;
+use crate::rng::{Rng, SeedTree};
+use crate::zampling::{eval_dataset, DenseExecutor, ScoreOptimizer};
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+pub struct ZhouOutcome {
+    pub mean_sampled_acc: f64,
+    pub sampled_acc_std: f64,
+    pub best_mask_acc: f64,
+    pub expected_acc: f64,
+}
+
+/// Train a supermask locally and evaluate like §B.1 (best of
+/// `eval_samples` masks).
+pub fn train_zhou(
+    cfg: &TrainConfig,
+    exec: &mut dyn DenseExecutor,
+    train: &Dataset,
+    test: &Dataset,
+    eval_samples: usize,
+) -> ZhouOutcome {
+    let seeds = SeedTree::new(cfg.seed);
+    let arch = exec.arch().clone();
+    let m = arch.num_params();
+    let q = DiagonalQ::generate(&arch, &seeds);
+
+    // Scores init at 0 → p = 0.5 everywhere (their uniform-mask start).
+    let mut scores = vec![0.0f32; m];
+    let mut opt = ScoreOptimizer::new(cfg.optimizer, cfg.lr, m);
+    let mut rng = seeds.rng("zhou-train", 0);
+
+    let out_dim = arch.output_dim();
+    let mut y1h_buf: Vec<f32> = Vec::new();
+    let mut mask = vec![false; m];
+    let mut w = vec![0.0f32; m];
+    let mut grad = vec![0.0f32; m];
+
+    let mut test_y1h = vec![0.0f32; test.len() * out_dim];
+    one_hot_into(&test.y, out_dim, &mut test_y1h);
+
+    let mut best_val = f64::INFINITY;
+    let mut stale = 0usize;
+    for _epoch in 0..cfg.epochs {
+        for b in train.batches(exec.train_batch().min(cfg.batch), &mut rng) {
+            let rows = b.y.len();
+            if y1h_buf.len() < rows * out_dim {
+                y1h_buf.resize(rows * out_dim, 0.0);
+            }
+            one_hot_into(&b.y, out_dim, &mut y1h_buf);
+            for (mi, &s) in mask.iter_mut().zip(&scores) {
+                *mi = rng.next_f32() < sigmoid(s);
+            }
+            q.apply(&mask, &mut w);
+            exec.train_step(&w, &b.x, &y1h_buf[..rows * out_dim], rows, &mut grad);
+            for i in 0..m {
+                let sg = sigmoid(scores[i]);
+                grad[i] *= q.weights[i] * sg * (1.0 - sg);
+            }
+            opt.step(&mut grad);
+            for (s, g) in scores.iter_mut().zip(&grad) {
+                *s -= g;
+            }
+        }
+        // Early stopping on the expected network's validation loss.
+        let probs: Vec<f32> = scores.iter().map(|&s| sigmoid(s)).collect();
+        q.apply_probs(&probs, &mut w);
+        let (val_loss, _) = eval_dataset(exec, &w, &test.x, &test_y1h, test.len());
+        if val_loss < best_val - cfg.min_delta {
+            best_val = val_loss;
+            stale = 0;
+        } else {
+            stale += 1;
+            if stale >= cfg.patience {
+                break;
+            }
+        }
+    }
+
+    // Evaluation: sample `eval_samples` masks, report mean/std/best.
+    let probs: Vec<f32> = scores.iter().map(|&s| sigmoid(s)).collect();
+    let mut eval_rng = seeds.rng("zhou-eval", 0);
+    let mut accs = Summary::default();
+    let mut best = 0.0f64;
+    for _ in 0..eval_samples {
+        for (mi, &p) in mask.iter_mut().zip(&probs) {
+            *mi = eval_rng.next_f32() < p;
+        }
+        q.apply(&mask, &mut w);
+        let (_, acc) = eval_dataset(exec, &w, &test.x, &test_y1h, test.len());
+        accs.push(acc);
+        best = best.max(acc);
+    }
+    q.apply_probs(&probs, &mut w);
+    let (_, expected) = eval_dataset(exec, &w, &test.x, &test_y1h, test.len());
+
+    ZhouOutcome {
+        mean_sampled_acc: accs.mean(),
+        sampled_acc_std: accs.std(),
+        best_mask_acc: best,
+        expected_acc: expected,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::ArchSpec;
+    use crate::zampling::NativeExecutor;
+
+    #[test]
+    fn zhou_supermask_learns_above_chance() {
+        let mut cfg = TrainConfig::local(ArchSpec::small(), 1, 1, 0).ci();
+        cfg.lr = 0.1;
+        cfg.epochs = 6;
+        cfg.train_rows = 768;
+        cfg.test_rows = 256;
+        let seeds = SeedTree::new(cfg.seed);
+        let (train, test) = Dataset::synthetic_pair(cfg.train_rows, cfg.test_rows, &seeds);
+        let mut exec = NativeExecutor::new(cfg.arch.clone(), cfg.batch, 256);
+        let out = train_zhou(&cfg, &mut exec, &train, &test, 8);
+        assert!(out.best_mask_acc > 0.3, "best {}", out.best_mask_acc);
+        assert!(out.best_mask_acc >= out.mean_sampled_acc);
+    }
+}

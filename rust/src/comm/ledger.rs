@@ -1,0 +1,137 @@
+//! Per-round communication accounting → the savings factors of Table 1.
+//!
+//! Savings are measured exactly as the paper does: *"by what factor the
+//! communication cost decreases per round in comparison to the naive
+//! protocol that sends all m parameters as floats"* — i.e. naive is
+//! `32·m` bits in each direction, per client.
+
+/// One round's measured traffic (bits, per direction, totals over clients).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundCost {
+    /// Server → clients total.
+    pub downlink_bits: u64,
+    /// Clients → server total.
+    pub uplink_bits: u64,
+    pub clients: u32,
+}
+
+/// Accumulated ledger over a training run.
+#[derive(Clone, Debug, Default)]
+pub struct CommLedger {
+    pub rounds: Vec<RoundCost>,
+}
+
+/// The Table 1 row: per-round per-client savings factors vs naive.
+#[derive(Clone, Copy, Debug)]
+pub struct SavingsReport {
+    /// Naive bits per direction per client per round (32·m).
+    pub naive_bits: u64,
+    pub avg_uplink_bits_per_client: f64,
+    pub avg_downlink_bits_per_client: f64,
+    /// `client savings` column: naive / uplink.
+    pub client_savings: f64,
+    /// `server savings` column: naive / downlink.
+    pub server_savings: f64,
+}
+
+impl CommLedger {
+    pub fn record(&mut self, cost: RoundCost) {
+        self.rounds.push(cost);
+    }
+
+    /// Convenience: record a round where every one of `clients` clients
+    /// received `down_bytes` and sent `up_bytes`.
+    pub fn record_symmetric(&mut self, clients: u32, down_bytes: usize, up_bytes: usize) {
+        self.record(RoundCost {
+            downlink_bits: down_bytes as u64 * 8 * clients as u64,
+            uplink_bits: up_bytes as u64 * 8 * clients as u64,
+            clients,
+        });
+    }
+
+    pub fn total_uplink_bits(&self) -> u64 {
+        self.rounds.iter().map(|r| r.uplink_bits).sum()
+    }
+
+    pub fn total_downlink_bits(&self) -> u64 {
+        self.rounds.iter().map(|r| r.downlink_bits).sum()
+    }
+
+    /// Savings vs the naive protocol for a model with `m` parameters.
+    pub fn savings(&self, m: usize) -> SavingsReport {
+        let naive_bits = 32u64 * m as u64;
+        let mut up_per_client = 0.0f64;
+        let mut down_per_client = 0.0f64;
+        let mut n = 0usize;
+        for r in &self.rounds {
+            if r.clients == 0 {
+                continue;
+            }
+            up_per_client += r.uplink_bits as f64 / r.clients as f64;
+            down_per_client += r.downlink_bits as f64 / r.clients as f64;
+            n += 1;
+        }
+        let rounds = n.max(1) as f64;
+        let avg_up = up_per_client / rounds;
+        let avg_down = down_per_client / rounds;
+        SavingsReport {
+            naive_bits,
+            avg_uplink_bits_per_client: avg_up,
+            avg_downlink_bits_per_client: avg_down,
+            client_savings: naive_bits as f64 / avg_up.max(1.0),
+            server_savings: naive_bits as f64 / avg_down.max(1.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zampling_table1_factors() {
+        // MnistFc m = 266,610.  m/n = 32 → n = 8331.
+        // Uplink: n bits (mask).  Downlink: 32·n bits (p as floats).
+        let m = 266_610usize;
+        let n = m / 32;
+        let mut ledger = CommLedger::default();
+        for _ in 0..100 {
+            ledger.record(RoundCost {
+                uplink_bits: n as u64 * 10,
+                downlink_bits: 32 * n as u64 * 10,
+                clients: 10,
+            });
+        }
+        let rep = ledger.savings(m);
+        // client savings = 32m / n = 32 * 32 = 1024 (paper Table 1: 1024)
+        assert!((rep.client_savings - 1024.0).abs() / 1024.0 < 0.01, "{rep:?}");
+        // server savings = 32m / 32n = m/n = 32 (paper Table 1: 32)
+        assert!((rep.server_savings - 32.0).abs() / 32.0 < 0.01, "{rep:?}");
+    }
+
+    #[test]
+    fn naive_protocol_has_savings_one() {
+        let m = 1000usize;
+        let mut ledger = CommLedger::default();
+        ledger.record_symmetric(4, m * 4, m * 4);
+        let rep = ledger.savings(m);
+        assert!((rep.client_savings - 1.0).abs() < 1e-9);
+        assert!((rep.server_savings - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn totals_accumulate() {
+        let mut ledger = CommLedger::default();
+        ledger.record_symmetric(2, 10, 20);
+        ledger.record_symmetric(2, 30, 40);
+        assert_eq!(ledger.total_downlink_bits(), (10 + 30) * 8 * 2);
+        assert_eq!(ledger.total_uplink_bits(), (20 + 40) * 8 * 2);
+    }
+
+    #[test]
+    fn empty_ledger_is_sane() {
+        let rep = CommLedger::default().savings(100);
+        assert_eq!(rep.naive_bits, 3200);
+        assert!(rep.client_savings > 0.0);
+    }
+}

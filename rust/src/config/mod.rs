@@ -1,0 +1,231 @@
+//! Experiment configuration: typed views over the TOML-subset documents in
+//! `configs/`, plus programmatic constructors used by tests and benches.
+
+use crate::nn::ArchSpec;
+use crate::util::toml::TomlDoc;
+
+/// Which optimizer updates the score vector (§3: Adam, momentum 0.9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Optimizer {
+    Sgd,
+    Adam,
+}
+
+impl Optimizer {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "sgd" => Ok(Optimizer::Sgd),
+            "adam" => Ok(Optimizer::Adam),
+            other => Err(format!("unknown optimizer '{other}' (sgd|adam)")),
+        }
+    }
+}
+
+/// Execution backend for the dense train/eval steps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// PJRT CPU client over the AOT HLO artifacts (the real path).
+    Pjrt,
+    /// Pure-Rust reference MLP (XLA-free fallback; bit-for-bit tested
+    /// against Pjrt in the runtime integration tests).
+    Native,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "pjrt" => Ok(Backend::Pjrt),
+            "native" => Ok(Backend::Native),
+            other => Err(format!("unknown backend '{other}' (pjrt|native)")),
+        }
+    }
+}
+
+/// Local (centralized) Zampling training config — §1.3 Local Zampling.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub arch: ArchSpec,
+    /// Number of trainable parameters `n` (`None` → derive from factor).
+    pub n: usize,
+    /// Weight degree `d` — non-zeros per row of Q.
+    pub d: usize,
+    pub lr: f64,
+    pub optimizer: Optimizer,
+    pub backend: Backend,
+    pub epochs: usize,
+    pub batch: usize,
+    /// Early stopping (§3): patience in epochs and min-delta on val loss.
+    pub patience: usize,
+    pub min_delta: f64,
+    pub seed: u64,
+    /// Train without sampling (ContinuousModel, Appendix A / Table 4).
+    pub continuous: bool,
+    /// Rows of the train/test splits (scaled-down for CI; paper scale =
+    /// 60_000/10_000).
+    pub train_rows: usize,
+    pub test_rows: usize,
+}
+
+impl TrainConfig {
+    /// Paper-default local config for an arch at compression `m/n = factor`.
+    pub fn local(arch: ArchSpec, factor: usize, d: usize, seed: u64) -> Self {
+        let m = arch.num_params();
+        Self {
+            n: (m / factor).max(d),
+            d,
+            arch,
+            lr: 0.001, // §3.1
+            optimizer: Optimizer::Adam,
+            backend: Backend::Native,
+            epochs: 100,
+            batch: 128,
+            patience: 10,
+            min_delta: 1e-4,
+            seed,
+            continuous: false,
+            train_rows: 60_000,
+            test_rows: 10_000,
+        }
+    }
+
+    /// CI-scale variant: tiny splits and few epochs, same semantics.
+    pub fn ci(mut self) -> Self {
+        self.train_rows = 2_000;
+        self.test_rows = 512;
+        self.epochs = 3;
+        self
+    }
+
+    pub fn compression_factor(&self) -> f64 {
+        self.arch.num_params() as f64 / self.n as f64
+    }
+
+    pub const KNOWN_KEYS: &'static [&'static str] = &[
+        "arch", "n", "compression", "d", "lr", "optimizer", "backend", "epochs", "batch",
+        "patience", "min-delta", "seed", "continuous", "train-rows", "test-rows",
+    ];
+
+    /// Parse from a TOML document (top-level keys; see `configs/*.toml`).
+    pub fn from_toml(doc: &TomlDoc) -> Result<Self, String> {
+        doc.check_known_keys(Self::KNOWN_KEYS)?;
+        let arch = ArchSpec::by_name(&doc.str_or("arch", "small"))
+            .ok_or_else(|| format!("unknown arch '{}'", doc.str_or("arch", "")))?;
+        let m = arch.num_params();
+        let n = match doc.get("n") {
+            Some(v) => v.as_usize().ok_or("n must be an integer")?,
+            None => m / doc.usize_or("compression", 1),
+        };
+        Ok(Self {
+            n,
+            d: doc.usize_or("d", 10),
+            lr: doc.f64_or("lr", 0.001),
+            optimizer: Optimizer::parse(&doc.str_or("optimizer", "adam"))?,
+            backend: Backend::parse(&doc.str_or("backend", "native"))?,
+            epochs: doc.usize_or("epochs", 100),
+            batch: doc.usize_or("batch", 128),
+            patience: doc.usize_or("patience", 10),
+            min_delta: doc.f64_or("min-delta", 1e-4),
+            seed: doc.usize_or("seed", 0) as u64,
+            continuous: doc.bool_or("continuous", false),
+            train_rows: doc.usize_or("train-rows", 60_000),
+            test_rows: doc.usize_or("test-rows", 10_000),
+            arch,
+        })
+    }
+}
+
+/// Federated Zampling config — §1.3 Federated Zampling / §3.2.
+#[derive(Clone, Debug)]
+pub struct FedConfig {
+    pub train: TrainConfig,
+    pub clients: usize,
+    pub rounds: usize,
+    /// Local epochs per round (the paper trains "each round for up to 100
+    /// epochs with early stopping"; CI configs use 1–2).
+    pub local_epochs: usize,
+    /// Encode uplink masks with the arithmetic coder instead of raw bits.
+    pub entropy_code_uplink: bool,
+}
+
+impl FedConfig {
+    /// Paper §3.2 defaults: 10 clients, 100 rounds, d = 10, lr 0.1, seed 1.
+    pub fn paper(factor: usize) -> Self {
+        let mut train = TrainConfig::local(ArchSpec::mnistfc(), factor, 10, 1);
+        train.lr = 0.1;
+        Self { train, clients: 10, rounds: 100, local_epochs: 1, entropy_code_uplink: false }
+    }
+
+    pub const KNOWN_KEYS: &'static [&'static str] = &[
+        "clients", "rounds", "local-epochs", "entropy-code-uplink",
+    ];
+
+    pub fn from_toml(doc: &TomlDoc) -> Result<Self, String> {
+        // federated.* keys belong to us; the rest is a TrainConfig.
+        let mut train_doc = TomlDoc::default();
+        let mut fed_doc = TomlDoc::default();
+        for (k, v) in &doc.entries {
+            if let Some(rest) = k.strip_prefix("federated.") {
+                fed_doc.entries.insert(rest.to_string(), v.clone());
+            } else {
+                train_doc.entries.insert(k.clone(), v.clone());
+            }
+        }
+        fed_doc.check_known_keys(Self::KNOWN_KEYS)?;
+        Ok(Self {
+            train: TrainConfig::from_toml(&train_doc)?,
+            clients: fed_doc.usize_or("clients", 10),
+            rounds: fed_doc.usize_or("rounds", 100),
+            local_epochs: fed_doc.usize_or("local-epochs", 1),
+            entropy_code_uplink: fed_doc.bool_or("entropy-code-uplink", false),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_defaults_match_paper() {
+        let c = TrainConfig::local(ArchSpec::small(), 4, 5, 0);
+        assert_eq!(c.n, 16_330 / 4);
+        assert!((c.lr - 0.001).abs() < 1e-12);
+        assert_eq!(c.optimizer, Optimizer::Adam);
+        assert_eq!(c.patience, 10);
+        assert!((c.compression_factor() - 4.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn fed_paper_defaults() {
+        let f = FedConfig::paper(32);
+        assert_eq!(f.clients, 10);
+        assert_eq!(f.rounds, 100);
+        assert_eq!(f.train.d, 10);
+        assert_eq!(f.train.n, 266_610 / 32);
+        assert!((f.train.lr - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let doc = TomlDoc::parse(
+            "arch = \"mnistfc\"\ncompression = 8\nd = 10\nlr = 0.1\nseed = 1\n\
+             [federated]\nclients = 10\nrounds = 100\n",
+        )
+        .unwrap();
+        let f = FedConfig::from_toml(&doc).unwrap();
+        assert_eq!(f.train.n, 266_610 / 8);
+        assert_eq!(f.rounds, 100);
+    }
+
+    #[test]
+    fn unknown_key_is_error() {
+        let doc = TomlDoc::parse("arch = \"small\"\nlrr = 0.1\n").unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn explicit_n_beats_compression() {
+        let doc = TomlDoc::parse("arch = \"small\"\nn = 123\ncompression = 8\n").unwrap();
+        assert_eq!(TrainConfig::from_toml(&doc).unwrap().n, 123);
+    }
+}

@@ -1,0 +1,131 @@
+//! IDX (LeCun MNIST) file format reader.
+//!
+//! Big-endian magic: `0x00 0x00 <dtype> <ndims>` followed by `ndims` u32
+//! dimension sizes, then the raw payload.  Only the two shapes MNIST uses
+//! are supported: u8 × 3-D (images) and u8 × 1-D (labels).
+
+use std::io::Read;
+use std::path::Path;
+
+#[derive(Debug)]
+pub enum IdxError {
+    Io(std::io::Error),
+    Malformed(&'static str),
+}
+
+impl std::fmt::Display for IdxError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IdxError::Io(e) => write!(f, "idx io error: {e}"),
+            IdxError::Malformed(m) => write!(f, "malformed idx file: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for IdxError {}
+
+impl From<std::io::Error> for IdxError {
+    fn from(e: std::io::Error) -> Self {
+        IdxError::Io(e)
+    }
+}
+
+fn read_all(path: &Path) -> Result<Vec<u8>, IdxError> {
+    let mut buf = Vec::new();
+    std::fs::File::open(path)?.read_to_end(&mut buf)?;
+    Ok(buf)
+}
+
+fn be_u32(b: &[u8], off: usize) -> Result<u32, IdxError> {
+    b.get(off..off + 4)
+        .map(|s| u32::from_be_bytes([s[0], s[1], s[2], s[3]]))
+        .ok_or(IdxError::Malformed("truncated header"))
+}
+
+/// Load an IDX3 u8 image file → (`[num * rows*cols]` f32 in `[0,1]`, dim).
+pub fn load_idx_images(path: &Path) -> Result<(Vec<f32>, usize), IdxError> {
+    let b = read_all(path)?;
+    if be_u32(&b, 0)? != 0x0000_0803 {
+        return Err(IdxError::Malformed("bad image magic (want 0x00000803)"));
+    }
+    let num = be_u32(&b, 4)? as usize;
+    let rows = be_u32(&b, 8)? as usize;
+    let cols = be_u32(&b, 12)? as usize;
+    let dim = rows * cols;
+    let payload = b.get(16..).ok_or(IdxError::Malformed("truncated header"))?;
+    if payload.len() != num * dim {
+        return Err(IdxError::Malformed("payload size mismatch"));
+    }
+    let x = payload.iter().map(|&p| p as f32 / 255.0).collect();
+    Ok((x, dim))
+}
+
+/// Load an IDX1 u8 label file → `[num]` labels.
+pub fn load_idx_labels(path: &Path) -> Result<Vec<u8>, IdxError> {
+    let b = read_all(path)?;
+    if be_u32(&b, 0)? != 0x0000_0801 {
+        return Err(IdxError::Malformed("bad label magic (want 0x00000801)"));
+    }
+    let num = be_u32(&b, 4)? as usize;
+    let payload = b.get(8..).ok_or(IdxError::Malformed("truncated header"))?;
+    if payload.len() != num {
+        return Err(IdxError::Malformed("payload size mismatch"));
+    }
+    Ok(payload.to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_tmp(name: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!("zampling-idx-{name}-{}", std::process::id()));
+        std::fs::File::create(&p).unwrap().write_all(bytes).unwrap();
+        p
+    }
+
+    #[test]
+    fn roundtrip_images() {
+        let mut b = Vec::new();
+        b.extend_from_slice(&0x0000_0803u32.to_be_bytes());
+        b.extend_from_slice(&2u32.to_be_bytes()); // 2 images
+        b.extend_from_slice(&2u32.to_be_bytes()); // 2x2
+        b.extend_from_slice(&2u32.to_be_bytes());
+        b.extend_from_slice(&[0, 51, 102, 255, 255, 204, 153, 0]);
+        let p = write_tmp("img", &b);
+        let (x, dim) = load_idx_images(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(dim, 4);
+        assert_eq!(x.len(), 8);
+        assert!((x[3] - 1.0).abs() < 1e-6);
+        assert!((x[1] - 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn roundtrip_labels() {
+        let mut b = Vec::new();
+        b.extend_from_slice(&0x0000_0801u32.to_be_bytes());
+        b.extend_from_slice(&3u32.to_be_bytes());
+        b.extend_from_slice(&[7, 0, 9]);
+        let p = write_tmp("lbl", &b);
+        let y = load_idx_labels(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(y, vec![7, 0, 9]);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        let p = write_tmp("bad", &[0, 0, 8, 1, 0, 0]);
+        assert!(matches!(load_idx_labels(&p), Err(IdxError::Malformed(_))));
+        std::fs::remove_file(&p).ok();
+
+        let mut b = Vec::new();
+        b.extend_from_slice(&0x0000_0801u32.to_be_bytes());
+        b.extend_from_slice(&5u32.to_be_bytes());
+        b.extend_from_slice(&[1, 2]); // claims 5, has 2
+        let p = write_tmp("trunc", &b);
+        assert!(matches!(load_idx_labels(&p), Err(IdxError::Malformed(_))));
+        std::fs::remove_file(&p).ok();
+    }
+}

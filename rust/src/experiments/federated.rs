@@ -1,0 +1,161 @@
+//! Fig. 4 + Table 1: Federated Zampling at m/n ∈ {1, 8, 32}, plus the
+//! FedAvg and FedPM baselines for the savings columns.
+//!
+//! §3.2: MnistFc (m = 266,610), 10 clients, 100 rounds, d = 10, lr 0.1,
+//! seed 1, IID random split, mean sampled accuracy of 100 networks per
+//! round.
+
+use super::{eval_samples, Scale};
+use crate::baselines::{fedavg, fedpm};
+use crate::comm::SavingsReport;
+use crate::config::FedConfig;
+use crate::data::Dataset;
+use crate::federated::run_federated;
+use crate::metrics::RunLog;
+use crate::nn::ArchSpec;
+use crate::rng::SeedTree;
+use crate::zampling::{DenseExecutor, NativeExecutor};
+
+/// One Table 1 row.
+#[derive(Clone, Debug)]
+pub struct Table1Row {
+    pub label: String,
+    pub client_savings: f64,
+    pub server_savings: f64,
+    pub test_accuracy: f64,
+    pub log: RunLog,
+}
+
+/// Build the §3.2 config at `factor`, shrunk for CI if requested.
+pub fn fed_config(factor: usize, scale: Scale) -> FedConfig {
+    let mut cfg = FedConfig::paper(factor);
+    if scale == Scale::Ci {
+        cfg.train.arch = ArchSpec::small();
+        cfg.train.n = (ArchSpec::small().num_params() / factor).max(cfg.train.d);
+        cfg.train.train_rows = 4_000;
+        cfg.train.test_rows = 1_000;
+        cfg.clients = 4;
+        cfg.rounds = 10;
+    }
+    cfg
+}
+
+pub fn load_fed_data(cfg: &FedConfig) -> (Vec<Dataset>, Dataset) {
+    let seeds = SeedTree::new(cfg.train.seed);
+    let (train, test) = if cfg.train.train_rows >= 60_000 {
+        (
+            Dataset::mnist_or_synthetic(true, &seeds),
+            Dataset::mnist_or_synthetic(false, &seeds),
+        )
+    } else {
+        Dataset::synthetic_pair(cfg.train.train_rows, cfg.train.test_rows, &seeds)
+    };
+    (train.partition_iid(cfg.clients, &seeds), test)
+}
+
+/// Run Federated Zampling at one compression factor.
+pub fn run_zampling_row(factor: usize, scale: Scale, eval_every: usize) -> Table1Row {
+    let cfg = fed_config(factor, scale);
+    let (shards, test) = load_fed_data(&cfg);
+    let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500);
+    run_zampling_row_with(&cfg, &mut exec, &shards, &test, scale, eval_every)
+}
+
+/// Same, but over a caller-provided executor (PJRT path).
+pub fn run_zampling_row_with(
+    cfg: &FedConfig,
+    exec: &mut dyn DenseExecutor,
+    shards: &[Dataset],
+    test: &Dataset,
+    scale: Scale,
+    eval_every: usize,
+) -> Table1Row {
+    let out = run_federated(cfg, exec, shards, test, eval_samples(scale), eval_every);
+    let rep = out.ledger.savings(cfg.train.arch.num_params());
+    let m_over_n = cfg.train.arch.num_params() / cfg.train.n;
+    Table1Row {
+        label: format!("[us] m/n = {m_over_n}"),
+        client_savings: rep.client_savings,
+        server_savings: rep.server_savings,
+        test_accuracy: out.log.last_acc().unwrap_or(0.0),
+        log: out.log,
+    }
+}
+
+/// The FedPM comparator row ([13] in Table 1).
+pub fn run_fedpm_row(scale: Scale, eval_every: usize) -> Table1Row {
+    let mut cfg = fed_config(1, scale);
+    cfg.train.d = 1;
+    cfg.train.n = cfg.train.arch.num_params();
+    let (shards, test) = load_fed_data(&cfg);
+    let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500);
+    let out = fedpm::run_fedpm(&cfg, &mut exec, &shards, &test, eval_samples(scale), eval_every);
+    let rep = out.ledger.savings(cfg.train.arch.num_params());
+    Table1Row {
+        label: "[13] FedPM".into(),
+        client_savings: rep.client_savings,
+        server_savings: rep.server_savings,
+        test_accuracy: out.log.last_acc().unwrap_or(0.0),
+        log: out.log,
+    }
+}
+
+/// The naive FedAvg row (savings ≡ 1 by construction; accuracy anchor).
+pub fn run_fedavg_row(scale: Scale, eval_every: usize) -> Table1Row {
+    let cfg = fed_config(1, scale);
+    let (shards, test) = load_fed_data(&cfg);
+    let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500);
+    let out = fedavg::run_fedavg(&cfg, &mut exec, &shards, &test, eval_every);
+    let rep = out.ledger.savings(cfg.train.arch.num_params());
+    Table1Row {
+        label: "naive FedAvg".into(),
+        client_savings: rep.client_savings,
+        server_savings: rep.server_savings,
+        test_accuracy: out.log.last_acc().unwrap_or(0.0),
+        log: out.log,
+    }
+}
+
+/// Table 1 printer.
+pub fn print_table1(rows: &[Table1Row]) {
+    use crate::util::bench::{row, table};
+    table(
+        "Table 1: per-round savings vs naive protocol",
+        &["protocol", "client savings", "server savings", "test accuracy"],
+    );
+    for r in rows {
+        row(&[
+            r.label.clone(),
+            format!("{:.2}", r.client_savings),
+            format!("{:.2}", r.server_savings),
+            format!("{:.4}", r.test_accuracy),
+        ]);
+    }
+}
+
+/// Expected savings sanity (closed form): savings ignore framing bytes.
+pub fn ideal_savings(m: usize, n: usize) -> SavingsReport {
+    SavingsReport {
+        naive_bits: 32 * m as u64,
+        avg_uplink_bits_per_client: n as f64,
+        avg_downlink_bits_per_client: 32.0 * n as f64,
+        client_savings: 32.0 * m as f64 / n as f64,
+        server_savings: m as f64 / n as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zampling_row_ci_matches_ideal_savings_within_framing() {
+        let row = run_zampling_row(8, Scale::Ci, 5);
+        let cfg = fed_config(8, Scale::Ci);
+        let ideal = ideal_savings(cfg.train.arch.num_params(), cfg.train.n);
+        // Framing overhead (5+12 bytes/frame) costs a few percent at CI n.
+        assert!(row.client_savings > ideal.client_savings * 0.85, "{row:?}");
+        assert!(row.client_savings <= ideal.client_savings * 1.01, "{row:?}");
+        assert!(row.test_accuracy > 0.25);
+    }
+}

@@ -1,0 +1,128 @@
+//! Fig. 6 (Appendix B.1): Local Zampling (d ∈ {2, 4, 16, 256}) vs the
+//! Zhou et al. supermask baseline; metric = best mask of 100 samples,
+//! 5 seeds, lr 1e-3.
+
+use super::{eval_samples, load_data, native_exec, scaled, seeds, Scale};
+use crate::baselines::zhou;
+use crate::config::TrainConfig;
+use crate::metrics::Summary;
+use crate::nn::ArchSpec;
+use crate::zampling::train_local;
+
+/// One bar of Fig. 6.
+#[derive(Clone, Debug)]
+pub struct Bar {
+    pub label: String,
+    pub best_mask_acc: f64,
+    pub best_std: f64,
+    pub mean_sampled_acc: f64,
+}
+
+pub fn d_grid(scale: Scale) -> Vec<usize> {
+    match scale {
+        Scale::Ci => vec![2, 16],
+        Scale::Paper => vec![2, 4, 16, 256],
+    }
+}
+
+fn base_cfg(d: usize, seed: u64, scale: Scale) -> TrainConfig {
+    // Appendix B.1 uses MnistFc; CI shrinks to SmallArch.
+    let arch = if scale == Scale::Ci { ArchSpec::small() } else { ArchSpec::mnistfc() };
+    let mut cfg = scaled(TrainConfig::local(arch, 1, d, seed), scale);
+    if scale == Scale::Paper {
+        cfg.lr = 0.001;
+    }
+    cfg
+}
+
+/// Zampling bars for each d.
+pub fn run_zampling_bars(scale: Scale) -> Vec<Bar> {
+    d_grid(scale)
+        .into_iter()
+        .map(|d| {
+            let mut best = Summary::default();
+            let mut mean = Summary::default();
+            for seed in seeds(scale) {
+                let cfg = base_cfg(d, seed, scale);
+                let (train, test) = load_data(&cfg);
+                let mut exec = native_exec(&cfg);
+                let out = train_local(&cfg, &mut exec, &train, &test, eval_samples(scale));
+                best.push(out.report.best_sampled_acc);
+                mean.push(out.report.mean_sampled_acc);
+            }
+            Bar {
+                label: format!("Zampling d={d}"),
+                best_mask_acc: best.mean(),
+                best_std: best.std(),
+                mean_sampled_acc: mean.mean(),
+            }
+        })
+        .collect()
+}
+
+/// The Zhou supermask bar.
+pub fn run_zhou_bar(scale: Scale) -> Bar {
+    let mut best = Summary::default();
+    let mut mean = Summary::default();
+    for seed in seeds(scale) {
+        let mut cfg = base_cfg(1, seed, scale);
+        cfg.d = 1;
+        // Zhou's sigmoid scores need a larger step than the clip at CI
+        // budgets; paper scale keeps lr 1e-3 like Appendix B.1.
+        if scale == Scale::Ci {
+            cfg.lr = 0.1;
+        }
+        let (train, test) = load_data(&cfg);
+        let mut exec = native_exec(&cfg);
+        let out = zhou::train_zhou(&cfg, &mut exec, &train, &test, eval_samples(scale));
+        best.push(out.best_mask_acc);
+        mean.push(out.mean_sampled_acc);
+    }
+    Bar {
+        label: "Zhou et al. [31]".into(),
+        best_mask_acc: best.mean(),
+        best_std: best.std(),
+        mean_sampled_acc: mean.mean(),
+    }
+}
+
+pub fn run(scale: Scale) -> Vec<Bar> {
+    let mut bars = run_zampling_bars(scale);
+    bars.push(run_zhou_bar(scale));
+    bars
+}
+
+pub fn print_figure(bars: &[Bar]) {
+    use crate::util::bench::{row, table};
+    table(
+        "Fig. 6: best sampled mask vs Zhou et al.",
+        &["method", "best mask acc", "± std", "mean sampled"],
+    );
+    for b in bars {
+        row(&[
+            b.label.clone(),
+            format!("{:.4}", b.best_mask_acc),
+            format!("{:.4}", b.best_std),
+            format!("{:.4}", b.mean_sampled_acc),
+        ]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zampling_with_decent_d_beats_zhou_at_ci_scale() {
+        let z = run_zampling_bars(Scale::Ci);
+        let zhou = run_zhou_bar(Scale::Ci);
+        let best_zampling =
+            z.iter().map(|b| b.best_mask_acc).fold(f64::NEG_INFINITY, f64::max);
+        // The paper's Fig. 6 claim, at CI fidelity: allow a small slack.
+        assert!(
+            best_zampling + 0.05 >= zhou.best_mask_acc,
+            "zampling {best_zampling} vs zhou {}",
+            zhou.best_mask_acc
+        );
+    }
+}

@@ -1,0 +1,317 @@
+//! Decentralized Zampling — the paper's §4 future-work direction:
+//! *"a distributed setting, without a central server, testing the
+//! performance of Federated Zampling where the communication between
+//! clients follows arbitrary graph patterns."*
+//!
+//! Each node holds its own probability vector.  Per round, every node
+//! trains locally by sampling, samples a fresh mask from its clipped
+//! scores, and **gossips the n-bit mask to its graph neighbours**; it
+//! then averages its own mask with the received ones:
+//! `p_k(t+1) = mean({z_k} ∪ {z_j : j ~ k})`.  The complete graph
+//! recovers the centralized protocol exactly (same mean over the same
+//! masks); sparser topologies trade convergence speed for per-node
+//! degree-proportional communication.
+
+use std::sync::Arc;
+
+use crate::comm::{CommLedger, RoundCost};
+use crate::config::FedConfig;
+use crate::data::Dataset;
+use crate::metrics::{RoundRecord, RunLog};
+use crate::nn::one_hot_into;
+use crate::rng::SeedTree;
+use crate::sparse::QMatrix;
+use crate::zampling::{evaluate, DenseExecutor, LocalZampling, ProbVector};
+
+/// Undirected communication graph over `k` nodes (adjacency lists).
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub neighbors: Vec<Vec<usize>>,
+}
+
+impl Topology {
+    pub fn complete(k: usize) -> Self {
+        Self {
+            neighbors: (0..k).map(|i| (0..k).filter(|&j| j != i).collect()).collect(),
+        }
+    }
+
+    pub fn ring(k: usize) -> Self {
+        assert!(k >= 2);
+        Self {
+            neighbors: (0..k)
+                .map(|i| {
+                    let mut v = vec![(i + 1) % k, (i + k - 1) % k];
+                    v.sort_unstable();
+                    v.dedup();
+                    v
+                })
+                .collect(),
+        }
+    }
+
+    /// Star around node 0 (the "almost centralized" topology).
+    pub fn star(k: usize) -> Self {
+        assert!(k >= 2);
+        let mut neighbors = vec![Vec::new(); k];
+        for i in 1..k {
+            neighbors[0].push(i);
+            neighbors[i].push(0);
+        }
+        Self { neighbors }
+    }
+
+    pub fn len(&self) -> usize {
+        self.neighbors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.neighbors.is_empty()
+    }
+
+    /// Total directed edges (messages per round).
+    pub fn num_messages(&self) -> usize {
+        self.neighbors.iter().map(|n| n.len()).sum()
+    }
+}
+
+/// Outcome of a decentralized run; accuracy is evaluated on the
+/// node-averaged consensus vector (what the nodes converge towards).
+pub struct GossipOutcome {
+    pub log: RunLog,
+    pub ledger: CommLedger,
+    pub node_probs: Vec<Vec<f32>>,
+}
+
+/// Run decentralized Zampling over `topo`.
+pub fn run_gossip(
+    cfg: &FedConfig,
+    topo: &Topology,
+    exec: &mut dyn DenseExecutor,
+    shards: &[Dataset],
+    test: &Dataset,
+    eval_samples: usize,
+    eval_every: usize,
+) -> GossipOutcome {
+    assert_eq!(shards.len(), topo.len(), "one shard per node");
+    let k = topo.len();
+    let seeds = SeedTree::new(cfg.train.seed);
+    let q = Arc::new(QMatrix::generate(&cfg.train.arch, cfg.train.n, cfg.train.d, &seeds));
+    let csc = Arc::new(q.to_csc(None));
+    let n = cfg.train.n;
+
+    // All nodes start from the shared-seed p(0) (same as centralized).
+    let mut init_rng = seeds.rng("p-init", 0);
+    let p0 = ProbVector::init_uniform(n, &mut init_rng).probs().to_vec();
+    let mut nodes: Vec<LocalZampling> = (0..k)
+        .map(|i| {
+            let sub = seeds.subtree("client", i as u64);
+            LocalZampling::from_parts(
+                &cfg.train,
+                Arc::clone(&q),
+                Arc::clone(&csc),
+                ProbVector::from_probs(p0.clone()),
+                &sub,
+            )
+        })
+        .collect();
+
+    let out_dim = exec.arch().output_dim();
+    let mut test_y1h = vec![0.0f32; test.len() * out_dim];
+    one_hot_into(&test.y, out_dim, &mut test_y1h);
+    let mut eval_rng = seeds.rng("eval-sampler", 0);
+
+    let mut log = RunLog::new("gossip");
+    let mut ledger = CommLedger::default();
+    let mask_bits = n as u64; // per message (raw bit-packed)
+
+    for round in 0..cfg.rounds {
+        // 1. Local training + mask sampling at every node.
+        let mut masks: Vec<Vec<bool>> = Vec::with_capacity(k);
+        let mut round_loss = 0.0f64;
+        for (i, node) in nodes.iter_mut().enumerate() {
+            node.reset_optimizer(&cfg.train);
+            let mut loss = 0.0;
+            for _ in 0..cfg.local_epochs {
+                loss = node.run_epoch(exec, &shards[i], cfg.train.batch);
+            }
+            round_loss += loss;
+            let mut rng = seeds.subtree("client", i as u64).rng("gossip-mask", round as u64);
+            let mut mask = Vec::new();
+            node.pv.sample_mask(&mut rng, &mut mask);
+            masks.push(mask);
+        }
+
+        // 2. Gossip: p_i ← mean of own mask and neighbours' masks.
+        let mut new_probs: Vec<Vec<f32>> = Vec::with_capacity(k);
+        for i in 0..k {
+            let mut acc: Vec<f32> = masks[i].iter().map(|&b| b as u8 as f32).collect();
+            for &j in &topo.neighbors[i] {
+                for (a, &b) in acc.iter_mut().zip(&masks[j]) {
+                    *a += b as u8 as f32;
+                }
+            }
+            let denom = (topo.neighbors[i].len() + 1) as f32;
+            for a in acc.iter_mut() {
+                *a /= denom;
+            }
+            new_probs.push(acc);
+        }
+        for (node, p) in nodes.iter_mut().zip(&new_probs) {
+            node.pv.set_probs(p);
+        }
+        // Peer-to-peer traffic: one mask per directed edge; no downlink.
+        ledger.record(RoundCost {
+            uplink_bits: mask_bits * topo.num_messages() as u64,
+            downlink_bits: 0,
+            clients: k as u32,
+        });
+
+        // 3. Evaluate the consensus (node-average) vector.
+        if round % eval_every == 0 || round + 1 == cfg.rounds {
+            let mut consensus = vec![0.0f32; n];
+            for node in &nodes {
+                for (c, &p) in consensus.iter_mut().zip(node.pv.probs()) {
+                    *c += p;
+                }
+            }
+            for c in consensus.iter_mut() {
+                *c /= k as f32;
+            }
+            let pv = ProbVector::from_probs(consensus);
+            let rep = evaluate(
+                exec,
+                &q,
+                &pv,
+                &test.x,
+                &test_y1h,
+                test.len(),
+                eval_samples,
+                &mut eval_rng,
+            );
+            log.push(RoundRecord {
+                round,
+                mean_sampled_acc: rep.mean_sampled_acc,
+                sampled_acc_std: rep.sampled_acc_std,
+                expected_acc: rep.expected_acc,
+                train_loss: round_loss / k as f64,
+                uplink_bits: mask_bits * topo.num_messages() as u64,
+                downlink_bits: 0,
+            });
+        }
+    }
+
+    GossipOutcome {
+        log,
+        ledger,
+        node_probs: nodes.into_iter().map(|s| s.pv.probs().to_vec()).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::ArchSpec;
+    use crate::zampling::NativeExecutor;
+
+    fn ci_setup() -> (FedConfig, Vec<Dataset>, Dataset) {
+        let mut cfg = FedConfig::paper(8);
+        cfg.train.arch = ArchSpec::small();
+        cfg.train.n = ArchSpec::small().num_params() / 8;
+        cfg.train.d = 5;
+        cfg.train.lr = 0.1;
+        cfg.train.seed = 1;
+        cfg.clients = 4;
+        cfg.rounds = 6;
+        cfg.local_epochs = 1;
+        let seeds = SeedTree::new(cfg.train.seed);
+        let (train, test) = Dataset::synthetic_pair(1_024, 256, &seeds);
+        let shards = train.partition_iid(cfg.clients, &seeds);
+        (cfg, shards, test)
+    }
+
+    #[test]
+    fn topologies_are_well_formed() {
+        for topo in [Topology::complete(5), Topology::ring(5), Topology::star(5)] {
+            assert_eq!(topo.len(), 5);
+            for (i, ns) in topo.neighbors.iter().enumerate() {
+                for &j in ns {
+                    assert_ne!(i, j);
+                    assert!(topo.neighbors[j].contains(&i), "graph not symmetric");
+                }
+            }
+        }
+        assert_eq!(Topology::complete(5).num_messages(), 20);
+        assert_eq!(Topology::ring(5).num_messages(), 10);
+        assert_eq!(Topology::star(5).num_messages(), 8);
+    }
+
+    #[test]
+    fn gossip_learns_on_ring_and_complete() {
+        let (cfg, shards, test) = ci_setup();
+        for topo in [Topology::complete(cfg.clients), Topology::ring(cfg.clients)] {
+            let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500);
+            let out = run_gossip(&cfg, &topo, &mut exec, &shards, &test, 6, 2);
+            let first = out.log.rounds.first().unwrap().mean_sampled_acc;
+            let last = out.log.rounds.last().unwrap().mean_sampled_acc;
+            assert!(last > first, "no improvement on {topo:?}: {first} → {last}");
+            assert!(last > 0.3, "failed to learn on {topo:?}: {last}");
+        }
+    }
+
+    #[test]
+    fn ring_uses_less_traffic_than_complete() {
+        let (cfg, shards, test) = ci_setup();
+        let mut e1 = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500);
+        let mut e2 = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500);
+        let complete = run_gossip(
+            &cfg,
+            &Topology::complete(cfg.clients),
+            &mut e1,
+            &shards,
+            &test,
+            2,
+            5,
+        );
+        let ring =
+            run_gossip(&cfg, &Topology::ring(cfg.clients), &mut e2, &shards, &test, 2, 5);
+        assert!(ring.ledger.total_uplink_bits() < complete.ledger.total_uplink_bits());
+    }
+
+    #[test]
+    fn nodes_drift_apart_on_sparse_graphs_but_not_complete() {
+        let (cfg, shards, test) = ci_setup();
+        let spread = |probs: &[Vec<f32>]| -> f64 {
+            // max pairwise L2 distance between node vectors
+            let mut worst = 0.0f64;
+            for a in probs {
+                for b in probs {
+                    let d: f64 = a
+                        .iter()
+                        .zip(b)
+                        .map(|(&x, &y)| ((x - y) as f64).powi(2))
+                        .sum::<f64>()
+                        .sqrt();
+                    worst = worst.max(d);
+                }
+            }
+            worst
+        };
+        let mut e1 = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500);
+        let complete = run_gossip(
+            &cfg,
+            &Topology::complete(cfg.clients),
+            &mut e1,
+            &shards,
+            &test,
+            2,
+            5,
+        );
+        // Complete graph: all nodes average the same masks → identical p.
+        assert!(spread(&complete.node_probs) < 1e-6, "{}", spread(&complete.node_probs));
+        let mut e2 = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500);
+        let ring =
+            run_gossip(&cfg, &Topology::ring(cfg.clients), &mut e2, &shards, &test, 2, 5);
+        assert!(spread(&ring.node_probs) > spread(&complete.node_probs));
+    }
+}

@@ -1,0 +1,105 @@
+//! Federated Zampling (§1.3, Fig. 1): server, clients, round protocol,
+//! transports, and the in-process simulator behind §3.2.
+//!
+//! Per round `t`:
+//! 1. server → clients: `p(t)` (floats — `32n` bits downlink per client);
+//! 2. each client `k`: `s = p(t)`; local training-by-sampling on its
+//!    shard (`z ~ Bern(p)` per batch, `w = Qz`, dense step, chain through
+//!    `Qᵀ`, score update, clip);
+//! 3. client samples `z_new ~ Bern(f(s))` and uplinks the **mask** —
+//!    `n` bits (or fewer with the arithmetic coder);
+//! 4. server: `p(t+1) = (1/K) Σ_k z_new^{(k)}`.
+//!
+//! The wire is real even in the in-process simulator: every message is
+//! serialized through [`protocol`], the ledger records the actual encoded
+//! byte counts, and the TCP transport ships the same frames.
+
+pub mod gossip;
+pub mod protocol;
+pub mod transport;
+
+mod sim;
+
+pub use sim::{run_federated, FedOutcome};
+
+use crate::comm::{pack_bits, unpack_bits};
+
+/// Server state: the global probability vector.
+#[derive(Clone, Debug)]
+pub struct Server {
+    pub probs: Vec<f32>,
+    /// Accumulator for the current round's mask sum.
+    acc: Vec<u32>,
+    received: usize,
+}
+
+impl Server {
+    pub fn new(init_probs: Vec<f32>) -> Self {
+        let n = init_probs.len();
+        Self { probs: init_probs, acc: vec![0; n], received: 0 }
+    }
+
+    pub fn n(&self) -> usize {
+        self.probs.len()
+    }
+
+    /// Fold in one client's uplinked mask.
+    pub fn receive_mask(&mut self, mask_bits: &[u64]) {
+        let mask = unpack_bits(mask_bits, self.n());
+        for (a, b) in self.acc.iter_mut().zip(&mask) {
+            *a += *b as u32;
+        }
+        self.received += 1;
+    }
+
+    /// Close the round: `p ← mean of received masks`.  Panics if no mask
+    /// arrived (protocol violation).
+    pub fn aggregate(&mut self) {
+        assert!(self.received > 0, "aggregate() with no client masks");
+        let k = self.received as f32;
+        for (p, &a) in self.probs.iter_mut().zip(&self.acc) {
+            *p = a as f32 / k;
+        }
+        self.acc.fill(0);
+        self.received = 0;
+    }
+}
+
+/// Re-export for client mask packing (used by sim and the TCP worker).
+pub fn pack_client_mask(mask: &[bool]) -> Vec<u64> {
+    pack_bits(mask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn server_averages_masks() {
+        let mut s = Server::new(vec![0.5; 4]);
+        s.receive_mask(&pack_bits(&[true, false, true, false]));
+        s.receive_mask(&pack_bits(&[true, true, false, false]));
+        s.aggregate();
+        assert_eq!(s.probs, vec![1.0, 0.5, 0.5, 0.0]);
+        // next round starts fresh
+        s.receive_mask(&pack_bits(&[false, false, false, true]));
+        s.aggregate();
+        assert_eq!(s.probs, vec![0.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "no client masks")]
+    fn aggregate_without_masks_panics() {
+        Server::new(vec![0.5; 2]).aggregate();
+    }
+
+    #[test]
+    fn averaging_preserves_unit_interval() {
+        let mut s = Server::new(vec![0.0; 3]);
+        for _ in 0..7 {
+            s.receive_mask(&pack_bits(&[true, false, true]));
+        }
+        s.aggregate();
+        assert!(s.probs.iter().all(|&p| (0.0..=1.0).contains(&p)));
+    }
+}

@@ -1,0 +1,192 @@
+//! Wire protocol: framed messages shared by the in-process simulator and
+//! the TCP transport.
+//!
+//! Frame layout: `[tag: u8][len: u32 le][payload: len bytes]`.
+//! The byte counts the ledger records are exactly `frame_len(msg)`.
+
+use crate::comm::{arith, BitPack, FloatVec};
+use anyhow::{anyhow, bail, Result};
+
+/// How the client mask is encoded on the uplink.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MaskCodec {
+    /// Raw packed bits: exactly `⌈n/64⌉·8` bytes — the paper's "n bits".
+    Raw,
+    /// Adaptive arithmetic coding (≈ H(p̂)·n bits — the Isik-style rate).
+    Arithmetic,
+}
+
+/// Server → client.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServerMsg {
+    /// Start round `round` with the current global probabilities.
+    Round { round: u32, probs: Vec<f32> },
+    /// Training is over; workers exit.
+    Shutdown,
+}
+
+/// Client → server.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ClientMsg {
+    /// The sampled mask for `round` (encoded per `codec`).
+    Mask { round: u32, client: u32, n: usize, mask: Vec<bool> },
+    /// Worker greets with its client id (TCP handshake).
+    Hello { client: u32 },
+}
+
+const TAG_ROUND: u8 = 1;
+const TAG_SHUTDOWN: u8 = 2;
+const TAG_MASK_RAW: u8 = 3;
+const TAG_MASK_ARITH: u8 = 4;
+const TAG_HELLO: u8 = 5;
+
+fn frame(tag: u8, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(5 + payload.len());
+    out.push(tag);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Encode a server message.
+pub fn encode_server(msg: &ServerMsg) -> Vec<u8> {
+    match msg {
+        ServerMsg::Round { round, probs } => {
+            let mut payload = Vec::with_capacity(4 + probs.len() * 4);
+            payload.extend_from_slice(&round.to_le_bytes());
+            payload.extend_from_slice(&FloatVec::encode(probs));
+            frame(TAG_ROUND, &payload)
+        }
+        ServerMsg::Shutdown => frame(TAG_SHUTDOWN, &[]),
+    }
+}
+
+/// Encode a client message with the chosen mask codec.
+pub fn encode_client(msg: &ClientMsg, codec: MaskCodec) -> Vec<u8> {
+    match msg {
+        ClientMsg::Mask { round, client, n, mask } => {
+            debug_assert_eq!(mask.len(), *n);
+            let (tag, body) = match codec {
+                MaskCodec::Raw => (TAG_MASK_RAW, BitPack::encode(mask)),
+                MaskCodec::Arithmetic => (TAG_MASK_ARITH, arith::encode(mask)),
+            };
+            let mut payload = Vec::with_capacity(12 + body.len());
+            payload.extend_from_slice(&round.to_le_bytes());
+            payload.extend_from_slice(&client.to_le_bytes());
+            payload.extend_from_slice(&(*n as u32).to_le_bytes());
+            payload.extend_from_slice(&body);
+            frame(tag, &payload)
+        }
+        ClientMsg::Hello { client } => frame(TAG_HELLO, &client.to_le_bytes()),
+    }
+}
+
+/// Split one frame off the front of `buf`; returns `(tag, payload)`.
+fn split_frame(buf: &[u8]) -> Result<(u8, &[u8])> {
+    if buf.len() < 5 {
+        bail!("truncated frame header ({} bytes)", buf.len());
+    }
+    let tag = buf[0];
+    let len = u32::from_le_bytes(buf[1..5].try_into().unwrap()) as usize;
+    let payload = buf.get(5..5 + len).ok_or_else(|| anyhow!("truncated frame payload"))?;
+    Ok((tag, payload))
+}
+
+pub fn decode_server(buf: &[u8]) -> Result<ServerMsg> {
+    let (tag, p) = split_frame(buf)?;
+    match tag {
+        TAG_ROUND => {
+            if p.len() < 4 || (p.len() - 4) % 4 != 0 {
+                bail!("bad Round payload length {}", p.len());
+            }
+            let round = u32::from_le_bytes(p[..4].try_into().unwrap());
+            Ok(ServerMsg::Round { round, probs: FloatVec::decode(&p[4..]) })
+        }
+        TAG_SHUTDOWN => Ok(ServerMsg::Shutdown),
+        t => bail!("unexpected server tag {t}"),
+    }
+}
+
+pub fn decode_client(buf: &[u8]) -> Result<ClientMsg> {
+    let (tag, p) = split_frame(buf)?;
+    match tag {
+        TAG_MASK_RAW | TAG_MASK_ARITH => {
+            if p.len() < 12 {
+                bail!("bad Mask payload length {}", p.len());
+            }
+            let round = u32::from_le_bytes(p[0..4].try_into().unwrap());
+            let client = u32::from_le_bytes(p[4..8].try_into().unwrap());
+            let n = u32::from_le_bytes(p[8..12].try_into().unwrap()) as usize;
+            let mask = if tag == TAG_MASK_RAW {
+                if p.len() - 12 != BitPack::wire_bytes(n) {
+                    bail!("raw mask body {} bytes, want {}", p.len() - 12, BitPack::wire_bytes(n));
+                }
+                BitPack::decode(&p[12..], n)
+            } else {
+                arith::decode(&p[12..], n)
+            };
+            Ok(ClientMsg::Mask { round, client, n, mask })
+        }
+        TAG_HELLO => {
+            if p.len() != 4 {
+                bail!("bad Hello payload");
+            }
+            Ok(ClientMsg::Hello { client: u32::from_le_bytes(p.try_into().unwrap()) })
+        }
+        t => bail!("unexpected client tag {t}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Rng, Xoshiro256pp};
+
+    #[test]
+    fn server_roundtrip() {
+        let msg = ServerMsg::Round { round: 7, probs: vec![0.25, 0.5, 1.0] };
+        assert_eq!(decode_server(&encode_server(&msg)).unwrap(), msg);
+        assert_eq!(decode_server(&encode_server(&ServerMsg::Shutdown)).unwrap(), ServerMsg::Shutdown);
+    }
+
+    #[test]
+    fn client_roundtrip_both_codecs() {
+        let mut rng = Xoshiro256pp::seed_from(3);
+        let mask: Vec<bool> = (0..517).map(|_| rng.bernoulli(0.3)).collect();
+        let msg = ClientMsg::Mask { round: 2, client: 9, n: 517, mask };
+        for codec in [MaskCodec::Raw, MaskCodec::Arithmetic] {
+            assert_eq!(decode_client(&encode_client(&msg, codec)).unwrap(), msg);
+        }
+        let hello = ClientMsg::Hello { client: 4 };
+        assert_eq!(decode_client(&encode_client(&hello, MaskCodec::Raw)).unwrap(), hello);
+    }
+
+    #[test]
+    fn arithmetic_uplink_is_smaller_on_skewed_masks() {
+        let mut rng = Xoshiro256pp::seed_from(4);
+        let mask: Vec<bool> = (0..20_000).map(|_| rng.bernoulli(0.05)).collect();
+        let msg = ClientMsg::Mask { round: 0, client: 0, n: mask.len(), mask };
+        let raw = encode_client(&msg, MaskCodec::Raw).len();
+        let arith = encode_client(&msg, MaskCodec::Arithmetic).len();
+        assert!(arith < raw / 2, "arith {arith} raw {raw}");
+    }
+
+    #[test]
+    fn rejects_malformed_frames() {
+        assert!(decode_server(&[]).is_err());
+        assert!(decode_server(&[9, 0, 0, 0, 0]).is_err());
+        assert!(decode_client(&[3, 2, 0, 0, 0, 1, 2]).is_err());
+        // truncated payload
+        let good = encode_server(&ServerMsg::Round { round: 0, probs: vec![1.0] });
+        assert!(decode_server(&good[..good.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn raw_mask_wire_size_is_the_papers_n_bits() {
+        // n = 8331 (MnistFc m/32): payload body must be ⌈n/64⌉·8 bytes.
+        let mask = vec![true; 8331];
+        let msg = ClientMsg::Mask { round: 0, client: 0, n: 8331, mask };
+        let bytes = encode_client(&msg, MaskCodec::Raw).len();
+        assert_eq!(bytes, 5 + 12 + 8331usize.div_ceil(64) * 8);
+    }
+}

@@ -1,0 +1,226 @@
+//! In-process federated simulator — the driver behind §3.2 / Fig. 4 /
+//! Table 1.
+//!
+//! Clients run sequentially in one thread (PJRT executors are not `Send`)
+//! but every message still round-trips through the wire encoder, so the
+//! ledger's byte counts are the real protocol costs, bit-for-bit equal to
+//! what the TCP transport ships.
+
+use std::sync::Arc;
+
+use crate::comm::{CommLedger, RoundCost};
+use crate::config::FedConfig;
+use crate::data::Dataset;
+use crate::metrics::{RoundRecord, RunLog};
+use crate::nn::one_hot_into;
+use crate::rng::SeedTree;
+use crate::sparse::QMatrix;
+use crate::zampling::{evaluate, DenseExecutor, LocalZampling, ProbVector};
+
+use super::protocol::{
+    decode_client, decode_server, encode_client, encode_server, ClientMsg, MaskCodec, ServerMsg,
+};
+use super::{pack_client_mask, Server};
+
+/// Result of a federated run.
+pub struct FedOutcome {
+    pub log: RunLog,
+    pub ledger: CommLedger,
+    pub final_probs: Vec<f32>,
+}
+
+/// Run Federated Zampling per the config.
+///
+/// * `exec` — the dense executor shared by all (simulated) clients.
+/// * `shards` — per-client training shards (from `Dataset::partition_iid`).
+/// * `test` — held-out split for the per-round evaluation.
+/// * `eval_samples` — masks per mean-sampled-accuracy estimate (§3.2: 100).
+/// * `eval_every` — evaluate every `eval_every` rounds (1 = paper).
+pub fn run_federated(
+    cfg: &FedConfig,
+    exec: &mut dyn DenseExecutor,
+    shards: &[Dataset],
+    test: &Dataset,
+    eval_samples: usize,
+    eval_every: usize,
+) -> FedOutcome {
+    assert_eq!(shards.len(), cfg.clients, "need one shard per client");
+    let seeds = SeedTree::new(cfg.train.seed);
+    let codec = if cfg.entropy_code_uplink { MaskCodec::Arithmetic } else { MaskCodec::Raw };
+
+    // Shared-seed initialization: every party derives the same Q; the
+    // server owns p(0) ~ U(0,1)^n from the shared stream.
+    let q = Arc::new(QMatrix::generate(&cfg.train.arch, cfg.train.n, cfg.train.d, &seeds));
+    let csc = Arc::new(q.to_csc(None));
+    let mut init_rng = seeds.rng("p-init", 0);
+    let mut server = Server::new(ProbVector::init_uniform(cfg.train.n, &mut init_rng).probs().to_vec());
+
+    // Client states: local (Q, p) + a per-client seed subtree.
+    let mut clients: Vec<LocalZampling> = (0..cfg.clients)
+        .map(|k| {
+            let sub = seeds.subtree("client", k as u64);
+            LocalZampling::from_parts(
+                &cfg.train,
+                Arc::clone(&q),
+                Arc::clone(&csc),
+                ProbVector::from_probs(server.probs.clone()),
+                &sub,
+            )
+        })
+        .collect();
+
+    // Staged test split for evaluation.
+    let out_dim = exec.arch().output_dim();
+    let mut test_y1h = vec![0.0f32; test.len() * out_dim];
+    one_hot_into(&test.y, out_dim, &mut test_y1h);
+    let mut eval_rng = seeds.rng("eval-sampler", 0);
+
+    let mut log = RunLog::new("federated");
+    let mut ledger = CommLedger::default();
+
+    for round in 0..cfg.rounds {
+        let mut up_bits = 0u64;
+        let mut down_bits = 0u64;
+        let mut round_loss = 0.0f64;
+
+        // 1. Broadcast p(t) — one encoded frame per client.
+        let round_msg =
+            encode_server(&ServerMsg::Round { round: round as u32, probs: server.probs.clone() });
+        for (k, client) in clients.iter_mut().enumerate() {
+            let msg = decode_server(&round_msg).expect("round frame");
+            let ServerMsg::Round { probs, .. } = msg else { unreachable!() };
+            down_bits += round_msg.len() as u64 * 8;
+
+            // 2. Client local training-by-sampling.
+            client.pv.set_probs(&probs);
+            client.reset_optimizer(&cfg.train);
+            let mut loss = 0.0;
+            for _ in 0..cfg.local_epochs {
+                loss = client.run_epoch(exec, &shards[k], cfg.train.batch);
+            }
+            round_loss += loss;
+
+            // 3. Sample z_new ~ Bern(f(s)) and uplink the mask.
+            let mut mask_rng = seeds.subtree("client", k as u64).rng("uplink-mask", round as u64);
+            let mut mask = Vec::new();
+            client.pv.sample_mask(&mut mask_rng, &mut mask);
+            let frame = encode_client(
+                &ClientMsg::Mask { round: round as u32, client: k as u32, n: mask.len(), mask },
+                codec,
+            );
+            up_bits += frame.len() as u64 * 8;
+            let ClientMsg::Mask { mask, .. } = decode_client(&frame).expect("mask frame") else {
+                unreachable!()
+            };
+            server.receive_mask(&pack_client_mask(&mask));
+        }
+
+        // 4. Aggregate: p(t+1) = mean of masks.
+        server.aggregate();
+        ledger.record(RoundCost {
+            uplink_bits: up_bits,
+            downlink_bits: down_bits,
+            clients: cfg.clients as u32,
+        });
+
+        // Evaluation on the server's new p.
+        if round % eval_every == 0 || round + 1 == cfg.rounds {
+            let pv = ProbVector::from_probs(server.probs.clone());
+            let rep = evaluate(
+                exec,
+                &q,
+                &pv,
+                &test.x,
+                &test_y1h,
+                test.len(),
+                eval_samples,
+                &mut eval_rng,
+            );
+            log.push(RoundRecord {
+                round,
+                mean_sampled_acc: rep.mean_sampled_acc,
+                sampled_acc_std: rep.sampled_acc_std,
+                expected_acc: rep.expected_acc,
+                train_loss: round_loss / cfg.clients as f64,
+                uplink_bits: up_bits,
+                downlink_bits: down_bits,
+            });
+        }
+    }
+
+    FedOutcome { log, ledger, final_probs: server.probs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::ArchSpec;
+    use crate::zampling::NativeExecutor;
+
+    fn tiny_fed(entropy: bool) -> (FedConfig, Vec<Dataset>, Dataset) {
+        let mut cfg = FedConfig::paper(8);
+        cfg.train.arch = ArchSpec::small();
+        cfg.train.n = ArchSpec::small().num_params() / 8;
+        cfg.train.d = 5;
+        cfg.train.lr = 0.1;
+        cfg.train.seed = 1;
+        cfg.clients = 4;
+        cfg.rounds = 6;
+        cfg.local_epochs = 1;
+        cfg.entropy_code_uplink = entropy;
+        let seeds = SeedTree::new(cfg.train.seed);
+        let (train, test) = Dataset::synthetic_pair(1024, 256, &seeds);
+        let shards = train.partition_iid(cfg.clients, &seeds);
+        (cfg, shards, test)
+    }
+
+    #[test]
+    fn federated_training_learns_and_accounts_comm() {
+        let (cfg, shards, test) = tiny_fed(false);
+        let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 256);
+        let out = run_federated(&cfg, &mut exec, &shards, &test, 8, 1);
+        let first = out.log.rounds.first().unwrap().mean_sampled_acc;
+        let last = out.log.rounds.last().unwrap().mean_sampled_acc;
+        assert!(last > first, "accuracy did not improve: {first} → {last}");
+        assert!(last > 0.3, "final acc {last}");
+
+        // Ledger: downlink is 32n-ish bits + framing; uplink ~ n bits.
+        let rep = out.ledger.savings(cfg.train.arch.num_params());
+        // client savings should approach 32·(m/n) = 256 (modulo framing)
+        assert!(rep.client_savings > 200.0, "client savings {rep:?}");
+        assert!(rep.server_savings > 6.0, "server savings {rep:?}");
+        assert_eq!(out.final_probs.len(), cfg.train.n);
+    }
+
+    #[test]
+    fn entropy_coded_uplink_beats_raw_bits_late_in_training() {
+        let (cfg, shards, test) = tiny_fed(true);
+        let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 256);
+        let out = run_federated(&cfg, &mut exec, &shards, &test, 4, 3);
+        // After aggregation p concentrates; the arithmetic coder should
+        // drop below 1 bit/entry at least by the last round.
+        let last = out.ledger.rounds.last().unwrap();
+        let bits_per_entry =
+            last.uplink_bits as f64 / (cfg.clients as f64 * cfg.train.n as f64);
+        assert!(bits_per_entry < 1.2, "bits/entry {bits_per_entry}");
+    }
+
+    #[test]
+    fn federated_run_is_deterministic() {
+        let (cfg, shards, test) = tiny_fed(false);
+        let mut e1 = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 256);
+        let mut e2 = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 256);
+        let a = run_federated(&cfg, &mut e1, &shards, &test, 4, 2);
+        let b = run_federated(&cfg, &mut e2, &shards, &test, 4, 2);
+        assert_eq!(a.final_probs, b.final_probs);
+    }
+
+    #[test]
+    #[should_panic(expected = "one shard per client")]
+    fn shard_count_mismatch_panics() {
+        let (cfg, mut shards, test) = tiny_fed(false);
+        shards.pop();
+        let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 256);
+        run_federated(&cfg, &mut exec, &shards, &test, 2, 1);
+    }
+}

@@ -1,0 +1,196 @@
+//! TCP transport: the same frames as the simulator, over real sockets.
+//!
+//! Topology: the leader (`repro train-federated --transport tcp`) listens;
+//! each worker process (`repro serve-client`) connects, sends `Hello`,
+//! and then loops `recv Round → local train → send Mask` until
+//! `Shutdown`.  Frames are the exact bytes of `protocol::encode_*`, read
+//! with a 5-byte header prefetch.  Blocking std::net I/O with one thread
+//! per accepted connection on the leader side (tokio is unavailable
+//! offline; for ≤ tens of clients blocking threads are the simpler and
+//! equally fast design).
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+
+use anyhow::{Context, Result};
+
+use super::protocol::{
+    decode_client, decode_server, encode_client, encode_server, ClientMsg, MaskCodec, ServerMsg,
+};
+
+/// Read one length-prefixed frame from the stream.
+pub fn read_frame(stream: &mut TcpStream) -> Result<Vec<u8>> {
+    let mut header = [0u8; 5];
+    stream.read_exact(&mut header).context("reading frame header")?;
+    let len = u32::from_le_bytes(header[1..5].try_into().unwrap()) as usize;
+    let mut buf = vec![0u8; 5 + len];
+    buf[..5].copy_from_slice(&header);
+    stream.read_exact(&mut buf[5..]).context("reading frame payload")?;
+    Ok(buf)
+}
+
+pub fn write_frame(stream: &mut TcpStream, frame: &[u8]) -> Result<()> {
+    stream.write_all(frame).context("writing frame")?;
+    stream.flush().context("flushing frame")
+}
+
+/// Leader-side connection registry: accepts `expected` workers and keeps
+/// their streams in `Hello`-id order.
+pub struct Leader {
+    streams: Vec<TcpStream>,
+    /// Total bytes sent/received (feeds the comm ledger).
+    pub sent_bytes: u64,
+    pub recv_bytes: u64,
+}
+
+impl Leader {
+    /// Bind `addr` and accept exactly `expected` workers.
+    pub fn accept(addr: &str, expected: usize) -> Result<Leader> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let mut slots: Vec<Option<TcpStream>> = (0..expected).map(|_| None).collect();
+        let mut seen = 0usize;
+        while seen < expected {
+            let (mut stream, peer) = listener.accept().context("accept")?;
+            stream.set_nodelay(true).ok();
+            let frame = read_frame(&mut stream)?;
+            match decode_client(&frame)? {
+                ClientMsg::Hello { client } => {
+                    let idx = client as usize;
+                    anyhow::ensure!(idx < expected, "client id {idx} ≥ expected {expected}");
+                    anyhow::ensure!(slots[idx].is_none(), "duplicate client id {idx} from {peer}");
+                    slots[idx] = Some(stream);
+                    seen += 1;
+                }
+                other => anyhow::bail!("expected Hello, got {other:?}"),
+            }
+        }
+        Ok(Leader {
+            streams: slots.into_iter().map(|s| s.unwrap()).collect(),
+            sent_bytes: 0,
+            recv_bytes: 0,
+        })
+    }
+
+    pub fn num_clients(&self) -> usize {
+        self.streams.len()
+    }
+
+    /// Broadcast a round start; returns bytes sent per client.
+    pub fn broadcast(&mut self, msg: &ServerMsg) -> Result<usize> {
+        let frame = encode_server(msg);
+        for s in &mut self.streams {
+            write_frame(s, &frame)?;
+        }
+        self.sent_bytes += (frame.len() * self.streams.len()) as u64;
+        Ok(frame.len())
+    }
+
+    /// Collect one `Mask` from every client (any order); returns them
+    /// indexed by client id together with total bytes received.
+    pub fn collect_masks(&mut self, round: u32) -> Result<(Vec<Vec<bool>>, u64)> {
+        let mut masks: Vec<Option<Vec<bool>>> = (0..self.streams.len()).map(|_| None).collect();
+        let mut bytes = 0u64;
+        for s in &mut self.streams {
+            let frame = read_frame(s)?;
+            bytes += frame.len() as u64;
+            match decode_client(&frame)? {
+                ClientMsg::Mask { round: r, client, mask, .. } => {
+                    anyhow::ensure!(r == round, "mask for round {r}, expected {round}");
+                    let idx = client as usize;
+                    anyhow::ensure!(masks[idx].is_none(), "duplicate mask from client {idx}");
+                    masks[idx] = Some(mask);
+                }
+                other => anyhow::bail!("expected Mask, got {other:?}"),
+            }
+        }
+        self.recv_bytes += bytes;
+        Ok((masks.into_iter().map(|m| m.unwrap()).collect(), bytes))
+    }
+
+    pub fn shutdown(&mut self) -> Result<()> {
+        self.broadcast(&ServerMsg::Shutdown)?;
+        Ok(())
+    }
+}
+
+/// Worker-side connection: `Hello` handshake then a recv/send loop.
+pub struct Worker {
+    stream: TcpStream,
+    pub client_id: u32,
+    codec: MaskCodec,
+}
+
+impl Worker {
+    pub fn connect(addr: &str, client_id: u32, codec: MaskCodec) -> Result<Worker> {
+        let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        stream.set_nodelay(true).ok();
+        write_frame(&mut stream, &encode_client(&ClientMsg::Hello { client: client_id }, codec))?;
+        Ok(Worker { stream, client_id, codec })
+    }
+
+    /// Block for the next server message.
+    pub fn recv(&mut self) -> Result<ServerMsg> {
+        let frame = read_frame(&mut self.stream)?;
+        decode_server(&frame)
+    }
+
+    /// Uplink this round's mask.
+    pub fn send_mask(&mut self, round: u32, mask: Vec<bool>) -> Result<()> {
+        let n = mask.len();
+        let frame = encode_client(
+            &ClientMsg::Mask { round, client: self.client_id, n, mask },
+            self.codec,
+        );
+        write_frame(&mut self.stream, &frame)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Full wire round-trip: leader thread + two worker threads over
+    /// loopback, one protocol round.
+    #[test]
+    fn tcp_round_trip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        drop(listener); // free the port for Leader::accept (tiny race, retried below)
+
+        let addr2 = addr.clone();
+        let leader = std::thread::spawn(move || -> Result<Vec<Vec<bool>>> {
+            let mut leader = Leader::accept(&addr2, 2)?;
+            leader.broadcast(&ServerMsg::Round { round: 0, probs: vec![0.5, 1.0, 0.0] })?;
+            let (masks, bytes) = leader.collect_masks(0)?;
+            assert!(bytes > 0);
+            leader.shutdown()?;
+            Ok(masks)
+        });
+
+        // Give the leader a moment to bind.
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let mut workers = Vec::new();
+        for id in 0..2u32 {
+            let addr = addr.clone();
+            workers.push(std::thread::spawn(move || -> Result<()> {
+                let mut w = Worker::connect(&addr, id, MaskCodec::Raw)?;
+                loop {
+                    match w.recv()? {
+                        ServerMsg::Round { round, probs } => {
+                            // Deterministic mask from the received probs.
+                            let mask: Vec<bool> = probs.iter().map(|&p| p > 0.25).collect();
+                            w.send_mask(round, mask)?;
+                        }
+                        ServerMsg::Shutdown => return Ok(()),
+                    }
+                }
+            }));
+        }
+
+        let masks = leader.join().unwrap().expect("leader");
+        for w in workers {
+            w.join().unwrap().expect("worker");
+        }
+        assert_eq!(masks, vec![vec![true, true, false]; 2]);
+    }
+}

@@ -1,0 +1,43 @@
+//! # zampling
+//!
+//! Reproduction of *"Trading-off Accuracy and Communication Cost in
+//! Federated Learning"* (Villani, Natale, Mallmann-Trenn, 2025): the
+//! **Zampling** (Zonotope Sampling) training-by-sampling framework and its
+//! federated protocol, plus every substrate and baseline the paper's
+//! evaluation needs.
+//!
+//! The system is a three-layer Rust + JAX + Pallas stack (see DESIGN.md):
+//! Python authors and AOT-lowers the dense compute to HLO text at build
+//! time (`make artifacts`); this crate is the runtime — it owns the sparse
+//! influence matrix `Q`, the probability/score vectors, the federated
+//! protocol and its wire encodings, and executes the HLO artifacts through
+//! the PJRT CPU client (`runtime`).
+//!
+//! Quick map (one module per DESIGN.md §2 row):
+//!
+//! * [`rng`] — deterministic PRNGs + the shared-seed derivation tree.
+//! * [`sparse`] — `Q` generation (Eq. 1), `w = Qz`, `g_s = Qᵀ g_w`.
+//! * [`nn`] — architecture specs, flat weight layout, pure-Rust MLP oracle.
+//! * [`data`] — MNIST IDX loader / synthetic fallback, IID partitioner.
+//! * [`zampling`] — Local Zampling, ContinuousModel, score optimizers.
+//! * [`federated`] — server, clients, round protocol, transports.
+//! * [`comm`] — wire codecs (bit-pack, RLE, arithmetic) + cost ledger.
+//! * [`runtime`] — PJRT executable loading and typed step wrappers.
+//! * [`baselines`] — FedAvg, FedPM (Isik et al.), Zhou supermask.
+//! * [`zonotope`] — theory validators for §2 (Lemmas 2.1–2.3, Props 2.4–2.6).
+//! * [`metrics`], [`experiments`], [`config`] — measurement + drivers.
+
+pub mod baselines;
+pub mod comm;
+pub mod config;
+pub mod data;
+pub mod experiments;
+pub mod federated;
+pub mod metrics;
+pub mod nn;
+pub mod rng;
+pub mod runtime;
+pub mod sparse;
+pub mod util;
+pub mod zampling;
+pub mod zonotope;

@@ -1,0 +1,450 @@
+//! `repro` — the Zampling CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!   train-local      — Local Zampling per a TOML config
+//!   train-federated  — Federated Zampling (in-process sim, or TCP leader)
+//!   serve-client     — TCP worker process (connects to a leader)
+//!   experiment       — regenerate a paper table/figure (fig3|fig4|table1|
+//!                      table4|fig5|fig6|theory)
+//!   comm-report      — Table 1 savings ledger for a config
+//!   info             — artifact manifest + platform probe
+//!
+//! Backend selection: `--backend pjrt` runs the dense steps through the
+//! AOT HLO artifacts on the PJRT CPU client; `--backend native` uses the
+//! pure-Rust oracle (the two are integration-tested to agree).
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use zampling::config::{Backend, FedConfig, TrainConfig};
+use zampling::data::Dataset;
+use zampling::experiments::{self, Scale};
+use zampling::federated::protocol::MaskCodec;
+use zampling::federated::transport::{Leader, Worker};
+use zampling::federated::{pack_client_mask, run_federated, Server};
+use zampling::metrics::RunLog;
+use zampling::nn::ArchSpec;
+use zampling::rng::SeedTree;
+use zampling::runtime::PjrtRuntime;
+use zampling::util::cli::Args;
+use zampling::util::toml::TomlDoc;
+use zampling::zampling::{train_local, DenseExecutor, LocalZampling, NativeExecutor, ProbVector};
+
+fn main() -> ExitCode {
+    let args = Args::from_env();
+    let result = match args.subcommand.as_deref() {
+        Some("train-local") => cmd_train_local(&args),
+        Some("train-federated") => cmd_train_federated(&args),
+        Some("serve-client") => cmd_serve_client(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("comm-report") => cmd_comm_report(&args),
+        Some("info") => cmd_info(&args),
+        Some(other) => Err(format!("unknown subcommand '{other}'\n{USAGE}")),
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+const USAGE: &str = "usage: repro <subcommand> [options]
+  train-local       --config <toml> [--backend pjrt|native] [--eval-samples N]
+  train-federated   --config <toml> [--backend ...] [--transport local|tcp]
+                    [--listen host:port] [--eval-every N]
+  serve-client      --addr host:port --client-id K --config <toml>
+  experiment        --id fig3|fig4|table1|table4|fig5|fig6|theory
+                    [--scale ci|paper] [--out results/]
+  comm-report       --config <toml>
+  info              [--artifacts artifacts/]";
+
+fn load_train_config(args: &Args) -> Result<TrainConfig, String> {
+    let path = args.get("config").ok_or("missing --config <toml>")?.to_string();
+    let doc = TomlDoc::load(Path::new(&path))?;
+    let mut cfg = TrainConfig::from_toml(&doc)?;
+    if let Some(b) = args.get("backend") {
+        cfg.backend = Backend::parse(b)?;
+    }
+    Ok(cfg)
+}
+
+fn load_fed_config(args: &Args) -> Result<FedConfig, String> {
+    let path = args.get("config").ok_or("missing --config <toml>")?.to_string();
+    let doc = TomlDoc::load(Path::new(&path))?;
+    let mut cfg = FedConfig::from_toml(&doc)?;
+    if let Some(b) = args.get("backend") {
+        cfg.train.backend = Backend::parse(b)?;
+    }
+    Ok(cfg)
+}
+
+/// Pick the executor per config.
+fn make_executor(cfg: &TrainConfig) -> Result<Box<dyn DenseExecutor>, String> {
+    match cfg.backend {
+        Backend::Pjrt => {
+            let rt = PjrtRuntime::new(Path::new("artifacts"))
+                .map_err(|e| format!("pjrt runtime: {e:#}"))?;
+            let exec = rt
+                .dense_executor(&cfg.arch.name)
+                .map_err(|e| format!("pjrt executor: {e:#}"))?;
+            println!("[repro] backend: pjrt ({})", rt.platform());
+            Ok(Box::new(exec))
+        }
+        Backend::Native => {
+            println!("[repro] backend: native (pure-rust oracle)");
+            Ok(Box::new(NativeExecutor::new(cfg.arch.clone(), cfg.batch, 500)))
+        }
+    }
+}
+
+fn load_splits(cfg: &TrainConfig) -> (Dataset, Dataset) {
+    let seeds = SeedTree::new(cfg.seed);
+    if cfg.train_rows >= 60_000 {
+        (Dataset::mnist_or_synthetic(true, &seeds), Dataset::mnist_or_synthetic(false, &seeds))
+    } else {
+        Dataset::synthetic_pair(cfg.train_rows, cfg.test_rows, &seeds)
+    }
+}
+
+fn cmd_train_local(args: &Args) -> Result<(), String> {
+    let cfg = load_train_config(args)?;
+    let eval_samples = args.usize_or("eval-samples", 100);
+    let out_dir = args.str_or("out", "results");
+    args.reject_unknown()?;
+
+    let (train, test) = load_splits(&cfg);
+    println!(
+        "[repro] local zampling: arch={} m={} n={} (m/n={:.0}) d={} lr={}",
+        cfg.arch.name,
+        cfg.arch.num_params(),
+        cfg.n,
+        cfg.compression_factor(),
+        cfg.d,
+        cfg.lr
+    );
+    let mut exec = make_executor(&cfg)?;
+    let out = train_local(&cfg, exec.as_mut(), &train, &test, eval_samples);
+    for e in &out.epochs {
+        println!(
+            "epoch {:>3}  train_loss {:.4}  val_loss {:.4}  val_acc {:.4}",
+            e.epoch, e.train_loss, e.val_loss, e.val_acc
+        );
+    }
+    println!(
+        "final: mean_sampled {:.4} ± {:.4}  expected {:.4}  best {:.4}  discretized {:.4}",
+        out.report.mean_sampled_acc,
+        out.report.sampled_acc_std,
+        out.report.expected_acc,
+        out.report.best_sampled_acc,
+        out.report.discretized_acc
+    );
+    let mut log = RunLog::new("train_local");
+    for e in &out.epochs {
+        log.push(zampling::metrics::RoundRecord {
+            round: e.epoch,
+            mean_sampled_acc: e.val_acc,
+            sampled_acc_std: 0.0,
+            expected_acc: e.val_acc,
+            train_loss: e.train_loss,
+            uplink_bits: 0,
+            downlink_bits: 0,
+        });
+    }
+    log.save(Path::new(&out_dir)).map_err(|e| format!("saving results: {e}"))?;
+    Ok(())
+}
+
+fn cmd_train_federated(args: &Args) -> Result<(), String> {
+    let cfg = load_fed_config(args)?;
+    let transport = args.str_or("transport", "local");
+    let eval_every = args.usize_or("eval-every", 1);
+    let eval_samples = args.usize_or("eval-samples", 100);
+    let listen = args.str_or("listen", "127.0.0.1:7707");
+    let out_dir = args.str_or("out", "results");
+    args.reject_unknown()?;
+
+    let seeds = SeedTree::new(cfg.train.seed);
+    let (train, test) = load_splits(&cfg.train);
+    let shards = train.partition_iid(cfg.clients, &seeds);
+    println!(
+        "[repro] federated zampling: {} clients, {} rounds, n={} d={} ({})",
+        cfg.clients, cfg.rounds, cfg.train.n, cfg.train.d, transport
+    );
+
+    match transport.as_str() {
+        "local" => {
+            let mut exec = make_executor(&cfg.train)?;
+            let out = run_federated(&cfg, exec.as_mut(), &shards, &test, eval_samples, eval_every);
+            for r in &out.log.rounds {
+                println!(
+                    "round {:>3}  sampled {:.4} ± {:.4}  expected {:.4}  up {}b down {}b",
+                    r.round,
+                    r.mean_sampled_acc,
+                    r.sampled_acc_std,
+                    r.expected_acc,
+                    r.uplink_bits,
+                    r.downlink_bits
+                );
+            }
+            let rep = out.ledger.savings(cfg.train.arch.num_params());
+            println!(
+                "savings: client {:.1}x server {:.1}x (naive = 32m = {} bits/round/client)",
+                rep.client_savings, rep.server_savings, rep.naive_bits
+            );
+            out.log.save(Path::new(&out_dir)).map_err(|e| format!("saving: {e}"))?;
+        }
+        "tcp" => run_tcp_leader(&cfg, &listen, &test, eval_samples, eval_every)?,
+        other => return Err(format!("unknown transport '{other}' (local|tcp)")),
+    }
+    Ok(())
+}
+
+/// TCP leader: serve rounds to `serve-client` worker processes.
+fn run_tcp_leader(
+    cfg: &FedConfig,
+    listen: &str,
+    test: &Dataset,
+    eval_samples: usize,
+    eval_every: usize,
+) -> Result<(), String> {
+    use zampling::federated::protocol::ServerMsg;
+    use zampling::nn::one_hot_into;
+    use zampling::sparse::QMatrix;
+    use zampling::zampling::evaluate;
+
+    println!("[repro] leader listening on {listen}, waiting for {} workers", cfg.clients);
+    let mut leader = Leader::accept(listen, cfg.clients).map_err(|e| format!("{e:#}"))?;
+
+    let seeds = SeedTree::new(cfg.train.seed);
+    let q = QMatrix::generate(&cfg.train.arch, cfg.train.n, cfg.train.d, &seeds);
+    let mut init_rng = seeds.rng("p-init", 0);
+    let mut server =
+        Server::new(ProbVector::init_uniform(cfg.train.n, &mut init_rng).probs().to_vec());
+
+    let mut exec = make_executor(&cfg.train)?;
+    let out_dim = cfg.train.arch.output_dim();
+    let mut test_y1h = vec![0.0f32; test.len() * out_dim];
+    one_hot_into(&test.y, out_dim, &mut test_y1h);
+    let mut eval_rng = seeds.rng("eval-sampler", 0);
+
+    for round in 0..cfg.rounds {
+        leader
+            .broadcast(&ServerMsg::Round { round: round as u32, probs: server.probs.clone() })
+            .map_err(|e| format!("broadcast: {e:#}"))?;
+        let (masks, _) = leader.collect_masks(round as u32).map_err(|e| format!("{e:#}"))?;
+        for mask in &masks {
+            server.receive_mask(&pack_client_mask(mask));
+        }
+        server.aggregate();
+        if round % eval_every == 0 || round + 1 == cfg.rounds {
+            let pv = ProbVector::from_probs(server.probs.clone());
+            let rep = evaluate(
+                exec.as_mut(),
+                &q,
+                &pv,
+                &test.x,
+                &test_y1h,
+                test.len(),
+                eval_samples,
+                &mut eval_rng,
+            );
+            println!(
+                "round {:>3}  sampled {:.4} ± {:.4}  expected {:.4}",
+                round, rep.mean_sampled_acc, rep.sampled_acc_std, rep.expected_acc
+            );
+        }
+    }
+    leader.shutdown().map_err(|e| format!("{e:#}"))?;
+    println!(
+        "leader done: sent {} KiB, received {} KiB",
+        leader.sent_bytes / 1024,
+        leader.recv_bytes / 1024
+    );
+    Ok(())
+}
+
+/// TCP worker: local shard training driven by the leader.
+fn cmd_serve_client(args: &Args) -> Result<(), String> {
+    use std::sync::Arc;
+    use zampling::federated::protocol::ServerMsg;
+    use zampling::sparse::QMatrix;
+
+    let addr = args.get("addr").ok_or("missing --addr host:port")?.to_string();
+    let client_id = args.usize_or("client-id", usize::MAX);
+    if client_id == usize::MAX {
+        return Err("missing --client-id".into());
+    }
+    let cfg = load_fed_config(args)?;
+    args.reject_unknown()?;
+
+    // Every worker derives the identical data split from the shared seed.
+    let seeds = SeedTree::new(cfg.train.seed);
+    let (train, _test) = load_splits(&cfg.train);
+    if client_id >= cfg.clients {
+        return Err(format!("client-id {client_id} ≥ clients {}", cfg.clients));
+    }
+    let shard = train.partition_iid(cfg.clients, &seeds).swap_remove(client_id);
+    println!("[worker {client_id}] shard rows: {}", shard.len());
+
+    let q = Arc::new(QMatrix::generate(&cfg.train.arch, cfg.train.n, cfg.train.d, &seeds));
+    let csc = Arc::new(q.to_csc(None));
+    let sub = seeds.subtree("client", client_id as u64);
+    let mut state = LocalZampling::from_parts(
+        &cfg.train,
+        q,
+        csc,
+        ProbVector::from_probs(vec![0.5; cfg.train.n]),
+        &sub,
+    );
+    let mut exec = make_executor(&cfg.train)?;
+
+    let codec = if cfg.entropy_code_uplink { MaskCodec::Arithmetic } else { MaskCodec::Raw };
+    let mut worker =
+        Worker::connect(&addr, client_id as u32, codec).map_err(|e| format!("{e:#}"))?;
+    loop {
+        match worker.recv().map_err(|e| format!("{e:#}"))? {
+            ServerMsg::Round { round, probs } => {
+                state.pv.set_probs(&probs);
+                state.reset_optimizer(&cfg.train);
+                for _ in 0..cfg.local_epochs {
+                    state.run_epoch(exec.as_mut(), &shard, cfg.train.batch);
+                }
+                let mut mask_rng = sub.rng("uplink-mask", round as u64);
+                let mut mask = Vec::new();
+                state.pv.sample_mask(&mut mask_rng, &mut mask);
+                worker.send_mask(round, mask).map_err(|e| format!("{e:#}"))?;
+            }
+            ServerMsg::Shutdown => {
+                println!("[worker {client_id}] shutdown");
+                return Ok(());
+            }
+        }
+    }
+}
+
+fn cmd_experiment(args: &Args) -> Result<(), String> {
+    let id = args.str_or("id", "");
+    let scale = Scale::parse(&args.str_or("scale", "ci"))?;
+    let _out = args.str_or("out", "results");
+    args.reject_unknown()?;
+    match id.as_str() {
+        "fig3" | "table2" => {
+            let cells = experiments::compression_sweep::run(scale);
+            experiments::compression_sweep::print_table(&cells);
+        }
+        "fig4" | "table1" => {
+            let mut rows = vec![experiments::federated::run_fedavg_row(scale, 5)];
+            rows.push(experiments::federated::run_fedpm_row(scale, 5));
+            for factor in [8usize, 32] {
+                rows.push(experiments::federated::run_zampling_row(factor, scale, 5));
+            }
+            experiments::federated::print_table1(&rows);
+        }
+        "table4" => {
+            let rows = experiments::sensitivity::run(scale, 0);
+            experiments::sensitivity::print_table(&rows);
+        }
+        "fig5" => {
+            let points = experiments::integrality_gap::run(scale);
+            experiments::integrality_gap::print_figure(&points);
+        }
+        "fig6" => {
+            let bars = experiments::zhou_comparison::run(scale);
+            experiments::zhou_comparison::print_figure(&bars);
+        }
+        "theory" => print_theory_report(),
+        other => return Err(format!("unknown experiment '{other}'")),
+    }
+    Ok(())
+}
+
+fn print_theory_report() {
+    use zampling::util::bench::{row, table};
+    use zampling::zonotope as z;
+    table("Theory validators (§2)", &["claim", "measured", "predicted"]);
+    let q = z::square_q(8192, 3, 64, 1);
+    row(&[
+        "L2.3 empty cols (d=3)".to_string(),
+        format!("{:.4}", q.empty_columns() as f64 / q.n as f64),
+        format!("{:.4}", (-3.0f64).exp()),
+    ]);
+    let q2 = z::square_q(4096, 2, 64, 2);
+    row(&[
+        "L2.2 E#nnz(w) (d=2)".to_string(),
+        format!("{:.0}", z::measure_nonzero_weights(&q2, 8, 3)),
+        format!("{:.0}", z::expected_nonzero_weights(q2.m, 2)),
+    ]);
+    let q3 = z::square_q(4096, 16, 256, 4);
+    row(&[
+        "L2.1 Var(w) (fan 256)".to_string(),
+        format!("{:.5}", z::measure_w_variance(&q3, 0..q3.m, 6, 5)),
+        format!("{:.5}", 2.0 / 256.0),
+    ]);
+    let q4 = z::square_q(4096, 8, 128, 6);
+    let (lo, hi) = z::predicted_max_row_activation(8, 128);
+    row(&[
+        "P2.4 max|Q_i p| (d=8)".to_string(),
+        format!("{:.4}", z::mean_max_row_activation(&q4)),
+        format!("[{lo:.4}, {hi:.4}]"),
+    ]);
+    let mc = z::mc_zonotope_volume(3, 3, 8.0, 20_000, 7);
+    let closed = z::expected_zonotope_volume(3, 3, 8.0);
+    row(&["P2.5 E|det| (n=3)".to_string(), format!("{mc:.5}"), format!("{closed:.5}")]);
+}
+
+fn cmd_comm_report(args: &Args) -> Result<(), String> {
+    let cfg = load_fed_config(args)?;
+    args.reject_unknown()?;
+    let m = cfg.train.arch.num_params();
+    let n = cfg.train.n;
+    use zampling::util::bench::{row, table};
+    table(
+        &format!("comm-report: m={m} n={n} (m/n={}) clients={}", m / n, cfg.clients),
+        &["direction", "payload", "bits/round/client", "savings vs naive"],
+    );
+    let naive = 32.0 * m as f64;
+    row(&[
+        "downlink".into(),
+        "p as f32".into(),
+        format!("{}", 32 * n),
+        format!("{:.1}x", naive / (32.0 * n as f64)),
+    ]);
+    row(&[
+        "uplink".into(),
+        "mask bits".into(),
+        format!("{n}"),
+        format!("{:.1}x", naive / n as f64),
+    ]);
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<(), String> {
+    let dir = args.str_or("artifacts", "artifacts");
+    args.reject_unknown()?;
+    match PjrtRuntime::new(Path::new(&dir)) {
+        Ok(rt) => {
+            println!("platform: {}", rt.platform());
+            println!(
+                "train_batch: {}  eval_batch: {}",
+                rt.manifest.train_batch, rt.manifest.eval_batch
+            );
+            for (name, a) in &rt.manifest.archs {
+                println!("arch {name}: m={} layers={:?}", a.num_params, a.layers);
+            }
+            for f in &rt.manifest.fused {
+                println!("fused {}: n={} d={} c={} ({}x)", f.arch, f.n, f.d, f.c, f.compression);
+            }
+        }
+        Err(e) => println!("no artifacts loaded ({e:#}); native backend still available"),
+    }
+    for arch in [ArchSpec::small(), ArchSpec::mnistfc()] {
+        println!("ArchSpec {}: m={}", arch.name, arch.num_params());
+    }
+    Ok(())
+}

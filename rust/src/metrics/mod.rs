@@ -1,0 +1,205 @@
+//! Measurement: accuracy estimators, per-round records, and file sinks.
+//!
+//! The paper's headline metric is **mean sampled accuracy**: after
+//! training, sample `S` masks `z ~ Bern(p*)`, evaluate each sampled
+//! network, report mean ± std (§3.1 uses S = 100).  `expected accuracy`
+//! evaluates the single network `w = Q p*`; `best mask` (Fig. 6) is the
+//! max over the samples.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::util::json::{self, Json};
+
+/// Simple running scalar statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn push(&mut self, x: f64) {
+        if self.n == 0 {
+            self.min = x;
+            self.max = x;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+    }
+
+    pub fn from_iter<I: IntoIterator<Item = f64>>(it: I) -> Summary {
+        let mut s = Summary::default();
+        for x in it {
+            s.push(x);
+        }
+        s
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample standard deviation.
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+}
+
+/// One federated round's record (Fig. 4 series).
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: usize,
+    pub mean_sampled_acc: f64,
+    pub sampled_acc_std: f64,
+    pub expected_acc: f64,
+    pub train_loss: f64,
+    pub uplink_bits: u64,
+    pub downlink_bits: u64,
+}
+
+/// Accumulates round records and writes CSV/JSON artifacts under
+/// `results/`.
+#[derive(Clone, Debug, Default)]
+pub struct RunLog {
+    pub name: String,
+    pub rounds: Vec<RoundRecord>,
+}
+
+impl RunLog {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), rounds: Vec::new() }
+    }
+
+    pub fn push(&mut self, r: RoundRecord) {
+        self.rounds.push(r);
+    }
+
+    pub fn last_acc(&self) -> Option<f64> {
+        self.rounds.last().map(|r| r.mean_sampled_acc)
+    }
+
+    /// Best (max) mean-sampled accuracy over the run.
+    pub fn best_acc(&self) -> Option<f64> {
+        self.rounds.iter().map(|r| r.mean_sampled_acc).fold(None, |acc, x| {
+            Some(acc.map_or(x, |a: f64| a.max(x)))
+        })
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "round,mean_sampled_acc,sampled_acc_std,expected_acc,train_loss,uplink_bits,downlink_bits\n",
+        );
+        for r in &self.rounds {
+            out.push_str(&format!(
+                "{},{:.6},{:.6},{:.6},{:.6},{},{}\n",
+                r.round,
+                r.mean_sampled_acc,
+                r.sampled_acc_std,
+                r.expected_acc,
+                r.train_loss,
+                r.uplink_bits,
+                r.downlink_bits
+            ));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("name", json::s(&self.name)),
+            (
+                "rounds",
+                json::arr(self.rounds.iter().map(|r| {
+                    json::obj(vec![
+                        ("round", json::num(r.round as f64)),
+                        ("mean_sampled_acc", json::num(r.mean_sampled_acc)),
+                        ("sampled_acc_std", json::num(r.sampled_acc_std)),
+                        ("expected_acc", json::num(r.expected_acc)),
+                        ("train_loss", json::num(r.train_loss)),
+                        ("uplink_bits", json::num(r.uplink_bits as f64)),
+                        ("downlink_bits", json::num(r.downlink_bits as f64)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// Write `results/<name>.csv` and `.json`; creates the directory.
+    pub fn save(&self, dir: &Path) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut f = std::fs::File::create(dir.join(format!("{}.csv", self.name)))?;
+        f.write_all(self.to_csv().as_bytes())?;
+        let mut f = std::fs::File::create(dir.join(format!("{}.json", self.name)))?;
+        f.write_all(self.to_json().to_string().as_bytes())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_mean_std() {
+        let s = Summary::from_iter([2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.std() - 2.138).abs() < 1e-3);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 9.0);
+    }
+
+    #[test]
+    fn summary_degenerate() {
+        let mut s = Summary::default();
+        assert_eq!(s.std(), 0.0);
+        s.push(3.0);
+        assert_eq!(s.mean(), 3.0);
+        assert_eq!(s.std(), 0.0);
+    }
+
+    #[test]
+    fn runlog_csv_and_best() {
+        let mut log = RunLog::new("t");
+        for (i, acc) in [(0usize, 0.5f64), (1, 0.9), (2, 0.8)] {
+            log.push(RoundRecord {
+                round: i,
+                mean_sampled_acc: acc,
+                sampled_acc_std: 0.01,
+                expected_acc: acc,
+                train_loss: 1.0 - acc,
+                uplink_bits: 10,
+                downlink_bits: 20,
+            });
+        }
+        assert_eq!(log.best_acc(), Some(0.9));
+        assert_eq!(log.last_acc(), Some(0.8));
+        let csv = log.to_csv();
+        assert_eq!(csv.lines().count(), 4);
+        assert!(csv.lines().nth(2).unwrap().starts_with("1,0.9"));
+        let j = log.to_json();
+        assert_eq!(j.get("rounds").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn save_writes_files() {
+        let dir = std::env::temp_dir().join(format!("zampling-metrics-{}", std::process::id()));
+        let log = RunLog::new("x");
+        log.save(&dir).unwrap();
+        assert!(dir.join("x.csv").exists());
+        assert!(dir.join("x.json").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,360 @@
+//! Pure-Rust reference MLP: forward, softmax-CE loss, and full backward.
+//!
+//! Mirrors `python/compile/model.py` exactly (same flat layout, same
+//! padding-aware weighted loss) so it can serve as (a) the oracle that the
+//! PJRT-loaded artifacts are integration-tested against, and (b) an
+//! XLA-free execution path (`Backend::Native`) for environments without
+//! the PJRT shared library.
+
+use super::ArchSpec;
+
+/// Scratch-buffer MLP evaluator over a flat weight vector.
+pub struct MlpRef {
+    arch: ArchSpec,
+    /// Per-layer activations (pre-allocated; `acts[0]` is the input copy).
+    acts: Vec<Vec<f32>>,
+    /// Per-layer pre-activation gradients (backward scratch).
+    deltas: Vec<Vec<f32>>,
+    batch_cap: usize,
+}
+
+/// Output of one train/eval step (matches the artifact tuple).
+#[derive(Clone, Debug)]
+pub struct StepOut {
+    pub loss: f32,
+    pub correct: f32,
+}
+
+impl MlpRef {
+    pub fn new(arch: ArchSpec, batch_cap: usize) -> Self {
+        let mut acts = Vec::with_capacity(arch.layers.len());
+        let mut deltas = Vec::with_capacity(arch.layers.len());
+        for &width in &arch.layers {
+            acts.push(vec![0.0; batch_cap * width]);
+            deltas.push(vec![0.0; batch_cap * width]);
+        }
+        Self { arch, acts, deltas, batch_cap }
+    }
+
+    pub fn arch(&self) -> &ArchSpec {
+        &self.arch
+    }
+
+    /// Forward pass: fills internal activations, returns logits slice len.
+    /// `x` is `[b, in_dim]` row-major, `b ≤ batch_cap`.
+    fn forward_internal(&mut self, w: &[f32], x: &[f32], b: usize) {
+        let in_dim = self.arch.input_dim();
+        debug_assert_eq!(x.len(), b * in_dim);
+        debug_assert!(b <= self.batch_cap);
+        self.acts[0][..b * in_dim].copy_from_slice(x);
+
+        let slices: Vec<_> = self.arch.slices().collect();
+        for (l, s) in slices.iter().enumerate() {
+            let is_last = l + 1 == slices.len();
+            // acts[l+1] = act(acts[l] @ W + b)
+            let (prev, rest) = self.acts.split_at_mut(l + 1);
+            let a_in = &prev[l][..b * s.fan_in];
+            let a_out = &mut rest[0][..b * s.fan_out];
+            let wmat = &w[s.offset..s.offset + s.w_len];
+            let bias = &w[s.offset + s.w_len..s.offset + s.w_len + s.b_len];
+            for r in 0..b {
+                let row_in = &a_in[r * s.fan_in..(r + 1) * s.fan_in];
+                let row_out = &mut a_out[r * s.fan_out..(r + 1) * s.fan_out];
+                row_out.copy_from_slice(bias);
+                for (i, &xi) in row_in.iter().enumerate() {
+                    if xi == 0.0 {
+                        continue; // ReLU sparsity: skip dead inputs
+                    }
+                    let wrow = &wmat[i * s.fan_out..(i + 1) * s.fan_out];
+                    for (o, &wv) in wrow.iter().enumerate() {
+                        row_out[o] += xi * wv;
+                    }
+                }
+                if !is_last {
+                    for v in row_out.iter_mut() {
+                        if *v < 0.0 {
+                            *v = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Logits for a batch (copies out of the scratch buffer).
+    pub fn forward(&mut self, w: &[f32], x: &[f32], b: usize) -> Vec<f32> {
+        self.forward_internal(w, x, b);
+        let out_dim = self.arch.output_dim();
+        self.acts.last().unwrap()[..b * out_dim].to_vec()
+    }
+
+    /// Eval step: padding-aware weighted CE loss + correct count.
+    /// Rows whose one-hot sums to zero are padding.
+    pub fn eval_step(&mut self, w: &[f32], x: &[f32], y1h: &[f32], b: usize) -> StepOut {
+        self.forward_internal(w, x, b);
+        let out_dim = self.arch.output_dim();
+        let logits = &self.acts.last().unwrap()[..b * out_dim];
+        let (mut loss_sum, mut denom, mut correct) = (0.0f64, 0.0f64, 0.0f64);
+        for r in 0..b {
+            let lr = &logits[r * out_dim..(r + 1) * out_dim];
+            let yr = &y1h[r * out_dim..(r + 1) * out_dim];
+            let roww: f32 = yr.iter().sum();
+            if roww == 0.0 {
+                continue;
+            }
+            denom += roww as f64;
+            let max = lr.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let lse = max + lr.iter().map(|&v| ((v - max) as f64).exp()).sum::<f64>().ln() as f32;
+            let (mut amax_l, mut amax_y) = (0usize, 0usize);
+            for o in 0..out_dim {
+                if lr[o] > lr[amax_l] {
+                    amax_l = o;
+                }
+                if yr[o] > yr[amax_y] {
+                    amax_y = o;
+                }
+                loss_sum += (yr[o] * (lse - lr[o])) as f64;
+            }
+            if amax_l == amax_y {
+                correct += roww as f64;
+            }
+        }
+        StepOut { loss: (loss_sum / denom.max(1.0)) as f32, correct: correct as f32 }
+    }
+
+    /// Train step: loss, `grad_w` (accumulated into `grad`, which is
+    /// zeroed first), correct count.  Matches
+    /// `jax.value_and_grad(loss_and_correct)` numerics.
+    pub fn train_step(
+        &mut self,
+        w: &[f32],
+        x: &[f32],
+        y1h: &[f32],
+        b: usize,
+        grad: &mut [f32],
+    ) -> StepOut {
+        assert_eq!(grad.len(), w.len());
+        self.forward_internal(w, x, b);
+        grad.fill(0.0);
+        let out_dim = self.arch.output_dim();
+        let slices: Vec<_> = self.arch.slices().collect();
+        let last = slices.len() - 1;
+
+        // Softmax-CE gradient at the head: delta = (softmax - y) * roww/denom.
+        let mut denom = 0.0f32;
+        for r in 0..b {
+            let roww: f32 = y1h[r * out_dim..(r + 1) * out_dim].iter().sum();
+            denom += roww;
+        }
+        let denom = denom.max(1.0);
+
+        let (mut loss_sum, mut correct) = (0.0f64, 0.0f64);
+        {
+            let logits = &self.acts[last + 1][..b * out_dim];
+            let dl = &mut self.deltas[last + 1][..b * out_dim];
+            for r in 0..b {
+                let lr = &logits[r * out_dim..(r + 1) * out_dim];
+                let yr = &y1h[r * out_dim..(r + 1) * out_dim];
+                let roww: f32 = yr.iter().sum();
+                let drow = &mut dl[r * out_dim..(r + 1) * out_dim];
+                if roww == 0.0 {
+                    drow.fill(0.0);
+                    continue;
+                }
+                let max = lr.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let sum_exp: f64 = lr.iter().map(|&v| ((v - max) as f64).exp()).sum();
+                let lse = max as f64 + sum_exp.ln();
+                let (mut amax_l, mut amax_y) = (0usize, 0usize);
+                for o in 0..out_dim {
+                    let p = (((lr[o] as f64) - lse).exp()) as f32;
+                    drow[o] = (p * roww - yr[o]) / denom;
+                    if lr[o] > lr[amax_l] {
+                        amax_l = o;
+                    }
+                    if yr[o] > yr[amax_y] {
+                        amax_y = o;
+                    }
+                    loss_sum += (yr[o] as f64) * (lse - lr[o] as f64);
+                }
+                if amax_l == amax_y {
+                    correct += roww as f64;
+                }
+            }
+        }
+
+        // Backward through the layers.
+        for (l, s) in slices.iter().enumerate().rev() {
+            let b_in = &self.acts[l];
+            let (dcur, dprev_all) = {
+                let (lo, hi) = self.deltas.split_at_mut(l + 1);
+                (&mut hi[0], lo)
+            };
+            let dcur = &dcur[..b * s.fan_out];
+            // grad_W[i,o] += a_in[r,i] * delta[r,o]; grad_b[o] += delta[r,o]
+            let gw = &mut grad[s.offset..s.offset + s.w_len];
+            for r in 0..b {
+                let arow = &b_in[r * s.fan_in..(r + 1) * s.fan_in];
+                let drow = &dcur[r * s.fan_out..(r + 1) * s.fan_out];
+                for (i, &ai) in arow.iter().enumerate() {
+                    if ai == 0.0 {
+                        continue;
+                    }
+                    let gr = &mut gw[i * s.fan_out..(i + 1) * s.fan_out];
+                    for (o, &dv) in drow.iter().enumerate() {
+                        gr[o] += ai * dv;
+                    }
+                }
+            }
+            let gb = &mut grad[s.offset + s.w_len..s.offset + s.w_len + s.b_len];
+            for r in 0..b {
+                let drow = &dcur[r * s.fan_out..(r + 1) * s.fan_out];
+                for (o, &dv) in drow.iter().enumerate() {
+                    gb[o] += dv;
+                }
+            }
+            // delta_prev = (delta @ Wᵀ) ⊙ relu'(a_in)   (skip for input layer)
+            if l > 0 {
+                let wmat = &w[s.offset..s.offset + s.w_len];
+                let dprev = &mut dprev_all[l][..b * s.fan_in];
+                for r in 0..b {
+                    let drow = &dcur[r * s.fan_out..(r + 1) * s.fan_out];
+                    let prow = &mut dprev[r * s.fan_in..(r + 1) * s.fan_in];
+                    let arow = &b_in[r * s.fan_in..(r + 1) * s.fan_in];
+                    for i in 0..s.fan_in {
+                        if arow[i] <= 0.0 {
+                            prow[i] = 0.0; // ReLU gate (a_in == post-ReLU act)
+                            continue;
+                        }
+                        let wrow = &wmat[i * s.fan_out..(i + 1) * s.fan_out];
+                        let mut acc = 0.0f32;
+                        for (o, &dv) in drow.iter().enumerate() {
+                            acc += wrow[o] * dv;
+                        }
+                        prow[i] = acc;
+                    }
+                }
+            }
+        }
+
+        StepOut { loss: (loss_sum / denom as f64) as f32, correct: correct as f32 }
+    }
+}
+
+/// One-hot encode labels into a reusable `[b, classes]` buffer.
+pub fn one_hot_into(labels: &[u8], classes: usize, out: &mut [f32]) {
+    assert!(out.len() >= labels.len() * classes);
+    out[..labels.len() * classes].fill(0.0);
+    for (r, &y) in labels.iter().enumerate() {
+        out[r * classes + y as usize] = 1.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Normal, Rng, Xoshiro256pp};
+
+    fn random_weights(arch: &ArchSpec, seed: u64) -> Vec<f32> {
+        let mut r = Xoshiro256pp::seed_from(seed);
+        let mut nrm = Normal::new();
+        let mut w = vec![0.0f32; arch.num_params()];
+        for s in arch.slices() {
+            let std = (2.0 / s.fan_in as f64).sqrt();
+            for i in 0..s.w_len {
+                w[s.offset + i] = (nrm.sample(&mut r) * std) as f32;
+            }
+        }
+        w
+    }
+
+    fn random_batch(arch: &ArchSpec, b: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut r = Xoshiro256pp::seed_from(seed);
+        let x: Vec<f32> = (0..b * arch.input_dim()).map(|_| r.next_f32()).collect();
+        let labels: Vec<u8> = (0..b).map(|_| r.next_below(10) as u8).collect();
+        let mut y = vec![0.0f32; b * 10];
+        one_hot_into(&labels, 10, &mut y);
+        (x, y)
+    }
+
+    #[test]
+    fn forward_shape_and_determinism() {
+        let arch = ArchSpec::small();
+        let w = random_weights(&arch, 0);
+        let (x, _) = random_batch(&arch, 4, 1);
+        let mut mlp = MlpRef::new(arch.clone(), 8);
+        let a = mlp.forward(&w, &x, 4);
+        let b = mlp.forward(&w, &x, 4);
+        assert_eq!(a.len(), 4 * 10);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn loss_decreases_under_gradient_step() {
+        let arch = ArchSpec::small();
+        let mut w = random_weights(&arch, 2);
+        let (x, y) = random_batch(&arch, 16, 3);
+        let mut mlp = MlpRef::new(arch.clone(), 16);
+        let mut g = vec![0.0f32; w.len()];
+        let before = mlp.train_step(&w, &x, &y, 16, &mut g).loss;
+        for (wi, gi) in w.iter_mut().zip(&g) {
+            *wi -= 0.05 * gi;
+        }
+        let after = mlp.eval_step(&w, &x, &y, 16).loss;
+        assert!(after < before, "before={before} after={after}");
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let arch = ArchSpec::new("tiny", &[6, 5, 3]);
+        let mut r = Xoshiro256pp::seed_from(4);
+        let mut nrm = Normal::new();
+        let mut w: Vec<f32> =
+            (0..arch.num_params()).map(|_| (nrm.sample(&mut r) * 0.5) as f32).collect();
+        let x: Vec<f32> = (0..4 * 6).map(|_| r.next_f32() - 0.5).collect();
+        let labels = [0u8, 1, 2, 1];
+        let mut y = vec![0.0f32; 4 * 3];
+        one_hot_into(&labels, 3, &mut y);
+        let mut mlp = MlpRef::new(arch.clone(), 4);
+        let mut g = vec![0.0f32; w.len()];
+        mlp.train_step(&w, &x, &y, 4, &mut g);
+        let eps = 1e-3f32;
+        for idx in [0usize, 7, 13, arch.num_params() - 1] {
+            let orig = w[idx];
+            w[idx] = orig + eps;
+            let lp = mlp.eval_step(&w, &x, &y, 4).loss;
+            w[idx] = orig - eps;
+            let lm = mlp.eval_step(&w, &x, &y, 4).loss;
+            w[idx] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - g[idx]).abs() < 2e-2 * (1.0 + fd.abs()),
+                "idx={idx} fd={fd} analytic={}",
+                g[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn padding_rows_change_nothing() {
+        let arch = ArchSpec::small();
+        let w = random_weights(&arch, 5);
+        let (x, y) = random_batch(&arch, 8, 6);
+        let mut mlp = MlpRef::new(arch.clone(), 16);
+        let a = mlp.eval_step(&w, &x, &y, 8);
+        // pad to 16 rows with zero x / zero one-hot
+        let mut xp = x.clone();
+        xp.resize(16 * arch.input_dim(), 0.0);
+        let mut yp = y.clone();
+        yp.resize(16 * 10, 0.0);
+        let b = mlp.eval_step(&w, &xp, &yp, 16);
+        assert!((a.loss - b.loss).abs() < 1e-6);
+        assert_eq!(a.correct, b.correct);
+    }
+
+    #[test]
+    fn one_hot_basics() {
+        let mut out = vec![9.0f32; 6];
+        one_hot_into(&[2, 0], 3, &mut out);
+        assert_eq!(out, vec![0.0, 0.0, 1.0, 1.0, 0.0, 0.0]);
+    }
+}

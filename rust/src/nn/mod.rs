@@ -1,0 +1,161 @@
+//! Neural-network architecture description + a pure-Rust reference MLP.
+//!
+//! The flat weight layout (per-layer `W[fan_in × fan_out]` row-major, then
+//! `b[fan_out]`) is the contract shared with the L2 JAX model
+//! (`python/compile/model.py::Arch.slices`) and with the AOT artifacts —
+//! index `i` of the flat vector means the same weight on both sides, so
+//! the per-weight fan-in `n_ℓ` used by the σ_i of Eq. (1) lines up.
+//!
+//! The pure-Rust forward/backward ([`MlpRef`]) is an XLA-free fallback and
+//! the oracle the runtime integration tests compare PJRT results against.
+
+pub mod mlp;
+
+pub use mlp::{one_hot_into, MlpRef};
+
+/// Feedforward architecture: `layers = (in, h1, ..., out)`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArchSpec {
+    pub name: String,
+    pub layers: Vec<usize>,
+}
+
+/// One layer's slice of the flat parameter vector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerSlice {
+    /// Offset of `W` in the flat vector.
+    pub offset: usize,
+    pub fan_in: usize,
+    pub fan_out: usize,
+    /// `fan_in * fan_out`.
+    pub w_len: usize,
+    /// `fan_out`.
+    pub b_len: usize,
+}
+
+impl ArchSpec {
+    pub fn new(name: &str, layers: &[usize]) -> Self {
+        assert!(layers.len() >= 2, "need at least input and output layers");
+        Self { name: name.to_string(), layers: layers.to_vec() }
+    }
+
+    /// The paper's SMALL ARCHITECTURE: 784-20-20-10 (§3, two hidden layers
+    /// of twenty neurons).
+    pub fn small() -> Self {
+        Self::new("small", &[784, 20, 20, 10])
+    }
+
+    /// The paper's MNISTFC: 784-300-100-10 ("exactly as the one in Zhou"),
+    /// m = 266,610 (§3.2).
+    pub fn mnistfc() -> Self {
+        Self::new("mnistfc", &[784, 300, 100, 10])
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "small" => Some(Self::small()),
+            "mnistfc" => Some(Self::mnistfc()),
+            _ => None,
+        }
+    }
+
+    /// Total number of parameters `m`.
+    pub fn num_params(&self) -> usize {
+        self.slices().map(|s| s.w_len + s.b_len).sum()
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.layers[0]
+    }
+
+    pub fn output_dim(&self) -> usize {
+        *self.layers.last().unwrap()
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len() - 1
+    }
+
+    /// Iterate the per-layer slices of the flat vector.
+    pub fn slices(&self) -> impl Iterator<Item = LayerSlice> + '_ {
+        let mut offset = 0usize;
+        self.layers.windows(2).map(move |w| {
+            let (fan_in, fan_out) = (w[0], w[1]);
+            let s = LayerSlice { offset, fan_in, fan_out, w_len: fan_in * fan_out, b_len: fan_out };
+            offset += s.w_len + s.b_len;
+            s
+        })
+    }
+
+    /// Fan-in of the neuron that flat parameter `i` feeds — the `n_ℓ` in
+    /// the σ_i² = 6/(d·n_ℓ) of Eq. (1).  Biases take their layer's fan-in
+    /// (they target the same neuron as the layer's weights).
+    pub fn fan_in_of(&self, i: usize) -> usize {
+        for s in self.slices() {
+            if i < s.offset + s.w_len + s.b_len {
+                return s.fan_in;
+            }
+        }
+        panic!("parameter index {i} out of range ({})", self.num_params());
+    }
+
+    /// Materialize the per-parameter fan-in table (used hot by the Q
+    /// generator; O(m) once instead of O(layers) per lookup).
+    pub fn fan_in_table(&self) -> Vec<u32> {
+        let mut t = Vec::with_capacity(self.num_params());
+        for s in self.slices() {
+            t.extend(std::iter::repeat(s.fan_in as u32).take(s.w_len + s.b_len));
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_match_paper() {
+        assert_eq!(ArchSpec::mnistfc().num_params(), 266_610); // §3.2
+        assert_eq!(ArchSpec::small().num_params(), 16_330);
+    }
+
+    #[test]
+    fn slices_tile_the_flat_vector_exactly() {
+        for arch in [ArchSpec::small(), ArchSpec::mnistfc()] {
+            let mut expected_offset = 0;
+            for s in arch.slices() {
+                assert_eq!(s.offset, expected_offset);
+                expected_offset += s.w_len + s.b_len;
+            }
+            assert_eq!(expected_offset, arch.num_params());
+        }
+    }
+
+    #[test]
+    fn fan_in_table_matches_point_lookup() {
+        let arch = ArchSpec::small();
+        let table = arch.fan_in_table();
+        assert_eq!(table.len(), arch.num_params());
+        for i in [0usize, 783, 784 * 20, 784 * 20 + 19, 784 * 20 + 20, 16_329] {
+            assert_eq!(table[i] as usize, arch.fan_in_of(i), "i={i}");
+        }
+    }
+
+    #[test]
+    fn fan_in_boundaries() {
+        let arch = ArchSpec::small();
+        // First layer weights + biases: fan_in 784.
+        assert_eq!(arch.fan_in_of(0), 784);
+        assert_eq!(arch.fan_in_of(784 * 20 + 19), 784); // last bias of layer 0
+        // Second layer starts right after: fan_in 20.
+        assert_eq!(arch.fan_in_of(784 * 20 + 20), 20);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        assert_eq!(ArchSpec::by_name("small").unwrap(), ArchSpec::small());
+        assert_eq!(ArchSpec::by_name("mnistfc").unwrap(), ArchSpec::mnistfc());
+        assert!(ArchSpec::by_name("nope").is_none());
+    }
+}

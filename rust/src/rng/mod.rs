@@ -1,0 +1,303 @@
+//! Deterministic PRNG substrate (no external `rand`).
+//!
+//! The Zampling protocol (§1.3) requires that server and clients generate
+//! the *identical* influence matrix `Q` from a shared seed.  Relying on an
+//! external crate's stream stability across versions would be fragile, so
+//! the generators are implemented here from the published reference
+//! algorithms and locked down by unit tests on known-answer vectors:
+//!
+//! * [`SplitMix64`] — seed expansion / stream derivation (Steele et al.).
+//! * [`Xoshiro256pp`] — the workhorse generator (Blackman & Vigna).
+//! * [`SeedTree`] — hierarchical, order-independent stream derivation so
+//!   client `k`, round `t` always sees the same stream regardless of
+//!   scheduling (`derive(tag, index)`).
+//!
+//! Distributions: uniform `[0,1)` via 53-bit mantissa, Box–Muller normals
+//! (cached spare), Bernoulli, Fisher–Yates shuffle, and floyd-style
+//! d-distinct-index sampling used by the `Q` generator.
+
+mod xoshiro;
+
+pub use xoshiro::{SplitMix64, Xoshiro256pp};
+
+/// The trait the rest of the crate programs against.
+pub trait Rng {
+    /// Next raw 64 uniform bits.
+    fn next_u64(&mut self) -> u64;
+
+    /// Uniform `f64` in `[0, 1)` with 53 bits of mantissa.
+    #[inline]
+    fn next_f64(&mut self) -> f64 {
+        ((self.next_u64() >> 11) as f64) * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f32` in `[0, 1)`.
+    #[inline]
+    fn next_f32(&mut self) -> f32 {
+        ((self.next_u64() >> 40) as f32) * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in `[0, bound)` (Lemire-style rejection, unbiased).
+    #[inline]
+    fn next_below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        loop {
+            let x = self.next_u64();
+            let (hi, lo) = mul_u64(x, bound);
+            if lo >= bound || lo >= (bound.wrapping_neg() % bound) {
+                return hi;
+            }
+        }
+    }
+
+    /// Bernoulli draw with success probability `p` (clamped to [0,1]).
+    #[inline]
+    fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+}
+
+#[inline]
+fn mul_u64(a: u64, b: u64) -> (u64, u64) {
+    let wide = (a as u128) * (b as u128);
+    ((wide >> 64) as u64, wide as u64)
+}
+
+impl Rng for Xoshiro256pp {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        Xoshiro256pp::next(self)
+    }
+}
+
+impl Rng for SplitMix64 {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        SplitMix64::next(self)
+    }
+}
+
+/// Standard-normal sampler: Box–Muller with a cached spare.
+#[derive(Clone, Debug)]
+pub struct Normal {
+    spare: Option<f64>,
+}
+
+impl Normal {
+    pub fn new() -> Self {
+        Self { spare: None }
+    }
+
+    /// Draw one `N(0, 1)` sample.
+    pub fn sample<R: Rng>(&mut self, rng: &mut R) -> f64 {
+        if let Some(s) = self.spare.take() {
+            return s;
+        }
+        // Box–Muller on (0,1] × [0,1): guard u1 > 0 so ln is finite.
+        let mut u1 = rng.next_f64();
+        while u1 <= f64::MIN_POSITIVE {
+            u1 = rng.next_f64();
+        }
+        let u2 = rng.next_f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.spare = Some(r * theta.sin());
+        r * theta.cos()
+    }
+}
+
+impl Default for Normal {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Hierarchical seed derivation: `derive(tag, idx)` yields an independent
+/// stream for every `(tag, idx)` pair, regardless of call order.  Tags name
+/// protocol roles ("q-matrix", "client-mask", "data", ...); indices name
+/// the client / round / seed slot.
+#[derive(Clone, Copy, Debug)]
+pub struct SeedTree {
+    root: u64,
+}
+
+impl SeedTree {
+    pub fn new(root_seed: u64) -> Self {
+        Self { root: root_seed }
+    }
+
+    /// Derive the `u64` seed for `(tag, idx)` — a keyed SplitMix64 chain
+    /// over the FNV-1a hash of the tag.
+    pub fn seed_for(&self, tag: &str, idx: u64) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325; // FNV offset basis
+        for b in tag.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        let mut sm = SplitMix64::new(self.root ^ h);
+        let a = sm.next();
+        let mut sm2 = SplitMix64::new(a.wrapping_add(idx.wrapping_mul(0x9E37_79B9_7F4A_7C15)));
+        sm2.next()
+    }
+
+    /// Independent generator for `(tag, idx)`.
+    pub fn rng(&self, tag: &str, idx: u64) -> Xoshiro256pp {
+        Xoshiro256pp::seed_from(self.seed_for(tag, idx))
+    }
+
+    /// A sub-tree rooted at `(tag, idx)` (e.g. one per client).
+    pub fn subtree(&self, tag: &str, idx: u64) -> SeedTree {
+        SeedTree::new(self.seed_for(tag, idx))
+    }
+}
+
+/// Sample `d` *distinct* indices from `[0, n)` into `out`.
+///
+/// Uses Floyd's algorithm (d draws, no full permutation) with a linear
+/// membership probe — `d` is small (≤ 256 in every paper config) so the
+/// probe beats a hash set.  Output order is the insertion order of Floyd's
+/// algorithm (deterministic given the rng stream).
+pub fn sample_distinct<R: Rng>(rng: &mut R, n: usize, d: usize, out: &mut Vec<u32>) {
+    debug_assert!(d <= n);
+    out.clear();
+    for j in (n - d)..n {
+        let t = rng.next_below((j + 1) as u64) as u32;
+        if out.contains(&t) {
+            out.push(j as u32);
+        } else {
+            out.push(t);
+        }
+    }
+}
+
+/// In-place Fisher–Yates shuffle.
+pub fn shuffle<R: Rng, T>(rng: &mut R, xs: &mut [T]) {
+    for i in (1..xs.len()).rev() {
+        let j = rng.next_below((i + 1) as u64) as usize;
+        xs.swap(i, j);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_known_answer() {
+        // Reference vector from the published SplitMix64 C code, seed = 0.
+        let mut sm = SplitMix64::new(0);
+        assert_eq!(sm.next(), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(sm.next(), 0x6E78_9E6A_A1B9_65F4);
+        assert_eq!(sm.next(), 0x06C4_5D18_8009_454F);
+    }
+
+    #[test]
+    fn xoshiro_deterministic_and_distinct_streams() {
+        let a: Vec<u64> = {
+            let mut r = Xoshiro256pp::seed_from(42);
+            (0..8).map(|_| r.next()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = Xoshiro256pp::seed_from(42);
+            (0..8).map(|_| r.next()).collect()
+        };
+        let c: Vec<u64> = {
+            let mut r = Xoshiro256pp::seed_from(43);
+            (0..8).map(|_| r.next()).collect()
+        };
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn uniform_unit_interval_bounds_and_mean() {
+        let mut r = Xoshiro256pp::seed_from(7);
+        let mut sum = 0.0;
+        const N: usize = 100_000;
+        for _ in 0..N {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / N as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn next_below_is_in_range_and_roughly_uniform() {
+        let mut r = Xoshiro256pp::seed_from(3);
+        let mut counts = [0usize; 10];
+        for _ in 0..100_000 {
+            counts[r.next_below(10) as usize] += 1;
+        }
+        for c in counts {
+            assert!((8_000..12_000).contains(&c), "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Xoshiro256pp::seed_from(11);
+        let mut n = Normal::new();
+        const N: usize = 200_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..N {
+            let x = n.sample(&mut r);
+            s1 += x;
+            s2 += x * x;
+        }
+        let mean = s1 / N as f64;
+        let var = s2 / N as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn seed_tree_is_order_independent_and_tag_separated() {
+        let t = SeedTree::new(123);
+        let a1 = t.seed_for("q-matrix", 0);
+        let _ = t.seed_for("data", 5);
+        let a2 = t.seed_for("q-matrix", 0);
+        assert_eq!(a1, a2);
+        assert_ne!(t.seed_for("q-matrix", 0), t.seed_for("q-matrix", 1));
+        assert_ne!(t.seed_for("q-matrix", 0), t.seed_for("mask", 0));
+    }
+
+    #[test]
+    fn sample_distinct_properties() {
+        let mut r = Xoshiro256pp::seed_from(5);
+        let mut out = Vec::new();
+        for n in [1usize, 2, 10, 100] {
+            for d in [1usize, n.min(3), n] {
+                sample_distinct(&mut r, n, d, &mut out);
+                assert_eq!(out.len(), d);
+                let mut sorted = out.clone();
+                sorted.sort_unstable();
+                sorted.dedup();
+                assert_eq!(sorted.len(), d, "duplicates for n={n} d={d}");
+                assert!(sorted.iter().all(|&i| (i as usize) < n));
+            }
+        }
+    }
+
+    #[test]
+    fn sample_distinct_covers_all_when_d_equals_n() {
+        let mut r = Xoshiro256pp::seed_from(9);
+        let mut out = Vec::new();
+        sample_distinct(&mut r, 16, 16, &mut out);
+        let mut sorted = out.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..16).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut r = Xoshiro256pp::seed_from(1);
+        let mut xs: Vec<u32> = (0..100).collect();
+        shuffle(&mut r, &mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<u32>>());
+        assert_ne!(xs, (0..100).collect::<Vec<u32>>());
+    }
+}

@@ -1,0 +1,97 @@
+//! Reference implementations of SplitMix64 and xoshiro256++.
+//!
+//! Transcribed from the public-domain C sources by Sebastiano Vigna
+//! (https://prng.di.unimi.it/); known-answer tests live in `rng/mod.rs`.
+
+/// SplitMix64 — used for seed expansion only (equidistributed, fast, and
+/// the recommended seeder for the xoshiro family).
+#[derive(Clone, Copy, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256++ 1.0 — the crate's workhorse generator.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256pp {
+    s: [u64; 4],
+}
+
+impl Xoshiro256pp {
+    /// Seed via SplitMix64 expansion (never yields the all-zero state).
+    pub fn seed_from(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let s = [sm.next(), sm.next(), sm.next(), sm.next()];
+        Self { s }
+    }
+
+    #[inline]
+    pub fn next(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// The 2^128-step jump: partitions one stream into non-overlapping
+    /// sub-streams (used by tests that need independent long streams).
+    pub fn jump(&mut self) {
+        const JUMP: [u64; 4] = [
+            0x180E_C6D3_3CFD_0ABA,
+            0xD5A6_1266_F0C9_392C,
+            0xA958_2618_E03F_C9AA,
+            0x39AB_DC45_29B1_661C,
+        ];
+        let mut acc = [0u64; 4];
+        for j in JUMP {
+            for b in 0..64 {
+                if j & (1u64 << b) != 0 {
+                    acc[0] ^= self.s[0];
+                    acc[1] ^= self.s[1];
+                    acc[2] ^= self.s[2];
+                    acc[3] ^= self.s[3];
+                }
+                self.next();
+            }
+        }
+        self.s = acc;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jump_changes_state_deterministically() {
+        let mut a = Xoshiro256pp::seed_from(1);
+        let mut b = Xoshiro256pp::seed_from(1);
+        a.jump();
+        b.jump();
+        assert_eq!(a.next(), b.next());
+        let mut c = Xoshiro256pp::seed_from(1);
+        assert_ne!(a.next(), c.next());
+    }
+}

@@ -1,0 +1,150 @@
+//! Typed view of `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`) — the shape contract between the AOT compile
+//! path and the runtime.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Per-architecture dense artifacts.
+#[derive(Clone, Debug)]
+pub struct ArchArtifacts {
+    pub layers: Vec<usize>,
+    pub num_params: usize,
+    pub train_path: String,
+    pub eval_path: String,
+}
+
+/// One fused flagship artifact.
+#[derive(Clone, Debug)]
+pub struct FusedArtifact {
+    pub arch: String,
+    pub n: usize,
+    pub d: usize,
+    /// Padded CSC width the artifact was lowered with (must match
+    /// `sparse::csc_pad_width`).
+    pub c: usize,
+    pub compression: usize,
+    pub path: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub archs: BTreeMap<String, ArchArtifacts>,
+    pub fused: Vec<FusedArtifact>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+        Self::parse(&src)
+    }
+
+    pub fn parse(src: &str) -> Result<Manifest> {
+        let j = Json::parse(src).map_err(|e| anyhow!("manifest json: {e}"))?;
+        let need = |j: &Json, k: &str| -> Result<Json> {
+            j.get(k).cloned().ok_or_else(|| anyhow!("manifest missing '{k}'"))
+        };
+        let mut archs = BTreeMap::new();
+        for (name, a) in need(&j, "archs")?.as_obj().ok_or_else(|| anyhow!("archs not an object"))? {
+            let layers = need(a, "layers")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("layers not an array"))?
+                .iter()
+                .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad layer dim")))
+                .collect::<Result<Vec<_>>>()?;
+            archs.insert(
+                name.clone(),
+                ArchArtifacts {
+                    layers,
+                    num_params: need(a, "num_params")?
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("bad num_params"))?,
+                    train_path: need(&need(a, "train")?, "path")?
+                        .as_str()
+                        .ok_or_else(|| anyhow!("bad train path"))?
+                        .to_string(),
+                    eval_path: need(&need(a, "eval")?, "path")?
+                        .as_str()
+                        .ok_or_else(|| anyhow!("bad eval path"))?
+                        .to_string(),
+                },
+            );
+        }
+        let mut fused = Vec::new();
+        for f in need(&j, "fused")?.as_arr().unwrap_or(&[]) {
+            fused.push(FusedArtifact {
+                arch: need(f, "arch")?.as_str().unwrap_or_default().to_string(),
+                n: need(f, "n")?.as_usize().ok_or_else(|| anyhow!("bad fused n"))?,
+                d: need(f, "d")?.as_usize().ok_or_else(|| anyhow!("bad fused d"))?,
+                c: need(f, "c")?.as_usize().ok_or_else(|| anyhow!("bad fused c"))?,
+                compression: need(f, "compression")?.as_usize().unwrap_or(0),
+                path: need(f, "path")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("bad fused path"))?
+                    .to_string(),
+            });
+        }
+        Ok(Manifest {
+            train_batch: need(&j, "train_batch")?
+                .as_usize()
+                .ok_or_else(|| anyhow!("bad train_batch"))?,
+            eval_batch: need(&j, "eval_batch")?
+                .as_usize()
+                .ok_or_else(|| anyhow!("bad eval_batch"))?,
+            archs,
+            fused,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "train_batch": 128, "eval_batch": 500,
+      "archs": {
+        "small": {"layers": [784,20,20,10], "num_params": 16330,
+          "train": {"path": "train_step_small.hlo.txt", "sha256_16": "x", "bytes": 1},
+          "eval": {"path": "eval_step_small.hlo.txt", "sha256_16": "x", "bytes": 1}}
+      },
+      "fused": [{"arch": "small", "n": 2041, "d": 4, "c": 88, "compression": 8,
+                 "pallas": true, "path": "fused_step_small_n2041_d4.hlo.txt",
+                 "sha256_16": "x", "bytes": 1}]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.train_batch, 128);
+        assert_eq!(m.eval_batch, 500);
+        let small = &m.archs["small"];
+        assert_eq!(small.num_params, 16_330);
+        assert_eq!(small.train_path, "train_step_small.hlo.txt");
+        assert_eq!(m.fused.len(), 1);
+        assert_eq!(m.fused[0].c, 88);
+    }
+
+    #[test]
+    fn missing_field_is_an_error() {
+        assert!(Manifest::parse(r#"{"train_batch": 1}"#).is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn parses_shipped_manifest_if_present() {
+        // Integration sanity against the actual artifacts dir when built.
+        let p = Path::new("artifacts/manifest.json");
+        if p.exists() {
+            let m = Manifest::load(p).unwrap();
+            assert!(m.archs.contains_key("small"));
+            assert!(m.archs.contains_key("mnistfc"));
+            assert_eq!(m.archs["mnistfc"].num_params, 266_610);
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! Generation of the influence matrix `Q` (Eq. 1) and the padded-CSC
+//! width formula shared with the AOT compile path.
+
+use super::QMatrix;
+use crate::nn::ArchSpec;
+use crate::rng::{sample_distinct, Normal, SeedTree};
+
+/// Padded CSC width — the closed-form high-probability bound on the max
+/// column degree.  **Must match `python/compile/aot.py::csc_pad_width`**:
+/// the fused artifacts are lowered with this width, and `QMatrix::to_csc`
+/// asserts the realized degrees fit.
+///
+/// Column degrees are Binomial(m, d/n) with mean μ = m·d/n; μ + 6√μ + 16
+/// rounded up to a multiple of 8 exceeds the max of n such binomials
+/// except with negligible probability.
+pub fn csc_pad_width(m: usize, n: usize, d: usize) -> usize {
+    let mu = m as f64 * d as f64 / n as f64;
+    (((mu + 6.0 * mu.sqrt() + 16.0) / 8.0).ceil() as usize) * 8
+}
+
+/// Generate `Q` per §1.3: row `i` gets `d` distinct uniform column ids and
+/// values `N(0, 6/(d·fan_in(i)))`.
+pub fn generate(arch: &ArchSpec, n: usize, d: usize, seeds: &SeedTree) -> QMatrix {
+    let m = arch.num_params();
+    assert!(n >= 1 && n <= m, "need 1 <= n <= m (n={n}, m={m})");
+    assert!(d >= 1 && d <= n, "need 1 <= d <= n (d={d}, n={n})");
+
+    let fan_in = arch.fan_in_table();
+    let mut rng = seeds.rng("q-matrix", 0);
+    let mut normal = Normal::new();
+    let mut rid = Vec::with_capacity(m * d);
+    let mut rv = Vec::with_capacity(m * d);
+    let mut scratch = Vec::with_capacity(d);
+
+    for i in 0..m {
+        sample_distinct(&mut rng, n, d, &mut scratch);
+        rid.extend_from_slice(&scratch);
+        let sigma = (6.0 / (d as f64 * fan_in[i] as f64)).sqrt();
+        for _ in 0..d {
+            rv.push((normal.sample(&mut rng) * sigma) as f32);
+        }
+    }
+
+    QMatrix { m, n, d, rid, rv }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_width_matches_python_examples() {
+        // Values printed by `python -m compile.aot` for the shipped
+        // artifacts; pinned here so drift between the two implementations
+        // is caught by `cargo test` without running python.
+        assert_eq!(csc_pad_width(16_330, 2041, 4), 88);
+        assert_eq!(csc_pad_width(266_610, 266_610, 10), 48);
+        assert_eq!(csc_pad_width(266_610, 33_326, 10), 152);
+        assert_eq!(csc_pad_width(266_610, 8_331, 10), 448);
+    }
+
+    #[test]
+    fn pad_width_bounds_realized_degrees() {
+        let arch = ArchSpec::small();
+        let m = arch.num_params();
+        for (n, d) in [(m / 8, 4), (m / 32, 10), (509, 3)] {
+            let q = generate(&arch, n, d, &SeedTree::new(13));
+            let csc = q.to_csc(None);
+            let max_deg = *csc.degrees.iter().max().unwrap() as usize;
+            let pad = csc_pad_width(m, n, d);
+            assert!(max_deg <= pad, "n={n} d={d}: max_deg={max_deg} pad={pad}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "need 1 <= d <= n")]
+    fn rejects_d_larger_than_n() {
+        generate(&ArchSpec::small(), 4, 5, &SeedTree::new(0));
+    }
+}

@@ -1,0 +1,122 @@
+//! Multi-threaded sparse products (std scoped threads; no rayon offline).
+//!
+//! Row-parallel `spmv` and column-parallel `spmv_t`: both products are
+//! embarrassingly parallel over their output dimension, so the splits are
+//! contiguous output chunks with zero synchronization beyond the join.
+//! The L3 perf pass (EXPERIMENTS.md §Perf) benchmarks these against the
+//! serial kernels; they win only for the MnistFc-scale `m`.
+
+use super::{CscView, QMatrix};
+
+/// Threads to use: capped so coordination overhead never dominates the
+/// small-arch configs.
+fn threads_for(work_items: usize) -> usize {
+    let hw = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    // ~64k gather-accumulates per thread amortizes spawn cost.
+    hw.min(work_items / 65_536).max(1)
+}
+
+/// Parallel `w = Q z`.
+pub fn spmv_par_into(q: &QMatrix, z: &[f32], w: &mut [f32]) {
+    assert_eq!(z.len(), q.n);
+    assert_eq!(w.len(), q.m);
+    let nt = threads_for(q.nnz());
+    if nt <= 1 {
+        q.spmv_into(z, w);
+        return;
+    }
+    let chunk = q.m.div_ceil(nt);
+    let d = q.d;
+    std::thread::scope(|scope| {
+        for (t, w_chunk) in w.chunks_mut(chunk).enumerate() {
+            let start = t * chunk;
+            let rid = &q.rid;
+            let rv = &q.rv;
+            scope.spawn(move || {
+                for (i_local, wi) in w_chunk.iter_mut().enumerate() {
+                    let i = start + i_local;
+                    let ids = &rid[i * d..(i + 1) * d];
+                    let vals = &rv[i * d..(i + 1) * d];
+                    let mut acc = 0.0f32;
+                    for k in 0..d {
+                        acc += vals[k] * z[ids[k] as usize];
+                    }
+                    *wi = acc;
+                }
+            });
+        }
+    });
+}
+
+/// Parallel `g_s = Qᵀ g_w`.
+pub fn spmv_t_par_into(csc: &CscView, g_w: &[f32], g_s: &mut [f32]) {
+    assert_eq!(g_s.len(), csc.n);
+    let nnz: usize = csc.degrees.iter().map(|&x| x as usize).sum();
+    let nt = threads_for(nnz);
+    if nt <= 1 {
+        csc.spmv_t_into(g_w, g_s);
+        return;
+    }
+    let chunk = csc.n.div_ceil(nt);
+    let c = csc.c;
+    std::thread::scope(|scope| {
+        for (t, gs_chunk) in g_s.chunks_mut(chunk).enumerate() {
+            let start = t * chunk;
+            let cid = &csc.cid;
+            let cv = &csc.cv;
+            let degrees = &csc.degrees;
+            scope.spawn(move || {
+                for (j_local, gj) in gs_chunk.iter_mut().enumerate() {
+                    let j = start + j_local;
+                    let deg = degrees[j] as usize;
+                    let ids = &cid[j * c..j * c + deg];
+                    let vals = &cv[j * c..j * c + deg];
+                    let mut acc = 0.0f32;
+                    for k in 0..deg {
+                        acc += vals[k] * g_w[ids[k] as usize];
+                    }
+                    *gj = acc;
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::ArchSpec;
+    use crate::rng::{Rng, SeedTree, Xoshiro256pp};
+
+    #[test]
+    fn parallel_matches_serial() {
+        let arch = ArchSpec::mnistfc();
+        let q = QMatrix::generate(&arch, arch.num_params() / 16, 6, &SeedTree::new(21));
+        let csc = q.to_csc(None);
+        let mut r = Xoshiro256pp::seed_from(22);
+        let z: Vec<f32> = (0..q.n).map(|_| r.next_f32()).collect();
+        let g: Vec<f32> = (0..q.m).map(|_| r.next_f32() - 0.5).collect();
+
+        let mut w_ser = vec![0.0; q.m];
+        let mut w_par = vec![0.0; q.m];
+        q.spmv_into(&z, &mut w_ser);
+        spmv_par_into(&q, &z, &mut w_par);
+        assert_eq!(w_ser, w_par);
+
+        let mut s_ser = vec![0.0; q.n];
+        let mut s_par = vec![0.0; q.n];
+        csc.spmv_t_into(&g, &mut s_ser);
+        spmv_t_par_into(&csc, &g, &mut s_par);
+        assert_eq!(s_ser, s_par);
+    }
+
+    #[test]
+    fn parallel_small_input_falls_back() {
+        let arch = ArchSpec::new("tiny", &[4, 3, 2]);
+        let q = QMatrix::generate(&arch, 10, 2, &SeedTree::new(1));
+        let z = vec![0.5; 10];
+        let mut w = vec![0.0; q.m];
+        spmv_par_into(&q, &z, &mut w); // must not panic on tiny sizes
+        assert_eq!(w, q.spmv(&z));
+    }
+}

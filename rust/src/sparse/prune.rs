@@ -1,0 +1,210 @@
+//! Post-training compression of `(Q, p)` — the paper's §4 conjecture:
+//! *"we can remove the columns of Q related to trivial p̄s, and reduce the
+//! rows of Q when weights are summed to 0. We conjecture this will
+//! decrease further the communication cost."*
+//!
+//! Columns split three ways by the trained probabilities:
+//! * `p_j ≤ τ`      — the mask bit is (almost surely) 0: drop the column;
+//! * `p_j ≥ 1 − τ`  — the bit is (almost surely) 1: fold `q_{·j}` into a
+//!   fixed weight offset `w_fix` that no longer needs a bit;
+//! * otherwise      — keep: this is a live coordinate of `C_τ`.
+//!
+//! The pruned model transmits only `n' = |live|` bits per round, and the
+//! reconstruction becomes `w = w_fix + Q' z'`.  [`PrunedModel::residual`]
+//! quantifies the (probabilistic) approximation error of the freeze.
+
+use super::QMatrix;
+
+/// Result of pruning `(Q, p)` at threshold `τ`.
+pub struct PrunedModel {
+    /// Reduced matrix over the live columns only (column ids remapped).
+    pub q: QMatrix,
+    /// Fixed weight contribution from the frozen-at-1 columns.
+    pub w_fix: Vec<f32>,
+    /// For each live column, its original index.
+    pub live_cols: Vec<u32>,
+    /// Live probabilities (the reduced trainable vector).
+    pub probs: Vec<f32>,
+    /// Columns frozen at 1 / dropped at 0 (diagnostics).
+    pub frozen_one: usize,
+    pub frozen_zero: usize,
+}
+
+impl QMatrix {
+    /// Prune trivial columns at threshold `τ` (Definition 2.2's
+    /// complement).  `probs.len()` must equal `n`.
+    pub fn prune(&self, probs: &[f32], tau: f32) -> PrunedModel {
+        assert_eq!(probs.len(), self.n);
+        assert!((0.0..0.5).contains(&tau), "need 0 ≤ τ < 0.5");
+        // Classify columns.
+        #[derive(Clone, Copy, PartialEq)]
+        enum Class {
+            Zero,
+            One,
+            Live(u32),
+        }
+        let mut classes = Vec::with_capacity(self.n);
+        let mut live_cols = Vec::new();
+        let mut live_probs = Vec::new();
+        for (j, &p) in probs.iter().enumerate() {
+            if p <= tau {
+                classes.push(Class::Zero);
+            } else if p >= 1.0 - tau {
+                classes.push(Class::One);
+            } else {
+                classes.push(Class::Live(live_cols.len() as u32));
+                live_cols.push(j as u32);
+                live_probs.push(p);
+            }
+        }
+        let n_live = live_cols.len();
+
+        // Rebuild the row layout over live columns; fold ones into w_fix.
+        // Rows keep a ragged count here, so the reduced matrix stores a
+        // uniform degree again by padding with (live col 0, value 0.0) —
+        // the same inert-padding trick as the CSC.
+        let mut w_fix = vec![0.0f32; self.m];
+        let mut rows: Vec<Vec<(u32, f32)>> = vec![Vec::new(); self.m];
+        let mut max_deg = 0usize;
+        for i in 0..self.m {
+            let (ids, vals) = self.row(i);
+            for (k, &j) in ids.iter().enumerate() {
+                match classes[j as usize] {
+                    Class::Zero => {}
+                    Class::One => w_fix[i] += vals[k],
+                    Class::Live(new_j) => rows[i].push((new_j, vals[k])),
+                }
+            }
+            max_deg = max_deg.max(rows[i].len());
+        }
+        let d2 = max_deg.max(1);
+        let mut rid = Vec::with_capacity(self.m * d2);
+        let mut rv = Vec::with_capacity(self.m * d2);
+        for row in &rows {
+            for &(j, v) in row {
+                rid.push(j);
+                rv.push(v);
+            }
+            for _ in row.len()..d2 {
+                rid.push(0);
+                rv.push(0.0);
+            }
+        }
+
+        PrunedModel {
+            q: QMatrix { m: self.m, n: n_live.max(1), d: d2, rid, rv },
+            w_fix,
+            live_cols,
+            probs: live_probs,
+            frozen_one: classes.iter().filter(|&&c| c == Class::One).count(),
+            frozen_zero: classes.iter().filter(|&&c| c == Class::Zero).count(),
+        }
+    }
+}
+
+impl PrunedModel {
+    /// Live (transmitted) coordinate count `n'`.
+    pub fn n_live(&self) -> usize {
+        self.live_cols.len()
+    }
+
+    /// Reconstruct `w = w_fix + Q' z'` for a live-coordinate mask.
+    pub fn reconstruct(&self, z_live: &[f32], w: &mut [f32]) {
+        assert_eq!(z_live.len().max(1), self.q.n);
+        if self.live_cols.is_empty() {
+            w.copy_from_slice(&self.w_fix);
+            return;
+        }
+        self.q.spmv_into(z_live, w);
+        for (wi, &f) in w.iter_mut().zip(&self.w_fix) {
+            *wi += f;
+        }
+    }
+
+    /// Extra uplink savings factor vs the unpruned protocol.
+    pub fn extra_savings(&self, n_original: usize) -> f64 {
+        n_original as f64 / self.n_live().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::ArchSpec;
+    use crate::rng::{Rng, SeedTree, Xoshiro256pp};
+
+    fn setup(tau: f32) -> (QMatrix, Vec<f32>, PrunedModel) {
+        let arch = ArchSpec::small();
+        let q = QMatrix::generate(&arch, 512, 4, &SeedTree::new(3));
+        let mut r = Xoshiro256pp::seed_from(4);
+        // Trained-looking p: most coordinates saturated.
+        let probs: Vec<f32> = (0..512)
+            .map(|_| match r.next_below(10) {
+                0..=3 => 0.0,
+                4..=7 => 1.0,
+                _ => 0.2 + 0.6 * r.next_f32(),
+            })
+            .collect();
+        let pruned = q.prune(&probs, tau);
+        (q, probs, pruned)
+    }
+
+    #[test]
+    fn exact_reconstruction_when_trivials_are_hard() {
+        // With τ = 0: only exactly-0/1 columns freeze, so for any mask
+        // consistent with the frozen bits, reconstruction is exact.
+        let (q, probs, pruned) = setup(0.0);
+        let mut r = Xoshiro256pp::seed_from(5);
+        let mut z_full = vec![0.0f32; q.n];
+        let mut z_live = vec![0.0f32; pruned.n_live()];
+        for (k, &j) in pruned.live_cols.iter().enumerate() {
+            let bit = r.bernoulli(probs[j as usize] as f64) as u8 as f32;
+            z_live[k] = bit;
+            z_full[j as usize] = bit;
+        }
+        for (j, &p) in probs.iter().enumerate() {
+            if p >= 1.0 {
+                z_full[j] = 1.0;
+            }
+        }
+        let mut w_a = vec![0.0f32; q.m];
+        let mut w_b = vec![0.0f32; q.m];
+        q.spmv_into(&z_full, &mut w_a);
+        pruned.reconstruct(&z_live, &mut w_b);
+        for (a, b) in w_a.iter().zip(&w_b) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn savings_track_trivial_fraction() {
+        let (_, probs, pruned) = setup(0.05);
+        let live_expected =
+            probs.iter().filter(|&&p| p > 0.05 && p < 0.95).count();
+        assert_eq!(pruned.n_live(), live_expected);
+        assert!(pruned.extra_savings(512) > 2.0, "{}", pruned.extra_savings(512));
+        assert_eq!(pruned.frozen_zero + pruned.frozen_one + pruned.n_live(), 512);
+    }
+
+    #[test]
+    fn all_columns_frozen_degenerates_gracefully() {
+        let arch = ArchSpec::small();
+        let q = QMatrix::generate(&arch, 64, 3, &SeedTree::new(6));
+        let probs = vec![1.0f32; 64];
+        let pruned = q.prune(&probs, 0.1);
+        assert_eq!(pruned.n_live(), 0);
+        let mut w_fix_check = vec![0.0f32; q.m];
+        q.spmv_into(&vec![1.0; 64], &mut w_fix_check);
+        let mut w = vec![0.0f32; q.m];
+        pruned.reconstruct(&[], &mut w);
+        assert_eq!(w, w_fix_check);
+    }
+
+    #[test]
+    #[should_panic(expected = "0 ≤ τ < 0.5")]
+    fn rejects_bad_tau() {
+        let arch = ArchSpec::small();
+        let q = QMatrix::generate(&arch, 8, 2, &SeedTree::new(7));
+        q.prune(&vec![0.5; 8], 0.5);
+    }
+}

@@ -1,0 +1,197 @@
+//! In-tree micro/macro-benchmark harness (criterion is unavailable
+//! offline).  Emits the same kind of rows: warmup, N timed iterations,
+//! mean ± stddev, median, and optional throughput.  Benches are
+//! `harness = false` binaries that call [`Bencher::run`] per case and
+//! [`table`]/[`row`] helpers for paper-table reproduction output.
+
+use std::time::{Duration, Instant};
+
+/// Result statistics of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    /// Optional bytes processed per iteration → throughput line.
+    pub bytes_per_iter: Option<u64>,
+}
+
+impl Stats {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+
+    pub fn throughput_gbps(&self) -> Option<f64> {
+        self.bytes_per_iter.map(|b| b as f64 / self.mean.as_secs_f64() / 1e9)
+    }
+}
+
+/// Benchmark driver with criterion-like defaults.
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// Target total measurement time.
+    pub target: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 1_000,
+            target: Duration::from_secs(2),
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick profile for heavy end-to-end cases.
+    pub fn heavy() -> Self {
+        Self { warmup_iters: 1, min_iters: 3, max_iters: 20, target: Duration::from_secs(5) }
+    }
+
+    /// Run `f` repeatedly; prints and returns the stats row.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Stats {
+        self.run_with_bytes(name, None, &mut f)
+    }
+
+    /// Run with a bytes-per-iteration annotation for throughput reporting.
+    pub fn run_bytes<F: FnMut()>(&self, name: &str, bytes: u64, mut f: F) -> Stats {
+        self.run_with_bytes(name, Some(bytes), &mut f)
+    }
+
+    fn run_with_bytes(&self, name: &str, bytes: Option<u64>, f: &mut dyn FnMut()) -> Stats {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        // Estimate a per-iter cost from one timed call, derive iter count.
+        let probe = {
+            let t = Instant::now();
+            f();
+            t.elapsed()
+        };
+        let per_iter = probe.max(Duration::from_nanos(1));
+        let iters = ((self.target.as_secs_f64() / per_iter.as_secs_f64()) as usize)
+            .clamp(self.min_iters, self.max_iters);
+
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed());
+        }
+        samples.sort_unstable();
+        let sum: Duration = samples.iter().sum();
+        let mean = sum / iters as u32;
+        let mean_s = mean.as_secs_f64();
+        let var = samples
+            .iter()
+            .map(|d| (d.as_secs_f64() - mean_s).powi(2))
+            .sum::<f64>()
+            / iters as f64;
+        let stats = Stats {
+            name: name.to_string(),
+            iters,
+            mean,
+            stddev: Duration::from_secs_f64(var.sqrt()),
+            median: samples[iters / 2],
+            min: samples[0],
+            bytes_per_iter: bytes,
+        };
+        print_stats(&stats);
+        stats
+    }
+}
+
+fn print_stats(s: &Stats) {
+    let tp = s
+        .throughput_gbps()
+        .map(|g| format!("  thrpt: {g:.3} GB/s"))
+        .unwrap_or_default();
+    println!(
+        "bench {:<44} time: [{} ± {}]  median: {}  min: {}  ({} iters){tp}",
+        s.name,
+        fmt_dur(s.mean),
+        fmt_dur(s.stddev),
+        fmt_dur(s.median),
+        fmt_dur(s.min),
+        s.iters,
+    );
+}
+
+/// Human duration like criterion's.
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Paper-table output helpers: fixed-width aligned rows under a header.
+pub fn table(title: &str, header: &[&str]) {
+    println!("\n=== {title} ===");
+    row(header);
+    println!("{}", "-".repeat(header.len() * 16));
+}
+
+pub fn row<S: AsRef<str>>(cells: &[S]) {
+    let line: Vec<String> = cells.iter().map(|c| format!("{:<15}", c.as_ref())).collect();
+    println!("{}", line.join(" "));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_sane() {
+        let b = Bencher {
+            warmup_iters: 1,
+            min_iters: 5,
+            max_iters: 10,
+            target: Duration::from_millis(10),
+        };
+        let mut acc = 0u64;
+        let s = b.run("spin", || {
+            for i in 0..10_000 {
+                acc = acc.wrapping_add(i);
+            }
+            std::hint::black_box(acc);
+        });
+        assert!(s.iters >= 5 && s.iters <= 10);
+        assert!(s.min <= s.median && s.median <= s.mean * 3);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let s = Stats {
+            name: "x".into(),
+            iters: 1,
+            mean: Duration::from_secs(1),
+            stddev: Duration::ZERO,
+            median: Duration::from_secs(1),
+            min: Duration::from_secs(1),
+            bytes_per_iter: Some(2_000_000_000),
+        };
+        assert!((s.throughput_gbps().unwrap() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert_eq!(fmt_dur(Duration::from_nanos(5)), "5 ns");
+        assert!(fmt_dur(Duration::from_micros(5)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(5)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).contains(" s"));
+    }
+}

@@ -1,0 +1,8 @@
+//! In-tree utility layer replacing crates that are unavailable offline
+//! (serde/serde_json, toml, clap, criterion, proptest — see Cargo.toml).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod toml;

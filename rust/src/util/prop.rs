@@ -1,0 +1,120 @@
+//! Minimal property-testing driver (proptest is unavailable offline).
+//!
+//! [`for_all`] runs a property over `cases` randomly-generated inputs from
+//! a deterministic seed; on failure it reports the failing case index and
+//! seed so the exact input can be re-derived.  Generators are plain
+//! closures over [`Gen`], which wraps the crate RNG with convenience
+//! samplers.  No shrinking — failures print the generated value instead
+//! (inputs here are small enough to eyeball).
+
+use crate::rng::{Rng, Xoshiro256pp};
+
+/// Generator context handed to strategies.
+pub struct Gen {
+    pub rng: Xoshiro256pp,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi_inclusive: usize) -> usize {
+        debug_assert!(lo <= hi_inclusive);
+        lo + self.rng.next_below((hi_inclusive - lo + 1) as u64) as usize
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn f32_vec(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| lo + self.rng.next_f32() * (hi - lo)).collect()
+    }
+
+    pub fn bool_p(&mut self, p: f64) -> bool {
+        self.rng.bernoulli(p)
+    }
+
+    pub fn seed(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+}
+
+/// Run `prop` over `cases` generated inputs.  `make` draws an input from
+/// the generator; `prop` returns `Err(reason)` on violation.
+pub fn for_all<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    seed: u64,
+    mut make: impl FnMut(&mut Gen) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let mut g = Gen { rng: Xoshiro256pp::seed_from(seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)) };
+        let input = make(&mut g);
+        if let Err(reason) = prop(&input) {
+            panic!(
+                "property '{name}' failed on case {case}/{cases} (seed {seed}):\n  \
+                 input: {input:?}\n  reason: {reason}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        for_all(
+            "reverse-reverse-id",
+            50,
+            7,
+            |g| {
+                let len = g.usize_in(0, 20);
+                g.f32_vec(len, -1.0, 1.0)
+            },
+            |v| {
+                let mut r = v.clone();
+                r.reverse();
+                r.reverse();
+                if r == *v {
+                    Ok(())
+                } else {
+                    Err("reverse twice changed the vec".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn reports_failures() {
+        for_all("always-fails", 3, 0, |g| g.usize_in(0, 10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generation_is_deterministic_per_case() {
+        let mut first: Vec<usize> = Vec::new();
+        for_all(
+            "capture",
+            5,
+            99,
+            |g| g.usize_in(0, 1000),
+            |&x| {
+                first.push(x);
+                Ok(())
+            },
+        );
+        let mut second: Vec<usize> = Vec::new();
+        for_all(
+            "capture",
+            5,
+            99,
+            |g| g.usize_in(0, 1000),
+            |&x| {
+                second.push(x);
+                Ok(())
+            },
+        );
+        assert_eq!(first, second);
+    }
+}

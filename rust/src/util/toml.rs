@@ -1,0 +1,275 @@
+//! TOML-subset parser for the config system (`configs/*.toml`).
+//!
+//! Supported grammar — the subset the configs actually use:
+//! `[section]` headers (one level), `key = value` with string / integer /
+//! float / bool / homogeneous scalar array values, `#` comments, blank
+//! lines.  Dotted keys, inline tables, arrays-of-tables and multi-line
+//! strings are out of scope and rejected loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|x| usize::try_from(x).ok())
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(x) => Some(*x),
+            TomlValue::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: `table["section.key"] = value`; top-level keys have no
+/// section prefix.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+impl TomlDoc {
+    pub fn parse(src: &str) -> Result<TomlDoc, TomlError> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (ln, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| TomlError { line: ln + 1, msg: msg.to_string() };
+            if let Some(rest) = line.strip_prefix('[') {
+                if line.starts_with("[[") {
+                    return Err(err("arrays of tables are not supported"));
+                }
+                let name = rest.strip_suffix(']').ok_or_else(|| err("unterminated section"))?;
+                let name = name.trim();
+                if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-') {
+                    return Err(err("bad section name (one level, [a-zA-Z0-9_-])"));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| err("expected 'key = value'"))?;
+            let key = line[..eq].trim();
+            if key.is_empty() || !key.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-') {
+                return Err(err("bad key (dotted keys unsupported)"));
+            }
+            let value = parse_value(line[eq + 1..].trim()).map_err(|m| err(&m))?;
+            let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            if doc.entries.insert(full.clone(), value).is_some() {
+                return Err(err(&format!("duplicate key '{full}'")));
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<TomlDoc, String> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        TomlDoc::parse(&src).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.entries.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    /// Typo guard: every present key must be in `known` (exact match).
+    pub fn check_known_keys(&self, known: &[&str]) -> Result<(), String> {
+        for k in self.entries.keys() {
+            if !known.contains(&k.as_str()) {
+                return Err(format!(
+                    "unknown config key '{k}' (known: {})",
+                    known.join(", ")
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a basic string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("missing value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        if inner.contains('"') {
+            return Err("escapes/embedded quotes unsupported".into());
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let items: Result<Vec<TomlValue>, String> =
+            inner.split(',').map(|p| parse_value(p.trim())).collect();
+        return Ok(TomlValue::Arr(items?));
+    }
+    let clean = s.replace('_', "");
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = clean.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value '{s}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+name = "fig3"          # inline comment
+seed = 42
+lr = 0.001
+big = 266_610
+flag = true
+
+[zampling]
+d-values = [1, 5, 10, 50, 100]
+factors = [1.0, 2.0]
+arch = "small"
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let doc = TomlDoc::parse(SAMPLE).unwrap();
+        assert_eq!(doc.str_or("name", ""), "fig3");
+        assert_eq!(doc.usize_or("seed", 0), 42);
+        assert!((doc.f64_or("lr", 0.0) - 0.001).abs() < 1e-12);
+        assert_eq!(doc.usize_or("big", 0), 266_610);
+        assert!(doc.bool_or("flag", false));
+        assert_eq!(doc.str_or("zampling.arch", ""), "small");
+        let ds: Vec<usize> = doc
+            .get("zampling.d-values")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_usize().unwrap())
+            .collect();
+        assert_eq!(ds, vec![1, 5, 10, 50, 100]);
+    }
+
+    #[test]
+    fn rejects_unsupported_and_malformed() {
+        for bad in [
+            "[[table]]",
+            "a.b = 1",
+            "x = ",
+            "x = \"unterminated",
+            "[sec\nx=1",
+            "x = 1\nx = 2",
+            "x = nope",
+        ] {
+            assert!(TomlDoc::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn unknown_key_guard() {
+        let doc = TomlDoc::parse("a = 1\n[s]\nb = 2").unwrap();
+        assert!(doc.check_known_keys(&["a", "s.b"]).is_ok());
+        assert!(doc.check_known_keys(&["a"]).is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = TomlDoc::parse(r##"x = "a#b""##).unwrap();
+        assert_eq!(doc.str_or("x", ""), "a#b");
+    }
+}

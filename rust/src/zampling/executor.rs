@@ -1,0 +1,146 @@
+//! Dense-step execution abstraction.
+//!
+//! The trainers are generic over how the dense `(w, batch) → (loss,
+//! grad_w, correct)` step runs: [`NativeExecutor`] uses the pure-Rust MLP
+//! oracle; `runtime::PjrtExecutor` (the real path) runs the AOT HLO
+//! artifacts through the PJRT CPU client.  Both pad partial batches to
+//! their fixed capacity — the artifacts' weighted loss makes padding rows
+//! inert (see `python/compile/model.py`).
+
+use crate::nn::{ArchSpec, MlpRef};
+
+/// Result of one dense step.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepResult {
+    pub loss: f32,
+    /// Number of correctly-classified *real* rows in the batch.
+    pub correct: f32,
+}
+
+/// The dense compute interface the trainers program against.
+pub trait DenseExecutor {
+    /// `loss, grad_w, correct` on a train batch.  `rows ≤ train_batch()`;
+    /// `x` is `[rows, in_dim]`, `y1h` is `[rows, out_dim]`, `grad_out`
+    /// has length `m` and is fully overwritten.
+    fn train_step(
+        &mut self,
+        w: &[f32],
+        x: &[f32],
+        y1h: &[f32],
+        rows: usize,
+        grad_out: &mut [f32],
+    ) -> StepResult;
+
+    /// `loss, correct` on an eval batch.  `rows ≤ eval_batch()`.
+    fn eval_step(&mut self, w: &[f32], x: &[f32], y1h: &[f32], rows: usize) -> StepResult;
+
+    /// Fixed train-batch capacity of the backend.
+    fn train_batch(&self) -> usize;
+
+    /// Fixed eval-batch capacity of the backend.
+    fn eval_batch(&self) -> usize;
+
+    fn arch(&self) -> &ArchSpec;
+}
+
+/// Evaluate a full dataset through any executor, chunking to the
+/// executor's eval capacity.  Returns `(mean loss, accuracy)` over the
+/// `rows` real rows (per-chunk losses are re-weighted by chunk size).
+pub fn eval_dataset(
+    exec: &mut dyn DenseExecutor,
+    w: &[f32],
+    x: &[f32],
+    y1h: &[f32],
+    rows: usize,
+) -> (f64, f64) {
+    let cap = exec.eval_batch();
+    let in_dim = exec.arch().input_dim();
+    let out_dim = exec.arch().output_dim();
+    let mut correct = 0.0f64;
+    let mut loss_weighted = 0.0f64;
+    let mut done = 0usize;
+    while done < rows {
+        let take = cap.min(rows - done);
+        let r = exec.eval_step(
+            w,
+            &x[done * in_dim..(done + take) * in_dim],
+            &y1h[done * out_dim..(done + take) * out_dim],
+            take,
+        );
+        loss_weighted += r.loss as f64 * take as f64;
+        correct += r.correct as f64;
+        done += take;
+    }
+    (loss_weighted / rows.max(1) as f64, correct / rows.max(1) as f64)
+}
+
+/// Pure-Rust executor over [`MlpRef`].
+pub struct NativeExecutor {
+    mlp: MlpRef,
+    arch: ArchSpec,
+    train_batch: usize,
+    eval_batch: usize,
+}
+
+impl NativeExecutor {
+    pub fn new(arch: ArchSpec, train_batch: usize, eval_batch: usize) -> Self {
+        let cap = train_batch.max(eval_batch);
+        Self { mlp: MlpRef::new(arch.clone(), cap), arch, train_batch, eval_batch }
+    }
+}
+
+impl DenseExecutor for NativeExecutor {
+    fn train_step(
+        &mut self,
+        w: &[f32],
+        x: &[f32],
+        y1h: &[f32],
+        rows: usize,
+        grad_out: &mut [f32],
+    ) -> StepResult {
+        let out = self.mlp.train_step(w, x, y1h, rows, grad_out);
+        StepResult { loss: out.loss, correct: out.correct }
+    }
+
+    fn eval_step(&mut self, w: &[f32], x: &[f32], y1h: &[f32], rows: usize) -> StepResult {
+        let out = self.mlp.eval_step(w, x, y1h, rows);
+        StepResult { loss: out.loss, correct: out.correct }
+    }
+
+    fn train_batch(&self) -> usize {
+        self.train_batch
+    }
+
+    fn eval_batch(&self) -> usize {
+        self.eval_batch
+    }
+
+    fn arch(&self) -> &ArchSpec {
+        &self.arch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Rng, Xoshiro256pp};
+
+    #[test]
+    fn native_executor_runs_both_steps() {
+        let arch = ArchSpec::small();
+        let mut exec = NativeExecutor::new(arch.clone(), 8, 16);
+        let mut r = Xoshiro256pp::seed_from(0);
+        let w: Vec<f32> = (0..arch.num_params()).map(|_| (r.next_f32() - 0.5) * 0.1).collect();
+        let x: Vec<f32> = (0..8 * 784).map(|_| r.next_f32()).collect();
+        let mut y = vec![0.0f32; 8 * 10];
+        for row in 0..8 {
+            y[row * 10 + (row % 10)] = 1.0;
+        }
+        let mut g = vec![0.0; w.len()];
+        let t = exec.train_step(&w, &x, &y, 8, &mut g);
+        let e = exec.eval_step(&w, &x, &y, 8);
+        assert!((t.loss - e.loss).abs() < 1e-5);
+        assert_eq!(t.correct, e.correct);
+        assert!(g.iter().any(|&v| v != 0.0));
+    }
+}

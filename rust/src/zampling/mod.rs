@@ -1,0 +1,329 @@
+//! The paper's core: training-by-sampling on the zonotope of `Q` (§1.3).
+//!
+//! * [`ProbVector`] — the trainable `p ∈ [0,1]^n` with its score twin `s`,
+//!   the clip `f(x) = min(max(x, 0), 1)`, Bernoulli mask sampling, and the
+//!   straight-through gradient gate `1{0 < p < 1}`.
+//! * [`ScoreOptimizer`] — SGD / Adam(β₁ = 0.9) on score space (§3 trains
+//!   with Adam, momentum 0.9).
+//! * [`LocalZampling`] — the centralized trainer (§1.3 Local Zampling):
+//!   per batch, sample `z ~ Bern(p)`, reconstruct `w = Qz`, run the dense
+//!   train step (PJRT artifact or native oracle), chain the weight
+//!   gradient back through `Qᵀ`, and step the scores.
+//! * [`ContinuousModel`] — the no-sampling ablation (`w = Qp`, Appendix A
+//!   / Table 4's "Regular" column).
+//! * [`evaluate`] — mean-sampled / expected / discretized / best-mask
+//!   accuracy estimators (§3's metrics).
+
+mod executor;
+mod optimizer;
+mod trainer;
+
+pub use executor::{eval_dataset, DenseExecutor, NativeExecutor, StepResult};
+pub use optimizer::{AdamState, ScoreOptimizer};
+pub use trainer::{
+    train_local, train_local_with_init, EpochRecord, LocalOutcome, LocalZampling,
+};
+
+use crate::rng::{Normal, Rng};
+use crate::sparse::QMatrix;
+
+/// Clip to the unit interval — the paper's `f(x) = max(min(x, 1), 0)`
+/// ("ReLU clipped at 1"), used instead of Zhou et al.'s sigmoid.
+#[inline]
+pub fn clip01(x: f32) -> f32 {
+    x.clamp(0.0, 1.0)
+}
+
+/// The trainable probability vector and its score twin.
+///
+/// Invariant: `p[i] == clip01(s[i])` after every mutation.
+#[derive(Clone, Debug)]
+pub struct ProbVector {
+    s: Vec<f32>,
+    p: Vec<f32>,
+}
+
+impl ProbVector {
+    /// §1.3 initialization: `p(0) ~ U(0,1)^n`.
+    pub fn init_uniform<R: Rng>(n: usize, rng: &mut R) -> Self {
+        let p: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+        Self { s: p.clone(), p }
+    }
+
+    /// Beta(α, β) initialization (Appendix A's integrality-gap study).
+    /// Sampled via the Jöhnk/ratio-of-uniforms-free gamma-less method:
+    /// for the α = β ≤ 1 cases the appendix sweeps, inverse-CDF sampling
+    /// on a fine grid is accurate and dependency-free.
+    pub fn init_beta<R: Rng>(n: usize, alpha: f64, beta: f64, rng: &mut R) -> Self {
+        let p: Vec<f32> = (0..n).map(|_| sample_beta(alpha, beta, rng) as f32).collect();
+        Self { s: p.clone(), p }
+    }
+
+    pub fn from_probs(p: Vec<f32>) -> Self {
+        debug_assert!(p.iter().all(|&x| (0.0..=1.0).contains(&x)));
+        Self { s: p.clone(), p }
+    }
+
+    pub fn len(&self) -> usize {
+        self.p.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.p.is_empty()
+    }
+
+    pub fn probs(&self) -> &[f32] {
+        &self.p
+    }
+
+    pub fn scores(&self) -> &[f32] {
+        &self.s
+    }
+
+    /// Overwrite with server-provided probabilities (client receive path:
+    /// "each client calculates s(t) = p(t)").
+    pub fn set_probs(&mut self, p: &[f32]) {
+        assert_eq!(p.len(), self.p.len());
+        self.p.copy_from_slice(p);
+        self.s.copy_from_slice(p);
+    }
+
+    /// Sample `z ~ Bern(p)` into a bool mask.
+    pub fn sample_mask<R: Rng>(&self, rng: &mut R, out: &mut Vec<bool>) {
+        out.clear();
+        out.extend(self.p.iter().map(|&pi| rng.next_f32() < pi));
+    }
+
+    /// Deterministic rounding `p∘ = argmin_{z∈{0,1}} |p − z|` (Appendix A's
+    /// discretized network).
+    pub fn discretize(&self) -> Vec<bool> {
+        self.p.iter().map(|&pi| pi >= 0.5).collect()
+    }
+
+    /// Apply an already-scaled score update `delta` (from the optimizer),
+    /// then re-clip: `s ← s − delta`, `p ← f(s)`.
+    ///
+    /// The paper keeps scores and probabilities identified between rounds
+    /// (`s(t) = p(t)`), so after clipping we also fold `s` back onto `p`;
+    /// this makes the update idempotent at the saturation boundaries and
+    /// matches the protocol's per-round reset.
+    pub fn apply_update(&mut self, delta: &[f32]) {
+        debug_assert_eq!(delta.len(), self.s.len());
+        for i in 0..self.s.len() {
+            self.s[i] -= delta[i];
+            self.p[i] = clip01(self.s[i]);
+            self.s[i] = self.p[i];
+        }
+    }
+
+    /// The straight-through gate of the gradient rule
+    /// `∇_s L = (Qᵀ ∇_w L) ⊙ 1{0 < p < 1}`: zero entries whose
+    /// probability has saturated.
+    pub fn gate_gradient(&self, grad_s: &mut [f32]) {
+        debug_assert_eq!(grad_s.len(), self.p.len());
+        for (g, &pi) in grad_s.iter_mut().zip(&self.p) {
+            if pi <= 0.0 || pi >= 1.0 {
+                *g = 0.0;
+            }
+        }
+    }
+
+    /// Count of non-trivial coordinates `τ ≤ p_j ≤ 1 − τ` — the dimension
+    /// of the τ-hypercube `C_τ` (Definition 2.2).
+    pub fn dim_c_tau(&self, tau: f32) -> usize {
+        self.p.iter().filter(|&&pi| pi >= tau && pi <= 1.0 - tau).count()
+    }
+}
+
+/// Beta(α, β) sampling via two gammas: `X ~ Ga(α), Y ~ Ga(β), X/(X+Y)`.
+///
+/// Gammas use Marsaglia–Tsang squeeze (α ≥ 1) with the `Ga(α) =
+/// Ga(α+1)·U^{1/α}` boost for α < 1 — exact for the whole α = β sweep of
+/// Appendix A including the endpoint-concentrated α < 1 cases a
+/// grid-inverse-CDF would distort.
+fn sample_beta<R: Rng>(alpha: f64, beta: f64, rng: &mut R) -> f64 {
+    let x = sample_gamma(alpha, rng);
+    let y = sample_gamma(beta, rng);
+    if x + y == 0.0 {
+        0.5
+    } else {
+        x / (x + y)
+    }
+}
+
+fn sample_gamma<R: Rng>(alpha: f64, rng: &mut R) -> f64 {
+    debug_assert!(alpha > 0.0);
+    if alpha < 1.0 {
+        // boost: Ga(α) = Ga(α+1) · U^{1/α}
+        let mut u = rng.next_f64();
+        while u <= f64::MIN_POSITIVE {
+            u = rng.next_f64();
+        }
+        return sample_gamma(alpha + 1.0, rng) * u.powf(1.0 / alpha);
+    }
+    // Marsaglia–Tsang (2000).
+    let d = alpha - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    let mut normal = Normal::new();
+    loop {
+        let xn = normal.sample(rng);
+        let v = (1.0 + c * xn).powi(3);
+        if v <= 0.0 {
+            continue;
+        }
+        let u = rng.next_f64();
+        if u < 1.0 - 0.0331 * xn.powi(4) {
+            return d * v;
+        }
+        if u > 0.0 && u.ln() < 0.5 * xn * xn + d * (1.0 - v + v.ln()) {
+            return d * v;
+        }
+    }
+}
+
+/// Mask → f32 vector (for the float `spmv` path).
+pub fn mask_to_f32(mask: &[bool], out: &mut Vec<f32>) {
+    out.clear();
+    out.extend(mask.iter().map(|&b| b as u8 as f32));
+}
+
+/// Accuracy estimators over a trained state (§3 metrics).
+pub struct EvalReport {
+    pub mean_sampled_acc: f64,
+    pub sampled_acc_std: f64,
+    pub best_sampled_acc: f64,
+    pub expected_acc: f64,
+    pub discretized_acc: f64,
+}
+
+/// Evaluate mean-sampled (over `samples` masks), expected (`w = Qp`), and
+/// discretized accuracy on `(x, y1h)` eval data through `exec`.
+#[allow(clippy::too_many_arguments)]
+pub fn evaluate<R: Rng>(
+    exec: &mut dyn DenseExecutor,
+    q: &QMatrix,
+    pv: &ProbVector,
+    x: &[f32],
+    y1h: &[f32],
+    rows: usize,
+    samples: usize,
+    rng: &mut R,
+) -> EvalReport {
+    let mut mask = Vec::with_capacity(pv.len());
+    let mut zf = Vec::with_capacity(pv.len());
+    let mut w = vec![0.0f32; q.m];
+    let mut accs = crate::metrics::Summary::default();
+    let mut best = 0.0f64;
+    for _ in 0..samples {
+        pv.sample_mask(rng, &mut mask);
+        mask_to_f32(&mask, &mut zf);
+        q.spmv_into(&zf, &mut w);
+        let (_, acc) = eval_dataset(exec, &w, x, y1h, rows);
+        accs.push(acc);
+        best = best.max(acc);
+    }
+    // Expected network: w = Q p.
+    q.spmv_into(pv.probs(), &mut w);
+    let (_, expected) = eval_dataset(exec, &w, x, y1h, rows);
+    // Discretized network.
+    let disc = pv.discretize();
+    mask_to_f32(&disc, &mut zf);
+    q.spmv_into(&zf, &mut w);
+    let (_, discretized) = eval_dataset(exec, &w, x, y1h, rows);
+    EvalReport {
+        mean_sampled_acc: accs.mean(),
+        sampled_acc_std: accs.std(),
+        best_sampled_acc: best,
+        expected_acc: expected,
+        discretized_acc: discretized,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn clip_is_the_papers_f() {
+        assert_eq!(clip01(-0.5), 0.0);
+        assert_eq!(clip01(0.25), 0.25);
+        assert_eq!(clip01(1.5), 1.0);
+    }
+
+    #[test]
+    fn init_uniform_in_range_and_seeded() {
+        let mut r = Xoshiro256pp::seed_from(0);
+        let a = ProbVector::init_uniform(1000, &mut r);
+        assert!(a.probs().iter().all(|&p| (0.0..1.0).contains(&p)));
+        let mean: f32 = a.probs().iter().sum::<f32>() / 1000.0;
+        assert!((mean - 0.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn apply_update_clips_and_gates() {
+        let mut pv = ProbVector::from_probs(vec![0.0, 0.5, 1.0]);
+        pv.apply_update(&[0.3, -0.2, -0.3]); // s ← s − delta
+        assert_eq!(pv.probs(), &[0.0, 0.7, 1.0]);
+        let mut g = vec![1.0, 1.0, 1.0];
+        pv.gate_gradient(&mut g);
+        assert_eq!(g, vec![0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn saturated_entries_can_recover() {
+        // p hits 0, then a negative-gradient (positive-delta-reversal)
+        // update must be able to pull it back into (0,1).
+        let mut pv = ProbVector::from_probs(vec![0.2]);
+        pv.apply_update(&[0.5]); // 0.2 - 0.5 → clip(−0.3) = 0
+        assert_eq!(pv.probs(), &[0.0]);
+        pv.apply_update(&[-0.4]); // 0 + 0.4
+        assert!((pv.probs()[0] - 0.4).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mask_sampling_tracks_probabilities() {
+        let pv = ProbVector::from_probs(vec![0.0, 1.0, 0.5]);
+        let mut r = Xoshiro256pp::seed_from(1);
+        let mut mask = Vec::new();
+        let mut ones = [0usize; 3];
+        for _ in 0..2000 {
+            pv.sample_mask(&mut r, &mut mask);
+            for (i, &b) in mask.iter().enumerate() {
+                ones[i] += b as usize;
+            }
+        }
+        assert_eq!(ones[0], 0);
+        assert_eq!(ones[1], 2000);
+        assert!((900..1100).contains(&ones[2]), "{ones:?}");
+    }
+
+    #[test]
+    fn discretize_rounds_at_half() {
+        let pv = ProbVector::from_probs(vec![0.49, 0.5, 0.51]);
+        assert_eq!(pv.discretize(), vec![false, true, true]);
+    }
+
+    #[test]
+    fn dim_c_tau_counts_non_trivial() {
+        let pv = ProbVector::from_probs(vec![0.0, 0.05, 0.5, 0.96, 1.0]);
+        assert_eq!(pv.dim_c_tau(0.1), 1); // only 0.5
+        assert_eq!(pv.dim_c_tau(0.01), 3); // 0.05, 0.5, 0.96
+        assert_eq!(pv.dim_c_tau(0.0), 5);
+    }
+
+    #[test]
+    fn beta_sampler_moments() {
+        let mut r = Xoshiro256pp::seed_from(2);
+        // Beta(2,2): mean 1/2, var 1/20.
+        let xs: Vec<f64> = (0..20_000).map(|_| sample_beta(2.0, 2.0, &mut r)).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+        assert!((var - 0.05).abs() < 0.005, "var={var}");
+        // Beta(0.1, 0.1) concentrates near the endpoints.
+        let xs: Vec<f64> = (0..5_000).map(|_| sample_beta(0.1, 0.1, &mut r)).collect();
+        let extreme = xs.iter().filter(|&&x| !(0.1..=0.9).contains(&x)).count();
+        assert!(extreme as f64 / xs.len() as f64 > 0.7);
+    }
+}

@@ -1,0 +1,122 @@
+//! Optimizers on score space.
+//!
+//! §3 "Experimental Constant": *"All our training is run using Adam
+//! optimizer, with momentum 0.9 and varying learning rate."*  The update
+//! is computed as a `delta` vector that [`super::ProbVector::apply_update`]
+//! subtracts from the scores (so the optimizer never sees the clip).
+
+use crate::config::Optimizer;
+
+/// Adam moment state.
+#[derive(Clone, Debug)]
+pub struct AdamState {
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+    beta1: f64,
+    beta2: f64,
+    eps: f64,
+}
+
+impl AdamState {
+    pub fn new(n: usize) -> Self {
+        Self { m: vec![0.0; n], v: vec![0.0; n], t: 0, beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+}
+
+/// SGD or Adam over the score vector; produces the scaled step `delta`
+/// such that the parameter update is `s ← s − delta`.
+#[derive(Clone, Debug)]
+pub enum ScoreOptimizer {
+    Sgd { lr: f64 },
+    Adam { lr: f64, state: AdamState },
+}
+
+impl ScoreOptimizer {
+    pub fn new(kind: Optimizer, lr: f64, n: usize) -> Self {
+        match kind {
+            Optimizer::Sgd => ScoreOptimizer::Sgd { lr },
+            Optimizer::Adam => ScoreOptimizer::Adam { lr, state: AdamState::new(n) },
+        }
+    }
+
+    /// Compute `delta` from the (already gated) gradient, in place.
+    pub fn step(&mut self, grad: &mut [f32]) {
+        match self {
+            ScoreOptimizer::Sgd { lr } => {
+                let lr = *lr as f32;
+                for g in grad.iter_mut() {
+                    *g *= lr;
+                }
+            }
+            ScoreOptimizer::Adam { lr, state } => {
+                state.t += 1;
+                let b1 = state.beta1;
+                let b2 = state.beta2;
+                let bc1 = 1.0 - b1.powi(state.t as i32);
+                let bc2 = 1.0 - b2.powi(state.t as i32);
+                let lr = *lr;
+                for (i, g) in grad.iter_mut().enumerate() {
+                    let gi = *g as f64;
+                    let m = b1 * state.m[i] as f64 + (1.0 - b1) * gi;
+                    let v = b2 * state.v[i] as f64 + (1.0 - b2) * gi * gi;
+                    state.m[i] = m as f32;
+                    state.v[i] = v as f32;
+                    let mhat = m / bc1;
+                    let vhat = v / bc2;
+                    *g = (lr * mhat / (vhat.sqrt() + state.eps)) as f32;
+                }
+            }
+        }
+    }
+
+    pub fn lr(&self) -> f64 {
+        match self {
+            ScoreOptimizer::Sgd { lr } | ScoreOptimizer::Adam { lr, .. } => *lr,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_scales_by_lr() {
+        let mut o = ScoreOptimizer::new(Optimizer::Sgd, 0.1, 3);
+        let mut g = vec![1.0, -2.0, 0.0];
+        o.step(&mut g);
+        assert_eq!(g, vec![0.1, -0.2, 0.0]);
+    }
+
+    #[test]
+    fn adam_first_step_is_lr_sign() {
+        // With bias correction, the first Adam step is ≈ lr·sign(g).
+        let mut o = ScoreOptimizer::new(Optimizer::Adam, 0.01, 2);
+        let mut g = vec![0.5, -3.0];
+        o.step(&mut g);
+        assert!((g[0] - 0.01).abs() < 1e-4, "{g:?}");
+        assert!((g[1] + 0.01).abs() < 1e-4, "{g:?}");
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        // minimize f(x) = (x − 3)², start at 0.
+        let mut o = ScoreOptimizer::new(Optimizer::Adam, 0.1, 1);
+        let mut x = 0.0f32;
+        for _ in 0..500 {
+            let mut g = vec![2.0 * (x - 3.0)];
+            o.step(&mut g);
+            x -= g[0];
+        }
+        assert!((x - 3.0).abs() < 0.05, "x={x}");
+    }
+
+    #[test]
+    fn adam_zero_grad_produces_zero_delta_initially() {
+        let mut o = ScoreOptimizer::new(Optimizer::Adam, 0.1, 2);
+        let mut g = vec![0.0, 0.0];
+        o.step(&mut g);
+        assert_eq!(g, vec![0.0, 0.0]);
+    }
+}

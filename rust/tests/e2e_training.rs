@@ -1,0 +1,80 @@
+//! End-to-end: full Local Zampling training through the PJRT artifacts
+//! (the real three-layer path) on the synthetic task, checking it learns
+//! and matches the native-oracle run's trajectory.
+
+use std::path::Path;
+
+use zampling::config::TrainConfig;
+use zampling::data::Dataset;
+use zampling::nn::ArchSpec;
+use zampling::rng::SeedTree;
+use zampling::runtime::PjrtRuntime;
+use zampling::zampling::{train_local, NativeExecutor};
+
+fn ci_cfg() -> TrainConfig {
+    let mut cfg = TrainConfig::local(ArchSpec::small(), 4, 5, 0);
+    cfg.lr = 0.05;
+    cfg.epochs = 6;
+    cfg.train_rows = 1_024;
+    cfg.test_rows = 256;
+    cfg
+}
+
+#[test]
+fn pjrt_training_learns_end_to_end() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let cfg = ci_cfg();
+    let seeds = SeedTree::new(cfg.seed);
+    let (train, test) = Dataset::synthetic_pair(cfg.train_rows, cfg.test_rows, &seeds);
+
+    let rt = PjrtRuntime::new(dir).expect("runtime");
+    let mut pjrt = rt.dense_executor("small").expect("executor");
+    let out = train_local(&cfg, &mut pjrt, &train, &test, 10);
+    assert!(
+        out.report.mean_sampled_acc > 0.5,
+        "pjrt path failed to learn: {}",
+        out.report.mean_sampled_acc
+    );
+    let first = out.epochs.first().unwrap().val_loss;
+    let last = out.epochs.last().unwrap().val_loss;
+    assert!(last < first, "val loss {first} → {last}");
+
+    // The native oracle must tell the same story (same seeds, same data;
+    // trajectories diverge in ulps but the outcome band must agree).
+    let mut native = NativeExecutor::new(cfg.arch.clone(), cfg.batch, 500);
+    let out_native = train_local(&cfg, &mut native, &train, &test, 10);
+    let diff = (out.report.mean_sampled_acc - out_native.report.mean_sampled_acc).abs();
+    assert!(
+        diff < 0.15,
+        "pjrt {} vs native {} differ by {diff}",
+        out.report.mean_sampled_acc,
+        out_native.report.mean_sampled_acc
+    );
+}
+
+#[test]
+fn pjrt_mnistfc_one_epoch_smoke() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        return;
+    }
+    // The paper's architecture at m/n = 32, one epoch on a small slice:
+    // exercises the 266k-parameter artifact + the large sparse products.
+    let mut cfg = TrainConfig::local(ArchSpec::mnistfc(), 32, 10, 1);
+    cfg.lr = 0.1;
+    cfg.epochs = 1;
+    cfg.train_rows = 512;
+    cfg.test_rows = 256;
+    let seeds = SeedTree::new(cfg.seed);
+    let (train, test) = Dataset::synthetic_pair(cfg.train_rows, cfg.test_rows, &seeds);
+    let rt = PjrtRuntime::new(dir).expect("runtime");
+    let mut exec = rt.dense_executor("mnistfc").expect("executor");
+    let out = train_local(&cfg, &mut exec, &train, &test, 5);
+    assert_eq!(out.epochs.len(), 1);
+    assert!(out.epochs[0].train_loss.is_finite());
+    assert!(out.report.mean_sampled_acc > 0.05); // above random-garbage floor
+}

@@ -1,0 +1,165 @@
+//! Integration: the PJRT-loaded AOT artifacts must agree with the
+//! pure-Rust oracle, and the fused (Pallas-in-HLO) step must agree with
+//! the split path (rust spmv + dense artifact + rust spmv_t).
+//!
+//! Requires `make artifacts` to have run (skips with a message if not —
+//! CI always builds artifacts first via the Makefile ordering).
+
+use std::path::Path;
+
+use zampling::nn::{one_hot_into, ArchSpec};
+use zampling::rng::{Rng, SeedTree, Xoshiro256pp};
+use zampling::runtime::{fused_buffers, PjrtRuntime};
+use zampling::sparse::{csc_pad_width, QMatrix};
+use zampling::zampling::{DenseExecutor, NativeExecutor};
+
+fn runtime() -> Option<PjrtRuntime> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/manifest.json not found (run `make artifacts`)");
+        return None;
+    }
+    Some(PjrtRuntime::new(dir).expect("pjrt runtime"))
+}
+
+fn random_weights(arch: &ArchSpec, seed: u64) -> Vec<f32> {
+    let mut r = Xoshiro256pp::seed_from(seed);
+    let mut nrm = zampling::rng::Normal::new();
+    let mut w = vec![0.0f32; arch.num_params()];
+    for s in arch.slices() {
+        let std = (2.0 / s.fan_in as f64).sqrt();
+        for i in 0..s.w_len {
+            w[s.offset + i] = (nrm.sample(&mut r) * std) as f32;
+        }
+    }
+    w
+}
+
+fn random_batch(arch: &ArchSpec, rows: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut r = Xoshiro256pp::seed_from(seed);
+    let x: Vec<f32> = (0..rows * arch.input_dim()).map(|_| r.next_f32()).collect();
+    let labels: Vec<u8> = (0..rows).map(|_| r.next_below(10) as u8).collect();
+    let mut y = vec![0.0f32; rows * arch.output_dim()];
+    one_hot_into(&labels, arch.output_dim(), &mut y);
+    (x, y)
+}
+
+#[test]
+fn pjrt_train_step_matches_native_oracle() {
+    let Some(rt) = runtime() else { return };
+    let arch = ArchSpec::small();
+    let mut pjrt = rt.dense_executor("small").expect("dense executor");
+    let mut native = NativeExecutor::new(arch.clone(), pjrt.train_batch(), pjrt.eval_batch());
+
+    let w = random_weights(&arch, 1);
+    for rows in [pjrt.train_batch(), 17, 1] {
+        let (x, y) = random_batch(&arch, rows, 2 + rows as u64);
+        let mut g_pjrt = vec![0.0f32; arch.num_params()];
+        let mut g_native = vec![0.0f32; arch.num_params()];
+        let a = pjrt.train_step(&w, &x, &y, rows, &mut g_pjrt);
+        let b = native.train_step(&w, &x, &y, rows, &mut g_native);
+        assert!((a.loss - b.loss).abs() < 1e-4 * (1.0 + b.loss.abs()), "rows={rows}: loss {} vs {}", a.loss, b.loss);
+        assert_eq!(a.correct, b.correct, "rows={rows}");
+        let max_diff = g_pjrt
+            .iter()
+            .zip(&g_native)
+            .map(|(&p, &n)| (p - n).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 2e-4, "rows={rows}: max grad diff {max_diff}");
+    }
+}
+
+#[test]
+fn pjrt_eval_step_matches_native_oracle() {
+    let Some(rt) = runtime() else { return };
+    let arch = ArchSpec::small();
+    let mut pjrt = rt.dense_executor("small").expect("dense executor");
+    let mut native = NativeExecutor::new(arch.clone(), pjrt.train_batch(), pjrt.eval_batch());
+    let w = random_weights(&arch, 3);
+    for rows in [pjrt.eval_batch(), 123, 1] {
+        let (x, y) = random_batch(&arch, rows, 40 + rows as u64);
+        let a = pjrt.eval_step(&w, &x, &y, rows);
+        let b = native.eval_step(&w, &x, &y, rows);
+        assert!((a.loss - b.loss).abs() < 1e-4 * (1.0 + b.loss.abs()), "rows={rows}");
+        assert_eq!(a.correct, b.correct, "rows={rows}");
+    }
+}
+
+#[test]
+fn fused_step_matches_split_path() {
+    let Some(rt) = runtime() else { return };
+    let arch = ArchSpec::small();
+    let m = arch.num_params();
+    let (n, d) = (m / 8, 4);
+    let mut fused = rt.fused_executor("small", n, d).expect("fused executor");
+    assert_eq!(fused.c, csc_pad_width(m, n, d));
+
+    let seeds = SeedTree::new(77);
+    let q = QMatrix::generate(&arch, n, d, &seeds);
+    let csc = q.to_csc(Some(fused.c));
+    let (rid, rv, cid, cv) = fused_buffers(&q, &csc);
+
+    let mut rng = seeds.rng("mask", 0);
+    let z: Vec<f32> = (0..n).map(|_| rng.bernoulli(0.5) as u8 as f32).collect();
+    let rows = 32usize;
+    let (x, y) = random_batch(&arch, rows, 5);
+
+    let out = fused.step(&z, &rid, &rv, &cid, &cv, &x, &y, rows).expect("fused step");
+
+    // Split path: w = Qz in rust, dense PJRT step, g_s = Qᵀ g_w in rust.
+    let mut dense = rt.dense_executor("small").expect("dense executor");
+    let w = q.spmv(&z);
+    let mut g_w = vec![0.0f32; m];
+    let split = dense.train_step(&w, &x, &y, rows, &mut g_w);
+    let g_s = csc.spmv_t(&g_w);
+
+    assert!(
+        (out.loss - split.loss).abs() < 1e-4 * (1.0 + split.loss.abs()),
+        "loss {} vs {}",
+        out.loss,
+        split.loss
+    );
+    assert_eq!(out.correct, split.correct);
+    let max_diff = out
+        .grad_s
+        .iter()
+        .zip(&g_s)
+        .map(|(&a, &b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 2e-4, "max grad_s diff {max_diff}");
+}
+
+#[test]
+fn fused_resident_matches_literal_path() {
+    let Some(rt) = runtime() else { return };
+    let arch = ArchSpec::small();
+    let m = arch.num_params();
+    let (n, d) = (m / 8, 4);
+    let mut fused = rt.fused_executor("small", n, d).expect("fused executor");
+
+    let seeds = SeedTree::new(99);
+    let q = QMatrix::generate(&arch, n, d, &seeds);
+    let csc = q.to_csc(Some(fused.c));
+    let (rid, rv, cid, cv) = fused_buffers(&q, &csc);
+    let mut rng = seeds.rng("mask", 1);
+    let z: Vec<f32> = (0..n).map(|_| rng.bernoulli(0.3) as u8 as f32).collect();
+    let (x, y) = random_batch(&arch, 20, 7);
+
+    let lit = fused.step(&z, &rid, &rv, &cid, &cv, &x, &y, 20).expect("literal step");
+    fused.load_q(&rid, &rv, &cid, &cv).expect("load_q");
+    let res = fused.step_resident(&z, &x, &y, 20).expect("resident step");
+
+    assert_eq!(lit.loss, res.loss);
+    assert_eq!(lit.correct, res.correct);
+    assert_eq!(lit.grad_s, res.grad_s);
+}
+
+#[test]
+fn manifest_matches_archspec() {
+    let Some(rt) = runtime() else { return };
+    for (name, a) in &rt.manifest.archs {
+        let spec = ArchSpec::by_name(name).expect("arch known");
+        assert_eq!(a.num_params, spec.num_params(), "{name}");
+        assert_eq!(a.layers, spec.layers, "{name}");
+    }
+}

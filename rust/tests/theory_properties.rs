@@ -1,0 +1,316 @@
+//! Property-based tests over the coordinator invariants: sparse algebra,
+//! protocol encodings, probability-vector dynamics, and the §2 claims —
+//! driven by the in-tree `util::prop` harness (proptest is unavailable
+//! offline; see Cargo.toml).
+
+use zampling::comm::{arith, pack_bits, rle, unpack_bits, BitPack};
+use zampling::federated::protocol::{
+    decode_client, decode_server, encode_client, encode_server, ClientMsg, MaskCodec, ServerMsg,
+};
+use zampling::nn::ArchSpec;
+use zampling::rng::{Rng, SeedTree, Xoshiro256pp};
+use zampling::sparse::{csc_pad_width, QMatrix};
+use zampling::util::prop::for_all;
+use zampling::zampling::{clip01, ProbVector};
+
+#[derive(Debug)]
+struct QCase {
+    n: usize,
+    d: usize,
+    seed: u64,
+}
+
+fn q_case(g: &mut zampling::util::prop::Gen) -> QCase {
+    let n = g.usize_in(4, 600);
+    QCase { n, d: g.usize_in(1, n.min(8)), seed: g.seed() }
+}
+
+fn tiny_arch() -> ArchSpec {
+    ArchSpec::new("prop", &[12, 8, 4])
+}
+
+/// <u, Qv> == <Qᵀu, v> for every generated Q (adjoint identity).
+#[test]
+fn prop_spmv_adjoint_identity() {
+    for_all("spmv-adjoint", 40, 11, q_case, |c| {
+        let arch = tiny_arch();
+        let n = c.n.min(arch.num_params());
+        let d = c.d.min(n);
+        let q = QMatrix::generate(&arch, n, d, &SeedTree::new(c.seed));
+        let csc = q.to_csc(None);
+        let mut r = Xoshiro256pp::seed_from(c.seed ^ 1);
+        let u: Vec<f32> = (0..q.m).map(|_| r.next_f32() - 0.5).collect();
+        let v: Vec<f32> = (0..q.n).map(|_| r.next_f32() - 0.5).collect();
+        let qv = q.spmv(&v);
+        let qtu = csc.spmv_t(&u);
+        let lhs: f64 = u.iter().zip(&qv).map(|(&a, &b)| (a * b) as f64).sum();
+        let rhs: f64 = qtu.iter().zip(&v).map(|(&a, &b)| (a * b) as f64).sum();
+        if (lhs - rhs).abs() <= 1e-3 * (1.0 + lhs.abs()) {
+            Ok(())
+        } else {
+            Err(format!("<u,Qv>={lhs} != <Qᵀu,v>={rhs}"))
+        }
+    });
+}
+
+/// Bit-mask spmv == float-mask spmv for every Q and mask.
+#[test]
+fn prop_spmv_bits_equals_float() {
+    for_all("spmv-bits", 30, 13, q_case, |c| {
+        let arch = tiny_arch();
+        let n = c.n.min(arch.num_params());
+        let d = c.d.min(n);
+        let q = QMatrix::generate(&arch, n, d, &SeedTree::new(c.seed));
+        let mut r = Xoshiro256pp::seed_from(c.seed ^ 2);
+        let mask: Vec<bool> = (0..n).map(|_| r.bernoulli(0.5)).collect();
+        let zf: Vec<f32> = mask.iter().map(|&b| b as u8 as f32).collect();
+        let bits = pack_bits(&mask);
+        let mut w_bits = vec![0.0f32; q.m];
+        q.spmv_bits_into(&bits, &mut w_bits);
+        // allclose: the bits kernel reassociates the sum (dual accums).
+        if q
+            .spmv(&zf)
+            .iter()
+            .zip(&w_bits)
+            .all(|(a, b)| (a - b).abs() <= 1e-6 * (1.0 + a.abs()))
+        {
+            Ok(())
+        } else {
+            Err("bitmask spmv diverged from float spmv".into())
+        }
+    });
+}
+
+/// Generated Q always satisfies the structural contract: d distinct
+/// in-range indices per row; realized max column degree ≤ csc_pad_width.
+#[test]
+fn prop_q_structure_and_pad_bound() {
+    for_all("q-structure", 40, 17, q_case, |c| {
+        let arch = tiny_arch();
+        let n = c.n.min(arch.num_params());
+        let d = c.d.min(n);
+        let q = QMatrix::generate(&arch, n, d, &SeedTree::new(c.seed));
+        for i in 0..q.m {
+            let (ids, _) = q.row(i);
+            let mut sorted: Vec<u32> = ids.to_vec();
+            sorted.sort_unstable();
+            sorted.dedup();
+            if sorted.len() != d {
+                return Err(format!("row {i} has duplicate column indices"));
+            }
+            if sorted.last().map(|&j| j as usize >= n).unwrap_or(false) {
+                return Err(format!("row {i} index out of range"));
+            }
+        }
+        let csc = q.to_csc(None);
+        let max_deg = *csc.degrees.iter().max().unwrap_or(&0) as usize;
+        let pad = csc_pad_width(q.m, n, d);
+        if max_deg <= pad {
+            Ok(())
+        } else {
+            Err(format!("max degree {max_deg} exceeds pad bound {pad}"))
+        }
+    });
+}
+
+/// pack/unpack and all three codecs are lossless on arbitrary masks.
+#[test]
+fn prop_codecs_roundtrip() {
+    for_all(
+        "codec-roundtrip",
+        60,
+        19,
+        |g| {
+            let n = g.usize_in(0, 3000);
+            let density = g.f64_in(0.0, 1.0);
+            let mut r = Xoshiro256pp::seed_from(g.seed());
+            let mask: Vec<bool> = (0..n).map(|_| r.bernoulli(density)).collect();
+            mask
+        },
+        |mask| {
+            let n = mask.len();
+            if unpack_bits(&pack_bits(mask), n) != *mask {
+                return Err("pack_bits roundtrip".into());
+            }
+            if BitPack::decode(&BitPack::encode(mask), n) != *mask {
+                return Err("BitPack roundtrip".into());
+            }
+            if rle::decode(&rle::encode(mask), n) != *mask {
+                return Err("rle roundtrip".into());
+            }
+            if arith::decode(&arith::encode(mask), n) != *mask {
+                return Err("arith roundtrip".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Protocol frames roundtrip for random payloads and both codecs.
+#[test]
+fn prop_protocol_roundtrip() {
+    for_all(
+        "protocol-roundtrip",
+        40,
+        23,
+        |g| {
+            let n = g.usize_in(1, 2000);
+            let mut r = Xoshiro256pp::seed_from(g.seed());
+            let probs: Vec<f32> = (0..n).map(|_| r.next_f32()).collect();
+            let mask: Vec<bool> = (0..n).map(|_| r.bernoulli(0.3)).collect();
+            let round = g.usize_in(0, 1000) as u32;
+            let client = g.usize_in(0, 64) as u32;
+            let arith = g.bool_p(0.5);
+            (probs, mask, round, client, arith)
+        },
+        |(probs, mask, round, client, use_arith)| {
+            let smsg = ServerMsg::Round { round: *round, probs: probs.clone() };
+            if decode_server(&encode_server(&smsg)).map_err(|e| e.to_string())? != smsg {
+                return Err("server msg roundtrip".into());
+            }
+            let codec = if *use_arith { MaskCodec::Arithmetic } else { MaskCodec::Raw };
+            let cmsg = ClientMsg::Mask {
+                round: *round,
+                client: *client,
+                n: mask.len(),
+                mask: mask.clone(),
+            };
+            if decode_client(&encode_client(&cmsg, codec)).map_err(|e| e.to_string())? != cmsg {
+                return Err("client msg roundtrip".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// ProbVector dynamics: probabilities remain in [0,1] under arbitrary
+/// update sequences, the clip matches f(x), saturated entries gate to 0.
+#[test]
+fn prop_probvector_invariants() {
+    for_all(
+        "probvector",
+        50,
+        29,
+        |g| {
+            let n = g.usize_in(1, 200);
+            let steps = g.usize_in(1, 20);
+            (n, steps, g.seed())
+        },
+        |&(n, steps, seed)| {
+            let mut r = Xoshiro256pp::seed_from(seed);
+            let mut pv = ProbVector::init_uniform(n, &mut r);
+            for _ in 0..steps {
+                let delta: Vec<f32> = (0..n).map(|_| (r.next_f32() - 0.5) * 2.0).collect();
+                pv.apply_update(&delta);
+                if !pv.probs().iter().all(|&p| (0.0..=1.0).contains(&p)) {
+                    return Err("p left [0,1]".into());
+                }
+                // scores were folded back onto probs
+                if pv.scores() != pv.probs() {
+                    return Err("score/prob identification broken".into());
+                }
+                let mut g: Vec<f32> = vec![1.0; n];
+                pv.gate_gradient(&mut g);
+                for (i, (&gi, &pi)) in g.iter().zip(pv.probs()).enumerate() {
+                    let saturated = pi <= 0.0 || pi >= 1.0;
+                    if saturated && gi != 0.0 {
+                        return Err(format!("entry {i} saturated but not gated"));
+                    }
+                    if !saturated && gi != 1.0 {
+                        return Err(format!("entry {i} interior but gated"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// clip01 is the paper's f: idempotent, monotone, identity on [0,1].
+#[test]
+fn prop_clip_is_papers_f() {
+    for_all(
+        "clip01",
+        100,
+        31,
+        |g| (g.f64_in(-3.0, 3.0) as f32, g.f64_in(-3.0, 3.0) as f32),
+        |&(a, b)| {
+            if clip01(clip01(a)) != clip01(a) {
+                return Err("not idempotent".into());
+            }
+            if (a <= b) && clip01(a) > clip01(b) {
+                return Err("not monotone".into());
+            }
+            if (0.0..=1.0).contains(&a) && clip01(a) != a {
+                return Err("not identity on [0,1]".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Server aggregation: p(t+1) is the exact mean of the client masks and
+/// therefore in [0,1].
+#[test]
+fn prop_server_aggregation_mean() {
+    for_all(
+        "server-mean",
+        40,
+        37,
+        |g| {
+            let n = g.usize_in(1, 300);
+            let k = g.usize_in(1, 12);
+            (n, k, g.seed())
+        },
+        |&(n, k, seed)| {
+            use zampling::federated::Server;
+            let mut r = Xoshiro256pp::seed_from(seed);
+            let mut server = Server::new(vec![0.5; n]);
+            let mut expected = vec![0.0f32; n];
+            for _ in 0..k {
+                let mask: Vec<bool> = (0..n).map(|_| r.bernoulli(0.5)).collect();
+                for (e, &b) in expected.iter_mut().zip(&mask) {
+                    *e += b as u8 as f32;
+                }
+                server.receive_mask(&pack_bits(&mask));
+            }
+            server.aggregate();
+            for (i, (&got, &sum)) in server.probs.iter().zip(&expected).enumerate() {
+                let want = sum / k as f32;
+                if (got - want).abs() > 1e-6 {
+                    return Err(format!("entry {i}: {got} != mean {want}"));
+                }
+                if !(0.0..=1.0).contains(&got) {
+                    return Err("mean left [0,1]".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Arithmetic coder rate stays near the empirical entropy.
+#[test]
+fn prop_arith_rate_bounded() {
+    for_all(
+        "arith-rate",
+        25,
+        41,
+        |g| {
+            let n = g.usize_in(2_000, 30_000);
+            let q = g.f64_in(0.02, 0.98);
+            (n, q, g.seed())
+        },
+        |&(n, q, seed)| {
+            let mut r = Xoshiro256pp::seed_from(seed);
+            let mask: Vec<bool> = (0..n).map(|_| r.bernoulli(q)).collect();
+            let emp = mask.iter().filter(|&&b| b).count() as f64 / n as f64;
+            let rate = arith::bits_per_entry(&mask);
+            let h = arith::binary_entropy(emp);
+            if rate > h * 1.08 + 64.0 / n as f64 + 0.02 {
+                return Err(format!("rate {rate:.4} ≫ H {h:.4} (q={q:.2}, n={n})"));
+            }
+            Ok(())
+        },
+    );
+}
