@@ -1,88 +1,117 @@
-//! Perf bench (end-to-end): one federated round and one training epoch
-//! through both backends (native oracle and, when artifacts exist, the
-//! PJRT path), plus the fused-vs-split step comparison.  The coordination
-//! share of a round (everything except the dense step) is the L3 claim
-//! DESIGN.md §Perf makes: < 10%.
+//! Perf bench (end-to-end): federated rounds (serial vs pool-parallel
+//! client loop), dense train steps (blocked GEMM vs the retained naive
+//! kernels), and — with the `pjrt` feature and artifacts — the
+//! fused-vs-split step comparison.  The coordination share of a round
+//! (everything except the dense step) is the L3 claim DESIGN.md §Perf
+//! makes: < 10%.  Writes the `round` section of the repo-root
+//! `BENCH_perf.json`, including the headline serial→parallel round
+//! speedup at MnistFc scale that gates this PR's acceptance.
 
-use std::path::Path;
-
-use zampling::config::TrainConfig;
+use zampling::config::FedConfig;
 use zampling::data::Dataset;
 use zampling::experiments::federated::{fed_config, load_fed_data};
 use zampling::experiments::Scale;
-use zampling::federated::run_federated;
-use zampling::nn::ArchSpec;
+use zampling::federated::{run_federated, run_federated_parallel};
+use zampling::nn::{gemm, ArchSpec};
 use zampling::rng::{Rng, SeedTree, Xoshiro256pp};
-use zampling::runtime::{fused_buffers, PjrtRuntime};
-use zampling::sparse::{csc_pad_width, QMatrix};
-use zampling::util::bench::Bencher;
-use zampling::zampling::{DenseExecutor, LocalZampling, NativeExecutor};
+use zampling::util::bench::{bench_json_path, update_bench_json, Bencher, Stats};
+use zampling::zampling::{LocalZampling, NativeExecutor};
+
+/// MnistFc-scale config kept small enough to iterate: 4 clients, one
+/// round, 2048 synthetic rows, n = m/32, d = 10 (the paper's density).
+fn mnistfc_cfg() -> (FedConfig, Vec<Dataset>, Dataset) {
+    let mut cfg = fed_config(32, Scale::Ci);
+    cfg.train.arch = ArchSpec::mnistfc();
+    cfg.train.n = ArchSpec::mnistfc().num_params() / 32;
+    cfg.train.d = 10;
+    cfg.train.train_rows = 2_048;
+    cfg.train.test_rows = 256;
+    cfg.clients = 4;
+    cfg.rounds = 1;
+    cfg.local_epochs = 1;
+    let (shards, test) = load_fed_data(&cfg);
+    (cfg, shards, test)
+}
 
 fn main() {
     let b = Bencher::heavy();
+    let mut all: Vec<Stats> = Vec::new();
 
-    // --- one federated round, native backend ---
+    // --- one federated round, native backend, small arch ---
     let mut cfg = fed_config(8, Scale::Ci);
     cfg.rounds = 1;
     let (shards, test) = load_fed_data(&cfg);
-    b.run("round/native m/n=8 4 clients", || {
+    all.push(b.run("round/native m/n=8 4 clients", || {
         let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500);
         std::hint::black_box(run_federated(&cfg, &mut exec, &shards, &test, 1, 1));
-    });
+    }));
+    all.push(b.run("round/native-par m/n=8 4 clients", || {
+        std::hint::black_box(run_federated_parallel(&cfg, &shards, &test, 1, 1, 500));
+    }));
 
-    // --- single train steps: native vs pjrt vs fused ---
+    // --- the acceptance headline: serial vs parallel round, MnistFc ---
+    let (mcfg, mshards, mtest) = mnistfc_cfg();
+    let heavy = Bencher { warmup_iters: 1, min_iters: 3, max_iters: 10, target: std::time::Duration::from_secs(6) };
+    let serial = heavy.run("round/mnistfc serial 4 clients", || {
+        let mut exec = NativeExecutor::new(mcfg.train.arch.clone(), mcfg.train.batch, 256);
+        std::hint::black_box(run_federated(&mcfg, &mut exec, &mshards, &mtest, 0, usize::MAX));
+    });
+    let parallel = heavy.run("round/mnistfc parallel 4 clients", || {
+        std::hint::black_box(run_federated_parallel(&mcfg, &mshards, &mtest, 0, usize::MAX, 256));
+    });
+    let round_speedup = serial.mean_secs() / parallel.mean_secs();
+    println!("\nmnistfc round: serial/parallel speedup {round_speedup:.2}x");
+    all.push(serial);
+    all.push(parallel);
+
+    // --- dense step: blocked GEMM vs the retained naive kernels ---
+    // First MnistFc layer at batch 128 — the dominant product of a step.
+    // (Plain `run`: the bytes/GB-s annotation is reserved for real byte
+    // traffic; GEMM rates are reported as GFLOP/s in `derived`.)
+    let (bm, bk, bn) = (128usize, 784usize, 300usize);
+    let mut rng = Xoshiro256pp::seed_from(4);
+    let a: Vec<f32> = (0..bm * bk).map(|_| rng.next_f32()).collect();
+    let wmat: Vec<f32> = (0..bk * bn).map(|_| rng.next_f32() - 0.5).collect();
+    let bias: Vec<f32> = (0..bn).map(|_| rng.next_f32() - 0.5).collect();
+    let mut out = vec![0.0f32; bm * bn];
+    let gflop = (2 * bm * bk * bn) as f64 / 1e9;
+    let naive = b.run("gemm/naive   fwd 128x784x300", || {
+        gemm::naive::gemm_bias_act(&a, &wmat, Some(&bias), &mut out, bm, bk, bn, true);
+        std::hint::black_box(&out);
+    });
+    let blocked = b.run("gemm/blocked fwd 128x784x300", || {
+        gemm::gemm_bias_act(&a, &wmat, Some(&bias), &mut out, bm, bk, bn, true);
+        std::hint::black_box(&out);
+    });
+    let blocked_par = b.run("gemm/blocked-par fwd 128x784x300", || {
+        gemm::gemm_bias_act_par(&a, &wmat, Some(&bias), &mut out, bm, bk, bn, true);
+        std::hint::black_box(&out);
+    });
+    let gemm_speedup = naive.mean_secs() / blocked_par.mean_secs();
+    let gemm_gflops_naive = gflop / naive.mean_secs();
+    let gemm_gflops_blocked_par = gflop / blocked_par.mean_secs();
+    println!(
+        "gemm fwd: naive {gemm_gflops_naive:.2} GFLOP/s → blocked-par \
+         {gemm_gflops_blocked_par:.2} GFLOP/s ({gemm_speedup:.2}x)"
+    );
+    all.push(naive);
+    all.push(blocked);
+    all.push(blocked_par);
+
+    // --- single train step through the trainer (small arch) ---
     let arch = ArchSpec::small();
-    let tc = TrainConfig::local(arch.clone(), 8, 4, 0);
+    let tc = zampling::config::TrainConfig::local(arch.clone(), 8, 4, 0);
     let seeds = SeedTree::new(0);
     let (train, _) = Dataset::synthetic_pair(512, 64, &seeds);
     let mut state = LocalZampling::new(&tc, &seeds);
     let mut native = NativeExecutor::new(arch.clone(), 128, 500);
     let batch: Vec<f32> = train.x[..128 * 784].to_vec();
     let labels: Vec<u8> = train.y[..128].to_vec();
-    b.run("step/native small batch=128", || {
+    all.push(b.run("step/native small batch=128", || {
         std::hint::black_box(state.step_batch(&mut native, &batch, &labels));
-    });
+    }));
 
-    if let Ok(rt) = PjrtRuntime::new(Path::new("artifacts")) {
-        let mut pjrt = rt.dense_executor("small").expect("pjrt");
-        let mut state2 = LocalZampling::new(&tc, &seeds);
-        b.run("step/pjrt   small batch=128", || {
-            std::hint::black_box(state2.step_batch(&mut pjrt, &batch, &labels));
-        });
-
-        // Fused step (Pallas kernels inside the artifact) vs split path.
-        let m = arch.num_params();
-        let (n, d) = (m / 8, 4);
-        let mut fused = rt.fused_executor("small", n, d).expect("fused");
-        let q = QMatrix::generate(&arch, n, d, &seeds);
-        let csc = q.to_csc(Some(csc_pad_width(m, n, d)));
-        let (rid, rv, cid, cv) = fused_buffers(&q, &csc);
-        let mut rng = Xoshiro256pp::seed_from(5);
-        let z: Vec<f32> = (0..n).map(|_| rng.bernoulli(0.5) as u8 as f32).collect();
-        let mut y1h = vec![0.0f32; 128 * 10];
-        zampling::nn::one_hot_into(&labels, 10, &mut y1h);
-        b.run("step/fused  small batch=128 (z->grad_s)", || {
-            std::hint::black_box(
-                fused.step(&z, &rid, &rv, &cid, &cv, &batch, &y1h, 128).expect("fused step"),
-            );
-        });
-
-        // Device-resident Q: upload once, ship only z/x/y per step.
-        fused.load_q(&rid, &rv, &cid, &cv).expect("load_q");
-        b.run("step/fused-resident small batch=128", || {
-            std::hint::black_box(fused.step_resident(&z, &batch, &y1h, 128).expect("resident"));
-        });
-
-        // Split equivalent: rust spmv + pjrt dense + rust spmv_t.
-        let mut g_w = vec![0.0f32; m];
-        b.run("step/split  small batch=128 (z->grad_s)", || {
-            let w = q.spmv(&z);
-            pjrt.train_step(&w, &batch, &y1h, 128, &mut g_w);
-            std::hint::black_box(csc.spmv_t(&g_w));
-        });
-    } else {
-        println!("(artifacts not built; pjrt/fused rows skipped)");
-    }
+    pjrt_benches(&b, &arch, &tc, &seeds, &batch, &labels);
 
     // --- coordination share: round minus dense-step time ---
     let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500);
@@ -108,4 +137,87 @@ fn main() {
         dense * 1e3,
         ((total - dense) / total * 100.0).max(0.0)
     );
+    all.push(step_stats);
+    all.push(round_stats);
+
+    let path = bench_json_path();
+    let derived = [
+        ("round_speedup_mnistfc_par_vs_serial", round_speedup),
+        ("gemm_fwd_speedup_blocked_par_vs_naive", gemm_speedup),
+        ("gemm_fwd_gflops_naive", gemm_gflops_naive),
+        ("gemm_fwd_gflops_blocked_par", gemm_gflops_blocked_par),
+    ];
+    match update_bench_json(&path, "round", &all, &derived) {
+        Ok(()) => println!("wrote section 'round' to {}", path.display()),
+        Err(e) => eprintln!("failed to write {}: {e}", path.display()),
+    }
+}
+
+/// PJRT/fused comparisons — only with `--features pjrt` and artifacts.
+#[cfg(feature = "pjrt")]
+fn pjrt_benches(
+    b: &Bencher,
+    arch: &ArchSpec,
+    tc: &zampling::config::TrainConfig,
+    seeds: &SeedTree,
+    batch: &[f32],
+    labels: &[u8],
+) {
+    use std::path::Path;
+    use zampling::runtime::{fused_buffers, PjrtRuntime};
+    use zampling::sparse::{csc_pad_width, QMatrix};
+    use zampling::zampling::DenseExecutor;
+
+    let Ok(rt) = PjrtRuntime::new(Path::new("artifacts")) else {
+        println!("(artifacts not built; pjrt/fused rows skipped)");
+        return;
+    };
+    let mut pjrt = rt.dense_executor("small").expect("pjrt");
+    let mut state2 = LocalZampling::new(tc, seeds);
+    b.run("step/pjrt   small batch=128", || {
+        std::hint::black_box(state2.step_batch(&mut pjrt, batch, labels));
+    });
+
+    // Fused step (Pallas kernels inside the artifact) vs split path.
+    let m = arch.num_params();
+    let (n, d) = (m / 8, 4);
+    let mut fused = rt.fused_executor("small", n, d).expect("fused");
+    let q = QMatrix::generate(arch, n, d, seeds);
+    let csc = q.to_csc(Some(csc_pad_width(m, n, d)));
+    let (rid, rv, cid, cv) = fused_buffers(&q, &csc);
+    let mut rng = Xoshiro256pp::seed_from(5);
+    let z: Vec<f32> = (0..n).map(|_| rng.bernoulli(0.5) as u8 as f32).collect();
+    let mut y1h = vec![0.0f32; 128 * 10];
+    zampling::nn::one_hot_into(labels, 10, &mut y1h);
+    b.run("step/fused  small batch=128 (z->grad_s)", || {
+        std::hint::black_box(
+            fused.step(&z, &rid, &rv, &cid, &cv, batch, &y1h, 128).expect("fused step"),
+        );
+    });
+
+    // Device-resident Q: upload once, ship only z/x/y per step.
+    fused.load_q(&rid, &rv, &cid, &cv).expect("load_q");
+    b.run("step/fused-resident small batch=128", || {
+        std::hint::black_box(fused.step_resident(&z, batch, &y1h, 128).expect("resident"));
+    });
+
+    // Split equivalent: rust spmv + pjrt dense + rust spmv_t.
+    let mut g_w = vec![0.0f32; m];
+    b.run("step/split  small batch=128 (z->grad_s)", || {
+        let w = q.spmv(&z);
+        pjrt.train_step(&w, batch, &y1h, 128, &mut g_w);
+        std::hint::black_box(csc.spmv_t(&g_w));
+    });
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_benches(
+    _b: &Bencher,
+    _arch: &ArchSpec,
+    _tc: &zampling::config::TrainConfig,
+    _seeds: &SeedTree,
+    _batch: &[f32],
+    _labels: &[u8],
+) {
+    println!("(built without the 'pjrt' feature; pjrt/fused rows skipped)");
 }

@@ -1,16 +1,18 @@
 //! Perf bench (L3 hot path): sparse products `w = Qz` and `g_s = Qᵀ g_w`
-//! at the paper's flagship sizes — serial vs parallel vs the bitmask
-//! specialization.  Feeds EXPERIMENTS.md §Perf.
+//! at the paper's flagship sizes — serial vs pool-parallel vs the bitmask
+//! specialization.  Feeds EXPERIMENTS.md §Perf and writes the `spmv`
+//! section of the repo-root `BENCH_perf.json` baseline.
 
 use zampling::nn::ArchSpec;
 use zampling::rng::{Rng, SeedTree, Xoshiro256pp};
-use zampling::sparse::{spmv_par_into, spmv_t_par_into, QMatrix};
-use zampling::util::bench::Bencher;
+use zampling::sparse::{spmv_bits_par_into, spmv_par_into, spmv_t_par_into, QMatrix};
+use zampling::util::bench::{bench_json_path, update_bench_json, Bencher, Stats};
 
 fn main() {
     let arch = ArchSpec::mnistfc();
     let m = arch.num_params();
     let b = Bencher::default();
+    let mut all: Vec<Stats> = Vec::new();
     for (factor, d) in [(8usize, 10usize), (32, 10)] {
         let n = m / factor;
         let q = QMatrix::generate(&arch, n, d, &SeedTree::new(1));
@@ -29,30 +31,40 @@ fn main() {
         // 8 bytes per stored entry (id + value) is the streamed traffic.
         let nnz_bytes = (q.nnz() * 8) as u64;
 
-        b.run_bytes(&format!("spmv/serial m/n={factor} d={d}"), nnz_bytes, || {
+        all.push(b.run_bytes(&format!("spmv/serial m/n={factor} d={d}"), nnz_bytes, || {
             q.spmv_into(&z, &mut w);
             std::hint::black_box(&w);
-        });
-        b.run_bytes(&format!("spmv/bits   m/n={factor} d={d}"), nnz_bytes, || {
+        }));
+        all.push(b.run_bytes(&format!("spmv/bits   m/n={factor} d={d}"), nnz_bytes, || {
             q.spmv_bits_into(&bits, &mut w);
             std::hint::black_box(&w);
-        });
-        b.run_bytes(&format!("spmv/par    m/n={factor} d={d}"), nnz_bytes, || {
+        }));
+        all.push(b.run_bytes(&format!("spmv/par    m/n={factor} d={d}"), nnz_bytes, || {
             spmv_par_into(&q, &z, &mut w);
             std::hint::black_box(&w);
-        });
-        b.run_bytes(&format!("spmv_t/serial m/n={factor} d={d}"), nnz_bytes, || {
+        }));
+        all.push(b.run_bytes(&format!("spmv/bits-par m/n={factor} d={d}"), nnz_bytes, || {
+            spmv_bits_par_into(&q, &bits, &mut w);
+            std::hint::black_box(&w);
+        }));
+        all.push(b.run_bytes(&format!("spmv_t/serial m/n={factor} d={d}"), nnz_bytes, || {
             csc.spmv_t_into(&g, &mut gs);
             std::hint::black_box(&gs);
-        });
-        b.run_bytes(&format!("spmv_t/par    m/n={factor} d={d}"), nnz_bytes, || {
+        }));
+        all.push(b.run_bytes(&format!("spmv_t/par    m/n={factor} d={d}"), nnz_bytes, || {
             spmv_t_par_into(&csc, &g, &mut gs);
             std::hint::black_box(&gs);
-        });
+        }));
     }
 
     // Q generation cost (initialisation, §2.2: O(md)).
-    b.run("qgen/mnistfc n=m/32 d=10", || {
+    all.push(b.run("qgen/mnistfc n=m/32 d=10", || {
         std::hint::black_box(QMatrix::generate(&arch, m / 32, 10, &SeedTree::new(3)));
-    });
+    }));
+
+    let path = bench_json_path();
+    match update_bench_json(&path, "spmv", &all, &[]) {
+        Ok(()) => println!("\nwrote section 'spmv' to {}", path.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", path.display()),
+    }
 }

@@ -20,7 +20,7 @@ pub mod transport;
 
 mod sim;
 
-pub use sim::{run_federated, FedOutcome};
+pub use sim::{run_federated, run_federated_parallel, FedOutcome};
 
 use crate::comm::{pack_bits, unpack_bits};
 

@@ -5,7 +5,8 @@
 //! The byte counts the ledger records are exactly `frame_len(msg)`.
 
 use crate::comm::{arith, BitPack, FloatVec};
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::Result;
+use crate::{anyhow, bail};
 
 /// How the client mask is encoded on the uplink.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -1,21 +1,34 @@
 //! In-process federated simulator — the driver behind §3.2 / Fig. 4 /
 //! Table 1.
 //!
-//! Clients run sequentially in one thread (PJRT executors are not `Send`)
-//! but every message still round-trips through the wire encoder, so the
-//! ledger's byte counts are the real protocol costs, bit-for-bit equal to
-//! what the TCP transport ships.
+//! Two drivers share one per-client round body ([`client_round`]), so
+//! their numerics are identical by construction:
+//!
+//! * [`run_federated`] — clients run sequentially through one shared
+//!   executor.  Works with any backend, including PJRT executors, whose
+//!   handles are not `Send`.
+//! * [`run_federated_parallel`] — clients shard across the process pool
+//!   (`runtime::pool`), one `Native` executor per worker lane.  Per-client
+//!   seed streams, the k-ordered f64 loss reduction, and the k-ordered
+//!   mask aggregation are all preserved, so the result is **byte-identical
+//!   to the sequential run** (asserted by the tests here); only the
+//!   wall-clock changes.
+//!
+//! Every message still round-trips through the wire encoder in both
+//! drivers, so the ledger's byte counts are the real protocol costs,
+//! bit-for-bit equal to what the TCP transport ships.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::comm::{CommLedger, RoundCost};
 use crate::config::FedConfig;
 use crate::data::Dataset;
 use crate::metrics::{RoundRecord, RunLog};
 use crate::nn::one_hot_into;
-use crate::rng::SeedTree;
-use crate::sparse::QMatrix;
-use crate::zampling::{evaluate, DenseExecutor, LocalZampling, ProbVector};
+use crate::rng::{SeedTree, Xoshiro256pp};
+use crate::runtime::pool;
+use crate::sparse::{CscView, QMatrix};
+use crate::zampling::{evaluate, DenseExecutor, LocalZampling, NativeExecutor, ProbVector};
 
 use super::protocol::{
     decode_client, decode_server, encode_client, encode_server, ClientMsg, MaskCodec, ServerMsg,
@@ -29,7 +42,146 @@ pub struct FedOutcome {
     pub final_probs: Vec<f32>,
 }
 
-/// Run Federated Zampling per the config.
+/// What one client contributes to a round (reduced in client order by
+/// both drivers so f64 summation order never changes).
+struct ClientRound {
+    loss: f64,
+    down_bits: u64,
+    up_bits: u64,
+    packed_mask: Vec<u64>,
+}
+
+/// Shared per-client round body: decode the broadcast, local
+/// training-by-sampling, sample and encode the uplink mask.
+#[allow(clippy::too_many_arguments)]
+fn client_round(
+    cfg: &FedConfig,
+    client: &mut LocalZampling,
+    exec: &mut dyn DenseExecutor,
+    shard: &Dataset,
+    seeds: &SeedTree,
+    round: usize,
+    round_msg: &[u8],
+    codec: MaskCodec,
+    k: usize,
+) -> ClientRound {
+    // 1. Receive p(t) — every client decodes its own frame copy.
+    let msg = decode_server(round_msg).expect("round frame");
+    let ServerMsg::Round { probs, .. } = msg else { unreachable!() };
+    let down_bits = round_msg.len() as u64 * 8;
+
+    // 2. Client local training-by-sampling.
+    client.pv.set_probs(&probs);
+    client.reset_optimizer(&cfg.train);
+    let mut loss = 0.0;
+    for _ in 0..cfg.local_epochs {
+        loss = client.run_epoch(exec, shard, cfg.train.batch);
+    }
+
+    // 3. Sample z_new ~ Bern(f(s)) and uplink the mask.
+    let mut mask_rng = seeds.subtree("client", k as u64).rng("uplink-mask", round as u64);
+    let mut mask = Vec::new();
+    client.pv.sample_mask(&mut mask_rng, &mut mask);
+    let frame = encode_client(
+        &ClientMsg::Mask { round: round as u32, client: k as u32, n: mask.len(), mask },
+        codec,
+    );
+    let up_bits = frame.len() as u64 * 8;
+    let ClientMsg::Mask { mask, .. } = decode_client(&frame).expect("mask frame") else {
+        unreachable!()
+    };
+    ClientRound { loss, down_bits, up_bits, packed_mask: pack_client_mask(&mask) }
+}
+
+/// Shared-seed setup: `Q`, the server's `p(0)`, and the client states.
+fn init_clients(
+    cfg: &FedConfig,
+    seeds: &SeedTree,
+) -> (Arc<QMatrix>, Arc<CscView>, Server, Vec<LocalZampling>) {
+    // Shared-seed initialization: every party derives the same Q; the
+    // server owns p(0) ~ U(0,1)^n from the shared stream.
+    let q = Arc::new(QMatrix::generate(&cfg.train.arch, cfg.train.n, cfg.train.d, seeds));
+    let csc = Arc::new(q.to_csc(None));
+    let mut init_rng = seeds.rng("p-init", 0);
+    let server =
+        Server::new(ProbVector::init_uniform(cfg.train.n, &mut init_rng).probs().to_vec());
+
+    // Client states: local (Q, p) + a per-client seed subtree.
+    let clients: Vec<LocalZampling> = (0..cfg.clients)
+        .map(|k| {
+            let sub = seeds.subtree("client", k as u64);
+            LocalZampling::from_parts(
+                &cfg.train,
+                Arc::clone(&q),
+                Arc::clone(&csc),
+                ProbVector::from_probs(server.probs.clone()),
+                &sub,
+            )
+        })
+        .collect();
+    (q, csc, server, clients)
+}
+
+/// Shared round tail, part 1: fold the per-client results into the
+/// server **in client order** (f64 summation order fixed), close the
+/// aggregation, and record the ledger row.  Returns
+/// `(up_bits, down_bits, round_loss)`.
+fn reduce_round(
+    outs: Vec<ClientRound>,
+    server: &mut Server,
+    ledger: &mut CommLedger,
+    clients: u32,
+) -> (u64, u64, f64) {
+    let (mut up_bits, mut down_bits, mut round_loss) = (0u64, 0u64, 0.0f64);
+    for out in outs {
+        down_bits += out.down_bits;
+        up_bits += out.up_bits;
+        round_loss += out.loss;
+        server.receive_mask(&out.packed_mask);
+    }
+    server.aggregate();
+    ledger.record(RoundCost { uplink_bits: up_bits, downlink_bits: down_bits, clients });
+    (up_bits, down_bits, round_loss)
+}
+
+/// Shared round tail, part 2: evaluate the server's new `p` and push the
+/// round record when the cadence (or the final round) says so.  Keeping
+/// this in one place is what makes the two drivers' logs identical by
+/// construction.
+#[allow(clippy::too_many_arguments)]
+fn eval_and_log_round(
+    cfg: &FedConfig,
+    exec: &mut dyn DenseExecutor,
+    q: &QMatrix,
+    server: &Server,
+    test: &Dataset,
+    test_y1h: &[f32],
+    eval_samples: usize,
+    eval_every: usize,
+    eval_rng: &mut Xoshiro256pp,
+    log: &mut RunLog,
+    round: usize,
+    round_loss: f64,
+    up_bits: u64,
+    down_bits: u64,
+) {
+    if round % eval_every != 0 && round + 1 != cfg.rounds {
+        return;
+    }
+    let pv = ProbVector::from_probs(server.probs.clone());
+    let rep = evaluate(exec, q, &pv, &test.x, test_y1h, test.len(), eval_samples, eval_rng);
+    log.push(RoundRecord {
+        round,
+        mean_sampled_acc: rep.mean_sampled_acc,
+        sampled_acc_std: rep.sampled_acc_std,
+        expected_acc: rep.expected_acc,
+        train_loss: round_loss / cfg.clients as f64,
+        uplink_bits: up_bits,
+        downlink_bits: down_bits,
+    });
+}
+
+/// Run Federated Zampling per the config (sequential client loop).
 ///
 /// * `exec` — the dense executor shared by all (simulated) clients.
 /// * `shards` — per-client training shards (from `Dataset::partition_iid`).
@@ -47,30 +199,10 @@ pub fn run_federated(
     assert_eq!(shards.len(), cfg.clients, "need one shard per client");
     let seeds = SeedTree::new(cfg.train.seed);
     let codec = if cfg.entropy_code_uplink { MaskCodec::Arithmetic } else { MaskCodec::Raw };
-
-    // Shared-seed initialization: every party derives the same Q; the
-    // server owns p(0) ~ U(0,1)^n from the shared stream.
-    let q = Arc::new(QMatrix::generate(&cfg.train.arch, cfg.train.n, cfg.train.d, &seeds));
-    let csc = Arc::new(q.to_csc(None));
-    let mut init_rng = seeds.rng("p-init", 0);
-    let mut server = Server::new(ProbVector::init_uniform(cfg.train.n, &mut init_rng).probs().to_vec());
-
-    // Client states: local (Q, p) + a per-client seed subtree.
-    let mut clients: Vec<LocalZampling> = (0..cfg.clients)
-        .map(|k| {
-            let sub = seeds.subtree("client", k as u64);
-            LocalZampling::from_parts(
-                &cfg.train,
-                Arc::clone(&q),
-                Arc::clone(&csc),
-                ProbVector::from_probs(server.probs.clone()),
-                &sub,
-            )
-        })
-        .collect();
+    let (q, _csc, mut server, mut clients) = init_clients(cfg, &seeds);
 
     // Staged test split for evaluation.
-    let out_dim = exec.arch().output_dim();
+    let out_dim = cfg.train.arch.output_dim();
     let mut test_y1h = vec![0.0f32; test.len() * out_dim];
     one_hot_into(&test.y, out_dim, &mut test_y1h);
     let mut eval_rng = seeds.rng("eval-sampler", 0);
@@ -79,73 +211,138 @@ pub fn run_federated(
     let mut ledger = CommLedger::default();
 
     for round in 0..cfg.rounds {
-        let mut up_bits = 0u64;
-        let mut down_bits = 0u64;
-        let mut round_loss = 0.0f64;
-
-        // 1. Broadcast p(t) — one encoded frame per client.
+        // Broadcast p(t) — one encoded frame per client.
         let round_msg =
             encode_server(&ServerMsg::Round { round: round as u32, probs: server.probs.clone() });
-        for (k, client) in clients.iter_mut().enumerate() {
-            let msg = decode_server(&round_msg).expect("round frame");
-            let ServerMsg::Round { probs, .. } = msg else { unreachable!() };
-            down_bits += round_msg.len() as u64 * 8;
+        let outs: Vec<ClientRound> = clients
+            .iter_mut()
+            .enumerate()
+            .map(|(k, client)| {
+                client_round(cfg, client, exec, &shards[k], &seeds, round, &round_msg, codec, k)
+            })
+            .collect();
 
-            // 2. Client local training-by-sampling.
-            client.pv.set_probs(&probs);
-            client.reset_optimizer(&cfg.train);
-            let mut loss = 0.0;
-            for _ in 0..cfg.local_epochs {
-                loss = client.run_epoch(exec, &shards[k], cfg.train.batch);
+        let (up_bits, down_bits, round_loss) =
+            reduce_round(outs, &mut server, &mut ledger, cfg.clients as u32);
+        eval_and_log_round(
+            cfg,
+            exec,
+            &q,
+            &server,
+            test,
+            &test_y1h,
+            eval_samples,
+            eval_every,
+            &mut eval_rng,
+            &mut log,
+            round,
+            round_loss,
+            up_bits,
+            down_bits,
+        );
+    }
+
+    FedOutcome { log, ledger, final_probs: server.probs }
+}
+
+/// [`run_federated`] with the client loop sharded across the process
+/// pool — the `Native`-backend fast path (PJRT executors are not `Send`;
+/// use the sequential driver for those).
+///
+/// Each pool lane owns a [`NativeExecutor`] (built once, reused across
+/// rounds) and strides the clients `k = lane, lane + nt, …`; the
+/// per-round evaluation runs on a dedicated executor whose eval scratch
+/// is sized by `eval_batch`, matching the executor a sequential caller
+/// would pass.  Per-client results are reduced in `k` order afterwards,
+/// so losses, ledgers, and `final_probs` are byte-identical to the
+/// sequential run.
+pub fn run_federated_parallel(
+    cfg: &FedConfig,
+    shards: &[Dataset],
+    test: &Dataset,
+    eval_samples: usize,
+    eval_every: usize,
+    eval_batch: usize,
+) -> FedOutcome {
+    assert_eq!(shards.len(), cfg.clients, "need one shard per client");
+    let seeds = SeedTree::new(cfg.train.seed);
+    let codec = if cfg.entropy_code_uplink { MaskCodec::Arithmetic } else { MaskCodec::Raw };
+    let (q, _csc, mut server, mut clients) = init_clients(cfg, &seeds);
+
+    let out_dim = cfg.train.arch.output_dim();
+    let mut test_y1h = vec![0.0f32; test.len() * out_dim];
+    one_hot_into(&test.y, out_dim, &mut test_y1h);
+    let mut eval_rng = seeds.rng("eval-sampler", 0);
+    let mut eval_exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, eval_batch);
+
+    let mut log = RunLog::new("federated");
+    let mut ledger = CommLedger::default();
+    let k_total = cfg.clients;
+    let nt = pool::global().parallelism().min(k_total).max(1);
+
+    // One training executor per lane, built once and reused every round
+    // (lanes never evaluate, so eval scratch is minimal).  The mutexes
+    // are uncontended — lane `l` only ever touches `lane_execs[l]`.
+    let lane_execs: Vec<Mutex<NativeExecutor>> = (0..nt)
+        .map(|_| Mutex::new(NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 1)))
+        .collect();
+
+    for round in 0..cfg.rounds {
+        let round_msg =
+            encode_server(&ServerMsg::Round { round: round as u32, probs: server.probs.clone() });
+
+        // Shard clients across the pool.  Each client is visited by
+        // exactly one lane, so the per-client mutexes are uncontended —
+        // they only convert `&mut` access into something a shared `Fn`
+        // closure may hold.
+        let cells: Vec<Mutex<&mut LocalZampling>> = clients.iter_mut().map(Mutex::new).collect();
+        let results: Vec<Mutex<Option<ClientRound>>> =
+            (0..k_total).map(|_| Mutex::new(None)).collect();
+        pool::global().run(nt, |lane| {
+            let mut exec = lane_execs[lane].lock().unwrap();
+            let mut k = lane;
+            while k < k_total {
+                let mut client = cells[k].lock().unwrap();
+                let out = client_round(
+                    cfg,
+                    &mut client,
+                    &mut *exec,
+                    &shards[k],
+                    &seeds,
+                    round,
+                    &round_msg,
+                    codec,
+                    k,
+                );
+                *results[k].lock().unwrap() = Some(out);
+                k += nt;
             }
-            round_loss += loss;
-
-            // 3. Sample z_new ~ Bern(f(s)) and uplink the mask.
-            let mut mask_rng = seeds.subtree("client", k as u64).rng("uplink-mask", round as u64);
-            let mut mask = Vec::new();
-            client.pv.sample_mask(&mut mask_rng, &mut mask);
-            let frame = encode_client(
-                &ClientMsg::Mask { round: round as u32, client: k as u32, n: mask.len(), mask },
-                codec,
-            );
-            up_bits += frame.len() as u64 * 8;
-            let ClientMsg::Mask { mask, .. } = decode_client(&frame).expect("mask frame") else {
-                unreachable!()
-            };
-            server.receive_mask(&pack_client_mask(&mask));
-        }
-
-        // 4. Aggregate: p(t+1) = mean of masks.
-        server.aggregate();
-        ledger.record(RoundCost {
-            uplink_bits: up_bits,
-            downlink_bits: down_bits,
-            clients: cfg.clients as u32,
         });
 
-        // Evaluation on the server's new p.
-        if round % eval_every == 0 || round + 1 == cfg.rounds {
-            let pv = ProbVector::from_probs(server.probs.clone());
-            let rep = evaluate(
-                exec,
-                &q,
-                &pv,
-                &test.x,
-                &test_y1h,
-                test.len(),
-                eval_samples,
-                &mut eval_rng,
-            );
-            log.push(RoundRecord {
-                round,
-                mean_sampled_acc: rep.mean_sampled_acc,
-                sampled_acc_std: rep.sampled_acc_std,
-                expected_acc: rep.expected_acc,
-                train_loss: round_loss / cfg.clients as f64,
-                uplink_bits: up_bits,
-                downlink_bits: down_bits,
-            });
-        }
+        // Collect in client order (bit-identical to the sequential loop).
+        let outs: Vec<ClientRound> = results
+            .iter()
+            .map(|cell| cell.lock().unwrap().take().expect("client result missing"))
+            .collect();
+
+        let (up_bits, down_bits, round_loss) =
+            reduce_round(outs, &mut server, &mut ledger, cfg.clients as u32);
+        eval_and_log_round(
+            cfg,
+            &mut eval_exec,
+            &q,
+            &server,
+            test,
+            &test_y1h,
+            eval_samples,
+            eval_every,
+            &mut eval_rng,
+            &mut log,
+            round,
+            round_loss,
+            up_bits,
+            down_bits,
+        );
     }
 
     FedOutcome { log, ledger, final_probs: server.probs }
@@ -213,6 +410,28 @@ mod tests {
         let a = run_federated(&cfg, &mut e1, &shards, &test, 4, 2);
         let b = run_federated(&cfg, &mut e2, &shards, &test, 4, 2);
         assert_eq!(a.final_probs, b.final_probs);
+    }
+
+    #[test]
+    fn parallel_run_matches_sequential_byte_for_byte() {
+        let (cfg, shards, test) = tiny_fed(false);
+        let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 256);
+        let seq = run_federated(&cfg, &mut exec, &shards, &test, 4, 2);
+        let par = run_federated_parallel(&cfg, &shards, &test, 4, 2, 256);
+        assert_eq!(seq.final_probs, par.final_probs);
+        assert_eq!(seq.log.rounds.len(), par.log.rounds.len());
+        for (a, b) in seq.log.rounds.iter().zip(&par.log.rounds) {
+            assert_eq!(a.mean_sampled_acc, b.mean_sampled_acc, "round {}", a.round);
+            assert_eq!(a.train_loss, b.train_loss, "round {}", a.round);
+            assert_eq!(a.uplink_bits, b.uplink_bits, "round {}", a.round);
+            assert_eq!(a.downlink_bits, b.downlink_bits, "round {}", a.round);
+        }
+        let (sa, sb) = (&seq.ledger.rounds, &par.ledger.rounds);
+        assert_eq!(sa.len(), sb.len());
+        for (a, b) in sa.iter().zip(sb) {
+            assert_eq!(a.uplink_bits, b.uplink_bits);
+            assert_eq!(a.downlink_bits, b.downlink_bits);
+        }
     }
 
     #[test]

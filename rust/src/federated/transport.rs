@@ -12,7 +12,8 @@
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
+use crate::{bail, ensure};
 
 use super::protocol::{
     decode_client, decode_server, encode_client, encode_server, ClientMsg, MaskCodec, ServerMsg,
@@ -56,12 +57,12 @@ impl Leader {
             match decode_client(&frame)? {
                 ClientMsg::Hello { client } => {
                     let idx = client as usize;
-                    anyhow::ensure!(idx < expected, "client id {idx} ≥ expected {expected}");
-                    anyhow::ensure!(slots[idx].is_none(), "duplicate client id {idx} from {peer}");
+                    ensure!(idx < expected, "client id {idx} ≥ expected {expected}");
+                    ensure!(slots[idx].is_none(), "duplicate client id {idx} from {peer}");
                     slots[idx] = Some(stream);
                     seen += 1;
                 }
-                other => anyhow::bail!("expected Hello, got {other:?}"),
+                other => bail!("expected Hello, got {other:?}"),
             }
         }
         Ok(Leader {
@@ -95,12 +96,12 @@ impl Leader {
             bytes += frame.len() as u64;
             match decode_client(&frame)? {
                 ClientMsg::Mask { round: r, client, mask, .. } => {
-                    anyhow::ensure!(r == round, "mask for round {r}, expected {round}");
+                    ensure!(r == round, "mask for round {r}, expected {round}");
                     let idx = client as usize;
-                    anyhow::ensure!(masks[idx].is_none(), "duplicate mask from client {idx}");
+                    ensure!(masks[idx].is_none(), "duplicate mask from client {idx}");
                     masks[idx] = Some(mask);
                 }
-                other => anyhow::bail!("expected Mask, got {other:?}"),
+                other => bail!("expected Mask, got {other:?}"),
             }
         }
         self.recv_bytes += bytes;

@@ -22,7 +22,9 @@
 //! * [`zampling`] — Local Zampling, ContinuousModel, score optimizers.
 //! * [`federated`] — server, clients, round protocol, transports.
 //! * [`comm`] — wire codecs (bit-pack, RLE, arithmetic) + cost ledger.
-//! * [`runtime`] — PJRT executable loading and typed step wrappers.
+//! * [`runtime`] — the persistent worker pool every hot path shares
+//!   (`runtime::pool`, see PERF.md) and, behind the `pjrt` cargo
+//!   feature, PJRT executable loading and typed step wrappers.
 //! * [`baselines`] — FedAvg, FedPM (Isik et al.), Zhou supermask.
 //! * [`zonotope`] — theory validators for §2 (Lemmas 2.1–2.3, Props 2.4–2.6).
 //! * [`metrics`], [`experiments`], [`config`] — measurement + drivers.

@@ -21,11 +21,10 @@ use zampling::data::Dataset;
 use zampling::experiments::{self, Scale};
 use zampling::federated::protocol::MaskCodec;
 use zampling::federated::transport::{Leader, Worker};
-use zampling::federated::{pack_client_mask, run_federated, Server};
+use zampling::federated::{pack_client_mask, run_federated, run_federated_parallel, Server};
 use zampling::metrics::RunLog;
 use zampling::nn::ArchSpec;
 use zampling::rng::SeedTree;
-use zampling::runtime::PjrtRuntime;
 use zampling::util::cli::Args;
 use zampling::util::toml::TomlDoc;
 use zampling::zampling::{train_local, DenseExecutor, LocalZampling, NativeExecutor, ProbVector};
@@ -87,20 +86,30 @@ fn load_fed_config(args: &Args) -> Result<FedConfig, String> {
 /// Pick the executor per config.
 fn make_executor(cfg: &TrainConfig) -> Result<Box<dyn DenseExecutor>, String> {
     match cfg.backend {
-        Backend::Pjrt => {
-            let rt = PjrtRuntime::new(Path::new("artifacts"))
-                .map_err(|e| format!("pjrt runtime: {e:#}"))?;
-            let exec = rt
-                .dense_executor(&cfg.arch.name)
-                .map_err(|e| format!("pjrt executor: {e:#}"))?;
-            println!("[repro] backend: pjrt ({})", rt.platform());
-            Ok(Box::new(exec))
-        }
+        Backend::Pjrt => make_pjrt_executor(cfg),
         Backend::Native => {
             println!("[repro] backend: native (pure-rust oracle)");
             Ok(Box::new(NativeExecutor::new(cfg.arch.clone(), cfg.batch, 500)))
         }
     }
+}
+
+#[cfg(feature = "pjrt")]
+fn make_pjrt_executor(cfg: &TrainConfig) -> Result<Box<dyn DenseExecutor>, String> {
+    let rt = zampling::runtime::PjrtRuntime::new(Path::new("artifacts"))
+        .map_err(|e| format!("pjrt runtime: {e:#}"))?;
+    let exec = rt
+        .dense_executor(&cfg.arch.name)
+        .map_err(|e| format!("pjrt executor: {e:#}"))?;
+    println!("[repro] backend: pjrt ({})", rt.platform());
+    Ok(Box::new(exec))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn make_pjrt_executor(_cfg: &TrainConfig) -> Result<Box<dyn DenseExecutor>, String> {
+    Err("this build has no PJRT support; the 'pjrt' feature also needs the external \
+         `xla` crate added to rust/Cargo.toml (see the note there) — use --backend native"
+        .into())
 }
 
 fn load_splits(cfg: &TrainConfig) -> (Dataset, Dataset) {
@@ -179,8 +188,19 @@ fn cmd_train_federated(args: &Args) -> Result<(), String> {
 
     match transport.as_str() {
         "local" => {
-            let mut exec = make_executor(&cfg.train)?;
-            let out = run_federated(&cfg, exec.as_mut(), &shards, &test, eval_samples, eval_every);
+            // Native backend: shard the client loop across the process
+            // pool (bit-identical to the sequential run).  PJRT handles
+            // are not `Send`, so that backend stays sequential.
+            let out = match cfg.train.backend {
+                Backend::Native => {
+                    println!("[repro] backend: native (parallel client loop)");
+                    run_federated_parallel(&cfg, &shards, &test, eval_samples, eval_every, 500)
+                }
+                Backend::Pjrt => {
+                    let mut exec = make_executor(&cfg.train)?;
+                    run_federated(&cfg, exec.as_mut(), &shards, &test, eval_samples, eval_every)
+                }
+            };
             for r in &out.log.rounds {
                 println!(
                     "round {:>3}  sampled {:.4} ± {:.4}  expected {:.4}  up {}b down {}b",
@@ -427,7 +447,20 @@ fn cmd_comm_report(args: &Args) -> Result<(), String> {
 fn cmd_info(args: &Args) -> Result<(), String> {
     let dir = args.str_or("artifacts", "artifacts");
     args.reject_unknown()?;
-    match PjrtRuntime::new(Path::new(&dir)) {
+    print_artifact_info(&dir);
+    for arch in [ArchSpec::small(), ArchSpec::mnistfc()] {
+        println!("ArchSpec {}: m={}", arch.name, arch.num_params());
+    }
+    println!(
+        "pool: {} parallel lanes",
+        zampling::runtime::pool::global().parallelism()
+    );
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn print_artifact_info(dir: &str) {
+    match zampling::runtime::PjrtRuntime::new(Path::new(dir)) {
         Ok(rt) => {
             println!("platform: {}", rt.platform());
             println!(
@@ -443,8 +476,9 @@ fn cmd_info(args: &Args) -> Result<(), String> {
         }
         Err(e) => println!("no artifacts loaded ({e:#}); native backend still available"),
     }
-    for arch in [ArchSpec::small(), ArchSpec::mnistfc()] {
-        println!("ArchSpec {}: m={}", arch.name, arch.num_params());
-    }
-    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn print_artifact_info(_dir: &str) {
+    println!("built without the 'pjrt' feature; native backend only");
 }

@@ -1,0 +1,441 @@
+//! Cache-blocked, register-tiled f32 GEMM kernels for the dense step.
+//!
+//! The seed's `MlpRef` ran scalar i-k-j loops; these kernels process
+//! `MR × NR` (8×8) output tiles with the accumulator block held in
+//! registers, walking `k` innermost so each step is `MR` scalar loads +
+//! one `NR`-wide vector load + `MR` fused multiply-add rows — the shape
+//! LLVM auto-vectorizes to full-width FMA on AVX2/NEON.  Three variants
+//! cover the whole forward/backward pass:
+//!
+//! * [`gemm_bias_act`] — `C = A·B (+ bias) (then ReLU)`, the forward
+//!   layer step with the bias add and activation fused into the tile
+//!   write-back (no second pass over `C`).
+//! * [`gemm`] — plain `C = A·B`; the backward data gradient uses it as
+//!   `ΔX = Δ · Wᵀ` over a transposed-weight layout (see [`transpose`]),
+//!   so the backward pass is the *same* row-major kernel.
+//! * [`gemm_at_b_acc`] — `G += Aᵀ·Δ`, the weight gradient, tiled over
+//!   `G`'s rows with the ReLU-sparsity skip kept from the seed kernel.
+//!
+//! `*_par` wrappers shard rows across [`runtime::pool`] in `MR`-aligned
+//! blocks; every output element is produced by exactly one shard running
+//! the identical tile loop, so parallel results are **bit-identical** to
+//! serial ones.  The seed's scalar kernels are retained under [`naive`]
+//! as the parity oracle (`tests/gemm_properties.rs` checks odd shapes
+//! against them within f32-reassociation tolerance).
+
+// Index loops mirror the tile arithmetic (zip chains would obscure it),
+// and kernel signatures are long by nature: (a, b, c, m, k, n, …).
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+
+use crate::runtime::pool;
+
+/// Register-tile height (output rows per microkernel).
+pub const MR: usize = 8;
+/// Register-tile width (output columns per microkernel).
+pub const NR: usize = 8;
+
+/// Accumulate one `ib × jb` tile (`ib ≤ MR`, `jb ≤ NR`) of `A·B` into
+/// `acc`.  `a` points at the tile's first row (leading dimension `lda`),
+/// `b` at the tile's first column (leading dimension `ldb`).
+#[inline(always)]
+fn micro_tile(
+    a: &[f32],
+    lda: usize,
+    b: &[f32],
+    ldb: usize,
+    kk: usize,
+    ib: usize,
+    jb: usize,
+    acc: &mut [[f32; NR]; MR],
+) {
+    if ib == MR && jb == NR {
+        // Full tile: fixed trip counts so the compiler keeps the 8×8
+        // accumulator in registers and vectorizes the jj loop.
+        for p in 0..kk {
+            let brow = &b[p * ldb..p * ldb + NR];
+            for ii in 0..MR {
+                let av = a[ii * lda + p];
+                let accr = &mut acc[ii];
+                for jj in 0..NR {
+                    accr[jj] += av * brow[jj];
+                }
+            }
+        }
+    } else {
+        for p in 0..kk {
+            let brow = &b[p * ldb..p * ldb + jb];
+            for ii in 0..ib {
+                let av = a[ii * lda + p];
+                let accr = &mut acc[ii];
+                for (jj, &bv) in brow.iter().enumerate() {
+                    accr[jj] += av * bv;
+                }
+            }
+        }
+    }
+}
+
+/// Serial core over a row range: `c[rows × n] = a[rows × k] · b[k × n]`
+/// with optional fused bias add and ReLU.
+#[allow(clippy::too_many_arguments)]
+fn gemm_rows_into(
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    c: &mut [f32],
+    rows: usize,
+    k: usize,
+    n: usize,
+    relu: bool,
+) {
+    debug_assert!(a.len() >= rows * k);
+    debug_assert!(b.len() >= k * n);
+    debug_assert!(c.len() >= rows * n);
+    debug_assert!(bias.is_none_or(|bs| bs.len() >= n));
+    let mut i0 = 0;
+    while i0 < rows {
+        let ib = MR.min(rows - i0);
+        let mut j0 = 0;
+        while j0 < n {
+            let jb = NR.min(n - j0);
+            let mut acc = [[0.0f32; NR]; MR];
+            micro_tile(&a[i0 * k..], k, &b[j0..], n, k, ib, jb, &mut acc);
+            for ii in 0..ib {
+                let row = (i0 + ii) * n + j0;
+                let crow = &mut c[row..row + jb];
+                for (jj, cv) in crow.iter_mut().enumerate() {
+                    let mut v = acc[ii][jj];
+                    if let Some(bs) = bias {
+                        v += bs[j0 + jj];
+                    }
+                    if relu && v < 0.0 {
+                        v = 0.0;
+                    }
+                    *cv = v;
+                }
+            }
+            j0 += NR;
+        }
+        i0 += MR;
+    }
+}
+
+/// `c[m × n] = a[m × k] · b[k × n]` (+ `bias` broadcast over rows)
+/// (then ReLU), all row-major.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_bias_act(
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    relu: bool,
+) {
+    assert!(a.len() >= m * k, "a too short: {} < {}", a.len(), m * k);
+    assert!(b.len() >= k * n, "b too short: {} < {}", b.len(), k * n);
+    assert!(c.len() >= m * n, "c too short: {} < {}", c.len(), m * n);
+    gemm_rows_into(a, b, bias, c, m, k, n, relu);
+}
+
+/// Plain `c = a · b` (no bias, no activation).
+pub fn gemm(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    gemm_bias_act(a, b, None, c, m, k, n, false);
+}
+
+/// Pool-parallel [`gemm_bias_act`]: output rows are sharded across the
+/// global pool in `MR`-aligned blocks (bit-identical to the serial run).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_bias_act_par(
+    a: &[f32],
+    b: &[f32],
+    bias: Option<&[f32]>,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    relu: bool,
+) {
+    assert!(a.len() >= m * k);
+    assert!(b.len() >= k * n);
+    assert!(c.len() >= m * n);
+    let nt = pool::threads_for(m * k * n / 4);
+    if nt <= 1 {
+        gemm_rows_into(a, b, bias, c, m, k, n, relu);
+        return;
+    }
+    // MR-aligned row blocks: each chunk's tiling matches the serial
+    // pass, so the parallel result is bit-identical.
+    let rows_per_t = m.div_ceil(MR).div_ceil(nt) * MR;
+    pool::global().run_chunks(nt, &mut c[..m * n], rows_per_t * n, |c_sub, start| {
+        let i0 = start / n;
+        let rows = c_sub.len() / n;
+        gemm_rows_into(&a[i0 * k..(i0 + rows) * k], b, bias, c_sub, rows, k, n, relu);
+    });
+}
+
+/// Pool-parallel [`gemm`].
+pub fn gemm_par(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    gemm_bias_act_par(a, b, None, c, m, k, n, false);
+}
+
+/// Serial core for the weight gradient over a row range of `g`:
+/// `g[rows × n] += aᵀ · d` restricted to `a`'s columns
+/// `[col0, col0 + rows)`.  `a` is `[m × k]`, `d` is `[m × n]`.
+#[allow(clippy::too_many_arguments)]
+fn at_b_acc_rows(
+    a: &[f32],
+    d: &[f32],
+    g: &mut [f32],
+    col0: usize,
+    rows: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert!(a.len() >= m * k);
+    debug_assert!(d.len() >= m * n);
+    debug_assert!(g.len() >= rows * n);
+    let mut i0 = 0;
+    while i0 < rows {
+        let ib = MR.min(rows - i0);
+        let mut j0 = 0;
+        while j0 < n {
+            let jb = NR.min(n - j0);
+            let mut acc = [[0.0f32; NR]; MR];
+            for r in 0..m {
+                let abase = r * k + col0 + i0;
+                let arow = &a[abase..abase + ib];
+                let drow = &d[r * n + j0..r * n + j0 + jb];
+                for (ii, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue; // ReLU sparsity: dead activations add nothing
+                    }
+                    let accr = &mut acc[ii];
+                    for (jj, &dv) in drow.iter().enumerate() {
+                        accr[jj] += av * dv;
+                    }
+                }
+            }
+            for ii in 0..ib {
+                let row = (i0 + ii) * n + j0;
+                let grow = &mut g[row..row + jb];
+                for (jj, gv) in grow.iter_mut().enumerate() {
+                    *gv += acc[ii][jj];
+                }
+            }
+            j0 += NR;
+        }
+        i0 += MR;
+    }
+}
+
+/// Weight gradient: `g[k × n] += aᵀ · d` where `a` is `[m × k]` (batch
+/// activations) and `d` is `[m × n]` (batch deltas), all row-major.
+pub fn gemm_at_b_acc(a: &[f32], d: &[f32], g: &mut [f32], m: usize, k: usize, n: usize) {
+    assert!(a.len() >= m * k);
+    assert!(d.len() >= m * n);
+    assert!(g.len() >= k * n);
+    at_b_acc_rows(a, d, g, 0, k, m, k, n);
+}
+
+/// Pool-parallel [`gemm_at_b_acc`]: `g`'s rows (the fan-in dimension)
+/// are sharded in `MR`-aligned blocks (bit-identical to serial).
+pub fn gemm_at_b_acc_par(a: &[f32], d: &[f32], g: &mut [f32], m: usize, k: usize, n: usize) {
+    assert!(a.len() >= m * k);
+    assert!(d.len() >= m * n);
+    assert!(g.len() >= k * n);
+    let nt = pool::threads_for(m * k * n / 4);
+    if nt <= 1 {
+        at_b_acc_rows(a, d, g, 0, k, m, k, n);
+        return;
+    }
+    let rows_per_t = k.div_ceil(MR).div_ceil(nt) * MR;
+    pool::global().run_chunks(nt, &mut g[..k * n], rows_per_t * n, |g_sub, start| {
+        at_b_acc_rows(a, d, g_sub, start / n, g_sub.len() / n, m, k, n);
+    });
+}
+
+/// `dst[cols × rows] = srcᵀ` for row-major `src[rows × cols]`, blocked
+/// 32×32 so both sides stream through cache.  The backward pass
+/// transposes each layer's `W[fan_in × fan_out]` once per step (O(k·n),
+/// amortized by the O(b·k·n) GEMM it enables).
+pub fn transpose(src: &[f32], dst: &mut [f32], rows: usize, cols: usize) {
+    assert!(src.len() >= rows * cols);
+    assert!(dst.len() >= rows * cols);
+    const TB: usize = 32;
+    let mut i0 = 0;
+    while i0 < rows {
+        let i1 = (i0 + TB).min(rows);
+        let mut j0 = 0;
+        while j0 < cols {
+            let j1 = (j0 + TB).min(cols);
+            for i in i0..i1 {
+                for j in j0..j1 {
+                    dst[j * rows + i] = src[i * cols + j];
+                }
+            }
+            j0 += TB;
+        }
+        i0 += TB;
+    }
+}
+
+/// The seed's scalar kernels, retained verbatim as the parity oracle for
+/// the blocked implementations (and for `bench_perf_round`'s
+/// blocked-vs-naive comparison).
+pub mod naive {
+    /// Scalar i-k-j forward: bias init, ReLU-sparsity skip, activation
+    /// pass at the end — exactly the seed's `MlpRef::forward_internal`
+    /// inner loop.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm_bias_act(
+        a: &[f32],
+        b: &[f32],
+        bias: Option<&[f32]>,
+        c: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        relu: bool,
+    ) {
+        for r in 0..m {
+            let row_in = &a[r * k..(r + 1) * k];
+            let row_out = &mut c[r * n..(r + 1) * n];
+            match bias {
+                Some(bs) => row_out.copy_from_slice(&bs[..n]),
+                None => row_out.fill(0.0),
+            }
+            for (i, &xi) in row_in.iter().enumerate() {
+                if xi == 0.0 {
+                    continue;
+                }
+                let brow = &b[i * n..(i + 1) * n];
+                for (o, &bv) in brow.iter().enumerate() {
+                    row_out[o] += xi * bv;
+                }
+            }
+            if relu {
+                for v in row_out.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Scalar `c = a · b`.
+    pub fn gemm(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        gemm_bias_act(a, b, None, c, m, k, n, false);
+    }
+
+    /// Scalar `g += aᵀ · d` — the seed's grad-W loop.
+    pub fn gemm_at_b_acc(a: &[f32], d: &[f32], g: &mut [f32], m: usize, k: usize, n: usize) {
+        for r in 0..m {
+            let arow = &a[r * k..(r + 1) * k];
+            let drow = &d[r * n..(r + 1) * n];
+            for (i, &ai) in arow.iter().enumerate() {
+                if ai == 0.0 {
+                    continue;
+                }
+                let gr = &mut g[i * n..(i + 1) * n];
+                for (o, &dv) in drow.iter().enumerate() {
+                    gr[o] += ai * dv;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Rng, Xoshiro256pp};
+
+    fn randv(len: usize, seed: u64) -> Vec<f32> {
+        let mut r = Xoshiro256pp::seed_from(seed);
+        (0..len).map(|_| r.next_f32() - 0.5).collect()
+    }
+
+    fn assert_close(a: &[f32], b: &[f32], tag: &str) {
+        assert_eq!(a.len(), b.len());
+        for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+            assert!(
+                (x - y).abs() <= 1e-4 * (1.0 + x.abs()),
+                "{tag}[{i}]: blocked {y} vs naive {x}"
+            );
+        }
+    }
+
+    #[test]
+    fn blocked_matches_naive_on_tile_multiples() {
+        let (m, k, n) = (16, 32, 24);
+        let a = randv(m * k, 1);
+        let b = randv(k * n, 2);
+        let mut c_ref = vec![0.0; m * n];
+        let mut c = vec![0.0; m * n];
+        naive::gemm(&a, &b, &mut c_ref, m, k, n);
+        gemm(&a, &b, &mut c, m, k, n);
+        assert_close(&c_ref, &c, "gemm");
+    }
+
+    #[test]
+    fn fused_bias_relu_matches_naive() {
+        let (m, k, n) = (5, 7, 10);
+        let a = randv(m * k, 3);
+        let b = randv(k * n, 4);
+        let bias = randv(n, 5);
+        let mut c_ref = vec![0.0; m * n];
+        let mut c = vec![0.0; m * n];
+        naive::gemm_bias_act(&a, &b, Some(&bias), &mut c_ref, m, k, n, true);
+        gemm_bias_act(&a, &b, Some(&bias), &mut c, m, k, n, true);
+        assert_close(&c_ref, &c, "bias_relu");
+        assert!(c.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn at_b_accumulates_on_top() {
+        let (m, k, n) = (9, 11, 13);
+        let a = randv(m * k, 6);
+        let d = randv(m * n, 7);
+        let mut g_ref = randv(k * n, 8);
+        let mut g = g_ref.clone();
+        naive::gemm_at_b_acc(&a, &d, &mut g_ref, m, k, n);
+        gemm_at_b_acc(&a, &d, &mut g, m, k, n);
+        assert_close(&g_ref, &g, "at_b");
+    }
+
+    #[test]
+    fn parallel_is_bit_identical_to_serial() {
+        let (m, k, n) = (64, 96, 80);
+        let a = randv(m * k, 9);
+        let b = randv(k * n, 10);
+        let mut c_ser = vec![0.0; m * n];
+        let mut c_par = vec![0.0; m * n];
+        gemm(&a, &b, &mut c_ser, m, k, n);
+        // Force a 2-lane parallel split regardless of the work heuristic
+        // and the host's core count (private pool with one worker).
+        let two_lane = pool::ThreadPool::new(1);
+        let rows_per_t = m.div_ceil(MR).div_ceil(2) * MR;
+        two_lane.run_chunks(2, &mut c_par, rows_per_t * n, |c_sub, start| {
+            let i0 = start / n;
+            let rows = c_sub.len() / n;
+            gemm_bias_act(&a[i0 * k..(i0 + rows) * k], &b, None, c_sub, rows, k, n, false);
+        });
+        assert_eq!(c_ser, c_par);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let (r, c) = (37, 53);
+        let src = randv(r * c, 11);
+        let mut t = vec![0.0; r * c];
+        let mut back = vec![0.0; r * c];
+        transpose(&src, &mut t, r, c);
+        transpose(&t, &mut back, c, r);
+        assert_eq!(src, back);
+        assert_eq!(t[5 * r + 3], src[3 * c + 5]);
+    }
+}

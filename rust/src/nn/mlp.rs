@@ -5,8 +5,13 @@
 //! PJRT-loaded artifacts are integration-tested against, and (b) an
 //! XLA-free execution path (`Backend::Native`) for environments without
 //! the PJRT shared library.
+//!
+//! The layer products run on the blocked GEMM kernels of [`super::gemm`]
+//! (fused bias+ReLU forward, transposed-weight backward), which shard
+//! across the process pool at MnistFc scale; the seed's scalar loops
+//! survive as `gemm::naive`, the parity oracle.
 
-use super::ArchSpec;
+use super::{gemm, ArchSpec};
 
 /// Scratch-buffer MLP evaluator over a flat weight vector.
 pub struct MlpRef {
@@ -15,6 +20,9 @@ pub struct MlpRef {
     acts: Vec<Vec<f32>>,
     /// Per-layer pre-activation gradients (backward scratch).
     deltas: Vec<Vec<f32>>,
+    /// Transposed-weight scratch (`Wᵀ` of the widest layer): lets the
+    /// backward data gradient `Δ·Wᵀ` run as a plain row-major GEMM.
+    wt: Vec<f32>,
     batch_cap: usize,
 }
 
@@ -33,7 +41,10 @@ impl MlpRef {
             acts.push(vec![0.0; batch_cap * width]);
             deltas.push(vec![0.0; batch_cap * width]);
         }
-        Self { arch, acts, deltas, batch_cap }
+        // Backward never transposes layer 0 (no delta_prev at the input),
+        // so the scratch is sized by the widest *later* layer.
+        let wt_len = arch.slices().skip(1).map(|s| s.w_len).max().unwrap_or(0);
+        Self { arch, acts, deltas, wt: vec![0.0; wt_len], batch_cap }
     }
 
     pub fn arch(&self) -> &ArchSpec {
@@ -51,33 +62,13 @@ impl MlpRef {
         let slices: Vec<_> = self.arch.slices().collect();
         for (l, s) in slices.iter().enumerate() {
             let is_last = l + 1 == slices.len();
-            // acts[l+1] = act(acts[l] @ W + b)
+            // acts[l+1] = act(acts[l] @ W + b) — fused blocked GEMM.
             let (prev, rest) = self.acts.split_at_mut(l + 1);
             let a_in = &prev[l][..b * s.fan_in];
             let a_out = &mut rest[0][..b * s.fan_out];
             let wmat = &w[s.offset..s.offset + s.w_len];
             let bias = &w[s.offset + s.w_len..s.offset + s.w_len + s.b_len];
-            for r in 0..b {
-                let row_in = &a_in[r * s.fan_in..(r + 1) * s.fan_in];
-                let row_out = &mut a_out[r * s.fan_out..(r + 1) * s.fan_out];
-                row_out.copy_from_slice(bias);
-                for (i, &xi) in row_in.iter().enumerate() {
-                    if xi == 0.0 {
-                        continue; // ReLU sparsity: skip dead inputs
-                    }
-                    let wrow = &wmat[i * s.fan_out..(i + 1) * s.fan_out];
-                    for (o, &wv) in wrow.iter().enumerate() {
-                        row_out[o] += xi * wv;
-                    }
-                }
-                if !is_last {
-                    for v in row_out.iter_mut() {
-                        if *v < 0.0 {
-                            *v = 0.0;
-                        }
-                    }
-                }
-            }
+            gemm::gemm_bias_act_par(a_in, wmat, Some(bias), a_out, b, s.fan_in, s.fan_out, !is_last);
         }
     }
 
@@ -190,21 +181,10 @@ impl MlpRef {
                 (&mut hi[0], lo)
             };
             let dcur = &dcur[..b * s.fan_out];
-            // grad_W[i,o] += a_in[r,i] * delta[r,o]; grad_b[o] += delta[r,o]
+            // grad_W = a_inᵀ @ delta (blocked, sharded over fan_in rows).
             let gw = &mut grad[s.offset..s.offset + s.w_len];
-            for r in 0..b {
-                let arow = &b_in[r * s.fan_in..(r + 1) * s.fan_in];
-                let drow = &dcur[r * s.fan_out..(r + 1) * s.fan_out];
-                for (i, &ai) in arow.iter().enumerate() {
-                    if ai == 0.0 {
-                        continue;
-                    }
-                    let gr = &mut gw[i * s.fan_out..(i + 1) * s.fan_out];
-                    for (o, &dv) in drow.iter().enumerate() {
-                        gr[o] += ai * dv;
-                    }
-                }
-            }
+            gemm::gemm_at_b_acc_par(&b_in[..b * s.fan_in], dcur, gw, b, s.fan_in, s.fan_out);
+            // grad_b[o] += delta[r,o]
             let gb = &mut grad[s.offset + s.w_len..s.offset + s.w_len + s.b_len];
             for r in 0..b {
                 let drow = &dcur[r * s.fan_out..(r + 1) * s.fan_out];
@@ -212,25 +192,19 @@ impl MlpRef {
                     gb[o] += dv;
                 }
             }
-            // delta_prev = (delta @ Wᵀ) ⊙ relu'(a_in)   (skip for input layer)
+            // delta_prev = (delta @ Wᵀ) ⊙ relu'(a_in)   (skip for input
+            // layer).  W is transposed once into the scratch so the data
+            // gradient runs as a plain row-major blocked GEMM.
             if l > 0 {
                 let wmat = &w[s.offset..s.offset + s.w_len];
+                let wt = &mut self.wt[..s.w_len];
+                gemm::transpose(wmat, wt, s.fan_in, s.fan_out);
                 let dprev = &mut dprev_all[l][..b * s.fan_in];
-                for r in 0..b {
-                    let drow = &dcur[r * s.fan_out..(r + 1) * s.fan_out];
-                    let prow = &mut dprev[r * s.fan_in..(r + 1) * s.fan_in];
-                    let arow = &b_in[r * s.fan_in..(r + 1) * s.fan_in];
-                    for i in 0..s.fan_in {
-                        if arow[i] <= 0.0 {
-                            prow[i] = 0.0; // ReLU gate (a_in == post-ReLU act)
-                            continue;
-                        }
-                        let wrow = &wmat[i * s.fan_out..(i + 1) * s.fan_out];
-                        let mut acc = 0.0f32;
-                        for (o, &dv) in drow.iter().enumerate() {
-                            acc += wrow[o] * dv;
-                        }
-                        prow[i] = acc;
+                gemm::gemm_par(dcur, wt, dprev, b, s.fan_out, s.fan_in);
+                let a_gate = &b_in[..b * s.fan_in];
+                for (pv, &av) in dprev.iter_mut().zip(a_gate) {
+                    if av <= 0.0 {
+                        *pv = 0.0; // ReLU gate (a_in == post-ReLU act)
                     }
                 }
             }

@@ -9,6 +9,7 @@
 //! The pure-Rust forward/backward ([`MlpRef`]) is an XLA-free fallback and
 //! the oracle the runtime integration tests compare PJRT results against.
 
+pub mod gemm;
 pub mod mlp;
 
 pub use mlp::{one_hot_into, MlpRef};

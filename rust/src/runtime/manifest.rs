@@ -2,8 +2,9 @@
 //! `python/compile/aot.py`) — the shape contract between the AOT compile
 //! path and the runtime.
 
+use crate::anyhow;
+use crate::util::error::Result;
 use crate::util::json::Json;
-use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
 

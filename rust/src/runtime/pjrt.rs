@@ -1,0 +1,386 @@
+//! PJRT runtime: load the AOT HLO-text artifacts and execute them.
+//!
+//! This is the only place the `xla` crate is touched (and the only code
+//! behind the `pjrt` cargo feature).  The flow (from
+//! /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.  Artifacts were lowered with
+//! `return_tuple=True`, so every result is a tuple literal.
+//!
+//! [`PjrtExecutor`] implements the same `DenseExecutor` interface as the
+//! native oracle, padding partial batches to the artifact's fixed batch
+//! size (the artifacts' weighted loss makes padding rows inert).
+//! [`FusedStepExec`] wraps the fused flagship artifacts whose HLO
+//! *contains the L1 Pallas kernels*: mask in, score-gradient out.
+//!
+//! PJRT handles are `Rc`-based (not `Send`): executors are per-thread.
+
+use super::Manifest;
+use crate::anyhow;
+use crate::nn::ArchSpec;
+use crate::util::error::{Context, Result};
+use crate::zampling::{DenseExecutor, StepResult};
+use std::path::{Path, PathBuf};
+
+/// Shared PJRT CPU client + artifact directory.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    artifact_dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl PjrtRuntime {
+    /// Connect to the CPU PJRT plugin and read the manifest.
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(&artifact_dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", artifact_dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Self { client, artifact_dir: artifact_dir.to_path_buf(), manifest })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&self, file: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.artifact_dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))
+    }
+
+    /// Build a dense-step executor for `arch` (train + eval artifacts).
+    pub fn dense_executor(&self, arch_name: &str) -> Result<PjrtExecutor> {
+        let arts = self
+            .manifest
+            .archs
+            .get(arch_name)
+            .ok_or_else(|| anyhow!("arch '{arch_name}' not in manifest"))?;
+        let arch = ArchSpec::by_name(arch_name)
+            .ok_or_else(|| anyhow!("arch '{arch_name}' unknown to ArchSpec"))?;
+        crate::ensure!(
+            arch.num_params() == arts.num_params,
+            "manifest num_params {} != ArchSpec {}",
+            arts.num_params,
+            arch.num_params()
+        );
+        Ok(PjrtExecutor {
+            train_exe: self.compile(&arts.train_path)?,
+            eval_exe: self.compile(&arts.eval_path)?,
+            arch,
+            train_batch: self.manifest.train_batch,
+            eval_batch: self.manifest.eval_batch,
+            x_pad: Vec::new(),
+            y_pad: Vec::new(),
+        })
+    }
+
+    /// Build the fused (Pallas-in-HLO) step executor for a flagship
+    /// `(arch, n, d)` config.
+    pub fn fused_executor(&self, arch_name: &str, n: usize, d: usize) -> Result<FusedStepExec> {
+        let fa = self
+            .manifest
+            .fused
+            .iter()
+            .find(|f| f.arch == arch_name && f.n == n && f.d == d)
+            .ok_or_else(|| {
+                anyhow!("no fused artifact for arch={arch_name} n={n} d={d} in manifest")
+            })?;
+        let arch = ArchSpec::by_name(arch_name)
+            .ok_or_else(|| anyhow!("arch '{arch_name}' unknown to ArchSpec"))?;
+        Ok(FusedStepExec {
+            exe: self.compile(&fa.path)?,
+            client: self.client.clone(),
+            arch,
+            n,
+            d,
+            c: fa.c,
+            batch: self.manifest.train_batch,
+            q_buffers: None,
+        })
+    }
+}
+
+fn literal_1d_f32(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+fn literal_2d_f32(v: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    debug_assert_eq!(v.len(), rows * cols);
+    xla::Literal::vec1(v)
+        .reshape(&[rows as i64, cols as i64])
+        .map_err(|e| anyhow!("reshape [{rows},{cols}]: {e:?}"))
+}
+
+fn literal_2d_i32(v: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    debug_assert_eq!(v.len(), rows * cols);
+    xla::Literal::vec1(v)
+        .reshape(&[rows as i64, cols as i64])
+        .map_err(|e| anyhow!("reshape i32 [{rows},{cols}]: {e:?}"))
+}
+
+fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    let v = lit.to_vec::<f32>().map_err(|e| anyhow!("scalar readback: {e:?}"))?;
+    v.first().copied().ok_or_else(|| anyhow!("empty scalar literal"))
+}
+
+/// Dense-step executor over the PJRT-compiled train/eval artifacts.
+pub struct PjrtExecutor {
+    train_exe: xla::PjRtLoadedExecutable,
+    eval_exe: xla::PjRtLoadedExecutable,
+    arch: ArchSpec,
+    train_batch: usize,
+    eval_batch: usize,
+    x_pad: Vec<f32>,
+    y_pad: Vec<f32>,
+}
+
+impl PjrtExecutor {
+    /// Pad `(x, y1h)` up to `batch` rows (zero rows are inert) and stage
+    /// as literals.
+    fn stage_batch(
+        &mut self,
+        x: &[f32],
+        y1h: &[f32],
+        rows: usize,
+        batch: usize,
+    ) -> Result<(xla::Literal, xla::Literal)> {
+        let in_dim = self.arch.input_dim();
+        let out_dim = self.arch.output_dim();
+        assert!(rows <= batch, "rows {rows} > artifact batch {batch}");
+        assert_eq!(x.len(), rows * in_dim);
+        assert_eq!(y1h.len(), rows * out_dim);
+        let (xs, ys) = if rows == batch {
+            (x, y1h)
+        } else {
+            self.x_pad.clear();
+            self.x_pad.extend_from_slice(x);
+            self.x_pad.resize(batch * in_dim, 0.0);
+            self.y_pad.clear();
+            self.y_pad.extend_from_slice(y1h);
+            self.y_pad.resize(batch * out_dim, 0.0);
+            (self.x_pad.as_slice(), self.y_pad.as_slice())
+        };
+        Ok((literal_2d_f32(xs, batch, in_dim)?, literal_2d_f32(ys, batch, out_dim)?))
+    }
+
+    fn run_train(
+        &mut self,
+        w: &[f32],
+        x: &[f32],
+        y1h: &[f32],
+        rows: usize,
+        grad_out: &mut [f32],
+    ) -> Result<StepResult> {
+        let batch = self.train_batch;
+        let (xl, yl) = self.stage_batch(x, y1h, rows, batch)?;
+        let wl = literal_1d_f32(w);
+        let result = self
+            .train_exe
+            .execute::<xla::Literal>(&[wl, xl, yl])
+            .map_err(|e| anyhow!("train_step execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("train_step readback: {e:?}"))?;
+        let (loss, grad, correct) =
+            result.to_tuple3().map_err(|e| anyhow!("train_step tuple: {e:?}"))?;
+        grad.copy_raw_to(grad_out).map_err(|e| anyhow!("grad readback: {e:?}"))?;
+        Ok(StepResult { loss: scalar_f32(&loss)?, correct: scalar_f32(&correct)? })
+    }
+
+    fn run_eval(&mut self, w: &[f32], x: &[f32], y1h: &[f32], rows: usize) -> Result<StepResult> {
+        let batch = self.eval_batch;
+        let (xl, yl) = self.stage_batch(x, y1h, rows, batch)?;
+        let wl = literal_1d_f32(w);
+        let result = self
+            .eval_exe
+            .execute::<xla::Literal>(&[wl, xl, yl])
+            .map_err(|e| anyhow!("eval_step execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("eval_step readback: {e:?}"))?;
+        let (loss, correct) =
+            result.to_tuple2().map_err(|e| anyhow!("eval_step tuple: {e:?}"))?;
+        Ok(StepResult { loss: scalar_f32(&loss)?, correct: scalar_f32(&correct)? })
+    }
+}
+
+impl DenseExecutor for PjrtExecutor {
+    fn train_step(
+        &mut self,
+        w: &[f32],
+        x: &[f32],
+        y1h: &[f32],
+        rows: usize,
+        grad_out: &mut [f32],
+    ) -> StepResult {
+        self.run_train(w, x, y1h, rows, grad_out).expect("pjrt train step failed")
+    }
+
+    fn eval_step(&mut self, w: &[f32], x: &[f32], y1h: &[f32], rows: usize) -> StepResult {
+        self.run_eval(w, x, y1h, rows).expect("pjrt eval step failed")
+    }
+
+    fn train_batch(&self) -> usize {
+        self.train_batch
+    }
+
+    fn eval_batch(&self) -> usize {
+        self.eval_batch
+    }
+
+    fn arch(&self) -> &ArchSpec {
+        &self.arch
+    }
+}
+
+/// Output of a fused step.
+#[derive(Clone, Debug)]
+pub struct FusedOut {
+    pub loss: f32,
+    pub correct: f32,
+    /// Raw `Qᵀ ∇_w L` (the coordinator applies the straight-through gate).
+    pub grad_s: Vec<f32>,
+}
+
+/// Fused flagship executor: `(z, Q-layouts, batch) → (loss, grad_s,
+/// correct)` with the L1 Pallas kernels lowered inside the artifact.
+pub struct FusedStepExec {
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+    pub arch: ArchSpec,
+    pub n: usize,
+    pub d: usize,
+    /// Padded CSC width the artifact was lowered with.
+    pub c: usize,
+    pub batch: usize,
+    /// Device-resident Q layout buffers (rid, rv, cid, cv) — uploaded
+    /// once by [`Self::load_q`]; the hot path then ships only z/x/y per
+    /// step (§Perf: re-uploading Q literals every call dominated the
+    /// fused step, 8.9 ms → see EXPERIMENTS.md).
+    q_buffers: Option<[xla::PjRtBuffer; 4]>,
+}
+
+impl FusedStepExec {
+    /// Upload the Q layout to the device once; subsequent
+    /// [`Self::step_resident`] calls ship only the per-step tensors.
+    pub fn load_q(&mut self, rid: &[i32], rv: &[f32], cid: &[i32], cv: &[f32]) -> Result<()> {
+        let m = self.arch.num_params();
+        assert_eq!(rid.len(), m * self.d);
+        assert_eq!(cid.len(), self.n * self.c);
+        let up_i32 = |v: &[i32], dims: &[usize]| {
+            self.client
+                .buffer_from_host_buffer::<i32>(v, dims, None)
+                .map_err(|e| anyhow!("uploading i32 buffer: {e:?}"))
+        };
+        let up_f32 = |v: &[f32], dims: &[usize]| {
+            self.client
+                .buffer_from_host_buffer::<f32>(v, dims, None)
+                .map_err(|e| anyhow!("uploading f32 buffer: {e:?}"))
+        };
+        self.q_buffers = Some([
+            up_i32(rid, &[m, self.d])?,
+            up_f32(rv, &[m, self.d])?,
+            up_i32(cid, &[self.n, self.c])?,
+            up_f32(cv, &[self.n, self.c])?,
+        ]);
+        Ok(())
+    }
+
+    /// Hot-path step over the device-resident Q (requires [`Self::load_q`]).
+    pub fn step_resident(
+        &mut self,
+        z: &[f32],
+        x: &[f32],
+        y1h: &[f32],
+        rows: usize,
+    ) -> Result<FusedOut> {
+        let (in_dim, out_dim) = (self.arch.input_dim(), self.arch.output_dim());
+        assert_eq!(z.len(), self.n);
+        assert!(rows <= self.batch);
+        let mut xs = x.to_vec();
+        xs.resize(self.batch * in_dim, 0.0);
+        let mut ys = y1h.to_vec();
+        ys.resize(self.batch * out_dim, 0.0);
+
+        let up_f32 = |v: &[f32], dims: &[usize]| {
+            self.client
+                .buffer_from_host_buffer::<f32>(v, dims, None)
+                .map_err(|e| anyhow!("staging f32 buffer: {e:?}"))
+        };
+        let zb = up_f32(z, &[self.n])?;
+        let xb = up_f32(&xs, &[self.batch, in_dim])?;
+        let yb = up_f32(&ys, &[self.batch, out_dim])?;
+        let q = self
+            .q_buffers
+            .as_ref()
+            .ok_or_else(|| anyhow!("step_resident before load_q"))?;
+        let args: [&xla::PjRtBuffer; 7] = [&zb, &q[0], &q[1], &q[2], &q[3], &xb, &yb];
+        let result = self
+            .exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("fused_step execute_b: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fused_step readback: {e:?}"))?;
+        let (loss, grad_s, correct) =
+            result.to_tuple3().map_err(|e| anyhow!("fused_step tuple: {e:?}"))?;
+        let grad_s = grad_s.to_vec::<f32>().map_err(|e| anyhow!("grad_s readback: {e:?}"))?;
+        Ok(FusedOut { loss: scalar_f32(&loss)?, correct: scalar_f32(&correct)?, grad_s })
+    }
+
+    /// `rid`/`rv` are the `[m, d]` row layout, `cid`/`cv` the `[n, c]`
+    /// padded CSC (from `QMatrix::to_csc(Some(c))`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn step(
+        &mut self,
+        z: &[f32],
+        rid: &[i32],
+        rv: &[f32],
+        cid: &[i32],
+        cv: &[f32],
+        x: &[f32],
+        y1h: &[f32],
+        rows: usize,
+    ) -> Result<FusedOut> {
+        let m = self.arch.num_params();
+        let (in_dim, out_dim) = (self.arch.input_dim(), self.arch.output_dim());
+        assert_eq!(z.len(), self.n);
+        assert_eq!(rid.len(), m * self.d);
+        assert_eq!(cid.len(), self.n * self.c);
+        assert!(rows <= self.batch);
+        let mut xs = x.to_vec();
+        xs.resize(self.batch * in_dim, 0.0);
+        let mut ys = y1h.to_vec();
+        ys.resize(self.batch * out_dim, 0.0);
+
+        let args = [
+            literal_1d_f32(z),
+            literal_2d_i32(rid, m, self.d)?,
+            literal_2d_f32(rv, m, self.d)?,
+            literal_2d_i32(cid, self.n, self.c)?,
+            literal_2d_f32(cv, self.n, self.c)?,
+            literal_2d_f32(&xs, self.batch, in_dim)?,
+            literal_2d_f32(&ys, self.batch, out_dim)?,
+        ];
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow!("fused_step execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fused_step readback: {e:?}"))?;
+        let (loss, grad_s, correct) =
+            result.to_tuple3().map_err(|e| anyhow!("fused_step tuple: {e:?}"))?;
+        let grad_s = grad_s.to_vec::<f32>().map_err(|e| anyhow!("grad_s readback: {e:?}"))?;
+        Ok(FusedOut { loss: scalar_f32(&loss)?, correct: scalar_f32(&correct)?, grad_s })
+    }
+}
+
+/// Convert a `QMatrix` + padded CSC into the i32/f32 buffers the fused
+/// artifact takes.
+pub fn fused_buffers(
+    q: &crate::sparse::QMatrix,
+    csc: &crate::sparse::CscView,
+) -> (Vec<i32>, Vec<f32>, Vec<i32>, Vec<f32>) {
+    let rid: Vec<i32> = q.rid.iter().map(|&x| x as i32).collect();
+    let cid: Vec<i32> = csc.cid.iter().map(|&x| x as i32).collect();
+    (rid, q.rv.clone(), cid, csc.cv.clone())
+}

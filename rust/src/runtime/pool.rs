@@ -1,0 +1,416 @@
+//! Persistent worker pool — the process-wide execution engine behind the
+//! parallel sparse products, the blocked GEMM kernels, and the federated
+//! client loop.
+//!
+//! The seed code spawned OS threads per call (`std::thread::scope` in
+//! `sparse::par`), which costs ~50–100 µs per kernel launch — comparable
+//! to the kernels themselves at the paper's sizes.  This pool spawns
+//! `available_parallelism() − 1` workers once (the caller thread is the
+//! remaining lane) and dispatches lifetime-erased closures over a shared
+//! queue, so a launch is one mutex push + condvar signal.
+//!
+//! Design notes:
+//!
+//! * **Scoped semantics on persistent threads.** [`ThreadPool::run`]
+//!   borrows the closure for the duration of the call and blocks until
+//!   every shard has finished (panics included), so the closure may
+//!   capture non-`'static` references.  The lifetime erasure is the one
+//!   `unsafe` transmute in this file; soundness is the blocking wait.
+//! * **No nested parallelism.** A `run` issued while the current thread
+//!   is already executing inside a pool region runs its shards serially
+//!   in place.  Workers therefore never *wait* on other workers, which
+//!   makes deadlock impossible by construction and keeps one level of
+//!   parallel split (the widest one) in charge of the machine.
+//! * **Determinism.** The pool only distributes *disjoint output
+//!   regions*; every element is computed by exactly one shard running
+//!   the same scalar code as the serial path, so parallel results are
+//!   bit-identical to serial ones (asserted by the kernel tests).
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// ~64k gather/FMA-grade operations per shard amortize the dispatch cost
+/// (one queue push + wakeup, ~1 µs) to well under 1%.
+pub const WORK_PER_THREAD: usize = 65_536;
+
+thread_local! {
+    /// True while this thread executes inside a pool region (worker
+    /// threads always; the caller thread during its own shard).
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Completion latch: `run` waits until all dispatched shards finish.
+struct Latch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+impl Latch {
+    fn new(count: usize) -> Self {
+        Self { remaining: Mutex::new(count), done: Condvar::new(), panicked: AtomicBool::new(false) }
+    }
+
+    fn count_down(&self) {
+        let mut g = self.remaining.lock().unwrap();
+        *g -= 1;
+        if *g == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut g = self.remaining.lock().unwrap();
+        while *g > 0 {
+            g = self.done.wait(g).unwrap();
+        }
+    }
+}
+
+/// One dispatched shard: a lifetime-erased shared closure plus its shard
+/// index.  The pointer stays valid because [`ThreadPool::run`] does not
+/// return before the latch reaches zero.
+struct Job {
+    f: *const (dyn Fn(usize) + Sync),
+    t: usize,
+    latch: Arc<Latch>,
+}
+
+// SAFETY: `f` is only dereferenced while the issuing `run` call blocks on
+// the latch, which keeps the referent alive; `dyn Fn + Sync` makes the
+// shared call itself thread-safe.
+unsafe impl Send for Job {}
+
+/// Queue message: a shard to run, or a worker-exit sentinel (sent by
+/// `Drop` so private pools don't leak parked threads).
+enum Msg {
+    Job(Job),
+    Exit,
+}
+
+struct Queue {
+    jobs: Mutex<VecDeque<Msg>>,
+    ready: Condvar,
+}
+
+/// The persistent pool.  Use [`global`] — one pool per process is the
+/// point; constructing private pools is for tests.
+pub struct ThreadPool {
+    queue: Arc<Queue>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    parallelism: usize,
+}
+
+impl ThreadPool {
+    /// Spawn `workers` background threads (total parallelism is
+    /// `workers + 1`: the caller thread runs shard 0).
+    pub fn new(workers: usize) -> Self {
+        let queue = Arc::new(Queue { jobs: Mutex::new(VecDeque::new()), ready: Condvar::new() });
+        let handles = (0..workers)
+            .map(|i| {
+                let q = Arc::clone(&queue);
+                std::thread::Builder::new()
+                    .name(format!("zampling-pool-{i}"))
+                    .spawn(move || worker_loop(&q))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        Self { queue, workers: handles, parallelism: workers + 1 }
+    }
+
+    fn with_default_size() -> Self {
+        let hw = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        Self::new(hw.saturating_sub(1))
+    }
+
+    /// Total parallel lanes (workers + the caller thread).
+    pub fn parallelism(&self) -> usize {
+        self.parallelism
+    }
+
+    /// Execute `f(t)` for every shard `t in 0..nt`, where `nt` is
+    /// `threads` clamped to `[1, parallelism]` — shard count equals lane
+    /// count, so size `threads` with [`threads_for`] and derive chunk
+    /// bounds from the shard index.  Blocks until all shards complete.
+    /// Shard 0 runs on the calling thread; nested calls (from inside a
+    /// shard) degrade to serial execution.
+    ///
+    /// Panics in any shard are propagated to the caller *after* every
+    /// shard has finished, so borrowed captures are never outlived.
+    pub fn run<F: Fn(usize) + Sync>(&self, threads: usize, f: F) {
+        let nt = threads.clamp(1, self.parallelism);
+        if nt == 1 || IN_POOL.with(|c| c.get()) {
+            for t in 0..nt {
+                f(t);
+            }
+            return;
+        }
+
+        let latch = Arc::new(Latch::new(nt - 1));
+        let f_obj: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY: see `Job` — the erased borrow outlives all uses because
+        // this function blocks on the latch before returning.
+        let f_ptr: *const (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f_obj)
+        };
+        {
+            let mut q = self.queue.jobs.lock().unwrap();
+            for t in 1..nt {
+                q.push_back(Msg::Job(Job { f: f_ptr, t, latch: Arc::clone(&latch) }));
+            }
+        }
+        self.queue.ready.notify_all();
+
+        // The caller is shard 0; flag the thread so nested `run`s stay
+        // serial instead of waiting on busy workers.
+        IN_POOL.with(|c| c.set(true));
+        let shard0 = catch_unwind(AssertUnwindSafe(|| f(0)));
+        IN_POOL.with(|c| c.set(false));
+
+        latch.wait();
+        if let Err(payload) = shard0 {
+            std::panic::resume_unwind(payload);
+        }
+        if latch.panicked.load(Ordering::Acquire) {
+            panic!("a pool worker shard panicked");
+        }
+    }
+
+    /// Shard `out` into `chunk`-element contiguous pieces and run
+    /// `f(piece, start_index)` for every piece across up to `threads`
+    /// lanes (each chunk is visited by exactly one lane; lanes stride
+    /// the chunk list, so any `threads`/`chunk` combination covers all
+    /// of `out`).
+    ///
+    /// This is the one place the disjoint-chunk [`SendPtr`] unsafety
+    /// lives; the parallel kernels are safe code on top of it.
+    pub fn run_chunks<T, F>(&self, threads: usize, out: &mut [T], chunk: usize, f: F)
+    where
+        T: Send,
+        F: Fn(&mut [T], usize) + Sync,
+    {
+        let len = out.len();
+        if len == 0 {
+            return;
+        }
+        assert!(chunk > 0, "run_chunks with zero chunk size");
+        let nchunks = len.div_ceil(chunk);
+        // Clamp before `run` so the stride below matches the actual
+        // lane count even when `threads` exceeds the pool.
+        let nt = threads.clamp(1, self.parallelism).min(nchunks);
+        let base = SendPtr::new(out.as_mut_ptr());
+        self.run(nt, |lane| {
+            let mut i = lane;
+            while i < nchunks {
+                let start = i * chunk;
+                let end = (start + chunk).min(len);
+                // SAFETY: chunk index `i` is visited by exactly one lane
+                // (lanes stride by `nt`), so the ranges are disjoint and
+                // in-bounds.
+                let piece = unsafe { base.slice(start, end - start) };
+                f(piece, start);
+                i += nt;
+            }
+        });
+    }
+}
+
+impl Drop for ThreadPool {
+    /// Unpark and join the workers (the [`global`] pool lives for the
+    /// process and never drops; this keeps private/test pools leak-free).
+    fn drop(&mut self) {
+        {
+            let mut q = self.queue.jobs.lock().unwrap();
+            for _ in 0..self.workers.len() {
+                q.push_back(Msg::Exit);
+            }
+        }
+        self.queue.ready.notify_all();
+        for h in self.workers.drain(..) {
+            h.join().ok();
+        }
+    }
+}
+
+fn worker_loop(queue: &Queue) {
+    IN_POOL.with(|c| c.set(true));
+    loop {
+        let msg = {
+            let mut q = queue.jobs.lock().unwrap();
+            loop {
+                if let Some(msg) = q.pop_front() {
+                    break msg;
+                }
+                q = queue.ready.wait(q).unwrap();
+            }
+        };
+        let job = match msg {
+            Msg::Job(job) => job,
+            Msg::Exit => return,
+        };
+        // SAFETY: the issuing `run` blocks until we count down below.
+        let f = unsafe { &*job.f };
+        if catch_unwind(AssertUnwindSafe(|| f(job.t))).is_err() {
+            job.latch.panicked.store(true, Ordering::Release);
+        }
+        job.latch.count_down();
+    }
+}
+
+static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+
+/// The process-wide pool, created on first use.
+pub fn global() -> &'static ThreadPool {
+    GLOBAL.get_or_init(ThreadPool::with_default_size)
+}
+
+/// Shards worth using for `work_items` independent gather/FMA-grade
+/// operations — the pool sizing heuristic shared by every kernel
+/// (documented in PERF.md).
+pub fn threads_for(work_items: usize) -> usize {
+    global().parallelism().min(work_items / WORK_PER_THREAD).max(1)
+}
+
+/// Mutable base pointer that may be shared across shards, for writing
+/// *disjoint* chunks of one output buffer from a `Fn` closure.
+pub struct SendPtr<T>(*mut T);
+
+// SAFETY: the wrapper only widens where the pointer may travel; all
+// dereferences go through the `unsafe` [`SendPtr::slice`], whose caller
+// contract (disjoint in-bounds ranges) is what makes the writes sound.
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    pub fn new(ptr: *mut T) -> Self {
+        Self(ptr)
+    }
+
+    /// Reborrow `[start, start + len)` as a mutable slice.
+    ///
+    /// # Safety
+    /// The range must be inside the original allocation and must not
+    /// overlap any range handed to a concurrently running shard.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice(&self, start: usize, len: usize) -> &mut [T] {
+        std::slice::from_raw_parts_mut(self.0.add(start), len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn runs_every_shard_exactly_once() {
+        let pool = ThreadPool::new(6); // parallelism 7
+        let hits = [const { AtomicUsize::new(0) }; 7];
+        pool.run(7, |t| {
+            hits[t].fetch_add(1, Ordering::Relaxed);
+        });
+        for (t, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "shard {t}");
+        }
+    }
+
+    #[test]
+    fn oversized_shard_request_clamps_to_parallelism() {
+        let pool = ThreadPool::new(1); // parallelism 2
+        let max_t = AtomicUsize::new(0);
+        let calls = AtomicUsize::new(0);
+        pool.run(64, |t| {
+            max_t.fetch_max(t, Ordering::Relaxed);
+            calls.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 2);
+        assert_eq!(max_t.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn borrows_non_static_state() {
+        let pool = ThreadPool::new(2);
+        let input: Vec<u64> = (0..1000).collect();
+        let mut out = vec![0u64; 3];
+        let base = SendPtr::new(out.as_mut_ptr());
+        let chunk = input.len().div_ceil(3);
+        pool.run(3, |t| {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(input.len());
+            let cell = unsafe { base.slice(t, 1) };
+            cell[0] = input[lo..hi].iter().sum();
+        });
+        assert_eq!(out.iter().sum::<u64>(), 1000 * 999 / 2);
+    }
+
+    #[test]
+    fn run_chunks_covers_everything_once_even_oversubscribed() {
+        let pool = ThreadPool::new(2); // parallelism 3
+        let mut out = vec![0u32; 103];
+        pool.run_chunks(64, &mut out, 10, |piece, start| {
+            for (i, v) in piece.iter_mut().enumerate() {
+                *v += (start + i) as u32 + 1;
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i as u32 + 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn nested_run_degrades_to_serial() {
+        let pool = ThreadPool::new(2);
+        let count = AtomicUsize::new(0);
+        pool.run(3, |_| {
+            // Nested region: must execute inline without deadlocking.
+            pool.run(3, |_| {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 9);
+    }
+
+    #[test]
+    fn reuse_across_many_launches() {
+        let pool = ThreadPool::new(2);
+        let total = AtomicUsize::new(0);
+        for _ in 0..100 {
+            pool.run(3, |t| {
+                total.fetch_add(t, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 100 * 3);
+    }
+
+    #[test]
+    fn worker_panic_propagates_after_completion() {
+        let pool = ThreadPool::new(2);
+        let survived = AtomicUsize::new(0);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(3, |t| {
+                if t == 2 {
+                    panic!("shard 2 dies");
+                }
+                survived.fetch_add(1, Ordering::Relaxed);
+            });
+        }));
+        assert!(result.is_err());
+        assert_eq!(survived.load(Ordering::Relaxed), 2);
+        // The pool must still be usable afterwards.
+        let ok = AtomicUsize::new(0);
+        pool.run(3, |_| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ok.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_sized() {
+        assert!(global().parallelism() >= 1);
+        assert_eq!(threads_for(0), 1);
+        assert!(threads_for(usize::MAX / 2) <= global().parallelism());
+    }
+}

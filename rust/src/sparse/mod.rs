@@ -19,7 +19,7 @@ mod par;
 mod prune;
 
 pub use gen::csc_pad_width;
-pub use par::{spmv_par_into, spmv_t_par_into};
+pub use par::{spmv_bits_par_into, spmv_par_into, spmv_t_par_into};
 pub use prune::PrunedModel;
 
 use crate::nn::ArchSpec;
@@ -84,8 +84,15 @@ impl QMatrix {
     pub fn spmv_into(&self, z: &[f32], w: &mut [f32]) {
         assert_eq!(z.len(), self.n);
         assert_eq!(w.len(), self.m);
+        self.spmv_rows(z, w, 0);
+    }
+
+    /// Row-range core shared by the serial and pool-parallel paths:
+    /// fills `w_chunk` with rows `[row0, row0 + w_chunk.len())`.
+    pub(crate) fn spmv_rows(&self, z: &[f32], w_chunk: &mut [f32], row0: usize) {
         let d = self.d;
-        for (i, wi) in w.iter_mut().enumerate() {
+        for (i_local, wi) in w_chunk.iter_mut().enumerate() {
+            let i = row0 + i_local;
             let (ids, vals) = (&self.rid[i * d..(i + 1) * d], &self.rv[i * d..(i + 1) * d]);
             let mut acc = 0.0f32;
             for k in 0..d {
@@ -104,8 +111,14 @@ impl QMatrix {
     pub fn spmv_bits_into(&self, bits: &[u64], w: &mut [f32]) {
         assert!(bits.len() * 64 >= self.n);
         assert_eq!(w.len(), self.m);
+        self.spmv_bits_rows(bits, w, 0);
+    }
+
+    /// Row-range core of [`Self::spmv_bits_into`].
+    pub(crate) fn spmv_bits_rows(&self, bits: &[u64], w_chunk: &mut [f32], row0: usize) {
         let d = self.d;
-        for (i, wi) in w.iter_mut().enumerate() {
+        for (i_local, wi) in w_chunk.iter_mut().enumerate() {
+            let i = row0 + i_local;
             let (ids, vals) = (&self.rid[i * d..(i + 1) * d], &self.rv[i * d..(i + 1) * d]);
             // Two accumulators halve the FP dependency chain (§Perf).
             let (mut a0, mut a1) = (0.0f32, 0.0f32);
@@ -196,8 +209,15 @@ impl CscView {
     /// Iterates only the true degree of each column, not the padding.
     pub fn spmv_t_into(&self, g_w: &[f32], g_s: &mut [f32]) {
         assert_eq!(g_s.len(), self.n);
+        self.spmv_t_cols(g_w, g_s, 0);
+    }
+
+    /// Column-range core shared by the serial and pool-parallel paths:
+    /// fills `gs_chunk` with columns `[col0, col0 + gs_chunk.len())`.
+    pub(crate) fn spmv_t_cols(&self, g_w: &[f32], gs_chunk: &mut [f32], col0: usize) {
         let c = self.c;
-        for (j, gj) in g_s.iter_mut().enumerate() {
+        for (j_local, gj) in gs_chunk.iter_mut().enumerate() {
+            let j = col0 + j_local;
             let deg = self.degrees[j] as usize;
             let ids = &self.cid[j * c..j * c + deg];
             let vals = &self.cv[j * c..j * c + deg];

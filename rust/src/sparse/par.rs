@@ -1,85 +1,60 @@
-//! Multi-threaded sparse products (std scoped threads; no rayon offline).
+//! Pool-parallel sparse products.
 //!
-//! Row-parallel `spmv` and column-parallel `spmv_t`: both products are
-//! embarrassingly parallel over their output dimension, so the splits are
-//! contiguous output chunks with zero synchronization beyond the join.
-//! The L3 perf pass (EXPERIMENTS.md §Perf) benchmarks these against the
-//! serial kernels; they win only for the MnistFc-scale `m`.
+//! Row-parallel `spmv` (float and bitset masks) and column-parallel
+//! `spmv_t`: all three products are embarrassingly parallel over their
+//! output dimension, so the splits are contiguous output chunks with zero
+//! synchronization beyond the pool latch.  Each chunk runs the *same*
+//! row/column core as the serial kernels (`QMatrix::spmv_rows` etc.), so
+//! parallel results are bit-identical to serial ones.
+//!
+//! Shards dispatch onto [`pool::global`] — the persistent worker pool —
+//! instead of the seed's per-call `std::thread::scope`, which spent
+//! ~50–100 µs spawning threads per product (comparable to the product
+//! itself at MnistFc scale).  Sizing comes from [`pool::threads_for`]:
+//! ~64k gather-accumulates per shard, so small-arch configs stay serial.
 
 use super::{CscView, QMatrix};
-
-/// Threads to use: capped so coordination overhead never dominates the
-/// small-arch configs.
-fn threads_for(work_items: usize) -> usize {
-    let hw = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
-    // ~64k gather-accumulates per thread amortizes spawn cost.
-    hw.min(work_items / 65_536).max(1)
-}
+use crate::runtime::pool;
 
 /// Parallel `w = Q z`.
 pub fn spmv_par_into(q: &QMatrix, z: &[f32], w: &mut [f32]) {
     assert_eq!(z.len(), q.n);
     assert_eq!(w.len(), q.m);
-    let nt = threads_for(q.nnz());
+    let nt = pool::threads_for(q.nnz());
     if nt <= 1 {
-        q.spmv_into(z, w);
+        q.spmv_rows(z, w, 0);
         return;
     }
     let chunk = q.m.div_ceil(nt);
-    let d = q.d;
-    std::thread::scope(|scope| {
-        for (t, w_chunk) in w.chunks_mut(chunk).enumerate() {
-            let start = t * chunk;
-            let rid = &q.rid;
-            let rv = &q.rv;
-            scope.spawn(move || {
-                for (i_local, wi) in w_chunk.iter_mut().enumerate() {
-                    let i = start + i_local;
-                    let ids = &rid[i * d..(i + 1) * d];
-                    let vals = &rv[i * d..(i + 1) * d];
-                    let mut acc = 0.0f32;
-                    for k in 0..d {
-                        acc += vals[k] * z[ids[k] as usize];
-                    }
-                    *wi = acc;
-                }
-            });
-        }
-    });
+    pool::global().run_chunks(nt, w, chunk, |w_chunk, row0| q.spmv_rows(z, w_chunk, row0));
+}
+
+/// Parallel `w = Q z` for a bitset mask (the sampled-regime hot path).
+pub fn spmv_bits_par_into(q: &QMatrix, bits: &[u64], w: &mut [f32]) {
+    assert!(bits.len() * 64 >= q.n);
+    assert_eq!(w.len(), q.m);
+    let nt = pool::threads_for(q.nnz());
+    if nt <= 1 {
+        q.spmv_bits_rows(bits, w, 0);
+        return;
+    }
+    let chunk = q.m.div_ceil(nt);
+    pool::global()
+        .run_chunks(nt, w, chunk, |w_chunk, row0| q.spmv_bits_rows(bits, w_chunk, row0));
 }
 
 /// Parallel `g_s = Qᵀ g_w`.
 pub fn spmv_t_par_into(csc: &CscView, g_w: &[f32], g_s: &mut [f32]) {
     assert_eq!(g_s.len(), csc.n);
     let nnz: usize = csc.degrees.iter().map(|&x| x as usize).sum();
-    let nt = threads_for(nnz);
+    let nt = pool::threads_for(nnz);
     if nt <= 1 {
-        csc.spmv_t_into(g_w, g_s);
+        csc.spmv_t_cols(g_w, g_s, 0);
         return;
     }
     let chunk = csc.n.div_ceil(nt);
-    let c = csc.c;
-    std::thread::scope(|scope| {
-        for (t, gs_chunk) in g_s.chunks_mut(chunk).enumerate() {
-            let start = t * chunk;
-            let cid = &csc.cid;
-            let cv = &csc.cv;
-            let degrees = &csc.degrees;
-            scope.spawn(move || {
-                for (j_local, gj) in gs_chunk.iter_mut().enumerate() {
-                    let j = start + j_local;
-                    let deg = degrees[j] as usize;
-                    let ids = &cid[j * c..j * c + deg];
-                    let vals = &cv[j * c..j * c + deg];
-                    let mut acc = 0.0f32;
-                    for k in 0..deg {
-                        acc += vals[k] * g_w[ids[k] as usize];
-                    }
-                    *gj = acc;
-                }
-            });
-        }
-    });
+    pool::global()
+        .run_chunks(nt, g_s, chunk, |gs_chunk, col0| csc.spmv_t_cols(g_w, gs_chunk, col0));
 }
 
 #[cfg(test)]
@@ -111,6 +86,24 @@ mod tests {
     }
 
     #[test]
+    fn parallel_bits_matches_serial_bits() {
+        let arch = ArchSpec::mnistfc();
+        let q = QMatrix::generate(&arch, arch.num_params() / 8, 10, &SeedTree::new(31));
+        let mut r = Xoshiro256pp::seed_from(32);
+        let mut bits = vec![0u64; q.n.div_ceil(64)];
+        for j in 0..q.n {
+            if r.bernoulli(0.5) {
+                bits[j >> 6] |= 1 << (j & 63);
+            }
+        }
+        let mut w_ser = vec![0.0; q.m];
+        let mut w_par = vec![0.0; q.m];
+        q.spmv_bits_into(&bits, &mut w_ser);
+        spmv_bits_par_into(&q, &bits, &mut w_par);
+        assert_eq!(w_ser, w_par);
+    }
+
+    #[test]
     fn parallel_small_input_falls_back() {
         let arch = ArchSpec::new("tiny", &[4, 3, 2]);
         let q = QMatrix::generate(&arch, 10, 2, &SeedTree::new(1));
@@ -118,5 +111,13 @@ mod tests {
         let mut w = vec![0.0; q.m];
         spmv_par_into(&q, &z, &mut w); // must not panic on tiny sizes
         assert_eq!(w, q.spmv(&z));
+
+        let mut bits = vec![u64::MAX; 1];
+        bits[0] = 0b1010101010;
+        let mut wb = vec![0.0; q.m];
+        spmv_bits_par_into(&q, &bits, &mut wb); // tiny sizes stay serial
+        let mut wb_ser = vec![0.0; q.m];
+        q.spmv_bits_into(&bits, &mut wb_ser);
+        assert_eq!(wb, wb_ser);
     }
 }

@@ -3,8 +3,16 @@
 //! mean ± stddev, median, and optional throughput.  Benches are
 //! `harness = false` binaries that call [`Bencher::run`] per case and
 //! [`table`]/[`row`] helpers for paper-table reproduction output.
+//!
+//! Perf benches additionally persist machine-readable baselines:
+//! [`update_bench_json`] merges a bench binary's section into the
+//! repo-root `BENCH_perf.json` (read–modify–write, one section per
+//! bench), so the perf trajectory is tracked across PRs.
 
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
+
+use crate::util::json::{self, Json};
 
 /// Result statistics of one benchmark case.
 #[derive(Clone, Debug)]
@@ -150,6 +158,73 @@ pub fn row<S: AsRef<str>>(cells: &[S]) {
     println!("{}", line.join(" "));
 }
 
+/// Target for [`update_bench_json`]: `$BENCH_JSON` if set (for perf
+/// hosts running a relocated binary), else the repo-root
+/// `BENCH_perf.json` next to the workspace manifest (compile-time path —
+/// correct when the bench runs from the checkout that built it).
+pub fn bench_json_path() -> PathBuf {
+    if let Ok(p) = std::env::var("BENCH_JSON") {
+        return PathBuf::from(p);
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_perf.json")
+}
+
+fn stats_json(s: &Stats) -> Json {
+    let mut fields = vec![
+        ("name", json::s(&s.name)),
+        ("iters", json::num(s.iters as f64)),
+        ("mean_ns", json::num(s.mean.as_nanos() as f64)),
+        ("stddev_ns", json::num(s.stddev.as_nanos() as f64)),
+        ("median_ns", json::num(s.median.as_nanos() as f64)),
+        ("min_ns", json::num(s.min.as_nanos() as f64)),
+    ];
+    if let Some(g) = s.throughput_gbps() {
+        fields.push(("throughput_gbps", json::num(g)));
+    }
+    json::obj(fields)
+}
+
+/// Merge one bench binary's results into `path` as `section`, keeping
+/// every other section intact (each `bench_perf_*` owns one section).
+/// `extra` carries derived headline numbers (e.g. speedups) that a perf
+/// gate can read without re-deriving them from the raw rows.
+pub fn update_bench_json(
+    path: &Path,
+    section: &str,
+    stats: &[Stats],
+    extra: &[(&str, f64)],
+) -> std::io::Result<()> {
+    // Only a genuinely absent file starts fresh.  A present-but-bad file
+    // (unparseable, non-object) or a failing read is an error, not a
+    // reset: silently replacing it would wipe the other benches'
+    // sections.
+    let mut root = match std::fs::read_to_string(path) {
+        Ok(src) => match Json::parse(&src) {
+            Ok(Json::Obj(m)) => m,
+            Ok(_) | Err(_) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("{} exists but is not a JSON object; fix or delete it", path.display()),
+                ))
+            }
+        },
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Default::default(),
+        Err(e) => return Err(e),
+    };
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let mut fields = vec![
+        ("status", json::s("measured")),
+        ("threads", json::num(threads as f64)),
+        ("cases", json::arr(stats.iter().map(stats_json))),
+    ];
+    let extras: Vec<(&str, Json)> = extra.iter().map(|&(k, v)| (k, json::num(v))).collect();
+    if !extras.is_empty() {
+        fields.push(("derived", json::obj(extras)));
+    }
+    root.insert(section.to_string(), json::obj(fields));
+    std::fs::write(path, Json::Obj(root).to_string() + "\n")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -185,6 +260,34 @@ mod tests {
             bytes_per_iter: Some(2_000_000_000),
         };
         assert!((s.throughput_gbps().unwrap() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_json_merges_sections() {
+        let dir = std::env::temp_dir().join(format!("zampling-bench-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        let s = Stats {
+            name: "case-a".into(),
+            iters: 3,
+            mean: Duration::from_micros(10),
+            stddev: Duration::ZERO,
+            median: Duration::from_micros(10),
+            min: Duration::from_micros(9),
+            bytes_per_iter: Some(1000),
+        };
+        update_bench_json(&path, "alpha", &[s.clone()], &[("speedup", 2.5)]).unwrap();
+        update_bench_json(&path, "beta", &[s], &[]).unwrap();
+        let root = crate::util::json::Json::parse(&std::fs::read_to_string(&path).unwrap())
+            .expect("valid json");
+        let alpha = root.get("alpha").expect("alpha kept after beta merge");
+        assert_eq!(
+            alpha.get("derived").and_then(|d| d.get("speedup")).and_then(|v| v.as_f64()),
+            Some(2.5)
+        );
+        let beta_cases = root.get("beta").and_then(|b| b.get("cases")).and_then(|c| c.as_arr());
+        assert_eq!(beta_cases.map(|c| c.len()), Some(1));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -1,0 +1,130 @@
+//! Minimal `anyhow`-compatible error plumbing (the real crate is
+//! unavailable offline; see Cargo.toml).
+//!
+//! Provides the subset the crate actually uses: a string-backed [`Error`],
+//! `Result<T>` defaulting to it, a [`Context`] extension trait, and the
+//! `anyhow!` / `bail!` / `ensure!` macros (exported at the crate root, so
+//! call sites use `crate::anyhow!` or import them with
+//! `use crate::{anyhow, bail}`).
+
+use std::fmt;
+
+/// String-backed error: contexts are folded into the message eagerly
+/// (`"context: source"`), which is all the CLI and tests ever render.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Self { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like `anyhow`, `Error` deliberately does NOT implement
+// `std::error::Error`, so this blanket `From` can absorb every std error
+// type without overlapping `From<Error> for Error`.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Self::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context` subset: attach a message to the error of a `Result`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+/// Build an [`Error`](crate::util::error::Error) from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return with an error built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// `bail!` unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Result<u32> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))
+    }
+
+    #[test]
+    fn question_mark_absorbs_std_errors() {
+        fn inner() -> Result<u32> {
+            let v = io_err().context("reading thing")?;
+            Ok(v)
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("reading thing"), "{e}");
+        assert!(e.to_string().contains("gone"), "{e}");
+    }
+
+    #[test]
+    fn macros_format_and_bail() {
+        fn inner(x: usize) -> Result<usize> {
+            crate::ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                crate::bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(inner(2).unwrap(), 2);
+        assert!(inner(12).unwrap_err().to_string().contains("x too big: 12"));
+        assert!(inner(3).unwrap_err().to_string().contains("right out"));
+        let e = crate::anyhow!("plain {}", 7);
+        assert_eq!(e.to_string(), "plain 7");
+    }
+
+    #[test]
+    fn with_context_is_lazy_formatting() {
+        let r: std::result::Result<(), &str> = Err("boom");
+        let e = r.with_context(|| format!("step {}", 4)).unwrap_err();
+        assert_eq!(e.to_string(), "step 4: boom");
+    }
+}

@@ -25,7 +25,7 @@ pub use trainer::{
 };
 
 use crate::rng::{Normal, Rng};
-use crate::sparse::QMatrix;
+use crate::sparse::{spmv_par_into, QMatrix};
 
 /// Clip to the unit interval — the paper's `f(x) = max(min(x, 1), 0)`
 /// ("ReLU clipped at 1"), used instead of Zhou et al.'s sigmoid.
@@ -92,6 +92,20 @@ impl ProbVector {
     pub fn sample_mask<R: Rng>(&self, rng: &mut R, out: &mut Vec<bool>) {
         out.clear();
         out.extend(self.p.iter().map(|&pi| rng.next_f32() < pi));
+    }
+
+    /// Sample `z ~ Bern(p)` directly into a `u64` bitset — the wire
+    /// format and the input of the branchless `spmv_bits` kernels, so
+    /// the sampled-regime hot path skips the bool→f32 widening entirely.
+    /// Consumes the rng stream identically to [`Self::sample_mask`].
+    pub fn sample_mask_bits<R: Rng>(&self, rng: &mut R, out: &mut Vec<u64>) {
+        out.clear();
+        out.resize(self.p.len().div_ceil(64), 0u64);
+        for (j, &pi) in self.p.iter().enumerate() {
+            if rng.next_f32() < pi {
+                out[j >> 6] |= 1 << (j & 63);
+            }
+        }
     }
 
     /// Deterministic rounding `p∘ = argmin_{z∈{0,1}} |p − z|` (Appendix A's
@@ -217,18 +231,18 @@ pub fn evaluate<R: Rng>(
     for _ in 0..samples {
         pv.sample_mask(rng, &mut mask);
         mask_to_f32(&mask, &mut zf);
-        q.spmv_into(&zf, &mut w);
+        spmv_par_into(q, &zf, &mut w);
         let (_, acc) = eval_dataset(exec, &w, x, y1h, rows);
         accs.push(acc);
         best = best.max(acc);
     }
     // Expected network: w = Q p.
-    q.spmv_into(pv.probs(), &mut w);
+    spmv_par_into(q, pv.probs(), &mut w);
     let (_, expected) = eval_dataset(exec, &w, x, y1h, rows);
     // Discretized network.
     let disc = pv.discretize();
     mask_to_f32(&disc, &mut zf);
-    q.spmv_into(&zf, &mut w);
+    spmv_par_into(q, &zf, &mut w);
     let (_, discretized) = eval_dataset(exec, &w, x, y1h, rows);
     EvalReport {
         mean_sampled_acc: accs.mean(),
@@ -296,6 +310,22 @@ mod tests {
         assert_eq!(ones[0], 0);
         assert_eq!(ones[1], 2000);
         assert!((900..1100).contains(&ones[2]), "{ones:?}");
+    }
+
+    #[test]
+    fn bitset_sampling_matches_bool_sampling() {
+        let mut init = Xoshiro256pp::seed_from(9);
+        let pv = ProbVector::init_uniform(300, &mut init);
+        let mut r1 = Xoshiro256pp::seed_from(5);
+        let mut r2 = Xoshiro256pp::seed_from(5);
+        let mut mask = Vec::new();
+        let mut bits = Vec::new();
+        pv.sample_mask(&mut r1, &mut mask);
+        pv.sample_mask_bits(&mut r2, &mut bits);
+        assert_eq!(bits.len(), 300usize.div_ceil(64));
+        for (j, &b) in mask.iter().enumerate() {
+            assert_eq!((bits[j >> 6] >> (j & 63)) & 1 == 1, b, "bit {j}");
+        }
     }
 
     #[test]

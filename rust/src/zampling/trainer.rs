@@ -18,12 +18,12 @@
 
 use std::sync::Arc;
 
-use super::{evaluate, mask_to_f32, DenseExecutor, EvalReport, ProbVector, ScoreOptimizer};
+use super::{evaluate, DenseExecutor, EvalReport, ProbVector, ScoreOptimizer};
 use crate::config::TrainConfig;
 use crate::data::Dataset;
 use crate::nn::one_hot_into;
 use crate::rng::{SeedTree, Xoshiro256pp};
-use crate::sparse::{CscView, QMatrix};
+use crate::sparse::{spmv_bits_par_into, spmv_par_into, spmv_t_par_into, CscView, QMatrix};
 
 /// One epoch's record.
 #[derive(Clone, Copy, Debug)]
@@ -52,8 +52,7 @@ pub struct LocalZampling {
     opt: ScoreOptimizer,
     continuous: bool,
     // scratch
-    mask: Vec<bool>,
-    zf: Vec<f32>,
+    zbits: Vec<u64>,
     w: Vec<f32>,
     grad_w: Vec<f32>,
     grad_s: Vec<f32>,
@@ -85,8 +84,7 @@ impl LocalZampling {
         Self {
             opt: ScoreOptimizer::new(cfg.optimizer, cfg.lr, n),
             continuous: cfg.continuous,
-            mask: Vec::with_capacity(n),
-            zf: Vec::with_capacity(n),
+            zbits: Vec::with_capacity(n.div_ceil(64)),
             w: vec![0.0; m],
             grad_w: vec![0.0; m],
             grad_s: vec![0.0; n],
@@ -106,13 +104,17 @@ impl LocalZampling {
 
     /// Reconstruct the weights for the current regime: `Qz` (sampling a
     /// fresh mask) or `Qp` (continuous).
+    ///
+    /// Sampled regime: the mask goes straight into a `u64` bitset and
+    /// through the branchless `spmv_bits` kernel — no bool→f32 widening,
+    /// no float gather of 0/1 values.  Both regimes shard across the
+    /// pool at MnistFc scale.
     fn materialize_weights(&mut self) {
         if self.continuous {
-            self.q.spmv_into(self.pv.probs(), &mut self.w);
+            spmv_par_into(&self.q, self.pv.probs(), &mut self.w);
         } else {
-            self.pv.sample_mask(&mut self.rng, &mut self.mask);
-            mask_to_f32(&self.mask, &mut self.zf);
-            self.q.spmv_into(&self.zf, &mut self.w);
+            self.pv.sample_mask_bits(&mut self.rng, &mut self.zbits);
+            spmv_bits_par_into(&self.q, &self.zbits, &mut self.w);
         }
     }
 
@@ -132,7 +134,7 @@ impl LocalZampling {
         self.materialize_weights();
         let res = exec.train_step(&self.w, x, &self.y1h[..rows * out_dim], rows, &mut self.grad_w);
         // Chain rule through Q, gate at the clip saturations, step.
-        self.csc.spmv_t_into(&self.grad_w, &mut self.grad_s);
+        spmv_t_par_into(&self.csc, &self.grad_w, &mut self.grad_s);
         self.pv.gate_gradient(&mut self.grad_s);
         self.opt.step(&mut self.grad_s);
         self.pv.apply_update(&self.grad_s);

@@ -1,0 +1,161 @@
+//! Property tests for the blocked GEMM kernels: the blocked/tiled
+//! implementations must match the retained naive reference within
+//! f32-reassociation tolerance across shapes that exercise every
+//! partial-tile edge case (b, fan_in, fan_out not multiples of the 8×8
+//! tile), and the full MLP step built on them must still pass its
+//! finite-difference gradient check at odd batch sizes.
+
+use zampling::nn::{gemm, ArchSpec, MlpRef};
+use zampling::rng::{Rng, Xoshiro256pp};
+
+fn randv(len: usize, seed: u64) -> Vec<f32> {
+    let mut r = Xoshiro256pp::seed_from(seed);
+    (0..len).map(|_| r.next_f32() - 0.5).collect()
+}
+
+/// ReLU-sparse activations (roughly half zeros), like real layer inputs.
+fn relu_randv(len: usize, seed: u64) -> Vec<f32> {
+    let mut r = Xoshiro256pp::seed_from(seed);
+    (0..len).map(|_| (r.next_f32() - 0.5).max(0.0)).collect()
+}
+
+fn assert_close(reference: &[f32], got: &[f32], tag: &str) {
+    assert_eq!(reference.len(), got.len(), "{tag}: length");
+    for (i, (&x, &y)) in reference.iter().zip(got).enumerate() {
+        assert!(
+            (x - y).abs() <= 1e-4 * (1.0 + x.abs()),
+            "{tag}[{i}]: naive {x} vs blocked {y}"
+        );
+    }
+}
+
+/// Shapes around the 8×8 tile boundary: primes, one-offs, degenerate
+/// single-row/column cases, and a tile-aligned control.
+const SHAPES: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (1, 17, 9),
+    (3, 5, 7),
+    (7, 8, 9),
+    (8, 8, 8),
+    (9, 7, 23),
+    (13, 29, 11),
+    (16, 33, 31),
+    (31, 784, 10),
+    (64, 20, 20),
+];
+
+#[test]
+fn blocked_gemm_matches_naive_across_odd_shapes() {
+    for &(m, k, n) in SHAPES {
+        let a = randv(m * k, (m * 1000 + k) as u64);
+        let b = randv(k * n, (k * 1000 + n) as u64);
+        let mut c_ref = vec![0.0; m * n];
+        let mut c = vec![0.0; m * n];
+        gemm::naive::gemm(&a, &b, &mut c_ref, m, k, n);
+        gemm::gemm(&a, &b, &mut c, m, k, n);
+        assert_close(&c_ref, &c, &format!("gemm {m}x{k}x{n}"));
+    }
+}
+
+#[test]
+fn fused_bias_relu_matches_naive_across_odd_shapes() {
+    for &(m, k, n) in SHAPES {
+        let a = relu_randv(m * k, (m * 31 + n) as u64);
+        let b = randv(k * n, (n * 17 + k) as u64);
+        let bias = randv(n, (m + k + n) as u64);
+        for relu in [false, true] {
+            let mut c_ref = vec![0.0; m * n];
+            let mut c = vec![0.0; m * n];
+            gemm::naive::gemm_bias_act(&a, &b, Some(&bias), &mut c_ref, m, k, n, relu);
+            gemm::gemm_bias_act(&a, &b, Some(&bias), &mut c, m, k, n, relu);
+            assert_close(&c_ref, &c, &format!("bias_act {m}x{k}x{n} relu={relu}"));
+            if relu {
+                assert!(c.iter().all(|&v| v >= 0.0), "relu output negative");
+            }
+        }
+    }
+}
+
+#[test]
+fn weight_gradient_matches_naive_across_odd_shapes() {
+    for &(m, k, n) in SHAPES {
+        let a = relu_randv(m * k, (k * 7 + m) as u64);
+        let d = randv(m * n, (n * 3 + m) as u64);
+        // Non-zero initial gradient: both kernels must *accumulate*.
+        let mut g_ref = randv(k * n, 99);
+        let mut g = g_ref.clone();
+        gemm::naive::gemm_at_b_acc(&a, &d, &mut g_ref, m, k, n);
+        gemm::gemm_at_b_acc(&a, &d, &mut g, m, k, n);
+        assert_close(&g_ref, &g, &format!("at_b {m}x{k}x{n}"));
+    }
+}
+
+#[test]
+fn parallel_wrappers_are_bit_identical_to_serial() {
+    // Large enough that the pool heuristic actually engages.
+    let (m, k, n) = (256, 300, 100);
+    let a = randv(m * k, 1);
+    let b = randv(k * n, 2);
+    let bias = randv(n, 3);
+    let mut c_ser = vec![0.0; m * n];
+    let mut c_par = vec![0.0; m * n];
+    gemm::gemm_bias_act(&a, &b, Some(&bias), &mut c_ser, m, k, n, true);
+    gemm::gemm_bias_act_par(&a, &b, Some(&bias), &mut c_par, m, k, n, true);
+    assert_eq!(c_ser, c_par, "forward parallel != serial");
+
+    let d = randv(m * n, 4);
+    let mut g_ser = vec![0.0; k * n];
+    let mut g_par = vec![0.0; k * n];
+    gemm::gemm_at_b_acc(&a, &d, &mut g_ser, m, k, n);
+    gemm::gemm_at_b_acc_par(&a, &d, &mut g_par, m, k, n);
+    assert_eq!(g_ser, g_par, "grad parallel != serial");
+}
+
+#[test]
+fn transpose_matches_index_shuffle_on_odd_shapes() {
+    for &(r, c) in &[(1usize, 19usize), (19, 1), (31, 33), (100, 7)] {
+        let src = randv(r * c, (r * 100 + c) as u64);
+        let mut dst = vec![0.0; r * c];
+        gemm::transpose(&src, &mut dst, r, c);
+        for i in 0..r {
+            for j in 0..c {
+                assert_eq!(dst[j * r + i], src[i * c + j], "({i},{j})");
+            }
+        }
+    }
+}
+
+#[test]
+fn mlp_gradient_survives_odd_batch_sizes() {
+    // End-to-end: the blocked forward/backward must stay a valid
+    // gradient at batch sizes that are not tile multiples.
+    let arch = ArchSpec::new("odd", &[11, 9, 5]);
+    let mut r = Xoshiro256pp::seed_from(42);
+    let w: Vec<f32> = (0..arch.num_params()).map(|_| (r.next_f32() - 0.5) * 0.6).collect();
+    for b in [1usize, 3, 5, 13] {
+        let x: Vec<f32> = (0..b * 11).map(|_| r.next_f32() - 0.5).collect();
+        let mut y = vec![0.0f32; b * 5];
+        for row in 0..b {
+            y[row * 5 + row % 5] = 1.0;
+        }
+        let mut mlp = MlpRef::new(arch.clone(), 16);
+        let mut g = vec![0.0f32; w.len()];
+        mlp.train_step(&w, &x, &y, b, &mut g);
+        let mut wp = w.clone();
+        let eps = 1e-3f32;
+        for idx in [0usize, 7, arch.num_params() - 1] {
+            let orig = wp[idx];
+            wp[idx] = orig + eps;
+            let lp = mlp.eval_step(&wp, &x, &y, b).loss;
+            wp[idx] = orig - eps;
+            let lm = mlp.eval_step(&wp, &x, &y, b).loss;
+            wp[idx] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - g[idx]).abs() < 3e-2 * (1.0 + fd.abs()),
+                "b={b} idx={idx} fd={fd} analytic={}",
+                g[idx]
+            );
+        }
+    }
+}

@@ -3,7 +3,10 @@
 //! the split path (rust spmv + dense artifact + rust spmv_t).
 //!
 //! Requires `make artifacts` to have run (skips with a message if not —
-//! CI always builds artifacts first via the Makefile ordering).
+//! CI always builds artifacts first via the Makefile ordering) and a
+//! build with the `pjrt` cargo feature.
+
+#![cfg(feature = "pjrt")]
 
 use std::path::Path;
 
