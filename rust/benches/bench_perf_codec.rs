@@ -23,7 +23,7 @@ fn main() {
             });
             let aenc = arith::encode(&mask);
             b.run_bytes(&format!("arith/dec   n={n} q={q}"), bytes, || {
-                std::hint::black_box(arith::decode(&aenc, n));
+                std::hint::black_box(arith::decode(&aenc, n).expect("valid stream"));
             });
             b.run_bytes(&format!("rle/enc     n={n} q={q}"), bytes, || {
                 std::hint::black_box(rle::encode(&mask));

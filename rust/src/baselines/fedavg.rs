@@ -100,6 +100,8 @@ pub fn run_fedavg(
             downlink_bits: down_bytes as u64 * 8 * cfg.clients as u64,
             uplink_bits: up_bytes_total as u64 * 8,
             clients: cfg.clients as u32,
+            participants: cfg.clients as u32,
+            dropped: 0,
         });
 
         if round % eval_every == 0 || round + 1 == cfg.rounds {

@@ -8,6 +8,16 @@
 //!
 //! Implementation: 32-bit range coder with carry-free renormalization
 //! (the classic CACM87 design, 16-bit probability precision).
+//!
+//! Because encoder and decoder walk the *same* `low`/`range` trajectory,
+//! a valid stream is consumed byte-for-byte: the decoder reads exactly
+//! `encode(mask).len()` bytes for `n` symbols.  [`decode`] exploits that
+//! to reject malformed input — a truncated stream exhausts the bytes
+//! mid-decode and an oversized one leaves trailing bytes, and both are
+//! surfaced as errors instead of silently decoding garbage.
+
+use crate::ensure;
+use crate::util::error::Result;
 
 const PRECISION: u32 = 16;
 const TOP: u32 = 1 << 24;
@@ -83,20 +93,35 @@ pub fn encode(mask: &[bool]) -> Vec<u8> {
     out
 }
 
+/// Pull the next stream byte, erroring (instead of substituting zeros)
+/// once the input is exhausted — the truncation guard.
+#[inline]
+fn next_byte(bytes: &[u8], pos: &mut usize) -> Result<u32> {
+    match bytes.get(*pos) {
+        Some(&b) => {
+            *pos += 1;
+            Ok(b as u32)
+        }
+        None => Err(crate::anyhow!(
+            "arithmetic stream exhausted after {} bytes (truncated payload)",
+            bytes.len()
+        )),
+    }
+}
+
 /// Decode `n` bits from `bytes`.
-pub fn decode(bytes: &[u8], n: usize) -> Vec<bool> {
+///
+/// Errors on truncated input (stream exhausts before `n` symbols are
+/// recovered) and on trailing garbage (bytes left over after the `n`-th
+/// symbol) — a valid stream is consumed exactly.
+pub fn decode(bytes: &[u8], n: usize) -> Result<Vec<bool>> {
     let mut model = BitModel::new();
     let mut low: u32 = 0;
     let mut range: u32 = u32::MAX;
     let mut code: u32 = 0;
     let mut pos = 0usize;
-    let mut next = || {
-        let b = bytes.get(pos).copied().unwrap_or(0);
-        pos += 1;
-        b as u32
-    };
     for _ in 0..4 {
-        code = (code << 8) | next();
+        code = (code << 8) | next_byte(bytes, &mut pos)?;
     }
 
     let mut out = Vec::with_capacity(n);
@@ -121,12 +146,17 @@ pub fn decode(bytes: &[u8], n: usize) -> Vec<bool> {
                 false
             }
         } {
-            code = (code << 8) | next();
+            code = (code << 8) | next_byte(bytes, &mut pos)?;
             low <<= 8;
             range <<= 8;
         }
     }
-    out
+    ensure!(
+        pos == bytes.len(),
+        "arithmetic stream has {} trailing bytes after {n} symbols",
+        bytes.len() - pos
+    );
+    Ok(out)
 }
 
 /// Empirical bits-per-entry of an encoded mask.
@@ -161,7 +191,7 @@ mod tests {
             for n in [1usize, 7, 64, 1000, 10_000] {
                 let mask = bern_mask(n, q, seed);
                 let enc = encode(&mask);
-                assert_eq!(decode(&enc, n), mask, "q={q} n={n}");
+                assert_eq!(decode(&enc, n).unwrap(), mask, "q={q} n={n}");
             }
         }
     }
@@ -170,8 +200,38 @@ mod tests {
     fn roundtrip_degenerate_masks() {
         for mask in [vec![true; 500], vec![false; 500], vec![]] {
             let enc = encode(&mask);
-            assert_eq!(decode(&enc, mask.len()), mask);
+            assert_eq!(decode(&enc, mask.len()).unwrap(), mask);
         }
+    }
+
+    #[test]
+    fn valid_streams_are_consumed_exactly() {
+        // The decoder mirrors the encoder's renormalization schedule, so
+        // every byte of a valid stream is read — the invariant the
+        // truncation/trailing checks rely on.
+        for n in [0usize, 1, 64, 1000, 10_000] {
+            let mask = bern_mask(n, 0.3, n as u64 + 1);
+            let enc = encode(&mask);
+            assert_eq!(decode(&enc, n).unwrap(), mask, "n={n}");
+        }
+    }
+
+    #[test]
+    fn truncated_stream_is_an_error_not_garbage() {
+        let mask = bern_mask(5000, 0.25, 11);
+        let enc = encode(&mask);
+        // Any proper prefix must error: the decoder needs every byte.
+        for cut in [0usize, 1, 3, enc.len() / 2, enc.len() - 1] {
+            assert!(decode(&enc[..cut], mask.len()).is_err(), "cut={cut} decoded");
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_are_an_error() {
+        let mask = bern_mask(1000, 0.4, 12);
+        let mut enc = encode(&mask);
+        enc.push(0xAA);
+        assert!(decode(&enc, mask.len()).is_err());
     }
 
     #[test]

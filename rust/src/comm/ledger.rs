@@ -12,7 +12,14 @@ pub struct RoundCost {
     pub downlink_bits: u64,
     /// Clients → server total.
     pub uplink_bits: u64,
+    /// Clients whose masks actually arrived (what the per-client
+    /// averages divide by).
     pub clients: u32,
+    /// Clients selected for the round (≥ `clients` once workers drop
+    /// out; equals it under full participation with no failures).
+    pub participants: u32,
+    /// Selected clients whose mask never arrived (disconnect, deadline).
+    pub dropped: u32,
 }
 
 /// Accumulated ledger over a training run.
@@ -46,7 +53,14 @@ impl CommLedger {
             downlink_bits: down_bytes as u64 * 8 * clients as u64,
             uplink_bits: up_bytes as u64 * 8 * clients as u64,
             clients,
+            participants: clients,
+            dropped: 0,
         });
+    }
+
+    /// Total clients dropped (deadline or disconnect) over the run.
+    pub fn total_dropped(&self) -> u64 {
+        self.rounds.iter().map(|r| r.dropped as u64).sum()
     }
 
     pub fn total_uplink_bits(&self) -> u64 {
@@ -58,6 +72,11 @@ impl CommLedger {
     }
 
     /// Savings vs the naive protocol for a model with `m` parameters.
+    ///
+    /// An empty ledger (or one whose every round saw zero clients)
+    /// reports a savings factor of exactly 1.0 — "we saved nothing", not
+    /// the `naive_bits`× the old `avg.max(1.0)` clamp fabricated from a
+    /// 0/1 division.
     pub fn savings(&self, m: usize) -> SavingsReport {
         let naive_bits = 32u64 * m as u64;
         let mut up_per_client = 0.0f64;
@@ -71,7 +90,16 @@ impl CommLedger {
             down_per_client += r.downlink_bits as f64 / r.clients as f64;
             n += 1;
         }
-        let rounds = n.max(1) as f64;
+        if n == 0 {
+            return SavingsReport {
+                naive_bits,
+                avg_uplink_bits_per_client: 0.0,
+                avg_downlink_bits_per_client: 0.0,
+                client_savings: 1.0,
+                server_savings: 1.0,
+            };
+        }
+        let rounds = n as f64;
         let avg_up = up_per_client / rounds;
         let avg_down = down_per_client / rounds;
         SavingsReport {
@@ -100,6 +128,8 @@ mod tests {
                 uplink_bits: n as u64 * 10,
                 downlink_bits: 32 * n as u64 * 10,
                 clients: 10,
+                participants: 10,
+                dropped: 0,
             });
         }
         let rep = ledger.savings(m);
@@ -129,9 +159,30 @@ mod tests {
     }
 
     #[test]
-    fn empty_ledger_is_sane() {
+    fn empty_ledger_reports_no_savings() {
+        // The seed reported `naive_bits`× (3200× here) from 0/1 division
+        // + clamp; an empty ledger saved exactly nothing.
         let rep = CommLedger::default().savings(100);
         assert_eq!(rep.naive_bits, 3200);
-        assert!(rep.client_savings > 0.0);
+        assert_eq!(rep.client_savings, 1.0);
+        assert_eq!(rep.server_savings, 1.0);
+        assert_eq!(rep.avg_uplink_bits_per_client, 0.0);
+        assert_eq!(rep.avg_downlink_bits_per_client, 0.0);
+    }
+
+    #[test]
+    fn zero_client_rounds_do_not_fabricate_savings() {
+        // Rounds where every participant dropped contribute nothing.
+        let mut ledger = CommLedger::default();
+        ledger.record(RoundCost {
+            downlink_bits: 640,
+            uplink_bits: 0,
+            clients: 0,
+            participants: 2,
+            dropped: 2,
+        });
+        let rep = ledger.savings(100);
+        assert_eq!(rep.client_savings, 1.0);
+        assert_eq!(ledger.total_dropped(), 2);
     }
 }

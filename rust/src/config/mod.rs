@@ -145,6 +145,15 @@ pub struct FedConfig {
     pub local_epochs: usize,
     /// Encode uplink masks with the arithmetic coder instead of raw bits.
     pub entropy_code_uplink: bool,
+    /// Fraction of clients sampled per round (Konečný-style partial
+    /// participation).  Must lie in (0, 1]; 1.0 = every client, the
+    /// paper's setting.  Subsets are drawn from the shared `SeedTree`, so
+    /// runs stay deterministic.
+    pub participation: f64,
+    /// Per-round mask-collection deadline for the TCP leader, in
+    /// milliseconds.  0 = wait forever (the in-process simulator never
+    /// times out either way).
+    pub round_timeout_ms: u64,
 }
 
 impl FedConfig {
@@ -152,11 +161,20 @@ impl FedConfig {
     pub fn paper(factor: usize) -> Self {
         let mut train = TrainConfig::local(ArchSpec::mnistfc(), factor, 10, 1);
         train.lr = 0.1;
-        Self { train, clients: 10, rounds: 100, local_epochs: 1, entropy_code_uplink: false }
+        Self {
+            train,
+            clients: 10,
+            rounds: 100,
+            local_epochs: 1,
+            entropy_code_uplink: false,
+            participation: 1.0,
+            round_timeout_ms: 0,
+        }
     }
 
     pub const KNOWN_KEYS: &'static [&'static str] = &[
-        "clients", "rounds", "local-epochs", "entropy-code-uplink",
+        "clients", "rounds", "local-epochs", "entropy-code-uplink", "participation",
+        "round-timeout-ms",
     ];
 
     pub fn from_toml(doc: &TomlDoc) -> Result<Self, String> {
@@ -171,12 +189,18 @@ impl FedConfig {
             }
         }
         fed_doc.check_known_keys(Self::KNOWN_KEYS)?;
+        let participation = fed_doc.f64_or("participation", 1.0);
+        if !(participation > 0.0 && participation <= 1.0) {
+            return Err(format!("federated.participation {participation} must be in (0, 1]"));
+        }
         Ok(Self {
             train: TrainConfig::from_toml(&train_doc)?,
             clients: fed_doc.usize_or("clients", 10),
             rounds: fed_doc.usize_or("rounds", 100),
             local_epochs: fed_doc.usize_or("local-epochs", 1),
             entropy_code_uplink: fed_doc.bool_or("entropy-code-uplink", false),
+            participation,
+            round_timeout_ms: fed_doc.usize_or("round-timeout-ms", 0) as u64,
         })
     }
 }
@@ -203,6 +227,25 @@ mod tests {
         assert_eq!(f.train.d, 10);
         assert_eq!(f.train.n, 266_610 / 32);
         assert!((f.train.lr - 0.1).abs() < 1e-12);
+        assert_eq!(f.participation, 1.0);
+        assert_eq!(f.round_timeout_ms, 0);
+    }
+
+    #[test]
+    fn participation_parses_and_validates() {
+        let doc = TomlDoc::parse(
+            "arch = \"small\"\n[federated]\nparticipation = 0.5\nround-timeout-ms = 250\n",
+        )
+        .unwrap();
+        let f = FedConfig::from_toml(&doc).unwrap();
+        assert_eq!(f.participation, 0.5);
+        assert_eq!(f.round_timeout_ms, 250);
+        for bad in ["0.0", "-0.25", "1.5"] {
+            let doc =
+                TomlDoc::parse(&format!("arch = \"small\"\n[federated]\nparticipation = {bad}\n"))
+                    .unwrap();
+            assert!(FedConfig::from_toml(&doc).is_err(), "participation {bad} accepted");
+        }
     }
 
     #[test]

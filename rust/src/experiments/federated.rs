@@ -133,6 +133,67 @@ pub fn print_table1(rows: &[Table1Row]) {
     }
 }
 
+/// One point of the dropout sweep: accuracy vs participation rate (the
+/// Fig. 4 axis extended to Konečný-style partial participation).
+#[derive(Clone, Debug)]
+pub struct DropoutPoint {
+    pub participation: f64,
+    pub final_acc: f64,
+    pub best_acc: f64,
+    /// Mean participants per round actually selected.
+    pub avg_participants: f64,
+    pub total_uplink_bits: u64,
+}
+
+/// Sweep participation ∈ {0.25, 0.5, 0.75, 1.0} at m/n = 8, all runs
+/// sharing seeds, so the curves differ only in the per-round participant
+/// subsets.  The server renormalizes by the received count, so sparser
+/// rounds trade convergence speed (and total uplink) for per-round cost.
+pub fn run_dropout_sweep(scale: Scale, eval_every: usize) -> Vec<DropoutPoint> {
+    // Data and shards depend only on seed/arch, not on the participation
+    // rate — load once for the whole sweep.
+    let base = fed_config(8, scale);
+    let (shards, test) = load_fed_data(&base);
+    [0.25f64, 0.5, 0.75, 1.0]
+        .iter()
+        .map(|&rate| {
+            let mut cfg = base.clone();
+            cfg.participation = rate;
+            let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500);
+            let out =
+                run_federated(&cfg, &mut exec, &shards, &test, eval_samples(scale), eval_every);
+            let rounds = out.ledger.rounds.len().max(1) as f64;
+            let avg_participants =
+                out.ledger.rounds.iter().map(|r| r.participants as f64).sum::<f64>() / rounds;
+            DropoutPoint {
+                participation: rate,
+                final_acc: out.log.last_acc().unwrap_or(0.0),
+                best_acc: out.log.best_acc().unwrap_or(0.0),
+                avg_participants,
+                total_uplink_bits: out.ledger.total_uplink_bits(),
+            }
+        })
+        .collect()
+}
+
+/// Dropout-sweep printer (accuracy vs participation rate).
+pub fn print_dropout_sweep(points: &[DropoutPoint]) {
+    use crate::util::bench::{row, table};
+    table(
+        "Dropout sweep: accuracy vs participation rate",
+        &["participation", "avg clients/round", "final acc", "best acc", "total uplink Kb"],
+    );
+    for p in points {
+        row(&[
+            format!("{:.2}", p.participation),
+            format!("{:.1}", p.avg_participants),
+            format!("{:.4}", p.final_acc),
+            format!("{:.4}", p.best_acc),
+            format!("{}", p.total_uplink_bits / 1000),
+        ]);
+    }
+}
+
 /// Expected savings sanity (closed form): savings ignore framing bytes.
 pub fn ideal_savings(m: usize, n: usize) -> SavingsReport {
     SavingsReport {
@@ -147,6 +208,22 @@ pub fn ideal_savings(m: usize, n: usize) -> SavingsReport {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn dropout_sweep_covers_the_participation_axis() {
+        let points = run_dropout_sweep(Scale::Ci, 5);
+        assert_eq!(points.len(), 4);
+        // CI scale has 4 clients: rates map to 1, 2, 3, 4 per round.
+        for (p, want) in points.iter().zip([1.0f64, 2.0, 3.0, 4.0]) {
+            assert_eq!(p.avg_participants, want, "{p:?}");
+        }
+        // Raw masks have fixed size, so uplink grows with participation.
+        for w in points.windows(2) {
+            assert!(w[0].total_uplink_bits < w[1].total_uplink_bits, "{w:?}");
+        }
+        // Full participation still learns.
+        assert!(points[3].final_acc > 0.25, "{:?}", points[3]);
+    }
 
     #[test]
     fn zampling_row_ci_matches_ideal_savings_within_framing() {

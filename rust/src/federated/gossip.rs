@@ -165,6 +165,8 @@ pub fn run_gossip(
             uplink_bits: mask_bits * topo.num_messages() as u64,
             downlink_bits: 0,
             clients: k as u32,
+            participants: k as u32,
+            dropped: 0,
         });
 
         // 3. Evaluate the consensus (node-average) vector.

@@ -8,11 +8,17 @@
 //!    `Qᵀ`, score update, clip);
 //! 3. client samples `z_new ~ Bern(f(s))` and uplinks the **mask** —
 //!    `n` bits (or fewer with the arithmetic coder);
-//! 4. server: `p(t+1) = (1/K) Σ_k z_new^{(k)}`.
+//! 4. server: `p(t+1) = (1/R) Σ_{k ∈ received} z_new^{(k)}` — the mean is
+//!    renormalized by the `R` masks that actually arrived, so partial
+//!    participation ([`RoundPlan`]) and dropped/late clients shrink the
+//!    average instead of corrupting it.
 //!
 //! The wire is real even in the in-process simulator: every message is
 //! serialized through [`protocol`], the ledger records the actual encoded
-//! byte counts, and the TCP transport ships the same frames.
+//! byte counts, and the TCP transport ships the same frames.  The TCP
+//! leader ([`transport::Leader`]) is fault-tolerant: per-round deadlines,
+//! drop accounting, and reconnect-with-`Hello` (see `transport`'s module
+//! docs for the fault model).
 
 pub mod gossip;
 pub mod protocol;
@@ -20,7 +26,10 @@ pub mod transport;
 
 mod sim;
 
-pub use sim::{run_federated, run_federated_parallel, FedOutcome};
+pub use sim::{
+    client_round, run_federated, run_federated_parallel, ClientRound, FedOutcome, RoundOutcome,
+    RoundPlan,
+};
 
 use crate::comm::{pack_bits, unpack_bits};
 
@@ -52,16 +61,36 @@ impl Server {
         self.received += 1;
     }
 
-    /// Close the round: `p ← mean of received masks`.  Panics if no mask
-    /// arrived (protocol violation).
-    pub fn aggregate(&mut self) {
-        assert!(self.received > 0, "aggregate() with no client masks");
-        let k = self.received as f32;
+    /// How many masks arrived since the last aggregation.
+    pub fn received(&self) -> usize {
+        self.received
+    }
+
+    /// Close the round over whichever masks actually arrived:
+    /// `p ← mean of received masks`, renormalized by the received count.
+    /// Returns that count; with zero receipts the probabilities are left
+    /// unchanged — the round is a no-op, not a crash — so a fully
+    /// dropped round keeps the run alive.
+    pub fn try_aggregate(&mut self) -> usize {
+        let k = self.received;
+        if k == 0 {
+            return 0;
+        }
+        let kf = k as f32;
         for (p, &a) in self.probs.iter_mut().zip(&self.acc) {
-            *p = a as f32 / k;
+            *p = a as f32 / kf;
         }
         self.acc.fill(0);
         self.received = 0;
+        k
+    }
+
+    /// Close the round: `p ← mean of received masks`.  Panics if no mask
+    /// arrived — for call sites where an empty round is a logic error;
+    /// fault-tolerant paths use [`Self::try_aggregate`].
+    pub fn aggregate(&mut self) {
+        assert!(self.received > 0, "aggregate() with no client masks");
+        self.try_aggregate();
     }
 }
 
@@ -91,6 +120,30 @@ mod tests {
     #[should_panic(expected = "no client masks")]
     fn aggregate_without_masks_panics() {
         Server::new(vec![0.5; 2]).aggregate();
+    }
+
+    #[test]
+    fn try_aggregate_with_no_masks_is_a_noop() {
+        let mut s = Server::new(vec![0.25, 0.75]);
+        assert_eq!(s.try_aggregate(), 0);
+        assert_eq!(s.probs, vec![0.25, 0.75]);
+        // and the server still works on the next round
+        s.receive_mask(&pack_bits(&[true, false]));
+        assert_eq!(s.received(), 1);
+        assert_eq!(s.try_aggregate(), 1);
+        assert_eq!(s.probs, vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn try_aggregate_renormalizes_by_received_count() {
+        // 3 of 4 expected clients report: mean over the 3 that arrived.
+        let mut s = Server::new(vec![0.5; 2]);
+        s.receive_mask(&pack_bits(&[true, true]));
+        s.receive_mask(&pack_bits(&[true, false]));
+        s.receive_mask(&pack_bits(&[true, false]));
+        assert_eq!(s.try_aggregate(), 3);
+        assert_eq!(s.probs[0], 1.0);
+        assert!((s.probs[1] - 1.0 / 3.0).abs() < 1e-7);
     }
 
     #[test]

@@ -31,15 +31,31 @@ pub enum ServerMsg {
 pub enum ClientMsg {
     /// The sampled mask for `round` (encoded per `codec`).
     Mask { round: u32, client: u32, n: usize, mask: Vec<bool> },
-    /// Worker greets with its client id (TCP handshake).
+    /// Worker greets with its client id (TCP handshake; also the
+    /// reconnect path after a dropped connection).
     Hello { client: u32 },
+    /// Worker is leaving for good — the leader marks it dropped
+    /// immediately instead of waiting for a read error or deadline.
+    Abort { client: u32 },
+    /// Liveness ping: proves the connection is up without contributing
+    /// to any round.  The leader consumes and ignores it.
+    Heartbeat { client: u32 },
 }
+
+/// Upper bound on a wire-supplied mask length.  The decoder allocates
+/// `n` entries before decoding, and the arithmetic codec can expand a
+/// few bytes into billions of zero bits, so `n` from the wire must be
+/// capped or a hostile frame becomes a memory bomb.  16M entries is
+/// ~60× the paper's largest model (MnistFc m = 266,610).
+pub const MAX_MASK_LEN: usize = 1 << 24;
 
 const TAG_ROUND: u8 = 1;
 const TAG_SHUTDOWN: u8 = 2;
 const TAG_MASK_RAW: u8 = 3;
 const TAG_MASK_ARITH: u8 = 4;
 const TAG_HELLO: u8 = 5;
+const TAG_ABORT: u8 = 6;
+const TAG_HEARTBEAT: u8 = 7;
 
 fn frame(tag: u8, payload: &[u8]) -> Vec<u8> {
     let mut out = Vec::with_capacity(5 + payload.len());
@@ -79,6 +95,8 @@ pub fn encode_client(msg: &ClientMsg, codec: MaskCodec) -> Vec<u8> {
             frame(tag, &payload)
         }
         ClientMsg::Hello { client } => frame(TAG_HELLO, &client.to_le_bytes()),
+        ClientMsg::Abort { client } => frame(TAG_ABORT, &client.to_le_bytes()),
+        ClientMsg::Heartbeat { client } => frame(TAG_HEARTBEAT, &client.to_le_bytes()),
     }
 }
 
@@ -108,6 +126,63 @@ pub fn decode_server(buf: &[u8]) -> Result<ServerMsg> {
     }
 }
 
+/// Strict 4-byte client-id payload shared by Hello/Abort/Heartbeat.
+fn decode_client_id(p: &[u8], what: &str) -> Result<u32> {
+    if p.len() != 4 {
+        bail!("bad {what} payload length {} (want 4)", p.len());
+    }
+    Ok(u32::from_le_bytes(p.try_into().unwrap()))
+}
+
+/// What a client frame claims to be, from a cheap header peek.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClientFrameKind {
+    Mask,
+    Hello,
+    Abort,
+    Heartbeat,
+}
+
+/// What a server frame claims to be, from a cheap header peek.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServerFrameKind {
+    Round,
+    Shutdown,
+}
+
+/// Header-only peek for server frames: workers route Round vs Shutdown
+/// without materializing the probs vector (which `client_round` will
+/// decode anyway).
+pub fn peek_server_frame(buf: &[u8]) -> Result<ServerFrameKind> {
+    let (tag, _p) = split_frame(buf)?;
+    match tag {
+        TAG_ROUND => Ok(ServerFrameKind::Round),
+        TAG_SHUTDOWN => Ok(ServerFrameKind::Shutdown),
+        t => bail!("unexpected server tag {t}"),
+    }
+}
+
+/// Header-only peek: the frame's kind and claimed client id, **without**
+/// decoding the mask body.  The leader's reader threads use this to
+/// route frames, so a small arithmetic-coded frame is only expanded
+/// into its (up to `MAX_MASK_LEN`-entry) mask at aggregation time —
+/// never amplified while sitting in the event queue.
+pub fn peek_client_frame(buf: &[u8]) -> Result<(ClientFrameKind, u32)> {
+    let (tag, p) = split_frame(buf)?;
+    match tag {
+        TAG_MASK_RAW | TAG_MASK_ARITH => {
+            if p.len() < 12 {
+                bail!("bad Mask payload length {}", p.len());
+            }
+            Ok((ClientFrameKind::Mask, u32::from_le_bytes(p[4..8].try_into().unwrap())))
+        }
+        TAG_HELLO => Ok((ClientFrameKind::Hello, decode_client_id(p, "Hello")?)),
+        TAG_ABORT => Ok((ClientFrameKind::Abort, decode_client_id(p, "Abort")?)),
+        TAG_HEARTBEAT => Ok((ClientFrameKind::Heartbeat, decode_client_id(p, "Heartbeat")?)),
+        t => bail!("unexpected client tag {t}"),
+    }
+}
+
 pub fn decode_client(buf: &[u8]) -> Result<ClientMsg> {
     let (tag, p) = split_frame(buf)?;
     match tag {
@@ -118,22 +193,22 @@ pub fn decode_client(buf: &[u8]) -> Result<ClientMsg> {
             let round = u32::from_le_bytes(p[0..4].try_into().unwrap());
             let client = u32::from_le_bytes(p[4..8].try_into().unwrap());
             let n = u32::from_le_bytes(p[8..12].try_into().unwrap()) as usize;
+            if n > MAX_MASK_LEN {
+                bail!("mask length {n} exceeds protocol maximum {MAX_MASK_LEN}");
+            }
             let mask = if tag == TAG_MASK_RAW {
                 if p.len() - 12 != BitPack::wire_bytes(n) {
                     bail!("raw mask body {} bytes, want {}", p.len() - 12, BitPack::wire_bytes(n));
                 }
                 BitPack::decode(&p[12..], n)
             } else {
-                arith::decode(&p[12..], n)
+                arith::decode(&p[12..], n)?
             };
             Ok(ClientMsg::Mask { round, client, n, mask })
         }
-        TAG_HELLO => {
-            if p.len() != 4 {
-                bail!("bad Hello payload");
-            }
-            Ok(ClientMsg::Hello { client: u32::from_le_bytes(p.try_into().unwrap()) })
-        }
+        TAG_HELLO => Ok(ClientMsg::Hello { client: decode_client_id(p, "Hello")? }),
+        TAG_ABORT => Ok(ClientMsg::Abort { client: decode_client_id(p, "Abort")? }),
+        TAG_HEARTBEAT => Ok(ClientMsg::Heartbeat { client: decode_client_id(p, "Heartbeat")? }),
         t => bail!("unexpected client tag {t}"),
     }
 }
@@ -180,6 +255,79 @@ mod tests {
         // truncated payload
         let good = encode_server(&ServerMsg::Round { round: 0, probs: vec![1.0] });
         assert!(decode_server(&good[..good.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn control_frames_roundtrip() {
+        for msg in [ClientMsg::Abort { client: 3 }, ClientMsg::Heartbeat { client: 7 }] {
+            let frame = encode_client(&msg, MaskCodec::Raw);
+            assert_eq!(decode_client(&frame).unwrap(), msg);
+            // wrong payload length must error, not panic
+            let mut bad = frame.clone();
+            bad[1] = 3; // declared len 3, body still 4 → split keeps 3 bytes
+            bad.pop();
+            assert!(decode_client(&bad).is_err());
+        }
+    }
+
+    #[test]
+    fn truncated_arith_mask_is_an_error_not_garbage() {
+        let mut rng = Xoshiro256pp::seed_from(6);
+        let mask: Vec<bool> = (0..4096).map(|_| rng.bernoulli(0.2)).collect();
+        let msg = ClientMsg::Mask { round: 1, client: 0, n: mask.len(), mask };
+        let frame = encode_client(&msg, MaskCodec::Arithmetic);
+        // Chop bytes off the arithmetic body and patch the frame length:
+        // every truncation must surface as Err (the seed silently decoded
+        // zeros past end-of-input).
+        for chop in [1usize, 2, 8] {
+            let mut bad = frame[..frame.len() - chop].to_vec();
+            let plen = (bad.len() - 5) as u32;
+            bad[1..5].copy_from_slice(&plen.to_le_bytes());
+            assert!(decode_client(&bad).is_err(), "chop={chop} decoded");
+        }
+        // Extra trailing body bytes are rejected too.
+        let mut bad = frame.clone();
+        bad.push(0x55);
+        let plen = (bad.len() - 5) as u32;
+        bad[1..5].copy_from_slice(&plen.to_le_bytes());
+        assert!(decode_client(&bad).is_err());
+    }
+
+    #[test]
+    fn peek_matches_full_decode() {
+        let mask_msg = ClientMsg::Mask { round: 1, client: 9, n: 3, mask: vec![true; 3] };
+        for (msg, kind) in [
+            (mask_msg, ClientFrameKind::Mask),
+            (ClientMsg::Hello { client: 9 }, ClientFrameKind::Hello),
+            (ClientMsg::Abort { client: 9 }, ClientFrameKind::Abort),
+            (ClientMsg::Heartbeat { client: 9 }, ClientFrameKind::Heartbeat),
+        ] {
+            for codec in [MaskCodec::Raw, MaskCodec::Arithmetic] {
+                let frame = encode_client(&msg, codec);
+                assert_eq!(peek_client_frame(&frame).unwrap(), (kind, 9));
+            }
+        }
+        // peek is as strict as decode on headers
+        assert!(peek_client_frame(&[]).is_err());
+        assert!(peek_client_frame(&[9, 0, 0, 0, 0]).is_err());
+        assert!(peek_client_frame(&[3, 2, 0, 0, 0, 1, 2]).is_err());
+    }
+
+    #[test]
+    fn wire_supplied_mask_length_is_capped() {
+        // A forged header claiming n = u32::MAX must be rejected before
+        // any allocation, for both codecs.
+        for tag in [3u8, 4] {
+            let mut payload = Vec::new();
+            payload.extend_from_slice(&0u32.to_le_bytes());
+            payload.extend_from_slice(&0u32.to_le_bytes());
+            payload.extend_from_slice(&u32::MAX.to_le_bytes());
+            payload.extend_from_slice(&[0u8; 16]);
+            let mut frame = vec![tag];
+            frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+            frame.extend_from_slice(&payload);
+            assert!(decode_client(&frame).is_err(), "tag={tag}");
+        }
     }
 
     #[test]

@@ -1,8 +1,23 @@
 //! In-process federated simulator — the driver behind §3.2 / Fig. 4 /
-//! Table 1.
+//! Table 1 — and the round-orchestration types shared with the TCP
+//! transport.
 //!
-//! Two drivers share one per-client round body ([`client_round`]), so
-//! their numerics are identical by construction:
+//! Round orchestration is split into plan/outcome so every driver agrees
+//! on the semantics:
+//!
+//! * [`RoundPlan`] — which clients a round selects.  With
+//!   `cfg.participation < 1.0` a per-round subset is drawn from the
+//!   shared [`SeedTree`] (tag `"round-participants"`), so partial
+//!   participation stays deterministic across runs and transports; at
+//!   `participation = 1.0` no stream is consumed and the plan is every
+//!   client, byte-identical to the pre-participation driver.
+//! * [`RoundOutcome`] — what actually happened: masks received, clients
+//!   dropped, traffic, loss.  The server renormalizes by the *received*
+//!   count ([`Server::try_aggregate`]), so late or dead clients shrink
+//!   the mean instead of corrupting it.
+//!
+//! Two in-process drivers share one per-client round body
+//! ([`client_round`]), so their numerics are identical by construction:
 //!
 //! * [`run_federated`] — clients run sequentially through one shared
 //!   executor.  Works with any backend, including PJRT executors, whose
@@ -14,9 +29,11 @@
 //!   to the sequential run** (asserted by the tests here); only the
 //!   wall-clock changes.
 //!
-//! Every message still round-trips through the wire encoder in both
-//! drivers, so the ledger's byte counts are the real protocol costs,
-//! bit-for-bit equal to what the TCP transport ships.
+//! The TCP worker (`repro serve-client`) drives the *same*
+//! [`client_round`] body over real sockets, so every transport trains
+//! the same numbers.  Every message still round-trips through the wire
+//! encoder in all drivers, so the ledger's byte counts are the real
+//! protocol costs, bit-for-bit equal to what the TCP transport ships.
 
 use std::sync::{Arc, Mutex};
 
@@ -25,10 +42,12 @@ use crate::config::FedConfig;
 use crate::data::Dataset;
 use crate::metrics::{RoundRecord, RunLog};
 use crate::nn::one_hot_into;
-use crate::rng::{SeedTree, Xoshiro256pp};
+use crate::rng::{sample_distinct, SeedTree, Xoshiro256pp};
 use crate::runtime::pool;
 use crate::sparse::{CscView, QMatrix};
+use crate::util::error::Result;
 use crate::zampling::{evaluate, DenseExecutor, LocalZampling, NativeExecutor, ProbVector};
+use crate::{bail, ensure};
 
 use super::protocol::{
     decode_client, decode_server, encode_client, encode_server, ClientMsg, MaskCodec, ServerMsg,
@@ -42,32 +61,99 @@ pub struct FedOutcome {
     pub final_probs: Vec<f32>,
 }
 
+/// Which clients a round selects (sorted client ids).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RoundPlan {
+    pub round: usize,
+    pub participants: Vec<usize>,
+}
+
+impl RoundPlan {
+    /// Select the round's participants.  `participation = 1.0` selects
+    /// everyone without touching any rng stream; below that,
+    /// `max(1, round(participation·clients))` distinct clients are drawn
+    /// from the shared seed tree so leader and simulator agree on the
+    /// subset without communicating it.
+    pub fn for_round(
+        clients: usize,
+        participation: f64,
+        seeds: &SeedTree,
+        round: usize,
+    ) -> RoundPlan {
+        assert!(clients > 0, "round plan needs at least one client");
+        assert!(
+            participation > 0.0 && participation <= 1.0,
+            "participation {participation} must be in (0, 1]"
+        );
+        if participation >= 1.0 {
+            return RoundPlan { round, participants: (0..clients).collect() };
+        }
+        let k = ((participation * clients as f64).round() as usize).clamp(1, clients);
+        let mut rng = seeds.rng("round-participants", round as u64);
+        let mut picks: Vec<u32> = Vec::with_capacity(k);
+        sample_distinct(&mut rng, clients, k, &mut picks);
+        let mut participants: Vec<usize> = picks.into_iter().map(|i| i as usize).collect();
+        participants.sort_unstable();
+        RoundPlan { round, participants }
+    }
+}
+
+/// What actually happened in a round, after aggregation.
+#[derive(Clone, Debug)]
+pub struct RoundOutcome {
+    pub plan: RoundPlan,
+    /// Masks folded into the server's mean (the renormalization count).
+    pub received: usize,
+    /// Selected clients whose mask never arrived (always empty for the
+    /// in-process drivers; the TCP leader records real drops).
+    pub dropped: Vec<usize>,
+    pub up_bits: u64,
+    pub down_bits: u64,
+    pub round_loss: f64,
+}
+
 /// What one client contributes to a round (reduced in client order by
-/// both drivers so f64 summation order never changes).
-struct ClientRound {
-    loss: f64,
-    down_bits: u64,
-    up_bits: u64,
-    packed_mask: Vec<u64>,
+/// every driver so f64 summation order never changes).
+pub struct ClientRound {
+    pub round: u32,
+    pub loss: f64,
+    pub down_bits: u64,
+    pub up_bits: u64,
+    pub packed_mask: Vec<u64>,
+    /// The encoded uplink `Mask` frame — exactly the bytes the TCP
+    /// worker ships; the simulator counts the same frame so the ledgers
+    /// agree bit-for-bit.
+    pub frame: Vec<u8>,
 }
 
 /// Shared per-client round body: decode the broadcast, local
-/// training-by-sampling, sample and encode the uplink mask.
+/// training-by-sampling, sample and encode the uplink mask.  Driven by
+/// the in-process simulators *and* the TCP worker (`repro serve-client`),
+/// which is what keeps all transports numerically identical.
+///
+/// Errors (rather than panicking) on malformed `round_msg` bytes — the
+/// TCP worker feeds it frames straight off the wire.
 #[allow(clippy::too_many_arguments)]
-fn client_round(
+pub fn client_round(
     cfg: &FedConfig,
     client: &mut LocalZampling,
     exec: &mut dyn DenseExecutor,
     shard: &Dataset,
     seeds: &SeedTree,
-    round: usize,
     round_msg: &[u8],
     codec: MaskCodec,
     k: usize,
-) -> ClientRound {
+) -> Result<ClientRound> {
     // 1. Receive p(t) — every client decodes its own frame copy.
-    let msg = decode_server(round_msg).expect("round frame");
-    let ServerMsg::Round { probs, .. } = msg else { unreachable!() };
+    let ServerMsg::Round { round, probs } = decode_server(round_msg)? else {
+        bail!("client {k}: expected a Round frame");
+    };
+    ensure!(
+        probs.len() == cfg.train.n,
+        "client {k}: round {round} ships {} probs, model has n = {}",
+        probs.len(),
+        cfg.train.n
+    );
     let down_bits = round_msg.len() as u64 * 8;
 
     // 2. Client local training-by-sampling.
@@ -83,14 +169,14 @@ fn client_round(
     let mut mask = Vec::new();
     client.pv.sample_mask(&mut mask_rng, &mut mask);
     let frame = encode_client(
-        &ClientMsg::Mask { round: round as u32, client: k as u32, n: mask.len(), mask },
+        &ClientMsg::Mask { round, client: k as u32, n: mask.len(), mask },
         codec,
     );
     let up_bits = frame.len() as u64 * 8;
-    let ClientMsg::Mask { mask, .. } = decode_client(&frame).expect("mask frame") else {
-        unreachable!()
+    let ClientMsg::Mask { mask, .. } = decode_client(&frame)? else {
+        bail!("client {k}: own mask frame decoded to a non-Mask message");
     };
-    ClientRound { loss, down_bits, up_bits, packed_mask: pack_client_mask(&mask) }
+    Ok(ClientRound { round, loss, down_bits, up_bits, packed_mask: pack_client_mask(&mask), frame })
 }
 
 /// Shared-seed setup: `Q`, the server's `p(0)`, and the client states.
@@ -124,29 +210,36 @@ fn init_clients(
 
 /// Shared round tail, part 1: fold the per-client results into the
 /// server **in client order** (f64 summation order fixed), close the
-/// aggregation, and record the ledger row.  Returns
-/// `(up_bits, down_bits, round_loss)`.
+/// aggregation renormalized by the received count, and record the
+/// ledger row.
 fn reduce_round(
+    plan: RoundPlan,
     outs: Vec<ClientRound>,
     server: &mut Server,
     ledger: &mut CommLedger,
-    clients: u32,
-) -> (u64, u64, f64) {
+) -> RoundOutcome {
     let (mut up_bits, mut down_bits, mut round_loss) = (0u64, 0u64, 0.0f64);
-    for out in outs {
+    for out in &outs {
         down_bits += out.down_bits;
         up_bits += out.up_bits;
         round_loss += out.loss;
         server.receive_mask(&out.packed_mask);
     }
-    server.aggregate();
-    ledger.record(RoundCost { uplink_bits: up_bits, downlink_bits: down_bits, clients });
-    (up_bits, down_bits, round_loss)
+    let received = server.try_aggregate();
+    let dropped: Vec<usize> = Vec::new(); // in-process clients never drop
+    ledger.record(RoundCost {
+        uplink_bits: up_bits,
+        downlink_bits: down_bits,
+        clients: received as u32,
+        participants: plan.participants.len() as u32,
+        dropped: dropped.len() as u32,
+    });
+    RoundOutcome { plan, received, dropped, up_bits, down_bits, round_loss }
 }
 
 /// Shared round tail, part 2: evaluate the server's new `p` and push the
 /// round record when the cadence (or the final round) says so.  Keeping
-/// this in one place is what makes the two drivers' logs identical by
+/// this in one place is what makes the drivers' logs identical by
 /// construction.
 #[allow(clippy::too_many_arguments)]
 fn eval_and_log_round(
@@ -160,11 +253,9 @@ fn eval_and_log_round(
     eval_every: usize,
     eval_rng: &mut Xoshiro256pp,
     log: &mut RunLog,
-    round: usize,
-    round_loss: f64,
-    up_bits: u64,
-    down_bits: u64,
+    outcome: &RoundOutcome,
 ) {
+    let round = outcome.plan.round;
     if round % eval_every != 0 && round + 1 != cfg.rounds {
         return;
     }
@@ -175,9 +266,9 @@ fn eval_and_log_round(
         mean_sampled_acc: rep.mean_sampled_acc,
         sampled_acc_std: rep.sampled_acc_std,
         expected_acc: rep.expected_acc,
-        train_loss: round_loss / cfg.clients as f64,
-        uplink_bits: up_bits,
-        downlink_bits: down_bits,
+        train_loss: outcome.round_loss / outcome.received.max(1) as f64,
+        uplink_bits: outcome.up_bits,
+        downlink_bits: outcome.down_bits,
     });
 }
 
@@ -211,19 +302,20 @@ pub fn run_federated(
     let mut ledger = CommLedger::default();
 
     for round in 0..cfg.rounds {
-        // Broadcast p(t) — one encoded frame per client.
+        let plan = RoundPlan::for_round(cfg.clients, cfg.participation, &seeds, round);
+        // Broadcast p(t) — one encoded frame per participant.
         let round_msg =
             encode_server(&ServerMsg::Round { round: round as u32, probs: server.probs.clone() });
-        let outs: Vec<ClientRound> = clients
-            .iter_mut()
-            .enumerate()
-            .map(|(k, client)| {
-                client_round(cfg, client, exec, &shards[k], &seeds, round, &round_msg, codec, k)
+        let outs: Vec<ClientRound> = plan
+            .participants
+            .iter()
+            .map(|&k| {
+                client_round(cfg, &mut clients[k], exec, &shards[k], &seeds, &round_msg, codec, k)
+                    .expect("simulator frames are well-formed")
             })
             .collect();
 
-        let (up_bits, down_bits, round_loss) =
-            reduce_round(outs, &mut server, &mut ledger, cfg.clients as u32);
+        let outcome = reduce_round(plan, outs, &mut server, &mut ledger);
         eval_and_log_round(
             cfg,
             exec,
@@ -235,10 +327,7 @@ pub fn run_federated(
             eval_every,
             &mut eval_rng,
             &mut log,
-            round,
-            round_loss,
-            up_bits,
-            down_bits,
+            &outcome,
         );
     }
 
@@ -250,12 +339,12 @@ pub fn run_federated(
 /// use the sequential driver for those).
 ///
 /// Each pool lane owns a [`NativeExecutor`] (built once, reused across
-/// rounds) and strides the clients `k = lane, lane + nt, …`; the
-/// per-round evaluation runs on a dedicated executor whose eval scratch
-/// is sized by `eval_batch`, matching the executor a sequential caller
-/// would pass.  Per-client results are reduced in `k` order afterwards,
-/// so losses, ledgers, and `final_probs` are byte-identical to the
-/// sequential run.
+/// rounds) and strides the round's participants; the per-round
+/// evaluation runs on a dedicated executor whose eval scratch is sized
+/// by `eval_batch`, matching the executor a sequential caller would
+/// pass.  Per-client results are reduced in participant order
+/// afterwards, so losses, ledgers, and `final_probs` are byte-identical
+/// to the sequential run.
 pub fn run_federated_parallel(
     cfg: &FedConfig,
     shards: &[Dataset],
@@ -277,31 +366,35 @@ pub fn run_federated_parallel(
 
     let mut log = RunLog::new("federated");
     let mut ledger = CommLedger::default();
-    let k_total = cfg.clients;
-    let nt = pool::global().parallelism().min(k_total).max(1);
+    let nt_max = pool::global().parallelism().min(cfg.clients).max(1);
 
     // One training executor per lane, built once and reused every round
     // (lanes never evaluate, so eval scratch is minimal).  The mutexes
     // are uncontended — lane `l` only ever touches `lane_execs[l]`.
-    let lane_execs: Vec<Mutex<NativeExecutor>> = (0..nt)
+    let lane_execs: Vec<Mutex<NativeExecutor>> = (0..nt_max)
         .map(|_| Mutex::new(NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 1)))
         .collect();
 
     for round in 0..cfg.rounds {
+        let plan = RoundPlan::for_round(cfg.clients, cfg.participation, &seeds, round);
         let round_msg =
             encode_server(&ServerMsg::Round { round: round as u32, probs: server.probs.clone() });
 
-        // Shard clients across the pool.  Each client is visited by
-        // exactly one lane, so the per-client mutexes are uncontended —
-        // they only convert `&mut` access into something a shared `Fn`
-        // closure may hold.
+        // Shard the round's participants across the pool.  Each client is
+        // visited by exactly one lane, so the per-client mutexes are
+        // uncontended — they only convert `&mut` access into something a
+        // shared `Fn` closure may hold.
+        let parts = &plan.participants;
+        let p_total = parts.len();
+        let nt = nt_max.min(p_total).max(1);
         let cells: Vec<Mutex<&mut LocalZampling>> = clients.iter_mut().map(Mutex::new).collect();
         let results: Vec<Mutex<Option<ClientRound>>> =
-            (0..k_total).map(|_| Mutex::new(None)).collect();
+            (0..p_total).map(|_| Mutex::new(None)).collect();
         pool::global().run(nt, |lane| {
             let mut exec = lane_execs[lane].lock().unwrap();
-            let mut k = lane;
-            while k < k_total {
+            let mut i = lane;
+            while i < p_total {
+                let k = parts[i];
                 let mut client = cells[k].lock().unwrap();
                 let out = client_round(
                     cfg,
@@ -309,24 +402,24 @@ pub fn run_federated_parallel(
                     &mut *exec,
                     &shards[k],
                     &seeds,
-                    round,
                     &round_msg,
                     codec,
                     k,
-                );
-                *results[k].lock().unwrap() = Some(out);
-                k += nt;
+                )
+                .expect("simulator frames are well-formed");
+                *results[i].lock().unwrap() = Some(out);
+                i += nt;
             }
         });
 
-        // Collect in client order (bit-identical to the sequential loop).
+        // Collect in participant order (bit-identical to the sequential
+        // loop, which visits the sorted participant list).
         let outs: Vec<ClientRound> = results
             .iter()
             .map(|cell| cell.lock().unwrap().take().expect("client result missing"))
             .collect();
 
-        let (up_bits, down_bits, round_loss) =
-            reduce_round(outs, &mut server, &mut ledger, cfg.clients as u32);
+        let outcome = reduce_round(plan, outs, &mut server, &mut ledger);
         eval_and_log_round(
             cfg,
             &mut eval_exec,
@@ -338,10 +431,7 @@ pub fn run_federated_parallel(
             eval_every,
             &mut eval_rng,
             &mut log,
-            round,
-            round_loss,
-            up_bits,
-            down_bits,
+            &outcome,
         );
     }
 
@@ -387,6 +477,12 @@ mod tests {
         assert!(rep.client_savings > 200.0, "client savings {rep:?}");
         assert!(rep.server_savings > 6.0, "server savings {rep:?}");
         assert_eq!(out.final_probs.len(), cfg.train.n);
+        // full participation, no dropouts: every row says so
+        for r in &out.ledger.rounds {
+            assert_eq!(r.participants, cfg.clients as u32);
+            assert_eq!(r.clients, cfg.clients as u32);
+            assert_eq!(r.dropped, 0);
+        }
     }
 
     #[test]
@@ -431,7 +527,62 @@ mod tests {
         for (a, b) in sa.iter().zip(sb) {
             assert_eq!(a.uplink_bits, b.uplink_bits);
             assert_eq!(a.downlink_bits, b.downlink_bits);
+            assert_eq!(a.participants, b.participants);
         }
+    }
+
+    #[test]
+    fn round_plan_is_deterministic_and_sized() {
+        let seeds = SeedTree::new(9);
+        for round in 0..20 {
+            let a = RoundPlan::for_round(10, 0.5, &seeds, round);
+            let b = RoundPlan::for_round(10, 0.5, &seeds, round);
+            assert_eq!(a, b);
+            assert_eq!(a.participants.len(), 5);
+            let mut sorted = a.participants.clone();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 5, "duplicate participant in {a:?}");
+            assert!(a.participants.iter().all(|&k| k < 10));
+        }
+        // subsets vary across rounds
+        let p0 = RoundPlan::for_round(10, 0.5, &seeds, 0);
+        assert!((1..20).any(|r| RoundPlan::for_round(10, 0.5, &seeds, r) != p0));
+        // full participation selects everyone, tiny rates select at least one
+        assert_eq!(RoundPlan::for_round(4, 1.0, &seeds, 3).participants, vec![0, 1, 2, 3]);
+        assert_eq!(RoundPlan::for_round(4, 0.01, &seeds, 3).participants.len(), 1);
+    }
+
+    #[test]
+    fn partial_participation_renormalizes_and_stays_deterministic() {
+        let (mut cfg, shards, test) = tiny_fed(false);
+        cfg.participation = 0.5;
+        let mut e1 = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 256);
+        let mut e2 = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 256);
+        let a = run_federated(&cfg, &mut e1, &shards, &test, 4, 2);
+        let b = run_federated(&cfg, &mut e2, &shards, &test, 4, 2);
+        assert_eq!(a.final_probs, b.final_probs, "partial participation must be seeded");
+        for r in &a.ledger.rounds {
+            assert_eq!(r.participants, 2, "0.5 of 4 clients");
+            assert_eq!(r.clients, 2);
+            assert_eq!(r.dropped, 0);
+        }
+        // renormalized mean stays a probability
+        assert!(a.final_probs.iter().all(|&p| (0.0..=1.0).contains(&p)));
+        // and the parallel driver agrees byte-for-byte on the subset runs
+        let par = run_federated_parallel(&cfg, &shards, &test, 4, 2, 256);
+        assert_eq!(a.final_probs, par.final_probs);
+    }
+
+    #[test]
+    fn partial_participation_costs_proportionally_less_uplink() {
+        let (mut cfg, shards, test) = tiny_fed(false);
+        let mut e1 = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 256);
+        let full = run_federated(&cfg, &mut e1, &shards, &test, 2, 3);
+        cfg.participation = 0.5;
+        let mut e2 = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 256);
+        let half = run_federated(&cfg, &mut e2, &shards, &test, 2, 3);
+        // raw-codec mask frames have fixed size → exactly half the uplink
+        assert_eq!(half.ledger.total_uplink_bits() * 2, full.ledger.total_uplink_bits());
     }
 
     #[test]

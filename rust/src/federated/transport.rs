@@ -4,26 +4,53 @@
 //! each worker process (`repro serve-client`) connects, sends `Hello`,
 //! and then loops `recv Round → local train → send Mask` until
 //! `Shutdown`.  Frames are the exact bytes of `protocol::encode_*`, read
-//! with a 5-byte header prefetch.  Blocking std::net I/O with one thread
-//! per accepted connection on the leader side (tokio is unavailable
-//! offline; for ≤ tens of clients blocking threads are the simpler and
-//! equally fast design).
+//! with a 5-byte header prefetch.
+//!
+//! ## Fault model
+//!
+//! The leader is crash-proof against its workers: one blocking reader
+//! thread per connection feeds a single event channel, so masks are
+//! collected in *arrival* order with a per-round deadline instead of
+//! blocking in stream order.  A worker that disconnects, stalls past the
+//! deadline, sends a malformed frame, claims a foreign client id, or
+//! ships a wrong-length mask is marked **dropped** for the round — never
+//! panics the leader — and a dropped worker may rejoin by reconnecting
+//! with a fresh `Hello` (an acceptor thread keeps listening for the
+//! leader's whole lifetime).  Connections carry a generation number so
+//! events from a replaced connection can never corrupt its successor's
+//! round state.
+//!
+//! Blocking std::net I/O (tokio is unavailable offline); for ≤ tens of
+//! clients one thread per connection is the simpler and equally fast
+//! design.
 
 use std::io::{Read, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::util::error::{Context, Result};
-use crate::{bail, ensure};
+use crate::{anyhow, bail, ensure};
 
 use super::protocol::{
-    decode_client, decode_server, encode_client, encode_server, ClientMsg, MaskCodec, ServerMsg,
+    decode_client, decode_server, encode_client, encode_server, peek_client_frame,
+    ClientFrameKind, ClientMsg, MaskCodec, ServerMsg,
 };
+
+/// Upper bound on one frame's declared payload length.  `read_frame`
+/// allocates the payload before reading it, so a forged 4 GiB length
+/// must be rejected up front — 64 MiB is ~60× the largest real frame
+/// (the MnistFc float downlink is ~1 MiB).
+pub const MAX_FRAME_LEN: usize = 64 << 20;
 
 /// Read one length-prefixed frame from the stream.
 pub fn read_frame(stream: &mut TcpStream) -> Result<Vec<u8>> {
     let mut header = [0u8; 5];
     stream.read_exact(&mut header).context("reading frame header")?;
     let len = u32::from_le_bytes(header[1..5].try_into().unwrap()) as usize;
+    ensure!(len <= MAX_FRAME_LEN, "frame length {len} exceeds maximum {MAX_FRAME_LEN}");
     let mut buf = vec![0u8; 5 + len];
     buf[..5].copy_from_slice(&header);
     stream.read_exact(&mut buf[5..]).context("reading frame payload")?;
@@ -35,10 +62,108 @@ pub fn write_frame(stream: &mut TcpStream, frame: &[u8]) -> Result<()> {
     stream.flush().context("flushing frame")
 }
 
-/// Leader-side connection registry: accepts `expected` workers and keeps
-/// their streams in `Hello`-id order.
+/// What a reader/acceptor thread tells the leader.  `conn` is the
+/// connection generation: events from a stale (replaced) connection are
+/// discarded by comparing it against the slot's current generation.
+enum Event {
+    /// A worker completed the `Hello` handshake; `stream` is the write
+    /// half the leader broadcasts on.
+    Hello { client: u32, conn: u64, stream: TcpStream },
+    /// A raw `Mask` frame from a registered worker.  Kept **encoded**
+    /// until `collect_masks` dequeues it: queued memory is bounded by
+    /// the bytes the worker actually transmitted, so an arithmetic-coded
+    /// frame cannot be amplified into its decoded mask while the leader
+    /// is busy between rounds.
+    Msg { client: u32, conn: u64, frame: Vec<u8> },
+    /// The worker's connection is dead: EOF, I/O error, a malformed or
+    /// foreign-id frame, or an explicit `Abort`.
+    Gone { client: u32, conn: u64 },
+}
+
+/// Per-connection reader: forwards raw `Mask` frames (header-peeked
+/// only), swallows heartbeats, and reports everything else (including
+/// its own demise) as `Gone`.
+fn read_loop(mut stream: TcpStream, client: u32, conn: u64, tx: Sender<Event>) {
+    loop {
+        let Ok(frame) = read_frame(&mut stream) else {
+            // Read error: the connection is done.  Nothing a worker
+            // sends can panic the leader.
+            let _ = tx.send(Event::Gone { client, conn });
+            let _ = stream.shutdown(Shutdown::Both);
+            return;
+        };
+        match peek_client_frame(&frame) {
+            Ok((ClientFrameKind::Heartbeat, owner)) if owner == client => continue,
+            Ok((ClientFrameKind::Mask, owner)) if owner == client => {
+                if tx.send(Event::Msg { client, conn, frame }).is_err() {
+                    return; // leader is gone
+                }
+            }
+            // Abort, a foreign-id frame, a mid-stream Hello, or a
+            // malformed header: drop the connection, never the leader.
+            _ => {
+                let _ = tx.send(Event::Gone { client, conn });
+                let _ = stream.shutdown(Shutdown::Both);
+                return;
+            }
+        }
+    }
+}
+
+/// Accept connections for the leader's whole lifetime.  Each connection
+/// gets a handshake thread: a strict bounds-checked `Hello` registers
+/// the worker (initial join or reconnect); anything else just drops the
+/// connection.
+fn spawn_acceptor(listener: TcpListener, expected: usize, tx: Sender<Event>) {
+    let conn_counter = Arc::new(AtomicU64::new(0));
+    std::thread::spawn(move || loop {
+        let Ok((mut stream, _peer)) = listener.accept() else {
+            return; // listener closed: leader process is exiting
+        };
+        stream.set_nodelay(true).ok();
+        let tx = tx.clone();
+        let conn = conn_counter.fetch_add(1, Ordering::Relaxed) + 1;
+        std::thread::spawn(move || {
+            let client = match read_frame(&mut stream).and_then(|f| decode_client(&f)) {
+                Ok(ClientMsg::Hello { client }) if (client as usize) < expected => client,
+                // Bad handshake (out-of-range id, non-Hello frame,
+                // malformed bytes): drop the connection, not the leader.
+                _ => return,
+            };
+            let Ok(reader) = stream.try_clone() else { return };
+            if tx.send(Event::Hello { client, conn, stream }).is_err() {
+                return;
+            }
+            read_loop(reader, client, conn, tx);
+        });
+    });
+}
+
+/// A registered worker connection: its write half + generation.
+struct Slot {
+    conn: u64,
+    stream: TcpStream,
+}
+
+/// What one collection deadline produced.
+#[derive(Debug)]
+pub struct RoundReceipt {
+    /// Masks indexed by client id; `None` for non-participants and drops.
+    pub masks: Vec<Option<Vec<bool>>>,
+    /// Participants whose mask arrived, ascending.
+    pub received: Vec<usize>,
+    /// Participants whose mask did not arrive, ascending.
+    pub dropped: Vec<usize>,
+    /// Total mask-frame bytes received.
+    pub bytes: u64,
+}
+
+/// Leader-side connection registry: accepts `expected` workers, keeps
+/// accepting reconnects, and collects masks concurrently.
 pub struct Leader {
-    streams: Vec<TcpStream>,
+    expected: usize,
+    slots: Vec<Option<Slot>>,
+    rx: Receiver<Event>,
     /// Total bytes sent/received (feeds the comm ledger).
     pub sent_bytes: u64,
     pub recv_bytes: u64,
@@ -48,64 +173,279 @@ impl Leader {
     /// Bind `addr` and accept exactly `expected` workers.
     pub fn accept(addr: &str, expected: usize) -> Result<Leader> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-        let mut slots: Vec<Option<TcpStream>> = (0..expected).map(|_| None).collect();
-        let mut seen = 0usize;
-        while seen < expected {
-            let (mut stream, peer) = listener.accept().context("accept")?;
-            stream.set_nodelay(true).ok();
-            let frame = read_frame(&mut stream)?;
-            match decode_client(&frame)? {
-                ClientMsg::Hello { client } => {
-                    let idx = client as usize;
-                    ensure!(idx < expected, "client id {idx} ≥ expected {expected}");
-                    ensure!(slots[idx].is_none(), "duplicate client id {idx} from {peer}");
-                    slots[idx] = Some(stream);
-                    seen += 1;
-                }
-                other => bail!("expected Hello, got {other:?}"),
-            }
-        }
-        Ok(Leader {
-            streams: slots.into_iter().map(|s| s.unwrap()).collect(),
+        Self::from_listener(listener, expected)
+    }
+
+    /// Race-free entry point: the caller binds (e.g. port 0 to let the
+    /// OS pick) and hands the listener over, so the address is known
+    /// before any worker connects.  Blocks until every one of the
+    /// `expected` client ids has completed a `Hello` handshake.
+    pub fn from_listener(listener: TcpListener, expected: usize) -> Result<Leader> {
+        ensure!(expected > 0, "leader needs at least one expected worker");
+        let (tx, rx) = channel();
+        spawn_acceptor(listener, expected, tx);
+        let mut leader = Leader {
+            expected,
+            slots: (0..expected).map(|_| None).collect(),
+            rx,
             sent_bytes: 0,
             recv_bytes: 0,
-        })
+        };
+        while leader.slots.iter().any(|s| s.is_none()) {
+            let ev = leader.rx.recv().map_err(|_| anyhow!("acceptor thread died"))?;
+            // During startup a Hello for a slot whose connection is
+            // still live is a configuration error (two workers launched
+            // with the same --client-id): fail fast instead of letting
+            // the duplicates churn each other while the missing id
+            // blocks this loop forever.  A worker that dies and
+            // reconnects during startup normally gets its `Gone`
+            // enqueued first and is fine; in the (microsecond) window
+            // where the fresh Hello wins the enqueue race this errs on
+            // the side of a clean, explained abort over a silent hang.
+            if let Event::Hello { client, .. } = &ev {
+                ensure!(
+                    leader.slots[*client as usize].is_none(),
+                    "duplicate client id {client} during leader startup"
+                );
+            }
+            leader.apply_control(ev);
+        }
+        Ok(leader)
+    }
+
+    /// Handle a connection-lifecycle event outside mask collection
+    /// (in-round `Msg` events are handled by `collect_masks`).
+    fn apply_control(&mut self, ev: Event) {
+        match ev {
+            Event::Hello { client, conn, stream } => self.register(client, conn, stream),
+            Event::Gone { client, conn } => {
+                self.clear_if_current(client as usize, conn);
+            }
+            Event::Msg { .. } => {} // stale mask between rounds: ignore
+        }
+    }
+
+    /// Install (or replace, on reconnect) a worker connection.
+    fn register(&mut self, client: u32, conn: u64, stream: TcpStream) {
+        let k = client as usize;
+        if let Some(old) = self.slots[k].take() {
+            // Force the stale reader to exit; its Gone event carries the
+            // old generation and will be ignored.
+            old.stream.shutdown(Shutdown::Both).ok();
+        }
+        self.slots[k] = Some(Slot { conn, stream });
+    }
+
+    /// Clear slot `k` iff it still holds generation `conn`.
+    fn clear_if_current(&mut self, k: usize, conn: u64) -> bool {
+        if self.slots[k].as_ref().is_some_and(|s| s.conn == conn) {
+            self.slots[k] = None;
+            return true;
+        }
+        false
+    }
+
+    /// Drop the connection in slot `k` (protocol violation path).
+    fn kill(&mut self, k: usize) {
+        if let Some(slot) = self.slots[k].take() {
+            slot.stream.shutdown(Shutdown::Both).ok();
+        }
     }
 
     pub fn num_clients(&self) -> usize {
-        self.streams.len()
+        self.expected
     }
 
-    /// Broadcast a round start; returns bytes sent per client.
-    pub fn broadcast(&mut self, msg: &ServerMsg) -> Result<usize> {
-        let frame = encode_server(msg);
-        for s in &mut self.streams {
-            write_frame(s, &frame)?;
-        }
-        self.sent_bytes += (frame.len() * self.streams.len()) as u64;
-        Ok(frame.len())
+    /// Workers currently connected.
+    pub fn live_clients(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
     }
 
-    /// Collect one `Mask` from every client (any order); returns them
-    /// indexed by client id together with total bytes received.
-    pub fn collect_masks(&mut self, round: u32) -> Result<(Vec<Vec<bool>>, u64)> {
-        let mut masks: Vec<Option<Vec<bool>>> = (0..self.streams.len()).map(|_| None).collect();
-        let mut bytes = 0u64;
-        for s in &mut self.streams {
-            let frame = read_frame(s)?;
-            bytes += frame.len() as u64;
-            match decode_client(&frame)? {
-                ClientMsg::Mask { round: r, client, mask, .. } => {
-                    ensure!(r == round, "mask for round {r}, expected {round}");
-                    let idx = client as usize;
-                    ensure!(masks[idx].is_none(), "duplicate mask from client {idx}");
-                    masks[idx] = Some(mask);
-                }
-                other => bail!("expected Mask, got {other:?}"),
+    /// Drain queued connection events, then wait up to `timeout` for
+    /// client `k` to be connected.  Returns whether it is.
+    pub fn wait_for_client(&mut self, k: usize, timeout: Duration) -> Result<bool> {
+        ensure!(k < self.expected, "client id {k} ≥ expected {}", self.expected);
+        let deadline = Instant::now() + timeout;
+        loop {
+            while let Ok(ev) = self.rx.try_recv() {
+                self.apply_control(ev);
+            }
+            if self.slots[k].is_some() {
+                return Ok(true);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(false);
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(ev) => self.apply_control(ev),
+                Err(RecvTimeoutError::Timeout) => return Ok(false),
+                Err(RecvTimeoutError::Disconnected) => bail!("acceptor thread died"),
             }
         }
+    }
+
+    /// Send `msg` to the given participants (skipping disconnected
+    /// slots); returns `(frame_len, receivers)`.  A write failure marks
+    /// the slot dead instead of failing the round.
+    pub fn broadcast_to(
+        &mut self,
+        msg: &ServerMsg,
+        participants: &[usize],
+    ) -> Result<(usize, usize)> {
+        // Fold in queued connection events (reconnects, deaths,
+        // straggler frames) so this round starts from the current
+        // connection state: anything enqueued before the broadcast is
+        // by definition not part of the round about to start.  This is
+        // also what keeps the event queue bounded — and reconnects
+        // discoverable — when collect_masks has nothing pending (e.g.
+        // after a round in which every participant dropped).
+        while let Ok(ev) = self.rx.try_recv() {
+            self.apply_control(ev);
+        }
+        let frame = encode_server(msg);
+        let mut receivers = 0usize;
+        for &k in participants {
+            ensure!(k < self.expected, "participant id {k} ≥ expected {}", self.expected);
+            let mut dead = false;
+            if let Some(slot) = self.slots[k].as_mut() {
+                if write_frame(&mut slot.stream, &frame).is_ok() {
+                    receivers += 1;
+                    self.sent_bytes += frame.len() as u64;
+                } else {
+                    dead = true;
+                }
+            }
+            if dead {
+                self.kill(k);
+            }
+        }
+        Ok((frame.len(), receivers))
+    }
+
+    /// Broadcast a round start to every slot; returns bytes per frame.
+    pub fn broadcast(&mut self, msg: &ServerMsg) -> Result<usize> {
+        let all: Vec<usize> = (0..self.expected).collect();
+        let (frame_len, _) = self.broadcast_to(msg, &all)?;
+        Ok(frame_len)
+    }
+
+    /// Collect one `Mask` of length `n` from each of `participants` for
+    /// `round`, in arrival order, until all arrive or `timeout` passes
+    /// (`None` = wait as long as at least the event channel lives).
+    ///
+    /// Clients that disconnect, violate the protocol, or miss the
+    /// deadline are reported in `dropped` — the round completes with
+    /// whatever arrived.  Masks for other rounds (stragglers catching
+    /// up) are discarded.  Reconnecting workers are registered as they
+    /// appear and join from the next round on.
+    pub fn collect_masks(
+        &mut self,
+        round: u32,
+        participants: &[usize],
+        n: usize,
+        timeout: Option<Duration>,
+    ) -> Result<RoundReceipt> {
+        for &k in participants {
+            ensure!(k < self.expected, "participant id {k} ≥ expected {}", self.expected);
+        }
+        let deadline = timeout.map(|t| Instant::now() + t);
+        let mut masks: Vec<Option<Vec<bool>>> = (0..self.expected).map(|_| None).collect();
+        let mut dropped: Vec<usize> =
+            participants.iter().copied().filter(|&k| self.slots[k].is_none()).collect();
+        let mut pending: Vec<usize> =
+            participants.iter().copied().filter(|&k| self.slots[k].is_some()).collect();
+        let mut bytes = 0u64;
+
+        while !pending.is_empty() {
+            let ev = match deadline {
+                None => match self.rx.recv() {
+                    Ok(ev) => ev,
+                    Err(_) => bail!("leader event channel closed"),
+                },
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        break;
+                    }
+                    match self.rx.recv_timeout(d - now) {
+                        Ok(ev) => ev,
+                        Err(RecvTimeoutError::Timeout) => break,
+                        Err(RecvTimeoutError::Disconnected) => {
+                            bail!("leader event channel closed")
+                        }
+                    }
+                }
+            };
+            match ev {
+                Event::Hello { client, conn, stream } => {
+                    let k = client as usize;
+                    self.register(client, conn, stream);
+                    // A mid-round Hello for a still-pending participant
+                    // means the worker restarted: the replacement never
+                    // saw this round's broadcast (and register() killed
+                    // whatever was left of the old connection), so its
+                    // mask can never arrive — drop it now rather than
+                    // hang on it until the deadline (or forever, at
+                    // timeout = ∞, if the old connection's Gone lost
+                    // the enqueue race to this Hello).
+                    if let Some(i) = pending.iter().position(|&p| p == k) {
+                        pending.remove(i);
+                        dropped.push(k);
+                    }
+                }
+                Event::Gone { client, conn } => {
+                    let k = client as usize;
+                    if self.clear_if_current(k, conn) {
+                        if let Some(i) = pending.iter().position(|&p| p == k) {
+                            pending.remove(i);
+                            dropped.push(k);
+                        }
+                    }
+                }
+                Event::Msg { client, conn, frame } => {
+                    let k = client as usize;
+                    if !self.slots[k].as_ref().is_some_and(|s| s.conn == conn) {
+                        continue; // stale connection's leftovers
+                    }
+                    let Some(i) = pending.iter().position(|&p| p == k) else {
+                        continue; // duplicate or unsolicited: ignore
+                    };
+                    // Decode at dequeue time — the frame was only
+                    // header-peeked by the reader thread.
+                    let frame_len = frame.len();
+                    match decode_client(&frame) {
+                        Ok(ClientMsg::Mask { round: r, mask, .. })
+                            if r == round && mask.len() == n =>
+                        {
+                            pending.remove(i);
+                            masks[k] = Some(mask);
+                            bytes += frame_len as u64;
+                        }
+                        Ok(ClientMsg::Mask { round: r, .. }) if r != round => {
+                            // straggler mask for a finished round: discard
+                        }
+                        _ => {
+                            // Malformed body or wrong-length mask would
+                            // corrupt aggregation: protocol violation,
+                            // connection dropped.
+                            self.kill(k);
+                            pending.remove(i);
+                            dropped.push(k);
+                        }
+                    }
+                }
+            }
+        }
+
+        // Anything still pending at the deadline is dropped this round
+        // (the connection stays; a late mask is discarded next round).
+        dropped.extend(pending);
+        dropped.sort_unstable();
         self.recv_bytes += bytes;
-        Ok((masks.into_iter().map(|m| m.unwrap()).collect(), bytes))
+        let received: Vec<usize> =
+            participants.iter().copied().filter(|&k| masks[k].is_some()).collect();
+        Ok(RoundReceipt { masks, received, dropped, bytes })
     }
 
     pub fn shutdown(&mut self) -> Result<()> {
@@ -129,10 +469,22 @@ impl Worker {
         Ok(Worker { stream, client_id, codec })
     }
 
+    /// Block for the next server frame's raw bytes (the exact input
+    /// `client_round` consumes, so TCP workers and the simulator share
+    /// one round body).
+    pub fn recv_raw(&mut self) -> Result<Vec<u8>> {
+        read_frame(&mut self.stream)
+    }
+
     /// Block for the next server message.
     pub fn recv(&mut self) -> Result<ServerMsg> {
-        let frame = read_frame(&mut self.stream)?;
+        let frame = self.recv_raw()?;
         decode_server(&frame)
+    }
+
+    /// Ship an already-encoded client frame (e.g. `ClientRound::frame`).
+    pub fn send_frame(&mut self, frame: &[u8]) -> Result<()> {
+        write_frame(&mut self.stream, frame)
     }
 
     /// Uplink this round's mask.
@@ -142,7 +494,19 @@ impl Worker {
             &ClientMsg::Mask { round, client: self.client_id, n, mask },
             self.codec,
         );
-        write_frame(&mut self.stream, &frame)
+        self.send_frame(&frame)
+    }
+
+    /// Tell the leader this worker is leaving for good.
+    pub fn send_abort(&mut self) -> Result<()> {
+        let frame = encode_client(&ClientMsg::Abort { client: self.client_id }, self.codec);
+        self.send_frame(&frame)
+    }
+
+    /// Liveness ping (consumed silently by the leader).
+    pub fn send_heartbeat(&mut self) -> Result<()> {
+        let frame = encode_client(&ClientMsg::Heartbeat { client: self.client_id }, self.codec);
+        self.send_frame(&frame)
     }
 }
 
@@ -150,26 +514,37 @@ impl Worker {
 mod tests {
     use super::*;
 
-    /// Full wire round-trip: leader thread + two worker threads over
-    /// loopback, one protocol round.
-    #[test]
-    fn tcp_round_trip() {
+    fn bound_listener() -> (TcpListener, String) {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
-        drop(listener); // free the port for Leader::accept (tiny race, retried below)
+        (listener, addr)
+    }
 
-        let addr2 = addr.clone();
-        let leader = std::thread::spawn(move || -> Result<Vec<Vec<bool>>> {
-            let mut leader = Leader::accept(&addr2, 2)?;
+    /// Full wire round-trip: leader thread + two worker threads over
+    /// loopback, one protocol round.  The listener is bound *before* the
+    /// leader thread starts, so there is no bind/connect race (the seed
+    /// dropped and rebound the port, and flaked).
+    #[test]
+    fn tcp_round_trip() {
+        let (listener, addr) = bound_listener();
+
+        let leader = std::thread::spawn(move || -> Result<RoundReceipt> {
+            let mut leader = Leader::from_listener(listener, 2)?;
             leader.broadcast(&ServerMsg::Round { round: 0, probs: vec![0.5, 1.0, 0.0] })?;
-            let (masks, bytes) = leader.collect_masks(0)?;
-            assert!(bytes > 0);
+            let receipt = leader.collect_masks(0, &[0, 1], 3, None)?;
+            assert!(receipt.bytes > 0);
             leader.shutdown()?;
-            Ok(masks)
+            Ok(receipt)
         });
 
-        // Give the leader a moment to bind.
-        std::thread::sleep(std::time::Duration::from_millis(50));
+        // A rogue connection with an out-of-range id must be ignored,
+        // not panic the leader or occupy a slot.
+        {
+            let mut rogue = TcpStream::connect(&addr).unwrap();
+            let hello = encode_client(&ClientMsg::Hello { client: 99 }, MaskCodec::Raw);
+            write_frame(&mut rogue, &hello).unwrap();
+        }
+
         let mut workers = Vec::new();
         for id in 0..2u32 {
             let addr = addr.clone();
@@ -188,10 +563,229 @@ mod tests {
             }));
         }
 
-        let masks = leader.join().unwrap().expect("leader");
+        let receipt = leader.join().unwrap().expect("leader");
         for w in workers {
             w.join().unwrap().expect("worker");
         }
+        assert_eq!(receipt.received, vec![0, 1]);
+        assert!(receipt.dropped.is_empty());
+        let masks: Vec<Vec<bool>> = receipt.masks.into_iter().map(|m| m.unwrap()).collect();
         assert_eq!(masks, vec![vec![true, true, false]; 2]);
+    }
+
+    /// Three workers; one disconnects mid-round without sending its mask.
+    /// The leader must finish the round with the other two, record the
+    /// drop, and keep running a second round.
+    #[test]
+    fn leader_survives_mid_round_disconnect() {
+        let (listener, addr) = bound_listener();
+
+        let leader = std::thread::spawn(move || -> Result<(RoundReceipt, RoundReceipt)> {
+            let mut leader = Leader::from_listener(listener, 3)?;
+            leader.broadcast(&ServerMsg::Round { round: 0, probs: vec![1.0, 0.0] })?;
+            let r0 = leader.collect_masks(0, &[0, 1, 2], 2, Some(Duration::from_secs(20)))?;
+            // Round 1 proceeds with the survivors only.
+            let survivors: Vec<usize> = r0.received.clone();
+            let msg = ServerMsg::Round { round: 1, probs: vec![0.0, 1.0] };
+            leader.broadcast_to(&msg, &survivors)?;
+            let r1 = leader.collect_masks(1, &survivors, 2, Some(Duration::from_secs(20)))?;
+            leader.shutdown()?;
+            Ok((r0, r1))
+        });
+
+        let mut steady = Vec::new();
+        for id in [0u32, 1] {
+            let addr = addr.clone();
+            steady.push(std::thread::spawn(move || -> Result<()> {
+                let mut w = Worker::connect(&addr, id, MaskCodec::Raw)?;
+                loop {
+                    match w.recv()? {
+                        ServerMsg::Round { round, probs } => {
+                            let mask: Vec<bool> = probs.iter().map(|&p| p > 0.5).collect();
+                            w.send_mask(round, mask)?;
+                        }
+                        ServerMsg::Shutdown => return Ok(()),
+                    }
+                }
+            }));
+        }
+        // Worker 2 receives the round and vanishes without replying.
+        let quitter = {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut w = Worker::connect(&addr, 2, MaskCodec::Raw).expect("connect");
+                let _ = w.recv().expect("round 0");
+                // drop the connection here
+            })
+        };
+
+        let (r0, r1) = leader.join().unwrap().expect("leader");
+        for w in steady {
+            w.join().unwrap().expect("worker");
+        }
+        quitter.join().unwrap();
+
+        assert_eq!(r0.received, vec![0, 1]);
+        assert_eq!(r0.dropped, vec![2]);
+        assert_eq!(r1.received, vec![0, 1]);
+        assert!(r1.dropped.is_empty());
+    }
+
+    /// A worker that forges a foreign client id on its mask is dropped —
+    /// the seed indexed `masks[idx]` with the wire-supplied id and
+    /// panicked on ids ≥ `num_clients`.
+    #[test]
+    fn forged_client_id_drops_the_worker_not_the_leader() {
+        let (listener, addr) = bound_listener();
+
+        let leader = std::thread::spawn(move || -> Result<RoundReceipt> {
+            let mut leader = Leader::from_listener(listener, 2)?;
+            leader.broadcast(&ServerMsg::Round { round: 0, probs: vec![1.0] })?;
+            let receipt = leader.collect_masks(0, &[0, 1], 1, Some(Duration::from_secs(20)))?;
+            leader.shutdown()?;
+            Ok(receipt)
+        });
+
+        // Worker 0 lies about who it is (id 7 ≥ expected would have
+        // panicked the seed's `masks[idx]`).
+        let liar = {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut w = Worker::connect(&addr, 0, MaskCodec::Raw).expect("connect");
+                let _ = w.recv().expect("round");
+                let forged = encode_client(
+                    &ClientMsg::Mask { round: 0, client: 7, n: 1, mask: vec![true] },
+                    MaskCodec::Raw,
+                );
+                let _ = w.send_frame(&forged);
+            })
+        };
+        let honest = {
+            let addr = addr.clone();
+            std::thread::spawn(move || -> Result<()> {
+                let mut w = Worker::connect(&addr, 1, MaskCodec::Raw)?;
+                loop {
+                    match w.recv()? {
+                        ServerMsg::Round { round, .. } => w.send_mask(round, vec![true])?,
+                        ServerMsg::Shutdown => return Ok(()),
+                    }
+                }
+            })
+        };
+
+        let receipt = leader.join().unwrap().expect("leader");
+        liar.join().unwrap();
+        honest.join().unwrap().expect("honest worker");
+        assert_eq!(receipt.received, vec![1]);
+        assert_eq!(receipt.dropped, vec![0]);
+    }
+
+    /// A wrong-length mask (which would corrupt `Server::receive_mask`)
+    /// is a protocol violation: dropped, never aggregated.
+    #[test]
+    fn wrong_length_mask_is_dropped() {
+        let (listener, addr) = bound_listener();
+
+        let leader = std::thread::spawn(move || -> Result<RoundReceipt> {
+            let mut leader = Leader::from_listener(listener, 1)?;
+            leader.broadcast(&ServerMsg::Round { round: 0, probs: vec![1.0, 1.0, 1.0] })?;
+            let receipt = leader.collect_masks(0, &[0], 3, Some(Duration::from_secs(20)))?;
+            leader.shutdown()?;
+            Ok(receipt)
+        });
+
+        let worker = std::thread::spawn(move || {
+            let mut w = Worker::connect(&addr, 0, MaskCodec::Raw).expect("connect");
+            let _ = w.recv().expect("round");
+            let _ = w.send_mask(0, vec![true; 5]); // n = 3 expected
+        });
+
+        let receipt = leader.join().unwrap().expect("leader");
+        worker.join().unwrap();
+        assert_eq!(receipt.received, Vec::<usize>::new());
+        assert_eq!(receipt.dropped, vec![0]);
+        assert!(receipt.masks.iter().all(|m| m.is_none()));
+    }
+
+    /// Two workers launched with the same `--client-id` while both are
+    /// live is a configuration error: the leader must fail fast, not
+    /// hang forever waiting for the never-arriving missing id.
+    #[test]
+    fn duplicate_client_id_at_startup_fails_fast() {
+        let (listener, addr) = bound_listener();
+        let leader = std::thread::spawn(move || Leader::from_listener(listener, 2));
+        let hello0 = encode_client(&ClientMsg::Hello { client: 0 }, MaskCodec::Raw);
+        // Two live connections both claiming id 0 (order irrelevant —
+        // whichever registers second trips the guard).
+        let mut a = TcpStream::connect(&addr).unwrap();
+        write_frame(&mut a, &hello0).unwrap();
+        let mut b = TcpStream::connect(&addr).unwrap();
+        write_frame(&mut b, &hello0).unwrap();
+        let result = leader.join().unwrap();
+        assert!(result.is_err(), "duplicate client id must error at startup");
+        drop((a, b));
+    }
+
+    /// A worker that aborts after round 0 can reconnect with a fresh
+    /// `Hello` and rejoin from the next round.
+    #[test]
+    fn worker_reconnects_with_hello() {
+        let (listener, addr) = bound_listener();
+        let (notify_tx, notify_rx) = std::sync::mpsc::channel::<()>();
+
+        let leader = std::thread::spawn(move || -> Result<(RoundReceipt, RoundReceipt)> {
+            let mut leader = Leader::from_listener(listener, 2)?;
+            leader.broadcast(&ServerMsg::Round { round: 0, probs: vec![1.0] })?;
+            let r0 = leader.collect_masks(0, &[0, 1], 1, Some(Duration::from_secs(20)))?;
+            // Ask the test to spawn the reconnecting worker, then wait
+            // for its Hello before round 1.
+            notify_tx.send(()).ok();
+            assert!(leader.wait_for_client(0, Duration::from_secs(20))?, "no reconnect");
+            leader.broadcast(&ServerMsg::Round { round: 1, probs: vec![1.0] })?;
+            let r1 = leader.collect_masks(1, &[0, 1], 1, Some(Duration::from_secs(20)))?;
+            leader.shutdown()?;
+            Ok((r0, r1))
+        });
+
+        let steady = {
+            let addr = addr.clone();
+            std::thread::spawn(move || -> Result<()> {
+                let mut w = Worker::connect(&addr, 1, MaskCodec::Raw)?;
+                loop {
+                    match w.recv()? {
+                        ServerMsg::Round { round, .. } => w.send_mask(round, vec![true])?,
+                        ServerMsg::Shutdown => return Ok(()),
+                    }
+                }
+            })
+        };
+        // First incarnation of worker 0: receives round 0 but sends an
+        // explicit Abort instead of its mask, so the drop is observed
+        // *inside* the leader's collect (no Gone-vs-Hello event race by
+        // the time the replacement connects).
+        {
+            let mut w = Worker::connect(&addr, 0, MaskCodec::Raw).expect("connect");
+            let _ = w.recv().expect("round 0");
+            w.send_abort().expect("abort");
+        }
+        notify_rx.recv().unwrap();
+        // Second incarnation rejoins for round 1.
+        let revenant = std::thread::spawn(move || -> Result<()> {
+            let mut w = Worker::connect(&addr, 0, MaskCodec::Raw)?;
+            loop {
+                match w.recv()? {
+                    ServerMsg::Round { round, .. } => w.send_mask(round, vec![true])?,
+                    ServerMsg::Shutdown => return Ok(()),
+                }
+            }
+        });
+
+        let (r0, r1) = leader.join().unwrap().expect("leader");
+        steady.join().unwrap().expect("steady");
+        revenant.join().unwrap().expect("revenant");
+        assert_eq!(r0.received, vec![1]);
+        assert_eq!(r0.dropped, vec![0], "Abort must drop the worker for the round");
+        assert_eq!(r1.received, vec![0, 1], "reconnected worker missing from round 1");
+        assert_eq!(r1.masks[0], Some(vec![true]));
     }
 }

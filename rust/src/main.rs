@@ -5,7 +5,7 @@
 //!   train-federated  — Federated Zampling (in-process sim, or TCP leader)
 //!   serve-client     — TCP worker process (connects to a leader)
 //!   experiment       — regenerate a paper table/figure (fig3|fig4|table1|
-//!                      table4|fig5|fig6|theory)
+//!                      table4|fig5|fig6|dropout|theory)
 //!   comm-report      — Table 1 savings ledger for a config
 //!   info             — artifact manifest + platform probe
 //!
@@ -21,7 +21,9 @@ use zampling::data::Dataset;
 use zampling::experiments::{self, Scale};
 use zampling::federated::protocol::MaskCodec;
 use zampling::federated::transport::{Leader, Worker};
-use zampling::federated::{pack_client_mask, run_federated, run_federated_parallel, Server};
+use zampling::federated::{
+    client_round, pack_client_mask, run_federated, run_federated_parallel, RoundPlan, Server,
+};
 use zampling::metrics::RunLog;
 use zampling::nn::ArchSpec;
 use zampling::rng::SeedTree;
@@ -57,8 +59,9 @@ const USAGE: &str = "usage: repro <subcommand> [options]
   train-local       --config <toml> [--backend pjrt|native] [--eval-samples N]
   train-federated   --config <toml> [--backend ...] [--transport local|tcp]
                     [--listen host:port] [--eval-every N]
+                    [--participation F] [--round-timeout-ms MS]
   serve-client      --addr host:port --client-id K --config <toml>
-  experiment        --id fig3|fig4|table1|table4|fig5|fig6|theory
+  experiment        --id fig3|fig4|table1|table4|fig5|fig6|dropout|theory
                     [--scale ci|paper] [--out results/]
   comm-report       --config <toml>
   info              [--artifacts artifacts/]";
@@ -79,6 +82,16 @@ fn load_fed_config(args: &Args) -> Result<FedConfig, String> {
     let mut cfg = FedConfig::from_toml(&doc)?;
     if let Some(b) = args.get("backend") {
         cfg.train.backend = Backend::parse(b)?;
+    }
+    if let Some(p) = args.get("participation") {
+        let p: f64 = p.parse().map_err(|_| format!("bad --participation '{p}'"))?;
+        if !(p > 0.0 && p <= 1.0) {
+            return Err(format!("--participation {p} must be in (0, 1]"));
+        }
+        cfg.participation = p;
+    }
+    if let Some(t) = args.get("round-timeout-ms") {
+        cfg.round_timeout_ms = t.parse().map_err(|_| format!("bad --round-timeout-ms '{t}'"))?;
     }
     Ok(cfg)
 }
@@ -219,20 +232,29 @@ fn cmd_train_federated(args: &Args) -> Result<(), String> {
             );
             out.log.save(Path::new(&out_dir)).map_err(|e| format!("saving: {e}"))?;
         }
-        "tcp" => run_tcp_leader(&cfg, &listen, &test, eval_samples, eval_every)?,
+        "tcp" => run_tcp_leader(&cfg, &listen, &test, eval_samples, eval_every, &out_dir)?,
         other => return Err(format!("unknown transport '{other}' (local|tcp)")),
     }
     Ok(())
 }
 
 /// TCP leader: serve rounds to `serve-client` worker processes.
+///
+/// Fault-tolerant orchestration: each round selects a participant subset
+/// per [`RoundPlan`], collects masks in arrival order under the
+/// configured deadline, renormalizes the aggregate by whatever actually
+/// arrived, and records participants/drops in the ledger.  Worker
+/// disconnects (and reconnects with a fresh `Hello`) never abort the
+/// run.
 fn run_tcp_leader(
     cfg: &FedConfig,
     listen: &str,
     test: &Dataset,
     eval_samples: usize,
     eval_every: usize,
+    out_dir: &str,
 ) -> Result<(), String> {
+    use zampling::comm::{CommLedger, RoundCost};
     use zampling::federated::protocol::ServerMsg;
     use zampling::nn::one_hot_into;
     use zampling::sparse::QMatrix;
@@ -252,16 +274,39 @@ fn run_tcp_leader(
     let mut test_y1h = vec![0.0f32; test.len() * out_dim];
     one_hot_into(&test.y, out_dim, &mut test_y1h);
     let mut eval_rng = seeds.rng("eval-sampler", 0);
+    let timeout = if cfg.round_timeout_ms > 0 {
+        Some(std::time::Duration::from_millis(cfg.round_timeout_ms))
+    } else {
+        None // 0 = wait forever
+    };
+
+    let mut log = RunLog::new("federated_tcp");
+    let mut ledger = CommLedger::default();
 
     for round in 0..cfg.rounds {
-        leader
-            .broadcast(&ServerMsg::Round { round: round as u32, probs: server.probs.clone() })
+        let plan = RoundPlan::for_round(cfg.clients, cfg.participation, &seeds, round);
+        let msg = ServerMsg::Round { round: round as u32, probs: server.probs.clone() };
+        let (frame_len, receivers) = leader
+            .broadcast_to(&msg, &plan.participants)
             .map_err(|e| format!("broadcast: {e:#}"))?;
-        let (masks, _) = leader.collect_masks(round as u32).map_err(|e| format!("{e:#}"))?;
-        for mask in &masks {
+        let receipt = leader
+            .collect_masks(round as u32, &plan.participants, cfg.train.n, timeout)
+            .map_err(|e| format!("{e:#}"))?;
+        for &k in &receipt.received {
+            let mask = receipt.masks[k].as_ref().expect("received mask present");
             server.receive_mask(&pack_client_mask(mask));
         }
-        server.aggregate();
+        let received = server.try_aggregate();
+        ledger.record(RoundCost {
+            downlink_bits: (frame_len * receivers) as u64 * 8,
+            uplink_bits: receipt.bytes * 8,
+            clients: received as u32,
+            participants: plan.participants.len() as u32,
+            dropped: receipt.dropped.len() as u32,
+        });
+        if !receipt.dropped.is_empty() {
+            println!("round {:>3}  dropped clients {:?}", round, receipt.dropped);
+        }
         if round % eval_every == 0 || round + 1 == cfg.rounds {
             let pv = ProbVector::from_probs(server.probs.clone());
             let rep = evaluate(
@@ -275,24 +320,47 @@ fn run_tcp_leader(
                 &mut eval_rng,
             );
             println!(
-                "round {:>3}  sampled {:.4} ± {:.4}  expected {:.4}",
-                round, rep.mean_sampled_acc, rep.sampled_acc_std, rep.expected_acc
+                "round {:>3}  sampled {:.4} ± {:.4}  expected {:.4}  ({} of {} masks)",
+                round,
+                rep.mean_sampled_acc,
+                rep.sampled_acc_std,
+                rep.expected_acc,
+                received,
+                plan.participants.len()
             );
+            log.push(zampling::metrics::RoundRecord {
+                round,
+                mean_sampled_acc: rep.mean_sampled_acc,
+                sampled_acc_std: rep.sampled_acc_std,
+                expected_acc: rep.expected_acc,
+                train_loss: 0.0, // workers keep their losses local
+                uplink_bits: receipt.bytes * 8,
+                downlink_bits: (frame_len * receivers) as u64 * 8,
+            });
         }
     }
     leader.shutdown().map_err(|e| format!("{e:#}"))?;
+    let rep = ledger.savings(cfg.train.arch.num_params());
+    println!(
+        "savings: client {:.1}x server {:.1}x; {} client-drops over {} rounds",
+        rep.client_savings,
+        rep.server_savings,
+        ledger.total_dropped(),
+        cfg.rounds
+    );
     println!(
         "leader done: sent {} KiB, received {} KiB",
         leader.sent_bytes / 1024,
         leader.recv_bytes / 1024
     );
+    log.save(Path::new(out_dir)).map_err(|e| format!("saving: {e}"))?;
     Ok(())
 }
 
 /// TCP worker: local shard training driven by the leader.
 fn cmd_serve_client(args: &Args) -> Result<(), String> {
     use std::sync::Arc;
-    use zampling::federated::protocol::ServerMsg;
+    use zampling::federated::protocol::{peek_server_frame, ServerFrameKind};
     use zampling::sparse::QMatrix;
 
     let addr = args.get("addr").ok_or("missing --addr host:port")?.to_string();
@@ -328,19 +396,27 @@ fn cmd_serve_client(args: &Args) -> Result<(), String> {
     let mut worker =
         Worker::connect(&addr, client_id as u32, codec).map_err(|e| format!("{e:#}"))?;
     loop {
-        match worker.recv().map_err(|e| format!("{e:#}"))? {
-            ServerMsg::Round { round, probs } => {
-                state.pv.set_probs(&probs);
-                state.reset_optimizer(&cfg.train);
-                for _ in 0..cfg.local_epochs {
-                    state.run_epoch(exec.as_mut(), &shard, cfg.train.batch);
-                }
-                let mut mask_rng = sub.rng("uplink-mask", round as u64);
-                let mut mask = Vec::new();
-                state.pv.sample_mask(&mut mask_rng, &mut mask);
-                worker.send_mask(round, mask).map_err(|e| format!("{e:#}"))?;
+        // The raw frame feeds the *same* `client_round` body the
+        // in-process simulators run, so every transport trains
+        // identical numbers; the dispatch only peeks the header so the
+        // probs vector is decoded once (inside `client_round`).
+        let frame = worker.recv_raw().map_err(|e| format!("{e:#}"))?;
+        match peek_server_frame(&frame).map_err(|e| format!("{e:#}"))? {
+            ServerFrameKind::Round => {
+                let out = client_round(
+                    &cfg,
+                    &mut state,
+                    exec.as_mut(),
+                    &shard,
+                    &seeds,
+                    &frame,
+                    codec,
+                    client_id,
+                )
+                .map_err(|e| format!("{e:#}"))?;
+                worker.send_frame(&out.frame).map_err(|e| format!("{e:#}"))?;
             }
-            ServerMsg::Shutdown => {
+            ServerFrameKind::Shutdown => {
                 println!("[worker {client_id}] shutdown");
                 return Ok(());
             }
@@ -365,6 +441,10 @@ fn cmd_experiment(args: &Args) -> Result<(), String> {
                 rows.push(experiments::federated::run_zampling_row(factor, scale, 5));
             }
             experiments::federated::print_table1(&rows);
+        }
+        "dropout" => {
+            let points = experiments::federated::run_dropout_sweep(scale, 5);
+            experiments::federated::print_dropout_sweep(&points);
         }
         "table4" => {
             let rows = experiments::sensitivity::run(scale, 0);

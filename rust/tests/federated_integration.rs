@@ -1,6 +1,13 @@
 //! Integration: the full federated protocol over the real TCP transport —
 //! leader thread + worker threads in one process, real sockets, real
-//! frames — must agree qualitatively with the in-process simulator.
+//! frames.  Because the TCP worker drives the *same* `client_round` body
+//! as the in-process simulator and the leader aggregates through the
+//! same `Server`, the transport must agree with the simulator
+//! **byte-for-byte** (final probabilities and ledger bits), under full
+//! and partial participation alike.  A third test pins the refactored
+//! orchestrator against a hand-rolled replica of the seed's sequential
+//! driver: with `participation = 1.0` and no timeout the new code must
+//! be byte-identical to the old behavior.
 
 use std::net::TcpListener;
 use std::sync::Arc;
@@ -8,145 +15,269 @@ use std::thread;
 
 use zampling::config::FedConfig;
 use zampling::data::Dataset;
-use zampling::federated::protocol::{MaskCodec, ServerMsg};
+use zampling::federated::protocol::{
+    decode_client, decode_server, encode_client, encode_server, peek_server_frame, ClientMsg,
+    MaskCodec, ServerFrameKind, ServerMsg,
+};
 use zampling::federated::transport::{Leader, Worker};
-use zampling::federated::{pack_client_mask, run_federated, Server};
-use zampling::nn::{one_hot_into, ArchSpec};
+use zampling::federated::{client_round, pack_client_mask, run_federated, RoundPlan, Server};
+use zampling::nn::ArchSpec;
 use zampling::rng::SeedTree;
 use zampling::sparse::QMatrix;
-use zampling::zampling::{evaluate, LocalZampling, NativeExecutor, ProbVector};
+use zampling::zampling::{LocalZampling, NativeExecutor, ProbVector};
 
-fn ci_cfg() -> FedConfig {
+fn ci_cfg(clients: usize) -> FedConfig {
     let mut cfg = FedConfig::paper(8);
     cfg.train.arch = ArchSpec::small();
     cfg.train.n = ArchSpec::small().num_params() / 8;
     cfg.train.d = 5;
     cfg.train.lr = 0.1;
     cfg.train.seed = 1;
-    cfg.clients = 3;
+    cfg.clients = clients;
     cfg.rounds = 4;
     cfg.local_epochs = 1;
     cfg
 }
 
-fn free_port() -> String {
-    // Bind port 0 to discover a free port, then release it.
-    let l = TcpListener::bind("127.0.0.1:0").unwrap();
-    let addr = l.local_addr().unwrap().to_string();
-    drop(l);
-    addr
+fn ci_data(cfg: &FedConfig) -> (Vec<Dataset>, Dataset) {
+    let seeds = SeedTree::new(cfg.train.seed);
+    let (train, test) = Dataset::synthetic_pair(1_024, 256, &seeds);
+    (train.partition_iid(cfg.clients, &seeds), test)
+}
+
+/// A worker thread running the production round body (`client_round`)
+/// over the wire — the same code path as `repro serve-client`.
+fn spawn_worker(cfg: FedConfig, addr: String, shard: Dataset, k: usize) -> thread::JoinHandle<()> {
+    thread::spawn(move || {
+        let seeds = SeedTree::new(cfg.train.seed);
+        let q = Arc::new(QMatrix::generate(&cfg.train.arch, cfg.train.n, cfg.train.d, &seeds));
+        let csc = Arc::new(q.to_csc(None));
+        let sub = seeds.subtree("client", k as u64);
+        let mut state = LocalZampling::from_parts(
+            &cfg.train,
+            q,
+            csc,
+            ProbVector::from_probs(vec![0.5; cfg.train.n]),
+            &sub,
+        );
+        let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500);
+        let codec = if cfg.entropy_code_uplink { MaskCodec::Arithmetic } else { MaskCodec::Raw };
+        let mut w = Worker::connect(&addr, k as u32, codec).expect("connect");
+        loop {
+            let frame = w.recv_raw().expect("recv");
+            match peek_server_frame(&frame).expect("server frame") {
+                ServerFrameKind::Round => {
+                    let out =
+                        client_round(&cfg, &mut state, &mut exec, &shard, &seeds, &frame, codec, k)
+                            .expect("client round");
+                    w.send_frame(&out.frame).expect("send mask");
+                }
+                ServerFrameKind::Shutdown => return,
+            }
+        }
+    })
+}
+
+/// Per-round ledger facts the leader observed.
+#[derive(Debug, PartialEq, Eq)]
+struct LeaderRow {
+    up_bits: u64,
+    down_bits: u64,
+    participants: u32,
+    received: u32,
+}
+
+/// The production leader orchestration (RoundPlan → broadcast → deadline
+/// collect → renormalized aggregate), inline so the test can inspect it.
+fn run_leader(listener: TcpListener, cfg: &FedConfig) -> (Vec<f32>, Vec<LeaderRow>, Vec<usize>) {
+    let mut leader = Leader::from_listener(listener, cfg.clients).expect("accept");
+    let seeds = SeedTree::new(cfg.train.seed);
+    let mut init_rng = seeds.rng("p-init", 0);
+    let mut server =
+        Server::new(ProbVector::init_uniform(cfg.train.n, &mut init_rng).probs().to_vec());
+    let mut rows = Vec::new();
+    let mut all_dropped = Vec::new();
+    let timeout = if cfg.round_timeout_ms > 0 {
+        Some(std::time::Duration::from_millis(cfg.round_timeout_ms))
+    } else {
+        None // 0 = wait forever
+    };
+    for round in 0..cfg.rounds {
+        let plan = RoundPlan::for_round(cfg.clients, cfg.participation, &seeds, round);
+        let msg = ServerMsg::Round { round: round as u32, probs: server.probs.clone() };
+        let (frame_len, receivers) =
+            leader.broadcast_to(&msg, &plan.participants).expect("broadcast");
+        let receipt = leader
+            .collect_masks(round as u32, &plan.participants, cfg.train.n, timeout)
+            .expect("collect");
+        for &k in &receipt.received {
+            let mask = receipt.masks[k].as_ref().expect("mask present");
+            server.receive_mask(&pack_client_mask(mask));
+        }
+        let received = server.try_aggregate();
+        rows.push(LeaderRow {
+            up_bits: receipt.bytes * 8,
+            down_bits: (frame_len * receivers) as u64 * 8,
+            participants: plan.participants.len() as u32,
+            received: received as u32,
+        });
+        all_dropped.extend(receipt.dropped);
+    }
+    leader.shutdown().expect("shutdown");
+    (server.probs, rows, all_dropped)
 }
 
 #[test]
-fn tcp_federated_matches_simulator_qualitatively() {
-    let cfg = ci_cfg();
-    let seeds = SeedTree::new(cfg.train.seed);
-    let (train, test) = Dataset::synthetic_pair(1_024, 256, &seeds);
-    let shards = train.partition_iid(cfg.clients, &seeds);
+fn tcp_transport_matches_simulator_byte_for_byte() {
+    let cfg = ci_cfg(3);
+    let (shards, test) = ci_data(&cfg);
 
     // --- reference: in-process simulator ---
     let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500);
     let sim = run_federated(&cfg, &mut exec, &shards, &test, 10, cfg.rounds - 1);
-    let sim_final = sim.log.rounds.last().unwrap().mean_sampled_acc;
+    assert!(
+        sim.log.rounds.last().unwrap().mean_sampled_acc > 0.3,
+        "simulator failed to learn"
+    );
 
     // --- real transport: leader + workers on loopback ---
-    let addr = free_port();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
     let leader_cfg = cfg.clone();
-    let leader_addr = addr.clone();
-    let leader = thread::spawn(move || -> Vec<f32> {
-        let mut leader = Leader::accept(&leader_addr, leader_cfg.clients).expect("accept");
-        let seeds = SeedTree::new(leader_cfg.train.seed);
-        let mut init_rng = seeds.rng("p-init", 0);
-        let mut server = Server::new(
-            ProbVector::init_uniform(leader_cfg.train.n, &mut init_rng).probs().to_vec(),
-        );
-        for round in 0..leader_cfg.rounds {
-            leader
-                .broadcast(&ServerMsg::Round {
-                    round: round as u32,
-                    probs: server.probs.clone(),
-                })
-                .expect("broadcast");
-            let (masks, _) = leader.collect_masks(round as u32).expect("collect");
-            for m in &masks {
-                server.receive_mask(&pack_client_mask(m));
-            }
-            server.aggregate();
-        }
-        leader.shutdown().expect("shutdown");
-        server.probs
-    });
-
-    std::thread::sleep(std::time::Duration::from_millis(100));
-    let mut workers = Vec::new();
-    for k in 0..cfg.clients {
-        let cfg = cfg.clone();
-        let addr = addr.clone();
-        let shard = shards[k].clone();
-        workers.push(thread::spawn(move || {
-            let seeds = SeedTree::new(cfg.train.seed);
-            let q = Arc::new(QMatrix::generate(&cfg.train.arch, cfg.train.n, cfg.train.d, &seeds));
-            let csc = Arc::new(q.to_csc(None));
-            let sub = seeds.subtree("client", k as u64);
-            let mut state = LocalZampling::from_parts(
-                &cfg.train,
-                q,
-                csc,
-                ProbVector::from_probs(vec![0.5; cfg.train.n]),
-                &sub,
-            );
-            let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500);
-            let mut worker = Worker::connect(&addr, k as u32, MaskCodec::Raw).expect("connect");
-            loop {
-                match worker.recv().expect("recv") {
-                    ServerMsg::Round { round, probs } => {
-                        state.pv.set_probs(&probs);
-                        state.reset_optimizer(&cfg.train);
-                        for _ in 0..cfg.local_epochs {
-                            state.run_epoch(&mut exec, &shard, cfg.train.batch);
-                        }
-                        let mut mask_rng = sub.rng("uplink-mask", round as u64);
-                        let mut mask = Vec::new();
-                        state.pv.sample_mask(&mut mask_rng, &mut mask);
-                        worker.send_mask(round, mask).expect("send");
-                    }
-                    ServerMsg::Shutdown => return,
-                }
-            }
-        }));
-    }
-
-    let tcp_probs = leader.join().unwrap();
+    let leader = thread::spawn(move || run_leader(listener, &leader_cfg));
+    let workers: Vec<_> = shards
+        .iter()
+        .enumerate()
+        .map(|(k, shard)| spawn_worker(cfg.clone(), addr.clone(), shard.clone(), k))
+        .collect();
+    let (tcp_probs, rows, dropped) = leader.join().unwrap();
     for w in workers {
         w.join().unwrap();
     }
 
-    // Evaluate the TCP-trained server p on the same test set.
-    let q = QMatrix::generate(&cfg.train.arch, cfg.train.n, cfg.train.d, &seeds);
-    let out_dim = cfg.train.arch.output_dim();
-    let mut y1h = vec![0.0f32; test.len() * out_dim];
-    one_hot_into(&test.y, out_dim, &mut y1h);
-    let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500);
-    let mut r = seeds.rng("tcp-eval", 0);
-    let rep = evaluate(
-        &mut exec,
-        &q,
-        &ProbVector::from_probs(tcp_probs),
-        &test.x,
-        &y1h,
-        test.len(),
-        10,
-        &mut r,
-    );
+    // Same seeds, same round bodies, same aggregation: byte-identical.
+    assert_eq!(tcp_probs, sim.final_probs, "TCP and simulator probabilities diverged");
+    assert!(dropped.is_empty());
+    assert_eq!(rows.len(), sim.ledger.rounds.len());
+    for (r, s) in rows.iter().zip(&sim.ledger.rounds) {
+        assert_eq!(r.up_bits, s.uplink_bits);
+        assert_eq!(r.down_bits, s.downlink_bits);
+        assert_eq!(r.participants, s.participants);
+        assert_eq!(r.received, s.clients);
+    }
+}
 
-    // Same protocol, same data, same seeds for Q/init; the local-epoch rng
-    // streams differ (thread scheduling of the sim vs workers is
-    // identical here, but mask streams are derived per client+round, so
-    // the runs are in fact numerically identical up to executor order).
-    assert!(
-        (rep.mean_sampled_acc - sim_final).abs() < 0.12,
-        "tcp {} vs sim {sim_final}",
-        rep.mean_sampled_acc
-    );
-    assert!(rep.mean_sampled_acc > 0.3, "tcp run failed to learn");
+#[test]
+fn tcp_partial_participation_matches_simulator() {
+    let mut cfg = ci_cfg(4);
+    cfg.participation = 0.5;
+    let (shards, test) = ci_data(&cfg);
+
+    let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500);
+    let sim = run_federated(&cfg, &mut exec, &shards, &test, 4, cfg.rounds - 1);
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let leader_cfg = cfg.clone();
+    let leader = thread::spawn(move || run_leader(listener, &leader_cfg));
+    let workers: Vec<_> = shards
+        .iter()
+        .enumerate()
+        .map(|(k, shard)| spawn_worker(cfg.clone(), addr.clone(), shard.clone(), k))
+        .collect();
+    let (tcp_probs, rows, dropped) = leader.join().unwrap();
+    for w in workers {
+        w.join().unwrap();
+    }
+
+    assert_eq!(tcp_probs, sim.final_probs, "partial-participation runs diverged");
+    assert!(dropped.is_empty());
+    assert_eq!(rows.len(), sim.ledger.rounds.len());
+    for (r, s) in rows.iter().zip(&sim.ledger.rounds) {
+        assert_eq!(r.participants, 2, "0.5 of 4 clients");
+        assert_eq!(r.participants, s.participants);
+        assert_eq!(r.received, s.clients);
+        assert_eq!(r.up_bits, s.uplink_bits);
+        assert_eq!(r.down_bits, s.downlink_bits);
+    }
+}
+
+/// Replica of the seed's sequential `run_federated` loop (pre-RoundPlan,
+/// pre-fault-tolerance), built from public API pieces.  The refactored
+/// driver with `participation = 1.0` and no timeout must reproduce it
+/// byte-for-byte — the "no behavior change at defaults" guarantee.
+fn legacy_sequential_driver(cfg: &FedConfig, shards: &[Dataset]) -> (Vec<f32>, Vec<(u64, u64)>) {
+    let seeds = SeedTree::new(cfg.train.seed);
+    let q = Arc::new(QMatrix::generate(&cfg.train.arch, cfg.train.n, cfg.train.d, &seeds));
+    let csc = Arc::new(q.to_csc(None));
+    let mut init_rng = seeds.rng("p-init", 0);
+    let mut server =
+        Server::new(ProbVector::init_uniform(cfg.train.n, &mut init_rng).probs().to_vec());
+    let mut clients: Vec<LocalZampling> = (0..cfg.clients)
+        .map(|k| {
+            let sub = seeds.subtree("client", k as u64);
+            LocalZampling::from_parts(
+                &cfg.train,
+                Arc::clone(&q),
+                Arc::clone(&csc),
+                ProbVector::from_probs(server.probs.clone()),
+                &sub,
+            )
+        })
+        .collect();
+    let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500);
+    let mut rows = Vec::new();
+    for round in 0..cfg.rounds {
+        let round_msg =
+            encode_server(&ServerMsg::Round { round: round as u32, probs: server.probs.clone() });
+        let (mut up_bits, mut down_bits) = (0u64, 0u64);
+        for (k, client) in clients.iter_mut().enumerate() {
+            let ServerMsg::Round { probs, .. } = decode_server(&round_msg).unwrap() else {
+                unreachable!()
+            };
+            down_bits += round_msg.len() as u64 * 8;
+            client.pv.set_probs(&probs);
+            client.reset_optimizer(&cfg.train);
+            for _ in 0..cfg.local_epochs {
+                client.run_epoch(&mut exec, &shards[k], cfg.train.batch);
+            }
+            let mut mask_rng = seeds.subtree("client", k as u64).rng("uplink-mask", round as u64);
+            let mut mask = Vec::new();
+            client.pv.sample_mask(&mut mask_rng, &mut mask);
+            let frame = encode_client(
+                &ClientMsg::Mask { round: round as u32, client: k as u32, n: mask.len(), mask },
+                MaskCodec::Raw,
+            );
+            up_bits += frame.len() as u64 * 8;
+            let ClientMsg::Mask { mask, .. } = decode_client(&frame).unwrap() else {
+                unreachable!()
+            };
+            server.receive_mask(&pack_client_mask(&mask));
+        }
+        server.aggregate();
+        rows.push((up_bits, down_bits));
+    }
+    (server.probs, rows)
+}
+
+#[test]
+fn default_config_is_byte_identical_to_the_legacy_driver() {
+    let mut cfg = ci_cfg(4);
+    cfg.rounds = 5;
+    cfg.participation = 1.0; // explicit: the legacy regime
+    cfg.round_timeout_ms = 0; // ∞ — no deadline semantics in play
+    let (shards, test) = ci_data(&cfg);
+
+    let (legacy_probs, legacy_rows) = legacy_sequential_driver(&cfg, &shards);
+    let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500);
+    let new = run_federated(&cfg, &mut exec, &shards, &test, 2, cfg.rounds);
+
+    assert_eq!(new.final_probs, legacy_probs, "orchestrator changed the numerics");
+    assert_eq!(new.ledger.rounds.len(), legacy_rows.len());
+    for (s, (up, down)) in new.ledger.rounds.iter().zip(&legacy_rows) {
+        assert_eq!(s.uplink_bits, *up);
+        assert_eq!(s.downlink_bits, *down);
+        assert_eq!(s.participants, cfg.clients as u32);
+        assert_eq!(s.dropped, 0);
+    }
 }
