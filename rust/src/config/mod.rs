@@ -134,6 +134,67 @@ impl TrainConfig {
     }
 }
 
+/// Which `Transport` implementation drives the federated round loop
+/// (see `federated::engine`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// Sequential in-process clients through one shared executor (works
+    /// with any backend, including non-`Send` PJRT handles).
+    Local,
+    /// In-process clients sharded across the persistent worker pool
+    /// (native backend; byte-identical to `Local`).
+    Pool,
+    /// Real sockets: this process is the leader, `repro serve-client`
+    /// workers connect.
+    Tcp,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "local" => Ok(TransportKind::Local),
+            "pool" => Ok(TransportKind::Pool),
+            "tcp" => Ok(TransportKind::Tcp),
+            other => Err(format!("unknown transport '{other}' (local|pool|tcp)")),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TransportKind::Local => "local",
+            TransportKind::Pool => "pool",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+}
+
+/// Which `ParticipationPolicy` selects each round's clients.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// Seeded uniform sampling (the paper's setting).
+    Uniform,
+    /// Deprioritize clients that repeatedly missed the round deadline,
+    /// fed by the per-round participants/dropped ledger history.
+    StragglerAware,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "uniform" => Ok(PolicyKind::Uniform),
+            "straggler-aware" => Ok(PolicyKind::StragglerAware),
+            other => Err(format!("unknown policy '{other}' (uniform|straggler-aware)")),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PolicyKind::Uniform => "uniform",
+            PolicyKind::StragglerAware => "straggler-aware",
+        }
+    }
+}
+
 /// Federated Zampling config — §1.3 Federated Zampling / §3.2.
 #[derive(Clone, Debug)]
 pub struct FedConfig {
@@ -154,6 +215,17 @@ pub struct FedConfig {
     /// milliseconds.  0 = wait forever (the in-process simulator never
     /// times out either way).
     pub round_timeout_ms: u64,
+    /// Heartbeat-extension cap, in milliseconds: a worker heartbeat
+    /// pushes the round deadline out by another `round_timeout_ms`, but
+    /// never past this total.  0 disables extension ("slow but alive"
+    /// is treated like "dead").  Only meaningful with a nonzero
+    /// `round_timeout_ms`, and workers only emit heartbeats *between*
+    /// local epochs, so extension needs `local_epochs >= 2`.
+    pub round_timeout_max_ms: u64,
+    /// Which transport drives the round loop (`repro train-federated`).
+    pub transport: TransportKind,
+    /// Which policy selects each round's participants.
+    pub policy: PolicyKind,
 }
 
 impl FedConfig {
@@ -169,12 +241,15 @@ impl FedConfig {
             entropy_code_uplink: false,
             participation: 1.0,
             round_timeout_ms: 0,
+            round_timeout_max_ms: 0,
+            transport: TransportKind::Pool,
+            policy: PolicyKind::Uniform,
         }
     }
 
     pub const KNOWN_KEYS: &'static [&'static str] = &[
         "clients", "rounds", "local-epochs", "entropy-code-uplink", "participation",
-        "round-timeout-ms",
+        "round-timeout-ms", "round-timeout-max-ms", "transport", "policy",
     ];
 
     pub fn from_toml(doc: &TomlDoc) -> Result<Self, String> {
@@ -201,6 +276,9 @@ impl FedConfig {
             entropy_code_uplink: fed_doc.bool_or("entropy-code-uplink", false),
             participation,
             round_timeout_ms: fed_doc.usize_or("round-timeout-ms", 0) as u64,
+            round_timeout_max_ms: fed_doc.usize_or("round-timeout-max-ms", 0) as u64,
+            transport: TransportKind::parse(&fed_doc.str_or("transport", "pool"))?,
+            policy: PolicyKind::parse(&fed_doc.str_or("policy", "uniform"))?,
         })
     }
 }
@@ -229,6 +307,39 @@ mod tests {
         assert!((f.train.lr - 0.1).abs() < 1e-12);
         assert_eq!(f.participation, 1.0);
         assert_eq!(f.round_timeout_ms, 0);
+        assert_eq!(f.round_timeout_max_ms, 0);
+        assert_eq!(f.transport, TransportKind::Pool);
+        assert_eq!(f.policy, PolicyKind::Uniform);
+    }
+
+    #[test]
+    fn transport_and_policy_parse_and_validate() {
+        let doc = TomlDoc::parse(
+            "arch = \"small\"\n[federated]\ntransport = \"tcp\"\npolicy = \"straggler-aware\"\n\
+             round-timeout-ms = 100\nround-timeout-max-ms = 700\n",
+        )
+        .unwrap();
+        let f = FedConfig::from_toml(&doc).unwrap();
+        assert_eq!(f.transport, TransportKind::Tcp);
+        assert_eq!(f.policy, PolicyKind::StragglerAware);
+        assert_eq!(f.round_timeout_max_ms, 700);
+        for bad in [
+            "[federated]\ntransport = \"carrier-pigeon\"\n",
+            "[federated]\npolicy = \"vip-only\"\n",
+        ] {
+            let doc = TomlDoc::parse(&format!("arch = \"small\"\n{bad}")).unwrap();
+            assert!(FedConfig::from_toml(&doc).is_err(), "accepted {bad}");
+        }
+        for (kind, s) in [
+            (TransportKind::Local, "local"),
+            (TransportKind::Pool, "pool"),
+            (TransportKind::Tcp, "tcp"),
+        ] {
+            assert_eq!(TransportKind::parse(s).unwrap(), kind);
+            assert_eq!(kind.as_str(), s);
+        }
+        assert_eq!(PolicyKind::parse("uniform").unwrap().as_str(), "uniform");
+        assert_eq!(PolicyKind::parse("straggler-aware").unwrap().as_str(), "straggler-aware");
     }
 
     #[test]

@@ -8,9 +8,9 @@
 use super::{eval_samples, Scale};
 use crate::baselines::{fedavg, fedpm};
 use crate::comm::SavingsReport;
-use crate::config::FedConfig;
+use crate::config::{FedConfig, PolicyKind};
 use crate::data::Dataset;
-use crate::federated::run_federated;
+use crate::federated::{make_policy, run_federated, run_federated_custom};
 use crate::metrics::RunLog;
 use crate::nn::ArchSpec;
 use crate::rng::SeedTree;
@@ -194,6 +194,81 @@ pub fn print_dropout_sweep(points: &[DropoutPoint]) {
     }
 }
 
+/// One row of the participation-policy comparison: the same flaky
+/// deployment (one chronic straggler injected via the engine's `Flaky`
+/// chaos transport) driven by each `ParticipationPolicy`.
+#[derive(Clone, Debug)]
+pub struct PolicyPoint {
+    pub policy: &'static str,
+    pub final_acc: f64,
+    pub best_acc: f64,
+    /// Selected-but-never-arrived client rounds across the run — wasted
+    /// downlink + local compute.
+    pub total_dropped: u64,
+    /// Mean masks actually aggregated per round.
+    pub avg_received: f64,
+}
+
+/// Compare `Uniform` vs `StragglerAware` participation under a chronic
+/// straggler (client 0 always misses the deadline when selected) at
+/// `participation = 0.5`, m/n = 8.  Both runs share seeds, data, and
+/// the chaos stream, so the rows differ only in who gets selected —
+/// the straggler-aware policy should waste fewer selections on the
+/// flaky client.
+pub fn run_policy_comparison(scale: Scale, eval_every: usize) -> Vec<PolicyPoint> {
+    let mut cfg = fed_config(8, scale);
+    cfg.participation = 0.5;
+    // Enough rounds for the drop history to separate the policies.
+    cfg.rounds = cfg.rounds.max(24);
+    let (shards, test) = load_fed_data(&cfg);
+    let mut rates = vec![0.0f64; cfg.clients];
+    rates[0] = 1.0;
+    let mut points = Vec::new();
+    for kind in [PolicyKind::Uniform, PolicyKind::StragglerAware] {
+        let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500);
+        let mut policy = make_policy(kind);
+        let out = run_federated_custom(
+            &cfg,
+            &mut exec,
+            &shards,
+            &test,
+            eval_samples(scale),
+            eval_every,
+            policy.as_mut(),
+            Some(&rates),
+        );
+        let rounds = out.ledger.rounds.len().max(1) as f64;
+        let avg_received =
+            out.ledger.rounds.iter().map(|r| r.clients as f64).sum::<f64>() / rounds;
+        points.push(PolicyPoint {
+            policy: kind.as_str(),
+            final_acc: out.log.last_acc().unwrap_or(0.0),
+            best_acc: out.log.best_acc().unwrap_or(0.0),
+            total_dropped: out.ledger.total_dropped(),
+            avg_received,
+        });
+    }
+    points
+}
+
+/// Policy-comparison printer.
+pub fn print_policy_comparison(points: &[PolicyPoint]) {
+    use crate::util::bench::{row, table};
+    table(
+        "Participation policy under a chronic straggler (client 0 always misses)",
+        &["policy", "avg masks/round", "dropped rounds", "final acc", "best acc"],
+    );
+    for p in points {
+        row(&[
+            p.policy.to_string(),
+            format!("{:.2}", p.avg_received),
+            format!("{}", p.total_dropped),
+            format!("{:.4}", p.final_acc),
+            format!("{:.4}", p.best_acc),
+        ]);
+    }
+}
+
 /// Expected savings sanity (closed form): savings ignore framing bytes.
 pub fn ideal_savings(m: usize, n: usize) -> SavingsReport {
     SavingsReport {
@@ -223,6 +298,21 @@ mod tests {
         }
         // Full participation still learns.
         assert!(points[3].final_acc > 0.25, "{:?}", points[3]);
+    }
+
+    #[test]
+    fn policy_comparison_rewards_straggler_awareness() {
+        let points = run_policy_comparison(Scale::Ci, 5);
+        assert_eq!(points.len(), 2);
+        let (uni, aware) = (&points[0], &points[1]);
+        assert_eq!(uni.policy, "uniform");
+        assert_eq!(aware.policy, "straggler-aware");
+        assert!(uni.total_dropped > 0, "chaos straggler never dropped: {uni:?}");
+        assert!(
+            aware.total_dropped < uni.total_dropped,
+            "straggler-aware wasted as many rounds: {aware:?} vs {uni:?}"
+        );
+        assert!(aware.avg_received >= uni.avg_received, "{points:?}");
     }
 
     #[test]

@@ -1,0 +1,688 @@
+//! The transport-agnostic round engine: **one** federated round loop
+//! (plan → broadcast probs → collect masks → renormalized aggregate →
+//! ledger row → eval) shared by every driver in the repo.
+//!
+//! The paper's protocol is transport-independent — server and clients
+//! only exchange the Bernoulli mask over `p` — so the round state
+//! machine lives here once, generic over two traits:
+//!
+//! * [`Transport`] — how the round frame reaches the participants and
+//!   how their mask contributions come back.  Implementations:
+//!   [`InProcessTransport`](super::sim::InProcessTransport) (sequential
+//!   clients through one executor), [`PoolTransport`](super::sim::PoolTransport)
+//!   (clients sharded across `runtime::pool`),
+//!   [`TcpTransport`](super::transport::TcpTransport) (real sockets via
+//!   the fault-tolerant [`Leader`](super::transport::Leader)), and
+//!   [`PeerTransport`](super::gossip::PeerTransport) (decentralized
+//!   gossip — each node runs a tiny aggregation engine for its
+//!   neighbours).
+//! * [`ParticipationPolicy`] — who participates each round.
+//!   [`Uniform`] reproduces the seeded `RoundPlan` sampling;
+//!   [`StragglerAware`] feeds the per-round `participants`/`dropped`
+//!   ledger history back into the draw, deprioritizing clients that
+//!   keep missing the deadline.
+//!
+//! At `participation = 1.0` with the [`Uniform`] policy the engine is
+//! **byte-identical** to the four pre-refactor drivers
+//! (`run_federated`, `run_federated_parallel`, the TCP leader loop,
+//! `run_gossip`) — pinned by the legacy-replica and cross-transport
+//! tests in `federated::sim`, `federated::gossip`, and
+//! `tests/federated_integration.rs`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::comm::{CommLedger, RoundCost};
+use crate::config::{FedConfig, PolicyKind};
+use crate::data::Dataset;
+use crate::metrics::{RoundRecord, RunLog};
+use crate::nn::one_hot_into;
+use crate::rng::{sample_distinct, Rng, SeedTree, Xoshiro256pp};
+use crate::sparse::QMatrix;
+use crate::util::error::Result;
+use crate::zampling::{evaluate, DenseExecutor, ProbVector};
+
+use super::protocol::{encode_server, ServerMsg};
+use super::Server;
+
+/// Result of a federated run.
+pub struct FedOutcome {
+    pub log: RunLog,
+    pub ledger: CommLedger,
+    pub final_probs: Vec<f32>,
+}
+
+/// Which clients a round selects (sorted client ids).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RoundPlan {
+    pub round: usize,
+    pub participants: Vec<usize>,
+}
+
+/// Shared subset-sizing rule for every policy: `None` means "everyone,
+/// no rng stream consumed" (the byte-identical legacy regime); `Some(k)`
+/// is `max(1, round(participation·clients))`.  One definition, so no
+/// two policies can ever disagree on the subset size for a config.
+fn plan_size(clients: usize, participation: f64) -> Option<usize> {
+    assert!(clients > 0, "round plan needs at least one client");
+    assert!(
+        participation > 0.0 && participation <= 1.0,
+        "participation {participation} must be in (0, 1]"
+    );
+    if participation >= 1.0 {
+        return None;
+    }
+    Some(((participation * clients as f64).round() as usize).clamp(1, clients))
+}
+
+impl RoundPlan {
+    /// Select the round's participants uniformly.  `participation = 1.0`
+    /// selects everyone without touching any rng stream; below that,
+    /// `max(1, round(participation·clients))` distinct clients are drawn
+    /// from the shared seed tree so leader and simulator agree on the
+    /// subset without communicating it.
+    pub fn for_round(
+        clients: usize,
+        participation: f64,
+        seeds: &SeedTree,
+        round: usize,
+    ) -> RoundPlan {
+        let Some(k) = plan_size(clients, participation) else {
+            return RoundPlan { round, participants: (0..clients).collect() };
+        };
+        let mut rng = seeds.rng("round-participants", round as u64);
+        let mut picks: Vec<u32> = Vec::with_capacity(k);
+        sample_distinct(&mut rng, clients, k, &mut picks);
+        let mut participants: Vec<usize> = picks.into_iter().map(|i| i as usize).collect();
+        participants.sort_unstable();
+        RoundPlan { round, participants }
+    }
+}
+
+/// What actually happened in a round, after aggregation.
+#[derive(Clone, Debug)]
+pub struct RoundOutcome {
+    pub plan: RoundPlan,
+    /// Masks folded into the global mean (the renormalization count).
+    pub received: usize,
+    /// Selected clients whose mask never arrived.
+    pub dropped: Vec<usize>,
+    pub up_bits: u64,
+    pub down_bits: u64,
+    pub round_loss: f64,
+}
+
+/// One client's contribution to a round, as the transport saw it.
+#[derive(Clone, Debug)]
+pub struct Contribution {
+    pub client: usize,
+    /// Local training loss (0.0 for remote transports — workers keep
+    /// their losses local).
+    pub loss: f64,
+    /// Encoded uplink bits this mask actually cost on the wire.
+    pub up_bits: u64,
+    /// The mask, bit-packed for aggregation.
+    pub packed_mask: Vec<u64>,
+}
+
+/// Everything a transport's round exchange produced.  `contributions`
+/// MUST be in ascending client order — every driver reduces in client
+/// order so f64 summation and mask-fold order never change.
+#[derive(Clone, Debug, Default)]
+pub struct RoundTraffic {
+    pub contributions: Vec<Contribution>,
+    /// Selected clients whose mask did not arrive, ascending.
+    pub dropped: Vec<usize>,
+    /// Broadcast bits actually delivered this round.
+    pub down_bits: u64,
+}
+
+/// Mask-collection deadline semantics, owned by the engine and handed to
+/// the transport each round.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DeadlinePolicy {
+    /// Base per-round deadline (`None` = wait forever).
+    pub timeout: Option<Duration>,
+    /// Heartbeat extension cap, measured from collection start: a
+    /// heartbeat from a pending participant pushes the deadline out to
+    /// `now + timeout`, but never past `start + cap`.  `None` disables
+    /// extension, so "slow but alive" and "dead" are treated alike.
+    pub cap: Option<Duration>,
+}
+
+impl DeadlinePolicy {
+    /// Wait forever (the in-process semantics).
+    pub fn unbounded() -> Self {
+        Self { timeout: None, cap: None }
+    }
+
+    /// A fixed deadline with no heartbeat extension.
+    pub fn fixed(timeout: Duration) -> Self {
+        Self { timeout: Some(timeout), cap: None }
+    }
+
+    /// Derive from config: `round_timeout_ms` (0 = ∞) as the base and
+    /// `round_timeout_max_ms` (0 = no extension) as the heartbeat cap,
+    /// clamped so the cap is never shorter than the base deadline.
+    pub fn from_cfg(cfg: &FedConfig) -> Self {
+        let timeout =
+            (cfg.round_timeout_ms > 0).then(|| Duration::from_millis(cfg.round_timeout_ms));
+        let cap = (cfg.round_timeout_max_ms > 0 && cfg.round_timeout_ms > 0)
+            .then(|| Duration::from_millis(cfg.round_timeout_max_ms.max(cfg.round_timeout_ms)));
+        Self { timeout, cap }
+    }
+}
+
+/// Everything a transport needs to run one round's exchange.
+pub struct RoundCtx<'a> {
+    pub round: u32,
+    /// The encoded `ServerMsg::Round` frame — exactly the bytes a TCP
+    /// leader ships; in-process transports feed it to `client_round` so
+    /// the ledger counts real protocol bytes everywhere.
+    pub frame: &'a [u8],
+    /// This round's participants, ascending.
+    pub participants: &'a [usize],
+    /// Model size (mask length) — remote transports validate against it.
+    pub n: usize,
+    pub deadline: DeadlinePolicy,
+}
+
+/// How masks move: broadcast the round frame, return what came back.
+pub trait Transport {
+    /// Whether this transport consumes the engine's encoded broadcast
+    /// frame.  Peer-to-peer transports (gossip) return `false`, letting
+    /// the engine skip the per-round probs clone + wire encode they
+    /// would ignore; `ctx.frame` is then empty.
+    fn wants_broadcast(&self) -> bool {
+        true
+    }
+
+    /// Execute one round's communication: deliver `ctx.frame` to the
+    /// participants, gather their mask contributions (deadline-bounded
+    /// for remote implementations), and report drops + traffic.
+    fn exchange(&mut self, ctx: &RoundCtx<'_>) -> Result<RoundTraffic>;
+
+    /// Fold the round's masks into the global model state.  The default
+    /// is the paper's central aggregation — mean over received masks,
+    /// renormalized by the received count.  [`PeerTransport`]
+    /// (decentralized gossip) overrides it with per-node neighbour means
+    /// and writes the consensus vector into `server.probs` so the
+    /// engine's evaluation path stays uniform.
+    ///
+    /// [`PeerTransport`]: super::gossip::PeerTransport
+    fn aggregate(&mut self, server: &mut Server, traffic: &RoundTraffic) -> usize {
+        for c in &traffic.contributions {
+            server.receive_mask(&c.packed_mask);
+        }
+        server.try_aggregate()
+    }
+
+    /// The executor the engine evaluates the global model on.
+    fn eval_executor(&mut self) -> &mut dyn DenseExecutor;
+
+    /// Called once after the last round (e.g. broadcast `Shutdown`).
+    fn finish(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Per-client participation history the engine accumulates and feeds
+/// back into the policy: how often each client recently missed a round
+/// it was selected for.
+#[derive(Clone, Debug)]
+pub struct RoundHistory {
+    /// Consecutive-miss pressure per client: +1 on every drop, halved on
+    /// every successful receipt — a client that recovers sheds its
+    /// penalty geometrically.
+    pub misses: Vec<u32>,
+}
+
+impl RoundHistory {
+    pub fn new(clients: usize) -> Self {
+        Self { misses: vec![0; clients] }
+    }
+
+    pub fn miss_count(&self, client: usize) -> u32 {
+        self.misses.get(client).copied().unwrap_or(0)
+    }
+
+    /// Fold one round's outcome in.
+    pub fn note_round(&mut self, traffic: &RoundTraffic) {
+        for c in &traffic.contributions {
+            if let Some(m) = self.misses.get_mut(c.client) {
+                *m /= 2;
+            }
+        }
+        for &k in &traffic.dropped {
+            if let Some(m) = self.misses.get_mut(k) {
+                *m = m.saturating_add(1);
+            }
+        }
+    }
+}
+
+/// Who participates each round.  Implementations must be deterministic
+/// functions of `(seeds, round, history)` and must return a non-empty,
+/// in-bounds, duplicate-free ascending subset (property-tested in
+/// `tests/policy_properties.rs`).
+pub trait ParticipationPolicy {
+    fn name(&self) -> &'static str;
+
+    fn select(
+        &mut self,
+        round: usize,
+        clients: usize,
+        participation: f64,
+        seeds: &SeedTree,
+        history: &RoundHistory,
+    ) -> RoundPlan;
+}
+
+/// The paper's policy: uniform seeded sampling, history-blind.  At
+/// `participation = 1.0` no rng stream is consumed, which is what keeps
+/// the engine byte-identical to the pre-refactor drivers.
+pub struct Uniform;
+
+impl ParticipationPolicy for Uniform {
+    fn name(&self) -> &'static str {
+        "uniform"
+    }
+
+    fn select(
+        &mut self,
+        round: usize,
+        clients: usize,
+        participation: f64,
+        seeds: &SeedTree,
+        _history: &RoundHistory,
+    ) -> RoundPlan {
+        RoundPlan::for_round(clients, participation, seeds, round)
+    }
+}
+
+/// Straggler-aware participation: clients are drawn **without
+/// replacement** with weight `1 / (1 + misses)` (Efraimidis–Spirakis
+/// keys over a dedicated seed stream), so clients that repeatedly miss
+/// `round_timeout_ms` are geometrically deprioritized while they keep a
+/// nonzero chance to rejoin and shed their penalty.  Deterministic for
+/// identical `(seed, round, history)`.
+pub struct StragglerAware;
+
+impl ParticipationPolicy for StragglerAware {
+    fn name(&self) -> &'static str {
+        "straggler-aware"
+    }
+
+    fn select(
+        &mut self,
+        round: usize,
+        clients: usize,
+        participation: f64,
+        seeds: &SeedTree,
+        history: &RoundHistory,
+    ) -> RoundPlan {
+        let Some(k) = plan_size(clients, participation) else {
+            return RoundPlan { round, participants: (0..clients).collect() };
+        };
+        let mut rng = seeds.rng("straggler-participants", round as u64);
+        // Weighted sampling without replacement: key_i = ln(u_i) / w_i
+        // (u in (0,1], so keys are ≤ 0); the k largest keys win.  Ties
+        // break by client id, so the draw is a pure function of the
+        // stream + history.
+        let mut keyed: Vec<(f64, usize)> = (0..clients)
+            .map(|i| {
+                let u = rng.next_f64().max(f64::MIN_POSITIVE);
+                let w = 1.0 / (1.0 + history.miss_count(i) as f64);
+                (u.ln() / w, i)
+            })
+            .collect();
+        keyed.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+        let mut participants: Vec<usize> = keyed[..k].iter().map(|&(_, i)| i).collect();
+        participants.sort_unstable();
+        RoundPlan { round, participants }
+    }
+}
+
+/// Build the configured policy.
+pub fn make_policy(kind: PolicyKind) -> Box<dyn ParticipationPolicy> {
+    match kind {
+        PolicyKind::Uniform => Box::new(Uniform),
+        PolicyKind::StragglerAware => Box::new(StragglerAware),
+    }
+}
+
+/// Chaos decorator for tests and the dropout experiment: after the inner
+/// transport's exchange, deterministically drop each client's
+/// contribution with its per-client rate (seed stream `"chaos-drop"`),
+/// simulating a straggler that received the broadcast and trained but
+/// missed the collection deadline.  Downlink bits are unaffected (the
+/// broadcast was delivered); the dropped mask's uplink bits never hit
+/// the ledger — exactly the TCP leader's deadline semantics.
+pub struct Flaky<T: Transport> {
+    pub inner: T,
+    seeds: SeedTree,
+    rates: Vec<f64>,
+}
+
+impl<T: Transport> Flaky<T> {
+    pub fn new(inner: T, seeds: SeedTree, rates: Vec<f64>) -> Self {
+        Self { inner, seeds, rates }
+    }
+}
+
+impl<T: Transport> Transport for Flaky<T> {
+    fn wants_broadcast(&self) -> bool {
+        self.inner.wants_broadcast()
+    }
+
+    fn exchange(&mut self, ctx: &RoundCtx<'_>) -> Result<RoundTraffic> {
+        let mut traffic = self.inner.exchange(ctx)?;
+        let mut rng = self.seeds.rng("chaos-drop", ctx.round as u64);
+        // One draw per population slot, so a client's fate this round is
+        // independent of who else was selected.
+        let fates: Vec<bool> = self.rates.iter().map(|&r| rng.bernoulli(r)).collect();
+        let mut kept = Vec::with_capacity(traffic.contributions.len());
+        for c in traffic.contributions.drain(..) {
+            if fates.get(c.client).copied().unwrap_or(false) {
+                traffic.dropped.push(c.client);
+            } else {
+                kept.push(c);
+            }
+        }
+        traffic.contributions = kept;
+        traffic.dropped.sort_unstable();
+        Ok(traffic)
+    }
+
+    fn aggregate(&mut self, server: &mut Server, traffic: &RoundTraffic) -> usize {
+        self.inner.aggregate(server, traffic)
+    }
+
+    fn eval_executor(&mut self) -> &mut dyn DenseExecutor {
+        self.inner.eval_executor()
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.inner.finish()
+    }
+}
+
+/// The one round loop.  Owns the global server state, the savings
+/// ledger, the run log, the eval machinery, and the participation
+/// history; everything transport-specific lives behind the traits.
+pub struct RoundEngine<'a> {
+    cfg: &'a FedConfig,
+    /// Client population (usually `cfg.clients`; the gossip transport
+    /// passes its topology size).
+    population: usize,
+    seeds: SeedTree,
+    server: Server,
+    q: Arc<QMatrix>,
+    test: &'a Dataset,
+    test_y1h: Vec<f32>,
+    eval_rng: Xoshiro256pp,
+    eval_samples: usize,
+    eval_every: usize,
+    history: RoundHistory,
+    log: RunLog,
+    ledger: CommLedger,
+    verbose: bool,
+}
+
+impl<'a> RoundEngine<'a> {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        cfg: &'a FedConfig,
+        population: usize,
+        q: Arc<QMatrix>,
+        init_probs: Vec<f32>,
+        test: &'a Dataset,
+        eval_samples: usize,
+        eval_every: usize,
+        log_name: &str,
+    ) -> Self {
+        assert!(population > 0, "engine needs at least one client");
+        let seeds = SeedTree::new(cfg.train.seed);
+        let out_dim = cfg.train.arch.output_dim();
+        let mut test_y1h = vec![0.0f32; test.len() * out_dim];
+        one_hot_into(&test.y, out_dim, &mut test_y1h);
+        let eval_rng = seeds.rng("eval-sampler", 0);
+        Self {
+            cfg,
+            population,
+            seeds,
+            server: Server::new(init_probs),
+            q,
+            test,
+            test_y1h,
+            eval_rng,
+            eval_samples,
+            eval_every,
+            history: RoundHistory::new(population),
+            log: RunLog::new(log_name),
+            ledger: CommLedger::default(),
+            verbose: false,
+        }
+    }
+
+    /// Print per-round progress (drop reports + eval lines) as rounds
+    /// complete — the TCP leader's live output.
+    pub fn verbose(mut self, on: bool) -> Self {
+        self.verbose = on;
+        self
+    }
+
+    /// Drive `cfg.rounds` rounds over `transport` with `policy`.
+    pub fn run(
+        mut self,
+        transport: &mut dyn Transport,
+        policy: &mut dyn ParticipationPolicy,
+    ) -> Result<FedOutcome> {
+        let deadline = DeadlinePolicy::from_cfg(self.cfg);
+        for round in 0..self.cfg.rounds {
+            let plan = policy.select(
+                round,
+                self.population,
+                self.cfg.participation,
+                &self.seeds,
+                &self.history,
+            );
+            // Broadcast p(t) — one encoded frame, shipped (or counted)
+            // per participant by the transport.
+            let frame = if transport.wants_broadcast() {
+                encode_server(&ServerMsg::Round {
+                    round: round as u32,
+                    probs: self.server.probs.clone(),
+                })
+            } else {
+                Vec::new()
+            };
+            let ctx = RoundCtx {
+                round: round as u32,
+                frame: &frame,
+                participants: &plan.participants,
+                n: self.cfg.train.n,
+                deadline,
+            };
+            let traffic = transport.exchange(&ctx)?;
+
+            // Reduce in client order (f64 summation order fixed), close
+            // the aggregation renormalized by the received count, and
+            // record the ledger row.
+            let (mut up_bits, mut round_loss) = (0u64, 0.0f64);
+            for c in &traffic.contributions {
+                up_bits += c.up_bits;
+                round_loss += c.loss;
+            }
+            let received = transport.aggregate(&mut self.server, &traffic);
+            self.history.note_round(&traffic);
+            self.ledger.record(RoundCost {
+                uplink_bits: up_bits,
+                downlink_bits: traffic.down_bits,
+                clients: received as u32,
+                participants: plan.participants.len() as u32,
+                dropped: traffic.dropped.len() as u32,
+            });
+            if self.verbose && !traffic.dropped.is_empty() {
+                println!("round {round:>3}  dropped clients {:?}", traffic.dropped);
+            }
+            let outcome = RoundOutcome {
+                plan,
+                received,
+                dropped: traffic.dropped,
+                up_bits,
+                down_bits: traffic.down_bits,
+                round_loss,
+            };
+            self.eval_and_log(transport, &outcome);
+        }
+        transport.finish()?;
+        Ok(FedOutcome { log: self.log, ledger: self.ledger, final_probs: self.server.probs })
+    }
+
+    /// Evaluate the global `p` and push the round record when the
+    /// cadence (or the final round) says so.  One body for all
+    /// transports is what makes the drivers' logs identical by
+    /// construction.
+    fn eval_and_log(&mut self, transport: &mut dyn Transport, outcome: &RoundOutcome) {
+        let round = outcome.plan.round;
+        if round % self.eval_every != 0 && round + 1 != self.cfg.rounds {
+            return;
+        }
+        let pv = ProbVector::from_probs(self.server.probs.clone());
+        let rep = evaluate(
+            transport.eval_executor(),
+            &self.q,
+            &pv,
+            &self.test.x,
+            &self.test_y1h,
+            self.test.len(),
+            self.eval_samples,
+            &mut self.eval_rng,
+        );
+        if self.verbose {
+            println!(
+                "round {:>3}  sampled {:.4} ± {:.4}  expected {:.4}  ({} of {} masks)",
+                round,
+                rep.mean_sampled_acc,
+                rep.sampled_acc_std,
+                rep.expected_acc,
+                outcome.received,
+                outcome.plan.participants.len()
+            );
+        }
+        self.log.push(RoundRecord {
+            round,
+            mean_sampled_acc: rep.mean_sampled_acc,
+            sampled_acc_std: rep.sampled_acc_std,
+            expected_acc: rep.expected_acc,
+            train_loss: outcome.round_loss / outcome.received.max(1) as f64,
+            uplink_bits: outcome.up_bits,
+            downlink_bits: outcome.down_bits,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_plan_is_deterministic_and_sized() {
+        let seeds = SeedTree::new(9);
+        for round in 0..20 {
+            let a = RoundPlan::for_round(10, 0.5, &seeds, round);
+            let b = RoundPlan::for_round(10, 0.5, &seeds, round);
+            assert_eq!(a, b);
+            assert_eq!(a.participants.len(), 5);
+            let mut sorted = a.participants.clone();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 5, "duplicate participant in {a:?}");
+            assert!(a.participants.iter().all(|&k| k < 10));
+        }
+        // subsets vary across rounds
+        let p0 = RoundPlan::for_round(10, 0.5, &seeds, 0);
+        assert!((1..20).any(|r| RoundPlan::for_round(10, 0.5, &seeds, r) != p0));
+        // full participation selects everyone, tiny rates select at least one
+        assert_eq!(RoundPlan::for_round(4, 1.0, &seeds, 3).participants, vec![0, 1, 2, 3]);
+        assert_eq!(RoundPlan::for_round(4, 0.01, &seeds, 3).participants.len(), 1);
+    }
+
+    #[test]
+    fn straggler_aware_deprioritizes_repeat_missers() {
+        let seeds = SeedTree::new(3);
+        let clean = RoundHistory::new(8);
+        let mut dirty = RoundHistory::new(8);
+        dirty.misses[2] = 9; // chronic straggler: weight 1/10
+        let mut policy = StragglerAware;
+        let (mut with2_clean, mut with2_dirty) = (0usize, 0usize);
+        for round in 0..200 {
+            if policy.select(round, 8, 0.5, &seeds, &clean).participants.contains(&2) {
+                with2_clean += 1;
+            }
+            if policy.select(round, 8, 0.5, &seeds, &dirty).participants.contains(&2) {
+                with2_dirty += 1;
+            }
+        }
+        // Expected ≈ 100 clean vs ≈ 15 dirty selections over 200 rounds.
+        assert!(
+            with2_dirty * 2 < with2_clean,
+            "straggler not deprioritized: {with2_dirty} vs {with2_clean}"
+        );
+        // ... but never permanently excluded: weights stay positive.
+        assert!(with2_dirty > 0, "straggler must keep a rejoin chance");
+    }
+
+    #[test]
+    fn history_decays_on_receipt_and_grows_on_drop() {
+        let mut h = RoundHistory::new(3);
+        let drop_round = RoundTraffic {
+            contributions: vec![],
+            dropped: vec![1],
+            down_bits: 0,
+        };
+        for _ in 0..4 {
+            h.note_round(&drop_round);
+        }
+        assert_eq!(h.miss_count(1), 4);
+        let ok_round = RoundTraffic {
+            contributions: vec![Contribution {
+                client: 1,
+                loss: 0.0,
+                up_bits: 0,
+                packed_mask: vec![],
+            }],
+            dropped: vec![],
+            down_bits: 0,
+        };
+        h.note_round(&ok_round);
+        assert_eq!(h.miss_count(1), 2, "receipt halves the penalty");
+        h.note_round(&ok_round);
+        h.note_round(&ok_round);
+        assert_eq!(h.miss_count(1), 0);
+        // out-of-range ids are ignored, never panic
+        h.note_round(&RoundTraffic { contributions: vec![], dropped: vec![99], down_bits: 0 });
+    }
+
+    #[test]
+    fn deadline_policy_from_cfg() {
+        let mut cfg = FedConfig::paper(8);
+        let d = DeadlinePolicy::from_cfg(&cfg);
+        assert!(d.timeout.is_none() && d.cap.is_none(), "defaults wait forever");
+        cfg.round_timeout_ms = 100;
+        let d = DeadlinePolicy::from_cfg(&cfg);
+        assert_eq!(d.timeout, Some(Duration::from_millis(100)));
+        assert!(d.cap.is_none());
+        // cap is clamped to at least the base deadline
+        cfg.round_timeout_max_ms = 50;
+        let d = DeadlinePolicy::from_cfg(&cfg);
+        assert_eq!(d.cap, Some(Duration::from_millis(100)));
+        cfg.round_timeout_max_ms = 5_000;
+        let d = DeadlinePolicy::from_cfg(&cfg);
+        assert_eq!(d.cap, Some(Duration::from_millis(5_000)));
+        // a cap without a base deadline is meaningless: stays unbounded
+        cfg.round_timeout_ms = 0;
+        let d = DeadlinePolicy::from_cfg(&cfg);
+        assert!(d.timeout.is_none() && d.cap.is_none());
+    }
+}

@@ -11,17 +11,27 @@
 //! recovers the centralized protocol exactly (same mean over the same
 //! masks); sparser topologies trade convergence speed for per-node
 //! degree-proportional communication.
+//!
+//! Since the `RoundEngine` redesign the round loop lives in
+//! [`engine`](super::engine); this module supplies [`PeerTransport`],
+//! where **each node runs a tiny aggregation engine (a [`Server`]) for
+//! itself and its neighbours**, and overrides the central aggregation
+//! hook to write the consensus (node-average) vector into the engine's
+//! global state — which is exactly what the engine then evaluates.
 
 use std::sync::Arc;
 
-use crate::comm::{CommLedger, RoundCost};
+use crate::comm::CommLedger;
 use crate::config::FedConfig;
 use crate::data::Dataset;
-use crate::metrics::{RoundRecord, RunLog};
-use crate::nn::one_hot_into;
+use crate::metrics::RunLog;
 use crate::rng::SeedTree;
 use crate::sparse::QMatrix;
-use crate::zampling::{evaluate, DenseExecutor, LocalZampling, ProbVector};
+use crate::util::error::Result;
+use crate::zampling::{DenseExecutor, LocalZampling, ProbVector};
+
+use super::engine::{make_policy, Contribution, RoundCtx, RoundEngine, RoundTraffic, Transport};
+use super::{pack_client_mask, Server};
 
 /// Undirected communication graph over `k` nodes (adjacency lists).
 #[derive(Clone, Debug)]
@@ -83,7 +93,141 @@ pub struct GossipOutcome {
     pub node_probs: Vec<Vec<f32>>,
 }
 
-/// Run decentralized Zampling over `topo`.
+/// The peer-to-peer [`Transport`]: no central server — each
+/// participating node trains on its own `p`, gossips its mask to its
+/// participating neighbours (counted as `n` raw bits per directed
+/// edge, no downlink), and aggregates through a **tiny per-node
+/// `Server`** over its own + received masks.  The engine's global state
+/// is overwritten with the consensus (node-average) vector, so the
+/// shared evaluation path reports what the nodes converge towards.
+pub struct PeerTransport<'a> {
+    cfg: &'a FedConfig,
+    topo: &'a Topology,
+    exec: &'a mut dyn DenseExecutor,
+    shards: &'a [Dataset],
+    nodes: Vec<LocalZampling>,
+    seeds: SeedTree,
+    /// This round's packed masks by node id (None for non-participants).
+    round_masks: Vec<Option<Vec<u64>>>,
+}
+
+impl<'a> PeerTransport<'a> {
+    pub fn new(
+        cfg: &'a FedConfig,
+        topo: &'a Topology,
+        exec: &'a mut dyn DenseExecutor,
+        shards: &'a [Dataset],
+        nodes: Vec<LocalZampling>,
+    ) -> Self {
+        assert_eq!(shards.len(), topo.len(), "one shard per node");
+        assert_eq!(nodes.len(), topo.len(), "one state per node");
+        let k = topo.len();
+        Self {
+            cfg,
+            topo,
+            exec,
+            shards,
+            nodes,
+            seeds: SeedTree::new(cfg.train.seed),
+            round_masks: vec![None; k],
+        }
+    }
+
+    /// The per-node probability vectors (after a run: the final state).
+    pub fn node_probs(&self) -> Vec<Vec<f32>> {
+        self.nodes.iter().map(|s| s.pv.probs().to_vec()).collect()
+    }
+}
+
+impl Transport for PeerTransport<'_> {
+    /// Nodes never consume a central broadcast — each trains on its own
+    /// current p — so the engine skips encoding one (downlink is 0).
+    fn wants_broadcast(&self) -> bool {
+        false
+    }
+
+    fn exchange(&mut self, ctx: &RoundCtx<'_>) -> Result<RoundTraffic> {
+        let mask_bits = ctx.n as u64; // per directed edge (raw bit-packed)
+        self.round_masks.iter_mut().for_each(|m| *m = None);
+        let mut contributions = Vec::with_capacity(ctx.participants.len());
+        for &i in ctx.participants {
+            let node = &mut self.nodes[i];
+            node.reset_optimizer(&self.cfg.train);
+            let mut loss = 0.0;
+            for _ in 0..self.cfg.local_epochs {
+                loss = node.run_epoch(&mut *self.exec, &self.shards[i], self.cfg.train.batch);
+            }
+            let mut rng =
+                self.seeds.subtree("client", i as u64).rng("gossip-mask", ctx.round as u64);
+            let mut mask = Vec::new();
+            node.pv.sample_mask(&mut rng, &mut mask);
+            let packed = pack_client_mask(&mask);
+            // One mask per directed edge to a *participating* neighbour
+            // (at full participation: the node's full degree).
+            let degree = self.topo.neighbors[i]
+                .iter()
+                .filter(|&&j| ctx.participants.binary_search(&j).is_ok())
+                .count();
+            // `packed_mask` stays empty: only the engine's default
+            // central aggregation reads it, and this transport overrides
+            // `aggregate` to work from `round_masks` instead.
+            contributions.push(Contribution {
+                client: i,
+                loss,
+                up_bits: mask_bits * degree as u64,
+                packed_mask: Vec::new(),
+            });
+            self.round_masks[i] = Some(packed);
+        }
+        Ok(RoundTraffic { contributions, dropped: Vec::new(), down_bits: 0 })
+    }
+
+    /// Decentralized aggregation: node `i` averages its own mask with
+    /// its participating neighbours' via a tiny per-node [`Server`]
+    /// (`u32` mask sums are exact, so the division is bit-identical to
+    /// an f32 accumulate); the engine's global probs become the
+    /// consensus (node-average) vector.
+    ///
+    /// The consensus is refreshed every round (the legacy loop only
+    /// built it on eval rounds) so the engine's shared eval path stays
+    /// uniform; the O(k·n) average is noise next to the k local
+    /// training epochs that precede it.
+    fn aggregate(&mut self, server: &mut Server, traffic: &RoundTraffic) -> usize {
+        let n = server.n();
+        let k = self.nodes.len();
+        for c in &traffic.contributions {
+            let i = c.client;
+            let mut tiny = Server::new(vec![0.0; n]);
+            tiny.receive_mask(self.round_masks[i].as_ref().expect("own mask present"));
+            for &j in &self.topo.neighbors[i] {
+                if let Some(m) = &self.round_masks[j] {
+                    tiny.receive_mask(m);
+                }
+            }
+            tiny.try_aggregate();
+            self.nodes[i].pv.set_probs(&tiny.probs);
+        }
+        // Consensus over *all* nodes, in node order (fixed f32 order).
+        let mut consensus = vec![0.0f32; n];
+        for node in &self.nodes {
+            for (c, &p) in consensus.iter_mut().zip(node.pv.probs()) {
+                *c += p;
+            }
+        }
+        for c in consensus.iter_mut() {
+            *c /= k as f32;
+        }
+        server.probs = consensus;
+        traffic.contributions.len()
+    }
+
+    fn eval_executor(&mut self) -> &mut dyn DenseExecutor {
+        &mut *self.exec
+    }
+}
+
+/// Run decentralized Zampling over `topo` — a thin constructor over
+/// [`RoundEngine`] + [`PeerTransport`].
 pub fn run_gossip(
     cfg: &FedConfig,
     topo: &Topology,
@@ -103,7 +247,7 @@ pub fn run_gossip(
     // All nodes start from the shared-seed p(0) (same as centralized).
     let mut init_rng = seeds.rng("p-init", 0);
     let p0 = ProbVector::init_uniform(n, &mut init_rng).probs().to_vec();
-    let mut nodes: Vec<LocalZampling> = (0..k)
+    let nodes: Vec<LocalZampling> = (0..k)
         .map(|i| {
             let sub = seeds.subtree("client", i as u64);
             LocalZampling::from_parts(
@@ -116,105 +260,31 @@ pub fn run_gossip(
         })
         .collect();
 
-    let out_dim = exec.arch().output_dim();
-    let mut test_y1h = vec![0.0f32; test.len() * out_dim];
-    one_hot_into(&test.y, out_dim, &mut test_y1h);
-    let mut eval_rng = seeds.rng("eval-sampler", 0);
-
-    let mut log = RunLog::new("gossip");
-    let mut ledger = CommLedger::default();
-    let mask_bits = n as u64; // per message (raw bit-packed)
-
-    for round in 0..cfg.rounds {
-        // 1. Local training + mask sampling at every node.
-        let mut masks: Vec<Vec<bool>> = Vec::with_capacity(k);
-        let mut round_loss = 0.0f64;
-        for (i, node) in nodes.iter_mut().enumerate() {
-            node.reset_optimizer(&cfg.train);
-            let mut loss = 0.0;
-            for _ in 0..cfg.local_epochs {
-                loss = node.run_epoch(exec, &shards[i], cfg.train.batch);
-            }
-            round_loss += loss;
-            let mut rng = seeds.subtree("client", i as u64).rng("gossip-mask", round as u64);
-            let mut mask = Vec::new();
-            node.pv.sample_mask(&mut rng, &mut mask);
-            masks.push(mask);
-        }
-
-        // 2. Gossip: p_i ← mean of own mask and neighbours' masks.
-        let mut new_probs: Vec<Vec<f32>> = Vec::with_capacity(k);
-        for i in 0..k {
-            let mut acc: Vec<f32> = masks[i].iter().map(|&b| b as u8 as f32).collect();
-            for &j in &topo.neighbors[i] {
-                for (a, &b) in acc.iter_mut().zip(&masks[j]) {
-                    *a += b as u8 as f32;
-                }
-            }
-            let denom = (topo.neighbors[i].len() + 1) as f32;
-            for a in acc.iter_mut() {
-                *a /= denom;
-            }
-            new_probs.push(acc);
-        }
-        for (node, p) in nodes.iter_mut().zip(&new_probs) {
-            node.pv.set_probs(p);
-        }
-        // Peer-to-peer traffic: one mask per directed edge; no downlink.
-        ledger.record(RoundCost {
-            uplink_bits: mask_bits * topo.num_messages() as u64,
-            downlink_bits: 0,
-            clients: k as u32,
-            participants: k as u32,
-            dropped: 0,
-        });
-
-        // 3. Evaluate the consensus (node-average) vector.
-        if round % eval_every == 0 || round + 1 == cfg.rounds {
-            let mut consensus = vec![0.0f32; n];
-            for node in &nodes {
-                for (c, &p) in consensus.iter_mut().zip(node.pv.probs()) {
-                    *c += p;
-                }
-            }
-            for c in consensus.iter_mut() {
-                *c /= k as f32;
-            }
-            let pv = ProbVector::from_probs(consensus);
-            let rep = evaluate(
-                exec,
-                &q,
-                &pv,
-                &test.x,
-                &test_y1h,
-                test.len(),
-                eval_samples,
-                &mut eval_rng,
-            );
-            log.push(RoundRecord {
-                round,
-                mean_sampled_acc: rep.mean_sampled_acc,
-                sampled_acc_std: rep.sampled_acc_std,
-                expected_acc: rep.expected_acc,
-                train_loss: round_loss / k as f64,
-                uplink_bits: mask_bits * topo.num_messages() as u64,
-                downlink_bits: 0,
-            });
-        }
-    }
-
-    GossipOutcome {
-        log,
-        ledger,
-        node_probs: nodes.into_iter().map(|s| s.pv.probs().to_vec()).collect(),
-    }
+    let engine = RoundEngine::new(
+        cfg,
+        k,
+        Arc::clone(&q),
+        p0,
+        test,
+        eval_samples,
+        eval_every,
+        "gossip",
+    );
+    let mut transport = PeerTransport::new(cfg, topo, exec, shards, nodes);
+    let mut policy = make_policy(cfg.policy);
+    let out = engine
+        .run(&mut transport, policy.as_mut())
+        .expect("in-process transports are infallible");
+    GossipOutcome { log: out.log, ledger: out.ledger, node_probs: transport.node_probs() }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::RoundCost;
+    use crate::metrics::RoundRecord;
     use crate::nn::ArchSpec;
-    use crate::zampling::NativeExecutor;
+    use crate::zampling::{evaluate, NativeExecutor};
 
     fn ci_setup() -> (FedConfig, Vec<Dataset>, Dataset) {
         let mut cfg = FedConfig::paper(8);
@@ -315,5 +385,159 @@ mod tests {
         let ring =
             run_gossip(&cfg, &Topology::ring(cfg.clients), &mut e2, &shards, &test, 2, 5);
         assert!(spread(&ring.node_probs) > spread(&complete.node_probs));
+    }
+
+    /// Replica of the pre-engine `run_gossip` loop (the seed's gossip
+    /// driver), built from public API pieces.  The engine-based driver
+    /// must reproduce it byte-for-byte: node probs, ledger rows, and
+    /// log records — the gossip leg of the "no behavior change at
+    /// defaults" guarantee.
+    fn legacy_gossip_driver(
+        cfg: &FedConfig,
+        topo: &Topology,
+        exec: &mut dyn DenseExecutor,
+        shards: &[Dataset],
+        test: &Dataset,
+        eval_samples: usize,
+        eval_every: usize,
+    ) -> GossipOutcome {
+        use crate::nn::one_hot_into;
+
+        let k = topo.len();
+        let seeds = SeedTree::new(cfg.train.seed);
+        let q = Arc::new(QMatrix::generate(&cfg.train.arch, cfg.train.n, cfg.train.d, &seeds));
+        let csc = Arc::new(q.to_csc(None));
+        let n = cfg.train.n;
+        let mut init_rng = seeds.rng("p-init", 0);
+        let p0 = ProbVector::init_uniform(n, &mut init_rng).probs().to_vec();
+        let mut nodes: Vec<LocalZampling> = (0..k)
+            .map(|i| {
+                let sub = seeds.subtree("client", i as u64);
+                LocalZampling::from_parts(
+                    &cfg.train,
+                    Arc::clone(&q),
+                    Arc::clone(&csc),
+                    ProbVector::from_probs(p0.clone()),
+                    &sub,
+                )
+            })
+            .collect();
+
+        let out_dim = exec.arch().output_dim();
+        let mut test_y1h = vec![0.0f32; test.len() * out_dim];
+        one_hot_into(&test.y, out_dim, &mut test_y1h);
+        let mut eval_rng = seeds.rng("eval-sampler", 0);
+        let mut log = RunLog::new("gossip");
+        let mut ledger = CommLedger::default();
+        let mask_bits = n as u64;
+
+        for round in 0..cfg.rounds {
+            let mut masks: Vec<Vec<bool>> = Vec::with_capacity(k);
+            let mut round_loss = 0.0f64;
+            for (i, node) in nodes.iter_mut().enumerate() {
+                node.reset_optimizer(&cfg.train);
+                let mut loss = 0.0;
+                for _ in 0..cfg.local_epochs {
+                    loss = node.run_epoch(exec, &shards[i], cfg.train.batch);
+                }
+                round_loss += loss;
+                let mut rng =
+                    seeds.subtree("client", i as u64).rng("gossip-mask", round as u64);
+                let mut mask = Vec::new();
+                node.pv.sample_mask(&mut rng, &mut mask);
+                masks.push(mask);
+            }
+            let mut new_probs: Vec<Vec<f32>> = Vec::with_capacity(k);
+            for i in 0..k {
+                let mut acc: Vec<f32> = masks[i].iter().map(|&b| b as u8 as f32).collect();
+                for &j in &topo.neighbors[i] {
+                    for (a, &b) in acc.iter_mut().zip(&masks[j]) {
+                        *a += b as u8 as f32;
+                    }
+                }
+                let denom = (topo.neighbors[i].len() + 1) as f32;
+                for a in acc.iter_mut() {
+                    *a /= denom;
+                }
+                new_probs.push(acc);
+            }
+            for (node, p) in nodes.iter_mut().zip(&new_probs) {
+                node.pv.set_probs(p);
+            }
+            ledger.record(RoundCost {
+                uplink_bits: mask_bits * topo.num_messages() as u64,
+                downlink_bits: 0,
+                clients: k as u32,
+                participants: k as u32,
+                dropped: 0,
+            });
+            if round % eval_every == 0 || round + 1 == cfg.rounds {
+                let mut consensus = vec![0.0f32; n];
+                for node in &nodes {
+                    for (c, &p) in consensus.iter_mut().zip(node.pv.probs()) {
+                        *c += p;
+                    }
+                }
+                for c in consensus.iter_mut() {
+                    *c /= k as f32;
+                }
+                let pv = ProbVector::from_probs(consensus);
+                let rep = evaluate(
+                    exec,
+                    &q,
+                    &pv,
+                    &test.x,
+                    &test_y1h,
+                    test.len(),
+                    eval_samples,
+                    &mut eval_rng,
+                );
+                log.push(RoundRecord {
+                    round,
+                    mean_sampled_acc: rep.mean_sampled_acc,
+                    sampled_acc_std: rep.sampled_acc_std,
+                    expected_acc: rep.expected_acc,
+                    train_loss: round_loss / k as f64,
+                    uplink_bits: mask_bits * topo.num_messages() as u64,
+                    downlink_bits: 0,
+                });
+            }
+        }
+        GossipOutcome {
+            log,
+            ledger,
+            node_probs: nodes.into_iter().map(|s| s.pv.probs().to_vec()).collect(),
+        }
+    }
+
+    #[test]
+    fn engine_gossip_is_byte_identical_to_the_legacy_driver() {
+        let (cfg, shards, test) = ci_setup();
+        for topo in [Topology::ring(cfg.clients), Topology::star(cfg.clients)] {
+            let mut e1 = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500);
+            let legacy =
+                legacy_gossip_driver(&cfg, &topo, &mut e1, &shards, &test, 3, 2);
+            let mut e2 = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500);
+            let new = run_gossip(&cfg, &topo, &mut e2, &shards, &test, 3, 2);
+            assert_eq!(new.node_probs, legacy.node_probs, "node probs diverged on {topo:?}");
+            assert_eq!(new.ledger.rounds.len(), legacy.ledger.rounds.len());
+            for (a, b) in new.ledger.rounds.iter().zip(&legacy.ledger.rounds) {
+                assert_eq!(a.uplink_bits, b.uplink_bits);
+                assert_eq!(a.downlink_bits, b.downlink_bits);
+                assert_eq!(a.clients, b.clients);
+                assert_eq!(a.participants, b.participants);
+                assert_eq!(a.dropped, b.dropped);
+            }
+            assert_eq!(new.log.rounds.len(), legacy.log.rounds.len());
+            for (a, b) in new.log.rounds.iter().zip(&legacy.log.rounds) {
+                assert_eq!(a.round, b.round);
+                assert_eq!(a.mean_sampled_acc, b.mean_sampled_acc, "round {}", a.round);
+                assert_eq!(a.sampled_acc_std, b.sampled_acc_std, "round {}", a.round);
+                assert_eq!(a.expected_acc, b.expected_acc, "round {}", a.round);
+                assert_eq!(a.train_loss, b.train_loss, "round {}", a.round);
+                assert_eq!(a.uplink_bits, b.uplink_bits);
+                assert_eq!(a.downlink_bits, b.downlink_bits);
+            }
+        }
     }
 }

@@ -19,16 +19,28 @@
 //! leader ([`transport::Leader`]) is fault-tolerant: per-round deadlines,
 //! drop accounting, and reconnect-with-`Hello` (see `transport`'s module
 //! docs for the fault model).
+//!
+//! Since the `RoundEngine` redesign there is exactly **one** round loop
+//! ([`engine::RoundEngine`]), generic over [`engine::Transport`]
+//! (in-process sequential, pool-parallel, TCP leader, gossip peers) and
+//! [`engine::ParticipationPolicy`] (uniform, straggler-aware); the
+//! historical drivers are thin constructors over it.
 
+pub mod engine;
 pub mod gossip;
 pub mod protocol;
 pub mod transport;
 
 mod sim;
 
+pub use engine::{
+    make_policy, Contribution, DeadlinePolicy, FedOutcome, Flaky, ParticipationPolicy, RoundCtx,
+    RoundEngine, RoundHistory, RoundOutcome, RoundPlan, RoundTraffic, StragglerAware, Transport,
+    Uniform,
+};
 pub use sim::{
-    client_round, run_federated, run_federated_parallel, ClientRound, FedOutcome, RoundOutcome,
-    RoundPlan,
+    client_round, run_federated, run_federated_custom, run_federated_parallel, ClientRound,
+    InProcessTransport, PoolTransport,
 };
 
 use crate::comm::{pack_bits, unpack_bits};

@@ -1,116 +1,47 @@
-//! In-process federated simulator — the driver behind §3.2 / Fig. 4 /
-//! Table 1 — and the round-orchestration types shared with the TCP
-//! transport.
+//! In-process federated transports — the drivers behind §3.2 / Fig. 4 /
+//! Table 1 — plus the shared per-client round body.
 //!
-//! Round orchestration is split into plan/outcome so every driver agrees
-//! on the semantics:
+//! Since the `RoundEngine` redesign the round state machine (plan →
+//! broadcast → collect → renormalized aggregate → ledger → eval) lives
+//! once in [`engine`](super::engine); this module only supplies the two
+//! in-process [`Transport`] implementations and the thin constructors
+//! that preserve the historical driver API:
 //!
-//! * [`RoundPlan`] — which clients a round selects.  With
-//!   `cfg.participation < 1.0` a per-round subset is drawn from the
-//!   shared [`SeedTree`] (tag `"round-participants"`), so partial
-//!   participation stays deterministic across runs and transports; at
-//!   `participation = 1.0` no stream is consumed and the plan is every
-//!   client, byte-identical to the pre-participation driver.
-//! * [`RoundOutcome`] — what actually happened: masks received, clients
-//!   dropped, traffic, loss.  The server renormalizes by the *received*
-//!   count ([`Server::try_aggregate`]), so late or dead clients shrink
-//!   the mean instead of corrupting it.
+//! * [`InProcessTransport`] / [`run_federated`] — clients run
+//!   sequentially through one shared executor.  Works with any backend,
+//!   including PJRT executors, whose handles are not `Send`.
+//! * [`PoolTransport`] / [`run_federated_parallel`] — clients shard
+//!   across the process pool (`runtime::pool`), one `Native` executor
+//!   per worker lane.  Per-client seed streams, the k-ordered f64 loss
+//!   reduction, and the k-ordered mask aggregation are all preserved, so
+//!   the result is **byte-identical to the sequential run** (asserted by
+//!   the tests here); only the wall-clock changes.
 //!
-//! Two in-process drivers share one per-client round body
-//! ([`client_round`]), so their numerics are identical by construction:
-//!
-//! * [`run_federated`] — clients run sequentially through one shared
-//!   executor.  Works with any backend, including PJRT executors, whose
-//!   handles are not `Send`.
-//! * [`run_federated_parallel`] — clients shard across the process pool
-//!   (`runtime::pool`), one `Native` executor per worker lane.  Per-client
-//!   seed streams, the k-ordered f64 loss reduction, and the k-ordered
-//!   mask aggregation are all preserved, so the result is **byte-identical
-//!   to the sequential run** (asserted by the tests here); only the
-//!   wall-clock changes.
-//!
-//! The TCP worker (`repro serve-client`) drives the *same*
-//! [`client_round`] body over real sockets, so every transport trains
-//! the same numbers.  Every message still round-trips through the wire
-//! encoder in all drivers, so the ledger's byte counts are the real
-//! protocol costs, bit-for-bit equal to what the TCP transport ships.
+//! Both drive the *same* per-client round body ([`client_round`]) as the
+//! TCP worker (`repro serve-client`), so every transport trains the same
+//! numbers.  Every message round-trips through the wire encoder, so the
+//! ledger's byte counts are the real protocol costs, bit-for-bit equal
+//! to what the TCP transport ships.
 
 use std::sync::{Arc, Mutex};
 
-use crate::comm::{CommLedger, RoundCost};
 use crate::config::FedConfig;
 use crate::data::Dataset;
-use crate::metrics::{RoundRecord, RunLog};
-use crate::nn::one_hot_into;
-use crate::rng::{sample_distinct, SeedTree, Xoshiro256pp};
+use crate::rng::SeedTree;
 use crate::runtime::pool;
-use crate::sparse::{CscView, QMatrix};
+use crate::sparse::QMatrix;
 use crate::util::error::Result;
-use crate::zampling::{evaluate, DenseExecutor, LocalZampling, NativeExecutor, ProbVector};
+use crate::zampling::{DenseExecutor, LocalZampling, NativeExecutor, ProbVector};
 use crate::{bail, ensure};
 
-use super::protocol::{
-    decode_client, decode_server, encode_client, encode_server, ClientMsg, MaskCodec, ServerMsg,
+use super::engine::{
+    make_policy, Contribution, FedOutcome, ParticipationPolicy, RoundCtx, RoundEngine,
+    RoundTraffic, Transport,
 };
-use super::{pack_client_mask, Server};
-
-/// Result of a federated run.
-pub struct FedOutcome {
-    pub log: RunLog,
-    pub ledger: CommLedger,
-    pub final_probs: Vec<f32>,
-}
-
-/// Which clients a round selects (sorted client ids).
-#[derive(Clone, Debug, PartialEq, Eq)]
-pub struct RoundPlan {
-    pub round: usize,
-    pub participants: Vec<usize>,
-}
-
-impl RoundPlan {
-    /// Select the round's participants.  `participation = 1.0` selects
-    /// everyone without touching any rng stream; below that,
-    /// `max(1, round(participation·clients))` distinct clients are drawn
-    /// from the shared seed tree so leader and simulator agree on the
-    /// subset without communicating it.
-    pub fn for_round(
-        clients: usize,
-        participation: f64,
-        seeds: &SeedTree,
-        round: usize,
-    ) -> RoundPlan {
-        assert!(clients > 0, "round plan needs at least one client");
-        assert!(
-            participation > 0.0 && participation <= 1.0,
-            "participation {participation} must be in (0, 1]"
-        );
-        if participation >= 1.0 {
-            return RoundPlan { round, participants: (0..clients).collect() };
-        }
-        let k = ((participation * clients as f64).round() as usize).clamp(1, clients);
-        let mut rng = seeds.rng("round-participants", round as u64);
-        let mut picks: Vec<u32> = Vec::with_capacity(k);
-        sample_distinct(&mut rng, clients, k, &mut picks);
-        let mut participants: Vec<usize> = picks.into_iter().map(|i| i as usize).collect();
-        participants.sort_unstable();
-        RoundPlan { round, participants }
-    }
-}
-
-/// What actually happened in a round, after aggregation.
-#[derive(Clone, Debug)]
-pub struct RoundOutcome {
-    pub plan: RoundPlan,
-    /// Masks folded into the server's mean (the renormalization count).
-    pub received: usize,
-    /// Selected clients whose mask never arrived (always empty for the
-    /// in-process drivers; the TCP leader records real drops).
-    pub dropped: Vec<usize>,
-    pub up_bits: u64,
-    pub down_bits: u64,
-    pub round_loss: f64,
-}
+use super::protocol::{
+    decode_client, decode_server, encode_client, ClientMsg, MaskCodec, ServerMsg,
+};
+use super::pack_client_mask;
 
 /// What one client contributes to a round (reduced in client order by
 /// every driver so f64 summation order never changes).
@@ -128,8 +59,13 @@ pub struct ClientRound {
 
 /// Shared per-client round body: decode the broadcast, local
 /// training-by-sampling, sample and encode the uplink mask.  Driven by
-/// the in-process simulators *and* the TCP worker (`repro serve-client`),
+/// the in-process transports *and* the TCP worker (`repro serve-client`),
 /// which is what keeps all transports numerically identical.
+///
+/// `heartbeat`, when provided, is invoked between local epochs — the TCP
+/// worker uses it to prove liveness during long local training so the
+/// leader can extend the round deadline instead of dropping a slow but
+/// alive client.
 ///
 /// Errors (rather than panicking) on malformed `round_msg` bytes — the
 /// TCP worker feeds it frames straight off the wire.
@@ -143,6 +79,7 @@ pub fn client_round(
     round_msg: &[u8],
     codec: MaskCodec,
     k: usize,
+    mut heartbeat: Option<&mut dyn FnMut()>,
 ) -> Result<ClientRound> {
     // 1. Receive p(t) — every client decodes its own frame copy.
     let ServerMsg::Round { round, probs } = decode_server(round_msg)? else {
@@ -160,8 +97,13 @@ pub fn client_round(
     client.pv.set_probs(&probs);
     client.reset_optimizer(&cfg.train);
     let mut loss = 0.0;
-    for _ in 0..cfg.local_epochs {
+    for epoch in 0..cfg.local_epochs {
         loss = client.run_epoch(exec, shard, cfg.train.batch);
+        if epoch + 1 < cfg.local_epochs {
+            if let Some(beat) = heartbeat.as_mut() {
+                beat();
+            }
+        }
     }
 
     // 3. Sample z_new ~ Bern(f(s)) and uplink the mask.
@@ -180,17 +122,19 @@ pub fn client_round(
 }
 
 /// Shared-seed setup: `Q`, the server's `p(0)`, and the client states.
-fn init_clients(
-    cfg: &FedConfig,
-    seeds: &SeedTree,
-) -> (Arc<QMatrix>, Arc<CscView>, Server, Vec<LocalZampling>) {
+pub(super) struct FedSetup {
+    pub q: Arc<QMatrix>,
+    pub init_probs: Vec<f32>,
+    pub clients: Vec<LocalZampling>,
+}
+
+pub(super) fn init_clients(cfg: &FedConfig, seeds: &SeedTree) -> FedSetup {
     // Shared-seed initialization: every party derives the same Q; the
     // server owns p(0) ~ U(0,1)^n from the shared stream.
     let q = Arc::new(QMatrix::generate(&cfg.train.arch, cfg.train.n, cfg.train.d, seeds));
     let csc = Arc::new(q.to_csc(None));
     let mut init_rng = seeds.rng("p-init", 0);
-    let server =
-        Server::new(ProbVector::init_uniform(cfg.train.n, &mut init_rng).probs().to_vec());
+    let init_probs = ProbVector::init_uniform(cfg.train.n, &mut init_rng).probs().to_vec();
 
     // Client states: local (Q, p) + a per-client seed subtree.
     let clients: Vec<LocalZampling> = (0..cfg.clients)
@@ -200,79 +144,192 @@ fn init_clients(
                 &cfg.train,
                 Arc::clone(&q),
                 Arc::clone(&csc),
-                ProbVector::from_probs(server.probs.clone()),
+                ProbVector::from_probs(init_probs.clone()),
                 &sub,
             )
         })
         .collect();
-    (q, csc, server, clients)
+    FedSetup { q, init_probs, clients }
 }
 
-/// Shared round tail, part 1: fold the per-client results into the
-/// server **in client order** (f64 summation order fixed), close the
-/// aggregation renormalized by the received count, and record the
-/// ledger row.
-fn reduce_round(
-    plan: RoundPlan,
-    outs: Vec<ClientRound>,
-    server: &mut Server,
-    ledger: &mut CommLedger,
-) -> RoundOutcome {
-    let (mut up_bits, mut down_bits, mut round_loss) = (0u64, 0u64, 0.0f64);
-    for out in &outs {
-        down_bits += out.down_bits;
-        up_bits += out.up_bits;
-        round_loss += out.loss;
-        server.receive_mask(&out.packed_mask);
+fn codec_for(cfg: &FedConfig) -> MaskCodec {
+    if cfg.entropy_code_uplink {
+        MaskCodec::Arithmetic
+    } else {
+        MaskCodec::Raw
     }
-    let received = server.try_aggregate();
-    let dropped: Vec<usize> = Vec::new(); // in-process clients never drop
-    ledger.record(RoundCost {
-        uplink_bits: up_bits,
-        downlink_bits: down_bits,
-        clients: received as u32,
-        participants: plan.participants.len() as u32,
-        dropped: dropped.len() as u32,
-    });
-    RoundOutcome { plan, received, dropped, up_bits, down_bits, round_loss }
 }
 
-/// Shared round tail, part 2: evaluate the server's new `p` and push the
-/// round record when the cadence (or the final round) says so.  Keeping
-/// this in one place is what makes the drivers' logs identical by
-/// construction.
-#[allow(clippy::too_many_arguments)]
-fn eval_and_log_round(
-    cfg: &FedConfig,
-    exec: &mut dyn DenseExecutor,
-    q: &QMatrix,
-    server: &Server,
-    test: &Dataset,
-    test_y1h: &[f32],
-    eval_samples: usize,
-    eval_every: usize,
-    eval_rng: &mut Xoshiro256pp,
-    log: &mut RunLog,
-    outcome: &RoundOutcome,
-) {
-    let round = outcome.plan.round;
-    if round % eval_every != 0 && round + 1 != cfg.rounds {
-        return;
+/// Sequential in-process transport: every participant runs
+/// [`client_round`] through one shared executor, in client order.
+pub struct InProcessTransport<'a> {
+    cfg: &'a FedConfig,
+    exec: &'a mut dyn DenseExecutor,
+    shards: &'a [Dataset],
+    clients: Vec<LocalZampling>,
+    seeds: SeedTree,
+    codec: MaskCodec,
+}
+
+impl<'a> InProcessTransport<'a> {
+    pub fn new(
+        cfg: &'a FedConfig,
+        exec: &'a mut dyn DenseExecutor,
+        shards: &'a [Dataset],
+        clients: Vec<LocalZampling>,
+    ) -> Self {
+        assert_eq!(shards.len(), cfg.clients, "need one shard per client");
+        assert_eq!(clients.len(), cfg.clients, "need one state per client");
+        let seeds = SeedTree::new(cfg.train.seed);
+        let codec = codec_for(cfg);
+        Self { cfg, exec, shards, clients, seeds, codec }
     }
-    let pv = ProbVector::from_probs(server.probs.clone());
-    let rep = evaluate(exec, q, &pv, &test.x, test_y1h, test.len(), eval_samples, eval_rng);
-    log.push(RoundRecord {
-        round,
-        mean_sampled_acc: rep.mean_sampled_acc,
-        sampled_acc_std: rep.sampled_acc_std,
-        expected_acc: rep.expected_acc,
-        train_loss: outcome.round_loss / outcome.received.max(1) as f64,
-        uplink_bits: outcome.up_bits,
-        downlink_bits: outcome.down_bits,
-    });
 }
 
-/// Run Federated Zampling per the config (sequential client loop).
+impl Transport for InProcessTransport<'_> {
+    fn exchange(&mut self, ctx: &RoundCtx<'_>) -> Result<RoundTraffic> {
+        let mut contributions = Vec::with_capacity(ctx.participants.len());
+        let mut down_bits = 0u64;
+        for &k in ctx.participants {
+            let out = client_round(
+                self.cfg,
+                &mut self.clients[k],
+                &mut *self.exec,
+                &self.shards[k],
+                &self.seeds,
+                ctx.frame,
+                self.codec,
+                k,
+                None,
+            )?;
+            down_bits += out.down_bits;
+            contributions.push(Contribution {
+                client: k,
+                loss: out.loss,
+                up_bits: out.up_bits,
+                packed_mask: out.packed_mask,
+            });
+        }
+        Ok(RoundTraffic { contributions, dropped: Vec::new(), down_bits })
+    }
+
+    fn eval_executor(&mut self) -> &mut dyn DenseExecutor {
+        &mut *self.exec
+    }
+}
+
+/// Pool-parallel in-process transport: the round's participants shard
+/// across the persistent worker pool, one [`NativeExecutor`] per lane
+/// (built once, reused across rounds); results are collected in
+/// participant order afterwards, so losses, ledgers, and `final_probs`
+/// are byte-identical to [`InProcessTransport`].  PJRT executors are not
+/// `Send` — use the sequential transport for those.
+pub struct PoolTransport<'a> {
+    cfg: &'a FedConfig,
+    shards: &'a [Dataset],
+    clients: Vec<LocalZampling>,
+    seeds: SeedTree,
+    codec: MaskCodec,
+    nt_max: usize,
+    /// One training executor per lane.  The mutexes are uncontended —
+    /// lane `l` only ever touches `lane_execs[l]` (lanes never evaluate,
+    /// so eval scratch is minimal).
+    lane_execs: Vec<Mutex<NativeExecutor>>,
+    /// Dedicated per-round evaluation executor, sized by `eval_batch`.
+    eval_exec: NativeExecutor,
+}
+
+impl<'a> PoolTransport<'a> {
+    pub fn new(
+        cfg: &'a FedConfig,
+        shards: &'a [Dataset],
+        clients: Vec<LocalZampling>,
+        eval_batch: usize,
+    ) -> Self {
+        assert_eq!(shards.len(), cfg.clients, "need one shard per client");
+        assert_eq!(clients.len(), cfg.clients, "need one state per client");
+        let nt_max = pool::global().parallelism().min(cfg.clients).max(1);
+        let lane_execs: Vec<Mutex<NativeExecutor>> = (0..nt_max)
+            .map(|_| Mutex::new(NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 1)))
+            .collect();
+        let eval_exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, eval_batch);
+        Self {
+            cfg,
+            shards,
+            clients,
+            seeds: SeedTree::new(cfg.train.seed),
+            codec: codec_for(cfg),
+            nt_max,
+            lane_execs,
+            eval_exec,
+        }
+    }
+}
+
+impl Transport for PoolTransport<'_> {
+    fn exchange(&mut self, ctx: &RoundCtx<'_>) -> Result<RoundTraffic> {
+        // Shard the round's participants across the pool.  Each client is
+        // visited by exactly one lane, so the per-client mutexes are
+        // uncontended — they only convert `&mut` access into something a
+        // shared `Fn` closure may hold.
+        let parts = ctx.participants;
+        let p_total = parts.len();
+        let nt = self.nt_max.min(p_total).max(1);
+        let cfg = self.cfg;
+        let (seeds, codec, shards) = (&self.seeds, self.codec, self.shards);
+        let cells: Vec<Mutex<&mut LocalZampling>> =
+            self.clients.iter_mut().map(Mutex::new).collect();
+        let results: Vec<Mutex<Option<ClientRound>>> =
+            (0..p_total).map(|_| Mutex::new(None)).collect();
+        let lane_execs = &self.lane_execs;
+        pool::global().run(nt, |lane| {
+            let mut exec = lane_execs[lane].lock().unwrap();
+            let mut i = lane;
+            while i < p_total {
+                let k = parts[i];
+                let mut client = cells[k].lock().unwrap();
+                let out = client_round(
+                    cfg,
+                    &mut client,
+                    &mut *exec,
+                    &shards[k],
+                    seeds,
+                    ctx.frame,
+                    codec,
+                    k,
+                    None,
+                )
+                .expect("simulator frames are well-formed");
+                *results[i].lock().unwrap() = Some(out);
+                i += nt;
+            }
+        });
+
+        // Collect in participant order (bit-identical to the sequential
+        // transport, which visits the sorted participant list).
+        let mut contributions = Vec::with_capacity(p_total);
+        let mut down_bits = 0u64;
+        for (i, cell) in results.iter().enumerate() {
+            let out = cell.lock().unwrap().take().expect("client result missing");
+            down_bits += out.down_bits;
+            contributions.push(Contribution {
+                client: parts[i],
+                loss: out.loss,
+                up_bits: out.up_bits,
+                packed_mask: out.packed_mask,
+            });
+        }
+        Ok(RoundTraffic { contributions, dropped: Vec::new(), down_bits })
+    }
+
+    fn eval_executor(&mut self) -> &mut dyn DenseExecutor {
+        &mut self.eval_exec
+    }
+}
+
+/// Run Federated Zampling per the config (sequential client loop) — a
+/// thin constructor over [`RoundEngine`] + [`InProcessTransport`] with
+/// the config's participation policy.
 ///
 /// * `exec` — the dense executor shared by all (simulated) clients.
 /// * `shards` — per-client training shards (from `Dataset::partition_iid`).
@@ -287,64 +344,56 @@ pub fn run_federated(
     eval_samples: usize,
     eval_every: usize,
 ) -> FedOutcome {
+    let mut policy = make_policy(cfg.policy);
+    run_federated_custom(cfg, exec, shards, test, eval_samples, eval_every, policy.as_mut(), None)
+}
+
+/// [`run_federated`] with an explicit policy and optional chaos drop
+/// rates (per-client deadline-miss probabilities injected by
+/// [`Flaky`](super::engine::Flaky)) — the hook behind the dropout /
+/// straggler experiments and the policy tests.
+#[allow(clippy::too_many_arguments)]
+pub fn run_federated_custom(
+    cfg: &FedConfig,
+    exec: &mut dyn DenseExecutor,
+    shards: &[Dataset],
+    test: &Dataset,
+    eval_samples: usize,
+    eval_every: usize,
+    policy: &mut dyn ParticipationPolicy,
+    drop_rates: Option<&[f64]>,
+) -> FedOutcome {
     assert_eq!(shards.len(), cfg.clients, "need one shard per client");
     let seeds = SeedTree::new(cfg.train.seed);
-    let codec = if cfg.entropy_code_uplink { MaskCodec::Arithmetic } else { MaskCodec::Raw };
-    let (q, _csc, mut server, mut clients) = init_clients(cfg, &seeds);
-
-    // Staged test split for evaluation.
-    let out_dim = cfg.train.arch.output_dim();
-    let mut test_y1h = vec![0.0f32; test.len() * out_dim];
-    one_hot_into(&test.y, out_dim, &mut test_y1h);
-    let mut eval_rng = seeds.rng("eval-sampler", 0);
-
-    let mut log = RunLog::new("federated");
-    let mut ledger = CommLedger::default();
-
-    for round in 0..cfg.rounds {
-        let plan = RoundPlan::for_round(cfg.clients, cfg.participation, &seeds, round);
-        // Broadcast p(t) — one encoded frame per participant.
-        let round_msg =
-            encode_server(&ServerMsg::Round { round: round as u32, probs: server.probs.clone() });
-        let outs: Vec<ClientRound> = plan
-            .participants
-            .iter()
-            .map(|&k| {
-                client_round(cfg, &mut clients[k], exec, &shards[k], &seeds, &round_msg, codec, k)
-                    .expect("simulator frames are well-formed")
-            })
-            .collect();
-
-        let outcome = reduce_round(plan, outs, &mut server, &mut ledger);
-        eval_and_log_round(
-            cfg,
-            exec,
-            &q,
-            &server,
-            test,
-            &test_y1h,
-            eval_samples,
-            eval_every,
-            &mut eval_rng,
-            &mut log,
-            &outcome,
-        );
-    }
-
-    FedOutcome { log, ledger, final_probs: server.probs }
+    let setup = init_clients(cfg, &seeds);
+    let engine = RoundEngine::new(
+        cfg,
+        cfg.clients,
+        Arc::clone(&setup.q),
+        setup.init_probs.clone(),
+        test,
+        eval_samples,
+        eval_every,
+        "federated",
+    );
+    let transport = InProcessTransport::new(cfg, exec, shards, setup.clients);
+    let out = match drop_rates {
+        None => {
+            let mut transport = transport;
+            engine.run(&mut transport, policy)
+        }
+        Some(rates) => {
+            let mut flaky = super::engine::Flaky::new(transport, seeds, rates.to_vec());
+            engine.run(&mut flaky, policy)
+        }
+    };
+    out.expect("in-process transports are infallible")
 }
 
 /// [`run_federated`] with the client loop sharded across the process
 /// pool — the `Native`-backend fast path (PJRT executors are not `Send`;
-/// use the sequential driver for those).
-///
-/// Each pool lane owns a [`NativeExecutor`] (built once, reused across
-/// rounds) and strides the round's participants; the per-round
-/// evaluation runs on a dedicated executor whose eval scratch is sized
-/// by `eval_batch`, matching the executor a sequential caller would
-/// pass.  Per-client results are reduced in participant order
-/// afterwards, so losses, ledgers, and `final_probs` are byte-identical
-/// to the sequential run.
+/// use the sequential driver for those).  Byte-identical to the
+/// sequential run; only the wall-clock changes.
 pub fn run_federated_parallel(
     cfg: &FedConfig,
     shards: &[Dataset],
@@ -355,91 +404,25 @@ pub fn run_federated_parallel(
 ) -> FedOutcome {
     assert_eq!(shards.len(), cfg.clients, "need one shard per client");
     let seeds = SeedTree::new(cfg.train.seed);
-    let codec = if cfg.entropy_code_uplink { MaskCodec::Arithmetic } else { MaskCodec::Raw };
-    let (q, _csc, mut server, mut clients) = init_clients(cfg, &seeds);
-
-    let out_dim = cfg.train.arch.output_dim();
-    let mut test_y1h = vec![0.0f32; test.len() * out_dim];
-    one_hot_into(&test.y, out_dim, &mut test_y1h);
-    let mut eval_rng = seeds.rng("eval-sampler", 0);
-    let mut eval_exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, eval_batch);
-
-    let mut log = RunLog::new("federated");
-    let mut ledger = CommLedger::default();
-    let nt_max = pool::global().parallelism().min(cfg.clients).max(1);
-
-    // One training executor per lane, built once and reused every round
-    // (lanes never evaluate, so eval scratch is minimal).  The mutexes
-    // are uncontended — lane `l` only ever touches `lane_execs[l]`.
-    let lane_execs: Vec<Mutex<NativeExecutor>> = (0..nt_max)
-        .map(|_| Mutex::new(NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 1)))
-        .collect();
-
-    for round in 0..cfg.rounds {
-        let plan = RoundPlan::for_round(cfg.clients, cfg.participation, &seeds, round);
-        let round_msg =
-            encode_server(&ServerMsg::Round { round: round as u32, probs: server.probs.clone() });
-
-        // Shard the round's participants across the pool.  Each client is
-        // visited by exactly one lane, so the per-client mutexes are
-        // uncontended — they only convert `&mut` access into something a
-        // shared `Fn` closure may hold.
-        let parts = &plan.participants;
-        let p_total = parts.len();
-        let nt = nt_max.min(p_total).max(1);
-        let cells: Vec<Mutex<&mut LocalZampling>> = clients.iter_mut().map(Mutex::new).collect();
-        let results: Vec<Mutex<Option<ClientRound>>> =
-            (0..p_total).map(|_| Mutex::new(None)).collect();
-        pool::global().run(nt, |lane| {
-            let mut exec = lane_execs[lane].lock().unwrap();
-            let mut i = lane;
-            while i < p_total {
-                let k = parts[i];
-                let mut client = cells[k].lock().unwrap();
-                let out = client_round(
-                    cfg,
-                    &mut client,
-                    &mut *exec,
-                    &shards[k],
-                    &seeds,
-                    &round_msg,
-                    codec,
-                    k,
-                )
-                .expect("simulator frames are well-formed");
-                *results[i].lock().unwrap() = Some(out);
-                i += nt;
-            }
-        });
-
-        // Collect in participant order (bit-identical to the sequential
-        // loop, which visits the sorted participant list).
-        let outs: Vec<ClientRound> = results
-            .iter()
-            .map(|cell| cell.lock().unwrap().take().expect("client result missing"))
-            .collect();
-
-        let outcome = reduce_round(plan, outs, &mut server, &mut ledger);
-        eval_and_log_round(
-            cfg,
-            &mut eval_exec,
-            &q,
-            &server,
-            test,
-            &test_y1h,
-            eval_samples,
-            eval_every,
-            &mut eval_rng,
-            &mut log,
-            &outcome,
-        );
-    }
-
-    FedOutcome { log, ledger, final_probs: server.probs }
+    let setup = init_clients(cfg, &seeds);
+    let engine = RoundEngine::new(
+        cfg,
+        cfg.clients,
+        Arc::clone(&setup.q),
+        setup.init_probs.clone(),
+        test,
+        eval_samples,
+        eval_every,
+        "federated",
+    );
+    let mut transport = PoolTransport::new(cfg, shards, setup.clients, eval_batch);
+    let mut policy = make_policy(cfg.policy);
+    engine.run(&mut transport, policy.as_mut()).expect("in-process transports are infallible")
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::engine::{StragglerAware, Uniform};
     use super::*;
     use crate::nn::ArchSpec;
     use crate::zampling::NativeExecutor;
@@ -532,27 +515,6 @@ mod tests {
     }
 
     #[test]
-    fn round_plan_is_deterministic_and_sized() {
-        let seeds = SeedTree::new(9);
-        for round in 0..20 {
-            let a = RoundPlan::for_round(10, 0.5, &seeds, round);
-            let b = RoundPlan::for_round(10, 0.5, &seeds, round);
-            assert_eq!(a, b);
-            assert_eq!(a.participants.len(), 5);
-            let mut sorted = a.participants.clone();
-            sorted.dedup();
-            assert_eq!(sorted.len(), 5, "duplicate participant in {a:?}");
-            assert!(a.participants.iter().all(|&k| k < 10));
-        }
-        // subsets vary across rounds
-        let p0 = RoundPlan::for_round(10, 0.5, &seeds, 0);
-        assert!((1..20).any(|r| RoundPlan::for_round(10, 0.5, &seeds, r) != p0));
-        // full participation selects everyone, tiny rates select at least one
-        assert_eq!(RoundPlan::for_round(4, 1.0, &seeds, 3).participants, vec![0, 1, 2, 3]);
-        assert_eq!(RoundPlan::for_round(4, 0.01, &seeds, 3).participants.len(), 1);
-    }
-
-    #[test]
     fn partial_participation_renormalizes_and_stays_deterministic() {
         let (mut cfg, shards, test) = tiny_fed(false);
         cfg.participation = 0.5;
@@ -583,6 +545,57 @@ mod tests {
         let half = run_federated(&cfg, &mut e2, &shards, &test, 2, 3);
         // raw-codec mask frames have fixed size → exactly half the uplink
         assert_eq!(half.ledger.total_uplink_bits() * 2, full.ledger.total_uplink_bits());
+    }
+
+    #[test]
+    fn straggler_policy_is_selectable_via_config() {
+        let (mut cfg, shards, test) = tiny_fed(false);
+        cfg.participation = 0.5;
+        cfg.policy = crate::config::PolicyKind::StragglerAware;
+        let mut e1 = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 256);
+        let mut e2 = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 256);
+        let a = run_federated(&cfg, &mut e1, &shards, &test, 2, 3);
+        let b = run_federated(&cfg, &mut e2, &shards, &test, 2, 3);
+        assert_eq!(a.final_probs, b.final_probs, "straggler policy must be deterministic");
+        // the straggler stream differs from the uniform one
+        cfg.policy = crate::config::PolicyKind::Uniform;
+        let mut e3 = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 256);
+        let uni = run_federated(&cfg, &mut e3, &shards, &test, 2, 3);
+        assert_ne!(a.final_probs, uni.final_probs, "policies drew identical subsets every round");
+    }
+
+    #[test]
+    fn chaos_drops_feed_history_and_straggler_policy_avoids_the_flake() {
+        let (mut cfg, shards, test) = tiny_fed(false);
+        cfg.participation = 0.5;
+        cfg.rounds = 24;
+        // Client 0 always misses the deadline when selected, so total
+        // drops == how many selections each policy wasted on it
+        // (expected ≈ 12 uniform vs ≈ 3 straggler-aware over 24 rounds).
+        let mut rates = vec![0.0; cfg.clients];
+        rates[0] = 1.0;
+        let mut e1 = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 256);
+        let mut uniform = Uniform;
+        let uni = run_federated_custom(
+            &cfg, &mut e1, &shards, &test, 2, 4, &mut uniform, Some(&rates),
+        );
+        let mut e2 = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 256);
+        let mut aware = StragglerAware;
+        let strag = run_federated_custom(
+            &cfg, &mut e2, &shards, &test, 2, 4, &mut aware, Some(&rates),
+        );
+        let uni_drops = uni.ledger.total_dropped();
+        let str_drops = strag.ledger.total_dropped();
+        assert!(uni_drops > 0, "chaos transport never dropped anyone");
+        assert!(
+            str_drops < uni_drops,
+            "straggler-aware should waste fewer rounds: {str_drops} vs {uni_drops}"
+        );
+        // drops renormalize, never corrupt: probabilities stay probabilities
+        assert!(uni.final_probs.iter().all(|&p| (0.0..=1.0).contains(&p)));
+        for r in &uni.ledger.rounds {
+            assert_eq!(r.clients + r.dropped, r.participants, "{r:?}");
+        }
     }
 
     #[test]

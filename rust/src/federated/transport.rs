@@ -32,8 +32,11 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::util::error::{Context, Result};
+use crate::zampling::DenseExecutor;
 use crate::{anyhow, bail, ensure};
 
+use super::engine::{Contribution, DeadlinePolicy, RoundCtx, RoundTraffic, Transport};
+use super::pack_client_mask;
 use super::protocol::{
     decode_client, decode_server, encode_client, encode_server, peek_client_frame,
     ClientFrameKind, ClientMsg, MaskCodec, ServerMsg,
@@ -78,11 +81,15 @@ enum Event {
     /// The worker's connection is dead: EOF, I/O error, a malformed or
     /// foreign-id frame, or an explicit `Abort`.
     Gone { client: u32, conn: u64 },
+    /// A liveness heartbeat: the worker is slow but alive.  During mask
+    /// collection this may extend the round deadline (bounded by the
+    /// [`DeadlinePolicy`] cap); outside collection it is ignored.
+    Beat { client: u32, conn: u64 },
 }
 
 /// Per-connection reader: forwards raw `Mask` frames (header-peeked
-/// only), swallows heartbeats, and reports everything else (including
-/// its own demise) as `Gone`.
+/// only) and heartbeats, and reports everything else (including its own
+/// demise) as `Gone`.
 fn read_loop(mut stream: TcpStream, client: u32, conn: u64, tx: Sender<Event>) {
     loop {
         let Ok(frame) = read_frame(&mut stream) else {
@@ -93,7 +100,11 @@ fn read_loop(mut stream: TcpStream, client: u32, conn: u64, tx: Sender<Event>) {
             return;
         };
         match peek_client_frame(&frame) {
-            Ok((ClientFrameKind::Heartbeat, owner)) if owner == client => continue,
+            Ok((ClientFrameKind::Heartbeat, owner)) if owner == client => {
+                if tx.send(Event::Beat { client, conn }).is_err() {
+                    return; // leader is gone
+                }
+            }
             Ok((ClientFrameKind::Mask, owner)) if owner == client => {
                 if tx.send(Event::Msg { client, conn, frame }).is_err() {
                     return; // leader is gone
@@ -150,6 +161,9 @@ struct Slot {
 pub struct RoundReceipt {
     /// Masks indexed by client id; `None` for non-participants and drops.
     pub masks: Vec<Option<Vec<bool>>>,
+    /// Encoded mask-frame bytes per client id (0 where no mask arrived)
+    /// — the per-client uplink cost the ledger attributes.
+    pub frame_bytes: Vec<u64>,
     /// Participants whose mask arrived, ascending.
     pub received: Vec<usize>,
     /// Participants whose mask did not arrive, ascending.
@@ -221,7 +235,8 @@ impl Leader {
             Event::Gone { client, conn } => {
                 self.clear_if_current(client as usize, conn);
             }
-            Event::Msg { .. } => {} // stale mask between rounds: ignore
+            Event::Msg { .. } => {}  // stale mask between rounds: ignore
+            Event::Beat { .. } => {} // liveness only matters mid-collection
         }
     }
 
@@ -293,6 +308,15 @@ impl Leader {
         msg: &ServerMsg,
         participants: &[usize],
     ) -> Result<(usize, usize)> {
+        let frame = encode_server(msg);
+        let receivers = self.broadcast_frame(&frame, participants)?;
+        Ok((frame.len(), receivers))
+    }
+
+    /// Ship an already-encoded server frame to the given participants
+    /// (skipping disconnected slots); returns the receiver count.  A
+    /// write failure marks the slot dead instead of failing the round.
+    pub fn broadcast_frame(&mut self, frame: &[u8], participants: &[usize]) -> Result<usize> {
         // Fold in queued connection events (reconnects, deaths,
         // straggler frames) so this round starts from the current
         // connection state: anything enqueued before the broadcast is
@@ -303,13 +327,12 @@ impl Leader {
         while let Ok(ev) = self.rx.try_recv() {
             self.apply_control(ev);
         }
-        let frame = encode_server(msg);
         let mut receivers = 0usize;
         for &k in participants {
             ensure!(k < self.expected, "participant id {k} ≥ expected {}", self.expected);
             let mut dead = false;
             if let Some(slot) = self.slots[k].as_mut() {
-                if write_frame(&mut slot.stream, &frame).is_ok() {
+                if write_frame(&mut slot.stream, frame).is_ok() {
                     receivers += 1;
                     self.sent_bytes += frame.len() as u64;
                 } else {
@@ -320,7 +343,7 @@ impl Leader {
                 self.kill(k);
             }
         }
-        Ok((frame.len(), receivers))
+        Ok(receivers)
     }
 
     /// Broadcast a round start to every slot; returns bytes per frame.
@@ -331,26 +354,35 @@ impl Leader {
     }
 
     /// Collect one `Mask` of length `n` from each of `participants` for
-    /// `round`, in arrival order, until all arrive or `timeout` passes
-    /// (`None` = wait as long as at least the event channel lives).
+    /// `round`, in arrival order, until all arrive or the deadline
+    /// passes (`deadline.timeout = None` = wait as long as at least the
+    /// event channel lives).
     ///
     /// Clients that disconnect, violate the protocol, or miss the
     /// deadline are reported in `dropped` — the round completes with
     /// whatever arrived.  Masks for other rounds (stragglers catching
     /// up) are discarded.  Reconnecting workers are registered as they
     /// appear and join from the next round on.
+    ///
+    /// With `deadline.cap` set, a heartbeat from a still-pending
+    /// participant proves "slow but alive" and pushes the deadline out
+    /// to `now + timeout`, never past `start + cap` — so one slow
+    /// worker can buy itself time without letting a dead one stall the
+    /// round forever.
     pub fn collect_masks(
         &mut self,
         round: u32,
         participants: &[usize],
         n: usize,
-        timeout: Option<Duration>,
+        deadline: DeadlinePolicy,
     ) -> Result<RoundReceipt> {
         for &k in participants {
             ensure!(k < self.expected, "participant id {k} ≥ expected {}", self.expected);
         }
-        let deadline = timeout.map(|t| Instant::now() + t);
+        let start = Instant::now();
+        let mut deadline_at = deadline.timeout.map(|t| start + t);
         let mut masks: Vec<Option<Vec<bool>>> = (0..self.expected).map(|_| None).collect();
+        let mut frame_bytes = vec![0u64; self.expected];
         let mut dropped: Vec<usize> =
             participants.iter().copied().filter(|&k| self.slots[k].is_none()).collect();
         let mut pending: Vec<usize> =
@@ -358,7 +390,7 @@ impl Leader {
         let mut bytes = 0u64;
 
         while !pending.is_empty() {
-            let ev = match deadline {
+            let ev = match deadline_at {
                 None => match self.rx.recv() {
                     Ok(ev) => ev,
                     Err(_) => bail!("leader event channel closed"),
@@ -403,6 +435,26 @@ impl Leader {
                         }
                     }
                 }
+                Event::Beat { client, conn } => {
+                    let k = client as usize;
+                    if !self.slots[k].as_ref().is_some_and(|s| s.conn == conn) {
+                        continue; // stale connection's leftovers
+                    }
+                    if !pending.contains(&k) {
+                        continue; // non-participant liveness: ignore
+                    }
+                    // Slow but alive: extend the deadline, bounded by
+                    // the cap (extension is monotone — a late heartbeat
+                    // never *shortens* the current deadline).
+                    if let (Some(t), Some(cap), Some(d)) =
+                        (deadline.timeout, deadline.cap, deadline_at)
+                    {
+                        let extended = (Instant::now() + t).min(start + cap);
+                        if extended > d {
+                            deadline_at = Some(extended);
+                        }
+                    }
+                }
                 Event::Msg { client, conn, frame } => {
                     let k = client as usize;
                     if !self.slots[k].as_ref().is_some_and(|s| s.conn == conn) {
@@ -420,6 +472,7 @@ impl Leader {
                         {
                             pending.remove(i);
                             masks[k] = Some(mask);
+                            frame_bytes[k] = frame_len as u64;
                             bytes += frame_len as u64;
                         }
                         Ok(ClientMsg::Mask { round: r, .. }) if r != round => {
@@ -445,12 +498,61 @@ impl Leader {
         self.recv_bytes += bytes;
         let received: Vec<usize> =
             participants.iter().copied().filter(|&k| masks[k].is_some()).collect();
-        Ok(RoundReceipt { masks, received, dropped, bytes })
+        Ok(RoundReceipt { masks, frame_bytes, received, dropped, bytes })
     }
 
     pub fn shutdown(&mut self) -> Result<()> {
         self.broadcast(&ServerMsg::Shutdown)?;
         Ok(())
+    }
+}
+
+/// The TCP [`Transport`]: the engine's round loop over a fault-tolerant
+/// [`Leader`].  Broadcast ships the engine's encoded round frame to the
+/// participants' live connections; collection honors the engine's
+/// [`DeadlinePolicy`] (including heartbeat extension); disconnects,
+/// deadline misses, and protocol violations surface as `dropped` so the
+/// engine renormalizes instead of crashing.  Worker losses stay local,
+/// so contributions carry `loss = 0.0`.
+pub struct TcpTransport {
+    pub leader: Leader,
+    exec: Box<dyn DenseExecutor>,
+}
+
+impl TcpTransport {
+    pub fn new(leader: Leader, exec: Box<dyn DenseExecutor>) -> Self {
+        Self { leader, exec }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn exchange(&mut self, ctx: &RoundCtx<'_>) -> Result<RoundTraffic> {
+        let receivers = self.leader.broadcast_frame(ctx.frame, ctx.participants)?;
+        let receipt =
+            self.leader.collect_masks(ctx.round, ctx.participants, ctx.n, ctx.deadline)?;
+        let mut contributions = Vec::with_capacity(receipt.received.len());
+        for &k in &receipt.received {
+            let mask = receipt.masks[k].as_ref().expect("received mask present");
+            contributions.push(Contribution {
+                client: k,
+                loss: 0.0,
+                up_bits: receipt.frame_bytes[k] * 8,
+                packed_mask: pack_client_mask(mask),
+            });
+        }
+        Ok(RoundTraffic {
+            contributions,
+            dropped: receipt.dropped,
+            down_bits: (ctx.frame.len() * receivers) as u64 * 8,
+        })
+    }
+
+    fn eval_executor(&mut self) -> &mut dyn DenseExecutor {
+        self.exec.as_mut()
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.leader.shutdown()
     }
 }
 
@@ -531,7 +633,7 @@ mod tests {
         let leader = std::thread::spawn(move || -> Result<RoundReceipt> {
             let mut leader = Leader::from_listener(listener, 2)?;
             leader.broadcast(&ServerMsg::Round { round: 0, probs: vec![0.5, 1.0, 0.0] })?;
-            let receipt = leader.collect_masks(0, &[0, 1], 3, None)?;
+            let receipt = leader.collect_masks(0, &[0, 1], 3, DeadlinePolicy::unbounded())?;
             assert!(receipt.bytes > 0);
             leader.shutdown()?;
             Ok(receipt)
@@ -569,8 +671,92 @@ mod tests {
         }
         assert_eq!(receipt.received, vec![0, 1]);
         assert!(receipt.dropped.is_empty());
+        // per-client byte attribution sums to the round total
+        assert_eq!(receipt.frame_bytes.iter().sum::<u64>(), receipt.bytes);
+        assert!(receipt.frame_bytes[0] > 0 && receipt.frame_bytes[1] > 0);
         let masks: Vec<Vec<bool>> = receipt.masks.into_iter().map(|m| m.unwrap()).collect();
         assert_eq!(masks, vec![vec![true, true, false]; 2]);
+    }
+
+    /// A worker that is slower than the base deadline but heartbeats
+    /// while it works must NOT be dropped when the policy allows
+    /// extension: each beat pushes the deadline out to `now + timeout`,
+    /// bounded by the cap.
+    #[test]
+    fn heartbeats_extend_the_deadline_for_slow_but_alive_workers() {
+        let (listener, addr) = bound_listener();
+
+        let leader = std::thread::spawn(move || -> Result<RoundReceipt> {
+            let mut leader = Leader::from_listener(listener, 1)?;
+            leader.broadcast(&ServerMsg::Round { round: 0, probs: vec![1.0] })?;
+            let policy = DeadlinePolicy {
+                timeout: Some(Duration::from_secs(2)),
+                cap: Some(Duration::from_secs(60)),
+            };
+            let receipt = leader.collect_masks(0, &[0], 1, policy)?;
+            leader.shutdown()?;
+            Ok(receipt)
+        });
+
+        // Takes ~3s (beyond the 2s base deadline) but beats every 500ms.
+        let worker = std::thread::spawn(move || {
+            let mut w = Worker::connect(&addr, 0, MaskCodec::Raw).expect("connect");
+            let _ = w.recv().expect("round");
+            for _ in 0..6 {
+                std::thread::sleep(Duration::from_millis(500));
+                w.send_heartbeat().expect("heartbeat");
+            }
+            w.send_mask(0, vec![true]).expect("mask");
+            let _ = w.recv(); // drain the shutdown
+        });
+
+        let receipt = leader.join().unwrap().expect("leader");
+        worker.join().unwrap();
+        assert_eq!(receipt.received, vec![0], "slow-but-alive worker was dropped");
+        assert!(receipt.dropped.is_empty());
+    }
+
+    /// Heartbeats can only stretch the deadline up to the cap: a worker
+    /// that beats forever without ever delivering its mask is still
+    /// dropped once `start + cap` passes.
+    #[test]
+    fn heartbeats_cannot_extend_past_the_cap() {
+        let (listener, addr) = bound_listener();
+
+        let leader = std::thread::spawn(move || -> Result<(RoundReceipt, Duration)> {
+            let mut leader = Leader::from_listener(listener, 1)?;
+            leader.broadcast(&ServerMsg::Round { round: 0, probs: vec![1.0] })?;
+            let policy = DeadlinePolicy {
+                timeout: Some(Duration::from_millis(400)),
+                cap: Some(Duration::from_millis(1200)),
+            };
+            let start = Instant::now();
+            let receipt = leader.collect_masks(0, &[0], 1, policy)?;
+            let elapsed = start.elapsed();
+            leader.shutdown()?;
+            Ok((receipt, elapsed))
+        });
+
+        // Beats every 100ms for ~3s and never sends a mask.
+        let worker = std::thread::spawn(move || {
+            let mut w = Worker::connect(&addr, 0, MaskCodec::Raw).expect("connect");
+            let _ = w.recv().expect("round");
+            for _ in 0..30 {
+                std::thread::sleep(Duration::from_millis(100));
+                if w.send_heartbeat().is_err() {
+                    break; // leader moved on and dropped us
+                }
+            }
+        });
+
+        let (receipt, elapsed) = leader.join().unwrap().expect("leader");
+        worker.join().unwrap();
+        assert_eq!(receipt.received, Vec::<usize>::new());
+        assert_eq!(receipt.dropped, vec![0], "immortal heartbeater must still be dropped");
+        assert!(
+            elapsed < Duration::from_secs(30),
+            "cap did not bound the collection: {elapsed:?}"
+        );
     }
 
     /// Three workers; one disconnects mid-round without sending its mask.
@@ -583,12 +769,14 @@ mod tests {
         let leader = std::thread::spawn(move || -> Result<(RoundReceipt, RoundReceipt)> {
             let mut leader = Leader::from_listener(listener, 3)?;
             leader.broadcast(&ServerMsg::Round { round: 0, probs: vec![1.0, 0.0] })?;
-            let r0 = leader.collect_masks(0, &[0, 1, 2], 2, Some(Duration::from_secs(20)))?;
+            let r0 = leader
+                .collect_masks(0, &[0, 1, 2], 2, DeadlinePolicy::fixed(Duration::from_secs(20)))?;
             // Round 1 proceeds with the survivors only.
             let survivors: Vec<usize> = r0.received.clone();
             let msg = ServerMsg::Round { round: 1, probs: vec![0.0, 1.0] };
             leader.broadcast_to(&msg, &survivors)?;
-            let r1 = leader.collect_masks(1, &survivors, 2, Some(Duration::from_secs(20)))?;
+            let r1 = leader
+                .collect_masks(1, &survivors, 2, DeadlinePolicy::fixed(Duration::from_secs(20)))?;
             leader.shutdown()?;
             Ok((r0, r1))
         });
@@ -641,7 +829,8 @@ mod tests {
         let leader = std::thread::spawn(move || -> Result<RoundReceipt> {
             let mut leader = Leader::from_listener(listener, 2)?;
             leader.broadcast(&ServerMsg::Round { round: 0, probs: vec![1.0] })?;
-            let receipt = leader.collect_masks(0, &[0, 1], 1, Some(Duration::from_secs(20)))?;
+            let receipt = leader
+                .collect_masks(0, &[0, 1], 1, DeadlinePolicy::fixed(Duration::from_secs(20)))?;
             leader.shutdown()?;
             Ok(receipt)
         });
@@ -689,7 +878,8 @@ mod tests {
         let leader = std::thread::spawn(move || -> Result<RoundReceipt> {
             let mut leader = Leader::from_listener(listener, 1)?;
             leader.broadcast(&ServerMsg::Round { round: 0, probs: vec![1.0, 1.0, 1.0] })?;
-            let receipt = leader.collect_masks(0, &[0], 3, Some(Duration::from_secs(20)))?;
+            let receipt = leader
+                .collect_masks(0, &[0], 3, DeadlinePolicy::fixed(Duration::from_secs(20)))?;
             leader.shutdown()?;
             Ok(receipt)
         });
@@ -736,13 +926,15 @@ mod tests {
         let leader = std::thread::spawn(move || -> Result<(RoundReceipt, RoundReceipt)> {
             let mut leader = Leader::from_listener(listener, 2)?;
             leader.broadcast(&ServerMsg::Round { round: 0, probs: vec![1.0] })?;
-            let r0 = leader.collect_masks(0, &[0, 1], 1, Some(Duration::from_secs(20)))?;
+            let r0 = leader
+                .collect_masks(0, &[0, 1], 1, DeadlinePolicy::fixed(Duration::from_secs(20)))?;
             // Ask the test to spawn the reconnecting worker, then wait
             // for its Hello before round 1.
             notify_tx.send(()).ok();
             assert!(leader.wait_for_client(0, Duration::from_secs(20))?, "no reconnect");
             leader.broadcast(&ServerMsg::Round { round: 1, probs: vec![1.0] })?;
-            let r1 = leader.collect_masks(1, &[0, 1], 1, Some(Duration::from_secs(20)))?;
+            let r1 = leader
+                .collect_masks(1, &[0, 1], 1, DeadlinePolicy::fixed(Duration::from_secs(20)))?;
             leader.shutdown()?;
             Ok((r0, r1))
         });

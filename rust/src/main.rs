@@ -16,13 +16,13 @@
 use std::path::Path;
 use std::process::ExitCode;
 
-use zampling::config::{Backend, FedConfig, TrainConfig};
+use zampling::config::{Backend, FedConfig, PolicyKind, TrainConfig, TransportKind};
 use zampling::data::Dataset;
 use zampling::experiments::{self, Scale};
 use zampling::federated::protocol::MaskCodec;
-use zampling::federated::transport::{Leader, Worker};
+use zampling::federated::transport::{Leader, TcpTransport, Worker};
 use zampling::federated::{
-    client_round, pack_client_mask, run_federated, run_federated_parallel, RoundPlan, Server,
+    client_round, make_policy, run_federated, run_federated_parallel, RoundEngine,
 };
 use zampling::metrics::RunLog;
 use zampling::nn::ArchSpec;
@@ -57,14 +57,25 @@ fn main() -> ExitCode {
 
 const USAGE: &str = "usage: repro <subcommand> [options]
   train-local       --config <toml> [--backend pjrt|native] [--eval-samples N]
-  train-federated   --config <toml> [--backend ...] [--transport local|tcp]
+  train-federated   --config <toml> [--backend ...] [--transport local|pool|tcp]
+                    [--policy uniform|straggler-aware]
                     [--listen host:port] [--eval-every N]
                     [--participation F] [--round-timeout-ms MS]
+                    [--round-timeout-max-ms MS]
   serve-client      --addr host:port --client-id K --config <toml>
   experiment        --id fig3|fig4|table1|table4|fig5|fig6|dropout|theory
                     [--scale ci|paper] [--out results/]
   comm-report       --config <toml>
-  info              [--artifacts artifacts/]";
+  info              [--artifacts artifacts/]
+
+transports (one RoundEngine drives them all; see federated::engine):
+  local  sequential in-process clients (any backend, incl. pjrt)
+  pool   in-process clients sharded across the worker pool, byte-identical
+         to local (the default; degrades to local under --backend pjrt)
+  tcp    this process is the leader; start workers with serve-client
+policies: uniform (paper) | straggler-aware (deprioritize clients that
+  keep missing --round-timeout-ms; heartbeats can extend deadlines up
+  to --round-timeout-max-ms)";
 
 fn load_train_config(args: &Args) -> Result<TrainConfig, String> {
     let path = args.get("config").ok_or("missing --config <toml>")?.to_string();
@@ -92,6 +103,16 @@ fn load_fed_config(args: &Args) -> Result<FedConfig, String> {
     }
     if let Some(t) = args.get("round-timeout-ms") {
         cfg.round_timeout_ms = t.parse().map_err(|_| format!("bad --round-timeout-ms '{t}'"))?;
+    }
+    if let Some(t) = args.get("round-timeout-max-ms") {
+        cfg.round_timeout_max_ms =
+            t.parse().map_err(|_| format!("bad --round-timeout-max-ms '{t}'"))?;
+    }
+    if let Some(t) = args.get("transport") {
+        cfg.transport = TransportKind::parse(t)?;
+    }
+    if let Some(p) = args.get("policy") {
+        cfg.policy = PolicyKind::parse(p)?;
     }
     Ok(cfg)
 }
@@ -184,7 +205,6 @@ fn cmd_train_local(args: &Args) -> Result<(), String> {
 
 fn cmd_train_federated(args: &Args) -> Result<(), String> {
     let cfg = load_fed_config(args)?;
-    let transport = args.str_or("transport", "local");
     let eval_every = args.usize_or("eval-every", 1);
     let eval_samples = args.usize_or("eval-samples", 100);
     let listen = args.str_or("listen", "127.0.0.1:7707");
@@ -195,57 +215,72 @@ fn cmd_train_federated(args: &Args) -> Result<(), String> {
     let (train, test) = load_splits(&cfg.train);
     let shards = train.partition_iid(cfg.clients, &seeds);
     println!(
-        "[repro] federated zampling: {} clients, {} rounds, n={} d={} ({})",
-        cfg.clients, cfg.rounds, cfg.train.n, cfg.train.d, transport
+        "[repro] federated zampling: {} clients, {} rounds, n={} d={} (transport={} policy={})",
+        cfg.clients,
+        cfg.rounds,
+        cfg.train.n,
+        cfg.train.d,
+        cfg.transport.as_str(),
+        cfg.policy.as_str()
     );
 
-    match transport.as_str() {
-        "local" => {
-            // Native backend: shard the client loop across the process
-            // pool (bit-identical to the sequential run).  PJRT handles
-            // are not `Send`, so that backend stays sequential.
-            let out = match cfg.train.backend {
-                Backend::Native => {
-                    println!("[repro] backend: native (parallel client loop)");
-                    run_federated_parallel(&cfg, &shards, &test, eval_samples, eval_every, 500)
-                }
-                Backend::Pjrt => {
-                    let mut exec = make_executor(&cfg.train)?;
-                    run_federated(&cfg, exec.as_mut(), &shards, &test, eval_samples, eval_every)
-                }
-            };
-            for r in &out.log.rounds {
-                println!(
-                    "round {:>3}  sampled {:.4} ± {:.4}  expected {:.4}  up {}b down {}b",
-                    r.round,
-                    r.mean_sampled_acc,
-                    r.sampled_acc_std,
-                    r.expected_acc,
-                    r.uplink_bits,
-                    r.downlink_bits
-                );
-            }
-            let rep = out.ledger.savings(cfg.train.arch.num_params());
-            println!(
-                "savings: client {:.1}x server {:.1}x (naive = 32m = {} bits/round/client)",
-                rep.client_savings, rep.server_savings, rep.naive_bits
-            );
+    // The pool transport shards clients across `Native` executors; PJRT
+    // handles are not `Send`, so that backend degrades to the sequential
+    // in-process transport (the same behavior, minus the parallelism).
+    let mut transport = cfg.transport;
+    if transport == TransportKind::Pool && cfg.train.backend == Backend::Pjrt {
+        println!("[repro] pjrt backend: pool transport degrades to sequential (local)");
+        transport = TransportKind::Local;
+    }
+    match transport {
+        TransportKind::Local => {
+            let mut exec = make_executor(&cfg.train)?;
+            let out = run_federated(&cfg, exec.as_mut(), &shards, &test, eval_samples, eval_every);
+            print_fed_outcome(&cfg, &out);
             out.log.save(Path::new(&out_dir)).map_err(|e| format!("saving: {e}"))?;
         }
-        "tcp" => run_tcp_leader(&cfg, &listen, &test, eval_samples, eval_every, &out_dir)?,
-        other => return Err(format!("unknown transport '{other}' (local|tcp)")),
+        TransportKind::Pool => {
+            println!("[repro] backend: native (parallel client loop)");
+            let out = run_federated_parallel(&cfg, &shards, &test, eval_samples, eval_every, 500);
+            print_fed_outcome(&cfg, &out);
+            out.log.save(Path::new(&out_dir)).map_err(|e| format!("saving: {e}"))?;
+        }
+        TransportKind::Tcp => {
+            run_tcp_leader(&cfg, &listen, &test, eval_samples, eval_every, &out_dir)?
+        }
     }
     Ok(())
 }
 
-/// TCP leader: serve rounds to `serve-client` worker processes.
+fn print_fed_outcome(cfg: &FedConfig, out: &zampling::federated::FedOutcome) {
+    for r in &out.log.rounds {
+        println!(
+            "round {:>3}  sampled {:.4} ± {:.4}  expected {:.4}  up {}b down {}b",
+            r.round,
+            r.mean_sampled_acc,
+            r.sampled_acc_std,
+            r.expected_acc,
+            r.uplink_bits,
+            r.downlink_bits
+        );
+    }
+    let rep = out.ledger.savings(cfg.train.arch.num_params());
+    println!(
+        "savings: client {:.1}x server {:.1}x (naive = 32m = {} bits/round/client)",
+        rep.client_savings, rep.server_savings, rep.naive_bits
+    );
+}
+
+/// TCP leader: serve rounds to `serve-client` worker processes — the
+/// [`RoundEngine`] over a [`TcpTransport`].
 ///
-/// Fault-tolerant orchestration: each round selects a participant subset
-/// per [`RoundPlan`], collects masks in arrival order under the
-/// configured deadline, renormalizes the aggregate by whatever actually
-/// arrived, and records participants/drops in the ledger.  Worker
-/// disconnects (and reconnects with a fresh `Hello`) never abort the
-/// run.
+/// Fault-tolerant orchestration: each round the configured policy
+/// selects a participant subset, masks are collected in arrival order
+/// under the configured deadline (heartbeats from slow-but-alive workers
+/// may extend it up to `round_timeout_max_ms`), the aggregate is
+/// renormalized by whatever actually arrived, and participants/drops go
+/// in the ledger.  Worker disconnects (and reconnects with a fresh
+/// `Hello`) never abort the run.
 fn run_tcp_leader(
     cfg: &FedConfig,
     listen: &str,
@@ -254,106 +289,47 @@ fn run_tcp_leader(
     eval_every: usize,
     out_dir: &str,
 ) -> Result<(), String> {
-    use zampling::comm::{CommLedger, RoundCost};
-    use zampling::federated::protocol::ServerMsg;
-    use zampling::nn::one_hot_into;
+    use std::sync::Arc;
     use zampling::sparse::QMatrix;
-    use zampling::zampling::evaluate;
 
     println!("[repro] leader listening on {listen}, waiting for {} workers", cfg.clients);
-    let mut leader = Leader::accept(listen, cfg.clients).map_err(|e| format!("{e:#}"))?;
+    let leader = Leader::accept(listen, cfg.clients).map_err(|e| format!("{e:#}"))?;
 
     let seeds = SeedTree::new(cfg.train.seed);
-    let q = QMatrix::generate(&cfg.train.arch, cfg.train.n, cfg.train.d, &seeds);
+    let q = Arc::new(QMatrix::generate(&cfg.train.arch, cfg.train.n, cfg.train.d, &seeds));
     let mut init_rng = seeds.rng("p-init", 0);
-    let mut server =
-        Server::new(ProbVector::init_uniform(cfg.train.n, &mut init_rng).probs().to_vec());
+    let p0 = ProbVector::init_uniform(cfg.train.n, &mut init_rng).probs().to_vec();
+    let exec = make_executor(&cfg.train)?;
 
-    let mut exec = make_executor(&cfg.train)?;
-    let out_dim = cfg.train.arch.output_dim();
-    let mut test_y1h = vec![0.0f32; test.len() * out_dim];
-    one_hot_into(&test.y, out_dim, &mut test_y1h);
-    let mut eval_rng = seeds.rng("eval-sampler", 0);
-    let timeout = if cfg.round_timeout_ms > 0 {
-        Some(std::time::Duration::from_millis(cfg.round_timeout_ms))
-    } else {
-        None // 0 = wait forever
-    };
+    let engine = RoundEngine::new(
+        cfg,
+        cfg.clients,
+        Arc::clone(&q),
+        p0,
+        test,
+        eval_samples,
+        eval_every,
+        "federated_tcp",
+    )
+    .verbose(true);
+    let mut transport = TcpTransport::new(leader, exec);
+    let mut policy = make_policy(cfg.policy);
+    let out = engine.run(&mut transport, policy.as_mut()).map_err(|e| format!("{e:#}"))?;
 
-    let mut log = RunLog::new("federated_tcp");
-    let mut ledger = CommLedger::default();
-
-    for round in 0..cfg.rounds {
-        let plan = RoundPlan::for_round(cfg.clients, cfg.participation, &seeds, round);
-        let msg = ServerMsg::Round { round: round as u32, probs: server.probs.clone() };
-        let (frame_len, receivers) = leader
-            .broadcast_to(&msg, &plan.participants)
-            .map_err(|e| format!("broadcast: {e:#}"))?;
-        let receipt = leader
-            .collect_masks(round as u32, &plan.participants, cfg.train.n, timeout)
-            .map_err(|e| format!("{e:#}"))?;
-        for &k in &receipt.received {
-            let mask = receipt.masks[k].as_ref().expect("received mask present");
-            server.receive_mask(&pack_client_mask(mask));
-        }
-        let received = server.try_aggregate();
-        ledger.record(RoundCost {
-            downlink_bits: (frame_len * receivers) as u64 * 8,
-            uplink_bits: receipt.bytes * 8,
-            clients: received as u32,
-            participants: plan.participants.len() as u32,
-            dropped: receipt.dropped.len() as u32,
-        });
-        if !receipt.dropped.is_empty() {
-            println!("round {:>3}  dropped clients {:?}", round, receipt.dropped);
-        }
-        if round % eval_every == 0 || round + 1 == cfg.rounds {
-            let pv = ProbVector::from_probs(server.probs.clone());
-            let rep = evaluate(
-                exec.as_mut(),
-                &q,
-                &pv,
-                &test.x,
-                &test_y1h,
-                test.len(),
-                eval_samples,
-                &mut eval_rng,
-            );
-            println!(
-                "round {:>3}  sampled {:.4} ± {:.4}  expected {:.4}  ({} of {} masks)",
-                round,
-                rep.mean_sampled_acc,
-                rep.sampled_acc_std,
-                rep.expected_acc,
-                received,
-                plan.participants.len()
-            );
-            log.push(zampling::metrics::RoundRecord {
-                round,
-                mean_sampled_acc: rep.mean_sampled_acc,
-                sampled_acc_std: rep.sampled_acc_std,
-                expected_acc: rep.expected_acc,
-                train_loss: 0.0, // workers keep their losses local
-                uplink_bits: receipt.bytes * 8,
-                downlink_bits: (frame_len * receivers) as u64 * 8,
-            });
-        }
-    }
-    leader.shutdown().map_err(|e| format!("{e:#}"))?;
-    let rep = ledger.savings(cfg.train.arch.num_params());
+    let rep = out.ledger.savings(cfg.train.arch.num_params());
     println!(
         "savings: client {:.1}x server {:.1}x; {} client-drops over {} rounds",
         rep.client_savings,
         rep.server_savings,
-        ledger.total_dropped(),
+        out.ledger.total_dropped(),
         cfg.rounds
     );
     println!(
         "leader done: sent {} KiB, received {} KiB",
-        leader.sent_bytes / 1024,
-        leader.recv_bytes / 1024
+        transport.leader.sent_bytes / 1024,
+        transport.leader.recv_bytes / 1024
     );
-    log.save(Path::new(out_dir)).map_err(|e| format!("saving: {e}"))?;
+    out.log.save(Path::new(out_dir)).map_err(|e| format!("saving: {e}"))?;
     Ok(())
 }
 
@@ -403,6 +379,14 @@ fn cmd_serve_client(args: &Args) -> Result<(), String> {
         let frame = worker.recv_raw().map_err(|e| format!("{e:#}"))?;
         match peek_server_frame(&frame).map_err(|e| format!("{e:#}"))? {
             ServerFrameKind::Round => {
+                // Between local epochs the worker heartbeats, so a
+                // leader running with a deadline cap can tell "slow but
+                // alive" from "dead" and extend the round deadline.  A
+                // failed heartbeat is ignored here — the mask send below
+                // will surface the broken connection.
+                let mut beat = || {
+                    let _ = worker.send_heartbeat();
+                };
                 let out = client_round(
                     &cfg,
                     &mut state,
@@ -412,6 +396,7 @@ fn cmd_serve_client(args: &Args) -> Result<(), String> {
                     &frame,
                     codec,
                     client_id,
+                    Some(&mut beat),
                 )
                 .map_err(|e| format!("{e:#}"))?;
                 worker.send_frame(&out.frame).map_err(|e| format!("{e:#}"))?;
@@ -445,6 +430,8 @@ fn cmd_experiment(args: &Args) -> Result<(), String> {
         "dropout" => {
             let points = experiments::federated::run_dropout_sweep(scale, 5);
             experiments::federated::print_dropout_sweep(&points);
+            let policies = experiments::federated::run_policy_comparison(scale, 5);
+            experiments::federated::print_policy_comparison(&policies);
         }
         "table4" => {
             let rows = experiments::sensitivity::run(scale, 0);

@@ -1,26 +1,29 @@
 //! Integration: the full federated protocol over the real TCP transport —
 //! leader thread + worker threads in one process, real sockets, real
 //! frames.  Because the TCP worker drives the *same* `client_round` body
-//! as the in-process simulator and the leader aggregates through the
-//! same `Server`, the transport must agree with the simulator
-//! **byte-for-byte** (final probabilities and ledger bits), under full
-//! and partial participation alike.  A third test pins the refactored
-//! orchestrator against a hand-rolled replica of the seed's sequential
-//! driver: with `participation = 1.0` and no timeout the new code must
-//! be byte-identical to the old behavior.
+//! as the in-process simulator and the leader runs the *same*
+//! `RoundEngine` over a `TcpTransport`, the transport must agree with
+//! the simulator **byte-for-byte** (final probabilities and ledger
+//! bits), under full and partial participation alike.  A further test
+//! pins the engine against a hand-rolled replica of the seed's
+//! sequential driver: with `participation = 1.0` and no timeout the new
+//! code must be byte-identical to the old behavior.
 
 use std::net::TcpListener;
 use std::sync::Arc;
 use std::thread;
 
+use zampling::comm::CommLedger;
 use zampling::config::FedConfig;
 use zampling::data::Dataset;
 use zampling::federated::protocol::{
     decode_client, decode_server, encode_client, encode_server, peek_server_frame, ClientMsg,
     MaskCodec, ServerFrameKind, ServerMsg,
 };
-use zampling::federated::transport::{Leader, Worker};
-use zampling::federated::{client_round, pack_client_mask, run_federated, RoundPlan, Server};
+use zampling::federated::transport::{Leader, TcpTransport, Worker};
+use zampling::federated::{
+    client_round, make_policy, pack_client_mask, run_federated, RoundEngine, Server,
+};
 use zampling::nn::ArchSpec;
 use zampling::rng::SeedTree;
 use zampling::sparse::QMatrix;
@@ -67,9 +70,10 @@ fn spawn_worker(cfg: FedConfig, addr: String, shard: Dataset, k: usize) -> threa
             let frame = w.recv_raw().expect("recv");
             match peek_server_frame(&frame).expect("server frame") {
                 ServerFrameKind::Round => {
-                    let out =
-                        client_round(&cfg, &mut state, &mut exec, &shard, &seeds, &frame, codec, k)
-                            .expect("client round");
+                    let out = client_round(
+                        &cfg, &mut state, &mut exec, &shard, &seeds, &frame, codec, k, None,
+                    )
+                    .expect("client round");
                     w.send_frame(&out.frame).expect("send mask");
                 }
                 ServerFrameKind::Shutdown => return,
@@ -78,53 +82,27 @@ fn spawn_worker(cfg: FedConfig, addr: String, shard: Dataset, k: usize) -> threa
     })
 }
 
-/// Per-round ledger facts the leader observed.
-#[derive(Debug, PartialEq, Eq)]
-struct LeaderRow {
-    up_bits: u64,
-    down_bits: u64,
-    participants: u32,
-    received: u32,
-}
-
-/// The production leader orchestration (RoundPlan → broadcast → deadline
-/// collect → renormalized aggregate), inline so the test can inspect it.
-fn run_leader(listener: TcpListener, cfg: &FedConfig) -> (Vec<f32>, Vec<LeaderRow>, Vec<usize>) {
-    let mut leader = Leader::from_listener(listener, cfg.clients).expect("accept");
+/// The production leader orchestration: the `RoundEngine` over a
+/// `TcpTransport` — the exact code path `repro train-federated
+/// --transport tcp` runs.  Returns the final probs, the engine's
+/// ledger, and the total drop count.
+fn run_leader(
+    listener: TcpListener,
+    cfg: &FedConfig,
+    test: &Dataset,
+) -> (Vec<f32>, CommLedger, u64) {
+    let leader = Leader::from_listener(listener, cfg.clients).expect("accept");
     let seeds = SeedTree::new(cfg.train.seed);
+    let q = Arc::new(QMatrix::generate(&cfg.train.arch, cfg.train.n, cfg.train.d, &seeds));
     let mut init_rng = seeds.rng("p-init", 0);
-    let mut server =
-        Server::new(ProbVector::init_uniform(cfg.train.n, &mut init_rng).probs().to_vec());
-    let mut rows = Vec::new();
-    let mut all_dropped = Vec::new();
-    let timeout = if cfg.round_timeout_ms > 0 {
-        Some(std::time::Duration::from_millis(cfg.round_timeout_ms))
-    } else {
-        None // 0 = wait forever
-    };
-    for round in 0..cfg.rounds {
-        let plan = RoundPlan::for_round(cfg.clients, cfg.participation, &seeds, round);
-        let msg = ServerMsg::Round { round: round as u32, probs: server.probs.clone() };
-        let (frame_len, receivers) =
-            leader.broadcast_to(&msg, &plan.participants).expect("broadcast");
-        let receipt = leader
-            .collect_masks(round as u32, &plan.participants, cfg.train.n, timeout)
-            .expect("collect");
-        for &k in &receipt.received {
-            let mask = receipt.masks[k].as_ref().expect("mask present");
-            server.receive_mask(&pack_client_mask(mask));
-        }
-        let received = server.try_aggregate();
-        rows.push(LeaderRow {
-            up_bits: receipt.bytes * 8,
-            down_bits: (frame_len * receivers) as u64 * 8,
-            participants: plan.participants.len() as u32,
-            received: received as u32,
-        });
-        all_dropped.extend(receipt.dropped);
-    }
-    leader.shutdown().expect("shutdown");
-    (server.probs, rows, all_dropped)
+    let p0 = ProbVector::init_uniform(cfg.train.n, &mut init_rng).probs().to_vec();
+    let exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500);
+    let engine = RoundEngine::new(cfg, cfg.clients, q, p0, test, 2, cfg.rounds, "federated_tcp");
+    let mut transport = TcpTransport::new(leader, Box::new(exec));
+    let mut policy = make_policy(cfg.policy);
+    let out = engine.run(&mut transport, policy.as_mut()).expect("leader engine");
+    let dropped = out.ledger.total_dropped();
+    (out.final_probs, out.ledger, dropped)
 }
 
 #[test]
@@ -144,26 +122,27 @@ fn tcp_transport_matches_simulator_byte_for_byte() {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
     let leader_cfg = cfg.clone();
-    let leader = thread::spawn(move || run_leader(listener, &leader_cfg));
+    let leader_test = test.clone();
+    let leader = thread::spawn(move || run_leader(listener, &leader_cfg, &leader_test));
     let workers: Vec<_> = shards
         .iter()
         .enumerate()
         .map(|(k, shard)| spawn_worker(cfg.clone(), addr.clone(), shard.clone(), k))
         .collect();
-    let (tcp_probs, rows, dropped) = leader.join().unwrap();
+    let (tcp_probs, ledger, dropped) = leader.join().unwrap();
     for w in workers {
         w.join().unwrap();
     }
 
-    // Same seeds, same round bodies, same aggregation: byte-identical.
+    // Same seeds, same round bodies, same engine: byte-identical.
     assert_eq!(tcp_probs, sim.final_probs, "TCP and simulator probabilities diverged");
-    assert!(dropped.is_empty());
-    assert_eq!(rows.len(), sim.ledger.rounds.len());
-    for (r, s) in rows.iter().zip(&sim.ledger.rounds) {
-        assert_eq!(r.up_bits, s.uplink_bits);
-        assert_eq!(r.down_bits, s.downlink_bits);
+    assert_eq!(dropped, 0);
+    assert_eq!(ledger.rounds.len(), sim.ledger.rounds.len());
+    for (r, s) in ledger.rounds.iter().zip(&sim.ledger.rounds) {
+        assert_eq!(r.uplink_bits, s.uplink_bits);
+        assert_eq!(r.downlink_bits, s.downlink_bits);
         assert_eq!(r.participants, s.participants);
-        assert_eq!(r.received, s.clients);
+        assert_eq!(r.clients, s.clients);
     }
 }
 
@@ -179,26 +158,27 @@ fn tcp_partial_participation_matches_simulator() {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
     let leader_cfg = cfg.clone();
-    let leader = thread::spawn(move || run_leader(listener, &leader_cfg));
+    let leader_test = test.clone();
+    let leader = thread::spawn(move || run_leader(listener, &leader_cfg, &leader_test));
     let workers: Vec<_> = shards
         .iter()
         .enumerate()
         .map(|(k, shard)| spawn_worker(cfg.clone(), addr.clone(), shard.clone(), k))
         .collect();
-    let (tcp_probs, rows, dropped) = leader.join().unwrap();
+    let (tcp_probs, ledger, dropped) = leader.join().unwrap();
     for w in workers {
         w.join().unwrap();
     }
 
     assert_eq!(tcp_probs, sim.final_probs, "partial-participation runs diverged");
-    assert!(dropped.is_empty());
-    assert_eq!(rows.len(), sim.ledger.rounds.len());
-    for (r, s) in rows.iter().zip(&sim.ledger.rounds) {
+    assert_eq!(dropped, 0);
+    assert_eq!(ledger.rounds.len(), sim.ledger.rounds.len());
+    for (r, s) in ledger.rounds.iter().zip(&sim.ledger.rounds) {
         assert_eq!(r.participants, 2, "0.5 of 4 clients");
         assert_eq!(r.participants, s.participants);
-        assert_eq!(r.received, s.clients);
-        assert_eq!(r.up_bits, s.uplink_bits);
-        assert_eq!(r.down_bits, s.downlink_bits);
+        assert_eq!(r.clients, s.clients);
+        assert_eq!(r.uplink_bits, s.uplink_bits);
+        assert_eq!(r.downlink_bits, s.downlink_bits);
     }
 }
 

@@ -1,0 +1,134 @@
+//! Property tests for `ParticipationPolicy` implementations: for ANY
+//! (clients, participation, round, history) input, every policy must
+//! return a non-empty, in-bounds, duplicate-free ascending subset of the
+//! expected size, and identical seeds must yield identical subsets.
+//! `proptest` is unavailable offline, so these run over the crate's
+//! deterministic `util::prop::for_all` driver.
+
+use zampling::federated::{ParticipationPolicy, RoundHistory, StragglerAware, Uniform};
+use zampling::rng::SeedTree;
+use zampling::util::prop::for_all;
+
+/// A generated policy-selection input.
+#[derive(Debug)]
+struct Input {
+    seed: u64,
+    clients: usize,
+    participation: f64,
+    round: usize,
+    misses: Vec<u32>,
+}
+
+fn gen_input(g: &mut zampling::util::prop::Gen) -> Input {
+    let clients = g.usize_in(1, 40);
+    Input {
+        seed: g.seed(),
+        clients,
+        // strictly inside (0, 1]; includes the no-rng 1.0 fast path
+        participation: if g.bool_p(0.2) { 1.0 } else { g.f64_in(0.01, 1.0) },
+        round: g.usize_in(0, 500),
+        misses: (0..clients).map(|_| g.usize_in(0, 30) as u32).collect(),
+    }
+}
+
+fn check_plan(
+    policy: &mut dyn ParticipationPolicy,
+    input: &Input,
+) -> Result<Vec<usize>, String> {
+    let seeds = SeedTree::new(input.seed);
+    let history = RoundHistory { misses: input.misses.clone() };
+    let plan =
+        policy.select(input.round, input.clients, input.participation, &seeds, &history);
+    let p = &plan.participants;
+    if p.is_empty() {
+        return Err(format!("{}: empty subset", policy.name()));
+    }
+    if p.iter().any(|&k| k >= input.clients) {
+        return Err(format!("{}: out-of-bounds id in {p:?}", policy.name()));
+    }
+    if p.windows(2).any(|w| w[0] >= w[1]) {
+        return Err(format!("{}: not strictly ascending (dups?): {p:?}", policy.name()));
+    }
+    let want = if input.participation >= 1.0 {
+        input.clients
+    } else {
+        ((input.participation * input.clients as f64).round() as usize).clamp(1, input.clients)
+    };
+    if p.len() != want {
+        return Err(format!("{}: {} selected, want {want}", policy.name(), p.len()));
+    }
+    // identical seeds + identical history → identical subset
+    let again =
+        policy.select(input.round, input.clients, input.participation, &seeds, &history);
+    if again.participants != *p {
+        return Err(format!("{}: not deterministic", policy.name()));
+    }
+    Ok(p.clone())
+}
+
+#[test]
+fn every_policy_returns_valid_deterministic_subsets() {
+    for_all("policy-subset-validity", 300, 0xFED5, gen_input, |input| {
+        check_plan(&mut Uniform, input)?;
+        check_plan(&mut StragglerAware, input)?;
+        Ok(())
+    });
+}
+
+#[test]
+fn full_participation_selects_everyone_for_every_policy() {
+    for_all(
+        "full-participation-is-everyone",
+        100,
+        0xFEED,
+        |g| {
+            let mut i = gen_input(g);
+            i.participation = 1.0;
+            i
+        },
+        |input| {
+            let all: Vec<usize> = (0..input.clients).collect();
+            if check_plan(&mut Uniform, input)? != all {
+                return Err("uniform skipped someone at participation 1.0".into());
+            }
+            if check_plan(&mut StragglerAware, input)? != all {
+                return Err("straggler-aware skipped someone at participation 1.0".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn straggler_history_changes_subsets_but_uniform_ignores_it() {
+    for_all(
+        "history-sensitivity",
+        200,
+        0xCAFE,
+        |g| {
+            let mut i = gen_input(g);
+            // sub-full participation with room to differ
+            i.clients = g.usize_in(4, 40);
+            i.participation = 0.5;
+            i.misses = (0..i.clients).map(|_| g.usize_in(0, 30) as u32).collect();
+            i
+        },
+        |input| {
+            let blank = Input {
+                seed: input.seed,
+                clients: input.clients,
+                participation: input.participation,
+                round: input.round,
+                misses: vec![0; input.clients],
+            };
+            // Uniform is history-blind by construction.
+            if check_plan(&mut Uniform, input)? != check_plan(&mut Uniform, &blank)? {
+                return Err("uniform policy read the history".into());
+            }
+            // StragglerAware stays valid under any history (already via
+            // check_plan); subsets may legitimately differ from blank.
+            check_plan(&mut StragglerAware, input)?;
+            Ok(())
+        },
+    );
+}
