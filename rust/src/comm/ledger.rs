@@ -22,10 +22,40 @@ pub struct RoundCost {
     pub dropped: u32,
 }
 
+/// One shard's slice of a round under a sharded (multi-leader)
+/// transport: what its leader shipped to / collected from its own
+/// workers, plus the cost of the `ShardVotes` merge frame it sent to
+/// the root.  Summing `uplink_bits`/`downlink_bits` across a round's
+/// shards reproduces the round's [`RoundCost`] columns; `merge_bits` is
+/// the extra root-tree traffic the sharded topology pays (~`32n` bits
+/// per shard per round, independent of shard size).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardCost {
+    /// Shard index (0-based, matching `ShardPlan::range`).
+    pub shard: u32,
+    /// Mask-frame bits this shard's leader collected from its workers.
+    pub uplink_bits: u64,
+    /// Broadcast bits this shard's leader delivered to its workers.
+    pub downlink_bits: u64,
+    /// Encoded `ShardVotes` merge-frame bits shipped shard → root
+    /// (0 for a failed shard whose frame never arrived).
+    pub merge_bits: u64,
+    /// Masks this shard contributed to the merge.
+    pub received: u32,
+    /// This shard's participants whose mask never arrived.
+    pub dropped: u32,
+}
+
 /// Accumulated ledger over a training run.
 #[derive(Clone, Debug, Default)]
 pub struct CommLedger {
+    /// One entry per round.
     pub rounds: Vec<RoundCost>,
+    /// Per-round per-shard breakdown, 1:1 with `rounds` when recorded by
+    /// the round engine (inner vectors are empty for single-leader
+    /// transports).  Recorders that bypass the engine (baselines) leave
+    /// the table empty.
+    pub shard_rounds: Vec<Vec<ShardCost>>,
 }
 
 /// The Table 1 row: per-round per-client savings factors vs naive.
@@ -33,7 +63,9 @@ pub struct CommLedger {
 pub struct SavingsReport {
     /// Naive bits per direction per client per round (32·m).
     pub naive_bits: u64,
+    /// Mean measured uplink bits per client per round.
     pub avg_uplink_bits_per_client: f64,
+    /// Mean measured downlink bits per client per round.
     pub avg_downlink_bits_per_client: f64,
     /// `client savings` column: naive / uplink.
     pub client_savings: f64,
@@ -42,8 +74,45 @@ pub struct SavingsReport {
 }
 
 impl CommLedger {
+    /// Append one round's totals.
     pub fn record(&mut self, cost: RoundCost) {
         self.rounds.push(cost);
+    }
+
+    /// Append one round's per-shard breakdown (empty for single-leader
+    /// transports) — the engine calls this right after [`Self::record`]
+    /// so `shard_rounds` stays 1:1 with `rounds`.
+    pub fn record_shard_costs(&mut self, costs: Vec<ShardCost>) {
+        self.shard_rounds.push(costs);
+    }
+
+    /// Total shard→root merge-frame bits over the run (0 unless a
+    /// sharded transport ran).
+    pub fn total_merge_bits(&self) -> u64 {
+        self.shard_rounds.iter().flatten().map(|s| s.merge_bits).sum()
+    }
+
+    /// Per-shard totals over the run: `(uplink, downlink, merge,
+    /// received, dropped)` summed across rounds, indexed by shard id.
+    /// Empty unless a sharded transport ran.
+    pub fn shard_totals(&self) -> Vec<(u64, u64, u64, u64, u64)> {
+        let shards = self
+            .shard_rounds
+            .iter()
+            .flatten()
+            .map(|c| c.shard as usize + 1)
+            .max()
+            .unwrap_or(0);
+        let mut totals = vec![(0u64, 0u64, 0u64, 0u64, 0u64); shards];
+        for c in self.shard_rounds.iter().flatten() {
+            let t = &mut totals[c.shard as usize];
+            t.0 += c.uplink_bits;
+            t.1 += c.downlink_bits;
+            t.2 += c.merge_bits;
+            t.3 += c.received as u64;
+            t.4 += c.dropped as u64;
+        }
+        totals
     }
 
     /// Convenience: record a round where every one of `clients` clients
@@ -63,10 +132,12 @@ impl CommLedger {
         self.rounds.iter().map(|r| r.dropped as u64).sum()
     }
 
+    /// Total clients→server bits over the run.
     pub fn total_uplink_bits(&self) -> u64 {
         self.rounds.iter().map(|r| r.uplink_bits).sum()
     }
 
+    /// Total server→clients bits over the run.
     pub fn total_downlink_bits(&self) -> u64 {
         self.rounds.iter().map(|r| r.downlink_bits).sum()
     }
@@ -168,6 +239,40 @@ mod tests {
         assert_eq!(rep.server_savings, 1.0);
         assert_eq!(rep.avg_uplink_bits_per_client, 0.0);
         assert_eq!(rep.avg_downlink_bits_per_client, 0.0);
+    }
+
+    #[test]
+    fn shard_table_totals_accumulate_per_shard() {
+        let shard0 = ShardCost {
+            shard: 0,
+            uplink_bits: 10,
+            downlink_bits: 20,
+            merge_bits: 5,
+            received: 2,
+            dropped: 0,
+        };
+        let shard1 = ShardCost {
+            shard: 1,
+            uplink_bits: 1,
+            downlink_bits: 2,
+            merge_bits: 5,
+            received: 1,
+            dropped: 1,
+        };
+        let mut ledger = CommLedger::default();
+        ledger.record_shard_costs(vec![shard0, shard1]);
+        ledger.record_shard_costs(vec![
+            shard0,
+            // shard 1 fully failed this round: no merge frame arrived
+            ShardCost { shard: 1, dropped: 2, ..Default::default() },
+        ]);
+        assert_eq!(ledger.total_merge_bits(), 15);
+        let totals = ledger.shard_totals();
+        assert_eq!(totals.len(), 2);
+        assert_eq!(totals[0], (20, 40, 10, 4, 0));
+        assert_eq!(totals[1], (1, 2, 5, 1, 3));
+        // single-leader ledgers report an empty table
+        assert!(CommLedger::default().shard_totals().is_empty());
     }
 
     #[test]

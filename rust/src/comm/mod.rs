@@ -12,14 +12,17 @@
 //!   per mask bit — this is how FedPM's 0.95 bits/param bit-rate (Table 1
 //!   footnote *) is reproduced.
 //! * [`CommLedger`] — per-round uplink/downlink byte accounting and the
-//!   savings-vs-naive factors the paper reports.
+//!   savings-vs-naive factors the paper reports, including the
+//!   per-shard breakdown ([`ShardCost`]) recorded under the sharded
+//!   multi-leader transports.
+#![deny(missing_docs)]
 
 pub mod arith;
 pub mod rle;
 
 mod ledger;
 
-pub use ledger::{CommLedger, RoundCost, SavingsReport};
+pub use ledger::{CommLedger, RoundCost, SavingsReport, ShardCost};
 
 /// Pack a boolean mask into u64 words (LSB-first within each word).
 ///
@@ -62,10 +65,12 @@ impl BitPack {
         n.div_ceil(64) * 8
     }
 
+    /// Pack a mask into its wire bytes (little-endian words).
     pub fn encode(mask: &[bool]) -> Vec<u8> {
         pack_bits(mask).iter().flat_map(|w| w.to_le_bytes()).collect()
     }
 
+    /// Unpack `n` bits from wire bytes.
     pub fn decode(bytes: &[u8], n: usize) -> Vec<bool> {
         let words: Vec<u64> = bytes
             .chunks_exact(8)
@@ -79,14 +84,17 @@ impl BitPack {
 pub struct FloatVec;
 
 impl FloatVec {
+    /// Wire size in bytes for `n` floats.
     pub fn wire_bytes(n: usize) -> usize {
         n * 4
     }
 
+    /// Serialize floats to little-endian wire bytes.
     pub fn encode(v: &[f32]) -> Vec<u8> {
         v.iter().flat_map(|x| x.to_le_bytes()).collect()
     }
 
+    /// Deserialize little-endian wire bytes back to floats.
     pub fn decode(bytes: &[u8]) -> Vec<f32> {
         bytes
             .chunks_exact(4)

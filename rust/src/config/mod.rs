@@ -147,6 +147,11 @@ pub enum TransportKind {
     /// Real sockets: this process is the leader, `repro serve-client`
     /// workers connect.
     Tcp,
+    /// Real sockets, multi-leader: this process is the root, running
+    /// `federated.shards` per-shard leaders (one listener each) whose
+    /// partial vote sums merge before aggregation; workers connect to
+    /// their own shard's address.
+    Sharded,
 }
 
 impl TransportKind {
@@ -155,7 +160,8 @@ impl TransportKind {
             "local" => Ok(TransportKind::Local),
             "pool" => Ok(TransportKind::Pool),
             "tcp" => Ok(TransportKind::Tcp),
-            other => Err(format!("unknown transport '{other}' (local|pool|tcp)")),
+            "sharded" => Ok(TransportKind::Sharded),
+            other => Err(format!("unknown transport '{other}' (local|pool|tcp|sharded)")),
         }
     }
 
@@ -164,8 +170,41 @@ impl TransportKind {
             TransportKind::Local => "local",
             TransportKind::Pool => "pool",
             TransportKind::Tcp => "tcp",
+            TransportKind::Sharded => "sharded",
         }
     }
+}
+
+/// Resolve the per-shard listener addresses for the sharded transport.
+///
+/// An explicit list (`federated.shard-addrs`, comma-separated) wins and
+/// must carry exactly `shards` entries; otherwise shard `s` listens on
+/// `base` (the `--listen` address) with its port incremented by `s`, so
+/// root and workers derive identical addresses from the shared config
+/// without any extra coordination.
+pub fn shard_addresses(
+    base: &str,
+    explicit: &[String],
+    shards: usize,
+) -> Result<Vec<String>, String> {
+    if shards == 0 {
+        return Err("need at least one shard".into());
+    }
+    if !explicit.is_empty() {
+        if explicit.len() != shards {
+            return Err(format!("{} shard addresses for {shards} shards", explicit.len()));
+        }
+        return Ok(explicit.to_vec());
+    }
+    let (host, port) = base
+        .rsplit_once(':')
+        .ok_or_else(|| format!("bad listen address '{base}' (want host:port)"))?;
+    let port: u16 = port.parse().map_err(|_| format!("bad port in '{base}'"))?;
+    // Widen before adding: the derived ports must themselves fit u16.
+    if u32::from(port) + (shards as u32 - 1) > u32::from(u16::MAX) {
+        return Err(format!("shard ports starting at {port} overflow 65535"));
+    }
+    Ok((0..shards).map(|s| format!("{host}:{}", u32::from(port) + s as u32)).collect())
 }
 
 /// Which `ParticipationPolicy` selects each round's clients.
@@ -226,6 +265,15 @@ pub struct FedConfig {
     pub transport: TransportKind,
     /// Which policy selects each round's participants.
     pub policy: PolicyKind,
+    /// Shard-leader count for the sharded transports: the client id
+    /// space is partitioned contiguously across this many leaders
+    /// (`ShardPlan`).  Must lie in `1..=clients`; 1 collapses to the
+    /// single-leader topology.
+    pub shards: usize,
+    /// Explicit per-shard listener addresses (comma-separated in TOML).
+    /// Empty = derive from `--listen` by incrementing the port per
+    /// shard; see [`shard_addresses`].
+    pub shard_addrs: Vec<String>,
 }
 
 impl FedConfig {
@@ -244,12 +292,15 @@ impl FedConfig {
             round_timeout_max_ms: 0,
             transport: TransportKind::Pool,
             policy: PolicyKind::Uniform,
+            shards: 1,
+            shard_addrs: Vec::new(),
         }
     }
 
     pub const KNOWN_KEYS: &'static [&'static str] = &[
         "clients", "rounds", "local-epochs", "entropy-code-uplink", "participation",
-        "round-timeout-ms", "round-timeout-max-ms", "transport", "policy",
+        "round-timeout-ms", "round-timeout-max-ms", "transport", "policy", "shards",
+        "shard-addrs",
     ];
 
     pub fn from_toml(doc: &TomlDoc) -> Result<Self, String> {
@@ -268,17 +319,48 @@ impl FedConfig {
         if !(participation > 0.0 && participation <= 1.0) {
             return Err(format!("federated.participation {participation} must be in (0, 1]"));
         }
+        let clients = fed_doc.usize_or("clients", 10);
+        let transport = TransportKind::parse(&fed_doc.str_or("transport", "pool"))?;
+        let shards = fed_doc.usize_or("shards", 1);
+        if shards == 0 || shards > clients {
+            return Err(format!("federated.shards {shards} must be in 1..={clients}"));
+        }
+        // A multi-shard config only makes sense under the sharded
+        // transport: workers derive per-shard addresses from `shards`
+        // alone, so a single-leader root would silently never see the
+        // workers that dialed the other shards' ports.
+        if shards > 1 && transport != TransportKind::Sharded {
+            return Err(format!(
+                "federated.shards = {shards} requires federated.transport = \"sharded\" \
+                 (got \"{}\")",
+                transport.as_str()
+            ));
+        }
+        let shard_addrs: Vec<String> = fed_doc
+            .str_or("shard-addrs", "")
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        if !shard_addrs.is_empty() && shard_addrs.len() != shards {
+            return Err(format!(
+                "federated.shard-addrs has {} entries for {shards} shards",
+                shard_addrs.len()
+            ));
+        }
         Ok(Self {
             train: TrainConfig::from_toml(&train_doc)?,
-            clients: fed_doc.usize_or("clients", 10),
+            clients,
             rounds: fed_doc.usize_or("rounds", 100),
             local_epochs: fed_doc.usize_or("local-epochs", 1),
             entropy_code_uplink: fed_doc.bool_or("entropy-code-uplink", false),
             participation,
             round_timeout_ms: fed_doc.usize_or("round-timeout-ms", 0) as u64,
             round_timeout_max_ms: fed_doc.usize_or("round-timeout-max-ms", 0) as u64,
-            transport: TransportKind::parse(&fed_doc.str_or("transport", "pool"))?,
+            transport,
             policy: PolicyKind::parse(&fed_doc.str_or("policy", "uniform"))?,
+            shards,
+            shard_addrs,
         })
     }
 }
@@ -310,6 +392,57 @@ mod tests {
         assert_eq!(f.round_timeout_max_ms, 0);
         assert_eq!(f.transport, TransportKind::Pool);
         assert_eq!(f.policy, PolicyKind::Uniform);
+        assert_eq!(f.shards, 1);
+        assert!(f.shard_addrs.is_empty());
+    }
+
+    #[test]
+    fn shards_parse_and_validate() {
+        let doc = TomlDoc::parse(
+            "arch = \"small\"\n[federated]\nclients = 6\ntransport = \"sharded\"\nshards = 3\n\
+             shard-addrs = \"127.0.0.1:7000, 127.0.0.1:7010, 127.0.0.1:7020\"\n",
+        )
+        .unwrap();
+        let f = FedConfig::from_toml(&doc).unwrap();
+        assert_eq!(f.transport, TransportKind::Sharded);
+        assert_eq!(f.shards, 3);
+        assert_eq!(
+            f.shard_addrs,
+            vec!["127.0.0.1:7000", "127.0.0.1:7010", "127.0.0.1:7020"]
+        );
+        assert_eq!(TransportKind::parse("sharded").unwrap().as_str(), "sharded");
+        for bad in [
+            "[federated]\nclients = 4\nshards = 0\n",
+            "[federated]\nclients = 4\nshards = 5\n",
+            // multi-shard without the sharded transport would hang the root
+            "[federated]\nclients = 4\nshards = 2\n",
+            "[federated]\nclients = 4\ntransport = \"tcp\"\nshards = 2\n",
+            "[federated]\nclients = 4\ntransport = \"sharded\"\nshards = 2\n\
+             shard-addrs = \"127.0.0.1:7000\"\n",
+        ] {
+            let doc = TomlDoc::parse(&format!("arch = \"small\"\n{bad}")).unwrap();
+            assert!(FedConfig::from_toml(&doc).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn shard_addresses_derive_or_take_the_explicit_list() {
+        // derived: port increments per shard
+        let got = shard_addresses("127.0.0.1:7707", &[], 3).unwrap();
+        assert_eq!(got, vec!["127.0.0.1:7707", "127.0.0.1:7708", "127.0.0.1:7709"]);
+        // one shard keeps the base address untouched
+        assert_eq!(shard_addresses("10.0.0.1:80", &[], 1).unwrap(), vec!["10.0.0.1:80"]);
+        // explicit list wins and must match the shard count
+        let explicit = vec!["a:1".to_string(), "b:2".to_string()];
+        assert_eq!(shard_addresses("ignored:9", &explicit, 2).unwrap(), explicit);
+        assert!(shard_addresses("ignored:9", &explicit, 3).is_err());
+        // malformed bases error instead of panicking
+        assert!(shard_addresses("no-port", &[], 2).is_err());
+        assert!(shard_addresses("h:notaport", &[], 2).is_err());
+        assert!(shard_addresses("h:65535", &[], 2).is_err());
+        // out-of-range ports are rejected at parse time, never overflow
+        assert!(shard_addresses("h:70000", &[], 1).is_err());
+        assert!(shard_addresses("h:4294967295", &[], 2).is_err());
     }
 
     #[test]

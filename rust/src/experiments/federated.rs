@@ -10,7 +10,7 @@ use crate::baselines::{fedavg, fedpm};
 use crate::comm::SavingsReport;
 use crate::config::{FedConfig, PolicyKind};
 use crate::data::Dataset;
-use crate::federated::{make_policy, run_federated, run_federated_custom};
+use crate::federated::{make_policy, run_federated, run_federated_custom, run_federated_sharded};
 use crate::metrics::RunLog;
 use crate::nn::ArchSpec;
 use crate::rng::SeedTree;
@@ -269,6 +269,83 @@ pub fn print_policy_comparison(points: &[PolicyPoint]) {
     }
 }
 
+/// One row of the whole-shard-failure scenario: the same sharded
+/// deployment (2 shard leaders, full participation) with zero or one
+/// leaders down for the entire run.
+#[derive(Clone, Debug)]
+pub struct ShardFailurePoint {
+    pub label: &'static str,
+    pub shards: usize,
+    pub final_acc: f64,
+    pub best_acc: f64,
+    /// Selected-but-dropped client rounds (a dead shard drops all of
+    /// its clients every round).
+    pub total_dropped: u64,
+    /// Mean masks actually merged per round.
+    pub avg_received: f64,
+    /// Total shard→root merge-frame bits (the tree topology's overhead).
+    pub total_merge_bits: u64,
+}
+
+/// Whole-shard failure under the sharded aggregation tree: run the
+/// 2-shard deployment healthy, then with shard 1's leader down for the
+/// whole run.  Both runs share seeds and data, so the rows differ only
+/// in the missing shard: the root merges the surviving shard's vote
+/// sums and `try_aggregate` renormalizes by what actually arrived —
+/// training degrades to the surviving half instead of crashing.
+pub fn run_shard_failure(scale: Scale, eval_every: usize) -> Vec<ShardFailurePoint> {
+    let cfg = fed_config(8, scale);
+    let (shards_data, test) = load_fed_data(&cfg);
+    let mut points = Vec::new();
+    for (label, failed) in
+        [("2 shards, all up", &[][..]), ("2 shards, shard 1 down", &[1usize][..])]
+    {
+        let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500);
+        let out = run_federated_sharded(
+            &cfg,
+            &mut exec,
+            &shards_data,
+            &test,
+            eval_samples(scale),
+            eval_every,
+            2,
+            failed,
+        );
+        let rounds = out.ledger.rounds.len().max(1) as f64;
+        let avg_received =
+            out.ledger.rounds.iter().map(|r| r.clients as f64).sum::<f64>() / rounds;
+        points.push(ShardFailurePoint {
+            label,
+            shards: 2,
+            final_acc: out.log.last_acc().unwrap_or(0.0),
+            best_acc: out.log.best_acc().unwrap_or(0.0),
+            total_dropped: out.ledger.total_dropped(),
+            avg_received,
+            total_merge_bits: out.ledger.total_merge_bits(),
+        });
+    }
+    points
+}
+
+/// Shard-failure printer.
+pub fn print_shard_failure(points: &[ShardFailurePoint]) {
+    use crate::util::bench::{row, table};
+    table(
+        "Whole-shard failure under sharded aggregation (2 shard leaders)",
+        &["scenario", "avg masks/round", "dropped rounds", "merge Kb", "final acc", "best acc"],
+    );
+    for p in points {
+        row(&[
+            p.label.to_string(),
+            format!("{:.2}", p.avg_received),
+            format!("{}", p.total_dropped),
+            format!("{}", p.total_merge_bits / 1000),
+            format!("{:.4}", p.final_acc),
+            format!("{:.4}", p.best_acc),
+        ]);
+    }
+}
+
 /// Expected savings sanity (closed form): savings ignore framing bytes.
 pub fn ideal_savings(m: usize, n: usize) -> SavingsReport {
     SavingsReport {
@@ -313,6 +390,23 @@ mod tests {
             "straggler-aware wasted as many rounds: {aware:?} vs {uni:?}"
         );
         assert!(aware.avg_received >= uni.avg_received, "{points:?}");
+    }
+
+    #[test]
+    fn shard_failure_scenario_degrades_but_survives() {
+        let points = run_shard_failure(Scale::Ci, 5);
+        assert_eq!(points.len(), 2);
+        let (healthy, failed) = (&points[0], &points[1]);
+        assert_eq!(healthy.total_dropped, 0);
+        assert!(healthy.total_merge_bits > 0, "sharded runs must pay merge traffic");
+        assert!(healthy.final_acc > 0.25, "{healthy:?}");
+        // CI scale: 4 clients, 2 shards → shard 1 = 2 clients, down all
+        // 10 rounds: exactly 20 dropped client-rounds, half the masks.
+        assert_eq!(failed.total_dropped, 20, "{failed:?}");
+        assert_eq!(failed.avg_received, healthy.avg_received / 2.0, "{failed:?}");
+        // the dead shard ships no merge frames: strictly less overhead
+        assert!(failed.total_merge_bits < healthy.total_merge_bits);
+        assert!(failed.total_merge_bits > 0);
     }
 
     #[test]

@@ -8,11 +8,16 @@
 //!
 //! * [`Transport`] — how the round frame reaches the participants and
 //!   how their mask contributions come back.  Implementations:
-//!   [`InProcessTransport`](super::sim::InProcessTransport) (sequential
-//!   clients through one executor), [`PoolTransport`](super::sim::PoolTransport)
+//!   [`InProcessTransport`](super::InProcessTransport) (sequential
+//!   clients through one executor), [`PoolTransport`](super::PoolTransport)
 //!   (clients sharded across `runtime::pool`),
 //!   [`TcpTransport`](super::transport::TcpTransport) (real sockets via
-//!   the fault-tolerant [`Leader`](super::transport::Leader)), and
+//!   the fault-tolerant [`Leader`](super::transport::Leader)),
+//!   [`ShardedTransport`](super::transport::ShardedTransport)
+//!   (multi-leader: the client space partitioned by a [`ShardPlan`]
+//!   across per-shard leaders whose partial vote sums merge at a root,
+//!   with [`ShardedSimTransport`](super::ShardedSimTransport) as its
+//!   in-process twin), and
 //!   [`PeerTransport`](super::gossip::PeerTransport) (decentralized
 //!   gossip — each node runs a tiny aggregation engine for its
 //!   neighbours).
@@ -32,7 +37,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::comm::{CommLedger, RoundCost};
+use crate::comm::{CommLedger, RoundCost, ShardCost};
 use crate::config::{FedConfig, PolicyKind};
 use crate::data::Dataset;
 use crate::metrics::{RoundRecord, RunLog};
@@ -47,16 +52,102 @@ use super::Server;
 
 /// Result of a federated run.
 pub struct FedOutcome {
+    /// Per-round accuracy/loss records (the run's CSV rows).
     pub log: RunLog,
+    /// Per-round communication accounting.
     pub ledger: CommLedger,
+    /// The server's final probability vector `p(T)`.
     pub final_probs: Vec<f32>,
+    /// Final per-client participation history (drop pressure) — the
+    /// sharded leader summarizes it per shard via
+    /// [`RoundHistory::shard_misses`].
+    pub history: RoundHistory,
 }
 
 /// Which clients a round selects (sorted client ids).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct RoundPlan {
+    /// The round index the selection is for.
     pub round: usize,
+    /// Selected client ids, strictly ascending.
     pub participants: Vec<usize>,
+}
+
+/// Contiguous partition of the client id space across `S` shard leaders
+/// — the topology behind the sharded transports
+/// ([`ShardedTransport`](super::transport::ShardedTransport) on real
+/// sockets, [`ShardedSimTransport`](super::ShardedSimTransport)
+/// in-process).  Shard sizes differ by at most one; both root and
+/// workers derive the same partition from `(clients, shards)` alone, so
+/// no shard map ever travels on the wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    clients: usize,
+    shards: usize,
+}
+
+impl ShardPlan {
+    /// Partition `clients` ids across `shards` leaders.  Panics unless
+    /// `1 ≤ shards ≤ clients` (an empty shard would be a leader with
+    /// nothing to lead).
+    pub fn new(clients: usize, shards: usize) -> ShardPlan {
+        assert!(clients > 0, "shard plan needs at least one client");
+        assert!(
+            shards >= 1 && shards <= clients,
+            "shards {shards} must be in 1..={clients}"
+        );
+        ShardPlan { clients, shards }
+    }
+
+    /// Total client population.
+    pub fn clients(&self) -> usize {
+        self.clients
+    }
+
+    /// Number of shard leaders.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// The half-open client id range shard `shard` owns.  The first
+    /// `clients % shards` shards hold one extra client.
+    pub fn range(&self, shard: usize) -> std::ops::Range<usize> {
+        assert!(shard < self.shards, "shard {shard} ≥ {}", self.shards);
+        let base = self.clients / self.shards;
+        let rem = self.clients % self.shards;
+        let lo = shard * base + shard.min(rem);
+        let hi = lo + base + usize::from(shard < rem);
+        lo..hi
+    }
+
+    /// Which shard owns client `client` (inverse of [`Self::range`]).
+    pub fn owner(&self, client: usize) -> usize {
+        assert!(client < self.clients, "client {client} ≥ {}", self.clients);
+        let base = self.clients / self.shards;
+        let rem = self.clients % self.shards;
+        let big = rem * (base + 1);
+        if client < big {
+            client / (base + 1)
+        } else {
+            rem + (client - big) / base
+        }
+    }
+
+    /// Split an ascending participant list into one sub-slice per shard.
+    /// Because shards own contiguous id ranges, each shard's
+    /// participants are a contiguous window of the input — no copying.
+    pub fn split<'a>(&self, participants: &'a [usize]) -> Vec<&'a [usize]> {
+        let mut out = Vec::with_capacity(self.shards);
+        let mut start = 0usize;
+        for s in 0..self.shards {
+            let hi = self.range(s).end;
+            let len = participants[start..].iter().take_while(|&&k| k < hi).count();
+            out.push(&participants[start..start + len]);
+            start += len;
+        }
+        debug_assert_eq!(start, participants.len(), "participant outside every shard");
+        out
+    }
 }
 
 /// Shared subset-sizing rule for every policy: `None` means "everyone,
@@ -102,19 +193,24 @@ impl RoundPlan {
 /// What actually happened in a round, after aggregation.
 #[derive(Clone, Debug)]
 pub struct RoundOutcome {
+    /// The selection the round ran with.
     pub plan: RoundPlan,
     /// Masks folded into the global mean (the renormalization count).
     pub received: usize,
     /// Selected clients whose mask never arrived.
     pub dropped: Vec<usize>,
+    /// Total encoded uplink bits the round cost.
     pub up_bits: u64,
+    /// Total broadcast bits delivered.
     pub down_bits: u64,
+    /// Sum of the received clients' local losses.
     pub round_loss: f64,
 }
 
 /// One client's contribution to a round, as the transport saw it.
 #[derive(Clone, Debug)]
 pub struct Contribution {
+    /// The contributing client's id.
     pub client: usize,
     /// Local training loss (0.0 for remote transports — workers keep
     /// their losses local).
@@ -130,11 +226,16 @@ pub struct Contribution {
 /// order so f64 summation and mask-fold order never change.
 #[derive(Clone, Debug, Default)]
 pub struct RoundTraffic {
+    /// Received contributions, ascending by client id.
     pub contributions: Vec<Contribution>,
     /// Selected clients whose mask did not arrive, ascending.
     pub dropped: Vec<usize>,
     /// Broadcast bits actually delivered this round.
     pub down_bits: u64,
+    /// Per-shard breakdown from sharded (multi-leader) transports —
+    /// empty for single-leader transports.  The engine forwards it to
+    /// the ledger's shard table verbatim.
+    pub shard_costs: Vec<ShardCost>,
 }
 
 /// Mask-collection deadline semantics, owned by the engine and handed to
@@ -175,6 +276,7 @@ impl DeadlinePolicy {
 
 /// Everything a transport needs to run one round's exchange.
 pub struct RoundCtx<'a> {
+    /// The round index.
     pub round: u32,
     /// The encoded `ServerMsg::Round` frame — exactly the bytes a TCP
     /// leader ships; in-process transports feed it to `client_round` so
@@ -184,6 +286,7 @@ pub struct RoundCtx<'a> {
     pub participants: &'a [usize],
     /// Model size (mask length) — remote transports validate against it.
     pub n: usize,
+    /// Mask-collection deadline semantics for this round.
     pub deadline: DeadlinePolicy,
 }
 
@@ -238,10 +341,12 @@ pub struct RoundHistory {
 }
 
 impl RoundHistory {
+    /// Fresh history: nobody has missed anything yet.
     pub fn new(clients: usize) -> Self {
         Self { misses: vec![0; clients] }
     }
 
+    /// Current miss pressure for `client` (0 for out-of-range ids).
     pub fn miss_count(&self, client: usize) -> u32 {
         self.misses.get(client).copied().unwrap_or(0)
     }
@@ -259,6 +364,19 @@ impl RoundHistory {
             }
         }
     }
+
+    /// The per-shard view of the same history: total miss pressure per
+    /// shard of `plan`.  Because a whole-shard outage drops every client
+    /// the shard owns, its misses accumulate together — the sharded
+    /// leader prints this in its end-of-run summary; per-client
+    /// policies like [`StragglerAware`] keep consuming
+    /// [`Self::miss_count`] directly, which already deprioritizes every
+    /// member of a dead shard.
+    pub fn shard_misses(&self, plan: &ShardPlan) -> Vec<u32> {
+        (0..plan.shards())
+            .map(|s| plan.range(s).map(|k| self.miss_count(k)).sum())
+            .collect()
+    }
 }
 
 /// Who participates each round.  Implementations must be deterministic
@@ -266,8 +384,10 @@ impl RoundHistory {
 /// in-bounds, duplicate-free ascending subset (property-tested in
 /// `tests/policy_properties.rs`).
 pub trait ParticipationPolicy {
+    /// Stable policy name (config values, logs, test failure messages).
     fn name(&self) -> &'static str;
 
+    /// Select `round`'s participants from the population.
     fn select(
         &mut self,
         round: usize,
@@ -358,13 +478,23 @@ pub fn make_policy(kind: PolicyKind) -> Box<dyn ParticipationPolicy> {
 /// missed the collection deadline.  Downlink bits are unaffected (the
 /// broadcast was delivered); the dropped mask's uplink bits never hit
 /// the ledger — exactly the TCP leader's deadline semantics.
+///
+/// Wrap **single-leader** transports only: sharded transports fold their
+/// vote sums at collection time, ahead of this decorator's filter, so
+/// chaos injected here would desynchronize the merge frames from the
+/// surviving contributions.  The sharded simulator has its own
+/// whole-shard failure knob instead
+/// ([`ShardedSimTransport::with_failed_shards`](super::ShardedSimTransport::with_failed_shards)).
 pub struct Flaky<T: Transport> {
+    /// The transport whose exchanges get chaos-filtered.
     pub inner: T,
     seeds: SeedTree,
     rates: Vec<f64>,
 }
 
 impl<T: Transport> Flaky<T> {
+    /// Wrap `inner`, dropping client `k`'s contribution with
+    /// probability `rates[k]` each round (seeded by `seeds`).
     pub fn new(inner: T, seeds: SeedTree, rates: Vec<f64>) -> Self {
         Self { inner, seeds, rates }
     }
@@ -410,6 +540,59 @@ impl<T: Transport> Transport for Flaky<T> {
 /// The one round loop.  Owns the global server state, the savings
 /// ledger, the run log, the eval machinery, and the participation
 /// history; everything transport-specific lives behind the traits.
+///
+/// # Quick start
+///
+/// Drive a tiny federated run through the engine with the sequential
+/// in-process transport — `run_federated` is exactly this, packaged:
+///
+/// ```
+/// use std::sync::Arc;
+/// use zampling::config::FedConfig;
+/// use zampling::data::Dataset;
+/// use zampling::federated::{make_policy, InProcessTransport, RoundEngine};
+/// use zampling::nn::ArchSpec;
+/// use zampling::rng::SeedTree;
+/// use zampling::sparse::QMatrix;
+/// use zampling::zampling::{LocalZampling, NativeExecutor, ProbVector};
+///
+/// let mut cfg = FedConfig::paper(8);
+/// cfg.train.arch = ArchSpec::small();
+/// cfg.train.n = ArchSpec::small().num_params() / 8;
+/// cfg.train.d = 5;
+/// cfg.clients = 2;
+/// cfg.rounds = 1;
+///
+/// // Shared-seed setup: data shards, Q, p(0), per-client states.
+/// let seeds = SeedTree::new(cfg.train.seed);
+/// let (train, test) = Dataset::synthetic_pair(256, 64, &seeds);
+/// let shards = train.partition_iid(cfg.clients, &seeds);
+/// let q = Arc::new(QMatrix::generate(&cfg.train.arch, cfg.train.n, cfg.train.d, &seeds));
+/// let csc = Arc::new(q.to_csc(None));
+/// let mut init_rng = seeds.rng("p-init", 0);
+/// let p0 = ProbVector::init_uniform(cfg.train.n, &mut init_rng).probs().to_vec();
+/// let clients: Vec<LocalZampling> = (0..cfg.clients)
+///     .map(|k| {
+///         let sub = seeds.subtree("client", k as u64);
+///         LocalZampling::from_parts(
+///             &cfg.train,
+///             Arc::clone(&q),
+///             Arc::clone(&csc),
+///             ProbVector::from_probs(p0.clone()),
+///             &sub,
+///         )
+///     })
+///     .collect();
+///
+/// // One engine, one transport, one policy: run the rounds.
+/// let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 64);
+/// let engine = RoundEngine::new(&cfg, cfg.clients, Arc::clone(&q), p0, &test, 2, 1, "doc");
+/// let mut transport = InProcessTransport::new(&cfg, &mut exec, &shards, clients);
+/// let mut policy = make_policy(cfg.policy);
+/// let out = engine.run(&mut transport, policy.as_mut()).unwrap();
+/// assert_eq!(out.final_probs.len(), cfg.train.n);
+/// assert_eq!(out.ledger.rounds.len(), cfg.rounds);
+/// ```
 pub struct RoundEngine<'a> {
     cfg: &'a FedConfig,
     /// Client population (usually `cfg.clients`; the gossip transport
@@ -430,6 +613,9 @@ pub struct RoundEngine<'a> {
 }
 
 impl<'a> RoundEngine<'a> {
+    /// Build an engine over `population` clients starting from
+    /// `init_probs`, evaluating `eval_samples` sampled networks on
+    /// `test` every `eval_every` rounds into a log named `log_name`.
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         cfg: &'a FedConfig,
@@ -504,11 +690,12 @@ impl<'a> RoundEngine<'a> {
                 n: self.cfg.train.n,
                 deadline,
             };
-            let traffic = transport.exchange(&ctx)?;
+            let mut traffic = transport.exchange(&ctx)?;
 
             // Reduce in client order (f64 summation order fixed), close
             // the aggregation renormalized by the received count, and
-            // record the ledger row.
+            // record the ledger row (plus the per-shard breakdown when a
+            // sharded transport supplied one).
             let (mut up_bits, mut round_loss) = (0u64, 0.0f64);
             for c in &traffic.contributions {
                 up_bits += c.up_bits;
@@ -523,6 +710,7 @@ impl<'a> RoundEngine<'a> {
                 participants: plan.participants.len() as u32,
                 dropped: traffic.dropped.len() as u32,
             });
+            self.ledger.record_shard_costs(std::mem::take(&mut traffic.shard_costs));
             if self.verbose && !traffic.dropped.is_empty() {
                 println!("round {round:>3}  dropped clients {:?}", traffic.dropped);
             }
@@ -537,7 +725,12 @@ impl<'a> RoundEngine<'a> {
             self.eval_and_log(transport, &outcome);
         }
         transport.finish()?;
-        Ok(FedOutcome { log: self.log, ledger: self.ledger, final_probs: self.server.probs })
+        Ok(FedOutcome {
+            log: self.log,
+            ledger: self.ledger,
+            final_probs: self.server.probs,
+            history: self.history,
+        })
     }
 
     /// Evaluate the global `p` and push the round record when the
@@ -609,6 +802,59 @@ mod tests {
     }
 
     #[test]
+    fn shard_plan_partitions_exactly() {
+        for clients in 1..=17usize {
+            for shards in 1..=clients {
+                let plan = ShardPlan::new(clients, shards);
+                // ranges tile the id space and sizes differ by ≤ 1
+                let mut seen = 0usize;
+                let (mut lo_sz, mut hi_sz) = (usize::MAX, 0usize);
+                for s in 0..shards {
+                    let r = plan.range(s);
+                    assert_eq!(r.start, seen, "gap before shard {s}");
+                    lo_sz = lo_sz.min(r.len());
+                    hi_sz = hi_sz.max(r.len());
+                    for k in r.clone() {
+                        assert_eq!(plan.owner(k), s, "owner({k}) for {clients}/{shards}");
+                    }
+                    seen = r.end;
+                }
+                assert_eq!(seen, clients);
+                assert!(hi_sz - lo_sz <= 1, "unbalanced: {lo_sz}..{hi_sz}");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_plan_split_covers_every_participant() {
+        let plan = ShardPlan::new(10, 3); // ranges 0..4, 4..7, 7..10
+        let parts = [0usize, 2, 3, 5, 6, 7, 9];
+        let groups = plan.split(&parts);
+        assert_eq!(groups.len(), 3);
+        assert_eq!(groups[0], &[0, 2, 3]);
+        assert_eq!(groups[1], &[5, 6]);
+        assert_eq!(groups[2], &[7, 9]);
+        // a shard with no selected clients yields an empty slice
+        let groups = plan.split(&[0, 1, 8]);
+        assert_eq!(groups[1], &[] as &[usize]);
+        // full participation splits into the exact ranges
+        let all: Vec<usize> = (0..10).collect();
+        let groups = plan.split(&all);
+        for s in 0..3 {
+            let want: Vec<usize> = plan.range(s).collect();
+            assert_eq!(groups[s], &want[..]);
+        }
+    }
+
+    #[test]
+    fn shard_misses_aggregate_per_shard() {
+        let plan = ShardPlan::new(6, 2); // 0..3, 3..6
+        let mut h = RoundHistory::new(6);
+        h.misses = vec![1, 0, 2, 0, 5, 1];
+        assert_eq!(h.shard_misses(&plan), vec![3, 6]);
+    }
+
+    #[test]
     fn straggler_aware_deprioritizes_repeat_missers() {
         let seeds = SeedTree::new(3);
         let clean = RoundHistory::new(8);
@@ -640,6 +886,7 @@ mod tests {
             contributions: vec![],
             dropped: vec![1],
             down_bits: 0,
+            shard_costs: Vec::new(),
         };
         for _ in 0..4 {
             h.note_round(&drop_round);
@@ -654,6 +901,7 @@ mod tests {
             }],
             dropped: vec![],
             down_bits: 0,
+            shard_costs: Vec::new(),
         };
         h.note_round(&ok_round);
         assert_eq!(h.miss_count(1), 2, "receipt halves the penalty");
@@ -661,7 +909,12 @@ mod tests {
         h.note_round(&ok_round);
         assert_eq!(h.miss_count(1), 0);
         // out-of-range ids are ignored, never panic
-        h.note_round(&RoundTraffic { contributions: vec![], dropped: vec![99], down_bits: 0 });
+        h.note_round(&RoundTraffic {
+            contributions: vec![],
+            dropped: vec![99],
+            down_bits: 0,
+            shard_costs: Vec::new(),
+        });
     }
 
     #[test]

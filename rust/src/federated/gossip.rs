@@ -36,16 +36,19 @@ use super::{pack_client_mask, Server};
 /// Undirected communication graph over `k` nodes (adjacency lists).
 #[derive(Clone, Debug)]
 pub struct Topology {
+    /// `neighbors[i]` lists node `i`'s graph neighbours.
     pub neighbors: Vec<Vec<usize>>,
 }
 
 impl Topology {
+    /// Every node talks to every other node (recovers centralized).
     pub fn complete(k: usize) -> Self {
         Self {
             neighbors: (0..k).map(|i| (0..k).filter(|&j| j != i).collect()).collect(),
         }
     }
 
+    /// Each node talks to its two ring neighbours.
     pub fn ring(k: usize) -> Self {
         assert!(k >= 2);
         Self {
@@ -71,10 +74,12 @@ impl Topology {
         Self { neighbors }
     }
 
+    /// Number of nodes in the graph.
     pub fn len(&self) -> usize {
         self.neighbors.len()
     }
 
+    /// Whether the graph has no nodes.
     pub fn is_empty(&self) -> bool {
         self.neighbors.is_empty()
     }
@@ -88,8 +93,11 @@ impl Topology {
 /// Outcome of a decentralized run; accuracy is evaluated on the
 /// node-averaged consensus vector (what the nodes converge towards).
 pub struct GossipOutcome {
+    /// Per-round consensus accuracy/loss records.
     pub log: RunLog,
+    /// Per-round communication accounting (edge messages, no downlink).
     pub ledger: CommLedger,
+    /// Every node's final probability vector.
     pub node_probs: Vec<Vec<f32>>,
 }
 
@@ -112,6 +120,7 @@ pub struct PeerTransport<'a> {
 }
 
 impl<'a> PeerTransport<'a> {
+    /// Build over a topology, per-node data shards, and per-node states.
     pub fn new(
         cfg: &'a FedConfig,
         topo: &'a Topology,
@@ -179,7 +188,12 @@ impl Transport for PeerTransport<'_> {
             });
             self.round_masks[i] = Some(packed);
         }
-        Ok(RoundTraffic { contributions, dropped: Vec::new(), down_bits: 0 })
+        Ok(RoundTraffic {
+            contributions,
+            dropped: Vec::new(),
+            down_bits: 0,
+            shard_costs: Vec::new(),
+        })
     }
 
     /// Decentralized aggregation: node `i` averages its own mask with

@@ -22,9 +22,12 @@
 //!
 //! Since the `RoundEngine` redesign there is exactly **one** round loop
 //! ([`engine::RoundEngine`]), generic over [`engine::Transport`]
-//! (in-process sequential, pool-parallel, TCP leader, gossip peers) and
-//! [`engine::ParticipationPolicy`] (uniform, straggler-aware); the
-//! historical drivers are thin constructors over it.
+//! (in-process sequential, pool-parallel, TCP leader, sharded
+//! multi-leader, gossip peers) and [`engine::ParticipationPolicy`]
+//! (uniform, straggler-aware); the historical drivers are thin
+//! constructors over it.  See the repo-root `ARCHITECTURE.md` for the
+//! full module map and `docs/PROTOCOL.md` for the wire format.
+#![deny(missing_docs)]
 
 pub mod engine;
 pub mod gossip;
@@ -35,12 +38,12 @@ mod sim;
 
 pub use engine::{
     make_policy, Contribution, DeadlinePolicy, FedOutcome, Flaky, ParticipationPolicy, RoundCtx,
-    RoundEngine, RoundHistory, RoundOutcome, RoundPlan, RoundTraffic, StragglerAware, Transport,
-    Uniform,
+    RoundEngine, RoundHistory, RoundOutcome, RoundPlan, RoundTraffic, ShardPlan, StragglerAware,
+    Transport, Uniform,
 };
 pub use sim::{
-    client_round, run_federated, run_federated_custom, run_federated_parallel, ClientRound,
-    InProcessTransport, PoolTransport,
+    client_round, run_federated, run_federated_custom, run_federated_parallel,
+    run_federated_sharded, ClientRound, InProcessTransport, PoolTransport, ShardedSimTransport,
 };
 
 use crate::comm::{pack_bits, unpack_bits};
@@ -48,6 +51,7 @@ use crate::comm::{pack_bits, unpack_bits};
 /// Server state: the global probability vector.
 #[derive(Clone, Debug)]
 pub struct Server {
+    /// The global probability vector `p` the clients train against.
     pub probs: Vec<f32>,
     /// Accumulator for the current round's mask sum.
     acc: Vec<u32>,
@@ -55,11 +59,13 @@ pub struct Server {
 }
 
 impl Server {
+    /// Start from the shared-seed `p(0)`.
     pub fn new(init_probs: Vec<f32>) -> Self {
         let n = init_probs.len();
         Self { probs: init_probs, acc: vec![0; n], received: 0 }
     }
 
+    /// Model size `n` (mask length).
     pub fn n(&self) -> usize {
         self.probs.len()
     }
@@ -71,6 +77,22 @@ impl Server {
             *a += *b as u32;
         }
         self.received += 1;
+    }
+
+    /// Fold in one shard's partial vote sums — `received` masks already
+    /// summed per entry by a shard leader (the `ShardVotes` merge frame).
+    ///
+    /// `u32` additions are exact, so merging S partial sums and then
+    /// aggregating is **bit-identical** to receiving every underlying
+    /// mask at one leader (property-tested in
+    /// `tests/shard_merge_properties.rs`).  A shard that lost all its
+    /// clients contributes `(zeros, 0)` and leaves the state untouched.
+    pub fn merge_votes(&mut self, votes: &[u32], received: usize) {
+        assert_eq!(votes.len(), self.n(), "vote sum length != model size");
+        for (a, v) in self.acc.iter_mut().zip(votes) {
+            *a += *v;
+        }
+        self.received += received;
     }
 
     /// How many masks arrived since the last aggregation.
@@ -109,6 +131,52 @@ impl Server {
 /// Re-export for client mask packing (used by sim and the TCP worker).
 pub fn pack_client_mask(mask: &[bool]) -> Vec<u64> {
     pack_bits(mask)
+}
+
+/// Fold one mask into a shard's per-entry vote sums (the shard-leader
+/// side of the sharded merge; one definition so the TCP and sim shard
+/// collectors can never disagree).
+pub(crate) fn fold_mask_votes(votes: &mut [u32], mask: &[bool]) {
+    for (v, &b) in votes.iter_mut().zip(mask) {
+        *v += b as u32;
+    }
+}
+
+/// Root-side merge shared by [`transport::ShardedTransport`] and
+/// [`ShardedSimTransport`]: decode each pending `ShardVotes` frame (an
+/// empty slot means that shard failed and no frame ever arrived), fold
+/// the partial sums into `server`, and close the round renormalized by
+/// the total received count.  One body, so the real-socket and
+/// simulator merge paths cannot silently diverge.
+///
+/// Beyond the wire-level checks in `protocol::decode_shard`, the root
+/// enforces what only it can know from `plan`: the claimed shard id
+/// must exist and the claimed `received` count cannot exceed the
+/// number of clients that shard owns — otherwise a forged count would
+/// inflate the renormalization divisor and collapse `p` toward zero
+/// while passing every per-frame check.
+pub(crate) fn merge_vote_frames(
+    server: &mut Server,
+    plan: &engine::ShardPlan,
+    frames: &mut Vec<Vec<u8>>,
+) -> usize {
+    for frame in frames.drain(..) {
+        if frame.is_empty() {
+            continue; // failed shard: no merge frame arrived
+        }
+        let protocol::ShardMsg::ShardVotes { shard, received, n, votes, .. } =
+            protocol::decode_shard(&frame).expect("root-encoded merge frame is valid");
+        assert_eq!(n, server.n(), "shard votes length != model size");
+        let shard = shard as usize;
+        assert!(shard < plan.shards(), "shard id {shard} ≥ {}", plan.shards());
+        assert!(
+            received as usize <= plan.range(shard).len(),
+            "shard {shard} claims {received} received masks but owns only {} clients",
+            plan.range(shard).len()
+        );
+        server.merge_votes(&votes, received as usize);
+    }
+    server.try_aggregate()
 }
 
 #[cfg(test)]
@@ -156,6 +224,48 @@ mod tests {
         assert_eq!(s.try_aggregate(), 3);
         assert_eq!(s.probs[0], 1.0);
         assert!((s.probs[1] - 1.0 / 3.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn merged_vote_sums_equal_per_mask_receipt() {
+        let masks = [
+            [true, false, true, false],
+            [true, true, false, false],
+            [false, true, true, true],
+        ];
+        // Reference: one server receives every mask.
+        let mut single = Server::new(vec![0.5; 4]);
+        for m in &masks {
+            single.receive_mask(&pack_bits(m));
+        }
+        assert_eq!(single.try_aggregate(), 3);
+        // Sharded: shard A sums masks 0-1, shard B sums mask 2, shard C
+        // is empty; the root merges the partial sums.
+        let mut root = Server::new(vec![0.5; 4]);
+        root.merge_votes(&[2, 1, 1, 0], 2);
+        root.merge_votes(&[0, 1, 1, 1], 1);
+        root.merge_votes(&[0, 0, 0, 0], 0);
+        assert_eq!(root.received(), 3);
+        assert_eq!(root.try_aggregate(), 3);
+        assert_eq!(root.probs, single.probs);
+    }
+
+    #[test]
+    #[should_panic(expected = "claims 3 received masks")]
+    fn merge_rejects_received_counts_beyond_the_shard_population() {
+        // A forged `received` with all-zero votes passes every per-frame
+        // decoder check but would inflate the renormalization divisor;
+        // the root knows the shard plan and must refuse it.
+        let plan = ShardPlan::new(4, 2); // each shard owns 2 clients
+        let frame = protocol::encode_shard(&protocol::ShardMsg::ShardVotes {
+            shard: 0,
+            round: 0,
+            received: 3, // > the 2 clients shard 0 owns
+            n: 2,
+            votes: vec![1, 0],
+        });
+        let mut server = Server::new(vec![0.5; 2]);
+        merge_vote_frames(&mut server, &plan, &mut vec![frame]);
     }
 
     #[test]

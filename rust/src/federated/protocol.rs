@@ -21,7 +21,12 @@ pub enum MaskCodec {
 #[derive(Clone, Debug, PartialEq)]
 pub enum ServerMsg {
     /// Start round `round` with the current global probabilities.
-    Round { round: u32, probs: Vec<f32> },
+    Round {
+        /// The round index.
+        round: u32,
+        /// The global probability vector `p(t)`.
+        probs: Vec<f32>,
+    },
     /// Training is over; workers exit.
     Shutdown,
 }
@@ -30,16 +35,64 @@ pub enum ServerMsg {
 #[derive(Clone, Debug, PartialEq)]
 pub enum ClientMsg {
     /// The sampled mask for `round` (encoded per `codec`).
-    Mask { round: u32, client: u32, n: usize, mask: Vec<bool> },
+    Mask {
+        /// The round the mask belongs to.
+        round: u32,
+        /// The sender's client id (must match its `Hello`).
+        client: u32,
+        /// Mask length — must equal the model's `n`.
+        n: usize,
+        /// The sampled Bernoulli mask.
+        mask: Vec<bool>,
+    },
     /// Worker greets with its client id (TCP handshake; also the
     /// reconnect path after a dropped connection).
-    Hello { client: u32 },
+    Hello {
+        /// The registering client id.
+        client: u32,
+    },
     /// Worker is leaving for good — the leader marks it dropped
     /// immediately instead of waiting for a read error or deadline.
-    Abort { client: u32 },
+    Abort {
+        /// The departing client id.
+        client: u32,
+    },
     /// Liveness ping: proves the connection is up without contributing
     /// to any round.  The leader consumes and ignores it.
-    Heartbeat { client: u32 },
+    Heartbeat {
+        /// The pinging client id.
+        client: u32,
+    },
+}
+
+/// Shard leader → root: the merge frames of the sharded aggregation
+/// topology (`federated::transport::ShardedTransport`).
+///
+/// A shard leader never forwards its workers' masks upward — it folds
+/// them into a per-entry **vote sum** and ships that one frame, so the
+/// root's merge traffic is `~32n` bits per shard per round regardless of
+/// how many clients the shard serves.  Vote sums merge additively
+/// (`u32` adds are exact), which is what keeps sharded aggregation
+/// byte-identical to a single leader after `Server::try_aggregate`
+/// renormalizes.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ShardMsg {
+    /// Shard `shard`'s partial aggregation state for `round`: per-entry
+    /// vote sums over the `received` masks its leader collected.
+    ShardVotes {
+        /// Shard index (0-based, matching `ShardPlan::range`).
+        shard: u32,
+        /// Round the votes belong to.
+        round: u32,
+        /// How many masks the sums fold in (the renormalization weight
+        /// this shard contributes; 0 for a fully-dropped shard).
+        received: u32,
+        /// Mask length — must equal the model's `n`.
+        n: usize,
+        /// Per-entry counts of 1-bits across the shard's received masks;
+        /// each entry is ≤ `received` by construction.
+        votes: Vec<u32>,
+    },
 }
 
 /// Upper bound on a wire-supplied mask length.  The decoder allocates
@@ -56,6 +109,7 @@ const TAG_MASK_ARITH: u8 = 4;
 const TAG_HELLO: u8 = 5;
 const TAG_ABORT: u8 = 6;
 const TAG_HEARTBEAT: u8 = 7;
+const TAG_SHARD_VOTES: u8 = 8;
 
 fn frame(tag: u8, payload: &[u8]) -> Vec<u8> {
     let mut out = Vec::with_capacity(5 + payload.len());
@@ -100,6 +154,60 @@ pub fn encode_client(msg: &ClientMsg, codec: MaskCodec) -> Vec<u8> {
     }
 }
 
+/// Encode a shard-merge message (fixed layout: `round`, `shard`,
+/// `received`, `n`, then `n` little-endian `u32` vote sums).
+pub fn encode_shard(msg: &ShardMsg) -> Vec<u8> {
+    match msg {
+        ShardMsg::ShardVotes { shard, round, received, n, votes } => {
+            debug_assert_eq!(votes.len(), *n);
+            let mut payload = Vec::with_capacity(16 + votes.len() * 4);
+            payload.extend_from_slice(&round.to_le_bytes());
+            payload.extend_from_slice(&shard.to_le_bytes());
+            payload.extend_from_slice(&received.to_le_bytes());
+            payload.extend_from_slice(&(*n as u32).to_le_bytes());
+            for v in votes {
+                payload.extend_from_slice(&v.to_le_bytes());
+            }
+            frame(TAG_SHARD_VOTES, &payload)
+        }
+    }
+}
+
+/// Decode a shard-merge frame, with the same hardening as the client
+/// decoders: the wire-supplied `n` is capped (`MAX_MASK_LEN`) before the
+/// vote vector is allocated, the body length must match `n` exactly, and
+/// every vote sum must be ≤ `received` — a sum larger than the mask
+/// count it claims to fold is arithmetically impossible and would skew
+/// the renormalized mean, so it is rejected, never merged.
+pub fn decode_shard(buf: &[u8]) -> Result<ShardMsg> {
+    let (tag, p) = split_frame(buf)?;
+    if tag != TAG_SHARD_VOTES {
+        bail!("unexpected shard tag {tag}");
+    }
+    if p.len() < 16 {
+        bail!("bad ShardVotes payload length {}", p.len());
+    }
+    let round = u32::from_le_bytes(p[0..4].try_into().unwrap());
+    let shard = u32::from_le_bytes(p[4..8].try_into().unwrap());
+    let received = u32::from_le_bytes(p[8..12].try_into().unwrap());
+    let n = u32::from_le_bytes(p[12..16].try_into().unwrap()) as usize;
+    if n > MAX_MASK_LEN {
+        bail!("vote length {n} exceeds protocol maximum {MAX_MASK_LEN}");
+    }
+    if p.len() - 16 != n * 4 {
+        bail!("ShardVotes body {} bytes, want {}", p.len() - 16, n * 4);
+    }
+    let mut votes = Vec::with_capacity(n);
+    for chunk in p[16..].chunks_exact(4) {
+        let v = u32::from_le_bytes(chunk.try_into().unwrap());
+        if v > received {
+            bail!("vote sum {v} exceeds received mask count {received}");
+        }
+        votes.push(v);
+    }
+    Ok(ShardMsg::ShardVotes { shard, round, received, n, votes })
+}
+
 /// Split one frame off the front of `buf`; returns `(tag, payload)`.
 fn split_frame(buf: &[u8]) -> Result<(u8, &[u8])> {
     if buf.len() < 5 {
@@ -111,6 +219,7 @@ fn split_frame(buf: &[u8]) -> Result<(u8, &[u8])> {
     Ok((tag, payload))
 }
 
+/// Decode a server frame (strictly length-checked; see `encode_server`).
 pub fn decode_server(buf: &[u8]) -> Result<ServerMsg> {
     let (tag, p) = split_frame(buf)?;
     match tag {
@@ -137,16 +246,22 @@ fn decode_client_id(p: &[u8], what: &str) -> Result<u32> {
 /// What a client frame claims to be, from a cheap header peek.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ClientFrameKind {
+    /// A `Mask` uplink (either codec).
     Mask,
+    /// A `Hello` handshake / reconnect.
     Hello,
+    /// An explicit `Abort` departure.
     Abort,
+    /// A liveness `Heartbeat`.
     Heartbeat,
 }
 
 /// What a server frame claims to be, from a cheap header peek.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ServerFrameKind {
+    /// A `Round` broadcast carrying the global probabilities.
     Round,
+    /// The end-of-training `Shutdown`.
     Shutdown,
 }
 
@@ -183,6 +298,9 @@ pub fn peek_client_frame(buf: &[u8]) -> Result<(ClientFrameKind, u32)> {
     }
 }
 
+/// Decode a client frame, expanding the mask body per its codec tag.
+/// Every length is checked before allocation and a truncated arithmetic
+/// body errors instead of decoding zeros (see `MAX_MASK_LEN`).
 pub fn decode_client(buf: &[u8]) -> Result<ClientMsg> {
     let (tag, p) = split_frame(buf)?;
     match tag {
@@ -328,6 +446,64 @@ mod tests {
             frame.extend_from_slice(&payload);
             assert!(decode_client(&frame).is_err(), "tag={tag}");
         }
+    }
+
+    #[test]
+    fn shard_votes_roundtrip() {
+        let msg = ShardMsg::ShardVotes {
+            shard: 2,
+            round: 9,
+            received: 3,
+            n: 5,
+            votes: vec![0, 1, 3, 2, 3],
+        };
+        let frame = encode_shard(&msg);
+        assert_eq!(decode_shard(&frame).unwrap(), msg);
+        // fixed wire size: header + 16-byte preamble + 4 bytes per entry
+        assert_eq!(frame.len(), 5 + 16 + 5 * 4);
+        // a client/server decoder must reject the shard tag, and vice versa
+        assert!(decode_client(&frame).is_err());
+        assert!(decode_server(&frame).is_err());
+        let hello = encode_client(&ClientMsg::Hello { client: 0 }, MaskCodec::Raw);
+        assert!(decode_shard(&hello).is_err());
+    }
+
+    #[test]
+    fn shard_votes_rejects_malformed_frames() {
+        let msg =
+            ShardMsg::ShardVotes { shard: 0, round: 0, received: 2, n: 3, votes: vec![2, 0, 1] };
+        let frame = encode_shard(&msg);
+        // truncated payload (patched length) and trailing bytes both error
+        let mut bad = frame[..frame.len() - 2].to_vec();
+        let plen = (bad.len() - 5) as u32;
+        bad[1..5].copy_from_slice(&plen.to_le_bytes());
+        assert!(decode_shard(&bad).is_err());
+        let mut bad = frame.clone();
+        bad.extend_from_slice(&[0, 0, 0, 0]);
+        let plen = (bad.len() - 5) as u32;
+        bad[1..5].copy_from_slice(&plen.to_le_bytes());
+        assert!(decode_shard(&bad).is_err());
+        // a forged n = u32::MAX must be rejected before any allocation
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&0u32.to_le_bytes());
+        payload.extend_from_slice(&0u32.to_le_bytes());
+        payload.extend_from_slice(&0u32.to_le_bytes());
+        payload.extend_from_slice(&u32::MAX.to_le_bytes());
+        let mut forged = vec![8u8];
+        forged.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        forged.extend_from_slice(&payload);
+        assert!(decode_shard(&forged).is_err());
+    }
+
+    #[test]
+    fn shard_votes_rejects_impossible_sums() {
+        // A vote sum exceeding the claimed received count would skew the
+        // renormalized mean: rejected, never merged.
+        let msg = ShardMsg::ShardVotes { shard: 0, round: 1, received: 2, n: 2, votes: vec![2, 1] };
+        let mut frame = encode_shard(&msg);
+        // patch votes[0] (payload offset 16) to 3 > received = 2
+        frame[5 + 16..5 + 20].copy_from_slice(&3u32.to_le_bytes());
+        assert!(decode_shard(&frame).is_err());
     }
 
     #[test]

@@ -16,6 +16,15 @@
 //!   reduction, and the k-ordered mask aggregation are all preserved, so
 //!   the result is **byte-identical to the sequential run** (asserted by
 //!   the tests here); only the wall-clock changes.
+//! * [`ShardedSimTransport`] / [`run_federated_sharded`] — the
+//!   in-process twin of the multi-leader
+//!   [`ShardedTransport`](super::transport::ShardedTransport): clients
+//!   are grouped by a `ShardPlan`, each shard folds its masks into a
+//!   partial vote sum shipped through a real encoded `ShardVotes`
+//!   frame, and the root merges the frames before renormalizing.
+//!   Byte-identical to [`InProcessTransport`] for any shard count at
+//!   any participation (asserted here), with a whole-shard failure knob
+//!   for the dropout experiment.
 //!
 //! Both drive the *same* per-client round body ([`client_round`]) as the
 //! TCP worker (`repro serve-client`), so every transport trains the same
@@ -25,6 +34,7 @@
 
 use std::sync::{Arc, Mutex};
 
+use crate::comm::{unpack_bits, ShardCost};
 use crate::config::FedConfig;
 use crate::data::Dataset;
 use crate::rng::SeedTree;
@@ -36,20 +46,26 @@ use crate::{bail, ensure};
 
 use super::engine::{
     make_policy, Contribution, FedOutcome, ParticipationPolicy, RoundCtx, RoundEngine,
-    RoundTraffic, Transport,
+    RoundTraffic, ShardPlan, Transport,
 };
 use super::protocol::{
-    decode_client, decode_server, encode_client, ClientMsg, MaskCodec, ServerMsg,
+    decode_client, decode_server, encode_client, encode_shard, ClientMsg, MaskCodec, ServerMsg,
+    ShardMsg,
 };
-use super::pack_client_mask;
+use super::{pack_client_mask, Server};
 
 /// What one client contributes to a round (reduced in client order by
 /// every driver so f64 summation order never changes).
 pub struct ClientRound {
+    /// The round the contribution belongs to.
     pub round: u32,
+    /// Final local training loss.
     pub loss: f64,
+    /// Broadcast bits this client consumed.
     pub down_bits: u64,
+    /// Encoded uplink bits the mask frame cost.
     pub up_bits: u64,
+    /// The sampled mask, bit-packed for aggregation.
     pub packed_mask: Vec<u64>,
     /// The encoded uplink `Mask` frame — exactly the bytes the TCP
     /// worker ships; the simulator counts the same frame so the ledgers
@@ -172,6 +188,8 @@ pub struct InProcessTransport<'a> {
 }
 
 impl<'a> InProcessTransport<'a> {
+    /// Build over a shared executor, per-client data shards, and
+    /// per-client training states (see `init_clients`).
     pub fn new(
         cfg: &'a FedConfig,
         exec: &'a mut dyn DenseExecutor,
@@ -210,7 +228,12 @@ impl Transport for InProcessTransport<'_> {
                 packed_mask: out.packed_mask,
             });
         }
-        Ok(RoundTraffic { contributions, dropped: Vec::new(), down_bits })
+        Ok(RoundTraffic {
+            contributions,
+            dropped: Vec::new(),
+            down_bits,
+            shard_costs: Vec::new(),
+        })
     }
 
     fn eval_executor(&mut self) -> &mut dyn DenseExecutor {
@@ -240,6 +263,8 @@ pub struct PoolTransport<'a> {
 }
 
 impl<'a> PoolTransport<'a> {
+    /// Build over per-client data shards and states; `eval_batch` sizes
+    /// the dedicated evaluation executor.
     pub fn new(
         cfg: &'a FedConfig,
         shards: &'a [Dataset],
@@ -319,11 +344,167 @@ impl Transport for PoolTransport<'_> {
                 packed_mask: out.packed_mask,
             });
         }
-        Ok(RoundTraffic { contributions, dropped: Vec::new(), down_bits })
+        Ok(RoundTraffic {
+            contributions,
+            dropped: Vec::new(),
+            down_bits,
+            shard_costs: Vec::new(),
+        })
     }
 
     fn eval_executor(&mut self) -> &mut dyn DenseExecutor {
         &mut self.eval_exec
+    }
+}
+
+/// In-process twin of the multi-leader
+/// [`ShardedTransport`](super::transport::ShardedTransport), for fast
+/// tests and the whole-shard-failure experiment: participants are
+/// grouped by a [`ShardPlan`], each live shard runs its clients through
+/// [`client_round`] in client order and folds their masks into a
+/// partial vote sum, and the sums travel to the root as real encoded
+/// `ShardVotes` frames — merged in `aggregate` exactly like the TCP
+/// root does.  With no failed shards the result is **byte-identical to
+/// [`InProcessTransport`]** for any shard count at any participation
+/// (same `client_round` order, and `u32` vote sums merge exactly).
+///
+/// A failed shard simulates its leader being down for the whole run:
+/// its participants never receive the broadcast (no downlink, no local
+/// training, no uplink) and are reported dropped; no merge frame
+/// arrives from it.
+pub struct ShardedSimTransport<'a> {
+    cfg: &'a FedConfig,
+    exec: &'a mut dyn DenseExecutor,
+    data: &'a [Dataset],
+    clients: Vec<LocalZampling>,
+    seeds: SeedTree,
+    codec: MaskCodec,
+    plan: ShardPlan,
+    failed: Vec<usize>,
+    /// This round's encoded `ShardVotes` frames (empty vec = the shard
+    /// is failed and no frame arrived).
+    pending_votes: Vec<Vec<u8>>,
+}
+
+impl<'a> ShardedSimTransport<'a> {
+    /// Build over `num_shards` simulated shard leaders.
+    pub fn new(
+        cfg: &'a FedConfig,
+        exec: &'a mut dyn DenseExecutor,
+        data: &'a [Dataset],
+        clients: Vec<LocalZampling>,
+        num_shards: usize,
+    ) -> Self {
+        assert_eq!(data.len(), cfg.clients, "need one shard per client");
+        assert_eq!(clients.len(), cfg.clients, "need one state per client");
+        let seeds = SeedTree::new(cfg.train.seed);
+        let codec = codec_for(cfg);
+        let plan = ShardPlan::new(cfg.clients, num_shards);
+        Self {
+            cfg,
+            exec,
+            data,
+            clients,
+            seeds,
+            codec,
+            plan,
+            failed: Vec::new(),
+            pending_votes: Vec::new(),
+        }
+    }
+
+    /// Mark shard leaders as down for the whole run (the
+    /// whole-shard-failure scenario of the dropout experiment).
+    pub fn with_failed_shards(mut self, failed: &[usize]) -> Self {
+        for &s in failed {
+            assert!(s < self.plan.shards(), "failed shard {s} ≥ {}", self.plan.shards());
+        }
+        self.failed = failed.to_vec();
+        self
+    }
+
+    /// The client-space partition this twin simulates.
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+}
+
+impl Transport for ShardedSimTransport<'_> {
+    fn exchange(&mut self, ctx: &RoundCtx<'_>) -> Result<RoundTraffic> {
+        let groups = self.plan.split(ctx.participants);
+        let mut contributions = Vec::with_capacity(ctx.participants.len());
+        let mut dropped = Vec::new();
+        let mut down_bits = 0u64;
+        let mut shard_costs = Vec::with_capacity(groups.len());
+        self.pending_votes.clear();
+        for (sid, parts) in groups.iter().copied().enumerate() {
+            if self.failed.contains(&sid) {
+                // Whole-shard failure: the shard leader is down, so its
+                // participants never see the broadcast and are dropped.
+                dropped.extend_from_slice(parts);
+                shard_costs.push(ShardCost {
+                    shard: sid as u32,
+                    dropped: parts.len() as u32,
+                    ..Default::default()
+                });
+                self.pending_votes.push(Vec::new());
+                continue;
+            }
+            let mut votes = vec![0u32; ctx.n];
+            let (mut shard_up, mut shard_down) = (0u64, 0u64);
+            for &k in parts {
+                let out = client_round(
+                    self.cfg,
+                    &mut self.clients[k],
+                    &mut *self.exec,
+                    &self.data[k],
+                    &self.seeds,
+                    ctx.frame,
+                    self.codec,
+                    k,
+                    None,
+                )?;
+                shard_down += out.down_bits;
+                shard_up += out.up_bits;
+                let mask = unpack_bits(&out.packed_mask, ctx.n);
+                super::fold_mask_votes(&mut votes, &mask);
+                contributions.push(Contribution {
+                    client: k,
+                    loss: out.loss,
+                    up_bits: out.up_bits,
+                    packed_mask: out.packed_mask,
+                });
+            }
+            let votes_frame = encode_shard(&ShardMsg::ShardVotes {
+                shard: sid as u32,
+                round: ctx.round,
+                received: parts.len() as u32,
+                n: ctx.n,
+                votes,
+            });
+            down_bits += shard_down;
+            shard_costs.push(ShardCost {
+                shard: sid as u32,
+                uplink_bits: shard_up,
+                downlink_bits: shard_down,
+                merge_bits: votes_frame.len() as u64 * 8,
+                received: parts.len() as u32,
+                dropped: 0,
+            });
+            self.pending_votes.push(votes_frame);
+        }
+        Ok(RoundTraffic { contributions, dropped, down_bits, shard_costs })
+    }
+
+    /// Root-side merge over the encoded `ShardVotes` frames — literally
+    /// the same body as the TCP root (`merge_vote_frames`), so the merge
+    /// path the fast tests pin is the one production runs.
+    fn aggregate(&mut self, server: &mut Server, _traffic: &RoundTraffic) -> usize {
+        super::merge_vote_frames(server, &self.plan, &mut self.pending_votes)
+    }
+
+    fn eval_executor(&mut self) -> &mut dyn DenseExecutor {
+        &mut *self.exec
     }
 }
 
@@ -416,6 +597,43 @@ pub fn run_federated_parallel(
         "federated",
     );
     let mut transport = PoolTransport::new(cfg, shards, setup.clients, eval_batch);
+    let mut policy = make_policy(cfg.policy);
+    engine.run(&mut transport, policy.as_mut()).expect("in-process transports are infallible")
+}
+
+/// [`run_federated`] through the in-process sharded twin
+/// ([`ShardedSimTransport`]): the client space is partitioned across
+/// `num_shards` simulated shard leaders whose partial vote sums merge
+/// at the root.  With `failed_shards` empty this is byte-identical to
+/// [`run_federated`]; naming shard ids there simulates those leaders
+/// being down for the whole run (the whole-shard-failure scenario of
+/// `repro experiment --id dropout`).
+#[allow(clippy::too_many_arguments)]
+pub fn run_federated_sharded(
+    cfg: &FedConfig,
+    exec: &mut dyn DenseExecutor,
+    shards: &[Dataset],
+    test: &Dataset,
+    eval_samples: usize,
+    eval_every: usize,
+    num_shards: usize,
+    failed_shards: &[usize],
+) -> FedOutcome {
+    assert_eq!(shards.len(), cfg.clients, "need one shard per client");
+    let seeds = SeedTree::new(cfg.train.seed);
+    let setup = init_clients(cfg, &seeds);
+    let engine = RoundEngine::new(
+        cfg,
+        cfg.clients,
+        Arc::clone(&setup.q),
+        setup.init_probs.clone(),
+        test,
+        eval_samples,
+        eval_every,
+        "federated",
+    );
+    let mut transport = ShardedSimTransport::new(cfg, exec, shards, setup.clients, num_shards)
+        .with_failed_shards(failed_shards);
     let mut policy = make_policy(cfg.policy);
     engine.run(&mut transport, policy.as_mut()).expect("in-process transports are infallible")
 }
@@ -596,6 +814,89 @@ mod tests {
         for r in &uni.ledger.rounds {
             assert_eq!(r.clients + r.dropped, r.participants, "{r:?}");
         }
+    }
+
+    #[test]
+    fn sharded_sim_matches_sequential_byte_for_byte_at_any_shard_count() {
+        let (cfg, shards, test) = tiny_fed(false);
+        let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 256);
+        let seq = run_federated(&cfg, &mut exec, &shards, &test, 4, 2);
+        for s in [1usize, 2, 3, 4] {
+            let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 256);
+            let sharded = run_federated_sharded(&cfg, &mut exec, &shards, &test, 4, 2, s, &[]);
+            assert_eq!(seq.final_probs, sharded.final_probs, "S={s} diverged");
+            assert_eq!(seq.ledger.rounds.len(), sharded.ledger.rounds.len());
+            for (a, b) in seq.ledger.rounds.iter().zip(&sharded.ledger.rounds) {
+                assert_eq!(a.uplink_bits, b.uplink_bits, "S={s}");
+                assert_eq!(a.downlink_bits, b.downlink_bits, "S={s}");
+                assert_eq!(a.participants, b.participants, "S={s}");
+                assert_eq!(a.clients, b.clients, "S={s}");
+                assert_eq!(a.dropped, 0, "S={s}");
+            }
+            for (a, b) in seq.log.rounds.iter().zip(&sharded.log.rounds) {
+                assert_eq!(a.mean_sampled_acc, b.mean_sampled_acc, "S={s} round {}", a.round);
+                assert_eq!(a.train_loss, b.train_loss, "S={s} round {}", a.round);
+            }
+            // and the shard table reconciles with the round totals
+            assert_eq!(sharded.ledger.shard_rounds.len(), sharded.ledger.rounds.len());
+            for (round, per_shard) in
+                sharded.ledger.rounds.iter().zip(&sharded.ledger.shard_rounds)
+            {
+                assert_eq!(per_shard.len(), s);
+                let up: u64 = per_shard.iter().map(|c| c.uplink_bits).sum();
+                let down: u64 = per_shard.iter().map(|c| c.downlink_bits).sum();
+                assert_eq!(up, round.uplink_bits, "S={s}");
+                assert_eq!(down, round.downlink_bits, "S={s}");
+                assert!(per_shard.iter().all(|c| c.merge_bits > 0), "S={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_sim_matches_sequential_under_partial_participation() {
+        let (mut cfg, shards, test) = tiny_fed(false);
+        cfg.participation = 0.5;
+        let mut e1 = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 256);
+        let seq = run_federated(&cfg, &mut e1, &shards, &test, 4, 2);
+        let mut e2 = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 256);
+        let sharded = run_federated_sharded(&cfg, &mut e2, &shards, &test, 4, 2, 2, &[]);
+        assert_eq!(seq.final_probs, sharded.final_probs);
+    }
+
+    #[test]
+    fn whole_shard_failure_drops_exactly_that_shard_and_renormalizes() {
+        let (cfg, shards, test) = tiny_fed(false);
+        // 4 clients, 2 shards: shard 1 = clients {2, 3}, down all run.
+        let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 256);
+        let out = run_federated_sharded(&cfg, &mut exec, &shards, &test, 4, 2, 2, &[1]);
+        for r in &out.ledger.rounds {
+            assert_eq!(r.participants, 4);
+            assert_eq!(r.clients, 2, "only the surviving shard aggregates");
+            assert_eq!(r.dropped, 2, "both shard-1 clients drop every round");
+        }
+        for per_shard in &out.ledger.shard_rounds {
+            assert_eq!(per_shard[0].received, 2);
+            assert_eq!(per_shard[0].dropped, 0);
+            assert!(per_shard[0].merge_bits > 0);
+            assert_eq!(per_shard[1].received, 0);
+            assert_eq!(per_shard[1].dropped, 2);
+            assert_eq!(per_shard[1].merge_bits, 0, "a dead shard ships no merge frame");
+            assert_eq!(per_shard[1].uplink_bits, 0);
+            assert_eq!(per_shard[1].downlink_bits, 0);
+        }
+        // renormalization keeps p a probability vector and the run alive
+        assert!(out.final_probs.iter().all(|&p| (0.0..=1.0).contains(&p)));
+        // the survivors' aggregation must equal a run over shard 0 alone:
+        // same seeds, same client_round order, renormalized by 2 — which
+        // is exactly what the merge property test pins at the Server
+        // level; here we sanity-check the uplink is half the healthy run.
+        let mut e2 = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 256);
+        let healthy = run_federated_sharded(&cfg, &mut e2, &shards, &test, 4, 2, 2, &[]);
+        assert_eq!(
+            out.ledger.total_uplink_bits() * 2,
+            healthy.ledger.total_uplink_bits(),
+            "raw mask frames are fixed-size, so half the clients = half the uplink"
+        );
     }
 
     #[test]

@@ -6,6 +6,21 @@
 //! `Shutdown`.  Frames are the exact bytes of `protocol::encode_*`, read
 //! with a 5-byte header prefetch.
 //!
+//! ## Sharded topology
+//!
+//! [`ShardedTransport`] scales the same machinery past one accept loop:
+//! a `ShardPlan` partitions the client id space across `S` per-shard
+//! [`Leader`]s (each with its own listener, reader threads, deadlines,
+//! and reconnect-with-`Hello` semantics), `exchange` fans the round
+//! frame out to every shard concurrently, and each shard folds its
+//! collected masks into a partial vote sum that the root merges — via
+//! the encoded `ShardVotes` frame — before `Server::try_aggregate`
+//! renormalizes.  `u32` vote sums merge exactly, so S = 1 is
+//! byte-identical to [`TcpTransport`] and any S matches the in-process
+//! simulator at full participation (pinned in
+//! `tests/federated_integration.rs`).  See `docs/PROTOCOL.md` for the
+//! frame layout and `ARCHITECTURE.md` for the topology map.
+//!
 //! ## Fault model
 //!
 //! The leader is crash-proof against its workers: one blocking reader
@@ -35,12 +50,15 @@ use crate::util::error::{Context, Result};
 use crate::zampling::DenseExecutor;
 use crate::{anyhow, bail, ensure};
 
-use super::engine::{Contribution, DeadlinePolicy, RoundCtx, RoundTraffic, Transport};
+use crate::comm::ShardCost;
+
+use super::engine::{Contribution, DeadlinePolicy, RoundCtx, RoundTraffic, ShardPlan, Transport};
 use super::pack_client_mask;
 use super::protocol::{
-    decode_client, decode_server, encode_client, encode_server, peek_client_frame,
-    ClientFrameKind, ClientMsg, MaskCodec, ServerMsg,
+    decode_client, decode_server, encode_client, encode_server, encode_shard, peek_client_frame,
+    ClientFrameKind, ClientMsg, MaskCodec, ServerMsg, ShardMsg,
 };
+use super::Server;
 
 /// Upper bound on one frame's declared payload length.  `read_frame`
 /// allocates the payload before reading it, so a forged 4 GiB length
@@ -60,6 +78,7 @@ pub fn read_frame(stream: &mut TcpStream) -> Result<Vec<u8>> {
     Ok(buf)
 }
 
+/// Write one already-encoded frame to the stream and flush it.
 pub fn write_frame(stream: &mut TcpStream, frame: &[u8]) -> Result<()> {
     stream.write_all(frame).context("writing frame")?;
     stream.flush().context("flushing frame")
@@ -178,8 +197,9 @@ pub struct Leader {
     expected: usize,
     slots: Vec<Option<Slot>>,
     rx: Receiver<Event>,
-    /// Total bytes sent/received (feeds the comm ledger).
+    /// Total frame bytes sent to workers (feeds the comm ledger).
     pub sent_bytes: u64,
+    /// Total frame bytes received from workers.
     pub recv_bytes: u64,
 }
 
@@ -195,7 +215,28 @@ impl Leader {
     /// before any worker connects.  Blocks until every one of the
     /// `expected` client ids has completed a `Hello` handshake.
     pub fn from_listener(listener: TcpListener, expected: usize) -> Result<Leader> {
+        let all: Vec<usize> = (0..expected).collect();
+        Self::from_listener_subset(listener, expected, &all)
+    }
+
+    /// [`Self::from_listener`] for a shard leader: slots exist for all
+    /// `expected` global client ids (so workers keep their global ids on
+    /// the wire), but startup only blocks until the ids in `subset` —
+    /// the clients this shard owns — have completed their `Hello`
+    /// handshakes.  Everything after startup (broadcast, collection,
+    /// reconnects) already takes explicit participant lists, so a shard
+    /// leader is just a `Leader` that never gets asked about ids outside
+    /// its subset.
+    pub fn from_listener_subset(
+        listener: TcpListener,
+        expected: usize,
+        subset: &[usize],
+    ) -> Result<Leader> {
         ensure!(expected > 0, "leader needs at least one expected worker");
+        ensure!(!subset.is_empty(), "leader needs at least one subset worker");
+        for &k in subset {
+            ensure!(k < expected, "subset id {k} ≥ expected {expected}");
+        }
         let (tx, rx) = channel();
         spawn_acceptor(listener, expected, tx);
         let mut leader = Leader {
@@ -205,7 +246,7 @@ impl Leader {
             sent_bytes: 0,
             recv_bytes: 0,
         };
-        while leader.slots.iter().any(|s| s.is_none()) {
+        while subset.iter().any(|&k| leader.slots[k].is_none()) {
             let ev = leader.rx.recv().map_err(|_| anyhow!("acceptor thread died"))?;
             // During startup a Hello for a slot whose connection is
             // still live is a configuration error (two workers launched
@@ -267,6 +308,7 @@ impl Leader {
         }
     }
 
+    /// How many client ids this leader has slots for.
     pub fn num_clients(&self) -> usize {
         self.expected
     }
@@ -501,6 +543,7 @@ impl Leader {
         Ok(RoundReceipt { masks, frame_bytes, received, dropped, bytes })
     }
 
+    /// Broadcast `Shutdown` to every connected worker.
     pub fn shutdown(&mut self) -> Result<()> {
         self.broadcast(&ServerMsg::Shutdown)?;
         Ok(())
@@ -515,11 +558,14 @@ impl Leader {
 /// engine renormalizes instead of crashing.  Worker losses stay local,
 /// so contributions carry `loss = 0.0`.
 pub struct TcpTransport {
+    /// The fault-tolerant connection registry the rounds run over.
     pub leader: Leader,
     exec: Box<dyn DenseExecutor>,
 }
 
 impl TcpTransport {
+    /// Wrap an accepted [`Leader`] and the executor the engine should
+    /// evaluate the global model on.
     pub fn new(leader: Leader, exec: Box<dyn DenseExecutor>) -> Self {
         Self { leader, exec }
     }
@@ -544,6 +590,7 @@ impl Transport for TcpTransport {
             contributions,
             dropped: receipt.dropped,
             down_bits: (ctx.frame.len() * receivers) as u64 * 8,
+            shard_costs: Vec::new(),
         })
     }
 
@@ -556,14 +603,270 @@ impl Transport for TcpTransport {
     }
 }
 
+/// What one shard leader's slice of a round produced.
+struct ShardExchange {
+    receipt: RoundReceipt,
+    /// Broadcast bits this shard's leader delivered.
+    down_bits: u64,
+    /// The shard's encoded `ShardVotes` merge frame (partial vote sums
+    /// over its received masks).
+    votes_frame: Vec<u8>,
+}
+
+/// The multi-leader [`Transport`]: a root/leader/worker aggregation
+/// tree instead of a star.
+///
+/// A [`ShardPlan`] partitions the client id space across `S` per-shard
+/// [`Leader`]s — each with its own listener and the full concurrent
+/// fault model (reader threads, event channel, deadlines, heartbeat
+/// extension, reconnect-with-`Hello`).  `exchange` fans the engine's
+/// round frame out to every shard on its own thread; each shard
+/// broadcasts to its participants, collects their masks under the
+/// engine's [`DeadlinePolicy`], and folds them into a partial vote sum
+/// shipped root-ward as one encoded `ShardVotes` frame.  `aggregate`
+/// decodes and merges the S frames into the global [`Server`] before
+/// `try_aggregate` renormalizes by the total received count.
+///
+/// Because `u32` vote sums add exactly, the merge is **bit-identical**
+/// to a single leader receiving every mask: S = 1 reproduces
+/// [`TcpTransport`] byte-for-byte, and any S matches the in-process
+/// simulator at full participation (pinned in
+/// `tests/federated_integration.rs`).  A shard whose workers all die is
+/// a dropped-participants event for that shard only — the merge
+/// proceeds with whatever the surviving shards voted.
+///
+/// # Example
+///
+/// Two shard leaders on loopback, one trivially-masked worker each,
+/// driven through one manual round:
+///
+/// ```
+/// use std::net::TcpListener;
+/// use zampling::federated::protocol::{encode_server, MaskCodec, ServerMsg};
+/// use zampling::federated::transport::{ShardedTransport, Worker};
+/// use zampling::federated::{DeadlinePolicy, RoundCtx, ShardPlan, Transport};
+/// use zampling::nn::ArchSpec;
+/// use zampling::zampling::NativeExecutor;
+///
+/// let listeners: Vec<TcpListener> =
+///     (0..2).map(|_| TcpListener::bind("127.0.0.1:0").unwrap()).collect();
+/// let addrs: Vec<String> =
+///     listeners.iter().map(|l| l.local_addr().unwrap().to_string()).collect();
+/// // Client k belongs to shard ShardPlan::new(2, 2).owner(k) = k here.
+/// let workers: Vec<_> = addrs
+///     .iter()
+///     .enumerate()
+///     .map(|(k, addr)| {
+///         let addr = addr.clone();
+///         std::thread::spawn(move || {
+///             let mut w = Worker::connect(&addr, k as u32, MaskCodec::Raw).unwrap();
+///             while let Ok(msg) = w.recv() {
+///                 match msg {
+///                     ServerMsg::Round { round, probs } => {
+///                         let mask = probs.iter().map(|&p| p > 0.5).collect();
+///                         w.send_mask(round, mask).unwrap();
+///                     }
+///                     ServerMsg::Shutdown => break,
+///                 }
+///             }
+///         })
+///     })
+///     .collect();
+///
+/// let plan = ShardPlan::new(2, 2);
+/// let exec = NativeExecutor::new(ArchSpec::small(), 1, 1);
+/// let mut t = ShardedTransport::from_listeners(listeners, plan, Box::new(exec)).unwrap();
+/// let frame = encode_server(&ServerMsg::Round { round: 0, probs: vec![0.0, 1.0, 1.0] });
+/// let ctx = RoundCtx {
+///     round: 0,
+///     frame: &frame,
+///     participants: &[0, 1],
+///     n: 3,
+///     deadline: DeadlinePolicy::unbounded(),
+/// };
+/// let traffic = t.exchange(&ctx).unwrap();
+/// assert_eq!(traffic.contributions.len(), 2);
+/// assert_eq!(traffic.shard_costs.len(), 2);
+/// t.finish().unwrap();
+/// for w in workers {
+///     w.join().unwrap();
+/// }
+/// ```
+pub struct ShardedTransport {
+    plan: ShardPlan,
+    shards: Vec<Leader>,
+    exec: Box<dyn DenseExecutor>,
+    /// This round's encoded `ShardVotes` frames, produced by the shard
+    /// collectors in `exchange` and consumed by `aggregate`.
+    pending_votes: Vec<Vec<u8>>,
+}
+
+impl ShardedTransport {
+    /// Bind every shard's listener (all before any accept, so a fast
+    /// worker of a later shard never sees connection-refused), then
+    /// block until each shard's own clients have joined.
+    pub fn accept(addrs: &[String], plan: ShardPlan, exec: Box<dyn DenseExecutor>) -> Result<Self> {
+        ensure!(
+            addrs.len() == plan.shards(),
+            "{} shard addresses for {} shards",
+            addrs.len(),
+            plan.shards()
+        );
+        let mut listeners = Vec::with_capacity(addrs.len());
+        for addr in addrs {
+            listeners.push(TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?);
+        }
+        Self::from_listeners(listeners, plan, exec)
+    }
+
+    /// Race-free entry point over pre-bound listeners, one per shard in
+    /// shard order.  Shard `s`'s leader waits for the global client ids
+    /// in `plan.range(s)`; workers keep their **global** ids on the
+    /// wire, so the same `serve-client` binary serves both topologies.
+    pub fn from_listeners(
+        listeners: Vec<TcpListener>,
+        plan: ShardPlan,
+        exec: Box<dyn DenseExecutor>,
+    ) -> Result<Self> {
+        ensure!(
+            listeners.len() == plan.shards(),
+            "{} listeners for {} shards",
+            listeners.len(),
+            plan.shards()
+        );
+        let mut shards = Vec::with_capacity(listeners.len());
+        for (s, listener) in listeners.into_iter().enumerate() {
+            let subset: Vec<usize> = plan.range(s).collect();
+            shards.push(Leader::from_listener_subset(listener, plan.clients(), &subset)?);
+        }
+        Ok(Self { plan, shards, exec, pending_votes: Vec::new() })
+    }
+
+    /// The client-space partition this transport runs.
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// The per-shard leaders, in shard order (byte counters live here).
+    pub fn leaders(&self) -> &[Leader] {
+        &self.shards
+    }
+}
+
+impl Transport for ShardedTransport {
+    fn exchange(&mut self, ctx: &RoundCtx<'_>) -> Result<RoundTraffic> {
+        let groups = self.plan.split(ctx.participants);
+        // Fan out: one thread per shard leader runs the whole
+        // broadcast → collect → partial-sum slice, so a slow shard
+        // overlaps the others and the round's wall clock is the max
+        // shard deadline, not the sum.
+        let results: Vec<Result<ShardExchange>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .shards
+                .iter_mut()
+                .zip(groups.iter().copied())
+                .enumerate()
+                .map(|(sid, (leader, parts))| {
+                    scope.spawn(move || -> Result<ShardExchange> {
+                        let receivers = leader.broadcast_frame(ctx.frame, parts)?;
+                        let receipt =
+                            leader.collect_masks(ctx.round, parts, ctx.n, ctx.deadline)?;
+                        let mut votes = vec![0u32; ctx.n];
+                        for &k in &receipt.received {
+                            let mask = receipt.masks[k].as_ref().expect("received mask present");
+                            super::fold_mask_votes(&mut votes, mask);
+                        }
+                        let votes_frame = encode_shard(&ShardMsg::ShardVotes {
+                            shard: sid as u32,
+                            round: ctx.round,
+                            received: receipt.received.len() as u32,
+                            n: ctx.n,
+                            votes,
+                        });
+                        Ok(ShardExchange {
+                            receipt,
+                            down_bits: (ctx.frame.len() * receivers) as u64 * 8,
+                            votes_frame,
+                        })
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("shard leader thread panicked"))
+                .collect()
+        });
+
+        // Merge at the root.  Shards own ascending contiguous id ranges
+        // and each receipt is ascending within its shard, so chaining
+        // the shard slices in shard order keeps the engine's global
+        // ascending-contribution invariant.
+        let mut contributions = Vec::with_capacity(ctx.participants.len());
+        let mut dropped = Vec::new();
+        let mut down_bits = 0u64;
+        let mut shard_costs = Vec::with_capacity(self.plan.shards());
+        self.pending_votes.clear();
+        for (sid, result) in results.into_iter().enumerate() {
+            let ex = result?;
+            for &k in &ex.receipt.received {
+                // `packed_mask` stays empty: only the engine's default
+                // central aggregation reads it, and this transport
+                // overrides `aggregate` to merge the shard vote sums —
+                // the masks were already folded in the shard threads.
+                contributions.push(Contribution {
+                    client: k,
+                    loss: 0.0,
+                    up_bits: ex.receipt.frame_bytes[k] * 8,
+                    packed_mask: Vec::new(),
+                });
+            }
+            dropped.extend_from_slice(&ex.receipt.dropped);
+            down_bits += ex.down_bits;
+            shard_costs.push(ShardCost {
+                shard: sid as u32,
+                uplink_bits: ex.receipt.bytes * 8,
+                downlink_bits: ex.down_bits,
+                merge_bits: ex.votes_frame.len() as u64 * 8,
+                received: ex.receipt.received.len() as u32,
+                dropped: ex.receipt.dropped.len() as u32,
+            });
+            self.pending_votes.push(ex.votes_frame);
+        }
+        dropped.sort_unstable();
+        Ok(RoundTraffic { contributions, dropped, down_bits, shard_costs })
+    }
+
+    /// Root-side merge: decode each shard's `ShardVotes` frame and fold
+    /// the partial sums into the global accumulator, then renormalize —
+    /// the sharded replacement for receiving every mask individually
+    /// (one shared body with the sim twin: `merge_vote_frames`).
+    fn aggregate(&mut self, server: &mut Server, _traffic: &RoundTraffic) -> usize {
+        super::merge_vote_frames(server, &self.plan, &mut self.pending_votes)
+    }
+
+    fn eval_executor(&mut self) -> &mut dyn DenseExecutor {
+        self.exec.as_mut()
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        for leader in &mut self.shards {
+            leader.shutdown()?;
+        }
+        Ok(())
+    }
+}
+
 /// Worker-side connection: `Hello` handshake then a recv/send loop.
 pub struct Worker {
     stream: TcpStream,
+    /// This worker's global client id (the `Hello` it registered with).
     pub client_id: u32,
     codec: MaskCodec,
 }
 
 impl Worker {
+    /// Connect to a leader (or shard leader) at `addr` and complete the
+    /// `Hello` handshake as `client_id`.
     pub fn connect(addr: &str, client_id: u32, codec: MaskCodec) -> Result<Worker> {
         let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
         stream.set_nodelay(true).ok();
@@ -914,6 +1217,122 @@ mod tests {
         let result = leader.join().unwrap();
         assert!(result.is_err(), "duplicate client id must error at startup");
         drop((a, b));
+    }
+
+    /// A sharded exchange over real sockets: two shard leaders, three
+    /// workers with **global** ids, one manual round.  The merged
+    /// traffic must keep the ascending-contribution invariant, the vote
+    /// merge must equal per-mask receipt, and a whole shard whose
+    /// worker vanished must surface as that shard's drops only.
+    #[test]
+    fn sharded_exchange_merges_vote_sums_and_survives_a_dead_shard() {
+        use crate::zampling::NativeExecutor;
+        use crate::nn::ArchSpec;
+
+        let plan = ShardPlan::new(3, 2); // shard 0 = {0, 1}, shard 1 = {2}
+        let listeners: Vec<TcpListener> =
+            (0..2).map(|_| TcpListener::bind("127.0.0.1:0").unwrap()).collect();
+        let addrs: Vec<String> =
+            listeners.iter().map(|l| l.local_addr().unwrap().to_string()).collect();
+
+        let leader = std::thread::spawn(move || -> Result<(RoundTraffic, RoundTraffic, Vec<f32>)> {
+            let exec = NativeExecutor::new(ArchSpec::small(), 1, 1);
+            let mut t = ShardedTransport::from_listeners(listeners, plan, Box::new(exec))?;
+            let frame = encode_server(&ServerMsg::Round { round: 0, probs: vec![1.0, 0.0] });
+            let ctx = RoundCtx {
+                round: 0,
+                frame: &frame,
+                participants: &[0, 1, 2],
+                n: 2,
+                deadline: DeadlinePolicy::fixed(Duration::from_secs(20)),
+            };
+            let t0 = t.exchange(&ctx)?;
+            let mut server = Server::new(vec![0.5; 2]);
+            let received = t.aggregate(&mut server, &t0);
+            assert_eq!(received, 3);
+            let probs = server.probs.clone();
+            // Round 1: worker 2 is gone (it aborted after round 0), so
+            // shard 1 contributes zero clients and the merge proceeds.
+            let frame = encode_server(&ServerMsg::Round { round: 1, probs: vec![0.0, 1.0] });
+            let ctx = RoundCtx {
+                round: 1,
+                frame: &frame,
+                participants: &[0, 1, 2],
+                n: 2,
+                deadline: DeadlinePolicy::fixed(Duration::from_secs(20)),
+            };
+            let t1 = t.exchange(&ctx)?;
+            let received = t.aggregate(&mut server, &t1);
+            assert_eq!(received, 2);
+            t.finish()?;
+            Ok((t0, t1, probs))
+        });
+
+        // Shard-0 workers answer every round with mask = (p > 0.5).
+        let mut steady = Vec::new();
+        for k in [0u32, 1] {
+            let addr = addrs[plan.owner(k as usize)].clone();
+            steady.push(std::thread::spawn(move || -> Result<()> {
+                let mut w = Worker::connect(&addr, k, MaskCodec::Raw)?;
+                loop {
+                    match w.recv()? {
+                        ServerMsg::Round { round, probs } => {
+                            w.send_mask(round, probs.iter().map(|&p| p > 0.5).collect())?
+                        }
+                        ServerMsg::Shutdown => return Ok(()),
+                    }
+                }
+            }));
+        }
+        // Shard-1's only worker answers round 0 then aborts.
+        let quitter = {
+            let addr = addrs[plan.owner(2)].clone();
+            std::thread::spawn(move || {
+                let mut w = Worker::connect(&addr, 2, MaskCodec::Raw).expect("connect");
+                let ServerMsg::Round { round, probs } = w.recv().expect("round 0") else {
+                    panic!("expected round 0");
+                };
+                w.send_mask(round, probs.iter().map(|&p| p > 0.5).collect()).expect("mask");
+                w.send_abort().expect("abort");
+            })
+        };
+
+        let (t0, t1, probs) = leader.join().unwrap().expect("sharded leader");
+        for w in steady {
+            w.join().unwrap().expect("steady worker");
+        }
+        quitter.join().unwrap();
+
+        // Round 0: everyone voted [true, false] → p = [1, 0].
+        let ids: Vec<usize> = t0.contributions.iter().map(|c| c.client).collect();
+        assert_eq!(ids, vec![0, 1, 2], "merged contributions must stay ascending");
+        assert!(t0.dropped.is_empty());
+        assert_eq!(t0.shard_costs.len(), 2);
+        assert_eq!(t0.shard_costs[0].received, 2);
+        assert_eq!(t0.shard_costs[1].received, 1);
+        assert!(t0.shard_costs.iter().all(|c| c.merge_bits > 0));
+        assert_eq!(probs, vec![1.0, 0.0]);
+        // Round 1: shard 1 contributed nothing; shard 0 carried the round.
+        let ids: Vec<usize> = t1.contributions.iter().map(|c| c.client).collect();
+        assert_eq!(ids, vec![0, 1]);
+        assert_eq!(t1.dropped, vec![2]);
+        assert_eq!(t1.shard_costs[1].received, 0);
+        assert_eq!(t1.shard_costs[1].dropped, 1);
+    }
+
+    /// `from_listener_subset` must only wait for its own subset: a shard
+    /// leader for {1} comes up with one worker even though `expected`
+    /// covers three global ids.
+    #[test]
+    fn subset_leader_starts_without_foreign_clients() {
+        let (listener, addr) = bound_listener();
+        let leader = std::thread::spawn(move || -> Result<usize> {
+            let leader = Leader::from_listener_subset(listener, 3, &[1])?;
+            Ok(leader.live_clients())
+        });
+        let mut w = Worker::connect(&addr, 1, MaskCodec::Raw).expect("connect");
+        assert_eq!(leader.join().unwrap().expect("leader"), 1);
+        let _ = w.send_abort();
     }
 
     /// A worker that aborts after round 0 can reconnect with a fresh

@@ -13,7 +13,9 @@
 //! protocol and its wire encodings, and executes the HLO artifacts through
 //! the PJRT CPU client (`runtime`).
 //!
-//! Quick map (one module per DESIGN.md §2 row):
+//! Quick map (one module per DESIGN.md §2 row; the full crate map with
+//! the module-dependency diagram is the repo-root `ARCHITECTURE.md`,
+//! and the wire format is specified in `docs/PROTOCOL.md`):
 //!
 //! * [`rng`] — deterministic PRNGs + the shared-seed derivation tree.
 //! * [`sparse`] — `Q` generation (Eq. 1), `w = Qz`, `g_s = Qᵀ g_w`.

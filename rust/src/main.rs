@@ -16,13 +16,13 @@
 use std::path::Path;
 use std::process::ExitCode;
 
-use zampling::config::{Backend, FedConfig, PolicyKind, TrainConfig, TransportKind};
+use zampling::config::{shard_addresses, Backend, FedConfig, PolicyKind, TrainConfig, TransportKind};
 use zampling::data::Dataset;
 use zampling::experiments::{self, Scale};
 use zampling::federated::protocol::MaskCodec;
-use zampling::federated::transport::{Leader, TcpTransport, Worker};
+use zampling::federated::transport::{Leader, ShardedTransport, TcpTransport, Worker};
 use zampling::federated::{
-    client_round, make_policy, run_federated, run_federated_parallel, RoundEngine,
+    client_round, make_policy, run_federated, run_federated_parallel, RoundEngine, ShardPlan,
 };
 use zampling::metrics::RunLog;
 use zampling::nn::ArchSpec;
@@ -57,22 +57,26 @@ fn main() -> ExitCode {
 
 const USAGE: &str = "usage: repro <subcommand> [options]
   train-local       --config <toml> [--backend pjrt|native] [--eval-samples N]
-  train-federated   --config <toml> [--backend ...] [--transport local|pool|tcp]
+  train-federated   --config <toml> [--backend ...]
+                    [--transport local|pool|tcp|sharded] [--shards S]
                     [--policy uniform|straggler-aware]
                     [--listen host:port] [--eval-every N]
                     [--participation F] [--round-timeout-ms MS]
                     [--round-timeout-max-ms MS]
-  serve-client      --addr host:port --client-id K --config <toml>
+  serve-client      --addr host:port[,host:port...] --client-id K --config <toml>
   experiment        --id fig3|fig4|table1|table4|fig5|fig6|dropout|theory
                     [--scale ci|paper] [--out results/]
   comm-report       --config <toml>
   info              [--artifacts artifacts/]
 
 transports (one RoundEngine drives them all; see federated::engine):
-  local  sequential in-process clients (any backend, incl. pjrt)
-  pool   in-process clients sharded across the worker pool, byte-identical
-         to local (the default; degrades to local under --backend pjrt)
-  tcp    this process is the leader; start workers with serve-client
+  local    sequential in-process clients (any backend, incl. pjrt)
+  pool     in-process clients sharded across the worker pool, byte-identical
+           to local (the default; degrades to local under --backend pjrt)
+  tcp      this process is the leader; start workers with serve-client
+  sharded  this process is the root of S per-shard leaders; shard s listens
+           on --listen's port + s (or federated.shard-addrs), workers dial
+           their own shard's address (derived from --client-id)
 policies: uniform (paper) | straggler-aware (deprioritize clients that
   keep missing --round-timeout-ms; heartbeats can extend deadlines up
   to --round-timeout-max-ms)";
@@ -113,6 +117,23 @@ fn load_fed_config(args: &Args) -> Result<FedConfig, String> {
     }
     if let Some(p) = args.get("policy") {
         cfg.policy = PolicyKind::parse(p)?;
+    }
+    if let Some(s) = args.get("shards") {
+        let s: usize = s.parse().map_err(|_| format!("bad --shards '{s}'"))?;
+        if s == 0 || s > cfg.clients {
+            return Err(format!("--shards {s} must be in 1..={}", cfg.clients));
+        }
+        cfg.shards = s;
+    }
+    // Re-check shard/transport consistency after the CLI overrides: a
+    // multi-shard run under a single-leader transport would hang (the
+    // root binds one port while workers dial per-shard ports).
+    if cfg.shards > 1 && cfg.transport != TransportKind::Sharded {
+        return Err(format!(
+            "shards = {} requires --transport sharded (got {})",
+            cfg.shards,
+            cfg.transport.as_str()
+        ));
     }
     Ok(cfg)
 }
@@ -248,6 +269,9 @@ fn cmd_train_federated(args: &Args) -> Result<(), String> {
         TransportKind::Tcp => {
             run_tcp_leader(&cfg, &listen, &test, eval_samples, eval_every, &out_dir)?
         }
+        TransportKind::Sharded => {
+            run_sharded_leader(&cfg, &listen, &test, eval_samples, eval_every, &out_dir)?
+        }
     }
     Ok(())
 }
@@ -333,13 +357,97 @@ fn run_tcp_leader(
     Ok(())
 }
 
-/// TCP worker: local shard training driven by the leader.
+/// Sharded root: `cfg.shards` per-shard leaders (each its own listener,
+/// reusing the concurrent `Leader` machinery) serve rounds to
+/// `serve-client` workers; per-shard partial vote sums merge at this
+/// process before the renormalized aggregation — the
+/// [`RoundEngine`] over a [`ShardedTransport`].
+fn run_sharded_leader(
+    cfg: &FedConfig,
+    listen: &str,
+    test: &Dataset,
+    eval_samples: usize,
+    eval_every: usize,
+    out_dir: &str,
+) -> Result<(), String> {
+    use std::sync::Arc;
+    use zampling::sparse::QMatrix;
+
+    let plan = ShardPlan::new(cfg.clients, cfg.shards);
+    let addrs = shard_addresses(listen, &cfg.shard_addrs, cfg.shards)?;
+    for (s, addr) in addrs.iter().enumerate() {
+        let r = plan.range(s);
+        println!(
+            "[repro] shard {s} listening on {addr}, waiting for clients {}..{}",
+            r.start, r.end
+        );
+    }
+    let exec = make_executor(&cfg.train)?;
+    let mut transport =
+        ShardedTransport::accept(&addrs, plan, exec).map_err(|e| format!("{e:#}"))?;
+
+    let seeds = SeedTree::new(cfg.train.seed);
+    let q = Arc::new(QMatrix::generate(&cfg.train.arch, cfg.train.n, cfg.train.d, &seeds));
+    let mut init_rng = seeds.rng("p-init", 0);
+    let p0 = ProbVector::init_uniform(cfg.train.n, &mut init_rng).probs().to_vec();
+
+    let engine = RoundEngine::new(
+        cfg,
+        cfg.clients,
+        Arc::clone(&q),
+        p0,
+        test,
+        eval_samples,
+        eval_every,
+        "federated_sharded",
+    )
+    .verbose(true);
+    let mut policy = make_policy(cfg.policy);
+    let out = engine.run(&mut transport, policy.as_mut()).map_err(|e| format!("{e:#}"))?;
+
+    let rep = out.ledger.savings(cfg.train.arch.num_params());
+    println!(
+        "savings: client {:.1}x server {:.1}x; {} client-drops over {} rounds; merge traffic {} KiB",
+        rep.client_savings,
+        rep.server_savings,
+        out.ledger.total_dropped(),
+        cfg.rounds,
+        out.ledger.total_merge_bits() / 8 / 1024
+    );
+    for (s, (up, down, merge, received, dropped)) in
+        out.ledger.shard_totals().into_iter().enumerate()
+    {
+        println!(
+            "shard {s}: up {} KiB  down {} KiB  merge {} KiB  received {received}  dropped {dropped}",
+            up / 8 / 1024,
+            down / 8 / 1024,
+            merge / 8 / 1024
+        );
+    }
+    println!(
+        "shard miss pressure at end of run: {:?}",
+        out.history.shard_misses(transport.plan())
+    );
+    for (s, leader) in transport.leaders().iter().enumerate() {
+        println!(
+            "shard {s} leader done: sent {} KiB, received {} KiB",
+            leader.sent_bytes / 1024,
+            leader.recv_bytes / 1024
+        );
+    }
+    out.log.save(Path::new(out_dir)).map_err(|e| format!("saving: {e}"))?;
+    Ok(())
+}
+
+/// TCP worker: local shard training driven by the leader (single or
+/// sharded — under `federated.shards > 1` the worker derives its own
+/// shard leader's address from the shared config and its client id).
 fn cmd_serve_client(args: &Args) -> Result<(), String> {
     use std::sync::Arc;
     use zampling::federated::protocol::{peek_server_frame, ServerFrameKind};
     use zampling::sparse::QMatrix;
 
-    let addr = args.get("addr").ok_or("missing --addr host:port")?.to_string();
+    let addr_arg = args.get("addr").ok_or("missing --addr host:port")?.to_string();
     let client_id = args.usize_or("client-id", usize::MAX);
     if client_id == usize::MAX {
         return Err("missing --client-id".into());
@@ -347,12 +455,33 @@ fn cmd_serve_client(args: &Args) -> Result<(), String> {
     let cfg = load_fed_config(args)?;
     args.reject_unknown()?;
 
-    // Every worker derives the identical data split from the shared seed.
-    let seeds = SeedTree::new(cfg.train.seed);
-    let (train, _test) = load_splits(&cfg.train);
+    // Resolve which leader this worker dials: an explicit comma list in
+    // --addr wins, then the config's shard-addrs, then ports derived
+    // from the base address — the same rule the sharded root applies,
+    // so both sides agree without coordination.  With shards = 1 every
+    // path degenerates to the single --addr.
+    let parts: Vec<String> = addr_arg
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if parts.is_empty() {
+        return Err("empty --addr".into());
+    }
+    let explicit: &[String] = if parts.len() > 1 { &parts } else { &cfg.shard_addrs };
+    let addrs = shard_addresses(&parts[0], explicit, cfg.shards)?;
     if client_id >= cfg.clients {
         return Err(format!("client-id {client_id} ≥ clients {}", cfg.clients));
     }
+    let owner = ShardPlan::new(cfg.clients, cfg.shards).owner(client_id);
+    let addr = addrs[owner].clone();
+    if cfg.shards > 1 {
+        println!("[worker {client_id}] shard {owner} leader at {addr}");
+    }
+
+    // Every worker derives the identical data split from the shared seed.
+    let seeds = SeedTree::new(cfg.train.seed);
+    let (train, _test) = load_splits(&cfg.train);
     let shard = train.partition_iid(cfg.clients, &seeds).swap_remove(client_id);
     println!("[worker {client_id}] shard rows: {}", shard.len());
 
@@ -432,6 +561,8 @@ fn cmd_experiment(args: &Args) -> Result<(), String> {
             experiments::federated::print_dropout_sweep(&points);
             let policies = experiments::federated::run_policy_comparison(scale, 5);
             experiments::federated::print_policy_comparison(&policies);
+            let shard_failure = experiments::federated::run_shard_failure(scale, 5);
+            experiments::federated::print_shard_failure(&shard_failure);
         }
         "table4" => {
             let rows = experiments::sensitivity::run(scale, 0);

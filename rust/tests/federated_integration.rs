@@ -20,9 +20,9 @@ use zampling::federated::protocol::{
     decode_client, decode_server, encode_client, encode_server, peek_server_frame, ClientMsg,
     MaskCodec, ServerFrameKind, ServerMsg,
 };
-use zampling::federated::transport::{Leader, TcpTransport, Worker};
+use zampling::federated::transport::{Leader, ShardedTransport, TcpTransport, Worker};
 use zampling::federated::{
-    client_round, make_policy, pack_client_mask, run_federated, RoundEngine, Server,
+    client_round, make_policy, pack_client_mask, run_federated, RoundEngine, Server, ShardPlan,
 };
 use zampling::nn::ArchSpec;
 use zampling::rng::SeedTree;
@@ -103,6 +103,137 @@ fn run_leader(
     let out = engine.run(&mut transport, policy.as_mut()).expect("leader engine");
     let dropped = out.ledger.total_dropped();
     (out.final_probs, out.ledger, dropped)
+}
+
+/// The production sharded-root orchestration: the `RoundEngine` over a
+/// `ShardedTransport` — the code path `repro train-federated
+/// --transport sharded` runs.
+fn run_sharded_leader(
+    listeners: Vec<std::net::TcpListener>,
+    cfg: &FedConfig,
+    test: &Dataset,
+) -> (Vec<f32>, CommLedger, u64) {
+    let plan = ShardPlan::new(cfg.clients, listeners.len());
+    let mut transport = ShardedTransport::from_listeners(
+        listeners,
+        plan,
+        Box::new(NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500)),
+    )
+    .expect("sharded accept");
+    let seeds = SeedTree::new(cfg.train.seed);
+    let q = Arc::new(QMatrix::generate(&cfg.train.arch, cfg.train.n, cfg.train.d, &seeds));
+    let mut init_rng = seeds.rng("p-init", 0);
+    let p0 = ProbVector::init_uniform(cfg.train.n, &mut init_rng).probs().to_vec();
+    let engine =
+        RoundEngine::new(cfg, cfg.clients, q, p0, test, 2, cfg.rounds, "federated_sharded");
+    let mut policy = make_policy(cfg.policy);
+    let out = engine.run(&mut transport, policy.as_mut()).expect("sharded engine");
+    let dropped = out.ledger.total_dropped();
+    (out.final_probs, out.ledger, dropped)
+}
+
+/// Bind one listener per shard and spawn one production worker per
+/// client, each dialing its own shard's leader with its global id.
+fn launch_sharded(
+    cfg: &FedConfig,
+    shards: &[Dataset],
+    test: &Dataset,
+    num_shards: usize,
+) -> (Vec<f32>, CommLedger, u64) {
+    let plan = ShardPlan::new(cfg.clients, num_shards);
+    let listeners: Vec<std::net::TcpListener> = (0..num_shards)
+        .map(|_| TcpListener::bind("127.0.0.1:0").unwrap())
+        .collect();
+    let addrs: Vec<String> =
+        listeners.iter().map(|l| l.local_addr().unwrap().to_string()).collect();
+    let leader_cfg = cfg.clone();
+    let leader_test = test.clone();
+    let leader = thread::spawn(move || run_sharded_leader(listeners, &leader_cfg, &leader_test));
+    let workers: Vec<_> = shards
+        .iter()
+        .enumerate()
+        .map(|(k, shard)| {
+            spawn_worker(cfg.clone(), addrs[plan.owner(k)].clone(), shard.clone(), k)
+        })
+        .collect();
+    let result = leader.join().unwrap();
+    for w in workers {
+        w.join().unwrap();
+    }
+    result
+}
+
+/// S = 1 must collapse the sharded topology to the single-leader one:
+/// byte-identical final probabilities and ledger vs the `TcpTransport`
+/// path over the same workers.
+#[test]
+fn sharded_transport_with_one_shard_is_byte_identical_to_tcp() {
+    let cfg = ci_cfg(3);
+    let (shards, test) = ci_data(&cfg);
+
+    // --- reference: the single-leader TCP path ---
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let leader_cfg = cfg.clone();
+    let leader_test = test.clone();
+    let leader = thread::spawn(move || run_leader(listener, &leader_cfg, &leader_test));
+    let tcp_workers: Vec<_> = shards
+        .iter()
+        .enumerate()
+        .map(|(k, shard)| spawn_worker(cfg.clone(), addr.clone(), shard.clone(), k))
+        .collect();
+    let (tcp_probs, tcp_ledger, tcp_dropped) = leader.join().unwrap();
+    for w in tcp_workers {
+        w.join().unwrap();
+    }
+
+    // --- sharded root with a single shard ---
+    let (probs, ledger, dropped) = launch_sharded(&cfg, &shards, &test, 1);
+
+    assert_eq!(probs, tcp_probs, "S=1 sharded diverged from TcpTransport");
+    assert_eq!(dropped, tcp_dropped);
+    assert_eq!(ledger.rounds.len(), tcp_ledger.rounds.len());
+    for (r, s) in ledger.rounds.iter().zip(&tcp_ledger.rounds) {
+        assert_eq!(r.uplink_bits, s.uplink_bits);
+        assert_eq!(r.downlink_bits, s.downlink_bits);
+        assert_eq!(r.participants, s.participants);
+        assert_eq!(r.clients, s.clients);
+        assert_eq!(r.dropped, s.dropped);
+    }
+    // the only sharded-specific addition is the per-shard table
+    assert_eq!(ledger.shard_rounds.len(), ledger.rounds.len());
+    assert!(ledger.shard_rounds.iter().all(|per| per.len() == 1));
+}
+
+/// Multi-shard roots must train the same numbers as the in-process
+/// simulator at full participation: the shard merge is exact.
+#[test]
+fn sharded_transport_matches_simulator_across_shard_counts() {
+    let cfg = ci_cfg(3);
+    let (shards, test) = ci_data(&cfg);
+
+    let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500);
+    let sim = run_federated(&cfg, &mut exec, &shards, &test, 10, cfg.rounds - 1);
+
+    for num_shards in [2usize, 3] {
+        let (probs, ledger, dropped) = launch_sharded(&cfg, &shards, &test, num_shards);
+        assert_eq!(probs, sim.final_probs, "S={num_shards} diverged from the simulator");
+        assert_eq!(dropped, 0, "S={num_shards}");
+        assert_eq!(ledger.rounds.len(), sim.ledger.rounds.len());
+        for (r, s) in ledger.rounds.iter().zip(&sim.ledger.rounds) {
+            assert_eq!(r.uplink_bits, s.uplink_bits, "S={num_shards}");
+            assert_eq!(r.downlink_bits, s.downlink_bits, "S={num_shards}");
+            assert_eq!(r.participants, s.participants, "S={num_shards}");
+            assert_eq!(r.clients, s.clients, "S={num_shards}");
+        }
+        // per-shard columns reconcile with the round totals
+        for (round, per_shard) in ledger.rounds.iter().zip(&ledger.shard_rounds) {
+            assert_eq!(per_shard.len(), num_shards);
+            let up: u64 = per_shard.iter().map(|c| c.uplink_bits).sum();
+            assert_eq!(up, round.uplink_bits, "S={num_shards}");
+            assert!(per_shard.iter().all(|c| c.merge_bits > 0), "S={num_shards}");
+        }
+    }
 }
 
 #[test]

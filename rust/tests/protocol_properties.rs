@@ -1,13 +1,16 @@
 //! Fuzz-style negative tests for the wire decoders: **no frame
 //! constructible from arbitrary bytes may panic** `decode_client` /
-//! `decode_server` — truncated, oversized, forged-length, bad-tag, all
-//! of it must come back as `Err` or a valid message, never a crash or a
-//! silently garbage decode.  Driven by the in-tree property harness
-//! (`util::prop`), deterministic seeds throughout.
+//! `decode_server` / `decode_shard` — truncated, oversized,
+//! forged-length, bad-tag, all of it must come back as `Err` or a valid
+//! message, never a crash or a silently garbage decode.  Driven by the
+//! in-tree property harness (`util::prop`), deterministic seeds
+//! throughout.  This file is the executable appendix of
+//! `docs/PROTOCOL.md` — every rule the spec states about malformed
+//! input is asserted here.
 
 use zampling::federated::protocol::{
-    decode_client, decode_server, encode_client, encode_server, ClientMsg, MaskCodec, ServerMsg,
-    MAX_MASK_LEN,
+    decode_client, decode_server, decode_shard, encode_client, encode_server, encode_shard,
+    ClientMsg, MaskCodec, ServerMsg, ShardMsg, MAX_MASK_LEN,
 };
 use zampling::rng::Rng;
 use zampling::util::prop::{for_all, Gen};
@@ -57,6 +60,68 @@ fn arbitrary_bytes_never_panic_either_decoder() {
             // the harness turns panics into test failures for us.
             let _ = decode_client(buf);
             let _ = decode_server(buf);
+            let _ = decode_shard(buf);
+            Ok(())
+        },
+    );
+}
+
+/// A random, valid-by-construction `ShardVotes` merge frame.
+fn random_votes_frame(g: &mut Gen) -> Vec<u8> {
+    let n = g.usize_in(0, 400);
+    let received = g.usize_in(0, 32) as u32;
+    let votes: Vec<u32> = (0..n).map(|_| g.usize_in(0, received as usize) as u32).collect();
+    encode_shard(&ShardMsg::ShardVotes {
+        shard: g.usize_in(0, 16) as u32,
+        round: g.usize_in(0, 1000) as u32,
+        received,
+        n,
+        votes,
+    })
+}
+
+#[test]
+fn shard_votes_roundtrip_and_reject_mutation() {
+    for_all(
+        "ShardVotes roundtrip; truncation and forged sums error",
+        150,
+        0x5A5A,
+        |g| {
+            let frame = random_votes_frame(g);
+            let cut = g.usize_in(0, frame.len().saturating_sub(1));
+            let forged_vote = g.usize_in(33, 1 << 20) as u32; // > any received
+            (frame, cut, forged_vote)
+        },
+        |(frame, cut, forged_vote)| {
+            // 1. the untouched frame roundtrips
+            match decode_shard(frame) {
+                Ok(ShardMsg::ShardVotes { n, votes, received, .. }) => {
+                    if votes.len() != n {
+                        return Err(format!("votes len {} != n {n}", votes.len()));
+                    }
+                    if votes.iter().any(|&v| v > received) {
+                        return Err("decoded an impossible vote sum".into());
+                    }
+                }
+                Err(e) => return Err(format!("valid merge frame rejected: {e}")),
+            }
+            // 2. self-consistent truncation always errors
+            let mut bad = frame[..*cut].to_vec();
+            if bad.len() >= 5 {
+                let body = bad.len() - 5;
+                set_frame_len(&mut bad, body);
+            }
+            if decode_shard(&bad).is_ok() {
+                return Err(format!("truncated merge frame decoded (cut={cut})"));
+            }
+            // 3. a vote sum above the declared received count errors
+            if frame.len() > 21 {
+                let mut bad = frame.clone();
+                bad[21..25].copy_from_slice(&forged_vote.to_le_bytes());
+                if decode_shard(&bad).is_ok() {
+                    return Err(format!("impossible vote sum {forged_vote} decoded"));
+                }
+            }
             Ok(())
         },
     );

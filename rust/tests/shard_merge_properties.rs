@@ -1,0 +1,147 @@
+//! Property tests for the sharded merge path: for ANY population,
+//! shard count, and drop pattern — including whole shards contributing
+//! zero clients — merging the S partial vote sums (through the real
+//! encoded `ShardVotes` frames) and then renormalizing must equal
+//! single-leader aggregation over the union of received participants,
+//! bit for bit.  `proptest` is unavailable offline, so these run over
+//! the crate's deterministic `util::prop::for_all` driver.
+
+use zampling::comm::pack_bits;
+use zampling::federated::protocol::{decode_shard, encode_shard, ShardMsg};
+use zampling::federated::{Server, ShardPlan};
+use zampling::rng::{Rng, Xoshiro256pp};
+use zampling::util::prop::{for_all, Gen};
+
+/// A generated round: a population partitioned into shards, each client
+/// holding either a mask or a drop.
+#[derive(Debug)]
+struct Input {
+    n: usize,
+    clients: usize,
+    shards: usize,
+    /// `masks[k]` is `None` when client `k` dropped this round.
+    masks: Vec<Option<Vec<bool>>>,
+}
+
+fn gen_input(g: &mut Gen) -> Input {
+    let n = g.usize_in(1, 200);
+    let clients = g.usize_in(1, 24);
+    let shards = g.usize_in(1, clients);
+    let mut rng = Xoshiro256pp::seed_from(g.seed());
+    let drop_rate = g.f64_in(0.0, 1.0);
+    let plan = ShardPlan::new(clients, shards);
+    // Sometimes kill a whole shard outright — the scenario the sharded
+    // transport must survive — on top of per-client drops.
+    let dead_shard = if g.bool_p(0.3) { Some(g.usize_in(0, shards - 1)) } else { None };
+    let masks = (0..clients)
+        .map(|k| {
+            if dead_shard == Some(plan.owner(k)) || rng.bernoulli(drop_rate) {
+                None
+            } else {
+                Some((0..n).map(|_| rng.bernoulli(0.5)).collect())
+            }
+        })
+        .collect();
+    Input { n, clients, shards, masks }
+}
+
+#[test]
+fn merging_partial_vote_sums_equals_single_leader_aggregation() {
+    for_all("shard-merge-equals-central", 300, 0x5AD5, gen_input, |input| {
+        let plan = ShardPlan::new(input.clients, input.shards);
+
+        // Reference: one leader receives every surviving mask directly.
+        let mut central = Server::new(vec![0.5; input.n]);
+        for mask in input.masks.iter().flatten() {
+            central.receive_mask(&pack_bits(mask));
+        }
+        let central_received = central.try_aggregate();
+        let want: Vec<f32> = central.probs.clone();
+
+        // Sharded: each shard folds its own survivors into a partial
+        // vote sum, round-trips it through the wire codec, and the root
+        // merges the decoded frames.
+        let mut root = Server::new(vec![0.5; input.n]);
+        for s in 0..plan.shards() {
+            let mut votes = vec![0u32; input.n];
+            let mut received = 0u32;
+            for k in plan.range(s) {
+                if let Some(mask) = &input.masks[k] {
+                    for (v, &b) in votes.iter_mut().zip(mask) {
+                        *v += b as u32;
+                    }
+                    received += 1;
+                }
+            }
+            let frame = encode_shard(&ShardMsg::ShardVotes {
+                shard: s as u32,
+                round: 0,
+                received,
+                n: input.n,
+                votes,
+            });
+            let ShardMsg::ShardVotes { received, n, votes, .. } =
+                decode_shard(&frame).map_err(|e| format!("decode: {e}"))?;
+            if n != input.n {
+                return Err(format!("wire mangled n: {n} != {}", input.n));
+            }
+            root.merge_votes(&votes, received as usize);
+        }
+        let merged_received = root.try_aggregate();
+
+        if merged_received != central_received {
+            return Err(format!(
+                "received diverged: merged {merged_received} vs central {central_received}"
+            ));
+        }
+        // Bit-identical, not approximately equal: u32 sums are exact and
+        // the final division is the same `a as f32 / k as f32` both ways.
+        if root.probs != want {
+            return Err("merged probabilities != central probabilities".into());
+        }
+        // A fully-dropped round must leave p untouched, not NaN.
+        if central_received == 0 && want != vec![0.5; input.n] {
+            return Err("zero-receipt round mutated p".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn empty_shards_never_skew_the_mean() {
+    // Deterministic pin of the headline case: S = 3, the middle shard
+    // contributes zero clients, and the renormalized mean must divide by
+    // the masks that arrived (4), not the population (6).
+    let n = 8;
+    let plan = ShardPlan::new(6, 3);
+    let mut root = Server::new(vec![0.0; n]);
+    let mask_a: Vec<bool> = (0..n).map(|i| i % 2 == 0).collect();
+    let mask_b = vec![true; n];
+    for s in 0..plan.shards() {
+        let (votes, received) = if s == 1 {
+            (vec![0u32; n], 0u32) // whole-shard dropout
+        } else {
+            let mut votes = vec![0u32; n];
+            for mask in [&mask_a, &mask_b] {
+                for (v, &b) in votes.iter_mut().zip(mask) {
+                    *v += b as u32;
+                }
+            }
+            (votes, 2)
+        };
+        let frame = encode_shard(&ShardMsg::ShardVotes {
+            shard: s as u32,
+            round: 0,
+            received,
+            n,
+            votes,
+        });
+        let ShardMsg::ShardVotes { received, votes, .. } = decode_shard(&frame).unwrap();
+        root.merge_votes(&votes, received as usize);
+    }
+    assert_eq!(root.try_aggregate(), 4);
+    for (i, &p) in root.probs.iter().enumerate() {
+        let want = if i % 2 == 0 { 1.0 } else { 0.5 };
+        assert_eq!(p, want, "entry {i}");
+    }
+}
