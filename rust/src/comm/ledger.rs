@@ -46,6 +46,22 @@ pub struct ShardCost {
     pub dropped: u32,
 }
 
+/// One directed gossip edge's billed traffic for a round — the
+/// decentralized counterpart of [`ShardCost`].  The gossip protocol
+/// ships one `n`-bit mask per live directed edge per round
+/// (`Topology::num_messages` of them at full participation), so a
+/// round's edge rows always sum to its [`RoundCost::uplink_bits`];
+/// there is no downlink column because gossip has no broadcast.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EdgeCost {
+    /// The sending node.
+    pub from: u32,
+    /// The receiving node.
+    pub to: u32,
+    /// Bits shipped over this edge this round (the raw `n`-bit mask).
+    pub bits: u64,
+}
+
 /// Accumulated ledger over a training run.
 #[derive(Clone, Debug, Default)]
 pub struct CommLedger {
@@ -56,6 +72,10 @@ pub struct CommLedger {
     /// transports).  Recorders that bypass the engine (baselines) leave
     /// the table empty.
     pub shard_rounds: Vec<Vec<ShardCost>>,
+    /// Per-round per-directed-edge breakdown from gossip transports,
+    /// 1:1 with `rounds` when recorded by the round engine (inner
+    /// vectors are empty for centralized transports).
+    pub edge_rounds: Vec<Vec<EdgeCost>>,
 }
 
 /// The Table 1 row: per-round per-client savings factors vs naive.
@@ -84,6 +104,42 @@ impl CommLedger {
     /// so `shard_rounds` stays 1:1 with `rounds`.
     pub fn record_shard_costs(&mut self, costs: Vec<ShardCost>) {
         self.shard_rounds.push(costs);
+    }
+
+    /// Append one round's per-directed-edge breakdown (empty for
+    /// centralized transports) — the engine calls this right after
+    /// [`Self::record`] so `edge_rounds` stays 1:1 with `rounds`.
+    pub fn record_edge_costs(&mut self, costs: Vec<EdgeCost>) {
+        self.edge_rounds.push(costs);
+    }
+
+    /// Total bits shipped over gossip edges across the run (0 unless a
+    /// gossip transport ran).
+    pub fn total_edge_bits(&self) -> u64 {
+        self.edge_rounds.iter().flatten().map(|e| e.bits).sum()
+    }
+
+    /// Per-node gossip totals over the run: `(sent, received)` bits per
+    /// node id, summed over its out- and in-edges.  `nodes` is the
+    /// topology's node count, so isolated or never-selected trailing
+    /// nodes still get their (0, 0) row instead of being silently
+    /// truncated; the result grows past `nodes` only if the table
+    /// somehow names a larger id.
+    pub fn node_edge_totals(&self, nodes: usize) -> Vec<(u64, u64)> {
+        let nodes = self
+            .edge_rounds
+            .iter()
+            .flatten()
+            .map(|e| e.from.max(e.to) as usize + 1)
+            .max()
+            .unwrap_or(0)
+            .max(nodes);
+        let mut totals = vec![(0u64, 0u64); nodes];
+        for e in self.edge_rounds.iter().flatten() {
+            totals[e.from as usize].0 += e.bits;
+            totals[e.to as usize].1 += e.bits;
+        }
+        totals
     }
 
     /// Total shard→root merge-frame bits over the run (0 unless a
@@ -273,6 +329,34 @@ mod tests {
         assert_eq!(totals[1], (1, 2, 5, 1, 3));
         // single-leader ledgers report an empty table
         assert!(CommLedger::default().shard_totals().is_empty());
+    }
+
+    #[test]
+    fn edge_table_totals_accumulate_per_node() {
+        let mut ledger = CommLedger::default();
+        ledger.record_edge_costs(vec![
+            EdgeCost { from: 0, to: 1, bits: 10 },
+            EdgeCost { from: 1, to: 0, bits: 10 },
+            EdgeCost { from: 2, to: 0, bits: 10 },
+        ]);
+        // next round: node 2 died, only the 0↔1 edges carried traffic
+        ledger.record_edge_costs(vec![
+            EdgeCost { from: 0, to: 1, bits: 10 },
+            EdgeCost { from: 1, to: 0, bits: 10 },
+        ]);
+        assert_eq!(ledger.total_edge_bits(), 50);
+        let totals = ledger.node_edge_totals(3);
+        assert_eq!(totals.len(), 3);
+        assert_eq!(totals[0], (20, 30));
+        assert_eq!(totals[1], (20, 20));
+        assert_eq!(totals[2], (10, 0));
+        // an isolated trailing node still gets its zero row
+        let totals = ledger.node_edge_totals(5);
+        assert_eq!(totals.len(), 5);
+        assert_eq!(totals[4], (0, 0));
+        // centralized ledgers report an empty table
+        assert!(CommLedger::default().node_edge_totals(0).is_empty());
+        assert_eq!(CommLedger::default().total_edge_bits(), 0);
     }
 
     #[test]

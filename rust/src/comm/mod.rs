@@ -14,7 +14,8 @@
 //! * [`CommLedger`] — per-round uplink/downlink byte accounting and the
 //!   savings-vs-naive factors the paper reports, including the
 //!   per-shard breakdown ([`ShardCost`]) recorded under the sharded
-//!   multi-leader transports.
+//!   multi-leader transports and the per-directed-edge breakdown
+//!   ([`EdgeCost`]) recorded under the gossip transports.
 #![deny(missing_docs)]
 
 pub mod arith;
@@ -22,7 +23,7 @@ pub mod rle;
 
 mod ledger;
 
-pub use ledger::{CommLedger, RoundCost, SavingsReport, ShardCost};
+pub use ledger::{CommLedger, EdgeCost, RoundCost, SavingsReport, ShardCost};
 
 /// Pack a boolean mask into u64 words (LSB-first within each word).
 ///

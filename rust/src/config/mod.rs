@@ -152,6 +152,11 @@ pub enum TransportKind {
     /// partial vote sums merge before aggregation; workers connect to
     /// their own shard's address.
     Sharded,
+    /// Real sockets, decentralized: this process is the gossip
+    /// coordinator, each `repro serve-peer` node runs a tiny leader for
+    /// its `federated.topology` neighbours and masks travel peer-to-peer
+    /// (one `n`-bit mask per directed edge per round).
+    GossipTcp,
 }
 
 impl TransportKind {
@@ -161,7 +166,10 @@ impl TransportKind {
             "pool" => Ok(TransportKind::Pool),
             "tcp" => Ok(TransportKind::Tcp),
             "sharded" => Ok(TransportKind::Sharded),
-            other => Err(format!("unknown transport '{other}' (local|pool|tcp|sharded)")),
+            "gossip-tcp" => Ok(TransportKind::GossipTcp),
+            other => {
+                Err(format!("unknown transport '{other}' (local|pool|tcp|sharded|gossip-tcp)"))
+            }
         }
     }
 
@@ -171,8 +179,114 @@ impl TransportKind {
             TransportKind::Pool => "pool",
             TransportKind::Tcp => "tcp",
             TransportKind::Sharded => "sharded",
+            TransportKind::GossipTcp => "gossip-tcp",
         }
     }
+}
+
+/// Which communication graph the gossip transports run over (the
+/// `federated.topology` key; `federated::gossip::Topology::from_kind`
+/// builds the adjacency).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TopologyKind {
+    /// Every node talks to every other node (recovers centralized).
+    Complete,
+    /// Each node talks to its two ring neighbours.
+    Ring,
+    /// Star around node 0 (the "almost centralized" graph).
+    Star,
+}
+
+impl TopologyKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "complete" => Ok(TopologyKind::Complete),
+            "ring" => Ok(TopologyKind::Ring),
+            "star" => Ok(TopologyKind::Star),
+            other => Err(format!("unknown topology '{other}' (complete|ring|star)")),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TopologyKind::Complete => "complete",
+            TopologyKind::Ring => "ring",
+            TopologyKind::Star => "star",
+        }
+    }
+
+    /// Smallest node count the topology is defined for — checked at
+    /// config-parse time so a degenerate graph errors before any round
+    /// runs (the builders used to `assert!` mid-setup instead).
+    pub fn min_nodes(&self) -> usize {
+        match self {
+            TopologyKind::Complete => 1,
+            TopologyKind::Ring | TopologyKind::Star => 2,
+        }
+    }
+}
+
+/// Validate an explicit undirected-gossip adjacency (the
+/// `federated.topology-adj` key): every neighbour id in range, no
+/// self-loops, no duplicate entries, and every edge listed from both
+/// ends.  Shared by config parsing and `gossip::Topology::from_neighbors`
+/// so the two can never disagree about what a well-formed graph is.
+pub fn validate_topology_adjacency(neighbors: &[Vec<usize>]) -> Result<(), String> {
+    let k = neighbors.len();
+    for (i, ns) in neighbors.iter().enumerate() {
+        for &j in ns {
+            if j >= k {
+                return Err(format!("node {i} lists out-of-range neighbour {j} (k = {k})"));
+            }
+            if j == i {
+                return Err(format!("node {i} lists itself as a neighbour (self-loop)"));
+            }
+            if !neighbors[j].contains(&i) {
+                return Err(format!(
+                    "asymmetric edge {i}→{j}: node {j} does not list {i} back"
+                ));
+            }
+        }
+        let mut sorted = ns.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        if sorted.len() != ns.len() {
+            return Err(format!("node {i} lists a duplicate neighbour"));
+        }
+    }
+    Ok(())
+}
+
+/// Resolve the per-node gossip listener addresses — the gossip analogue
+/// of [`shard_addresses`].  An explicit list (`federated.peer-addrs`)
+/// wins and must carry exactly `nodes` entries; otherwise node `i`
+/// listens on `base` (the coordinator's `--listen` address) with its
+/// port incremented by `1 + i` — the coordinator keeps the base port —
+/// so coordinator and peers derive identical addresses from the shared
+/// config without any extra coordination.
+pub fn peer_addresses(
+    base: &str,
+    explicit: &[String],
+    nodes: usize,
+) -> Result<Vec<String>, String> {
+    if nodes == 0 {
+        return Err("need at least one gossip node".into());
+    }
+    if !explicit.is_empty() {
+        if explicit.len() != nodes {
+            return Err(format!("{} peer addresses for {nodes} nodes", explicit.len()));
+        }
+        return Ok(explicit.to_vec());
+    }
+    let (host, port) = base
+        .rsplit_once(':')
+        .ok_or_else(|| format!("bad listen address '{base}' (want host:port)"))?;
+    let port: u16 = port.parse().map_err(|_| format!("bad port in '{base}'"))?;
+    // Widen before adding: the derived ports must themselves fit u16.
+    if u32::from(port) + nodes as u32 > u32::from(u16::MAX) {
+        return Err(format!("peer ports starting at {port} overflow 65535"));
+    }
+    Ok((0..nodes).map(|i| format!("{host}:{}", u32::from(port) + 1 + i as u32)).collect())
 }
 
 /// Resolve the per-shard listener addresses for the sharded transport.
@@ -274,6 +388,18 @@ pub struct FedConfig {
     /// Empty = derive from `--listen` by incrementing the port per
     /// shard; see [`shard_addresses`].
     pub shard_addrs: Vec<String>,
+    /// Which communication graph the gossip transports run over
+    /// (ignored by the centralized transports).
+    pub topology: TopologyKind,
+    /// Explicit gossip adjacency, one semicolon-separated neighbour
+    /// list per node (e.g. `"1,2;0;0"`), validated at parse time
+    /// (symmetry, no self-loops, ids in range).  Empty = use
+    /// [`Self::topology`].
+    pub topology_adj: Vec<Vec<usize>>,
+    /// Explicit per-peer listener addresses (comma-separated in TOML).
+    /// Empty = derive from `--listen` by incrementing the port per
+    /// node; see [`peer_addresses`].
+    pub peer_addrs: Vec<String>,
 }
 
 impl FedConfig {
@@ -294,13 +420,16 @@ impl FedConfig {
             policy: PolicyKind::Uniform,
             shards: 1,
             shard_addrs: Vec::new(),
+            topology: TopologyKind::Complete,
+            topology_adj: Vec::new(),
+            peer_addrs: Vec::new(),
         }
     }
 
     pub const KNOWN_KEYS: &'static [&'static str] = &[
         "clients", "rounds", "local-epochs", "entropy-code-uplink", "participation",
         "round-timeout-ms", "round-timeout-max-ms", "transport", "policy", "shards",
-        "shard-addrs",
+        "shard-addrs", "topology", "topology-adj", "peer-addrs",
     ];
 
     pub fn from_toml(doc: &TomlDoc) -> Result<Self, String> {
@@ -348,6 +477,59 @@ impl FedConfig {
                 shard_addrs.len()
             ));
         }
+        let topology = TopologyKind::parse(&fed_doc.str_or("topology", "complete"))?;
+        // Explicit adjacency: one ';'-separated neighbour list per node,
+        // each a ','-separated id list (a lone ';'-segment may be empty
+        // only if the node is isolated — still validated for symmetry).
+        let topology_adj: Vec<Vec<usize>> = {
+            let raw = fed_doc.str_or("topology-adj", "");
+            if raw.trim().is_empty() {
+                Vec::new()
+            } else {
+                let mut adj = Vec::new();
+                for (i, part) in raw.split(';').enumerate() {
+                    let mut ns = Vec::new();
+                    for id in part.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+                        ns.push(id.parse::<usize>().map_err(|_| {
+                            format!("federated.topology-adj: bad neighbour id '{id}' for node {i}")
+                        })?);
+                    }
+                    adj.push(ns);
+                }
+                adj
+            }
+        };
+        // Validate the gossip graph **at parse time** — a malformed
+        // topology used to surface as a mid-round panic.
+        if !topology_adj.is_empty() {
+            if topology_adj.len() != clients {
+                return Err(format!(
+                    "federated.topology-adj lists {} nodes for {clients} clients",
+                    topology_adj.len()
+                ));
+            }
+            validate_topology_adjacency(&topology_adj)
+                .map_err(|e| format!("federated.topology-adj: {e}"))?;
+        }
+        if transport == TransportKind::GossipTcp && clients < topology.min_nodes() {
+            return Err(format!(
+                "federated.topology = \"{}\" needs at least {} clients, got {clients}",
+                topology.as_str(),
+                topology.min_nodes()
+            ));
+        }
+        let peer_addrs: Vec<String> = fed_doc
+            .str_or("peer-addrs", "")
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        if !peer_addrs.is_empty() && peer_addrs.len() != clients {
+            return Err(format!(
+                "federated.peer-addrs has {} entries for {clients} clients",
+                peer_addrs.len()
+            ));
+        }
         Ok(Self {
             train: TrainConfig::from_toml(&train_doc)?,
             clients,
@@ -361,6 +543,9 @@ impl FedConfig {
             policy: PolicyKind::parse(&fed_doc.str_or("policy", "uniform"))?,
             shards,
             shard_addrs,
+            topology,
+            topology_adj,
+            peer_addrs,
         })
     }
 }
@@ -490,6 +675,77 @@ mod tests {
                     .unwrap();
             assert!(FedConfig::from_toml(&doc).is_err(), "participation {bad} accepted");
         }
+    }
+
+    #[test]
+    fn gossip_topology_parses_and_validates() {
+        let doc = TomlDoc::parse(
+            "arch = \"small\"\n[federated]\nclients = 3\ntransport = \"gossip-tcp\"\n\
+             topology = \"ring\"\npeer-addrs = \"a:1, b:2, c:3\"\n",
+        )
+        .unwrap();
+        let f = FedConfig::from_toml(&doc).unwrap();
+        assert_eq!(f.transport, TransportKind::GossipTcp);
+        assert_eq!(f.topology, TopologyKind::Ring);
+        assert_eq!(f.peer_addrs, vec!["a:1", "b:2", "c:3"]);
+        assert_eq!(TransportKind::parse("gossip-tcp").unwrap().as_str(), "gossip-tcp");
+        for kind in ["complete", "ring", "star"] {
+            assert_eq!(TopologyKind::parse(kind).unwrap().as_str(), kind);
+        }
+        // explicit adjacency parses and is validated for shape
+        let doc = TomlDoc::parse(
+            "arch = \"small\"\n[federated]\nclients = 3\ntransport = \"gossip-tcp\"\n\
+             topology-adj = \"1,2;0;0\"\n",
+        )
+        .unwrap();
+        let f = FedConfig::from_toml(&doc).unwrap();
+        assert_eq!(f.topology_adj, vec![vec![1, 2], vec![0], vec![0]]);
+        for bad in [
+            // degenerate named topologies are a parse error, not a panic
+            "clients = 1\ntransport = \"gossip-tcp\"\ntopology = \"ring\"\n",
+            "clients = 1\ntransport = \"gossip-tcp\"\ntopology = \"star\"\n",
+            "topology = \"moebius\"\n",
+            // adjacency: wrong node count, self-loop, asymmetry, range
+            "clients = 3\ntopology-adj = \"1;0\"\n",
+            "clients = 2\ntopology-adj = \"0,1;0\"\n",
+            "clients = 2\ntopology-adj = \"1;\"\n",
+            "clients = 2\ntopology-adj = \"5;0\"\n",
+            "clients = 2\ntopology-adj = \"1,1;0,0\"\n",
+            "clients = 2\ntopology-adj = \"1;zero\"\n",
+            // peer-addrs must match the node count
+            "clients = 3\ntransport = \"gossip-tcp\"\npeer-addrs = \"a:1\"\n",
+        ] {
+            let doc = TomlDoc::parse(&format!("arch = \"small\"\n[federated]\n{bad}")).unwrap();
+            assert!(FedConfig::from_toml(&doc).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn peer_addresses_derive_or_take_the_explicit_list() {
+        // derived: the coordinator keeps the base port, node i gets +1+i
+        let got = peer_addresses("127.0.0.1:7747", &[], 3).unwrap();
+        assert_eq!(got, vec!["127.0.0.1:7748", "127.0.0.1:7749", "127.0.0.1:7750"]);
+        // explicit list wins and must match the node count
+        let explicit = vec!["a:1".to_string(), "b:2".to_string()];
+        assert_eq!(peer_addresses("ignored:9", &explicit, 2).unwrap(), explicit);
+        assert!(peer_addresses("ignored:9", &explicit, 3).is_err());
+        // malformed bases and port overflow error instead of panicking
+        assert!(peer_addresses("no-port", &[], 2).is_err());
+        assert!(peer_addresses("h:notaport", &[], 2).is_err());
+        assert!(peer_addresses("h:65535", &[], 1).is_err());
+        assert!(peer_addresses("h:70000", &[], 1).is_err());
+        assert!(peer_addresses("h:1", &[], 0).is_err());
+    }
+
+    #[test]
+    fn adjacency_validator_rejects_malformed_graphs() {
+        assert!(validate_topology_adjacency(&[vec![1], vec![0]]).is_ok());
+        assert!(validate_topology_adjacency(&[]).is_ok());
+        // out-of-range, self-loop, asymmetric, duplicate
+        assert!(validate_topology_adjacency(&[vec![2], vec![0]]).is_err());
+        assert!(validate_topology_adjacency(&[vec![0], vec![]]).is_err());
+        assert!(validate_topology_adjacency(&[vec![1], vec![]]).is_err());
+        assert!(validate_topology_adjacency(&[vec![1, 1], vec![0, 0]]).is_err());
     }
 
     #[test]

@@ -20,7 +20,11 @@
 //!   in-process twin), and
 //!   [`PeerTransport`](super::gossip::PeerTransport) (decentralized
 //!   gossip — each node runs a tiny aggregation engine for its
-//!   neighbours).
+//!   neighbours), and
+//!   [`WirePeerTransport`](super::gossip::WirePeerTransport) (the same
+//!   gossip protocol with every node a separate process over real
+//!   sockets, coordinated through unbilled `PeerRound`/`Report`
+//!   frames).
 //! * [`ParticipationPolicy`] — who participates each round.
 //!   [`Uniform`] reproduces the seeded `RoundPlan` sampling;
 //!   [`StragglerAware`] feeds the per-round `participants`/`dropped`
@@ -37,7 +41,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::comm::{CommLedger, RoundCost, ShardCost};
+use crate::comm::{CommLedger, EdgeCost, RoundCost, ShardCost};
 use crate::config::{FedConfig, PolicyKind};
 use crate::data::Dataset;
 use crate::metrics::{RoundRecord, RunLog};
@@ -236,6 +240,10 @@ pub struct RoundTraffic {
     /// empty for single-leader transports.  The engine forwards it to
     /// the ledger's shard table verbatim.
     pub shard_costs: Vec<ShardCost>,
+    /// Per-directed-edge breakdown from gossip transports — empty for
+    /// centralized transports.  The engine forwards it to the ledger's
+    /// edge table verbatim.
+    pub edge_costs: Vec<EdgeCost>,
 }
 
 /// Mask-collection deadline semantics, owned by the engine and handed to
@@ -711,6 +719,7 @@ impl<'a> RoundEngine<'a> {
                 dropped: traffic.dropped.len() as u32,
             });
             self.ledger.record_shard_costs(std::mem::take(&mut traffic.shard_costs));
+            self.ledger.record_edge_costs(std::mem::take(&mut traffic.edge_costs));
             if self.verbose && !traffic.dropped.is_empty() {
                 println!("round {round:>3}  dropped clients {:?}", traffic.dropped);
             }
@@ -885,8 +894,7 @@ mod tests {
         let drop_round = RoundTraffic {
             contributions: vec![],
             dropped: vec![1],
-            down_bits: 0,
-            shard_costs: Vec::new(),
+            ..Default::default()
         };
         for _ in 0..4 {
             h.note_round(&drop_round);
@@ -899,9 +907,7 @@ mod tests {
                 up_bits: 0,
                 packed_mask: vec![],
             }],
-            dropped: vec![],
-            down_bits: 0,
-            shard_costs: Vec::new(),
+            ..Default::default()
         };
         h.note_round(&ok_round);
         assert_eq!(h.miss_count(1), 2, "receipt halves the penalty");
@@ -912,8 +918,7 @@ mod tests {
         h.note_round(&RoundTraffic {
             contributions: vec![],
             dropped: vec![99],
-            down_bits: 0,
-            shard_costs: Vec::new(),
+            ..Default::default()
         });
     }
 

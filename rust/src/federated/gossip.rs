@@ -18,20 +18,45 @@
 //! itself and its neighbours**, and overrides the central aggregation
 //! hook to write the consensus (node-average) vector into the engine's
 //! global state — which is exactly what the engine then evaluates.
+//!
+//! The same protocol runs **over real sockets** via
+//! [`WirePeerTransport`] + [`run_peer`]: every node is a separate
+//! process running a tiny [`Leader`] for its graph neighbours (the TCP
+//! leader's reader-thread/event-channel/deadline/reconnect machinery,
+//! scoped by [`Leader::from_listener_subset`]), masks travel
+//! peer-to-peer one `n`-bit frame per directed edge, and a coordinator
+//! drives rounds with unbilled `PeerRound`/`Report` frames.
+//! Byte-identical to the in-process transport at the same seed and
+//! topology; semantics in `docs/GOSSIP.md`, wire format in
+//! `docs/PROTOCOL.md` §7.
 
+use std::net::TcpListener;
 use std::sync::Arc;
+use std::time::Duration;
 
-use crate::comm::CommLedger;
-use crate::config::FedConfig;
+use crate::comm::{CommLedger, EdgeCost};
+use crate::config::{FedConfig, TopologyKind};
 use crate::data::Dataset;
 use crate::metrics::RunLog;
 use crate::rng::SeedTree;
 use crate::sparse::QMatrix;
 use crate::util::error::Result;
 use crate::zampling::{DenseExecutor, LocalZampling, ProbVector};
+use crate::{bail, ensure};
 
-use super::engine::{make_policy, Contribution, RoundCtx, RoundEngine, RoundTraffic, Transport};
+use super::engine::{
+    make_policy, Contribution, DeadlinePolicy, RoundCtx, RoundEngine, RoundTraffic, Transport,
+};
+use super::protocol::{
+    decode_server, encode_client, encode_server, peek_server_frame, ClientMsg, MaskCodec,
+    ServerFrameKind, ServerMsg,
+};
+use super::transport::{Leader, Worker};
 use super::{pack_client_mask, Server};
+
+/// How long gossip processes keep retrying their startup dials
+/// (coordinator + every neighbour's listener) before giving up.
+const PEER_CONNECT_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// Undirected communication graph over `k` nodes (adjacency lists).
 #[derive(Clone, Debug)]
@@ -41,6 +66,59 @@ pub struct Topology {
 }
 
 impl Topology {
+    /// Checked constructor over explicit adjacency lists: rejects
+    /// self-loops, out-of-range neighbour ids, duplicate entries, and
+    /// asymmetric edges (an undirected graph must list every edge from
+    /// both ends) — the config-parse-time guard that used to be a
+    /// mid-round panic.  Neighbour lists are canonicalized to ascending
+    /// order, the form every consumer (participant intersection via
+    /// `binary_search`) relies on.
+    pub fn from_neighbors(neighbors: Vec<Vec<usize>>) -> Result<Self, String> {
+        crate::config::validate_topology_adjacency(&neighbors)?;
+        let neighbors = neighbors
+            .into_iter()
+            .map(|mut v| {
+                v.sort_unstable();
+                v
+            })
+            .collect();
+        Ok(Self { neighbors })
+    }
+
+    /// Build one of the named topologies over `k` nodes, erroring (not
+    /// panicking) on degenerate sizes.
+    pub fn from_kind(kind: TopologyKind, k: usize) -> Result<Self, String> {
+        if k < kind.min_nodes() {
+            return Err(format!(
+                "{} topology needs at least {} nodes, got {k}",
+                kind.as_str(),
+                kind.min_nodes()
+            ));
+        }
+        Ok(match kind {
+            TopologyKind::Complete => Self::complete(k),
+            TopologyKind::Ring => Self::ring(k),
+            TopologyKind::Star => Self::star(k),
+        })
+    }
+
+    /// Build the configured topology over `cfg.clients` nodes: an
+    /// explicit `federated.topology-adj` adjacency wins (re-validated
+    /// here), otherwise the named `federated.topology` kind.
+    pub fn from_cfg(cfg: &FedConfig) -> Result<Self, String> {
+        if !cfg.topology_adj.is_empty() {
+            if cfg.topology_adj.len() != cfg.clients {
+                return Err(format!(
+                    "topology-adj lists {} nodes for {} clients",
+                    cfg.topology_adj.len(),
+                    cfg.clients
+                ));
+            }
+            return Self::from_neighbors(cfg.topology_adj.clone());
+        }
+        Self::from_kind(cfg.topology, cfg.clients)
+    }
+
     /// Every node talks to every other node (recovers centralized).
     pub fn complete(k: usize) -> Self {
         Self {
@@ -90,13 +168,56 @@ impl Topology {
     }
 }
 
+/// Consensus (node-average) vector over every node's probabilities, in
+/// node order — **one** definition of the f32 summation order, shared
+/// by the in-process and wire transports so the byte-identity tests
+/// can never be broken by the two drifting apart.
+fn consensus_mean<'p>(nodes: impl ExactSizeIterator<Item = &'p [f32]>, n: usize) -> Vec<f32> {
+    let k = nodes.len();
+    let mut consensus = vec![0.0f32; n];
+    for node in nodes {
+        for (c, &p) in consensus.iter_mut().zip(node) {
+            *c += p;
+        }
+    }
+    for c in consensus.iter_mut() {
+        *c /= k as f32;
+    }
+    consensus
+}
+
+/// Bill node `node`'s gossip sends for a round: append one [`EdgeCost`]
+/// row per live directed edge (each *participating* neighbour) and
+/// return the live degree — the shared billing body of the in-process
+/// and wire transports (`n` bits per edge, the `num_messages()` model).
+fn bill_edges(
+    topo: &Topology,
+    node: usize,
+    participants: &[usize],
+    bits: u64,
+    out: &mut Vec<EdgeCost>,
+) -> u64 {
+    let mut degree = 0u64;
+    for &j in &topo.neighbors[node] {
+        if participants.binary_search(&j).is_ok() {
+            degree += 1;
+            out.push(EdgeCost { from: node as u32, to: j as u32, bits });
+        }
+    }
+    degree
+}
+
 /// Outcome of a decentralized run; accuracy is evaluated on the
 /// node-averaged consensus vector (what the nodes converge towards).
 pub struct GossipOutcome {
     /// Per-round consensus accuracy/loss records.
     pub log: RunLog,
-    /// Per-round communication accounting (edge messages, no downlink).
+    /// Per-round communication accounting (edge messages, no downlink),
+    /// including the per-directed-edge table (`CommLedger::edge_rounds`).
     pub ledger: CommLedger,
+    /// The final consensus (node-average) probability vector — what the
+    /// engine evaluated after the last round.
+    pub final_probs: Vec<f32>,
     /// Every node's final probability vector.
     pub node_probs: Vec<Vec<f32>>,
 }
@@ -159,6 +280,7 @@ impl Transport for PeerTransport<'_> {
         let mask_bits = ctx.n as u64; // per directed edge (raw bit-packed)
         self.round_masks.iter_mut().for_each(|m| *m = None);
         let mut contributions = Vec::with_capacity(ctx.participants.len());
+        let mut edge_costs = Vec::new();
         for &i in ctx.participants {
             let node = &mut self.nodes[i];
             node.reset_optimizer(&self.cfg.train);
@@ -172,28 +294,21 @@ impl Transport for PeerTransport<'_> {
             node.pv.sample_mask(&mut rng, &mut mask);
             let packed = pack_client_mask(&mask);
             // One mask per directed edge to a *participating* neighbour
-            // (at full participation: the node's full degree).
-            let degree = self.topo.neighbors[i]
-                .iter()
-                .filter(|&&j| ctx.participants.binary_search(&j).is_ok())
-                .count();
+            // (at full participation: the node's full degree) — each
+            // billed as its own ledger edge row.
+            let degree = bill_edges(self.topo, i, ctx.participants, mask_bits, &mut edge_costs);
             // `packed_mask` stays empty: only the engine's default
             // central aggregation reads it, and this transport overrides
             // `aggregate` to work from `round_masks` instead.
             contributions.push(Contribution {
                 client: i,
                 loss,
-                up_bits: mask_bits * degree as u64,
+                up_bits: mask_bits * degree,
                 packed_mask: Vec::new(),
             });
             self.round_masks[i] = Some(packed);
         }
-        Ok(RoundTraffic {
-            contributions,
-            dropped: Vec::new(),
-            down_bits: 0,
-            shard_costs: Vec::new(),
-        })
+        Ok(RoundTraffic { contributions, edge_costs, ..Default::default() })
     }
 
     /// Decentralized aggregation: node `i` averages its own mask with
@@ -208,7 +323,6 @@ impl Transport for PeerTransport<'_> {
     /// training epochs that precede it.
     fn aggregate(&mut self, server: &mut Server, traffic: &RoundTraffic) -> usize {
         let n = server.n();
-        let k = self.nodes.len();
         for c in &traffic.contributions {
             let i = c.client;
             let mut tiny = Server::new(vec![0.0; n]);
@@ -222,16 +336,7 @@ impl Transport for PeerTransport<'_> {
             self.nodes[i].pv.set_probs(&tiny.probs);
         }
         // Consensus over *all* nodes, in node order (fixed f32 order).
-        let mut consensus = vec![0.0f32; n];
-        for node in &self.nodes {
-            for (c, &p) in consensus.iter_mut().zip(node.pv.probs()) {
-                *c += p;
-            }
-        }
-        for c in consensus.iter_mut() {
-            *c /= k as f32;
-        }
-        server.probs = consensus;
+        server.probs = consensus_mean(self.nodes.iter().map(|s| s.pv.probs()), n);
         traffic.contributions.len()
     }
 
@@ -289,7 +394,455 @@ pub fn run_gossip(
     let out = engine
         .run(&mut transport, policy.as_mut())
         .expect("in-process transports are infallible");
-    GossipOutcome { log: out.log, ledger: out.ledger, node_probs: transport.node_probs() }
+    GossipOutcome {
+        log: out.log,
+        ledger: out.ledger,
+        final_probs: out.final_probs,
+        node_probs: transport.node_probs(),
+    }
+}
+
+/// The wire-gossip [`Transport`]: the same decentralized protocol as
+/// [`PeerTransport`], but every node is a **separate process** and masks
+/// cross real sockets.
+///
+/// Topology of processes:
+///
+/// * each peer (`repro serve-peer --node-id i`) runs a **tiny
+///   [`Leader`] for its graph neighbours** — its own listener, one
+///   reader thread per neighbour connection, the shared event channel,
+///   per-round deadlines with heartbeat extension, connection
+///   generations, and reconnect-with-`Hello`, all inherited from the
+///   TCP leader via [`Leader::from_listener_subset`] — and dials every
+///   neighbour's tiny leader as a [`Worker`], so each undirected
+///   topology edge is two TCP connections carrying one `Mask` frame per
+///   round in each direction;
+/// * this transport is the **coordinator** (`repro train-federated
+///   --transport gossip-tcp`): a full [`Leader`] over all `k` peers
+///   that kicks every round off with a `PeerRound` frame (round index +
+///   participant set — no probabilities travel) and collects one
+///   `Report` per participant (local loss + post-aggregation node
+///   probs), from which it maintains the consensus vector the engine
+///   evaluates.  Coordination frames are never billed; the billed
+///   gossip traffic is `n` bits per live directed edge, recorded per
+///   edge in the ledger's `edge_rounds` table — exactly
+///   [`PeerTransport`]'s `num_messages()` cost model.
+///
+/// With every peer alive the run is **byte-identical** to the
+/// in-process [`PeerTransport`] at the same seed and topology (pinned
+/// over loopback sockets in `tests/federated_integration.rs`).  A peer
+/// that dies mid-run is dropped by the coordinator's report collection
+/// *and* by its neighbours' mask collections, whose tiny servers then
+/// renormalize over whatever arrived — the decentralized analogue of
+/// the leader's drop semantics.
+///
+/// # Example
+///
+/// A three-node ring over loopback: three peer processes (threads
+/// here) gossip masks over real sockets while the coordinator drives
+/// one engine round end to end.
+///
+/// ```
+/// use std::net::TcpListener;
+/// use zampling::config::FedConfig;
+/// use zampling::data::Dataset;
+/// use zampling::federated::gossip::{run_gossip_wire, run_peer, Topology};
+/// use zampling::nn::ArchSpec;
+/// use zampling::rng::SeedTree;
+/// use zampling::zampling::NativeExecutor;
+///
+/// let mut cfg = FedConfig::paper(8);
+/// cfg.train.arch = ArchSpec::small();
+/// cfg.train.n = ArchSpec::small().num_params() / 8;
+/// cfg.train.d = 3;
+/// cfg.clients = 3;
+/// cfg.rounds = 1;
+/// cfg.local_epochs = 1;
+/// let seeds = SeedTree::new(cfg.train.seed);
+/// let (train, test) = Dataset::synthetic_pair(96, 32, &seeds);
+/// let shards = train.partition_iid(cfg.clients, &seeds);
+/// let topo = Topology::ring(cfg.clients);
+///
+/// // Bind everything up front (no connect races), then launch peers.
+/// let coord = TcpListener::bind("127.0.0.1:0").unwrap();
+/// let coord_addr = coord.local_addr().unwrap().to_string();
+/// let listeners: Vec<TcpListener> =
+///     (0..3).map(|_| TcpListener::bind("127.0.0.1:0").unwrap()).collect();
+/// let addrs: Vec<String> =
+///     listeners.iter().map(|l| l.local_addr().unwrap().to_string()).collect();
+/// let peers: Vec<_> = listeners
+///     .into_iter()
+///     .enumerate()
+///     .map(|(i, listener)| {
+///         let (cfg, topo, addrs, coord_addr, shard) =
+///             (cfg.clone(), topo.clone(), addrs.clone(), coord_addr.clone(), shards[i].clone());
+///         std::thread::spawn(move || {
+///             let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 32);
+///             run_peer(&cfg, &topo, i, listener, &addrs, &coord_addr, &mut exec, &shard, None)
+///                 .unwrap();
+///         })
+///     })
+///     .collect();
+///
+/// let exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 32);
+/// let out = run_gossip_wire(&cfg, &topo, coord, &test, 1, 1, Box::new(exec), false).unwrap();
+/// assert_eq!(out.node_probs.len(), 3);
+/// assert_eq!(out.ledger.edge_rounds[0].len(), topo.num_messages());
+/// for p in peers {
+///     p.join().unwrap();
+/// }
+/// ```
+pub struct WirePeerTransport {
+    topo: Topology,
+    leader: Leader,
+    exec: Box<dyn DenseExecutor>,
+    /// Last reported probability vector per node (initialized to the
+    /// shared-seed `p(0)`); non-participants and dropped peers keep
+    /// their previous entry, exactly like an in-process node whose
+    /// state nobody touched this round.
+    node_probs: Vec<Vec<f32>>,
+}
+
+impl WirePeerTransport {
+    /// Bind `addr` and wait for all `topo.len()` peers to `Hello`.
+    pub fn accept(
+        addr: &str,
+        topo: Topology,
+        init_probs: Vec<f32>,
+        exec: Box<dyn DenseExecutor>,
+    ) -> Result<Self> {
+        use crate::util::error::Context;
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding coordinator {addr}"))?;
+        Self::from_listener(listener, topo, init_probs, exec)
+    }
+
+    /// Race-free entry point over a pre-bound coordinator listener:
+    /// blocks until every one of the topology's nodes has completed a
+    /// `Hello` handshake.
+    pub fn from_listener(
+        listener: TcpListener,
+        topo: Topology,
+        init_probs: Vec<f32>,
+        exec: Box<dyn DenseExecutor>,
+    ) -> Result<Self> {
+        ensure!(!topo.is_empty(), "gossip topology has no nodes");
+        let leader = Leader::from_listener(listener, topo.len())?;
+        let node_probs = vec![init_probs; topo.len()];
+        Ok(Self { topo, leader, exec, node_probs })
+    }
+
+    /// Every node's last reported probability vector.
+    pub fn node_probs(&self) -> Vec<Vec<f32>> {
+        self.node_probs.clone()
+    }
+
+    /// The coordinator-side connection registry (byte counters live
+    /// here; this traffic is coordination, never billed to the ledger).
+    pub fn leader(&self) -> &Leader {
+        &self.leader
+    }
+}
+
+impl Transport for WirePeerTransport {
+    /// Like [`PeerTransport`]: peers never consume a central broadcast
+    /// of `p` — the coordinator ships only the tiny `PeerRound`
+    /// coordination frame — so the engine skips encoding one and the
+    /// ledger's downlink column stays 0.
+    fn wants_broadcast(&self) -> bool {
+        false
+    }
+
+    fn exchange(&mut self, ctx: &RoundCtx<'_>) -> Result<RoundTraffic> {
+        let frame = encode_server(&ServerMsg::PeerRound {
+            round: ctx.round,
+            participants: ctx.participants.iter().map(|&p| p as u32).collect(),
+        });
+        self.leader.broadcast_frame(&frame, ctx.participants)?;
+        let receipt =
+            self.leader.collect_reports(ctx.round, ctx.participants, ctx.n, ctx.deadline)?;
+
+        let mask_bits = ctx.n as u64;
+        let mut contributions = Vec::with_capacity(receipt.received.len());
+        let mut edge_costs = Vec::new();
+        let mut reports = receipt.reports;
+        for &i in &receipt.received {
+            let rep = reports[i].take().expect("received report present");
+            self.node_probs[i] = rep.probs;
+            // Per-directed-edge accounting, identical to the in-process
+            // transport: one n-bit mask per *participating* neighbour.
+            // Billing is keyed to the sender's round report, matching
+            // the centralized convention that a dropped client's round
+            // traffic never hits the ledger; an edge toward a neighbour
+            // that died mid-round IS billed — the bits left the sender.
+            let degree = bill_edges(&self.topo, i, ctx.participants, mask_bits, &mut edge_costs);
+            contributions.push(Contribution {
+                client: i,
+                loss: rep.loss,
+                up_bits: mask_bits * degree,
+                packed_mask: Vec::new(),
+            });
+        }
+        Ok(RoundTraffic {
+            contributions,
+            dropped: receipt.dropped,
+            edge_costs,
+            ..Default::default()
+        })
+    }
+
+    /// Consensus over the last known probability vector of *all* nodes,
+    /// in node order — the same fixed f32 summation as
+    /// [`PeerTransport::aggregate`], so the engine's evaluation (and
+    /// `final_probs`) stay byte-identical to the in-process run.
+    fn aggregate(&mut self, server: &mut Server, traffic: &RoundTraffic) -> usize {
+        let n = server.n();
+        server.probs = consensus_mean(self.node_probs.iter().map(|v| v.as_slice()), n);
+        traffic.contributions.len()
+    }
+
+    fn eval_executor(&mut self) -> &mut dyn DenseExecutor {
+        self.exec.as_mut()
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.leader.shutdown()
+    }
+}
+
+/// Run decentralized Zampling over real sockets: the [`RoundEngine`]
+/// over a [`WirePeerTransport`], coordinating `topo.len()` `run_peer`
+/// processes — the wire twin of [`run_gossip`], byte-identical to it
+/// when every peer stays alive.
+#[allow(clippy::too_many_arguments)]
+pub fn run_gossip_wire(
+    cfg: &FedConfig,
+    topo: &Topology,
+    listener: TcpListener,
+    test: &Dataset,
+    eval_samples: usize,
+    eval_every: usize,
+    exec: Box<dyn DenseExecutor>,
+    verbose: bool,
+) -> Result<GossipOutcome> {
+    let k = topo.len();
+    ensure!(k == cfg.clients, "topology has {k} nodes for {} clients", cfg.clients);
+    let seeds = SeedTree::new(cfg.train.seed);
+    let q = Arc::new(QMatrix::generate(&cfg.train.arch, cfg.train.n, cfg.train.d, &seeds));
+    let mut init_rng = seeds.rng("p-init", 0);
+    let p0 = ProbVector::init_uniform(cfg.train.n, &mut init_rng).probs().to_vec();
+
+    let mut transport = WirePeerTransport::from_listener(listener, topo.clone(), p0.clone(), exec)?;
+    let engine = RoundEngine::new(
+        cfg,
+        k,
+        Arc::clone(&q),
+        p0,
+        test,
+        eval_samples,
+        eval_every,
+        "federated_gossip",
+    )
+    .verbose(verbose);
+    let mut policy = make_policy(cfg.policy);
+    let out = engine.run(&mut transport, policy.as_mut())?;
+    Ok(GossipOutcome {
+        log: out.log,
+        ledger: out.ledger,
+        final_probs: out.final_probs,
+        node_probs: transport.node_probs(),
+    })
+}
+
+/// The gossip peer process body (`repro serve-peer`): run node
+/// `node_id`'s side of every wire-gossip round until the coordinator
+/// broadcasts `Shutdown`.
+///
+/// Startup is dial-then-accept and therefore launch-order-free: the
+/// caller binds this node's own listener first, the peer dials every
+/// neighbour with retry (the `Hello`s land in the OS backlog even
+/// before the remote acceptors drain them), blocks in
+/// [`Leader::from_listener_subset`] for its own neighbours'
+/// handshakes, and announces itself to the coordinator **last** — so
+/// round 0 cannot start anywhere until every peer's tiny leader is
+/// ready to collect masks.
+///
+/// Per `PeerRound` the peer trains on its own `p` (heartbeating the
+/// coordinator between local epochs), samples its mask from the
+/// `"gossip-mask"` seed stream, ships it to every participating
+/// neighbour, collects theirs under the configured deadline, averages
+/// own + received masks through a tiny [`Server`] (renormalizing over
+/// whatever arrived if a neighbour died), and reports its loss +
+/// post-aggregation probs to the coordinator.
+///
+/// `die_after_round` is the chaos knob for tests and CI: the peer
+/// exits cleanly right after reporting that round, simulating a
+/// mid-run crash for every party still running.
+#[allow(clippy::too_many_arguments)]
+pub fn run_peer(
+    cfg: &FedConfig,
+    topo: &Topology,
+    node_id: usize,
+    listener: TcpListener,
+    peer_addrs: &[String],
+    coordinator: &str,
+    exec: &mut dyn DenseExecutor,
+    shard: &Dataset,
+    die_after_round: Option<u32>,
+) -> Result<()> {
+    let k = topo.len();
+    ensure!(node_id < k, "node id {node_id} ≥ topology size {k}");
+    ensure!(peer_addrs.len() == k, "{} peer addresses for {k} nodes", peer_addrs.len());
+    let n = cfg.train.n;
+    let neighbors = &topo.neighbors[node_id];
+
+    // Identical shared-seed state to every other party (coordinator,
+    // in-process simulator): Q, p(0), this node's per-client subtree.
+    let seeds = SeedTree::new(cfg.train.seed);
+    let q = Arc::new(QMatrix::generate(&cfg.train.arch, n, cfg.train.d, &seeds));
+    let csc = Arc::new(q.to_csc(None));
+    let mut init_rng = seeds.rng("p-init", 0);
+    let p0 = ProbVector::init_uniform(n, &mut init_rng).probs().to_vec();
+    let sub = seeds.subtree("client", node_id as u64);
+    let mut node = LocalZampling::from_parts(
+        &cfg.train,
+        Arc::clone(&q),
+        Arc::clone(&csc),
+        ProbVector::from_probs(p0),
+        &sub,
+    );
+
+    // Startup order matters: dial every neighbour first (their `Hello`s
+    // land in bound backlogs, so no peer can block another), then bring
+    // this node's own tiny leader fully up, and only *then* announce
+    // readiness to the coordinator.  The coordinator starts round 0 the
+    // moment all k peers have said `Hello`, so a peer that greeted it
+    // before its tiny leader finished accepting could have a fast
+    // neighbour's round-0 mask land mid-startup — where the control
+    // loop discards `Msg` events — and then hang waiting for a mask
+    // that will never come again.
+    let mut out_links: Vec<Option<Worker>> = (0..k).map(|_| None).collect();
+    for &j in neighbors {
+        out_links[j] = Some(Worker::connect_retry(
+            &peer_addrs[j],
+            node_id as u32,
+            MaskCodec::Raw,
+            PEER_CONNECT_TIMEOUT,
+        )?);
+    }
+    // This node's tiny leader over exactly its neighbours (slots are
+    // indexed by global node id; an isolated node skips the machinery).
+    let mut tiny_leader = if neighbors.is_empty() {
+        None
+    } else {
+        Some(Leader::from_listener_subset(listener, k, neighbors)?)
+    };
+    let mut coord =
+        Worker::connect_retry(coordinator, node_id as u32, MaskCodec::Raw, PEER_CONNECT_TIMEOUT)?;
+    let deadline = DeadlinePolicy::from_cfg(cfg);
+
+    loop {
+        let frame = coord.recv_raw()?;
+        let (round, participants) = match peek_server_frame(&frame)? {
+            ServerFrameKind::Shutdown => return Ok(()),
+            ServerFrameKind::PeerRound => {
+                let ServerMsg::PeerRound { round, participants } = decode_server(&frame)? else {
+                    bail!("peer {node_id}: PeerRound peek/decode disagree");
+                };
+                let participants: Vec<usize> =
+                    participants.into_iter().map(|p| p as usize).collect();
+                if let Some(&bad) = participants.iter().find(|&&p| p >= k) {
+                    bail!("peer {node_id}: participant id {bad} ≥ topology size {k}");
+                }
+                (round, participants)
+            }
+            ServerFrameKind::Round => {
+                bail!("peer {node_id}: unexpected centralized Round frame on the gossip wire")
+            }
+        };
+        if participants.binary_search(&node_id).is_err() {
+            continue; // not selected this round (defensive: not broadcast to us)
+        }
+
+        // Local training-by-sampling on this node's own p, heartbeating
+        // the coordinator between epochs so its report deadline can be
+        // extended for slow-but-alive peers.
+        node.reset_optimizer(&cfg.train);
+        let mut loss = 0.0;
+        for epoch in 0..cfg.local_epochs {
+            loss = node.run_epoch(exec, shard, cfg.train.batch);
+            if epoch + 1 < cfg.local_epochs {
+                // Beat the coordinator *and* every neighbour's tiny
+                // leader, so both report and mask collection deadlines
+                // can be heartbeat-extended for a slow-but-alive peer.
+                // Like serve-client, beats only flow between local
+                // epochs — extension needs local-epochs ≥ 2.
+                let _ = coord.send_heartbeat();
+                for &j in neighbors {
+                    if let Some(w) = out_links[j].as_mut() {
+                        let _ = w.send_heartbeat();
+                    }
+                }
+            }
+        }
+        let mut rng = seeds.subtree("client", node_id as u64).rng("gossip-mask", round as u64);
+        let mut mask = Vec::new();
+        node.pv.sample_mask(&mut rng, &mut mask);
+
+        // Gossip: ship the mask to every participating neighbour (a
+        // failed send means that neighbour is dead — its own collection
+        // below renormalizes without us, so we just carry on), then
+        // collect theirs under the deadline.
+        let live: Vec<usize> = neighbors
+            .iter()
+            .copied()
+            .filter(|j| participants.binary_search(j).is_ok())
+            .collect();
+        for &j in &live {
+            if let Some(w) = out_links[j].as_mut() {
+                let _ = w.send_mask(round, mask.clone());
+            }
+        }
+        // Average own + received masks through a tiny per-node Server —
+        // the exact aggregation (and u32 → f32 division) the in-process
+        // transport runs, renormalized over whatever actually arrived.
+        let mut tiny = Server::new(vec![0.0; n]);
+        tiny.receive_mask(&pack_client_mask(&mask));
+        if let (Some(leader), false) = (tiny_leader.as_mut(), live.is_empty()) {
+            // About to block for up to a full mask deadline: prove
+            // liveness to the coordinator first, so (with a configured
+            // round-timeout-max-ms cap) its report deadline extends by
+            // one more timeout to cover this nested wait.  This bounds
+            // — it does not fully eliminate — the cascade where a
+            // *stalled* neighbour makes the coordinator drop the live
+            // peers merely waiting on it; see docs/GOSSIP.md
+            // §"Deadline composition" for the sizing rule.
+            let _ = coord.send_heartbeat();
+            let receipt = leader.collect_masks(round, &live, n, deadline)?;
+            for &j in neighbors {
+                if let Some(m) = &receipt.masks[j] {
+                    tiny.receive_mask(&pack_client_mask(m));
+                }
+            }
+        }
+        tiny.try_aggregate();
+        node.pv.set_probs(&tiny.probs);
+
+        // Report loss + post-aggregation probs to the coordinator.
+        coord.send_frame(&encode_client(
+            &ClientMsg::Report {
+                round,
+                client: node_id as u32,
+                loss,
+                probs: node.pv.probs().to_vec(),
+            },
+            MaskCodec::Raw,
+        ))?;
+
+        if die_after_round == Some(round) {
+            return Ok(()); // chaos knob: simulate a mid-run crash
+        }
+    }
 }
 
 #[cfg(test)]
@@ -330,6 +883,42 @@ mod tests {
         assert_eq!(Topology::complete(5).num_messages(), 20);
         assert_eq!(Topology::ring(5).num_messages(), 10);
         assert_eq!(Topology::star(5).num_messages(), 8);
+    }
+
+    #[test]
+    fn topology_validation_rejects_malformed_adjacency() {
+        // a valid custom graph canonicalizes neighbour order
+        let topo = Topology::from_neighbors(vec![vec![2, 1], vec![0], vec![0]]).unwrap();
+        assert_eq!(topo.neighbors[0], vec![1, 2]);
+        // self-loops, out-of-range ids, asymmetric edges, duplicates
+        assert!(Topology::from_neighbors(vec![vec![0], vec![]]).is_err());
+        assert!(Topology::from_neighbors(vec![vec![5], vec![0]]).is_err());
+        assert!(Topology::from_neighbors(vec![vec![1], vec![]]).is_err());
+        assert!(Topology::from_neighbors(vec![vec![1, 1], vec![0, 0]]).is_err());
+        // named kinds reject degenerate sizes instead of panicking
+        assert!(Topology::from_kind(TopologyKind::Ring, 1).is_err());
+        assert!(Topology::from_kind(TopologyKind::Star, 1).is_err());
+        assert!(Topology::from_kind(TopologyKind::Complete, 0).is_err());
+        assert_eq!(Topology::from_kind(TopologyKind::Ring, 5).unwrap().num_messages(), 10);
+    }
+
+    #[test]
+    fn gossip_edge_ledger_reconciles_with_uplink_totals() {
+        let (cfg, shards, test) = ci_setup();
+        let topo = Topology::ring(cfg.clients);
+        let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500);
+        let out = run_gossip(&cfg, &topo, &mut exec, &shards, &test, 2, 3);
+        assert_eq!(out.ledger.edge_rounds.len(), out.ledger.rounds.len());
+        for (round, edges) in out.ledger.rounds.iter().zip(&out.ledger.edge_rounds) {
+            assert_eq!(edges.len(), topo.num_messages());
+            assert_eq!(edges.iter().map(|e| e.bits).sum::<u64>(), round.uplink_bits);
+        }
+        assert_eq!(out.ledger.total_edge_bits(), out.ledger.total_uplink_bits());
+        // every node sends and receives its ring degree's worth of bits
+        for (sent, recv) in out.ledger.node_edge_totals(cfg.clients) {
+            assert_eq!(sent, cfg.rounds as u64 * 2 * cfg.train.n as u64);
+            assert_eq!(recv, sent);
+        }
     }
 
     #[test]
@@ -517,11 +1106,18 @@ mod tests {
                 });
             }
         }
-        GossipOutcome {
-            log,
-            ledger,
-            node_probs: nodes.into_iter().map(|s| s.pv.probs().to_vec()).collect(),
+        let node_probs: Vec<Vec<f32>> =
+            nodes.into_iter().map(|s| s.pv.probs().to_vec()).collect();
+        let mut final_probs = vec![0.0f32; n];
+        for node in &node_probs {
+            for (c, &p) in final_probs.iter_mut().zip(node) {
+                *c += p;
+            }
         }
+        for c in final_probs.iter_mut() {
+            *c /= k as f32;
+        }
+        GossipOutcome { log, ledger, final_probs, node_probs }
     }
 
     #[test]
@@ -534,6 +1130,7 @@ mod tests {
             let mut e2 = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500);
             let new = run_gossip(&cfg, &topo, &mut e2, &shards, &test, 3, 2);
             assert_eq!(new.node_probs, legacy.node_probs, "node probs diverged on {topo:?}");
+            assert_eq!(new.final_probs, legacy.final_probs, "consensus diverged on {topo:?}");
             assert_eq!(new.ledger.rounds.len(), legacy.ledger.rounds.len());
             for (a, b) in new.ledger.rounds.iter().zip(&legacy.ledger.rounds) {
                 assert_eq!(a.uplink_bits, b.uplink_bits);

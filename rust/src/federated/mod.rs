@@ -23,7 +23,8 @@
 //! Since the `RoundEngine` redesign there is exactly **one** round loop
 //! ([`engine::RoundEngine`]), generic over [`engine::Transport`]
 //! (in-process sequential, pool-parallel, TCP leader, sharded
-//! multi-leader, gossip peers) and [`engine::ParticipationPolicy`]
+//! multi-leader, gossip peers — in-process and over real sockets) and
+//! [`engine::ParticipationPolicy`]
 //! (uniform, straggler-aware); the historical drivers are thin
 //! constructors over it.  See the repo-root `ARCHITECTURE.md` for the
 //! full module map and `docs/PROTOCOL.md` for the wire format.

@@ -27,6 +27,17 @@ pub enum ServerMsg {
         /// The global probability vector `p(t)`.
         probs: Vec<f32>,
     },
+    /// Gossip round kick-off (coordinator → peer): no probabilities
+    /// travel — each peer trains on its **own** `p` — only the round
+    /// index and the round's participant set, which tells every peer
+    /// which of its topology edges are live this round.  A coordination
+    /// frame: never billed to the comm ledger (see `docs/GOSSIP.md`).
+    PeerRound {
+        /// The round index.
+        round: u32,
+        /// This round's participating node ids, strictly ascending.
+        participants: Vec<u32>,
+    },
     /// Training is over; workers exit.
     Shutdown,
 }
@@ -62,6 +73,24 @@ pub enum ClientMsg {
     Heartbeat {
         /// The pinging client id.
         client: u32,
+    },
+    /// Gossip round report (peer → coordinator): the peer's local
+    /// training loss and its **post-aggregation** probability vector,
+    /// from which the coordinator maintains the consensus (node-average)
+    /// state the engine evaluates.  Like `PeerRound` this is
+    /// coordination traffic, never billed to the ledger — the billed
+    /// gossip traffic is the `n` bits per directed edge the `Mask`
+    /// frames carry between peers.
+    Report {
+        /// The round the report belongs to.
+        round: u32,
+        /// The reporting node's id (must match its `Hello`).
+        client: u32,
+        /// Final local training loss this round.
+        loss: f64,
+        /// The node's probability vector after neighbour aggregation
+        /// (every entry must be finite and in `[0, 1]`).
+        probs: Vec<f32>,
     },
 }
 
@@ -102,6 +131,12 @@ pub enum ShardMsg {
 /// ~60× the paper's largest model (MnistFc m = 266,610).
 pub const MAX_MASK_LEN: usize = 1 << 24;
 
+/// Upper bound on a wire-supplied `PeerRound` participant count.  The
+/// decoder allocates the id vector before reading it, so a forged count
+/// must be capped before allocation — 2²⁰ nodes is far past any gossip
+/// graph this stack will ever coordinate.
+pub const MAX_PEER_COUNT: usize = 1 << 20;
+
 const TAG_ROUND: u8 = 1;
 const TAG_SHUTDOWN: u8 = 2;
 const TAG_MASK_RAW: u8 = 3;
@@ -110,6 +145,8 @@ const TAG_HELLO: u8 = 5;
 const TAG_ABORT: u8 = 6;
 const TAG_HEARTBEAT: u8 = 7;
 const TAG_SHARD_VOTES: u8 = 8;
+const TAG_PEER_ROUND: u8 = 9;
+const TAG_PEER_REPORT: u8 = 10;
 
 fn frame(tag: u8, payload: &[u8]) -> Vec<u8> {
     let mut out = Vec::with_capacity(5 + payload.len());
@@ -127,6 +164,15 @@ pub fn encode_server(msg: &ServerMsg) -> Vec<u8> {
             payload.extend_from_slice(&round.to_le_bytes());
             payload.extend_from_slice(&FloatVec::encode(probs));
             frame(TAG_ROUND, &payload)
+        }
+        ServerMsg::PeerRound { round, participants } => {
+            let mut payload = Vec::with_capacity(8 + participants.len() * 4);
+            payload.extend_from_slice(&round.to_le_bytes());
+            payload.extend_from_slice(&(participants.len() as u32).to_le_bytes());
+            for id in participants {
+                payload.extend_from_slice(&id.to_le_bytes());
+            }
+            frame(TAG_PEER_ROUND, &payload)
         }
         ServerMsg::Shutdown => frame(TAG_SHUTDOWN, &[]),
     }
@@ -151,6 +197,15 @@ pub fn encode_client(msg: &ClientMsg, codec: MaskCodec) -> Vec<u8> {
         ClientMsg::Hello { client } => frame(TAG_HELLO, &client.to_le_bytes()),
         ClientMsg::Abort { client } => frame(TAG_ABORT, &client.to_le_bytes()),
         ClientMsg::Heartbeat { client } => frame(TAG_HEARTBEAT, &client.to_le_bytes()),
+        ClientMsg::Report { round, client, loss, probs } => {
+            let mut payload = Vec::with_capacity(20 + probs.len() * 4);
+            payload.extend_from_slice(&round.to_le_bytes());
+            payload.extend_from_slice(&client.to_le_bytes());
+            payload.extend_from_slice(&(probs.len() as u32).to_le_bytes());
+            payload.extend_from_slice(&loss.to_le_bytes());
+            payload.extend_from_slice(&FloatVec::encode(probs));
+            frame(TAG_PEER_REPORT, &payload)
+        }
     }
 }
 
@@ -230,6 +285,31 @@ pub fn decode_server(buf: &[u8]) -> Result<ServerMsg> {
             let round = u32::from_le_bytes(p[..4].try_into().unwrap());
             Ok(ServerMsg::Round { round, probs: FloatVec::decode(&p[4..]) })
         }
+        TAG_PEER_ROUND => {
+            if p.len() < 8 {
+                bail!("bad PeerRound payload length {}", p.len());
+            }
+            let round = u32::from_le_bytes(p[0..4].try_into().unwrap());
+            let count = u32::from_le_bytes(p[4..8].try_into().unwrap()) as usize;
+            if count > MAX_PEER_COUNT {
+                bail!("participant count {count} exceeds protocol maximum {MAX_PEER_COUNT}");
+            }
+            if p.len() - 8 != count * 4 {
+                bail!("PeerRound body {} bytes, want {}", p.len() - 8, count * 4);
+            }
+            let mut participants = Vec::with_capacity(count);
+            for chunk in p[8..].chunks_exact(4) {
+                let id = u32::from_le_bytes(chunk.try_into().unwrap());
+                // Strictly ascending ⇒ sorted and duplicate-free: the
+                // canonical form every consumer (binary_search over the
+                // set) relies on, enforced at the wire boundary.
+                if participants.last().is_some_and(|&prev| id <= prev) {
+                    bail!("PeerRound participants not strictly ascending at id {id}");
+                }
+                participants.push(id);
+            }
+            Ok(ServerMsg::PeerRound { round, participants })
+        }
         TAG_SHUTDOWN => Ok(ServerMsg::Shutdown),
         t => bail!("unexpected server tag {t}"),
     }
@@ -254,6 +334,8 @@ pub enum ClientFrameKind {
     Abort,
     /// A liveness `Heartbeat`.
     Heartbeat,
+    /// A gossip-round `Report` (peer → coordinator).
+    Report,
 }
 
 /// What a server frame claims to be, from a cheap header peek.
@@ -261,6 +343,8 @@ pub enum ClientFrameKind {
 pub enum ServerFrameKind {
     /// A `Round` broadcast carrying the global probabilities.
     Round,
+    /// A gossip `PeerRound` kick-off carrying the participant set.
+    PeerRound,
     /// The end-of-training `Shutdown`.
     Shutdown,
 }
@@ -272,6 +356,7 @@ pub fn peek_server_frame(buf: &[u8]) -> Result<ServerFrameKind> {
     let (tag, _p) = split_frame(buf)?;
     match tag {
         TAG_ROUND => Ok(ServerFrameKind::Round),
+        TAG_PEER_ROUND => Ok(ServerFrameKind::PeerRound),
         TAG_SHUTDOWN => Ok(ServerFrameKind::Shutdown),
         t => bail!("unexpected server tag {t}"),
     }
@@ -294,6 +379,12 @@ pub fn peek_client_frame(buf: &[u8]) -> Result<(ClientFrameKind, u32)> {
         TAG_HELLO => Ok((ClientFrameKind::Hello, decode_client_id(p, "Hello")?)),
         TAG_ABORT => Ok((ClientFrameKind::Abort, decode_client_id(p, "Abort")?)),
         TAG_HEARTBEAT => Ok((ClientFrameKind::Heartbeat, decode_client_id(p, "Heartbeat")?)),
+        TAG_PEER_REPORT => {
+            if p.len() < 20 {
+                bail!("bad Report payload length {}", p.len());
+            }
+            Ok((ClientFrameKind::Report, u32::from_le_bytes(p[4..8].try_into().unwrap())))
+        }
         t => bail!("unexpected client tag {t}"),
     }
 }
@@ -327,6 +418,35 @@ pub fn decode_client(buf: &[u8]) -> Result<ClientMsg> {
         TAG_HELLO => Ok(ClientMsg::Hello { client: decode_client_id(p, "Hello")? }),
         TAG_ABORT => Ok(ClientMsg::Abort { client: decode_client_id(p, "Abort")? }),
         TAG_HEARTBEAT => Ok(ClientMsg::Heartbeat { client: decode_client_id(p, "Heartbeat")? }),
+        TAG_PEER_REPORT => {
+            if p.len() < 20 {
+                bail!("bad Report payload length {}", p.len());
+            }
+            let round = u32::from_le_bytes(p[0..4].try_into().unwrap());
+            let client = u32::from_le_bytes(p[4..8].try_into().unwrap());
+            let n = u32::from_le_bytes(p[8..12].try_into().unwrap()) as usize;
+            if n > MAX_MASK_LEN {
+                bail!("report length {n} exceeds protocol maximum {MAX_MASK_LEN}");
+            }
+            if p.len() - 20 != n * 4 {
+                bail!("Report body {} bytes, want {}", p.len() - 20, n * 4);
+            }
+            // `loss` is advisory telemetry (it only feeds the run
+            // log's train_loss column, never the model state), so it is
+            // carried verbatim — a peer whose training honestly
+            // diverged reports inf/NaN exactly like an in-process node
+            // would log it, instead of being ejected as a protocol
+            // violator.  The probs below DO feed the consensus mean and
+            // are strictly validated.
+            let loss = f64::from_le_bytes(p[12..20].try_into().unwrap());
+            let probs = FloatVec::decode(&p[20..]);
+            // A probability outside [0, 1] (or NaN) would poison the
+            // coordinator's consensus mean: rejected, never averaged.
+            if let Some(bad) = probs.iter().find(|v| !(0.0..=1.0).contains(*v)) {
+                bail!("report probability {bad} outside [0, 1]");
+            }
+            Ok(ClientMsg::Report { round, client, loss, probs })
+        }
         t => bail!("unexpected client tag {t}"),
     }
 }
@@ -503,6 +623,73 @@ mod tests {
         let mut frame = encode_shard(&msg);
         // patch votes[0] (payload offset 16) to 3 > received = 2
         frame[5 + 16..5 + 20].copy_from_slice(&3u32.to_le_bytes());
+        assert!(decode_shard(&frame).is_err());
+    }
+
+    #[test]
+    fn peer_round_roundtrip_and_rejects_malformed_frames() {
+        let msg = ServerMsg::PeerRound { round: 4, participants: vec![0, 2, 5] };
+        let frame = encode_server(&msg);
+        assert_eq!(decode_server(&frame).unwrap(), msg);
+        // fixed wire size: header + 8-byte preamble + 4 bytes per id
+        assert_eq!(frame.len(), 5 + 8 + 3 * 4);
+        assert_eq!(peek_server_frame(&frame).unwrap(), ServerFrameKind::PeerRound);
+        // an empty participant set is legal (a fully-skipped round)
+        let empty = ServerMsg::PeerRound { round: 0, participants: vec![] };
+        assert_eq!(decode_server(&encode_server(&empty)).unwrap(), empty);
+        // truncated body (patched length) errors
+        let mut bad = frame[..frame.len() - 2].to_vec();
+        let plen = (bad.len() - 5) as u32;
+        bad[1..5].copy_from_slice(&plen.to_le_bytes());
+        assert!(decode_server(&bad).is_err());
+        // a forged count must be rejected before any allocation
+        let mut forged = frame.clone();
+        forged[5 + 4..5 + 8].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_server(&forged).is_err());
+        // non-ascending (or duplicate) ids are rejected: not canonical
+        for ids in [vec![2u32, 0, 5], vec![0, 2, 2]] {
+            let bad = encode_server(&ServerMsg::PeerRound { round: 4, participants: ids });
+            assert!(decode_server(&bad).is_err());
+        }
+    }
+
+    #[test]
+    fn peer_report_roundtrip_and_rejects_poisoned_values() {
+        let msg = ClientMsg::Report {
+            round: 7,
+            client: 2,
+            loss: 0.125,
+            probs: vec![0.0, 0.5, 1.0],
+        };
+        let frame = encode_client(&msg, MaskCodec::Raw);
+        assert_eq!(decode_client(&frame).unwrap(), msg);
+        assert_eq!(frame.len(), 5 + 20 + 3 * 4);
+        assert_eq!(peek_client_frame(&frame).unwrap(), (ClientFrameKind::Report, 2));
+        // truncated body (patched length) errors
+        let mut bad = frame[..frame.len() - 2].to_vec();
+        let plen = (bad.len() - 5) as u32;
+        bad[1..5].copy_from_slice(&plen.to_le_bytes());
+        assert!(decode_client(&bad).is_err());
+        // forged n rejected before allocation
+        let mut forged = frame.clone();
+        forged[5 + 8..5 + 12].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_client(&forged).is_err());
+        // loss is advisory telemetry: carried verbatim, even non-finite
+        // (an honestly diverging peer must not be ejected as malicious)
+        let mut inf_loss = frame.clone();
+        inf_loss[5 + 12..5 + 20].copy_from_slice(&f64::INFINITY.to_le_bytes());
+        let ClientMsg::Report { loss, .. } = decode_client(&inf_loss).unwrap() else {
+            panic!("expected a Report");
+        };
+        assert_eq!(loss, f64::INFINITY);
+        // a probability outside [0, 1] would skew the consensus mean
+        for poison in [2.0f32, -0.5, f32::NAN] {
+            let mut bad = frame.clone();
+            bad[5 + 20..5 + 24].copy_from_slice(&poison.to_le_bytes());
+            assert!(decode_client(&bad).is_err(), "accepted prob {poison}");
+        }
+        // server/shard decoders reject the report tag
+        assert!(decode_server(&frame).is_err());
         assert!(decode_shard(&frame).is_err());
     }
 

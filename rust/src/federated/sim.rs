@@ -228,12 +228,7 @@ impl Transport for InProcessTransport<'_> {
                 packed_mask: out.packed_mask,
             });
         }
-        Ok(RoundTraffic {
-            contributions,
-            dropped: Vec::new(),
-            down_bits,
-            shard_costs: Vec::new(),
-        })
+        Ok(RoundTraffic { contributions, down_bits, ..Default::default() })
     }
 
     fn eval_executor(&mut self) -> &mut dyn DenseExecutor {
@@ -344,12 +339,7 @@ impl Transport for PoolTransport<'_> {
                 packed_mask: out.packed_mask,
             });
         }
-        Ok(RoundTraffic {
-            contributions,
-            dropped: Vec::new(),
-            down_bits,
-            shard_costs: Vec::new(),
-        })
+        Ok(RoundTraffic { contributions, down_bits, ..Default::default() })
     }
 
     fn eval_executor(&mut self) -> &mut dyn DenseExecutor {
@@ -493,7 +483,7 @@ impl Transport for ShardedSimTransport<'_> {
             });
             self.pending_votes.push(votes_frame);
         }
-        Ok(RoundTraffic { contributions, dropped, down_bits, shard_costs })
+        Ok(RoundTraffic { contributions, dropped, down_bits, shard_costs, edge_costs: Vec::new() })
     }
 
     /// Root-side merge over the encoded `ShardVotes` frames — literally

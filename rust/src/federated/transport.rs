@@ -40,7 +40,7 @@
 //! design.
 
 use std::io::{Read, Write};
-use std::net::{Shutdown, TcpListener, TcpStream};
+use std::net::{Shutdown, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
@@ -124,7 +124,7 @@ fn read_loop(mut stream: TcpStream, client: u32, conn: u64, tx: Sender<Event>) {
                     return; // leader is gone
                 }
             }
-            Ok((ClientFrameKind::Mask, owner)) if owner == client => {
+            Ok((ClientFrameKind::Mask | ClientFrameKind::Report, owner)) if owner == client => {
                 if tx.send(Event::Msg { client, conn, frame }).is_err() {
                     return; // leader is gone
                 }
@@ -189,6 +189,52 @@ pub struct RoundReceipt {
     pub dropped: Vec<usize>,
     /// Total mask-frame bytes received.
     pub bytes: u64,
+}
+
+/// One peer's decoded gossip `Report` (see [`Leader::collect_reports`]).
+#[derive(Clone, Debug)]
+pub struct PeerReport {
+    /// The peer's final local training loss this round.
+    pub loss: f64,
+    /// The peer's probability vector after neighbour aggregation.
+    pub probs: Vec<f32>,
+}
+
+/// What one gossip report-collection deadline produced — the
+/// coordinator-side analogue of [`RoundReceipt`].
+#[derive(Debug)]
+pub struct ReportReceipt {
+    /// Reports indexed by node id; `None` for non-participants + drops.
+    pub reports: Vec<Option<PeerReport>>,
+    /// Participants whose report arrived, ascending.
+    pub received: Vec<usize>,
+    /// Participants whose report did not arrive, ascending.
+    pub dropped: Vec<usize>,
+}
+
+/// How the collection loop judged one dequeued round frame.
+enum Judged<T> {
+    /// A valid contribution for the current round.
+    Accept(T),
+    /// A well-formed frame for some other round (a straggler catching
+    /// up): discarded; the sender stays pending.
+    Stale,
+    /// Malformed or aggregation-corrupting: the sender's connection is
+    /// killed and it is dropped for the round.
+    Violation,
+}
+
+/// What the generic collection loop produced (the shared shape behind
+/// [`RoundReceipt`] and [`ReportReceipt`]).
+struct Collected<T> {
+    /// Accepted items indexed by client id.
+    items: Vec<Option<T>>,
+    /// Encoded frame bytes per client id (0 where nothing arrived).
+    frame_bytes: Vec<u64>,
+    /// Participants whose frame never arrived, ascending.
+    dropped: Vec<usize>,
+    /// Total accepted frame bytes.
+    bytes: u64,
 }
 
 /// Leader-side connection registry: accepts `expected` workers, keeps
@@ -418,12 +464,75 @@ impl Leader {
         n: usize,
         deadline: DeadlinePolicy,
     ) -> Result<RoundReceipt> {
+        let mut judge = |frame: &[u8]| match decode_client(frame) {
+            Ok(ClientMsg::Mask { round: r, mask, .. }) if r == round && mask.len() == n => {
+                Judged::Accept(mask)
+            }
+            // straggler mask for a finished round: discard
+            Ok(ClientMsg::Mask { round: r, .. }) if r != round => Judged::Stale,
+            // Malformed body or wrong-length mask would corrupt
+            // aggregation: protocol violation, connection dropped.
+            _ => Judged::Violation,
+        };
+        let c = self.collect_round(participants, deadline, &mut judge)?;
+        let received: Vec<usize> =
+            participants.iter().copied().filter(|&k| c.items[k].is_some()).collect();
+        Ok(RoundReceipt {
+            masks: c.items,
+            frame_bytes: c.frame_bytes,
+            received,
+            dropped: c.dropped,
+            bytes: c.bytes,
+        })
+    }
+
+    /// Collect one gossip `Report` carrying an `n`-entry probability
+    /// vector from each of `participants` for `round` — the coordinator
+    /// side of the wire-gossip round, with exactly the semantics of
+    /// [`Self::collect_masks`] (arrival order, deadline + heartbeat
+    /// extension, drop-instead-of-block, stale-round discard).
+    pub fn collect_reports(
+        &mut self,
+        round: u32,
+        participants: &[usize],
+        n: usize,
+        deadline: DeadlinePolicy,
+    ) -> Result<ReportReceipt> {
+        let mut judge = |frame: &[u8]| match decode_client(frame) {
+            Ok(ClientMsg::Report { round: r, loss, probs, .. })
+                if r == round && probs.len() == n =>
+            {
+                Judged::Accept(PeerReport { loss, probs })
+            }
+            // straggler report for a finished round: discard
+            Ok(ClientMsg::Report { round: r, .. }) if r != round => Judged::Stale,
+            // Malformed body or wrong-length probs would corrupt the
+            // consensus: protocol violation, connection dropped.
+            _ => Judged::Violation,
+        };
+        let c = self.collect_round(participants, deadline, &mut judge)?;
+        let received: Vec<usize> =
+            participants.iter().copied().filter(|&k| c.items[k].is_some()).collect();
+        Ok(ReportReceipt { reports: c.items, received, dropped: c.dropped })
+    }
+
+    /// The one collection event loop behind [`Self::collect_masks`] and
+    /// [`Self::collect_reports`]: dequeue events until every pending
+    /// participant contributed a `judge`-accepted frame or the deadline
+    /// passes, handling reconnects, disconnects, heartbeat extension,
+    /// and stale-generation leftovers identically for every frame kind.
+    fn collect_round<T>(
+        &mut self,
+        participants: &[usize],
+        deadline: DeadlinePolicy,
+        judge: &mut dyn FnMut(&[u8]) -> Judged<T>,
+    ) -> Result<Collected<T>> {
         for &k in participants {
             ensure!(k < self.expected, "participant id {k} ≥ expected {}", self.expected);
         }
         let start = Instant::now();
         let mut deadline_at = deadline.timeout.map(|t| start + t);
-        let mut masks: Vec<Option<Vec<bool>>> = (0..self.expected).map(|_| None).collect();
+        let mut items: Vec<Option<T>> = (0..self.expected).map(|_| None).collect();
         let mut frame_bytes = vec![0u64; self.expected];
         let mut dropped: Vec<usize> =
             participants.iter().copied().filter(|&k| self.slots[k].is_none()).collect();
@@ -508,22 +617,15 @@ impl Leader {
                     // Decode at dequeue time — the frame was only
                     // header-peeked by the reader thread.
                     let frame_len = frame.len();
-                    match decode_client(&frame) {
-                        Ok(ClientMsg::Mask { round: r, mask, .. })
-                            if r == round && mask.len() == n =>
-                        {
+                    match judge(&frame) {
+                        Judged::Accept(item) => {
                             pending.remove(i);
-                            masks[k] = Some(mask);
+                            items[k] = Some(item);
                             frame_bytes[k] = frame_len as u64;
                             bytes += frame_len as u64;
                         }
-                        Ok(ClientMsg::Mask { round: r, .. }) if r != round => {
-                            // straggler mask for a finished round: discard
-                        }
-                        _ => {
-                            // Malformed body or wrong-length mask would
-                            // corrupt aggregation: protocol violation,
-                            // connection dropped.
+                        Judged::Stale => {}
+                        Judged::Violation => {
                             self.kill(k);
                             pending.remove(i);
                             dropped.push(k);
@@ -534,13 +636,11 @@ impl Leader {
         }
 
         // Anything still pending at the deadline is dropped this round
-        // (the connection stays; a late mask is discarded next round).
+        // (the connection stays; a late frame is discarded next round).
         dropped.extend(pending);
         dropped.sort_unstable();
         self.recv_bytes += bytes;
-        let received: Vec<usize> =
-            participants.iter().copied().filter(|&k| masks[k].is_some()).collect();
-        Ok(RoundReceipt { masks, frame_bytes, received, dropped, bytes })
+        Ok(Collected { items, frame_bytes, dropped, bytes })
     }
 
     /// Broadcast `Shutdown` to every connected worker.
@@ -590,7 +690,7 @@ impl Transport for TcpTransport {
             contributions,
             dropped: receipt.dropped,
             down_bits: (ctx.frame.len() * receivers) as u64 * 8,
-            shard_costs: Vec::new(),
+            ..Default::default()
         })
     }
 
@@ -666,7 +766,7 @@ struct ShardExchange {
 ///                         let mask = probs.iter().map(|&p| p > 0.5).collect();
 ///                         w.send_mask(round, mask).unwrap();
 ///                     }
-///                     ServerMsg::Shutdown => break,
+///                     _ => break,
 ///                 }
 ///             }
 ///         })
@@ -833,7 +933,7 @@ impl Transport for ShardedTransport {
             self.pending_votes.push(ex.votes_frame);
         }
         dropped.sort_unstable();
-        Ok(RoundTraffic { contributions, dropped, down_bits, shard_costs })
+        Ok(RoundTraffic { contributions, dropped, down_bits, shard_costs, edge_costs: Vec::new() })
     }
 
     /// Root-side merge: decode each shard's `ShardVotes` frame and fold
@@ -872,6 +972,56 @@ impl Worker {
         stream.set_nodelay(true).ok();
         write_frame(&mut stream, &encode_client(&ClientMsg::Hello { client: client_id }, codec))?;
         Ok(Worker { stream, client_id, codec })
+    }
+
+    /// [`Self::connect`], retrying **any** dial failure (50 ms
+    /// backoff) until `timeout` elapses, then surfacing the last
+    /// error.  Each attempt uses `TcpStream::connect_timeout` with the
+    /// remaining budget, so even a blackholed address (SYNs silently
+    /// dropped — the OS-level connect would otherwise block for
+    /// minutes) respects the overall bound.  Gossip peers bind their
+    /// own listener first and then dial every neighbour, so at startup
+    /// a peer routinely dials a neighbour whose process hasn't bound
+    /// its port yet — retrying instead of erroring makes peer launch
+    /// order irrelevant.  The kind-blind retry is deliberate: the
+    /// crate's string-backed error type erases `io::ErrorKind`, and a
+    /// permanently-bad address just costs the bounded timeout before
+    /// the underlying error (with the dialed address attached) reaches
+    /// the operator.  The `Hello` itself needs no retry: once the
+    /// remote listener is bound, the OS backlog accepts the connection
+    /// even before the remote `Leader` starts draining it.
+    pub fn connect_retry(
+        addr: &str,
+        client_id: u32,
+        codec: MaskCodec,
+        timeout: Duration,
+    ) -> Result<Worker> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let remaining = deadline
+                .saturating_duration_since(Instant::now())
+                .max(Duration::from_millis(1));
+            let attempt = (|| -> Result<Worker> {
+                let sock = addr
+                    .to_socket_addrs()
+                    .with_context(|| format!("resolving {addr}"))?
+                    .next()
+                    .ok_or_else(|| anyhow!("{addr} resolved to no address"))?;
+                let mut stream = TcpStream::connect_timeout(&sock, remaining)
+                    .with_context(|| format!("connecting {addr}"))?;
+                stream.set_nodelay(true).ok();
+                let hello = encode_client(&ClientMsg::Hello { client: client_id }, codec);
+                write_frame(&mut stream, &hello)?;
+                Ok(Worker { stream, client_id, codec })
+            })();
+            match attempt {
+                Ok(w) => return Ok(w),
+                Err(e) if Instant::now() >= deadline => {
+                    return Err(e).with_context(|| format!("dialing {addr} for {timeout:?}"))
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(50)),
+            }
+        }
     }
 
     /// Block for the next server frame's raw bytes (the exact input
@@ -962,7 +1112,7 @@ mod tests {
                             let mask: Vec<bool> = probs.iter().map(|&p| p > 0.25).collect();
                             w.send_mask(round, mask)?;
                         }
-                        ServerMsg::Shutdown => return Ok(()),
+                        _ => return Ok(()),
                     }
                 }
             }));
@@ -1095,7 +1245,7 @@ mod tests {
                             let mask: Vec<bool> = probs.iter().map(|&p| p > 0.5).collect();
                             w.send_mask(round, mask)?;
                         }
-                        ServerMsg::Shutdown => return Ok(()),
+                        _ => return Ok(()),
                     }
                 }
             }));
@@ -1159,7 +1309,7 @@ mod tests {
                 loop {
                     match w.recv()? {
                         ServerMsg::Round { round, .. } => w.send_mask(round, vec![true])?,
-                        ServerMsg::Shutdown => return Ok(()),
+                        _ => return Ok(()),
                     }
                 }
             })
@@ -1279,7 +1429,7 @@ mod tests {
                         ServerMsg::Round { round, probs } => {
                             w.send_mask(round, probs.iter().map(|&p| p > 0.5).collect())?
                         }
-                        ServerMsg::Shutdown => return Ok(()),
+                        _ => return Ok(()),
                     }
                 }
             }));
@@ -1365,7 +1515,7 @@ mod tests {
                 loop {
                     match w.recv()? {
                         ServerMsg::Round { round, .. } => w.send_mask(round, vec![true])?,
-                        ServerMsg::Shutdown => return Ok(()),
+                        _ => return Ok(()),
                     }
                 }
             })
@@ -1386,7 +1536,7 @@ mod tests {
             loop {
                 match w.recv()? {
                     ServerMsg::Round { round, .. } => w.send_mask(round, vec![true])?,
-                    ServerMsg::Shutdown => return Ok(()),
+                    _ => return Ok(()),
                 }
             }
         });

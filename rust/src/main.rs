@@ -4,6 +4,8 @@
 //!   train-local      — Local Zampling per a TOML config
 //!   train-federated  — Federated Zampling (in-process sim, or TCP leader)
 //!   serve-client     — TCP worker process (connects to a leader)
+//!   serve-peer       — gossip node process (tiny leader for its
+//!                      topology neighbours + dials the coordinator)
 //!   experiment       — regenerate a paper table/figure (fig3|fig4|table1|
 //!                      table4|fig5|fig6|dropout|theory)
 //!   comm-report      — Table 1 savings ledger for a config
@@ -16,9 +18,13 @@
 use std::path::Path;
 use std::process::ExitCode;
 
-use zampling::config::{shard_addresses, Backend, FedConfig, PolicyKind, TrainConfig, TransportKind};
+use zampling::config::{
+    peer_addresses, shard_addresses, Backend, FedConfig, PolicyKind, TopologyKind, TrainConfig,
+    TransportKind,
+};
 use zampling::data::Dataset;
 use zampling::experiments::{self, Scale};
+use zampling::federated::gossip::{run_gossip_wire, run_peer, Topology};
 use zampling::federated::protocol::MaskCodec;
 use zampling::federated::transport::{Leader, ShardedTransport, TcpTransport, Worker};
 use zampling::federated::{
@@ -37,6 +43,7 @@ fn main() -> ExitCode {
         Some("train-local") => cmd_train_local(&args),
         Some("train-federated") => cmd_train_federated(&args),
         Some("serve-client") => cmd_serve_client(&args),
+        Some("serve-peer") => cmd_serve_peer(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("comm-report") => cmd_comm_report(&args),
         Some("info") => cmd_info(&args),
@@ -58,12 +65,14 @@ fn main() -> ExitCode {
 const USAGE: &str = "usage: repro <subcommand> [options]
   train-local       --config <toml> [--backend pjrt|native] [--eval-samples N]
   train-federated   --config <toml> [--backend ...]
-                    [--transport local|pool|tcp|sharded] [--shards S]
+                    [--transport local|pool|tcp|sharded|gossip-tcp]
+                    [--shards S] [--topology complete|ring|star]
                     [--policy uniform|straggler-aware]
                     [--listen host:port] [--eval-every N]
                     [--participation F] [--round-timeout-ms MS]
                     [--round-timeout-max-ms MS]
   serve-client      --addr host:port[,host:port...] --client-id K --config <toml>
+  serve-peer        --addr host:port --node-id K --config <toml>
   experiment        --id fig3|fig4|table1|table4|fig5|fig6|dropout|theory
                     [--scale ci|paper] [--out results/]
   comm-report       --config <toml>
@@ -77,6 +86,10 @@ transports (one RoundEngine drives them all; see federated::engine):
   sharded  this process is the root of S per-shard leaders; shard s listens
            on --listen's port + s (or federated.shard-addrs), workers dial
            their own shard's address (derived from --client-id)
+  gossip-tcp  decentralized: this process coordinates rounds, each
+           serve-peer node (listening on --listen's port + 1 + node-id, or
+           federated.peer-addrs) gossips masks with its federated.topology
+           neighbours over its own tiny leader
 policies: uniform (paper) | straggler-aware (deprioritize clients that
   keep missing --round-timeout-ms; heartbeats can extend deadlines up
   to --round-timeout-max-ms)";
@@ -118,6 +131,9 @@ fn load_fed_config(args: &Args) -> Result<FedConfig, String> {
     if let Some(p) = args.get("policy") {
         cfg.policy = PolicyKind::parse(p)?;
     }
+    if let Some(t) = args.get("topology") {
+        cfg.topology = TopologyKind::parse(t)?;
+    }
     if let Some(s) = args.get("shards") {
         let s: usize = s.parse().map_err(|_| format!("bad --shards '{s}'"))?;
         if s == 0 || s > cfg.clients {
@@ -133,6 +149,16 @@ fn load_fed_config(args: &Args) -> Result<FedConfig, String> {
             "shards = {} requires --transport sharded (got {})",
             cfg.shards,
             cfg.transport.as_str()
+        ));
+    }
+    // Same idea for the gossip graph: a topology the CLI overrides must
+    // still be well-defined for the client count before any socket opens.
+    if cfg.transport == TransportKind::GossipTcp && cfg.clients < cfg.topology.min_nodes() {
+        return Err(format!(
+            "--topology {} needs at least {} clients, got {}",
+            cfg.topology.as_str(),
+            cfg.topology.min_nodes(),
+            cfg.clients
         ));
     }
     Ok(cfg)
@@ -271,6 +297,9 @@ fn cmd_train_federated(args: &Args) -> Result<(), String> {
         }
         TransportKind::Sharded => {
             run_sharded_leader(&cfg, &listen, &test, eval_samples, eval_every, &out_dir)?
+        }
+        TransportKind::GossipTcp => {
+            run_gossip_coordinator(&cfg, &listen, &test, eval_samples, eval_every, &out_dir)?
         }
     }
     Ok(())
@@ -439,6 +468,104 @@ fn run_sharded_leader(
     Ok(())
 }
 
+/// Gossip coordinator: kick decentralized rounds off and evaluate the
+/// consensus — the [`RoundEngine`] over a
+/// [`zampling::federated::gossip::WirePeerTransport`].  Masks never
+/// pass through this process: they travel peer-to-peer between the
+/// `serve-peer` nodes' tiny leaders; the coordinator only ships the
+/// (unbilled) `PeerRound`/`Report` coordination frames and keeps the
+/// per-directed-edge ledger.
+fn run_gossip_coordinator(
+    cfg: &FedConfig,
+    listen: &str,
+    test: &Dataset,
+    eval_samples: usize,
+    eval_every: usize,
+    out_dir: &str,
+) -> Result<(), String> {
+    use std::net::TcpListener;
+
+    let topo = Topology::from_cfg(cfg)?;
+    let peer_addrs = peer_addresses(listen, &cfg.peer_addrs, cfg.clients)?;
+    println!(
+        "[repro] gossip coordinator on {listen}: {} peers, {} topology, {} directed edges",
+        cfg.clients,
+        if cfg.topology_adj.is_empty() { cfg.topology.as_str() } else { "custom" },
+        topo.num_messages()
+    );
+    for (i, addr) in peer_addrs.iter().enumerate() {
+        println!("[repro] peer {i} expected at {addr}, neighbours {:?}", topo.neighbors[i]);
+    }
+    let listener = TcpListener::bind(listen).map_err(|e| format!("binding {listen}: {e}"))?;
+    let exec = make_executor(&cfg.train)?;
+    let out = run_gossip_wire(cfg, &topo, listener, test, eval_samples, eval_every, exec, true)
+        .map_err(|e| format!("{e:#}"))?;
+
+    let rep = out.ledger.savings(cfg.train.arch.num_params());
+    println!(
+        "savings: client {:.1}x server {:.1}x; {} peer-drops over {} rounds",
+        rep.client_savings,
+        rep.server_savings,
+        out.ledger.total_dropped(),
+        cfg.rounds
+    );
+    println!(
+        "edge ledger: {} KiB over {} directed edges ({} bits per edge per round)",
+        out.ledger.total_edge_bits() / 8 / 1024,
+        topo.num_messages(),
+        cfg.train.n
+    );
+    for (i, (sent, recv)) in out.ledger.node_edge_totals(cfg.clients).into_iter().enumerate() {
+        println!("peer {i}: sent {} KiB  received {} KiB", sent / 8 / 1024, recv / 8 / 1024);
+    }
+    out.log.save(Path::new(out_dir)).map_err(|e| format!("saving: {e}"))?;
+    Ok(())
+}
+
+/// Gossip node: one decentralized party (`repro serve-peer`).  Runs a
+/// tiny leader for its topology neighbours, dials the coordinator and
+/// every neighbour, then gossips one mask per round per live edge.
+fn cmd_serve_peer(args: &Args) -> Result<(), String> {
+    use std::net::TcpListener;
+
+    let base = args
+        .get("addr")
+        .ok_or("missing --addr host:port (the coordinator's --listen address)")?
+        .to_string();
+    let node_id = args.usize_or("node-id", usize::MAX);
+    if node_id == usize::MAX {
+        return Err("missing --node-id".into());
+    }
+    let cfg = load_fed_config(args)?;
+    args.reject_unknown()?;
+
+    let topo = Topology::from_cfg(&cfg)?;
+    if node_id >= cfg.clients {
+        return Err(format!("node-id {node_id} ≥ clients {}", cfg.clients));
+    }
+    let peer_addrs = peer_addresses(&base, &cfg.peer_addrs, cfg.clients)?;
+    // Bind our own listener before dialing anyone, so every peer's
+    // dials land in a bound backlog regardless of launch order.
+    let listener = TcpListener::bind(&peer_addrs[node_id])
+        .map_err(|e| format!("binding {}: {e}", peer_addrs[node_id]))?;
+    println!(
+        "[peer {node_id}] listening on {}, neighbours {:?}, coordinator {base}",
+        peer_addrs[node_id], topo.neighbors[node_id]
+    );
+
+    // Every peer derives the identical data split from the shared seed.
+    let seeds = SeedTree::new(cfg.train.seed);
+    let (train, _test) = load_splits(&cfg.train);
+    let shard = train.partition_iid(cfg.clients, &seeds).swap_remove(node_id);
+    println!("[peer {node_id}] shard rows: {}", shard.len());
+
+    let mut exec = make_executor(&cfg.train)?;
+    run_peer(&cfg, &topo, node_id, listener, &peer_addrs, &base, exec.as_mut(), &shard, None)
+        .map_err(|e| format!("{e:#}"))?;
+    println!("[peer {node_id}] shutdown");
+    Ok(())
+}
+
 /// TCP worker: local shard training driven by the leader (single or
 /// sharded — under `federated.shards > 1` the worker derives its own
 /// shard leader's address from the shared config and its client id).
@@ -529,6 +656,13 @@ fn cmd_serve_client(args: &Args) -> Result<(), String> {
                 )
                 .map_err(|e| format!("{e:#}"))?;
                 worker.send_frame(&out.frame).map_err(|e| format!("{e:#}"))?;
+            }
+            ServerFrameKind::PeerRound => {
+                return Err(format!(
+                    "worker {client_id}: unexpected gossip PeerRound frame \
+                     (serve-client workers only speak the centralized protocol; \
+                     use serve-peer for gossip nodes)"
+                ));
             }
             ServerFrameKind::Shutdown => {
                 println!("[worker {client_id}] shutdown");

@@ -16,6 +16,7 @@ use std::thread;
 use zampling::comm::CommLedger;
 use zampling::config::FedConfig;
 use zampling::data::Dataset;
+use zampling::federated::gossip::{run_gossip, run_gossip_wire, run_peer, GossipOutcome, Topology};
 use zampling::federated::protocol::{
     decode_client, decode_server, encode_client, encode_server, peek_server_frame, ClientMsg,
     MaskCodec, ServerFrameKind, ServerMsg,
@@ -77,6 +78,9 @@ fn spawn_worker(cfg: FedConfig, addr: String, shard: Dataset, k: usize) -> threa
                     w.send_frame(&out.frame).expect("send mask");
                 }
                 ServerFrameKind::Shutdown => return,
+                ServerFrameKind::PeerRound => {
+                    panic!("client {k}: gossip PeerRound on the centralized wire")
+                }
             }
         }
     })
@@ -311,6 +315,171 @@ fn tcp_partial_participation_matches_simulator() {
         assert_eq!(r.uplink_bits, s.uplink_bits);
         assert_eq!(r.downlink_bits, s.downlink_bits);
     }
+}
+
+/// Launch a full wire-gossip run on loopback: one coordinator thread
+/// (the `RoundEngine` over a `WirePeerTransport` — the exact code path
+/// `repro train-federated --transport gossip-tcp` runs) plus one
+/// production `run_peer` thread per node (the `repro serve-peer` body).
+/// Every listener is bound before any thread starts, so there are no
+/// connect races.  `die_after[i]` makes peer `i` exit right after
+/// reporting that round — the kill-one-peer chaos knob.
+fn launch_gossip_wire(
+    cfg: &FedConfig,
+    topo: &Topology,
+    shards: &[Dataset],
+    test: &Dataset,
+    die_after: &[Option<u32>],
+    eval_samples: usize,
+    eval_every: usize,
+) -> GossipOutcome {
+    let coord = TcpListener::bind("127.0.0.1:0").unwrap();
+    let coord_addr = coord.local_addr().unwrap().to_string();
+    let listeners: Vec<TcpListener> =
+        (0..topo.len()).map(|_| TcpListener::bind("127.0.0.1:0").unwrap()).collect();
+    let addrs: Vec<String> =
+        listeners.iter().map(|l| l.local_addr().unwrap().to_string()).collect();
+
+    let peers: Vec<_> = listeners
+        .into_iter()
+        .enumerate()
+        .map(|(i, listener)| {
+            let (cfg, topo, addrs, coord_addr) =
+                (cfg.clone(), topo.clone(), addrs.clone(), coord_addr.clone());
+            let shard = shards[i].clone();
+            let die = die_after[i];
+            thread::spawn(move || {
+                let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500);
+                run_peer(&cfg, &topo, i, listener, &addrs, &coord_addr, &mut exec, &shard, die)
+                    .expect("peer");
+            })
+        })
+        .collect();
+
+    let exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500);
+    let out =
+        run_gossip_wire(cfg, topo, coord, test, eval_samples, eval_every, Box::new(exec), false)
+            .expect("gossip coordinator");
+    for p in peers {
+        p.join().unwrap();
+    }
+    out
+}
+
+/// The acceptance bar of the wire-gossip redesign: on every named
+/// topology, decentralized rounds over real sockets must produce
+/// **byte-identical** consensus probs, node probs, comm ledgers
+/// (including the per-directed-edge table), and run logs versus the
+/// in-process `PeerTransport` at the same seed.
+#[test]
+fn wire_gossip_matches_in_process_gossip_byte_for_byte() {
+    let cfg = ci_cfg(3);
+    let (shards, test) = ci_data(&cfg);
+
+    for topo in [Topology::ring(3), Topology::complete(3), Topology::star(3)] {
+        let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500);
+        let local = run_gossip(&cfg, &topo, &mut exec, &shards, &test, 3, 2);
+        let wire = launch_gossip_wire(&cfg, &topo, &shards, &test, &[None; 3], 3, 2);
+
+        assert_eq!(wire.final_probs, local.final_probs, "consensus diverged on {topo:?}");
+        assert_eq!(wire.node_probs, local.node_probs, "node probs diverged on {topo:?}");
+        assert_eq!(wire.ledger.rounds.len(), local.ledger.rounds.len());
+        for (w, l) in wire.ledger.rounds.iter().zip(&local.ledger.rounds) {
+            assert_eq!(w.uplink_bits, l.uplink_bits, "{topo:?}");
+            assert_eq!(w.downlink_bits, l.downlink_bits, "{topo:?}");
+            assert_eq!(w.clients, l.clients, "{topo:?}");
+            assert_eq!(w.participants, l.participants, "{topo:?}");
+            assert_eq!(w.dropped, l.dropped, "{topo:?}");
+        }
+        // the per-directed-edge tables agree row for row
+        assert_eq!(wire.ledger.edge_rounds, local.ledger.edge_rounds, "{topo:?}");
+        assert_eq!(wire.ledger.total_edge_bits(), wire.ledger.total_uplink_bits());
+        // and the run logs (consensus evals + real per-node losses) too
+        assert_eq!(wire.log.rounds.len(), local.log.rounds.len());
+        for (w, l) in wire.log.rounds.iter().zip(&local.log.rounds) {
+            assert_eq!(w.round, l.round);
+            assert_eq!(w.mean_sampled_acc, l.mean_sampled_acc, "{topo:?} round {}", w.round);
+            assert_eq!(w.sampled_acc_std, l.sampled_acc_std, "{topo:?} round {}", w.round);
+            assert_eq!(w.expected_acc, l.expected_acc, "{topo:?} round {}", w.round);
+            assert_eq!(w.train_loss, l.train_loss, "{topo:?} round {}", w.round);
+            assert_eq!(w.uplink_bits, l.uplink_bits);
+            assert_eq!(w.downlink_bits, l.downlink_bits);
+        }
+    }
+}
+
+/// Same byte-identity bar under partial participation: only the
+/// round's selected subset trains and gossips (the `PeerRound` frame's
+/// participant set), non-participants' vectors are carried by the
+/// coordinator's cache exactly like untouched in-process nodes.
+#[test]
+fn wire_gossip_partial_participation_matches_in_process() {
+    let mut cfg = ci_cfg(3);
+    cfg.participation = 0.5; // 2 of 3 nodes per round, seeded subsets
+    let (shards, test) = ci_data(&cfg);
+
+    for topo in [Topology::ring(3), Topology::star(3)] {
+        let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500);
+        let local = run_gossip(&cfg, &topo, &mut exec, &shards, &test, 2, 2);
+        let wire = launch_gossip_wire(&cfg, &topo, &shards, &test, &[None; 3], 2, 2);
+
+        assert_eq!(wire.final_probs, local.final_probs, "consensus diverged on {topo:?}");
+        assert_eq!(wire.node_probs, local.node_probs, "node probs diverged on {topo:?}");
+        assert_eq!(wire.ledger.edge_rounds, local.ledger.edge_rounds, "{topo:?}");
+        for (w, l) in wire.ledger.rounds.iter().zip(&local.ledger.rounds) {
+            assert_eq!(w.participants, 2, "{topo:?}");
+            assert_eq!(w.uplink_bits, l.uplink_bits, "{topo:?}");
+            assert_eq!(w.clients, l.clients, "{topo:?}");
+            assert_eq!(w.dropped, l.dropped, "{topo:?}");
+        }
+    }
+}
+
+/// Kill one peer mid-run: after its round-1 report, ring node 2 exits.
+/// The coordinator must drop it from every later round and its
+/// surviving neighbours must renormalize their tiny aggregations over
+/// whatever masks still arrive — the run completes, keeps learning
+/// state sane, and bills only the edges that still carry traffic's
+/// senders.
+#[test]
+fn wire_gossip_survives_a_killed_peer() {
+    let mut cfg = ci_cfg(3);
+    cfg.rounds = 4;
+    // Safety net only: drops are detected via connection loss (Gone
+    // events), not by waiting out the deadline.
+    cfg.round_timeout_ms = 20_000;
+    let (shards, test) = ci_data(&cfg);
+    let topo = Topology::ring(3);
+
+    let wire = launch_gossip_wire(&cfg, &topo, &shards, &test, &[None, None, Some(1)], 2, 1);
+
+    assert_eq!(wire.ledger.rounds.len(), 4);
+    let n = cfg.train.n as u64;
+    for (r, round) in wire.ledger.rounds.iter().enumerate() {
+        assert_eq!(round.participants, 3, "round {r}");
+        if r <= 1 {
+            assert_eq!(round.clients, 3, "round {r}");
+            assert_eq!(round.dropped, 0, "round {r}");
+            assert_eq!(round.uplink_bits, 6 * n, "round {r}: 6 live directed edges");
+        } else {
+            assert_eq!(round.clients, 2, "round {r}: survivors only");
+            assert_eq!(round.dropped, 1, "round {r}: the dead peer");
+            // each survivor still ships to both its ring neighbours
+            // (the dead one was selected; delivery is not guaranteed)
+            assert_eq!(round.uplink_bits, 4 * n, "round {r}");
+        }
+        // per-edge rows always reconcile with the round total
+        let edges = &wire.ledger.edge_rounds[r];
+        assert_eq!(edges.iter().map(|e| e.bits).sum::<u64>(), round.uplink_bits);
+        // post-kill, node 2 sends nothing
+        if r > 1 {
+            assert!(edges.iter().all(|e| e.from != 2), "round {r}");
+        }
+    }
+    // consensus stays a valid probability vector (survivors' tiny
+    // servers renormalized over the masks that actually arrived)
+    assert!(wire.final_probs.iter().all(|p| (0.0..=1.0).contains(p)));
+    assert_eq!(wire.node_probs.len(), 3);
 }
 
 /// Replica of the seed's sequential `run_federated` loop (pre-RoundPlan,

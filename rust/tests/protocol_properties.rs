@@ -10,7 +10,7 @@
 
 use zampling::federated::protocol::{
     decode_client, decode_server, decode_shard, encode_client, encode_server, encode_shard,
-    ClientMsg, MaskCodec, ServerMsg, ShardMsg, MAX_MASK_LEN,
+    ClientMsg, MaskCodec, ServerMsg, ShardMsg, MAX_MASK_LEN, MAX_PEER_COUNT,
 };
 use zampling::rng::Rng;
 use zampling::util::prop::{for_all, Gen};
@@ -47,7 +47,7 @@ fn arbitrary_bytes_never_panic_either_decoder() {
             // Half the time, plant a plausible tag and a consistent
             // length field so deeper branches are exercised.
             if !buf.is_empty() && g.bool_p(0.5) {
-                buf[0] = g.usize_in(0, 9) as u8;
+                buf[0] = g.usize_in(0, 11) as u8;
                 if buf.len() >= 5 && g.bool_p(0.5) {
                     let body = buf.len() - 5;
                     set_frame_len(&mut buf, body);
@@ -236,7 +236,9 @@ fn bad_tags_error_never_panic() {
         0xABCD,
         |g| {
             let mut frame = random_mask_frame(g);
-            frame[0] = g.usize_in(8, 255) as u8;
+            // 8 = ShardVotes, 9 = PeerRound, 10 = Report are real tags
+            // (for *other* decoders); everything past them is unknown.
+            frame[0] = g.usize_in(11, 255) as u8;
             frame
         },
         |frame| {
@@ -244,6 +246,142 @@ fn bad_tags_error_never_panic() {
                 Ok(())
             } else {
                 Err("unknown tag decoded".into())
+            }
+        },
+    );
+}
+
+/// A random, valid-by-construction `PeerRound` gossip kick-off frame.
+fn random_peer_round_frame(g: &mut Gen) -> Vec<u8> {
+    let count = g.usize_in(0, 64);
+    // strictly ascending ids with random gaps
+    let mut participants = Vec::with_capacity(count);
+    let mut next = 0u32;
+    for _ in 0..count {
+        next += g.usize_in(1, 5) as u32;
+        participants.push(next);
+    }
+    let round = g.usize_in(0, 1000) as u32;
+    encode_server(&ServerMsg::PeerRound { round, participants })
+}
+
+#[test]
+fn peer_round_roundtrip_and_reject_mutation() {
+    for_all(
+        "PeerRound roundtrip; truncation, forged counts, shuffles error",
+        150,
+        0x60551,
+        |g| {
+            let frame = random_peer_round_frame(g);
+            let cut = g.usize_in(0, frame.len().saturating_sub(1));
+            (frame, cut)
+        },
+        |(frame, cut)| {
+            // 1. the untouched frame roundtrips to a canonical id set
+            match decode_server(frame) {
+                Ok(ServerMsg::PeerRound { participants, .. }) => {
+                    if !participants.windows(2).all(|w| w[0] < w[1]) {
+                        return Err("decoded a non-ascending participant set".into());
+                    }
+                }
+                other => return Err(format!("valid PeerRound rejected: {other:?}")),
+            }
+            // 2. self-consistent truncation always errors (the body is
+            // 8 + 4·count, so any cut breaks the length equation)
+            let mut bad = frame[..*cut].to_vec();
+            if bad.len() >= 5 {
+                let body = bad.len() - 5;
+                set_frame_len(&mut bad, body);
+            }
+            if decode_server(&bad).is_ok() {
+                return Err(format!("truncated PeerRound decoded (cut={cut})"));
+            }
+            // 3. a forged over-cap count errors before any allocation
+            if frame.len() >= 13 {
+                let mut bad = frame.clone();
+                let forged = (MAX_PEER_COUNT as u32).saturating_add(1);
+                bad[5 + 4..5 + 8].copy_from_slice(&forged.to_le_bytes());
+                if decode_server(&bad).is_ok() {
+                    return Err("over-cap participant count decoded".into());
+                }
+                // 4. swapping two ids breaks strict ascent
+                if frame.len() >= 5 + 8 + 8 {
+                    let mut bad = frame.clone();
+                    let (a, b) = (5 + 8, 5 + 12);
+                    for i in 0..4 {
+                        bad.swap(a + i, b + i);
+                    }
+                    if decode_server(&bad).is_ok() {
+                        return Err("shuffled participant ids decoded".into());
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A random, valid-by-construction gossip `Report` frame.
+fn random_report_frame(g: &mut Gen) -> Vec<u8> {
+    let n = g.usize_in(0, 300);
+    let probs = g.f32_vec(n, 0.0, 1.0);
+    encode_client(
+        &ClientMsg::Report {
+            round: g.usize_in(0, 1000) as u32,
+            client: g.usize_in(0, 64) as u32,
+            loss: g.f64_in(0.0, 10.0),
+            probs,
+        },
+        MaskCodec::Raw,
+    )
+}
+
+#[test]
+fn report_roundtrip_and_reject_poison() {
+    for_all(
+        "Report roundtrip; truncation and poisoned values error",
+        150,
+        0x8E907,
+        |g| {
+            let frame = random_report_frame(g);
+            let cut = g.usize_in(0, frame.len().saturating_sub(1));
+            let poison = [2.0f32, -1.0, f32::NAN, f32::INFINITY][g.usize_in(0, 3)];
+            (frame, cut, poison)
+        },
+        |(frame, cut, poison)| {
+            // 1. the untouched frame roundtrips with in-range probs
+            match decode_client(frame) {
+                Ok(ClientMsg::Report { probs, .. }) => {
+                    if probs.iter().any(|p| !(0.0..=1.0).contains(p)) {
+                        return Err("decoded an out-of-range report".into());
+                    }
+                }
+                other => return Err(format!("valid Report rejected: {other:?}")),
+            }
+            // 2. self-consistent truncation always errors
+            let mut bad = frame[..*cut].to_vec();
+            if bad.len() >= 5 {
+                let body = bad.len() - 5;
+                set_frame_len(&mut bad, body);
+            }
+            if decode_client(&bad).is_ok() {
+                return Err(format!("truncated Report decoded (cut={cut})"));
+            }
+            // 3. a poisoned probability (out of range / NaN / inf) errors
+            if frame.len() > 5 + 24 {
+                let mut bad = frame.clone();
+                bad[5 + 20..5 + 24].copy_from_slice(&poison.to_le_bytes());
+                if decode_client(&bad).is_ok() {
+                    return Err(format!("poisoned prob {poison} decoded"));
+                }
+            }
+            // 4. loss is advisory telemetry: even a NaN loss decodes
+            // verbatim (it never feeds model state), with probs intact
+            let mut odd = frame.clone();
+            odd[5 + 12..5 + 20].copy_from_slice(&f64::NAN.to_le_bytes());
+            match decode_client(&odd) {
+                Ok(ClientMsg::Report { loss, .. }) if loss.is_nan() => Ok(()),
+                other => Err(format!("NaN-loss report mishandled: {other:?}")),
             }
         },
     );
