@@ -1,0 +1,58 @@
+//! Perf bench (population axis): round latency vs client count through
+//! the event-loop leader — simulated populations on a log axis (the
+//! production streaming-collection path, no sockets) plus one real
+//! multiplexed-wire leg.  Writes the `population` section of the
+//! repo-root `BENCH_perf.json`: one case per population (the
+//! round-latency-vs-client-count rows) and, in `derived`, the collector
+//! peak held bytes at the smallest and largest simulated populations —
+//! equal numbers are the O(n)-memory claim in machine-readable form.
+
+use zampling::experiments::population::{sim_round, wire_round};
+use zampling::util::bench::{bench_json_path, update_bench_json, Bencher, Stats};
+
+fn main() {
+    let n = 4_096usize;
+    let b = Bencher::heavy();
+    let mut all: Vec<Stats> = Vec::new();
+
+    let mut peak_small = 0.0f64;
+    let mut peak_large = 0.0f64;
+    for (i, clients) in [1_000usize, 4_000, 16_000].into_iter().enumerate() {
+        let mut peak_kib = 0.0f64;
+        let bytes = clients as u64 * (n as u64 / 8 + 17); // ≈ encoded mask frames
+        all.push(b.run_bytes(&format!("population/sim clients={clients}"), bytes, || {
+            let row = sim_round(clients, n).expect("sim round");
+            peak_kib = row.peak_held_kib;
+            std::hint::black_box(row.round_ms);
+        }));
+        if i == 0 {
+            peak_small = peak_kib * 1024.0;
+        }
+        peak_large = peak_kib * 1024.0;
+    }
+
+    let wire_clients = 64usize;
+    let wire_bytes = wire_clients as u64 * (n as u64 / 8 + 17);
+    all.push(b.run_bytes(&format!("population/wire clients={wire_clients}"), wire_bytes, || {
+        let row = wire_round(wire_clients, n).expect("wire round");
+        std::hint::black_box(row.round_ms);
+    }));
+
+    println!(
+        "\ncollector peak held bytes: {peak_small:.0} @ 1k clients vs {peak_large:.0} @ 16k \
+         (equal = O(n) memory, independent of population)"
+    );
+    let path = bench_json_path();
+    update_bench_json(
+        &path,
+        "population",
+        &all,
+        &[
+            ("model_entries", n as f64),
+            ("peak_held_bytes_smallest_pop", peak_small),
+            ("peak_held_bytes_largest_pop", peak_large),
+        ],
+    )
+    .expect("writing BENCH_perf.json");
+    println!("updated {}", path.display());
+}

@@ -102,6 +102,9 @@ pub fn run_fedavg(
             clients: cfg.clients as u32,
             participants: cfg.clients as u32,
             dropped: 0,
+            // Sequentially-simulated clients: wall-clock would measure
+            // this process's compute, not transport rate — unmeasured.
+            wall_ns: 0,
         });
 
         if round % eval_every == 0 || round + 1 == cfg.rounds {

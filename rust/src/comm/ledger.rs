@@ -20,6 +20,10 @@ pub struct RoundCost {
     pub participants: u32,
     /// Selected clients whose mask never arrived (disconnect, deadline).
     pub dropped: u32,
+    /// Round wall-clock in nanoseconds (broadcast through aggregation),
+    /// 0 when the recorder did not measure it.  Turns the bits columns
+    /// into bandwidth: see [`CommLedger::round_throughput_bps`].
+    pub wall_ns: u64,
 }
 
 /// One shard's slice of a round under a sharded (multi-leader)
@@ -180,6 +184,7 @@ impl CommLedger {
             clients,
             participants: clients,
             dropped: 0,
+            wall_ns: 0,
         });
     }
 
@@ -196,6 +201,39 @@ impl CommLedger {
     /// Total server→clients bits over the run.
     pub fn total_downlink_bits(&self) -> u64 {
         self.rounds.iter().map(|r| r.downlink_bits).sum()
+    }
+
+    /// Total measured wall-clock over the run (rounds with `wall_ns = 0`
+    /// contribute nothing).
+    pub fn total_wall(&self) -> std::time::Duration {
+        std::time::Duration::from_nanos(self.rounds.iter().map(|r| r.wall_ns).sum())
+    }
+
+    /// Round `i`'s throughput in bits/sec over both directions, or
+    /// `None` when the round exists but its wall clock was not measured
+    /// (or it is out of range).  Bits/round says what a round costs;
+    /// this says how fast the transport actually moved it.
+    pub fn round_throughput_bps(&self, i: usize) -> Option<f64> {
+        let r = self.rounds.get(i)?;
+        if r.wall_ns == 0 {
+            return None;
+        }
+        Some((r.uplink_bits + r.downlink_bits) as f64 / (r.wall_ns as f64 / 1e9))
+    }
+
+    /// Cumulative throughput in bits/sec across every *measured* round
+    /// (unmeasured rounds contribute neither bits nor time, so mixing
+    /// measured and unmeasured recorders cannot skew the rate).  `None`
+    /// when no round carries a wall clock.
+    pub fn cumulative_throughput_bps(&self) -> Option<f64> {
+        let (mut bits, mut ns) = (0u64, 0u64);
+        for r in &self.rounds {
+            if r.wall_ns > 0 {
+                bits += r.uplink_bits + r.downlink_bits;
+                ns += r.wall_ns;
+            }
+        }
+        (ns > 0).then(|| bits as f64 / (ns as f64 / 1e9))
     }
 
     /// Savings vs the naive protocol for a model with `m` parameters.
@@ -257,6 +295,7 @@ mod tests {
                 clients: 10,
                 participants: 10,
                 dropped: 0,
+                wall_ns: 0,
             });
         }
         let rep = ledger.savings(m);
@@ -369,9 +408,53 @@ mod tests {
             clients: 0,
             participants: 2,
             dropped: 2,
+            wall_ns: 0,
         });
         let rep = ledger.savings(100);
         assert_eq!(rep.client_savings, 1.0);
         assert_eq!(ledger.total_dropped(), 2);
+    }
+
+    #[test]
+    fn throughput_derives_bits_per_second_from_measured_rounds_only() {
+        let mut ledger = CommLedger::default();
+        // Round 0: 1000 bits each way in half a second → 4000 bps.
+        ledger.record(RoundCost {
+            downlink_bits: 1000,
+            uplink_bits: 1000,
+            clients: 2,
+            participants: 2,
+            dropped: 0,
+            wall_ns: 500_000_000,
+        });
+        // Round 1: unmeasured (a baseline recorder) — no rate, and it
+        // must not drag the cumulative figure toward zero.
+        ledger.record_symmetric(2, 1_000_000, 1_000_000);
+        // Round 2: 3000 bits total in 1.5 s → 2000 bps.
+        ledger.record(RoundCost {
+            downlink_bits: 2000,
+            uplink_bits: 1000,
+            clients: 2,
+            participants: 2,
+            dropped: 0,
+            wall_ns: 1_500_000_000,
+        });
+
+        assert_eq!(ledger.round_throughput_bps(0), Some(4000.0));
+        assert_eq!(ledger.round_throughput_bps(1), None);
+        assert_eq!(ledger.round_throughput_bps(2), Some(2000.0));
+        assert_eq!(ledger.round_throughput_bps(99), None);
+        // Cumulative: (2000 + 3000) bits over 2 s = 2500 bps.
+        assert_eq!(ledger.cumulative_throughput_bps(), Some(2500.0));
+        assert_eq!(ledger.total_wall(), std::time::Duration::from_secs(2));
+    }
+
+    #[test]
+    fn all_unmeasured_rounds_report_no_throughput() {
+        let mut ledger = CommLedger::default();
+        ledger.record_symmetric(2, 10, 10);
+        assert_eq!(ledger.round_throughput_bps(0), None);
+        assert_eq!(ledger.cumulative_throughput_bps(), None);
+        assert_eq!(CommLedger::default().cumulative_throughput_bps(), None);
     }
 }

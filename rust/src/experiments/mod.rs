@@ -9,6 +9,7 @@
 pub mod compression_sweep;
 pub mod federated;
 pub mod integrality_gap;
+pub mod population;
 pub mod sensitivity;
 pub mod zhou_comparison;
 

@@ -1,0 +1,254 @@
+//! The population axis: how the event-loop leader scales with the
+//! *number of clients*, the regime the paper's tiny per-client uplink
+//! is supposed to pay off in (ROADMAP north star: thousands to 100k).
+//!
+//! Two legs per scale:
+//!
+//! * **sim** — [`Leader::simulated`] rounds at 1k → 100k clients.  The
+//!   broadcast / collection / generation / streaming-aggregation path
+//!   is the production code; only socket I/O is bypassed, so the sweep
+//!   can pass the fd limit.  An injector thread feeds encoded `Mask`
+//!   frames concurrently with collection, like real arrivals.
+//! * **wire** — a real multiplexed round over loopback sockets (one
+//!   non-blocking sweeper fd-polling every worker), at the low
+//!   hundreds/thousands where fds allow.
+//!
+//! Each row records round latency, uplink volume, derived throughput,
+//! the collector's peak held mask state (the O(n) instrument from
+//! [`VoteReceipt::peak_held_bytes`]), and leader process RSS — the
+//! latency/memory companion to the Fig. 4 accuracy/bits trade-off.
+
+use std::time::Instant;
+
+use crate::federated::protocol::{encode_client, ClientMsg, MaskCodec, ServerMsg};
+use crate::federated::transport::{Leader, Worker};
+use crate::federated::DeadlinePolicy;
+use crate::rng::{Rng, Xoshiro256pp};
+use crate::util::bench::{row, table};
+use crate::util::error::Result;
+use crate::{anyhow, ensure};
+
+use super::Scale;
+
+/// One population-axis measurement.
+#[derive(Clone, Debug)]
+pub struct PopulationRow {
+    /// `"sim"` (event-injected population) or `"wire"` (real sockets).
+    pub mode: &'static str,
+    /// Clients in the round (all participate).
+    pub clients: usize,
+    /// Masks that actually arrived (must equal `clients` here).
+    pub received: usize,
+    /// Model entries per mask.
+    pub n: usize,
+    /// Broadcast → aggregated wall-clock for the round.
+    pub round_ms: f64,
+    /// Total encoded uplink the round moved, MiB.
+    pub up_mib: f64,
+    /// Uplink rate the leader sustained, Mbit/s.
+    pub throughput_mbps: f64,
+    /// Collector peak held mask state, KiB — O(n), so it must NOT grow
+    /// along this table's client axis.
+    pub peak_held_kib: f64,
+    /// Leader process resident set, MiB (`None` off Linux).
+    pub rss_mib: Option<f64>,
+}
+
+/// `VmRSS` from `/proc/self/status`, MiB.
+fn rss_mib() -> Option<f64> {
+    #[cfg(target_os = "linux")]
+    {
+        let status = std::fs::read_to_string("/proc/self/status").ok()?;
+        let kb: f64 = status
+            .lines()
+            .find_map(|l| l.strip_prefix("VmRSS:"))?
+            .trim()
+            .trim_end_matches("kB")
+            .trim()
+            .parse()
+            .ok()?;
+        return Some(kb / 1024.0);
+    }
+    #[allow(unreachable_code)]
+    None
+}
+
+/// Client `k`'s deterministic mask: `n` bits drawn word-wise from a
+/// per-client xoshiro stream (cheap enough for 100k × 16k entries).
+fn mask_of(k: usize, n: usize) -> Vec<bool> {
+    let mut rng = Xoshiro256pp::seed_from(0x9E37 ^ k as u64);
+    let mut mask = Vec::with_capacity(n);
+    let mut word = 0u64;
+    for i in 0..n {
+        if i % 64 == 0 {
+            word = rng.next_u64();
+        }
+        mask.push(word >> (i % 64) & 1 == 1);
+    }
+    mask
+}
+
+/// One simulated round at `clients` population: production collection
+/// path, no sockets.  The injector thread races the collector exactly
+/// like real arrivals would.
+pub fn sim_round(clients: usize, n: usize) -> Result<PopulationRow> {
+    let (mut leader, pop) = Leader::simulated(clients)?;
+    let participants: Vec<usize> = (0..clients).collect();
+    let start = Instant::now();
+    leader.broadcast_to(&ServerMsg::Round { round: 0, probs: vec![0.5; n] }, &participants)?;
+    let injector = std::thread::spawn(move || {
+        for k in 0..clients {
+            let frame = encode_client(
+                &ClientMsg::Mask { round: 0, client: k as u32, n, mask: mask_of(k, n) },
+                MaskCodec::Raw,
+            );
+            if !pop.send_frame(k, frame) {
+                return; // leader gone: nothing left to feed
+            }
+        }
+    });
+    let receipt = leader.collect_votes(0, &participants, n, DeadlinePolicy::unbounded())?;
+    let elapsed = start.elapsed();
+    injector.join().map_err(|_| anyhow!("mask injector panicked"))?;
+    ensure!(receipt.received.len() == clients, "sim round dropped clients");
+    Ok(PopulationRow {
+        mode: "sim",
+        clients,
+        received: receipt.received.len(),
+        n,
+        round_ms: elapsed.as_secs_f64() * 1e3,
+        up_mib: receipt.bytes as f64 / (1 << 20) as f64,
+        throughput_mbps: receipt.bytes as f64 * 8.0 / elapsed.as_secs_f64() / 1e6,
+        peak_held_kib: receipt.peak_held_bytes as f64 / 1024.0,
+        rss_mib: rss_mib(),
+    })
+}
+
+/// One real-socket round at `clients` workers over loopback, all
+/// multiplexed onto the single sweeper thread.  Worker threads get
+/// small stacks so the thousands-of-workers leg fits one process.
+pub fn wire_round(clients: usize, n: usize) -> Result<PopulationRow> {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    let workers: Vec<_> = (0..clients)
+        .map(|k| {
+            let addr = addr.clone();
+            std::thread::Builder::new()
+                .stack_size(128 << 10)
+                .spawn(move || -> Result<()> {
+                    let mut w = Worker::connect_retry(
+                        &addr,
+                        k as u32,
+                        MaskCodec::Raw,
+                        std::time::Duration::from_secs(60),
+                    )?;
+                    loop {
+                        match w.recv()? {
+                            ServerMsg::Round { round, .. } => w.send_mask(round, mask_of(k, n))?,
+                            _ => return Ok(()),
+                        }
+                    }
+                })
+                .map_err(|e| anyhow!("spawning worker {k}: {e}"))
+        })
+        .collect::<Result<_>>()?;
+
+    let mut leader = Leader::from_listener(listener, clients)?;
+    let participants: Vec<usize> = (0..clients).collect();
+    let start = Instant::now();
+    leader.broadcast_to(&ServerMsg::Round { round: 0, probs: vec![0.5; n] }, &participants)?;
+    let receipt = leader.collect_votes(
+        0,
+        &participants,
+        n,
+        DeadlinePolicy::fixed(std::time::Duration::from_secs(120)),
+    )?;
+    let elapsed = start.elapsed();
+    leader.shutdown()?;
+    for w in workers {
+        w.join().map_err(|_| anyhow!("worker thread panicked"))??;
+    }
+    ensure!(receipt.received.len() == clients, "wire round dropped clients");
+    Ok(PopulationRow {
+        mode: "wire",
+        clients,
+        received: receipt.received.len(),
+        n,
+        round_ms: elapsed.as_secs_f64() * 1e3,
+        up_mib: receipt.bytes as f64 / (1 << 20) as f64,
+        throughput_mbps: receipt.bytes as f64 * 8.0 / elapsed.as_secs_f64() / 1e6,
+        peak_held_kib: receipt.peak_held_bytes as f64 / 1024.0,
+        rss_mib: rss_mib(),
+    })
+}
+
+/// The sweep at `scale`: simulated populations on a log axis (up to the
+/// ROADMAP's 100k at paper scale) plus one multiplexed-wire leg sized
+/// to the fd budget.
+pub fn run(scale: Scale) -> Result<Vec<PopulationRow>> {
+    let (n, sim_populations, wire_clients): (usize, &[usize], usize) = match scale {
+        Scale::Ci => (4_096, &[1_000, 10_000], 64),
+        Scale::Paper => (16_384, &[1_000, 10_000, 100_000], 2_048),
+    };
+    let mut rows = Vec::new();
+    for &clients in sim_populations {
+        rows.push(sim_round(clients, n)?);
+    }
+    rows.push(wire_round(wire_clients, n)?);
+    Ok(rows)
+}
+
+/// Paper-shaped rows; the `peak KiB` column staying flat down the
+/// client axis *is* the O(n) memory claim.
+pub fn print_table(rows: &[PopulationRow]) {
+    table(
+        "Population axis: round latency & leader memory vs client count",
+        &["mode", "clients", "received", "round ms", "up MiB", "Mbit/s", "peak KiB", "RSS MiB"],
+    );
+    for r in rows {
+        row(&[
+            r.mode.to_string(),
+            r.clients.to_string(),
+            r.received.to_string(),
+            format!("{:.1}", r.round_ms),
+            format!("{:.2}", r.up_mib),
+            format!("{:.1}", r.throughput_mbps),
+            format!("{:.1}", r.peak_held_kib),
+            r.rss_mib.map_or("-".into(), |m| format!("{m:.1}")),
+        ]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The CI-scale invariants, at a size small enough for a unit test:
+    /// all masks arrive, and the collector's peak held state does not
+    /// grow with the population.
+    #[test]
+    fn sim_rows_hold_peak_state_flat_across_populations() {
+        let a = sim_round(50, 128).expect("sim 50");
+        let b = sim_round(500, 128).expect("sim 500");
+        assert_eq!(a.received, 50);
+        assert_eq!(b.received, 500);
+        assert_eq!(
+            a.peak_held_kib, b.peak_held_kib,
+            "peak held mask state grew with the population"
+        );
+        assert!(b.up_mib > a.up_mib, "10× the clients must move more uplink");
+    }
+
+    #[test]
+    fn wire_round_collects_every_worker() {
+        let r = wire_round(4, 64).expect("wire 4");
+        assert_eq!(r.received, 4);
+        assert!(r.round_ms > 0.0);
+    }
+
+    #[test]
+    fn masks_are_deterministic_per_client() {
+        assert_eq!(mask_of(7, 100), mask_of(7, 100));
+        assert_ne!(mask_of(7, 100), mask_of(8, 100));
+    }
+}

@@ -39,7 +39,7 @@
 //! `tests/federated_integration.rs`.
 
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::comm::{CommLedger, EdgeCost, RoundCost, ShardCost};
 use crate::config::{FedConfig, PolicyKind};
@@ -244,6 +244,11 @@ pub struct RoundTraffic {
     /// centralized transports.  The engine forwards it to the ledger's
     /// edge table verbatim.
     pub edge_costs: Vec<EdgeCost>,
+    /// Round wall-clock: the engine stamps the exchange → aggregate
+    /// span after `aggregate` returns (transports construct this as
+    /// `Duration::ZERO` and need not measure anything themselves).  The
+    /// ledger derives bits/sec throughput from it.
+    pub wall: Duration,
 }
 
 /// Mask-collection deadline semantics, owned by the engine and handed to
@@ -487,11 +492,14 @@ pub fn make_policy(kind: PolicyKind) -> Box<dyn ParticipationPolicy> {
 /// broadcast was delivered); the dropped mask's uplink bits never hit
 /// the ledger — exactly the TCP leader's deadline semantics.
 ///
-/// Wrap **single-leader** transports only: sharded transports fold their
-/// vote sums at collection time, ahead of this decorator's filter, so
-/// chaos injected here would desynchronize the merge frames from the
-/// surviving contributions.  The sharded simulator has its own
-/// whole-shard failure knob instead
+/// Wrap transports that carry each contribution's `packed_mask` into
+/// the engine's default aggregation (the in-process simulators) only:
+/// streaming transports — the sharded family **and** the event-loop
+/// [`TcpTransport`](super::transport::TcpTransport) — fold vote sums at
+/// collection time, ahead of this decorator's filter, so chaos injected
+/// here would desynchronize the folded sums from the surviving
+/// contributions.  The sharded simulator has its own whole-shard
+/// failure knob instead
 /// ([`ShardedSimTransport::with_failed_shards`](super::ShardedSimTransport::with_failed_shards)).
 pub struct Flaky<T: Transport> {
     /// The transport whose exchanges get chaos-filtered.
@@ -698,6 +706,7 @@ impl<'a> RoundEngine<'a> {
                 n: self.cfg.train.n,
                 deadline,
             };
+            let round_start = Instant::now();
             let mut traffic = transport.exchange(&ctx)?;
 
             // Reduce in client order (f64 summation order fixed), close
@@ -710,6 +719,7 @@ impl<'a> RoundEngine<'a> {
                 round_loss += c.loss;
             }
             let received = transport.aggregate(&mut self.server, &traffic);
+            traffic.wall = round_start.elapsed();
             self.history.note_round(&traffic);
             self.ledger.record(RoundCost {
                 uplink_bits: up_bits,
@@ -717,6 +727,7 @@ impl<'a> RoundEngine<'a> {
                 clients: received as u32,
                 participants: plan.participants.len() as u32,
                 dropped: traffic.dropped.len() as u32,
+                wall_ns: traffic.wall.as_nanos() as u64,
             });
             self.ledger.record_shard_costs(std::mem::take(&mut traffic.shard_costs));
             self.ledger.record_edge_costs(std::mem::take(&mut traffic.edge_costs));

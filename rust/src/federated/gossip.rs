@@ -22,7 +22,7 @@
 //! The same protocol runs **over real sockets** via
 //! [`WirePeerTransport`] + [`run_peer`]: every node is a separate
 //! process running a tiny [`Leader`] for its graph neighbours (the TCP
-//! leader's reader-thread/event-channel/deadline/reconnect machinery,
+//! leader's sweeper/event-channel/deadline/reconnect machinery,
 //! scoped by [`Leader::from_listener_subset`]), masks travel
 //! peer-to-peer one `n`-bit frame per directed edge, and a coordinator
 //! drives rounds with unbilled `PeerRound`/`Report` frames.
@@ -409,8 +409,8 @@ pub fn run_gossip(
 /// Topology of processes:
 ///
 /// * each peer (`repro serve-peer --node-id i`) runs a **tiny
-///   [`Leader`] for its graph neighbours** — its own listener, one
-///   reader thread per neighbour connection, the shared event channel,
+///   [`Leader`] for its graph neighbours** — its own listener and
+///   event-loop sweeper, the shared event channel,
 ///   per-round deadlines with heartbeat extension, connection
 ///   generations, and reconnect-with-`Hello`, all inherited from the
 ///   TCP leader via [`Leader::from_listener_subset`] — and dials every
@@ -1073,6 +1073,9 @@ mod tests {
                 clients: k as u32,
                 participants: k as u32,
                 dropped: 0,
+                // Sequentially-simulated nodes: no transport ran, so
+                // there is no honest wall clock to attribute.
+                wall_ns: 0,
             });
             if round % eval_every == 0 || round + 1 == cfg.rounds {
                 let mut consensus = vec![0.0f32; n];

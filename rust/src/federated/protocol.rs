@@ -363,9 +363,9 @@ pub fn peek_server_frame(buf: &[u8]) -> Result<ServerFrameKind> {
 }
 
 /// Header-only peek: the frame's kind and claimed client id, **without**
-/// decoding the mask body.  The leader's reader threads use this to
+/// decoding the mask body.  The leader's sweeper uses this to
 /// route frames, so a small arithmetic-coded frame is only expanded
-/// into its (up to `MAX_MASK_LEN`-entry) mask at aggregation time —
+/// into its (up to `MAX_MASK_LEN`-entry) mask at collection time —
 /// never amplified while sitting in the event queue.
 pub fn peek_client_frame(buf: &[u8]) -> Result<(ClientFrameKind, u32)> {
     let (tag, p) = split_frame(buf)?;

@@ -483,7 +483,7 @@ impl Transport for ShardedSimTransport<'_> {
             });
             self.pending_votes.push(votes_frame);
         }
-        Ok(RoundTraffic { contributions, dropped, down_bits, shard_costs, edge_costs: Vec::new() })
+        Ok(RoundTraffic { contributions, dropped, down_bits, shard_costs, ..Default::default() })
     }
 
     /// Root-side merge over the encoded `ShardVotes` frames — literally

@@ -10,10 +10,10 @@
 //!
 //! [`ShardedTransport`] scales the same machinery past one accept loop:
 //! a `ShardPlan` partitions the client id space across `S` per-shard
-//! [`Leader`]s (each with its own listener, reader threads, deadlines,
+//! [`Leader`]s (each with its own listener, sweeper thread, deadlines,
 //! and reconnect-with-`Hello` semantics), `exchange` fans the round
-//! frame out to every shard concurrently, and each shard folds its
-//! collected masks into a partial vote sum that the root merges — via
+//! frame out to every shard concurrently, and each shard streams its
+//! arriving masks into a partial vote sum that the root merges — via
 //! the encoded `ShardVotes` frame — before `Server::try_aggregate`
 //! renormalizes.  `u32` vote sums merge exactly, so S = 1 is
 //! byte-identical to [`TcpTransport`] and any S matches the in-process
@@ -23,27 +23,37 @@
 //!
 //! ## Fault model
 //!
-//! The leader is crash-proof against its workers: one blocking reader
-//! thread per connection feeds a single event channel, so masks are
-//! collected in *arrival* order with a per-round deadline instead of
-//! blocking in stream order.  A worker that disconnects, stalls past the
-//! deadline, sends a malformed frame, claims a foreign client id, or
-//! ships a wrong-length mask is marked **dropped** for the round — never
-//! panics the leader — and a dropped worker may rejoin by reconnecting
-//! with a fresh `Hello` (an acceptor thread keeps listening for the
-//! leader's whole lifetime).  Connections carry a generation number so
-//! events from a replaced connection can never corrupt its successor's
-//! round state.
+//! The leader is crash-proof against its workers: a **single
+//! non-blocking event loop** (the *sweeper* thread) owns the acceptor
+//! and every worker socket, polls the fd set for readiness, reassembles
+//! frames incrementally per connection, and feeds a single event
+//! channel — so masks are collected in *arrival* order with a per-round
+//! deadline instead of blocking in stream order, and leader thread
+//! count is O(1) in the connected population.  A worker that
+//! disconnects, stalls past the deadline, sends a malformed frame,
+//! claims a foreign client id, or ships a wrong-length mask is marked
+//! **dropped** for the round — never panics the leader — and a dropped
+//! worker may rejoin by reconnecting with a fresh `Hello` (the sweeper
+//! keeps accepting for the leader's whole lifetime).  Connections carry
+//! a generation number so events from a replaced connection can never
+//! corrupt its successor's round state.
 //!
-//! Blocking std::net I/O (tokio is unavailable offline); for ≤ tens of
-//! clients one thread per connection is the simpler and equally fast
-//! design.
+//! Aggregation is **streaming**: [`Leader::collect_votes`] folds each
+//! arriving mask straight into the per-entry `u32` vote sum and frees
+//! the frame, so leader memory is O(n) in the model instead of
+//! O(clients × n).  Vote sums commute, so arrival-order folding is
+//! byte-identical to buffering every mask and folding in client order
+//! (pinned in `tests/shard_merge_properties.rs`).
+//!
+//! std::net non-blocking I/O over a thin `poll(2)` wrapper (tokio and
+//! mio are unavailable offline); see PERF.md §"The event-loop leader".
 
-use std::io::{Read, Write};
+use std::io::{ErrorKind, Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::util::error::{Context, Result};
@@ -53,7 +63,6 @@ use crate::{anyhow, bail, ensure};
 use crate::comm::ShardCost;
 
 use super::engine::{Contribution, DeadlinePolicy, RoundCtx, RoundTraffic, ShardPlan, Transport};
-use super::pack_client_mask;
 use super::protocol::{
     decode_client, decode_server, encode_client, encode_server, encode_shard, peek_client_frame,
     ClientFrameKind, ClientMsg, MaskCodec, ServerMsg, ShardMsg,
@@ -84,16 +93,130 @@ pub fn write_frame(stream: &mut TcpStream, frame: &[u8]) -> Result<()> {
     stream.flush().context("flushing frame")
 }
 
-/// What a reader/acceptor thread tells the leader.  `conn` is the
-/// connection generation: events from a stale (replaced) connection are
-/// discarded by comparing it against the slot's current generation.
+/// How long the sweeper parks in `poll(2)` when every socket is idle —
+/// the bound on how quickly it notices the leader's shutdown flag.
+/// Traffic wakes the poll immediately; this only prices idle sweeps.
+const SWEEP_TICK: Duration = Duration::from_millis(25);
+
+/// How long one broadcast write may wait on a full socket send buffer
+/// before the slot is declared dead.  Slot streams are non-blocking
+/// (they share the sweeper's fd), so drop-instead-of-block applies to
+/// writes too: a worker that stops draining its socket costs the leader
+/// at most this, never a parked thread.
+const WRITE_STALL: Duration = Duration::from_secs(10);
+
+/// Readiness polling over the swept fd set: a thin `poll(2)` wrapper.
+/// libc is already linked by std, so the raw syscall binding costs no
+/// dependency (mio/tokio are unavailable offline).
+#[cfg(unix)]
+mod readiness {
+    use std::time::Duration;
+
+    #[repr(C)]
+    struct PollFd {
+        fd: i32,
+        events: i16,
+        revents: i16,
+    }
+    const POLLIN: i16 = 0x001;
+    const POLLOUT: i16 = 0x004;
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: std::os::raw::c_ulong, timeout: i32) -> i32;
+    }
+
+    fn poll_ms(timeout: Duration) -> i32 {
+        timeout.as_millis().min(i32::MAX as u128) as i32
+    }
+
+    /// Wait until at least one fd is readable — or has an error/hangup
+    /// pending, which must wake the sweep too so the dead connection is
+    /// discovered — or `timeout` passes.  Returns one flag per fd, in
+    /// order; all-false on timeout or EINTR (treated as an idle sweep).
+    pub fn wait_readable(fds: &[i32], timeout: Duration) -> Vec<bool> {
+        if fds.is_empty() {
+            std::thread::sleep(timeout);
+            return Vec::new();
+        }
+        let mut pfds: Vec<PollFd> =
+            fds.iter().map(|&fd| PollFd { fd, events: POLLIN, revents: 0 }).collect();
+        let rc = unsafe { poll(pfds.as_mut_ptr(), pfds.len() as _, poll_ms(timeout)) };
+        if rc <= 0 {
+            return vec![false; fds.len()];
+        }
+        pfds.iter().map(|p| p.revents != 0).collect()
+    }
+
+    /// Wait until `fd` is writable (or errored — the retried write then
+    /// surfaces the real error), up to `timeout`.
+    pub fn wait_writable(fd: i32, timeout: Duration) {
+        let mut pfd = PollFd { fd, events: POLLOUT, revents: 0 };
+        unsafe { poll(&mut pfd, 1, poll_ms(timeout)) };
+    }
+
+    pub fn raw_fd<T: std::os::unix::io::AsRawFd>(s: &T) -> i32 {
+        s.as_raw_fd()
+    }
+}
+
+/// Portability fallback (never exercised on the Linux targets this repo
+/// builds for): no `poll(2)`, so a short sleep approximates the tick
+/// and every fd is reported maybe-readable — the non-blocking reads
+/// then return `WouldBlock` harmlessly.
+#[cfg(not(unix))]
+mod readiness {
+    use std::time::Duration;
+
+    pub fn wait_readable(fds: &[i32], _timeout: Duration) -> Vec<bool> {
+        std::thread::sleep(Duration::from_millis(2));
+        vec![true; fds.len()]
+    }
+
+    pub fn wait_writable(_fd: i32, _timeout: Duration) {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    pub fn raw_fd<T>(_s: &T) -> i32 {
+        -1
+    }
+}
+
+/// Write one already-encoded frame to a possibly non-blocking stream.
+/// `WouldBlock` waits for writability (bounded by [`WRITE_STALL`])
+/// instead of spinning; blocking streams never hit that path, so this
+/// is safe for both slot writes and plain sockets.
+fn write_frame_nb(stream: &mut TcpStream, frame: &[u8]) -> Result<()> {
+    let deadline = Instant::now() + WRITE_STALL;
+    let mut off = 0;
+    while off < frame.len() {
+        match stream.write(&frame[off..]) {
+            Ok(0) => bail!("connection closed mid-write"),
+            Ok(k) => off += k,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                let now = Instant::now();
+                ensure!(now < deadline, "worker send buffer full for {WRITE_STALL:?}");
+                readiness::wait_writable(
+                    readiness::raw_fd(stream),
+                    (deadline - now).min(Duration::from_millis(100)),
+                );
+            }
+            Err(e) => return Err(e).context("writing frame"),
+        }
+    }
+    stream.flush().context("flushing frame")
+}
+
+/// What the sweeper (or a [`SimPopulation`]) tells the leader.  `conn`
+/// is the connection generation: events from a stale (replaced)
+/// connection are discarded by comparing it against the slot's current
+/// generation.
 enum Event {
-    /// A worker completed the `Hello` handshake; `stream` is the write
+    /// A worker completed the `Hello` handshake; `link` is the write
     /// half the leader broadcasts on.
-    Hello { client: u32, conn: u64, stream: TcpStream },
+    Hello { client: u32, conn: u64, link: SlotLink },
     /// A raw `Mask` frame from a registered worker.  Kept **encoded**
-    /// until `collect_masks` dequeues it: queued memory is bounded by
-    /// the bytes the worker actually transmitted, so an arithmetic-coded
+    /// until collection dequeues it: queued memory is bounded by the
+    /// bytes the worker actually transmitted, so an arithmetic-coded
     /// frame cannot be amplified into its decoded mask while the leader
     /// is busy between rounds.
     Msg { client: u32, conn: u64, frame: Vec<u8> },
@@ -106,73 +229,176 @@ enum Event {
     Beat { client: u32, conn: u64 },
 }
 
-/// Per-connection reader: forwards raw `Mask` frames (header-peeked
-/// only) and heartbeats, and reports everything else (including its own
-/// demise) as `Gone`.
-fn read_loop(mut stream: TcpStream, client: u32, conn: u64, tx: Sender<Event>) {
-    loop {
-        let Ok(frame) = read_frame(&mut stream) else {
-            // Read error: the connection is done.  Nothing a worker
-            // sends can panic the leader.
-            let _ = tx.send(Event::Gone { client, conn });
-            let _ = stream.shutdown(Shutdown::Both);
-            return;
-        };
-        match peek_client_frame(&frame) {
+/// One connection in the sweeper's fd set: the socket, its generation,
+/// the client it registered as (`None` until its `Hello` lands), and
+/// the incremental frame-reassembly buffer.
+struct SweptConn {
+    stream: TcpStream,
+    conn: u64,
+    client: Option<u32>,
+    buf: Vec<u8>,
+}
+
+impl SweptConn {
+    /// Cut one complete frame out of the reassembly buffer.  The
+    /// declared length is validated against [`MAX_FRAME_LEN`] as soon as
+    /// the 5-byte header is in — before the payload has arrived — so a
+    /// forged length can never grow the buffer.
+    fn next_frame(&mut self) -> Result<Option<Vec<u8>>> {
+        if self.buf.len() < 5 {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes(self.buf[1..5].try_into().unwrap()) as usize;
+        ensure!(len <= MAX_FRAME_LEN, "frame length {len} exceeds maximum {MAX_FRAME_LEN}");
+        if self.buf.len() < 5 + len {
+            return Ok(None);
+        }
+        let rest = self.buf.split_off(5 + len);
+        Ok(Some(std::mem::replace(&mut self.buf, rest)))
+    }
+}
+
+/// Forward one complete frame as an [`Event`].  Returns `false` when
+/// the connection must be closed: a bad handshake, a protocol
+/// violation (Abort, foreign id, mid-stream `Hello`, malformed
+/// header), or the leader being gone.
+fn sweep_frame(c: &mut SweptConn, frame: Vec<u8>, expected: usize, tx: &Sender<Event>) -> bool {
+    match c.client {
+        // Handshake: a strict bounds-checked `Hello` registers the
+        // worker (initial join or reconnect); anything else just drops
+        // the connection, never the leader.
+        None => match decode_client(&frame) {
+            Ok(ClientMsg::Hello { client }) if (client as usize) < expected => {
+                let Ok(write_half) = c.stream.try_clone() else { return false };
+                c.client = Some(client);
+                tx.send(Event::Hello { client, conn: c.conn, link: SlotLink::Tcp(write_half) })
+                    .is_ok()
+            }
+            _ => false,
+        },
+        Some(client) => match peek_client_frame(&frame) {
             Ok((ClientFrameKind::Heartbeat, owner)) if owner == client => {
-                if tx.send(Event::Beat { client, conn }).is_err() {
-                    return; // leader is gone
-                }
+                tx.send(Event::Beat { client, conn: c.conn }).is_ok()
             }
             Ok((ClientFrameKind::Mask | ClientFrameKind::Report, owner)) if owner == client => {
-                if tx.send(Event::Msg { client, conn, frame }).is_err() {
-                    return; // leader is gone
+                tx.send(Event::Msg { client, conn: c.conn, frame }).is_ok()
+            }
+            _ => false,
+        },
+    }
+}
+
+/// Drain one ready connection: read until `WouldBlock`, cut complete
+/// frames, forward events.  Returns `false` when the connection is
+/// finished (EOF, I/O error, forged length, protocol violation) and
+/// must leave the sweep.
+fn sweep_conn(c: &mut SweptConn, scratch: &mut [u8], expected: usize, tx: &Sender<Event>) -> bool {
+    loop {
+        match c.stream.read(scratch) {
+            Ok(0) => return false, // EOF
+            Ok(k) => {
+                c.buf.extend_from_slice(&scratch[..k]);
+                loop {
+                    match c.next_frame() {
+                        Ok(Some(frame)) => {
+                            if !sweep_frame(c, frame, expected, tx) {
+                                return false;
+                            }
+                        }
+                        Ok(None) => break,
+                        Err(_) => return false, // forged frame length
+                    }
                 }
             }
-            // Abort, a foreign-id frame, a mid-stream Hello, or a
-            // malformed header: drop the connection, never the leader.
-            _ => {
-                let _ = tx.send(Event::Gone { client, conn });
-                let _ = stream.shutdown(Shutdown::Both);
-                return;
-            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return true,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => return false,
         }
     }
 }
 
-/// Accept connections for the leader's whole lifetime.  Each connection
-/// gets a handshake thread: a strict bounds-checked `Hello` registers
-/// the worker (initial join or reconnect); anything else just drops the
-/// connection.
-fn spawn_acceptor(listener: TcpListener, expected: usize, tx: Sender<Event>) {
-    let conn_counter = Arc::new(AtomicU64::new(0));
-    std::thread::spawn(move || loop {
-        let Ok((mut stream, _peer)) = listener.accept() else {
-            return; // listener closed: leader process is exiting
-        };
-        stream.set_nodelay(true).ok();
-        let tx = tx.clone();
-        let conn = conn_counter.fetch_add(1, Ordering::Relaxed) + 1;
-        std::thread::spawn(move || {
-            let client = match read_frame(&mut stream).and_then(|f| decode_client(&f)) {
-                Ok(ClientMsg::Hello { client }) if (client as usize) < expected => client,
-                // Bad handshake (out-of-range id, non-Hello frame,
-                // malformed bytes): drop the connection, not the leader.
-                _ => return,
-            };
-            let Ok(reader) = stream.try_clone() else { return };
-            if tx.send(Event::Hello { client, conn, stream }).is_err() {
-                return;
+/// The leader's single sweeper thread: the acceptor and every worker
+/// socket are non-blocking and swept together by readiness polling.
+/// Complete frames produce exactly the [`Event`]s the old
+/// thread-per-connection readers did, so the collection loop upstairs
+/// is unchanged — only the threading model is: one thread, O(1) in the
+/// connected population.  Exits when `stop` is raised (the leader's
+/// `Drop`), the listener dies, or the event channel closes; dropping
+/// its connection set closes the swept fds promptly.
+fn sweep_loop(listener: TcpListener, expected: usize, tx: Sender<Event>, stop: Arc<AtomicBool>) {
+    if listener.set_nonblocking(true).is_err() {
+        return;
+    }
+    let mut conns: Vec<SweptConn> = Vec::new();
+    let mut next_conn: u64 = 1;
+    let mut scratch = vec![0u8; 1 << 16];
+    while !stop.load(Ordering::Acquire) {
+        let fds: Vec<i32> = std::iter::once(readiness::raw_fd(&listener))
+            .chain(conns.iter().map(|c| readiness::raw_fd(&c.stream)))
+            .collect();
+        let ready = readiness::wait_readable(&fds, SWEEP_TICK);
+        if stop.load(Ordering::Acquire) {
+            break;
+        }
+        if ready.first().copied().unwrap_or(false) {
+            loop {
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        stream.set_nodelay(true).ok();
+                        if stream.set_nonblocking(true).is_err() {
+                            continue;
+                        }
+                        conns.push(SweptConn { stream, conn: next_conn, client: None, buf: Vec::new() });
+                        next_conn += 1;
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                    Err(_) => return, // listener died: leader is exiting
+                }
             }
-            read_loop(reader, client, conn, tx);
-        });
-    });
+        }
+        // Service ready connections back-to-front so `swap_remove` can
+        // only move an already-visited entry into a vacated index.
+        for i in (0..conns.len()).rev() {
+            if !ready.get(i + 1).copied().unwrap_or(false) {
+                continue;
+            }
+            if !sweep_conn(&mut conns[i], &mut scratch, expected, &tx) {
+                let dead = conns.swap_remove(i);
+                if let Some(client) = dead.client {
+                    if tx.send(Event::Gone { client, conn: dead.conn }).is_err() {
+                        return;
+                    }
+                }
+                dead.stream.shutdown(Shutdown::Both).ok();
+            }
+        }
+    }
+    // `conns` drops here: the swept fd set closes with the thread.
+}
+
+/// The leader's write half of a registered connection.
+enum SlotLink {
+    /// A real socket — non-blocking (it shares the sweeper's fd), so
+    /// writes go through the `WouldBlock`-aware path.
+    Tcp(TcpStream),
+    /// A simulated client from [`Leader::simulated`]: writes are
+    /// counted, not shipped.
+    Sim,
+}
+
+impl SlotLink {
+    fn close(&self) {
+        if let SlotLink::Tcp(stream) = self {
+            stream.shutdown(Shutdown::Both).ok();
+        }
+    }
 }
 
 /// A registered worker connection: its write half + generation.
 struct Slot {
     conn: u64,
-    stream: TcpStream,
+    link: SlotLink,
 }
 
 /// What one collection deadline produced.
@@ -189,6 +415,33 @@ pub struct RoundReceipt {
     pub dropped: Vec<usize>,
     /// Total mask-frame bytes received.
     pub bytes: u64,
+}
+
+/// What one **streaming** mask collection produced: per-entry `u32`
+/// vote sums over every accepted mask, with the same received/dropped
+/// bookkeeping as [`RoundReceipt`] — but O(n) retained state.  Each
+/// mask is folded into `votes` the moment it is judged and its frame
+/// freed, never buffered per client, so leader memory is O(n) in the
+/// model instead of O(clients × n).  Vote sums commute, so the result
+/// is byte-identical to the buffered path for any arrival order.
+#[derive(Debug)]
+pub struct VoteReceipt {
+    /// Per-entry vote sums over the received masks.
+    pub votes: Vec<u32>,
+    /// Encoded mask-frame bytes per client id (0 where no mask arrived)
+    /// — the per-client uplink cost the ledger attributes.
+    pub frame_bytes: Vec<u64>,
+    /// Participants whose mask arrived, ascending.
+    pub received: Vec<usize>,
+    /// Participants whose mask did not arrive, ascending.
+    pub dropped: Vec<usize>,
+    /// Total mask-frame bytes received.
+    pub bytes: u64,
+    /// Peak bytes of mask state the collector held at any instant: the
+    /// `4n`-byte accumulator plus the one frame (and its decoded mask)
+    /// in flight.  O(n), independent of the client count — asserted,
+    /// not just claimed, in the transport tests.
+    pub peak_held_bytes: u64,
 }
 
 /// One peer's decoded gossip `Report` (see [`Leader::collect_reports`]).
@@ -237,16 +490,76 @@ struct Collected<T> {
     bytes: u64,
 }
 
+/// Injects the event stream of a **simulated** population into a
+/// [`Leader::simulated`] leader: the broadcast / collection / deadline
+/// / generation machinery is the production code, only the socket I/O
+/// is bypassed.  This is the population-axis harness behind
+/// `bench_perf_population` and `repro experiment --id population` — a
+/// 100k-client round exercises the exact streaming-aggregation path
+/// without 100k fds.
+pub struct SimPopulation {
+    tx: Sender<Event>,
+    /// Current connection generation per client id.
+    conns: Vec<u64>,
+    next_conn: u64,
+}
+
+impl SimPopulation {
+    /// Deliver an already-encoded client frame (e.g. a `Mask`) as
+    /// client `k`'s current incarnation.  Returns `false` once the
+    /// leader is gone.
+    pub fn send_frame(&self, k: usize, frame: Vec<u8>) -> bool {
+        self.tx.send(Event::Msg { client: k as u32, conn: self.conns[k], frame }).is_ok()
+    }
+
+    /// Deliver a liveness heartbeat from client `k`.
+    pub fn beat(&self, k: usize) -> bool {
+        self.tx.send(Event::Beat { client: k as u32, conn: self.conns[k] }).is_ok()
+    }
+
+    /// Client `k`'s connection dies (mid-round this drops it for the
+    /// round, exactly like a socket EOF).
+    pub fn leave(&mut self, k: usize) -> bool {
+        self.tx.send(Event::Gone { client: k as u32, conn: self.conns[k] }).is_ok()
+    }
+
+    /// Client `k` reconnects with a fresh `Hello` under a new
+    /// generation (mid-round this drops the old incarnation's pending
+    /// contribution, exactly like a socket reconnect).
+    pub fn rejoin(&mut self, k: usize) -> bool {
+        self.next_conn += 1;
+        self.conns[k] = self.next_conn;
+        self.tx
+            .send(Event::Hello { client: k as u32, conn: self.conns[k], link: SlotLink::Sim })
+            .is_ok()
+    }
+}
+
 /// Leader-side connection registry: accepts `expected` workers, keeps
 /// accepting reconnects, and collects masks concurrently.
 pub struct Leader {
     expected: usize,
     slots: Vec<Option<Slot>>,
     rx: Receiver<Event>,
+    /// Raised by `Drop` so the sweeper exits (and closes the swept fd
+    /// set) within one [`SWEEP_TICK`] instead of leaking parked state.
+    stop: Arc<AtomicBool>,
+    sweeper: Option<JoinHandle<()>>,
     /// Total frame bytes sent to workers (feeds the comm ledger).
     pub sent_bytes: u64,
     /// Total frame bytes received from workers.
     pub recv_bytes: u64,
+}
+
+impl Drop for Leader {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.sweeper.take() {
+            let _ = h.join();
+        }
+        // Slot write halves drop with `self`, closing the leader's
+        // remaining fds.
+    }
 }
 
 impl Leader {
@@ -284,16 +597,22 @@ impl Leader {
             ensure!(k < expected, "subset id {k} ≥ expected {expected}");
         }
         let (tx, rx) = channel();
-        spawn_acceptor(listener, expected, tx);
+        let stop = Arc::new(AtomicBool::new(false));
+        let sweeper = {
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || sweep_loop(listener, expected, tx, stop))
+        };
         let mut leader = Leader {
             expected,
             slots: (0..expected).map(|_| None).collect(),
             rx,
+            stop,
+            sweeper: Some(sweeper),
             sent_bytes: 0,
             recv_bytes: 0,
         };
         while subset.iter().any(|&k| leader.slots[k].is_none()) {
-            let ev = leader.rx.recv().map_err(|_| anyhow!("acceptor thread died"))?;
+            let ev = leader.rx.recv().map_err(|_| anyhow!("leader event loop died"))?;
             // During startup a Hello for a slot whose connection is
             // still live is a configuration error (two workers launched
             // with the same --client-id): fail fast instead of letting
@@ -314,11 +633,41 @@ impl Leader {
         Ok(leader)
     }
 
+    /// A leader over `expected` **simulated** clients: no listener, no
+    /// sweeper, every slot pre-registered — the returned
+    /// [`SimPopulation`] injects the same [`Event`] stream real
+    /// connections produce.  Broadcast, collection, deadlines,
+    /// generations, and streaming aggregation run the production code;
+    /// only socket I/O is bypassed, so the population axis can sweep
+    /// past the fd limit (100k clients, zero reader threads).
+    pub fn simulated(expected: usize) -> Result<(Leader, SimPopulation)> {
+        ensure!(expected > 0, "leader needs at least one expected worker");
+        let (tx, rx) = channel();
+        let mut leader = Leader {
+            expected,
+            slots: (0..expected).map(|_| None).collect(),
+            rx,
+            stop: Arc::new(AtomicBool::new(false)),
+            sweeper: None,
+            sent_bytes: 0,
+            recv_bytes: 0,
+        };
+        for (k, slot) in leader.slots.iter_mut().enumerate() {
+            *slot = Some(Slot { conn: k as u64 + 1, link: SlotLink::Sim });
+        }
+        let pop = SimPopulation {
+            tx,
+            conns: (1..=expected as u64).collect(),
+            next_conn: expected as u64,
+        };
+        Ok((leader, pop))
+    }
+
     /// Handle a connection-lifecycle event outside mask collection
-    /// (in-round `Msg` events are handled by `collect_masks`).
+    /// (in-round `Msg` events are handled by the collection loop).
     fn apply_control(&mut self, ev: Event) {
         match ev {
-            Event::Hello { client, conn, stream } => self.register(client, conn, stream),
+            Event::Hello { client, conn, link } => self.register(client, conn, link),
             Event::Gone { client, conn } => {
                 self.clear_if_current(client as usize, conn);
             }
@@ -328,14 +677,15 @@ impl Leader {
     }
 
     /// Install (or replace, on reconnect) a worker connection.
-    fn register(&mut self, client: u32, conn: u64, stream: TcpStream) {
+    fn register(&mut self, client: u32, conn: u64, link: SlotLink) {
         let k = client as usize;
         if let Some(old) = self.slots[k].take() {
-            // Force the stale reader to exit; its Gone event carries the
-            // old generation and will be ignored.
-            old.stream.shutdown(Shutdown::Both).ok();
+            // Shut the replaced socket down; the sweeper's next read on
+            // it EOFs and its Gone event carries the old generation, so
+            // it is ignored.
+            old.link.close();
         }
-        self.slots[k] = Some(Slot { conn, stream });
+        self.slots[k] = Some(Slot { conn, link });
     }
 
     /// Clear slot `k` iff it still holds generation `conn`.
@@ -350,7 +700,7 @@ impl Leader {
     /// Drop the connection in slot `k` (protocol violation path).
     fn kill(&mut self, k: usize) {
         if let Some(slot) = self.slots[k].take() {
-            slot.stream.shutdown(Shutdown::Both).ok();
+            slot.link.close();
         }
     }
 
@@ -383,7 +733,7 @@ impl Leader {
             match self.rx.recv_timeout(deadline - now) {
                 Ok(ev) => self.apply_control(ev),
                 Err(RecvTimeoutError::Timeout) => return Ok(false),
-                Err(RecvTimeoutError::Disconnected) => bail!("acceptor thread died"),
+                Err(RecvTimeoutError::Disconnected) => bail!("leader event loop died"),
             }
         }
     }
@@ -420,11 +770,19 @@ impl Leader {
             ensure!(k < self.expected, "participant id {k} ≥ expected {}", self.expected);
             let mut dead = false;
             if let Some(slot) = self.slots[k].as_mut() {
-                if write_frame(&mut slot.stream, frame).is_ok() {
-                    receivers += 1;
-                    self.sent_bytes += frame.len() as u64;
-                } else {
-                    dead = true;
+                match &mut slot.link {
+                    SlotLink::Tcp(stream) => {
+                        if write_frame_nb(stream, frame).is_ok() {
+                            receivers += 1;
+                            self.sent_bytes += frame.len() as u64;
+                        } else {
+                            dead = true;
+                        }
+                    }
+                    SlotLink::Sim => {
+                        receivers += 1;
+                        self.sent_bytes += frame.len() as u64;
+                    }
                 }
             }
             if dead {
@@ -483,6 +841,50 @@ impl Leader {
             received,
             dropped: c.dropped,
             bytes: c.bytes,
+        })
+    }
+
+    /// Streaming [`Self::collect_masks`]: identical arrival-order /
+    /// deadline / heartbeat / reconnect semantics, but each accepted
+    /// mask is folded straight into the per-entry vote sum and both the
+    /// frame and the decoded mask are freed before the next event is
+    /// dequeued — the collector retains O(n) mask state no matter how
+    /// many clients contribute.  `u32` vote sums commute, so the result
+    /// is byte-identical to buffering all masks and folding them in
+    /// client order (`tests/shard_merge_properties.rs` pins this under
+    /// permuted arrivals, drops, and reconnect-mid-round).
+    pub fn collect_votes(
+        &mut self,
+        round: u32,
+        participants: &[usize],
+        n: usize,
+        deadline: DeadlinePolicy,
+    ) -> Result<VoteReceipt> {
+        let mut votes = vec![0u32; n];
+        let base = 4 * n as u64;
+        let mut peak = base;
+        let mut judge = |frame: &[u8]| match decode_client(frame) {
+            Ok(ClientMsg::Mask { round: r, mask, .. }) if r == round && mask.len() == n => {
+                peak = peak.max(base + frame.len() as u64 + mask.len() as u64);
+                super::fold_mask_votes(&mut votes, &mask);
+                Judged::Accept(())
+            }
+            // straggler mask for a finished round: discard
+            Ok(ClientMsg::Mask { round: r, .. }) if r != round => Judged::Stale,
+            // Malformed body or wrong-length mask would corrupt
+            // aggregation: protocol violation, connection dropped.
+            _ => Judged::Violation,
+        };
+        let c = self.collect_round(participants, deadline, &mut judge)?;
+        let received: Vec<usize> =
+            participants.iter().copied().filter(|&k| c.items[k].is_some()).collect();
+        Ok(VoteReceipt {
+            votes,
+            frame_bytes: c.frame_bytes,
+            received,
+            dropped: c.dropped,
+            bytes: c.bytes,
+            peak_held_bytes: peak,
         })
     }
 
@@ -561,9 +963,9 @@ impl Leader {
                 }
             };
             match ev {
-                Event::Hello { client, conn, stream } => {
+                Event::Hello { client, conn, link } => {
                     let k = client as usize;
-                    self.register(client, conn, stream);
+                    self.register(client, conn, link);
                     // A mid-round Hello for a still-pending participant
                     // means the worker restarted: the replacement never
                     // saw this round's broadcast (and register() killed
@@ -615,7 +1017,7 @@ impl Leader {
                         continue; // duplicate or unsolicited: ignore
                     };
                     // Decode at dequeue time — the frame was only
-                    // header-peeked by the reader thread.
+                    // header-peeked by the sweeper.
                     let frame_len = frame.len();
                     match judge(&frame) {
                         Judged::Accept(item) => {
@@ -657,17 +1059,25 @@ impl Leader {
 /// deadline misses, and protocol violations surface as `dropped` so the
 /// engine renormalizes instead of crashing.  Worker losses stay local,
 /// so contributions carry `loss = 0.0`.
+///
+/// Collection is **streaming** ([`Leader::collect_votes`]): masks fold
+/// into the vote sum on arrival, so `packed_mask` stays empty and
+/// `aggregate` merges the accumulated votes — byte-identical to the
+/// engine's default per-mask aggregation because `u32` sums commute.
 pub struct TcpTransport {
     /// The fault-tolerant connection registry the rounds run over.
     pub leader: Leader,
     exec: Box<dyn DenseExecutor>,
+    /// This round's streamed vote sums + received count, produced by
+    /// `exchange` and consumed by `aggregate`.
+    pending: Option<(Vec<u32>, usize)>,
 }
 
 impl TcpTransport {
     /// Wrap an accepted [`Leader`] and the executor the engine should
     /// evaluate the global model on.
     pub fn new(leader: Leader, exec: Box<dyn DenseExecutor>) -> Self {
-        Self { leader, exec }
+        Self { leader, exec, pending: None }
     }
 }
 
@@ -675,23 +1085,35 @@ impl Transport for TcpTransport {
     fn exchange(&mut self, ctx: &RoundCtx<'_>) -> Result<RoundTraffic> {
         let receivers = self.leader.broadcast_frame(ctx.frame, ctx.participants)?;
         let receipt =
-            self.leader.collect_masks(ctx.round, ctx.participants, ctx.n, ctx.deadline)?;
+            self.leader.collect_votes(ctx.round, ctx.participants, ctx.n, ctx.deadline)?;
         let mut contributions = Vec::with_capacity(receipt.received.len());
         for &k in &receipt.received {
-            let mask = receipt.masks[k].as_ref().expect("received mask present");
+            // `packed_mask` stays empty: the mask was already folded
+            // into the streamed vote sum at arrival, and this transport
+            // overrides `aggregate` to merge that sum.
             contributions.push(Contribution {
                 client: k,
                 loss: 0.0,
                 up_bits: receipt.frame_bytes[k] * 8,
-                packed_mask: pack_client_mask(mask),
+                packed_mask: Vec::new(),
             });
         }
+        self.pending = Some((receipt.votes, receipt.received.len()));
         Ok(RoundTraffic {
             contributions,
             dropped: receipt.dropped,
             down_bits: (ctx.frame.len() * receivers) as u64 * 8,
             ..Default::default()
         })
+    }
+
+    /// Merge the vote sums streamed during `exchange` and renormalize —
+    /// the same `merge_votes` + `try_aggregate` body as the sharded
+    /// root, with S = 1.
+    fn aggregate(&mut self, server: &mut Server, _traffic: &RoundTraffic) -> usize {
+        let (votes, received) = self.pending.take().expect("aggregate follows exchange");
+        server.merge_votes(&votes, received);
+        server.try_aggregate()
     }
 
     fn eval_executor(&mut self) -> &mut dyn DenseExecutor {
@@ -705,7 +1127,7 @@ impl Transport for TcpTransport {
 
 /// What one shard leader's slice of a round produced.
 struct ShardExchange {
-    receipt: RoundReceipt,
+    receipt: VoteReceipt,
     /// Broadcast bits this shard's leader delivered.
     down_bits: u64,
     /// The shard's encoded `ShardVotes` merge frame (partial vote sums
@@ -718,7 +1140,7 @@ struct ShardExchange {
 ///
 /// A [`ShardPlan`] partitions the client id space across `S` per-shard
 /// [`Leader`]s — each with its own listener and the full concurrent
-/// fault model (reader threads, event channel, deadlines, heartbeat
+/// fault model (one sweeper thread, event channel, deadlines, heartbeat
 /// extension, reconnect-with-`Hello`).  `exchange` fans the engine's
 /// round frame out to every shard on its own thread; each shard
 /// broadcasts to its participants, collects their masks under the
@@ -869,19 +1291,17 @@ impl Transport for ShardedTransport {
                 .map(|(sid, (leader, parts))| {
                     scope.spawn(move || -> Result<ShardExchange> {
                         let receivers = leader.broadcast_frame(ctx.frame, parts)?;
-                        let receipt =
-                            leader.collect_masks(ctx.round, parts, ctx.n, ctx.deadline)?;
-                        let mut votes = vec![0u32; ctx.n];
-                        for &k in &receipt.received {
-                            let mask = receipt.masks[k].as_ref().expect("received mask present");
-                            super::fold_mask_votes(&mut votes, mask);
-                        }
+                        // Streaming: each arriving mask folds straight
+                        // into this shard's partial vote sum, so shard
+                        // memory is O(n), not O(shard clients × n).
+                        let mut receipt =
+                            leader.collect_votes(ctx.round, parts, ctx.n, ctx.deadline)?;
                         let votes_frame = encode_shard(&ShardMsg::ShardVotes {
                             shard: sid as u32,
                             round: ctx.round,
                             received: receipt.received.len() as u32,
                             n: ctx.n,
-                            votes,
+                            votes: std::mem::take(&mut receipt.votes),
                         });
                         Ok(ShardExchange {
                             receipt,
@@ -933,7 +1353,7 @@ impl Transport for ShardedTransport {
             self.pending_votes.push(ex.votes_frame);
         }
         dropped.sort_unstable();
-        Ok(RoundTraffic { contributions, dropped, down_bits, shard_costs, edge_costs: Vec::new() })
+        Ok(RoundTraffic { contributions, dropped, down_bits, shard_costs, ..Default::default() })
     }
 
     /// Root-side merge: decode each shard's `ShardVotes` frame and fold
@@ -1483,6 +1903,205 @@ mod tests {
         let mut w = Worker::connect(&addr, 1, MaskCodec::Raw).expect("connect");
         assert_eq!(leader.join().unwrap().expect("leader"), 1);
         let _ = w.send_abort();
+    }
+
+    /// Streaming collection over real sockets with a deliberately
+    /// reversed arrival order: `collect_votes` must produce exactly the
+    /// vote sums of a buffered client-order fold (u32 sums commute), and
+    /// its byte bookkeeping must match the buffered receipt's.
+    #[test]
+    fn streaming_vote_collection_matches_buffered_fold_under_reversed_arrival() {
+        const WORKERS: usize = 6;
+        const N: usize = 33;
+        let mask_of = |k: usize| -> Vec<bool> { (0..N).map(|i| (i * 7 + k) % 3 == 0).collect() };
+
+        let (listener, addr) = bound_listener();
+        let leader = std::thread::spawn(move || -> Result<VoteReceipt> {
+            let mut leader = Leader::from_listener(listener, WORKERS)?;
+            leader.broadcast(&ServerMsg::Round { round: 0, probs: vec![0.5; N] })?;
+            let participants: Vec<usize> = (0..WORKERS).collect();
+            let receipt =
+                leader.collect_votes(0, &participants, N, DeadlinePolicy::unbounded())?;
+            leader.shutdown()?;
+            Ok(receipt)
+        });
+
+        let workers: Vec<_> = (0..WORKERS)
+            .map(|k| {
+                let addr = addr.clone();
+                std::thread::spawn(move || -> Result<()> {
+                    let mut w = Worker::connect(&addr, k as u32, MaskCodec::Raw)?;
+                    let _ = w.recv()?;
+                    // Higher ids send first: arrival order is the
+                    // reverse of client order.
+                    std::thread::sleep(Duration::from_millis(30 * (WORKERS - k) as u64));
+                    w.send_mask(0, mask_of(k))?;
+                    let _ = w.recv(); // drain the shutdown
+                    Ok(())
+                })
+            })
+            .collect();
+
+        let receipt = leader.join().unwrap().expect("leader");
+        for w in workers {
+            w.join().unwrap().expect("worker");
+        }
+
+        // Buffered reference: fold every mask in *client* order.
+        let mut want = vec![0u32; N];
+        for k in 0..WORKERS {
+            super::super::fold_mask_votes(&mut want, &mask_of(k));
+        }
+        assert_eq!(receipt.votes, want, "arrival-order fold diverged from client-order fold");
+        assert_eq!(receipt.received, (0..WORKERS).collect::<Vec<_>>());
+        assert!(receipt.dropped.is_empty());
+        assert_eq!(receipt.frame_bytes.iter().sum::<u64>(), receipt.bytes);
+        // O(n) collector state: the 4n accumulator plus one in-flight
+        // frame and its decoded mask — never all six.
+        assert!(receipt.peak_held_bytes >= 4 * N as u64);
+        assert!(
+            receipt.peak_held_bytes < (6 * WORKERS * N + 64) as u64 / 2,
+            "peak {} suggests frames were buffered, not streamed",
+            receipt.peak_held_bytes
+        );
+    }
+
+    #[cfg(target_os = "linux")]
+    fn thread_count() -> usize {
+        let status = std::fs::read_to_string("/proc/self/status").unwrap();
+        status
+            .lines()
+            .find_map(|l| l.strip_prefix("Threads:"))
+            .expect("Threads: line in /proc/self/status")
+            .trim()
+            .parse()
+            .unwrap()
+    }
+
+    #[cfg(target_os = "linux")]
+    fn fd_count() -> usize {
+        std::fs::read_dir("/proc/self/fd").unwrap().count()
+    }
+
+    /// The C10K fix, asserted rather than claimed: 100 sequential rounds
+    /// — with a connect/abort churner reconnecting throughout — must not
+    /// grow the process's thread or fd count past its steady state, and
+    /// dropping the leader must join the sweeper and close the swept fd
+    /// set, returning both counters to their pre-leader baselines.
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn hundred_rounds_grow_no_threads_or_fds_and_drop_closes_the_fd_set() {
+        let base_threads = thread_count();
+        let base_fds = fd_count();
+
+        let (listener, addr) = bound_listener();
+        let workers: Vec<_> = (0..2u32)
+            .map(|id| {
+                let addr = addr.clone();
+                std::thread::spawn(move || -> Result<()> {
+                    let mut w = Worker::connect(&addr, id, MaskCodec::Raw)?;
+                    loop {
+                        match w.recv()? {
+                            ServerMsg::Round { round, .. } => w.send_mask(round, vec![true])?,
+                            _ => return Ok(()),
+                        }
+                    }
+                })
+            })
+            .collect();
+        // Expect three ids but only block startup on the two steady
+        // workers; id 2 is the churner's.
+        let mut leader = Leader::from_listener_subset(listener, 3, &[0, 1]).expect("leader");
+
+        let mut run_round = |leader: &mut Leader, round: u32| {
+            let msg = ServerMsg::Round { round, probs: vec![1.0] };
+            leader.broadcast_to(&msg, &[0, 1]).expect("broadcast");
+            let receipt = leader
+                .collect_votes(round, &[0, 1], 1, DeadlinePolicy::fixed(Duration::from_secs(20)))
+                .expect("collect");
+            assert_eq!(receipt.received, vec![0, 1], "round {round}");
+        };
+
+        for round in 0..10 {
+            run_round(&mut leader, round);
+        }
+        let steady_threads = thread_count();
+        let steady_fds = fd_count();
+
+        for round in 10..100 {
+            if round % 10 == 0 {
+                // A short-lived extra connection each decade: Hello,
+                // Abort, gone.  Its socket must leave the swept set (and
+                // its slot's write half must drop) without residue.
+                let mut churn = Worker::connect(&addr, 2, MaskCodec::Raw).expect("churner");
+                churn.send_abort().expect("abort");
+            }
+            run_round(&mut leader, round);
+        }
+        // Let the sweeper notice the last churner's EOF, then drain the
+        // resulting events through one more round.
+        std::thread::sleep(4 * SWEEP_TICK);
+        run_round(&mut leader, 100);
+
+        assert_eq!(thread_count(), steady_threads, "reader threads grew with rounds");
+        assert_eq!(fd_count(), steady_fds, "fds leaked across rounds/reconnects");
+
+        leader.shutdown().expect("shutdown");
+        for w in workers {
+            w.join().unwrap().expect("worker");
+        }
+        drop(leader); // joins the sweeper, closes the swept fd set
+        assert_eq!(thread_count(), base_threads, "leader drop leaked its sweeper");
+        assert_eq!(fd_count(), base_fds, "leader drop leaked fds");
+    }
+
+    /// The population-axis claim, asserted: a 10k-client simulated round
+    /// completes with zero extra leader threads (O(1) in the client
+    /// count) and the streaming collector's peak held mask state is
+    /// *identical* at 1k and 10k clients — O(n) in the model, not
+    /// O(clients × n).
+    #[test]
+    fn ten_thousand_simulated_clients_need_o1_threads_and_on_mask_memory() {
+        const N: usize = 256;
+        let round_peak = |clients: usize| -> u64 {
+            let (mut leader, pop) = Leader::simulated(clients).expect("simulated leader");
+            assert!(leader.sweeper.is_none(), "simulated leader must not spawn threads");
+            let participants: Vec<usize> = (0..clients).collect();
+            let msg = ServerMsg::Round { round: 0, probs: vec![0.5; N] };
+            leader.broadcast_to(&msg, &participants).expect("broadcast");
+            let mut want = vec![0u32; N];
+            for k in 0..clients {
+                let mask: Vec<bool> = (0..N).map(|i| (i + k) % 3 == 0).collect();
+                super::super::fold_mask_votes(&mut want, &mask);
+                let frame = encode_client(
+                    &ClientMsg::Mask { round: 0, client: k as u32, n: N, mask },
+                    MaskCodec::Raw,
+                );
+                assert!(pop.send_frame(k, frame));
+            }
+            let receipt = leader
+                .collect_votes(0, &participants, N, DeadlinePolicy::unbounded())
+                .expect("collect");
+            assert_eq!(receipt.received.len(), clients);
+            assert!(receipt.dropped.is_empty());
+            assert_eq!(receipt.votes, want);
+            receipt.peak_held_bytes
+        };
+
+        #[cfg(target_os = "linux")]
+        let base_threads = thread_count();
+        let peak_1k = round_peak(1_000);
+        let peak_10k = round_peak(10_000);
+        #[cfg(target_os = "linux")]
+        assert_eq!(thread_count(), base_threads, "simulated rounds grew the thread count");
+
+        assert_eq!(
+            peak_1k, peak_10k,
+            "collector peak grew with the population: memory is not O(n)"
+        );
+        // And the absolute bound: 4n accumulator + one frame + one
+        // decoded mask, far below even two buffered frames.
+        assert!(peak_10k < (8 * N + 128) as u64, "peak {peak_10k} too high for O(n)");
     }
 
     /// A worker that aborts after round 0 can reconnect with a fresh

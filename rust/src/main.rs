@@ -7,7 +7,7 @@
 //!   serve-peer       — gossip node process (tiny leader for its
 //!                      topology neighbours + dials the coordinator)
 //!   experiment       — regenerate a paper table/figure (fig3|fig4|table1|
-//!                      table4|fig5|fig6|dropout|theory)
+//!                      table4|fig5|fig6|dropout|population|theory)
 //!   comm-report      — Table 1 savings ledger for a config
 //!   info             — artifact manifest + platform probe
 //!
@@ -73,7 +73,7 @@ const USAGE: &str = "usage: repro <subcommand> [options]
                     [--round-timeout-max-ms MS]
   serve-client      --addr host:port[,host:port...] --client-id K --config <toml>
   serve-peer        --addr host:port --node-id K --config <toml>
-  experiment        --id fig3|fig4|table1|table4|fig5|fig6|dropout|theory
+  experiment        --id fig3|fig4|table1|table4|fig5|fig6|dropout|population|theory
                     [--scale ci|paper] [--out results/]
   comm-report       --config <toml>
   info              [--artifacts artifacts/]
@@ -322,6 +322,20 @@ fn print_fed_outcome(cfg: &FedConfig, out: &zampling::federated::FedOutcome) {
         "savings: client {:.1}x server {:.1}x (naive = 32m = {} bits/round/client)",
         rep.client_savings, rep.server_savings, rep.naive_bits
     );
+    print_throughput(&out.ledger);
+}
+
+/// The ledger's bandwidth view: bits/round says what a round costs,
+/// this says how fast the transport moved it.  Silent when no round
+/// carried a measured wall clock (e.g. baseline recorders).
+fn print_throughput(ledger: &zampling::comm::CommLedger) {
+    if let Some(bps) = ledger.cumulative_throughput_bps() {
+        println!(
+            "throughput: {:.3} Mbit/s over {:.2} s measured round wall-clock",
+            bps / 1e6,
+            ledger.total_wall().as_secs_f64()
+        );
+    }
 }
 
 /// TCP leader: serve rounds to `serve-client` worker processes — the
@@ -377,6 +391,7 @@ fn run_tcp_leader(
         out.ledger.total_dropped(),
         cfg.rounds
     );
+    print_throughput(&out.ledger);
     println!(
         "leader done: sent {} KiB, received {} KiB",
         transport.leader.sent_bytes / 1024,
@@ -443,6 +458,7 @@ fn run_sharded_leader(
         cfg.rounds,
         out.ledger.total_merge_bits() / 8 / 1024
     );
+    print_throughput(&out.ledger);
     for (s, (up, down, merge, received, dropped)) in
         out.ledger.shard_totals().into_iter().enumerate()
     {
@@ -509,6 +525,7 @@ fn run_gossip_coordinator(
         out.ledger.total_dropped(),
         cfg.rounds
     );
+    print_throughput(&out.ledger);
     println!(
         "edge ledger: {} KiB over {} directed edges ({} bits per edge per round)",
         out.ledger.total_edge_bits() / 8 / 1024,
@@ -709,6 +726,10 @@ fn cmd_experiment(args: &Args) -> Result<(), String> {
         "fig6" => {
             let bars = experiments::zhou_comparison::run(scale);
             experiments::zhou_comparison::print_figure(&bars);
+        }
+        "population" => {
+            let rows = experiments::population::run(scale).map_err(|e| format!("{e:#}"))?;
+            experiments::population::print_table(&rows);
         }
         "theory" => print_theory_report(),
         other => return Err(format!("unknown experiment '{other}'")),

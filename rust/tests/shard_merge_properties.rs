@@ -7,8 +7,11 @@
 //! the crate's deterministic `util::prop::for_all` driver.
 
 use zampling::comm::pack_bits;
-use zampling::federated::protocol::{decode_shard, encode_shard, ShardMsg};
-use zampling::federated::{Server, ShardPlan};
+use zampling::federated::protocol::{
+    decode_shard, encode_client, encode_shard, ClientMsg, MaskCodec, ShardMsg,
+};
+use zampling::federated::transport::Leader;
+use zampling::federated::{DeadlinePolicy, Server, ShardPlan};
 use zampling::rng::{Rng, Xoshiro256pp};
 use zampling::util::prop::{for_all, Gen};
 
@@ -102,6 +105,148 @@ fn merging_partial_vote_sums_equals_single_leader_aggregation() {
         // A fully-dropped round must leave p untouched, not NaN.
         if central_received == 0 && want != vec![0.5; input.n] {
             return Err("zero-receipt round mutated p".into());
+        }
+        Ok(())
+    });
+}
+
+/// What one client does during a streaming round.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Fate {
+    /// Delivers its mask (at a permuted position in the arrival order).
+    Sends,
+    /// Connection dies mid-round without a mask (socket EOF analogue).
+    Leaves,
+    /// Restarts mid-round: its fresh `Hello` replaces the connection, so
+    /// the round must drop it — and a mask sent by the *new* incarnation
+    /// (which never saw the broadcast) must be ignored, not folded.
+    Reconnects { then_sends: bool },
+}
+
+/// A generated streaming round: a population, per-client fates, a codec,
+/// and a seed for the arrival-order permutation.
+#[derive(Debug)]
+struct StreamInput {
+    n: usize,
+    clients: usize,
+    fates: Vec<Fate>,
+    masks: Vec<Vec<bool>>,
+    codec: MaskCodec,
+    order_seed: u64,
+}
+
+fn gen_stream_input(g: &mut Gen) -> StreamInput {
+    let n = g.usize_in(1, 200);
+    let clients = g.usize_in(1, 24);
+    let mut rng = Xoshiro256pp::seed_from(g.seed());
+    let drop_rate = g.f64_in(0.0, 0.6);
+    let fates = (0..clients)
+        .map(|_| {
+            if rng.bernoulli(drop_rate) {
+                if rng.bernoulli(0.5) {
+                    Fate::Leaves
+                } else {
+                    Fate::Reconnects { then_sends: rng.bernoulli(0.5) }
+                }
+            } else {
+                Fate::Sends
+            }
+        })
+        .collect();
+    let masks = (0..clients)
+        .map(|_| (0..n).map(|_| rng.bernoulli(0.5)).collect())
+        .collect();
+    let codec = if g.bool_p(0.5) { MaskCodec::Raw } else { MaskCodec::Arithmetic };
+    StreamInput { n, clients, fates, masks, codec, order_seed: g.seed() }
+}
+
+/// Streaming (arrival-order) vote folding through the production
+/// collector must be byte-identical to buffered client-order aggregation
+/// for ANY arrival permutation, drop pattern, and reconnect-mid-round —
+/// the invariant that lets the event-loop leader free each mask frame
+/// the moment it arrives.
+#[test]
+fn streaming_arrival_order_fold_is_byte_identical_to_buffered_aggregation() {
+    for_all("streaming-equals-buffered", 200, 0xF01D, gen_stream_input, |input| {
+        let (mut leader, mut pop) =
+            Leader::simulated(input.clients).map_err(|e| format!("leader: {e}"))?;
+
+        // Per-client event scripts, then a seeded interleave across
+        // clients (per-client order preserved, cross-client order
+        // permuted) — the sim analogue of racing sockets.
+        let mut scripts: Vec<Vec<&str>> = Vec::with_capacity(input.clients);
+        for k in 0..input.clients {
+            scripts.push(match input.fates[k] {
+                Fate::Sends => vec!["send"],
+                Fate::Leaves => vec!["leave"],
+                Fate::Reconnects { then_sends: false } => vec!["rejoin"],
+                Fate::Reconnects { then_sends: true } => vec!["rejoin", "send"],
+            });
+        }
+        let mut order_rng = Xoshiro256pp::seed_from(input.order_seed);
+        let mut cursors = vec![0usize; input.clients];
+        let mut remaining: usize = scripts.iter().map(|s| s.len()).sum();
+        while remaining > 0 {
+            let live: Vec<usize> =
+                (0..input.clients).filter(|&k| cursors[k] < scripts[k].len()).collect();
+            let k = live[(order_rng.next_u64() % live.len() as u64) as usize];
+            let step = scripts[k][cursors[k]];
+            cursors[k] += 1;
+            remaining -= 1;
+            let delivered = match step {
+                "send" => pop.send_frame(
+                    k,
+                    encode_client(
+                        &ClientMsg::Mask {
+                            round: 0,
+                            client: k as u32,
+                            n: input.n,
+                            mask: input.masks[k].clone(),
+                        },
+                        input.codec,
+                    ),
+                ),
+                "leave" => pop.leave(k),
+                "rejoin" => pop.rejoin(k),
+                _ => unreachable!(),
+            };
+            if !delivered {
+                return Err("event channel closed early".into());
+            }
+        }
+
+        let participants: Vec<usize> = (0..input.clients).collect();
+        // Unbounded deadline: every pending client resolves through an
+        // event (mask, Gone, or mid-round Hello), never a timer.
+        let receipt = leader
+            .collect_votes(0, &participants, input.n, DeadlinePolicy::unbounded())
+            .map_err(|e| format!("collect: {e}"))?;
+
+        let survivors: Vec<usize> =
+            (0..input.clients).filter(|&k| input.fates[k] == Fate::Sends).collect();
+        if receipt.received != survivors {
+            return Err(format!(
+                "received {:?} != surviving senders {survivors:?} (fates {:?})",
+                receipt.received, input.fates
+            ));
+        }
+
+        // Buffered reference: every surviving mask, folded in client
+        // order through the per-mask server path.
+        let mut central = Server::new(vec![0.5; input.n]);
+        for &k in &survivors {
+            central.receive_mask(&pack_bits(&input.masks[k]));
+        }
+        let central_received = central.try_aggregate();
+
+        // Streaming: merge the arrival-order vote sums.
+        let mut root = Server::new(vec![0.5; input.n]);
+        root.merge_votes(&receipt.votes, receipt.received.len());
+        if root.try_aggregate() != central_received {
+            return Err("received counts diverged".into());
+        }
+        if root.probs != central.probs {
+            return Err("streamed probabilities != buffered probabilities".into());
         }
         Ok(())
     });
