@@ -1,0 +1,427 @@
+//! loomlite — an offline stand-in for the [`loom`] permutation tester.
+//!
+//! The workspace builds with zero external dependencies, so the real
+//! loom crate is unavailable.  This crate mirrors the slice of loom's
+//! API that `rust/tests/loom_model.rs` and `runtime/sync.rs` use, with
+//! honest semantics:
+//!
+//! * [`model`] runs the closure many times (not exhaustively — loom's
+//!   DPOR search is replaced by **randomized schedule perturbation**:
+//!   every lock/atomic/spawn call may yield or briefly sleep, driven by
+//!   a per-iteration seed, so each iteration explores a different real
+//!   interleaving).  A failing iteration reports its index before
+//!   re-raising the panic.
+//! * [`sync`] wraps the std primitives 1:1 (same signatures, chaos
+//!   injected around each operation), so code written against
+//!   `runtime::sync` compiles unchanged against the real loom if it is
+//!   ever vendored.
+//! * [`cell::UnsafeCell`] adds the dynamic access checking loom's cell
+//!   provides: overlapping `with_mut` calls (or `with` during a
+//!   `with_mut`) panic instead of being silent UB.
+//!
+//! What this cannot do that real loom can: explore *all* interleavings,
+//! model weak memory orderings, or detect a data race that never
+//! manifests under OS scheduling.  Those gaps are covered by the Miri
+//! and ThreadSanitizer CI lanes (see docs/ANALYSIS.md).
+//!
+//! [`loom`]: https://docs.rs/loom
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU32, Ordering as StdOrdering};
+
+/// Iterations per [`model`] call unless `LOOMLITE_ITERS` overrides it.
+pub const DEFAULT_ITERS: usize = 200;
+
+static SCHEDULE_SEED: AtomicU32 = AtomicU32::new(0x9e37_79b9);
+
+thread_local! {
+    static RNG: Cell<u32> = const { Cell::new(0) };
+}
+
+/// One step of the thread-local xorshift32 stream, lazily seeded from
+/// the current schedule seed (so worker threads spawned in different
+/// [`model`] iterations perturb differently).
+fn rng_next() -> u32 {
+    RNG.with(|c| {
+        let mut x = c.get();
+        if x == 0 {
+            x = SCHEDULE_SEED.fetch_add(0x6d2b_79f5, StdOrdering::Relaxed) | 1;
+        }
+        x ^= x << 13;
+        x ^= x >> 17;
+        x ^= x << 5;
+        c.set(x);
+        x
+    })
+}
+
+/// Schedule perturbation: called around every modeled operation.
+/// Mostly a cheap `yield_now`, occasionally a short sleep — the sleep is
+/// what forces genuinely different OS schedules (a yield alone often
+/// returns to the same thread on an idle machine).
+fn chaos() {
+    let r = rng_next();
+    if r % 61 == 0 {
+        std::thread::sleep(std::time::Duration::from_micros((r % 5 + 1) as u64 * 20));
+    } else if r % 3 == 0 {
+        std::thread::yield_now();
+    }
+}
+
+/// Run `f` under many perturbed schedules (loom's `loom::model`).
+///
+/// Panics propagate after reporting which iteration failed; rerunning
+/// is *not* guaranteed to reproduce it (schedules are OS-real), which
+/// is the price of the offline stand-in.
+pub fn model<F>(f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let iters = std::env::var("LOOMLITE_ITERS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(DEFAULT_ITERS);
+    for i in 0..iters {
+        SCHEDULE_SEED.store(
+            (i as u32).wrapping_mul(0x85eb_ca6b).wrapping_add(0x9e37_79b9) | 1,
+            StdOrdering::Relaxed,
+        );
+        // Reseed this thread too, not only freshly spawned ones.
+        RNG.with(|c| c.set(0));
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(&f)) {
+            eprintln!("loomlite: model closure failed on schedule {i} of {iters}");
+            resume_unwind(payload);
+        }
+    }
+}
+
+/// Thread spawning with schedule perturbation (loom's `loom::thread`).
+pub mod thread {
+    pub use std::thread::JoinHandle;
+
+    /// Spawn a perturbed thread (chaos before the closure body runs, so
+    /// spawn-vs-parent races are explored in both orders).
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        super::chaos();
+        std::thread::spawn(move || {
+            super::chaos();
+            f()
+        })
+    }
+
+    /// Cooperative yield (also a perturbation point).
+    pub fn yield_now() {
+        super::chaos();
+        std::thread::yield_now();
+    }
+}
+
+/// Synchronization primitives with the std API and chaos injection
+/// (loom's `loom::sync`).
+pub mod sync {
+    pub use std::sync::{Arc, LockResult, MutexGuard, WaitTimeoutResult};
+
+    /// `std::sync::Mutex` with perturbation before the acquire and
+    /// while holding the lock (stretching critical sections is what
+    /// exposes missed-wakeup and ordering bugs).
+    pub struct Mutex<T: ?Sized>(std::sync::Mutex<T>);
+
+    impl<T> Mutex<T> {
+        /// Wrap `t` (same signature as `std::sync::Mutex::new`).
+        pub fn new(t: T) -> Self {
+            Self(std::sync::Mutex::new(t))
+        }
+
+        /// Unwrap the inner value.
+        pub fn into_inner(self) -> LockResult<T> {
+            self.0.into_inner()
+        }
+    }
+
+    impl<T: ?Sized> Mutex<T> {
+        /// Acquire, with a perturbation point on each side.
+        pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+            super::chaos();
+            let g = self.0.lock();
+            super::chaos();
+            g
+        }
+    }
+
+    /// `std::sync::Condvar` with perturbation around wait/notify.
+    pub struct Condvar(std::sync::Condvar);
+
+    impl Condvar {
+        /// Same as `std::sync::Condvar::new`.
+        pub fn new() -> Self {
+            Self(std::sync::Condvar::new())
+        }
+
+        /// Block on the condition (perturbed on wake).
+        pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+            let g = self.0.wait(guard);
+            super::chaos();
+            g
+        }
+
+        /// Wake one waiter (perturbed before the notify, so the
+        /// store-then-notify vs wait-then-recheck orders interleave).
+        pub fn notify_one(&self) {
+            super::chaos();
+            self.0.notify_one();
+        }
+
+        /// Wake every waiter.
+        pub fn notify_all(&self) {
+            super::chaos();
+            self.0.notify_all();
+        }
+    }
+
+    impl Default for Condvar {
+        fn default() -> Self {
+            Self::new()
+        }
+    }
+
+    /// Atomics with the std API and chaos injection.
+    pub mod atomic {
+        pub use std::sync::atomic::Ordering;
+
+        macro_rules! chaotic_atomic {
+            ($(#[$doc:meta])* $name:ident, $std:ty, $t:ty) => {
+                $(#[$doc])*
+                #[derive(Debug, Default)]
+                pub struct $name($std);
+
+                impl $name {
+                    /// Wrap an initial value.
+                    pub fn new(v: $t) -> Self {
+                        Self(<$std>::new(v))
+                    }
+
+                    /// Perturbed load.
+                    pub fn load(&self, order: Ordering) -> $t {
+                        super::super::chaos();
+                        self.0.load(order)
+                    }
+
+                    /// Perturbed store.
+                    pub fn store(&self, v: $t, order: Ordering) {
+                        super::super::chaos();
+                        self.0.store(v, order);
+                        super::super::chaos();
+                    }
+
+                    /// Perturbed swap.
+                    pub fn swap(&self, v: $t, order: Ordering) -> $t {
+                        super::super::chaos();
+                        self.0.swap(v, order)
+                    }
+
+                    /// Perturbed compare-exchange.
+                    pub fn compare_exchange(
+                        &self,
+                        current: $t,
+                        new: $t,
+                        success: Ordering,
+                        failure: Ordering,
+                    ) -> Result<$t, $t> {
+                        super::super::chaos();
+                        self.0.compare_exchange(current, new, success, failure)
+                    }
+                }
+            };
+        }
+
+        chaotic_atomic!(
+            /// `std::sync::atomic::AtomicBool` with perturbed accesses.
+            AtomicBool,
+            std::sync::atomic::AtomicBool,
+            bool
+        );
+        chaotic_atomic!(
+            /// `std::sync::atomic::AtomicUsize` with perturbed accesses.
+            AtomicUsize,
+            std::sync::atomic::AtomicUsize,
+            usize
+        );
+        chaotic_atomic!(
+            /// `std::sync::atomic::AtomicU32` with perturbed accesses.
+            AtomicU32,
+            std::sync::atomic::AtomicU32,
+            u32
+        );
+        chaotic_atomic!(
+            /// `std::sync::atomic::AtomicU64` with perturbed accesses.
+            AtomicU64,
+            std::sync::atomic::AtomicU64,
+            u64
+        );
+
+        macro_rules! chaotic_fetch_ops {
+            ($name:ident, $t:ty) => {
+                impl $name {
+                    /// Perturbed fetch-add.
+                    pub fn fetch_add(&self, v: $t, order: Ordering) -> $t {
+                        super::super::chaos();
+                        self.0.fetch_add(v, order)
+                    }
+
+                    /// Perturbed fetch-sub.
+                    pub fn fetch_sub(&self, v: $t, order: Ordering) -> $t {
+                        super::super::chaos();
+                        self.0.fetch_sub(v, order)
+                    }
+
+                    /// Perturbed fetch-max.
+                    pub fn fetch_max(&self, v: $t, order: Ordering) -> $t {
+                        super::super::chaos();
+                        self.0.fetch_max(v, order)
+                    }
+                }
+            };
+        }
+
+        chaotic_fetch_ops!(AtomicUsize, usize);
+        chaotic_fetch_ops!(AtomicU32, u32);
+        chaotic_fetch_ops!(AtomicU64, u64);
+    }
+}
+
+/// Dynamically-checked interior mutability (loom's `loom::cell`).
+pub mod cell {
+    use std::sync::atomic::{AtomicIsize, Ordering};
+
+    /// `UnsafeCell` whose accesses are tracked at runtime: overlapping
+    /// writers (or a writer overlapping readers) panic loudly instead
+    /// of being silent undefined behaviour.  State: `0` idle, `> 0`
+    /// that many readers, `-1` one writer.
+    pub struct UnsafeCell<T: ?Sized> {
+        state: AtomicIsize,
+        data: std::cell::UnsafeCell<T>,
+    }
+
+    // SAFETY: cross-thread access is mediated by the dynamic
+    // reader/writer tracking above — an overlap panics before the raw
+    // pointer is handed out, which is exactly the exclusivity `Send +
+    // Sync` data needs.
+    unsafe impl<T: ?Sized + Send> Send for UnsafeCell<T> {}
+    unsafe impl<T: ?Sized + Send + Sync> Sync for UnsafeCell<T> {}
+
+    impl<T> UnsafeCell<T> {
+        /// Wrap `t`.
+        pub fn new(t: T) -> Self {
+            Self { state: AtomicIsize::new(0), data: std::cell::UnsafeCell::new(t) }
+        }
+
+        /// Unwrap the inner value.
+        pub fn into_inner(self) -> T {
+            self.data.into_inner()
+        }
+
+        /// Shared access: panics if a mutable access is in flight.
+        pub fn with<R>(&self, f: impl FnOnce(*const T) -> R) -> R {
+            super::chaos();
+            let prev = self.state.fetch_add(1, Ordering::AcqRel);
+            if prev < 0 {
+                self.state.fetch_sub(1, Ordering::AcqRel);
+                panic!("loomlite::cell: immutable access during a mutable access");
+            }
+            let r = f(self.data.get());
+            self.state.fetch_sub(1, Ordering::AcqRel);
+            r
+        }
+
+        /// Exclusive access: panics if *any* other access is in flight.
+        pub fn with_mut<R>(&self, f: impl FnOnce(*mut T) -> R) -> R {
+            super::chaos();
+            if self.state.compare_exchange(0, -1, Ordering::AcqRel, Ordering::Acquire).is_err() {
+                panic!("loomlite::cell: overlapping mutable access");
+            }
+            let r = f(self.data.get());
+            self.state.store(0, Ordering::Release);
+            r
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::atomic::{AtomicUsize as StdAtomicUsize, Ordering as O};
+    use std::sync::Barrier;
+
+    #[test]
+    fn model_runs_the_closure_repeatedly() {
+        static COUNT: StdAtomicUsize = StdAtomicUsize::new(0);
+        COUNT.store(0, O::SeqCst);
+        model(|| {
+            COUNT.fetch_add(1, O::SeqCst);
+        });
+        assert!(COUNT.load(O::SeqCst) > 1, "model must explore more than one schedule");
+    }
+
+    #[test]
+    fn mutex_condvar_handoff_works_under_chaos() {
+        model(|| {
+            let slot = sync::Arc::new((sync::Mutex::new(None::<u32>), sync::Condvar::new()));
+            let producer = {
+                let slot = sync::Arc::clone(&slot);
+                thread::spawn(move || {
+                    *slot.0.lock().unwrap() = Some(7);
+                    slot.1.notify_all();
+                })
+            };
+            let mut g = slot.0.lock().unwrap();
+            while g.is_none() {
+                g = slot.1.wait(g).unwrap();
+            }
+            assert_eq!(*g, Some(7));
+            drop(g);
+            producer.join().unwrap();
+        });
+    }
+
+    #[test]
+    fn atomics_behave_like_std() {
+        let n = sync::atomic::AtomicUsize::new(3);
+        assert_eq!(n.fetch_add(2, sync::atomic::Ordering::SeqCst), 3);
+        assert_eq!(n.load(sync::atomic::Ordering::SeqCst), 5);
+        let b = sync::atomic::AtomicBool::new(false);
+        b.store(true, sync::atomic::Ordering::Release);
+        assert!(b.load(sync::atomic::Ordering::Acquire));
+    }
+
+    #[test]
+    fn unsafe_cell_flags_overlapping_writers() {
+        let cell = sync::Arc::new(cell::UnsafeCell::new(0u32));
+        let enter = sync::Arc::new(Barrier::new(2));
+        let exit = sync::Arc::new(Barrier::new(2));
+        let writer = {
+            let (cell, enter, exit) =
+                (sync::Arc::clone(&cell), sync::Arc::clone(&enter), sync::Arc::clone(&exit));
+            std::thread::spawn(move || {
+                cell.with_mut(|p| {
+                    unsafe { *p = 1 };
+                    enter.wait();
+                    exit.wait();
+                });
+            })
+        };
+        enter.wait(); // the writer is now inside `with_mut`
+        let denied = catch_unwind(AssertUnwindSafe(|| cell.with(|_| ()))).is_err();
+        exit.wait();
+        writer.join().unwrap();
+        assert!(denied, "overlapping access must panic, not alias");
+        // After the writer exits, access is clean again.
+        assert_eq!(cell.with(|p| unsafe { *p }), 1);
+    }
+}

@@ -6,6 +6,9 @@
 //! Only wins on highly-skewed masks; the ledger picks the cheaper of
 //! RLE / arithmetic / raw per message, like a real wire format would.
 
+use crate::bail;
+use crate::util::error::Result;
+
 /// Encode: varint run lengths, alternating value starting at 0.
 pub fn encode(mask: &[bool]) -> Vec<u8> {
     let mut out = Vec::new();
@@ -24,13 +27,17 @@ pub fn encode(mask: &[bool]) -> Vec<u8> {
     out
 }
 
-/// Decode `n` bits.
-pub fn decode(bytes: &[u8], n: usize) -> Vec<bool> {
+/// Decode `n` bits.  Errors — never panics or spins — on malformed
+/// input: a stream that ends before its runs cover `n` bits is
+/// truncated, and a varint with more value bits than `u64` holds is
+/// forged.  Bytes after the run covering bit `n − 1` are ignored (the
+/// caller knows `n`; this mirrors how a wire consumer would stop).
+pub fn decode(bytes: &[u8], n: usize) -> Result<Vec<bool>> {
     let mut out = Vec::with_capacity(n);
     let mut pos = 0usize;
     let mut current = false;
     while out.len() < n {
-        let (run, used) = read_varint(&bytes[pos..]);
+        let (run, used) = read_varint(&bytes[pos..])?;
         pos += used;
         for _ in 0..run {
             if out.len() == n {
@@ -40,7 +47,7 @@ pub fn decode(bytes: &[u8], n: usize) -> Vec<bool> {
         }
         current = !current;
     }
-    out
+    Ok(out)
 }
 
 fn write_varint(out: &mut Vec<u8>, mut v: u64) {
@@ -55,17 +62,25 @@ fn write_varint(out: &mut Vec<u8>, mut v: u64) {
     }
 }
 
-fn read_varint(bytes: &[u8]) -> (u64, usize) {
+/// Read one LEB128 varint; returns `(value, bytes consumed)`.  Errors on
+/// an empty/truncated stream (the old `(0, 0)` return here is what let
+/// `decode` spin forever on truncated input) and on a continuation
+/// sequence whose value bits overflow `u64` (the old unconditional
+/// `<< shift` was a debug-build panic at shift ≥ 64).
+fn read_varint(bytes: &[u8]) -> Result<(u64, usize)> {
     let mut v = 0u64;
     let mut shift = 0u32;
     for (i, &b) in bytes.iter().enumerate() {
+        if shift >= 64 || (shift == 63 && (b & 0x7f) > 1) {
+            bail!("run-length varint overflows u64 at byte {i}");
+        }
         v |= ((b & 0x7f) as u64) << shift;
         if b & 0x80 == 0 {
-            return (v, i + 1);
+            return Ok((v, i + 1));
         }
         shift += 7;
     }
-    (v, bytes.len())
+    bail!("truncated run-length varint ({} bytes left)", bytes.len());
 }
 
 #[cfg(test)]
@@ -79,7 +94,7 @@ mod tests {
         for q in [0.5f64, 0.02, 0.98] {
             for n in [0usize, 1, 100, 5000] {
                 let mask: Vec<bool> = (0..n).map(|_| rng.bernoulli(q)).collect();
-                assert_eq!(decode(&encode(&mask), n), mask, "q={q} n={n}");
+                assert_eq!(decode(&encode(&mask), n).expect("decode"), mask, "q={q} n={n}");
             }
         }
     }
@@ -87,7 +102,7 @@ mod tests {
     #[test]
     fn leading_one_handled() {
         let mask = vec![true, true, false, true];
-        assert_eq!(decode(&encode(&mask), 4), mask);
+        assert_eq!(decode(&encode(&mask), 4).expect("decode"), mask);
     }
 
     #[test]
@@ -111,12 +126,49 @@ mod tests {
     #[test]
     fn varint_boundaries() {
         let mut out = Vec::new();
-        for v in [0u64, 127, 128, 16_383, 16_384, u32::MAX as u64] {
+        for v in [0u64, 127, 128, 16_383, 16_384, u32::MAX as u64, u64::MAX] {
             out.clear();
             write_varint(&mut out, v);
-            let (got, used) = read_varint(&out);
+            let (got, used) = read_varint(&out).expect("varint");
             assert_eq!(got, v);
             assert_eq!(used, out.len());
         }
+    }
+
+    #[test]
+    fn truncated_input_errors_instead_of_spinning() {
+        // Regression (found by the PR 7 correctness gauntlet): a
+        // truncated stream made `read_varint` return `(0, 0)`, so the
+        // decode loop advanced by zero bytes, pushed zero bits, and
+        // spun forever.
+        let mask: Vec<bool> = (0..100).map(|i| i % 7 == 0).collect();
+        let enc = encode(&mask);
+        for cut in 0..enc.len() {
+            assert!(decode(&enc[..cut], mask.len()).is_err(), "cut={cut} decoded");
+        }
+        assert!(decode(&[], 1).is_err());
+        assert_eq!(decode(&[], 0).expect("empty"), Vec::<bool>::new());
+    }
+
+    #[test]
+    fn overlong_varint_errors_instead_of_overflowing() {
+        // Regression (same gauntlet): ten continuation bytes push the
+        // varint shift past 63 — formerly a debug-build shift-overflow
+        // panic, now a decode error.
+        assert!(decode(&[0xff; 16], 5).is_err());
+        // The largest encodable value still roundtrips exactly.
+        let mut max = Vec::new();
+        write_varint(&mut max, u64::MAX);
+        assert_eq!(read_varint(&max).expect("u64::MAX"), (u64::MAX, max.len()));
+    }
+
+    #[test]
+    fn trailing_bytes_after_bit_n_are_ignored() {
+        // The caller supplies `n`; once the runs cover it, the decoder
+        // stops — extra bytes are not an error (documented contract).
+        let mask = vec![true, false, true];
+        let mut enc = encode(&mask);
+        enc.push(0x03);
+        assert_eq!(decode(&enc, 3).expect("decode"), mask);
     }
 }

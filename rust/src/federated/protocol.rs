@@ -148,6 +148,44 @@ const TAG_SHARD_VOTES: u8 = 8;
 const TAG_PEER_ROUND: u8 = 9;
 const TAG_PEER_REPORT: u8 = 10;
 
+/// Read a little-endian `u32` at byte offset `off` of `p`.  Errors —
+/// never panics — on a short slice: every decoder bounds-checks its
+/// payload length up front, so a failure here is a decoder bug, and the
+/// leader's policy for *any* bad frame is drop-the-connection, not
+/// panic (the `xtask analyze` panic-lint enforces this file stays
+/// `unwrap`-free; see docs/ANALYSIS.md).
+fn le_u32(p: &[u8], off: usize) -> Result<u32> {
+    match p.get(off..off + 4) {
+        Some(b) => {
+            let mut a = [0u8; 4];
+            a.copy_from_slice(b);
+            Ok(u32::from_le_bytes(a))
+        }
+        None => Err(anyhow!("truncated u32 field at offset {off} of a {}-byte payload", p.len())),
+    }
+}
+
+/// Read a little-endian `f64` at byte offset `off` of `p` (same
+/// never-panics contract as [`le_u32`]).
+fn le_f64(p: &[u8], off: usize) -> Result<f64> {
+    match p.get(off..off + 8) {
+        Some(b) => {
+            let mut a = [0u8; 8];
+            a.copy_from_slice(b);
+            Ok(f64::from_le_bytes(a))
+        }
+        None => Err(anyhow!("truncated f64 field at offset {off} of a {}-byte payload", p.len())),
+    }
+}
+
+/// The payload length a 5-byte frame header (`[tag][len: u32 le]`)
+/// declares.  Shared by every streaming reader (`read_frame`, the
+/// sweeper's incremental reassembly) so the length decode itself can
+/// never panic on a short buffer.
+pub(crate) fn declared_frame_len(header: &[u8]) -> Result<usize> {
+    Ok(le_u32(header, 1)? as usize)
+}
+
 fn frame(tag: u8, payload: &[u8]) -> Vec<u8> {
     let mut out = Vec::with_capacity(5 + payload.len());
     out.push(tag);
@@ -242,10 +280,10 @@ pub fn decode_shard(buf: &[u8]) -> Result<ShardMsg> {
     if p.len() < 16 {
         bail!("bad ShardVotes payload length {}", p.len());
     }
-    let round = u32::from_le_bytes(p[0..4].try_into().unwrap());
-    let shard = u32::from_le_bytes(p[4..8].try_into().unwrap());
-    let received = u32::from_le_bytes(p[8..12].try_into().unwrap());
-    let n = u32::from_le_bytes(p[12..16].try_into().unwrap()) as usize;
+    let round = le_u32(p, 0)?;
+    let shard = le_u32(p, 4)?;
+    let received = le_u32(p, 8)?;
+    let n = le_u32(p, 12)? as usize;
     if n > MAX_MASK_LEN {
         bail!("vote length {n} exceeds protocol maximum {MAX_MASK_LEN}");
     }
@@ -254,7 +292,7 @@ pub fn decode_shard(buf: &[u8]) -> Result<ShardMsg> {
     }
     let mut votes = Vec::with_capacity(n);
     for chunk in p[16..].chunks_exact(4) {
-        let v = u32::from_le_bytes(chunk.try_into().unwrap());
+        let v = le_u32(chunk, 0)?;
         if v > received {
             bail!("vote sum {v} exceeds received mask count {received}");
         }
@@ -269,7 +307,7 @@ fn split_frame(buf: &[u8]) -> Result<(u8, &[u8])> {
         bail!("truncated frame header ({} bytes)", buf.len());
     }
     let tag = buf[0];
-    let len = u32::from_le_bytes(buf[1..5].try_into().unwrap()) as usize;
+    let len = declared_frame_len(buf)?;
     let payload = buf.get(5..5 + len).ok_or_else(|| anyhow!("truncated frame payload"))?;
     Ok((tag, payload))
 }
@@ -282,15 +320,15 @@ pub fn decode_server(buf: &[u8]) -> Result<ServerMsg> {
             if p.len() < 4 || (p.len() - 4) % 4 != 0 {
                 bail!("bad Round payload length {}", p.len());
             }
-            let round = u32::from_le_bytes(p[..4].try_into().unwrap());
+            let round = le_u32(p, 0)?;
             Ok(ServerMsg::Round { round, probs: FloatVec::decode(&p[4..]) })
         }
         TAG_PEER_ROUND => {
             if p.len() < 8 {
                 bail!("bad PeerRound payload length {}", p.len());
             }
-            let round = u32::from_le_bytes(p[0..4].try_into().unwrap());
-            let count = u32::from_le_bytes(p[4..8].try_into().unwrap()) as usize;
+            let round = le_u32(p, 0)?;
+            let count = le_u32(p, 4)? as usize;
             if count > MAX_PEER_COUNT {
                 bail!("participant count {count} exceeds protocol maximum {MAX_PEER_COUNT}");
             }
@@ -299,7 +337,7 @@ pub fn decode_server(buf: &[u8]) -> Result<ServerMsg> {
             }
             let mut participants = Vec::with_capacity(count);
             for chunk in p[8..].chunks_exact(4) {
-                let id = u32::from_le_bytes(chunk.try_into().unwrap());
+                let id = le_u32(chunk, 0)?;
                 // Strictly ascending ⇒ sorted and duplicate-free: the
                 // canonical form every consumer (binary_search over the
                 // set) relies on, enforced at the wire boundary.
@@ -320,7 +358,7 @@ fn decode_client_id(p: &[u8], what: &str) -> Result<u32> {
     if p.len() != 4 {
         bail!("bad {what} payload length {} (want 4)", p.len());
     }
-    Ok(u32::from_le_bytes(p.try_into().unwrap()))
+    le_u32(p, 0)
 }
 
 /// What a client frame claims to be, from a cheap header peek.
@@ -374,7 +412,7 @@ pub fn peek_client_frame(buf: &[u8]) -> Result<(ClientFrameKind, u32)> {
             if p.len() < 12 {
                 bail!("bad Mask payload length {}", p.len());
             }
-            Ok((ClientFrameKind::Mask, u32::from_le_bytes(p[4..8].try_into().unwrap())))
+            Ok((ClientFrameKind::Mask, le_u32(p, 4)?))
         }
         TAG_HELLO => Ok((ClientFrameKind::Hello, decode_client_id(p, "Hello")?)),
         TAG_ABORT => Ok((ClientFrameKind::Abort, decode_client_id(p, "Abort")?)),
@@ -383,7 +421,7 @@ pub fn peek_client_frame(buf: &[u8]) -> Result<(ClientFrameKind, u32)> {
             if p.len() < 20 {
                 bail!("bad Report payload length {}", p.len());
             }
-            Ok((ClientFrameKind::Report, u32::from_le_bytes(p[4..8].try_into().unwrap())))
+            Ok((ClientFrameKind::Report, le_u32(p, 4)?))
         }
         t => bail!("unexpected client tag {t}"),
     }
@@ -399,9 +437,9 @@ pub fn decode_client(buf: &[u8]) -> Result<ClientMsg> {
             if p.len() < 12 {
                 bail!("bad Mask payload length {}", p.len());
             }
-            let round = u32::from_le_bytes(p[0..4].try_into().unwrap());
-            let client = u32::from_le_bytes(p[4..8].try_into().unwrap());
-            let n = u32::from_le_bytes(p[8..12].try_into().unwrap()) as usize;
+            let round = le_u32(p, 0)?;
+            let client = le_u32(p, 4)?;
+            let n = le_u32(p, 8)? as usize;
             if n > MAX_MASK_LEN {
                 bail!("mask length {n} exceeds protocol maximum {MAX_MASK_LEN}");
             }
@@ -422,9 +460,9 @@ pub fn decode_client(buf: &[u8]) -> Result<ClientMsg> {
             if p.len() < 20 {
                 bail!("bad Report payload length {}", p.len());
             }
-            let round = u32::from_le_bytes(p[0..4].try_into().unwrap());
-            let client = u32::from_le_bytes(p[4..8].try_into().unwrap());
-            let n = u32::from_le_bytes(p[8..12].try_into().unwrap()) as usize;
+            let round = le_u32(p, 0)?;
+            let client = le_u32(p, 4)?;
+            let n = le_u32(p, 8)? as usize;
             if n > MAX_MASK_LEN {
                 bail!("report length {n} exceeds protocol maximum {MAX_MASK_LEN}");
             }
@@ -438,7 +476,7 @@ pub fn decode_client(buf: &[u8]) -> Result<ClientMsg> {
             // would log it, instead of being ejected as a protocol
             // violator.  The probs below DO feed the consensus mean and
             // are strictly validated.
-            let loss = f64::from_le_bytes(p[12..20].try_into().unwrap());
+            let loss = le_f64(p, 12)?;
             let probs = FloatVec::decode(&p[20..]);
             // A probability outside [0, 1] (or NaN) would poison the
             // coordinator's consensus mean: rejected, never averaged.
@@ -478,7 +516,10 @@ mod tests {
     #[test]
     fn arithmetic_uplink_is_smaller_on_skewed_masks() {
         let mut rng = Xoshiro256pp::seed_from(4);
-        let mask: Vec<bool> = (0..20_000).map(|_| rng.bernoulli(0.05)).collect();
+        // Interpreted (Miri-lane) runs shrink the mask; the 2× margin
+        // already holds comfortably at 4k symbols.
+        let n = if cfg!(miri) { 4_000 } else { 20_000 };
+        let mask: Vec<bool> = (0..n).map(|_| rng.bernoulli(0.05)).collect();
         let msg = ClientMsg::Mask { round: 0, client: 0, n: mask.len(), mask };
         let raw = encode_client(&msg, MaskCodec::Raw).len();
         let arith = encode_client(&msg, MaskCodec::Arithmetic).len();

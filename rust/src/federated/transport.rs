@@ -50,12 +50,11 @@
 
 use std::io::{ErrorKind, Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::runtime::sync::StopGate;
 use crate::util::error::{Context, Result};
 use crate::zampling::DenseExecutor;
 use crate::{anyhow, bail, ensure};
@@ -64,8 +63,8 @@ use crate::comm::ShardCost;
 
 use super::engine::{Contribution, DeadlinePolicy, RoundCtx, RoundTraffic, ShardPlan, Transport};
 use super::protocol::{
-    decode_client, decode_server, encode_client, encode_server, encode_shard, peek_client_frame,
-    ClientFrameKind, ClientMsg, MaskCodec, ServerMsg, ShardMsg,
+    decode_client, decode_server, declared_frame_len, encode_client, encode_server, encode_shard,
+    peek_client_frame, ClientFrameKind, ClientMsg, MaskCodec, ServerMsg, ShardMsg,
 };
 use super::Server;
 
@@ -79,7 +78,7 @@ pub const MAX_FRAME_LEN: usize = 64 << 20;
 pub fn read_frame(stream: &mut TcpStream) -> Result<Vec<u8>> {
     let mut header = [0u8; 5];
     stream.read_exact(&mut header).context("reading frame header")?;
-    let len = u32::from_le_bytes(header[1..5].try_into().unwrap()) as usize;
+    let len = declared_frame_len(&header)?;
     ensure!(len <= MAX_FRAME_LEN, "frame length {len} exceeds maximum {MAX_FRAME_LEN}");
     let mut buf = vec![0u8; 5 + len];
     buf[..5].copy_from_slice(&header);
@@ -248,7 +247,7 @@ impl SweptConn {
         if self.buf.len() < 5 {
             return Ok(None);
         }
-        let len = u32::from_le_bytes(self.buf[1..5].try_into().unwrap()) as usize;
+        let len = declared_frame_len(&self.buf)?;
         ensure!(len <= MAX_FRAME_LEN, "frame length {len} exceeds maximum {MAX_FRAME_LEN}");
         if self.buf.len() < 5 + len {
             return Ok(None);
@@ -325,19 +324,19 @@ fn sweep_conn(c: &mut SweptConn, scratch: &mut [u8], expected: usize, tx: &Sende
 /// connected population.  Exits when `stop` is raised (the leader's
 /// `Drop`), the listener dies, or the event channel closes; dropping
 /// its connection set closes the swept fds promptly.
-fn sweep_loop(listener: TcpListener, expected: usize, tx: Sender<Event>, stop: Arc<AtomicBool>) {
+fn sweep_loop(listener: TcpListener, expected: usize, tx: Sender<Event>, stop: StopGate) {
     if listener.set_nonblocking(true).is_err() {
         return;
     }
     let mut conns: Vec<SweptConn> = Vec::new();
     let mut next_conn: u64 = 1;
     let mut scratch = vec![0u8; 1 << 16];
-    while !stop.load(Ordering::Acquire) {
+    while !stop.stop_requested() {
         let fds: Vec<i32> = std::iter::once(readiness::raw_fd(&listener))
             .chain(conns.iter().map(|c| readiness::raw_fd(&c.stream)))
             .collect();
         let ready = readiness::wait_readable(&fds, SWEEP_TICK);
-        if stop.load(Ordering::Acquire) {
+        if stop.stop_requested() {
             break;
         }
         if ready.first().copied().unwrap_or(false) {
@@ -543,7 +542,9 @@ pub struct Leader {
     rx: Receiver<Event>,
     /// Raised by `Drop` so the sweeper exits (and closes the swept fd
     /// set) within one [`SWEEP_TICK`] instead of leaking parked state.
-    stop: Arc<AtomicBool>,
+    /// The stop → join → close sequence is model-checked under the loom
+    /// lane (`rust/tests/loom_model.rs`) via the shared [`StopGate`].
+    stop: StopGate,
     sweeper: Option<JoinHandle<()>>,
     /// Total frame bytes sent to workers (feeds the comm ledger).
     pub sent_bytes: u64,
@@ -553,7 +554,7 @@ pub struct Leader {
 
 impl Drop for Leader {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::Release);
+        self.stop.request_stop();
         if let Some(h) = self.sweeper.take() {
             let _ = h.join();
         }
@@ -597,9 +598,9 @@ impl Leader {
             ensure!(k < expected, "subset id {k} ≥ expected {expected}");
         }
         let (tx, rx) = channel();
-        let stop = Arc::new(AtomicBool::new(false));
+        let stop = StopGate::new();
         let sweeper = {
-            let stop = Arc::clone(&stop);
+            let stop = stop.clone();
             std::thread::spawn(move || sweep_loop(listener, expected, tx, stop))
         };
         let mut leader = Leader {
@@ -647,7 +648,7 @@ impl Leader {
             expected,
             slots: (0..expected).map(|_| None).collect(),
             rx,
-            stop: Arc::new(AtomicBool::new(false)),
+            stop: StopGate::new(),
             sweeper: None,
             sent_bytes: 0,
             recv_bytes: 0,
@@ -1111,6 +1112,9 @@ impl Transport for TcpTransport {
     /// the same `merge_votes` + `try_aggregate` body as the sharded
     /// root, with S = 1.
     fn aggregate(&mut self, server: &mut Server, _traffic: &RoundTraffic) -> usize {
+        // lint: allow(panic) — engine-sequencing invariant, not wire data:
+        // `RoundEngine` calls `aggregate` exactly once after a successful
+        // `exchange` stored the streamed votes; no peer input reaches this.
         let (votes, received) = self.pending.take().expect("aggregate follows exchange");
         server.merge_votes(&votes, received);
         server.try_aggregate()
@@ -1313,7 +1317,12 @@ impl Transport for ShardedTransport {
                 .collect();
             handles
                 .into_iter()
-                .map(|h| h.join().expect("shard leader thread panicked"))
+                // A panicked shard thread becomes that shard's `Err`, so
+                // the round fails with a diagnosis instead of poisoning
+                // the root — the `result?` below surfaces it.
+                .map(|h| {
+                    h.join().unwrap_or_else(|_| Err(anyhow!("shard leader thread panicked")))
+                })
                 .collect()
         });
 
@@ -1500,6 +1509,7 @@ mod tests {
     /// leader thread starts, so there is no bind/connect race (the seed
     /// dropped and rebound the port, and flaked).
     #[test]
+    #[cfg_attr(miri, ignore = "drives real sockets / poll(2), or is too slow under Miri")]
     fn tcp_round_trip() {
         let (listener, addr) = bound_listener();
 
@@ -1556,6 +1566,7 @@ mod tests {
     /// extension: each beat pushes the deadline out to `now + timeout`,
     /// bounded by the cap.
     #[test]
+    #[cfg_attr(miri, ignore = "drives real sockets / poll(2), or is too slow under Miri")]
     fn heartbeats_extend_the_deadline_for_slow_but_alive_workers() {
         let (listener, addr) = bound_listener();
 
@@ -1593,6 +1604,7 @@ mod tests {
     /// that beats forever without ever delivering its mask is still
     /// dropped once `start + cap` passes.
     #[test]
+    #[cfg_attr(miri, ignore = "drives real sockets / poll(2), or is too slow under Miri")]
     fn heartbeats_cannot_extend_past_the_cap() {
         let (listener, addr) = bound_listener();
 
@@ -1636,6 +1648,7 @@ mod tests {
     /// The leader must finish the round with the other two, record the
     /// drop, and keep running a second round.
     #[test]
+    #[cfg_attr(miri, ignore = "drives real sockets / poll(2), or is too slow under Miri")]
     fn leader_survives_mid_round_disconnect() {
         let (listener, addr) = bound_listener();
 
@@ -1696,6 +1709,7 @@ mod tests {
     /// the seed indexed `masks[idx]` with the wire-supplied id and
     /// panicked on ids ≥ `num_clients`.
     #[test]
+    #[cfg_attr(miri, ignore = "drives real sockets / poll(2), or is too slow under Miri")]
     fn forged_client_id_drops_the_worker_not_the_leader() {
         let (listener, addr) = bound_listener();
 
@@ -1745,6 +1759,7 @@ mod tests {
     /// A wrong-length mask (which would corrupt `Server::receive_mask`)
     /// is a protocol violation: dropped, never aggregated.
     #[test]
+    #[cfg_attr(miri, ignore = "drives real sockets / poll(2), or is too slow under Miri")]
     fn wrong_length_mask_is_dropped() {
         let (listener, addr) = bound_listener();
 
@@ -1774,6 +1789,7 @@ mod tests {
     /// live is a configuration error: the leader must fail fast, not
     /// hang forever waiting for the never-arriving missing id.
     #[test]
+    #[cfg_attr(miri, ignore = "drives real sockets / poll(2), or is too slow under Miri")]
     fn duplicate_client_id_at_startup_fails_fast() {
         let (listener, addr) = bound_listener();
         let leader = std::thread::spawn(move || Leader::from_listener(listener, 2));
@@ -1795,6 +1811,7 @@ mod tests {
     /// merge must equal per-mask receipt, and a whole shard whose
     /// worker vanished must surface as that shard's drops only.
     #[test]
+    #[cfg_attr(miri, ignore = "drives real sockets / poll(2), or is too slow under Miri")]
     fn sharded_exchange_merges_vote_sums_and_survives_a_dead_shard() {
         use crate::zampling::NativeExecutor;
         use crate::nn::ArchSpec;
@@ -1894,6 +1911,7 @@ mod tests {
     /// leader for {1} comes up with one worker even though `expected`
     /// covers three global ids.
     #[test]
+    #[cfg_attr(miri, ignore = "drives real sockets / poll(2), or is too slow under Miri")]
     fn subset_leader_starts_without_foreign_clients() {
         let (listener, addr) = bound_listener();
         let leader = std::thread::spawn(move || -> Result<usize> {
@@ -1910,6 +1928,7 @@ mod tests {
     /// vote sums of a buffered client-order fold (u32 sums commute), and
     /// its byte bookkeeping must match the buffered receipt's.
     #[test]
+    #[cfg_attr(miri, ignore = "drives real sockets / poll(2), or is too slow under Miri")]
     fn streaming_vote_collection_matches_buffered_fold_under_reversed_arrival() {
         const WORKERS: usize = 6;
         const N: usize = 33;
@@ -1989,6 +2008,7 @@ mod tests {
     /// dropping the leader must join the sweeper and close the swept fd
     /// set, returning both counters to their pre-leader baselines.
     #[test]
+    #[cfg_attr(miri, ignore = "drives real sockets / poll(2), or is too slow under Miri")]
     #[cfg(target_os = "linux")]
     fn hundred_rounds_grow_no_threads_or_fds_and_drop_closes_the_fd_set() {
         let base_threads = thread_count();
@@ -2061,6 +2081,7 @@ mod tests {
     /// *identical* at 1k and 10k clients — O(n) in the model, not
     /// O(clients × n).
     #[test]
+    #[cfg_attr(miri, ignore = "drives real sockets / poll(2), or is too slow under Miri")]
     fn ten_thousand_simulated_clients_need_o1_threads_and_on_mask_memory() {
         const N: usize = 256;
         let round_peak = |clients: usize| -> u64 {
@@ -2107,6 +2128,7 @@ mod tests {
     /// A worker that aborts after round 0 can reconnect with a fresh
     /// `Hello` and rejoin from the next round.
     #[test]
+    #[cfg_attr(miri, ignore = "drives real sockets / poll(2), or is too slow under Miri")]
     fn worker_reconnects_with_hello() {
         let (listener, addr) = bound_listener();
         let (notify_tx, notify_rx) = std::sync::mpsc::channel::<()>();

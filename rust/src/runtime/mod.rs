@@ -5,6 +5,9 @@
 //! * [`pool`] — the process-wide worker pool ([`pool::global`]) used by
 //!   the parallel sparse products, the blocked GEMM kernels, and the
 //!   federated client loop.  Always compiled; no dependencies.
+//! * [`sync`] — the std-or-loom synchronization shim the pool and the
+//!   transport sweeper build on, so the concurrency protocols run under
+//!   the loom lane (`RUSTFLAGS="--cfg loom"`; see docs/ANALYSIS.md).
 //! * [`Manifest`] — typed view of `artifacts/manifest.json` (shapes the
 //!   Python AOT step lowered with).  Always compiled so tooling can
 //!   inspect manifests without the PJRT runtime.
@@ -15,6 +18,7 @@
 
 mod manifest;
 pub mod pool;
+pub mod sync;
 
 pub use manifest::{ArchArtifacts, FusedArtifact, Manifest};
 

@@ -29,8 +29,13 @@
 use std::cell::Cell;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::OnceLock;
+
+// The whole handoff/shutdown protocol goes through the std-or-loom shim
+// so the loom lane (`rust/tests/loom_model.rs`) model-checks the exact
+// production types; under the normal cfg these are plain `std::sync`.
+use crate::runtime::sync::atomic::{AtomicBool, Ordering};
+use crate::runtime::sync::{thread as sync_thread, Arc, Condvar, Mutex};
 
 /// ~64k gather/FMA-grade operations per shard amortize the dispatch cost
 /// (one queue push + wakeup, ~1 µs) to well under 1%.
@@ -100,7 +105,7 @@ struct Queue {
 /// point; constructing private pools is for tests.
 pub struct ThreadPool {
     queue: Arc<Queue>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    workers: Vec<sync_thread::JoinHandle<()>>,
     parallelism: usize,
 }
 
@@ -112,10 +117,7 @@ impl ThreadPool {
         let handles = (0..workers)
             .map(|i| {
                 let q = Arc::clone(&queue);
-                std::thread::Builder::new()
-                    .name(format!("zampling-pool-{i}"))
-                    .spawn(move || worker_loop(&q))
-                    .expect("spawning pool worker")
+                sync_thread::spawn_named(format!("zampling-pool-{i}"), move || worker_loop(&q))
             })
             .collect();
         Self { queue, workers: handles, parallelism: workers + 1 }

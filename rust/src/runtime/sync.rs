@@ -1,0 +1,135 @@
+//! Synchronization shim: std primitives normally, loom primitives under
+//! `--cfg loom` — the seam that makes the concurrency core model-checkable.
+//!
+//! The pool's job-handoff/shutdown protocol (`runtime/pool.rs`) and the
+//! sweeper's stop-join-close sequence (`federated/transport.rs`, via
+//! [`StopGate`]) build exclusively on these re-exports, so
+//! `RUSTFLAGS="--cfg loom" cargo test --test loom_model` exercises the
+//! *production* types under the schedule explorer while the normal
+//! build compiles straight to `std::sync` with zero indirection.
+//!
+//! Under `--cfg loom` the `loom` dependency resolves to the vendored
+//! `rust/loomlite` crate (randomized-schedule stress harness with the
+//! loom API; see its crate docs for what it can and cannot catch) — the
+//! code here is source-compatible with the real loom if it is ever
+//! available.  See docs/ANALYSIS.md for the lane that drives this.
+
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Condvar, Mutex};
+
+#[cfg(loom)]
+pub use loom::sync::{Arc, Condvar, Mutex};
+
+/// Atomic types and orderings (std or loom, matching the cfg).
+pub mod atomic {
+    #[cfg(not(loom))]
+    pub use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+
+    #[cfg(loom)]
+    pub use loom::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+}
+
+/// Thread spawning (std or loom, matching the cfg).
+pub mod thread {
+    #[cfg(not(loom))]
+    pub use std::thread::JoinHandle;
+
+    #[cfg(loom)]
+    pub use loom::thread::JoinHandle;
+
+    /// Spawn a thread running `f`, named `name` where the backend
+    /// supports naming (std; loom threads are anonymous).
+    #[cfg(not(loom))]
+    pub fn spawn_named<F>(name: String, f: F) -> JoinHandle<()>
+    where
+        F: FnOnce() + Send + 'static,
+    {
+        std::thread::Builder::new().name(name).spawn(f).expect("spawning named thread")
+    }
+
+    /// Spawn a thread running `f` (loom backend: the name is dropped).
+    #[cfg(loom)]
+    pub fn spawn_named<F>(name: String, f: F) -> JoinHandle<()>
+    where
+        F: FnOnce() + Send + 'static,
+    {
+        let _ = name;
+        loom::thread::spawn(f)
+    }
+}
+
+use atomic::{AtomicBool, Ordering};
+
+/// One-shot stop flag shared between an owner and a background thread —
+/// the control half of the sweeper's **stop → join → close** shutdown
+/// sequence (`Leader::drop` in `federated/transport.rs`).
+///
+/// The owner calls [`request_stop`](Self::request_stop) (a `Release`
+/// store) and then joins the thread; the background loop polls
+/// [`stop_requested`](Self::stop_requested) (an `Acquire` load) once per
+/// tick and exits, dropping — and thereby closing — every resource it
+/// owns *before* the owner's join returns.  That ordering is what makes
+/// it safe for the owner to rebind addresses or reuse fds immediately
+/// after dropping a `Leader`, and it is exactly the protocol the loom
+/// model in `rust/tests/loom_model.rs` checks for lost stops and
+/// resources leaking past the join.
+#[derive(Clone)]
+pub struct StopGate {
+    flag: Arc<AtomicBool>,
+}
+
+impl StopGate {
+    /// A fresh gate in the running (not stopped) state.
+    pub fn new() -> Self {
+        Self { flag: Arc::new(AtomicBool::new(false)) }
+    }
+
+    /// Raise the stop flag (idempotent; `Release` so everything the
+    /// owner wrote before stopping is visible to the observing thread).
+    pub fn request_stop(&self) {
+        self.flag.store(true, Ordering::Release);
+    }
+
+    /// Has a stop been requested? (`Acquire`, pairing with
+    /// [`request_stop`](Self::request_stop).)
+    pub fn stop_requested(&self) -> bool {
+        self.flag.load(Ordering::Acquire)
+    }
+}
+
+impl Default for StopGate {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::StopGate;
+
+    #[test]
+    fn stop_gate_is_sticky_and_shared() {
+        let gate = StopGate::new();
+        let observer = gate.clone();
+        assert!(!observer.stop_requested());
+        gate.request_stop();
+        gate.request_stop(); // idempotent
+        assert!(observer.stop_requested());
+    }
+
+    #[test]
+    fn stop_crosses_threads() {
+        let gate = StopGate::new();
+        let worker = {
+            let gate = gate.clone();
+            std::thread::spawn(move || {
+                while !gate.stop_requested() {
+                    std::thread::yield_now();
+                }
+                true
+            })
+        };
+        gate.request_stop();
+        assert!(worker.join().expect("observer thread panicked"));
+    }
+}

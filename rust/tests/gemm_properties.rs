@@ -1,3 +1,8 @@
+// Integration tests drive sockets, threads-at-scale, or minutes of
+// compute — out of scope for the interpreted Miri lane, which runs the
+// unit subset instead (see docs/ANALYSIS.md for what is skipped where).
+#![cfg(not(miri))]
+
 //! Property tests for the blocked GEMM kernels: the blocked/tiled
 //! implementations must match the retained naive reference within
 //! f32-reassociation tolerance across shapes that exercise every

@@ -1,3 +1,8 @@
+// Integration tests drive sockets, threads-at-scale, or minutes of
+// compute — out of scope for the interpreted Miri lane, which runs the
+// unit subset instead (see docs/ANALYSIS.md for what is skipped where).
+#![cfg(not(miri))]
+
 //! Property-based tests over the coordinator invariants: sparse algebra,
 //! protocol encodings, probability-vector dynamics, and the §2 claims —
 //! driven by the in-tree `util::prop` harness (proptest is unavailable
@@ -135,8 +140,10 @@ fn prop_codecs_roundtrip() {
             if BitPack::decode(&BitPack::encode(mask), n) != *mask {
                 return Err("BitPack roundtrip".into());
             }
-            if rle::decode(&rle::encode(mask), n) != *mask {
-                return Err("rle roundtrip".into());
+            match rle::decode(&rle::encode(mask), n) {
+                Ok(dec) if dec == *mask => {}
+                Ok(_) => return Err("rle roundtrip".into()),
+                Err(e) => return Err(format!("rle decode failed: {e}")),
             }
             match arith::decode(&arith::encode(mask), n) {
                 Ok(dec) if dec == *mask => {}

@@ -1,0 +1,597 @@
+//! Static analysis for this repository: `cargo xtask analyze`.
+//!
+//! Two lints, both driven by the machine-readable `xtask:rules` block in
+//! `ARCHITECTURE.md` (so the prose diagram and the enforced rules are the
+//! same artifact and drift is impossible):
+//!
+//! * **Layering** — every `use crate::X` edge in `rust/src` must appear
+//!   in the `layer` table.  A module may always use itself; identifiers
+//!   that are not top-level modules (the `anyhow!`/`bail!`/`ensure!`
+//!   macros re-exported at the crate root) are ignored.
+//! * **Panic lint** — files named by `deny-panic` (the wire-facing
+//!   decoders and transports) may not contain `.unwrap()`, `.expect(`,
+//!   `panic!(`, `unreachable!(`, `todo!(`, or `unimplemented!(` outside
+//!   `#[cfg(test)]` modules, unless the site carries a
+//!   `// lint: allow(panic) — <justification>` annotation on the same
+//!   line or in the comment block immediately above it.
+//!
+//! Both scanners run on [`strip_noise`]-sanitized text, so tokens inside
+//! comments, doc examples, and string literals never match.  See
+//! `docs/ANALYSIS.md` for the policy and `tests/analyze_gauntlet.rs` for
+//! the seeded-violation fixtures proving the lints actually fire.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// The parsed `xtask:rules` block from `ARCHITECTURE.md`.
+#[derive(Debug, Default)]
+pub struct Rules {
+    /// `layer <module>: <deps>` — allowed `use crate::` targets per module.
+    pub layers: BTreeMap<String, BTreeSet<String>>,
+    /// `exempt <file>` — paths (relative to `rust/src`) skipped entirely.
+    pub exempt: BTreeSet<String>,
+    /// `deny-panic <file>` — paths subject to the panic lint.
+    pub deny_panic: BTreeSet<String>,
+}
+
+/// One lint finding, pointing at `rust/src`-relative `file:line`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "rust/src/{}:{}: {}", self.file, self.line, self.message)
+    }
+}
+
+const RULES_FENCE: &str = "```text xtask:rules";
+const PANIC_TOKENS: [&str; 6] = [
+    ".unwrap()",
+    ".expect(",
+    "panic!(",
+    "unreachable!(",
+    "todo!(",
+    "unimplemented!(",
+];
+const ALLOW_MARK: &str = "lint: allow(panic)";
+
+/// Extract and parse the fenced `xtask:rules` block.
+pub fn parse_rules(markdown: &str) -> Result<Rules, String> {
+    let mut rules = Rules::default();
+    let mut in_block = false;
+    let mut seen_block = false;
+    for (idx, line) in markdown.lines().enumerate() {
+        let trimmed = line.trim();
+        if !in_block {
+            if trimmed.starts_with(RULES_FENCE) {
+                in_block = true;
+                seen_block = true;
+            }
+            continue;
+        }
+        if trimmed.starts_with("```") {
+            in_block = false;
+            continue;
+        }
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        let lineno = idx + 1;
+        if let Some(rest) = trimmed.strip_prefix("layer ") {
+            let (name, deps) = rest
+                .split_once(':')
+                .ok_or_else(|| format!("ARCHITECTURE.md:{lineno}: `layer` needs `name: deps`"))?;
+            let name = name.trim().to_string();
+            let mut set = BTreeSet::new();
+            for dep in deps.split_whitespace() {
+                if dep != "-" {
+                    set.insert(dep.to_string());
+                }
+            }
+            if rules.layers.insert(name.clone(), set).is_some() {
+                return Err(format!("ARCHITECTURE.md:{lineno}: duplicate layer `{name}`"));
+            }
+        } else if let Some(rest) = trimmed.strip_prefix("exempt ") {
+            rules.exempt.insert(rest.trim().to_string());
+        } else if let Some(rest) = trimmed.strip_prefix("deny-panic ") {
+            rules.deny_panic.insert(rest.trim().to_string());
+        } else {
+            return Err(format!("ARCHITECTURE.md:{lineno}: unknown directive `{trimmed}`"));
+        }
+    }
+    if !seen_block {
+        return Err(format!("no `{RULES_FENCE}` block found in ARCHITECTURE.md"));
+    }
+    if in_block {
+        return Err("unterminated `xtask:rules` block in ARCHITECTURE.md".into());
+    }
+    for (name, deps) in &rules.layers {
+        for dep in deps {
+            if !rules.layers.contains_key(dep) {
+                return Err(format!("layer `{name}` allows unknown module `{dep}`"));
+            }
+        }
+    }
+    Ok(rules)
+}
+
+/// Blank out comments, string literals, and char literals, preserving
+/// newlines (and every byte offset) so line numbers stay aligned.
+/// Handles nested block comments, escapes (including the `\`-newline
+/// line continuation), raw strings (`r"…"`, `r#"…"#`, `br#"…"#`), byte
+/// strings, and the lifetime-vs-char-literal ambiguity (`'a` vs `'a'`).
+pub fn strip_noise(src: &str) -> String {
+    let b = src.as_bytes();
+    let mut out: Vec<u8> = Vec::with_capacity(b.len());
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        if c == b'/' && b.get(i + 1) == Some(&b'/') {
+            while i < b.len() && b[i] != b'\n' {
+                out.push(b' ');
+                i += 1;
+            }
+            continue;
+        }
+        if c == b'/' && b.get(i + 1) == Some(&b'*') {
+            let mut depth = 1usize;
+            out.extend_from_slice(b"  ");
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                    depth += 1;
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                    depth -= 1;
+                    out.extend_from_slice(b"  ");
+                    i += 2;
+                } else {
+                    out.push(if b[i] == b'\n' { b'\n' } else { b' ' });
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        if c == b'r' || c == b'b' {
+            let prev_is_ident =
+                i > 0 && (b[i - 1].is_ascii_alphanumeric() || b[i - 1] == b'_');
+            if !prev_is_ident {
+                if let Some(next) = raw_string_end(b, i) {
+                    for &ch in &b[i..next] {
+                        out.push(if ch == b'\n' { b'\n' } else { b' ' });
+                    }
+                    i = next;
+                    continue;
+                }
+            }
+        }
+        if c == b'"' {
+            out.push(b' ');
+            i += 1;
+            while i < b.len() {
+                if b[i] == b'\\' {
+                    out.push(b' ');
+                    if let Some(&esc) = b.get(i + 1) {
+                        out.push(if esc == b'\n' { b'\n' } else { b' ' });
+                    }
+                    i += 2;
+                    continue;
+                }
+                let done = b[i] == b'"';
+                out.push(if b[i] == b'\n' { b'\n' } else { b' ' });
+                i += 1;
+                if done {
+                    break;
+                }
+            }
+            continue;
+        }
+        if c == b'\'' {
+            // A char literal starts `'\`, `'x'`, or `'<multibyte>`;
+            // anything else (`'a` in `<'a>`, `'static`) is a lifetime.
+            let is_char = match (b.get(i + 1), b.get(i + 2)) {
+                (Some(&b'\\'), _) => true,
+                (Some(&x), _) if x >= 0x80 => true,
+                (Some(_), Some(&b'\'')) => true,
+                _ => false,
+            };
+            if is_char {
+                out.push(b' ');
+                i += 1;
+                while i < b.len() {
+                    if b[i] == b'\\' {
+                        out.extend_from_slice(b"  ");
+                        i += 2;
+                        continue;
+                    }
+                    let done = b[i] == b'\'';
+                    out.push(b' ');
+                    i += 1;
+                    if done {
+                        break;
+                    }
+                }
+            } else {
+                out.push(b'\'');
+                i += 1;
+            }
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// If `b[i..]` starts a raw (byte) string, return the index one past its
+/// closing delimiter; `None` if it is not a raw string.
+fn raw_string_end(b: &[u8], i: usize) -> Option<usize> {
+    let mut j = i;
+    if b.get(j) == Some(&b'b') {
+        j += 1;
+    }
+    if b.get(j) != Some(&b'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while b.get(j) == Some(&b'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if b.get(j) != Some(&b'"') {
+        return None;
+    }
+    j += 1;
+    while j < b.len() {
+        if b[j] == b'"' {
+            let mut k = 0usize;
+            while k < hashes && b.get(j + 1 + k) == Some(&b'#') {
+                k += 1;
+            }
+            if k == hashes {
+                return Some(j + 1 + hashes);
+            }
+        }
+        j += 1;
+    }
+    Some(b.len())
+}
+
+/// Byte spans of `#[cfg(test)] … { … }` (and `#[cfg(all(test, …))]`)
+/// regions in sanitized text, attribute through matching close brace.
+fn test_mod_spans(san: &str) -> Vec<(usize, usize)> {
+    let bytes = san.as_bytes();
+    let mut spans = Vec::new();
+    let mut from = 0usize;
+    loop {
+        let plain = san[from..].find("#[cfg(test)]");
+        let all = san[from..].find("#[cfg(all(test");
+        let rel = match (plain, all) {
+            (Some(a), Some(c)) => a.min(c),
+            (Some(a), None) => a,
+            (None, Some(c)) => c,
+            (None, None) => break,
+        };
+        let attr = from + rel;
+        let Some(open_rel) = san[attr..].find('{') else {
+            break;
+        };
+        let open = attr + open_rel;
+        let mut depth = 0usize;
+        let mut end = san.len();
+        for (k, &ch) in bytes[open..].iter().enumerate() {
+            if ch == b'{' {
+                depth += 1;
+            } else if ch == b'}' {
+                depth -= 1;
+                if depth == 0 {
+                    end = open + k + 1;
+                    break;
+                }
+            }
+        }
+        spans.push((attr, end));
+        from = end;
+    }
+    spans
+}
+
+/// Panic lint for one `deny-panic` file.
+pub fn check_panics(rel: &str, src: &str) -> Vec<Violation> {
+    let san = strip_noise(src);
+    let spans = test_mod_spans(&san);
+    let orig_lines: Vec<&str> = src.lines().collect();
+    let mut out = Vec::new();
+    let mut offset = 0usize;
+    for (idx, sline) in san.lines().enumerate() {
+        let line_start = offset;
+        offset += sline.len() + 1;
+        if spans.iter().any(|&(a, b)| line_start >= a && line_start < b) {
+            continue;
+        }
+        for tok in PANIC_TOKENS {
+            if sline.contains(tok) && !panic_allowed(&orig_lines, idx) {
+                out.push(Violation {
+                    file: rel.to_string(),
+                    line: idx + 1,
+                    message: format!(
+                        "`{tok}` in wire-facing code without a `// {ALLOW_MARK} — …` annotation"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// An annotation counts if it is on the flagged line itself or anywhere
+/// in the contiguous `//` comment block directly above it.
+fn panic_allowed(orig_lines: &[&str], idx: usize) -> bool {
+    if orig_lines.get(idx).is_some_and(|l| l.contains(ALLOW_MARK)) {
+        return true;
+    }
+    let mut k = idx;
+    while k > 0 {
+        k -= 1;
+        let t = orig_lines[k].trim_start();
+        if !t.starts_with("//") {
+            return false;
+        }
+        if t.contains(ALLOW_MARK) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Layering lint for one file: every `use crate::X` must be `X == self`
+/// or an edge listed in the rules table.
+pub fn check_layering(rules: &Rules, rel: &str, src: &str) -> Vec<Violation> {
+    let top_raw = rel.split('/').next().unwrap_or(rel);
+    let top = top_raw.strip_suffix(".rs").unwrap_or(top_raw);
+    let Some(allowed) = rules.layers.get(top) else {
+        return vec![Violation {
+            file: rel.to_string(),
+            line: 1,
+            message: format!(
+                "module `{top}` has no `layer` entry in ARCHITECTURE.md (add one or `exempt` it)"
+            ),
+        }];
+    };
+    let san = strip_noise(src);
+    let mut out = Vec::new();
+    let mut lines = san.lines().enumerate();
+    while let Some((idx, line)) = lines.next() {
+        let t = line.trim_start();
+        let is_use = t.starts_with("use ")
+            || t.starts_with("pub use ")
+            || t.starts_with("pub(crate) use ")
+            || t.starts_with("pub(super) use ")
+            || t.starts_with("pub(in ");
+        if !is_use {
+            continue;
+        }
+        let mut stmt = t.to_string();
+        while !stmt.contains(';') {
+            match lines.next() {
+                Some((_, cont)) => stmt.push_str(cont.trim()),
+                None => break,
+            }
+        }
+        for target in use_targets(&stmt) {
+            if target == top {
+                continue;
+            }
+            if rules.layers.contains_key(&target) && !allowed.contains(&target) {
+                out.push(Violation {
+                    file: rel.to_string(),
+                    line: idx + 1,
+                    message: format!(
+                        "`{top}` must not depend on `{target}` \
+                         (edge missing from the ARCHITECTURE.md rules table)"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Top-level crate modules named by one (sanitized, single-line) `use`
+/// statement.  Handles brace groups: `use crate::{comm::X, config::Y}`
+/// yields `["comm", "config"]`.  Non-`crate::` imports yield nothing.
+pub fn use_targets(stmt: &str) -> Vec<String> {
+    let Some(pos) = stmt.find("crate::") else {
+        return Vec::new();
+    };
+    if !stmt[..pos].trim_end().ends_with("use") {
+        return Vec::new(); // `$crate::` in macros, `crate::` mid-path, …
+    }
+    let rest = &stmt[pos + "crate::".len()..];
+    let mut out = Vec::new();
+    if let Some(group) = rest.strip_prefix('{') {
+        let mut depth = 0usize;
+        let mut frag = String::new();
+        for c in group.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    frag.push(c);
+                }
+                '}' if depth > 0 => {
+                    depth -= 1;
+                    frag.push(c);
+                }
+                '}' => break,
+                ',' if depth == 0 => {
+                    push_leading_ident(&frag, &mut out);
+                    frag.clear();
+                }
+                _ => frag.push(c),
+            }
+        }
+        push_leading_ident(&frag, &mut out);
+    } else {
+        push_leading_ident(rest, &mut out);
+    }
+    out
+}
+
+fn push_leading_ident(frag: &str, out: &mut Vec<String>) {
+    let ident: String = frag
+        .trim()
+        .chars()
+        .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+        .collect();
+    if !ident.is_empty() {
+        out.push(ident);
+    }
+}
+
+/// Run both lints over `<root>/rust/src` against `<root>/ARCHITECTURE.md`.
+pub fn analyze(root: &Path) -> Result<Vec<Violation>, String> {
+    let arch_path = root.join("ARCHITECTURE.md");
+    let markdown = fs::read_to_string(&arch_path)
+        .map_err(|e| format!("{}: {e}", arch_path.display()))?;
+    let rules = parse_rules(&markdown)?;
+    let src_root = root.join("rust").join("src");
+    let mut files = Vec::new();
+    walk(&src_root, &mut files).map_err(|e| format!("{}: {e}", src_root.display()))?;
+    files.sort();
+    let mut out = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(&src_root)
+            .map_err(|e| e.to_string())?
+            .to_string_lossy()
+            .replace('\\', "/");
+        if rules.exempt.contains(&rel) {
+            continue;
+        }
+        let src = fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        out.extend(check_layering(&rules, &rel, &src));
+        if rules.deny_panic.contains(&rel) {
+            out.extend(check_panics(&rel, &src));
+        }
+    }
+    Ok(out)
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const RULES_MD: &str = "\
+prose before
+```text xtask:rules
+# a comment
+layer comm: rng util
+layer rng: -
+layer util: rng
+exempt lib.rs
+deny-panic comm/rle.rs
+```
+prose after
+";
+
+    #[test]
+    fn rules_block_parses() {
+        let rules = parse_rules(RULES_MD).expect("parse");
+        assert_eq!(rules.layers.len(), 3);
+        assert!(rules.layers["rng"].is_empty());
+        assert!(rules.layers["comm"].contains("util"));
+        assert!(rules.exempt.contains("lib.rs"));
+        assert!(rules.deny_panic.contains("comm/rle.rs"));
+    }
+
+    #[test]
+    fn rules_reject_unknown_dep_and_missing_block() {
+        let bad = RULES_MD.replace("layer comm: rng util", "layer comm: rng nonsuch");
+        assert!(parse_rules(&bad).unwrap_err().contains("nonsuch"));
+        assert!(parse_rules("no fences here").is_err());
+    }
+
+    #[test]
+    fn strip_noise_blanks_comments_strings_and_chars() {
+        let src = "let a = \"x.unwrap()\"; // .unwrap()\nlet b = 'x'; let c: &'static str = s;\n";
+        let san = strip_noise(src);
+        assert!(!san.contains("unwrap"), "{san}");
+        assert!(san.contains("let b ="));
+        assert!(san.contains("&'static str"), "lifetime survives: {san}");
+        assert_eq!(san.lines().count(), src.lines().count());
+    }
+
+    #[test]
+    fn strip_noise_handles_raw_strings_and_nested_comments() {
+        let src = "let r = r#\"panic!(\"no\")\"#;\n/* outer /* panic!( */ still out */ let x = 1;\n";
+        let san = strip_noise(src);
+        assert!(!san.contains("panic!"), "{san}");
+        assert!(san.contains("let x = 1;"));
+    }
+
+    #[test]
+    fn use_targets_handles_groups_and_macros() {
+        assert_eq!(use_targets("use crate::util::error::Result;"), vec!["util"]);
+        assert_eq!(
+            use_targets("use crate::{comm::CommLedger, config::Config, bail};"),
+            vec!["comm", "config", "bail"]
+        );
+        assert_eq!(use_targets("use crate::bail;"), vec!["bail"]);
+        assert!(use_targets("use std::sync::Arc;").is_empty());
+        assert!(use_targets("$crate::util::x();").is_empty());
+    }
+
+    #[test]
+    fn layering_flags_unlisted_edge_only() {
+        let rules = parse_rules(RULES_MD).expect("parse");
+        let ok = "use crate::rng::Rng;\nuse crate::comm::helper;\n";
+        assert!(check_layering(&rules, "comm/rle.rs", ok).is_empty());
+        let bad = "use std::fmt;\nuse crate::comm::x;\n";
+        let v = check_layering(&rules, "rng/mod.rs", bad);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].line, 2);
+        assert!(v[0].message.contains("must not depend on `comm`"));
+    }
+
+    #[test]
+    fn panic_lint_respects_tests_annotations_and_noise() {
+        let src = "\
+fn live() {
+    let a = x.unwrap();
+    // lint: allow(panic) — documented invariant.
+    let b = y.expect(\"invariant\");
+    let s = \"don't panic!(ever)\"; // .unwrap() in prose
+}
+#[cfg(test)]
+mod tests {
+    fn t() {
+        z.unwrap();
+    }
+}
+";
+        let v = check_panics("comm/rle.rs", src);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].line, 2);
+        assert!(v[0].message.contains(".unwrap()"));
+    }
+}

@@ -1,0 +1,63 @@
+//! `cargo xtask analyze [--root <repo-root>]` — run the architecture
+//! lints and exit non-zero on any violation.  Wired into the tier-1 CI
+//! job; see docs/ANALYSIS.md.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    match args.next().as_deref() {
+        Some("analyze") => {}
+        _ => {
+            usage();
+            return ExitCode::from(2);
+        }
+    }
+    let mut root = default_root();
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => match args.next() {
+                Some(p) => root = PathBuf::from(p),
+                None => {
+                    eprintln!("xtask: --root needs a path");
+                    return ExitCode::from(2);
+                }
+            },
+            other => {
+                eprintln!("xtask: unknown argument `{other}`");
+                usage();
+                return ExitCode::from(2);
+            }
+        }
+    }
+    match xtask::analyze(&root) {
+        Ok(violations) if violations.is_empty() => {
+            println!("xtask analyze: ok — {} conforms to ARCHITECTURE.md", root.display());
+            ExitCode::SUCCESS
+        }
+        Ok(violations) => {
+            for v in &violations {
+                eprintln!("{v}");
+            }
+            eprintln!("xtask analyze: {} violation(s)", violations.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("xtask analyze: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+/// The repo root is two levels above this crate (`<repo>/rust/xtask`).
+fn default_root() -> PathBuf {
+    let mut p = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    p.pop();
+    p.pop();
+    p
+}
+
+fn usage() {
+    eprintln!("usage: cargo xtask analyze [--root <repo-root>]");
+}

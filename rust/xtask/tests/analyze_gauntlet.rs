@@ -1,0 +1,73 @@
+//! The lint gauntlet: (1) the real tree must be clean, so this test —
+//! which runs in the ordinary tier-1 `cargo test` — enforces the
+//! ARCHITECTURE.md dependency table on every PR even before the
+//! dedicated CI step runs the binary; (2) the seeded-violation fixture
+//! proves the lints actually fire (a linter that never fails is
+//! indistinguishable from one that never runs).
+
+use std::path::PathBuf;
+
+fn repo_root() -> PathBuf {
+    let mut p = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    p.pop();
+    p.pop();
+    p
+}
+
+fn fixture_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("fixtures")
+        .join("seeded_violation")
+}
+
+#[test]
+fn real_tree_is_clean() {
+    let violations = xtask::analyze(&repo_root()).expect("analyze should run");
+    assert!(
+        violations.is_empty(),
+        "architecture lint violations:\n{}",
+        violations
+            .iter()
+            .map(|v| v.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+#[test]
+fn seeded_layering_violation_is_caught() {
+    let violations = xtask::analyze(&fixture_root()).expect("analyze should run");
+    let layering: Vec<_> = violations
+        .iter()
+        .filter(|v| v.file == "rng/mod.rs")
+        .collect();
+    assert_eq!(layering.len(), 1, "{violations:?}");
+    assert!(layering[0].message.contains("must not depend on `federated`"));
+}
+
+#[test]
+fn seeded_panic_violations_are_caught_and_allowlist_respected() {
+    let violations = xtask::analyze(&fixture_root()).expect("analyze should run");
+    let panics: Vec<_> = violations
+        .iter()
+        .filter(|v| v.file == "federated/protocol.rs")
+        .collect();
+    // Exactly the two live sites: the bare unwrap and the bare panic!.
+    // The annotated expect, the cfg(test) unwrap, and the tokens inside
+    // a string and a comment must NOT be flagged.
+    assert_eq!(panics.len(), 2, "{panics:?}");
+    assert!(panics.iter().any(|v| v.message.contains(".unwrap()")));
+    assert!(panics.iter().any(|v| v.message.contains("panic!(")));
+}
+
+#[test]
+fn unknown_module_is_a_violation() {
+    let violations = xtask::analyze(&fixture_root()).expect("analyze should run");
+    let unknown: Vec<_> = violations
+        .iter()
+        .filter(|v| v.file == "mystery/mod.rs")
+        .collect();
+    assert_eq!(unknown.len(), 1, "{violations:?}");
+    assert!(unknown[0].message.contains("no `layer` entry"));
+}

@@ -1,0 +1,32 @@
+//! Fixture: wire-facing file under `deny-panic` with two live
+//! violations and four sites the lint must tolerate.
+
+use crate::rng::seed;
+
+pub struct Frame;
+
+pub fn decode(bytes: &[u8]) -> u32 {
+    // VIOLATION 1: bare unwrap on peer-controlled data.
+    let head = bytes.first().unwrap();
+    if *head > 10 {
+        // VIOLATION 2: bare panic on peer-controlled data.
+        panic!("bad header");
+    }
+    // Tolerated: annotated invariant.
+    // lint: allow(panic) — fixture invariant, seed() is total.
+    let s = seed().expect("seed is always available");
+    // Tolerated: tokens inside a string literal and a comment.
+    let _prose = "never call .unwrap() or panic!( on wire data";
+    // .unwrap() mentioned in prose only
+    u32::from(*head) + s
+}
+
+#[cfg(test)]
+mod tests {
+    // Tolerated: tests may unwrap freely.
+    #[test]
+    fn roundtrip() {
+        let v: Option<u32> = Some(1);
+        assert_eq!(v.unwrap(), 1);
+    }
+}

@@ -1,0 +1,4 @@
+//! Fixture: a module with no `layer` entry — must be reported rather
+//! than silently skipped.
+
+pub fn orphan() {}

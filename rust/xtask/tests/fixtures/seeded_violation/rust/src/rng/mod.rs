@@ -1,0 +1,8 @@
+//! Fixture: `rng` is the bottom layer; importing `federated` from here
+//! is the seeded layering violation.
+
+use crate::federated::Frame;
+
+pub fn tainted() -> Frame {
+    Frame
+}
