@@ -15,6 +15,10 @@
 //! to reject malformed input — a truncated stream exhausts the bytes
 //! mid-decode and an oversized one leaves trailing bytes, and both are
 //! surfaced as errors instead of silently decoding garbage.
+#![cfg_attr(
+    not(test),
+    deny(clippy::cast_possible_truncation, clippy::cast_sign_loss, clippy::unwrap_used)
+)]
 
 use crate::ensure;
 use crate::util::error::Result;
@@ -38,12 +42,16 @@ impl BitModel {
 
     /// P(bit = 1) in [1, 2^16 - 1].
     fn p1(&self) -> u32 {
-        let p = ((self.ones as u64) << PRECISION) / self.total as u64;
-        (p as u32).clamp(1, (1 << PRECISION) - 1)
+        let p = (u64::from(self.ones) << PRECISION) / u64::from(self.total);
+        #[allow(clippy::cast_possible_truncation)]
+        // lint: allow(cast) — `ones < total` always (KT counts start at
+        // (1, 2) and update by (0|2, 2)), so the quotient is < 2^16.
+        let p = p as u32;
+        p.clamp(1, (1 << PRECISION) - 1)
     }
 
     fn update(&mut self, bit: bool) {
-        self.ones += 2 * bit as u32;
+        self.ones += 2 * u32::from(bit);
         self.total += 2;
         if self.total >= 1 << 24 {
             // halve counts to stay adaptive on huge streams
@@ -51,6 +59,27 @@ impl BitModel {
             self.total = (self.total + 1) / 2;
         }
     }
+}
+
+/// Split point `r1 = ⌊range · p1 / 2^16⌋`, clamped into `[1, range-1]`
+/// so both subranges stay non-empty — the shared encoder/decoder step
+/// that keeps their `low`/`range` trajectories identical.
+#[inline]
+fn split(range: u32, p1: u32) -> u32 {
+    #[allow(clippy::cast_possible_truncation)]
+    // lint: allow(cast) — the u64 product is < 2^32 · 2^16, so after
+    // the 16-bit shift the quotient fits u32 exactly.
+    let r1 = ((u64::from(range) * u64::from(p1)) >> PRECISION) as u32;
+    r1.max(1).min(range - 1)
+}
+
+/// Top byte of the 32-bit `low` register — the byte the carry-free
+/// renormalization emits.
+#[inline]
+#[allow(clippy::cast_possible_truncation)]
+fn top_byte(low: u32) -> u8 {
+    // lint: allow(cast) — `>> 24` leaves exactly 8 live bits.
+    (low >> 24) as u8
 }
 
 /// Encode a bit mask; returns the compressed bytes.
@@ -61,10 +90,8 @@ pub fn encode(mask: &[bool]) -> Vec<u8> {
     let mut out = Vec::with_capacity(mask.len() / 8 + 16);
 
     for &bit in mask {
-        let p1 = model.p1();
         // Split the range: [low, low+r1) codes 1, [low+r1, low+range) codes 0.
-        let r1 = ((range as u64 * p1 as u64) >> PRECISION) as u32;
-        let r1 = r1.max(1).min(range - 1);
+        let r1 = split(range, model.p1());
         if bit {
             range = r1;
         } else {
@@ -81,13 +108,13 @@ pub fn encode(mask: &[bool]) -> Vec<u8> {
                 false
             }
         } {
-            out.push((low >> 24) as u8);
+            out.push(top_byte(low));
             low <<= 8;
             range <<= 8;
         }
     }
     for _ in 0..4 {
-        out.push((low >> 24) as u8);
+        out.push(top_byte(low));
         low <<= 8;
     }
     out
@@ -100,7 +127,7 @@ fn next_byte(bytes: &[u8], pos: &mut usize) -> Result<u32> {
     match bytes.get(*pos) {
         Some(&b) => {
             *pos += 1;
-            Ok(b as u32)
+            Ok(u32::from(b))
         }
         None => Err(crate::anyhow!(
             "arithmetic stream exhausted after {} bytes (truncated payload)",
@@ -126,9 +153,7 @@ pub fn decode(bytes: &[u8], n: usize) -> Result<Vec<bool>> {
 
     let mut out = Vec::with_capacity(n);
     for _ in 0..n {
-        let p1 = model.p1();
-        let r1 = ((range as u64 * p1 as u64) >> PRECISION) as u32;
-        let r1 = r1.max(1).min(range - 1);
+        let r1 = split(range, model.p1());
         let bit = code.wrapping_sub(low) < r1;
         if bit {
             range = r1;

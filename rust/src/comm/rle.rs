@@ -5,6 +5,10 @@
 //! first run counts 0s (a leading-1 mask starts with a zero-length run).
 //! Only wins on highly-skewed masks; the ledger picks the cheaper of
 //! RLE / arithmetic / raw per message, like a real wire format would.
+#![cfg_attr(
+    not(test),
+    deny(clippy::cast_possible_truncation, clippy::cast_sign_loss, clippy::unwrap_used)
+)]
 
 use crate::bail;
 use crate::util::error::Result;
@@ -52,6 +56,9 @@ pub fn decode(bytes: &[u8], n: usize) -> Result<Vec<bool>> {
 
 fn write_varint(out: &mut Vec<u8>, mut v: u64) {
     loop {
+        #[allow(clippy::cast_possible_truncation)]
+        // lint: allow(cast) — the low 7 bits are explicitly masked, so
+        // the narrowing cannot truncate live value bits.
         let b = (v & 0x7f) as u8;
         v >>= 7;
         if v == 0 {
@@ -74,7 +81,7 @@ fn read_varint(bytes: &[u8]) -> Result<(u64, usize)> {
         if shift >= 64 || (shift == 63 && (b & 0x7f) > 1) {
             bail!("run-length varint overflows u64 at byte {i}");
         }
-        v |= ((b & 0x7f) as u64) << shift;
+        v |= u64::from(b & 0x7f) << shift;
         if b & 0x80 == 0 {
             return Ok((v, i + 1));
         }

@@ -706,6 +706,9 @@ impl<'a> RoundEngine<'a> {
                 n: self.cfg.train.n,
                 deadline,
             };
+            // lint: allow(nondeterminism) — wall-clock round duration is
+            // telemetry only (the ledger's `wall_ns` column); it never feeds
+            // back into training state, so byte-identicality is unaffected.
             let round_start = Instant::now();
             let mut traffic = transport.exchange(&ctx)?;
 

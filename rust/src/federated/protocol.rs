@@ -3,6 +3,10 @@
 //!
 //! Frame layout: `[tag: u8][len: u32 le][payload: len bytes]`.
 //! The byte counts the ledger records are exactly `frame_len(msg)`.
+#![cfg_attr(
+    not(test),
+    deny(clippy::cast_possible_truncation, clippy::cast_sign_loss, clippy::unwrap_used)
+)]
 
 use crate::comm::{arith, BitPack, FloatVec};
 use crate::util::error::Result;
@@ -186,10 +190,23 @@ pub(crate) fn declared_frame_len(header: &[u8]) -> Result<usize> {
     Ok(le_u32(header, 1)? as usize)
 }
 
+/// Narrow an in-memory length/count to a `u32` wire field, checked.
+/// Encoders only — wire input never reaches this.
+#[allow(clippy::missing_panics_doc)]
+pub(crate) fn wire_u32(v: usize) -> u32 {
+    // lint: allow(panic) — encoder-local invariant, not wire data: every
+    // value encoded through this helper (payload length, mask length,
+    // participant count, shard id) is bounded by a protocol cap
+    // (`MAX_FRAME_LEN`, `MAX_MASK_LEN`, `MAX_PEER_COUNT`) or by the
+    // in-memory population before it gets here, so the narrowing can
+    // only fail on a programming error on *our* side of the wire.
+    u32::try_from(v).expect("value exceeds a u32 wire field")
+}
+
 fn frame(tag: u8, payload: &[u8]) -> Vec<u8> {
     let mut out = Vec::with_capacity(5 + payload.len());
     out.push(tag);
-    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&wire_u32(payload.len()).to_le_bytes());
     out.extend_from_slice(payload);
     out
 }
@@ -206,7 +223,7 @@ pub fn encode_server(msg: &ServerMsg) -> Vec<u8> {
         ServerMsg::PeerRound { round, participants } => {
             let mut payload = Vec::with_capacity(8 + participants.len() * 4);
             payload.extend_from_slice(&round.to_le_bytes());
-            payload.extend_from_slice(&(participants.len() as u32).to_le_bytes());
+            payload.extend_from_slice(&wire_u32(participants.len()).to_le_bytes());
             for id in participants {
                 payload.extend_from_slice(&id.to_le_bytes());
             }
@@ -228,7 +245,7 @@ pub fn encode_client(msg: &ClientMsg, codec: MaskCodec) -> Vec<u8> {
             let mut payload = Vec::with_capacity(12 + body.len());
             payload.extend_from_slice(&round.to_le_bytes());
             payload.extend_from_slice(&client.to_le_bytes());
-            payload.extend_from_slice(&(*n as u32).to_le_bytes());
+            payload.extend_from_slice(&wire_u32(*n).to_le_bytes());
             payload.extend_from_slice(&body);
             frame(tag, &payload)
         }
@@ -239,7 +256,7 @@ pub fn encode_client(msg: &ClientMsg, codec: MaskCodec) -> Vec<u8> {
             let mut payload = Vec::with_capacity(20 + probs.len() * 4);
             payload.extend_from_slice(&round.to_le_bytes());
             payload.extend_from_slice(&client.to_le_bytes());
-            payload.extend_from_slice(&(probs.len() as u32).to_le_bytes());
+            payload.extend_from_slice(&wire_u32(probs.len()).to_le_bytes());
             payload.extend_from_slice(&loss.to_le_bytes());
             payload.extend_from_slice(&FloatVec::encode(probs));
             frame(TAG_PEER_REPORT, &payload)
@@ -257,7 +274,7 @@ pub fn encode_shard(msg: &ShardMsg) -> Vec<u8> {
             payload.extend_from_slice(&round.to_le_bytes());
             payload.extend_from_slice(&shard.to_le_bytes());
             payload.extend_from_slice(&received.to_le_bytes());
-            payload.extend_from_slice(&(*n as u32).to_le_bytes());
+            payload.extend_from_slice(&wire_u32(*n).to_le_bytes());
             for v in votes {
                 payload.extend_from_slice(&v.to_le_bytes());
             }

@@ -47,6 +47,10 @@
 //!
 //! std::net non-blocking I/O over a thin `poll(2)` wrapper (tokio and
 //! mio are unavailable offline); see PERF.md §"The event-loop leader".
+#![cfg_attr(
+    not(test),
+    deny(clippy::cast_possible_truncation, clippy::cast_sign_loss, clippy::unwrap_used)
+)]
 
 use std::io::{ErrorKind, Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream, ToSocketAddrs};
@@ -64,7 +68,7 @@ use crate::comm::ShardCost;
 use super::engine::{Contribution, DeadlinePolicy, RoundCtx, RoundTraffic, ShardPlan, Transport};
 use super::protocol::{
     decode_client, decode_server, declared_frame_len, encode_client, encode_server, encode_shard,
-    peek_client_frame, ClientFrameKind, ClientMsg, MaskCodec, ServerMsg, ShardMsg,
+    peek_client_frame, wire_u32, ClientFrameKind, ClientMsg, MaskCodec, ServerMsg, ShardMsg,
 };
 use super::Server;
 
@@ -124,7 +128,7 @@ mod readiness {
     }
 
     fn poll_ms(timeout: Duration) -> i32 {
-        timeout.as_millis().min(i32::MAX as u128) as i32
+        i32::try_from(timeout.as_millis()).unwrap_or(i32::MAX)
     }
 
     /// Wait until at least one fd is readable — or has an error/hangup
@@ -138,7 +142,12 @@ mod readiness {
         }
         let mut pfds: Vec<PollFd> =
             fds.iter().map(|&fd| PollFd { fd, events: POLLIN, revents: 0 }).collect();
-        let rc = unsafe { poll(pfds.as_mut_ptr(), pfds.len() as _, poll_ms(timeout)) };
+        let nfds = pfds.len() as std::os::raw::c_ulong;
+        // SAFETY: `pfds` is a live, exclusively-borrowed Vec of `repr(C)`
+        // PollFd structs and `nfds` is exactly its length, so the kernel
+        // reads/writes only within the allocation for the syscall's
+        // duration.
+        let rc = unsafe { poll(pfds.as_mut_ptr(), nfds, poll_ms(timeout)) };
         if rc <= 0 {
             return vec![false; fds.len()];
         }
@@ -149,6 +158,8 @@ mod readiness {
     /// surfaces the real error), up to `timeout`.
     pub fn wait_writable(fd: i32, timeout: Duration) {
         let mut pfd = PollFd { fd, events: POLLOUT, revents: 0 };
+        // SAFETY: a single live `repr(C)` PollFd on the stack, passed
+        // with nfds = 1; the kernel touches exactly that struct.
         unsafe { poll(&mut pfd, 1, poll_ms(timeout)) };
     }
 
@@ -508,18 +519,18 @@ impl SimPopulation {
     /// client `k`'s current incarnation.  Returns `false` once the
     /// leader is gone.
     pub fn send_frame(&self, k: usize, frame: Vec<u8>) -> bool {
-        self.tx.send(Event::Msg { client: k as u32, conn: self.conns[k], frame }).is_ok()
+        self.tx.send(Event::Msg { client: wire_u32(k), conn: self.conns[k], frame }).is_ok()
     }
 
     /// Deliver a liveness heartbeat from client `k`.
     pub fn beat(&self, k: usize) -> bool {
-        self.tx.send(Event::Beat { client: k as u32, conn: self.conns[k] }).is_ok()
+        self.tx.send(Event::Beat { client: wire_u32(k), conn: self.conns[k] }).is_ok()
     }
 
     /// Client `k`'s connection dies (mid-round this drops it for the
     /// round, exactly like a socket EOF).
     pub fn leave(&mut self, k: usize) -> bool {
-        self.tx.send(Event::Gone { client: k as u32, conn: self.conns[k] }).is_ok()
+        self.tx.send(Event::Gone { client: wire_u32(k), conn: self.conns[k] }).is_ok()
     }
 
     /// Client `k` reconnects with a fresh `Hello` under a new
@@ -529,7 +540,7 @@ impl SimPopulation {
         self.next_conn += 1;
         self.conns[k] = self.next_conn;
         self.tx
-            .send(Event::Hello { client: k as u32, conn: self.conns[k], link: SlotLink::Sim })
+            .send(Event::Hello { client: wire_u32(k), conn: self.conns[k], link: SlotLink::Sim })
             .is_ok()
     }
 }
@@ -1301,9 +1312,9 @@ impl Transport for ShardedTransport {
                         let mut receipt =
                             leader.collect_votes(ctx.round, parts, ctx.n, ctx.deadline)?;
                         let votes_frame = encode_shard(&ShardMsg::ShardVotes {
-                            shard: sid as u32,
+                            shard: wire_u32(sid),
                             round: ctx.round,
-                            received: receipt.received.len() as u32,
+                            received: wire_u32(receipt.received.len()),
                             n: ctx.n,
                             votes: std::mem::take(&mut receipt.votes),
                         });
@@ -1352,12 +1363,12 @@ impl Transport for ShardedTransport {
             dropped.extend_from_slice(&ex.receipt.dropped);
             down_bits += ex.down_bits;
             shard_costs.push(ShardCost {
-                shard: sid as u32,
+                shard: wire_u32(sid),
                 uplink_bits: ex.receipt.bytes * 8,
                 downlink_bits: ex.down_bits,
                 merge_bits: ex.votes_frame.len() as u64 * 8,
-                received: ex.receipt.received.len() as u32,
-                dropped: ex.receipt.dropped.len() as u32,
+                received: wire_u32(ex.receipt.received.len()),
+                dropped: wire_u32(ex.receipt.dropped.len()),
             });
             self.pending_votes.push(ex.votes_frame);
         }

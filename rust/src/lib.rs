@@ -31,6 +31,11 @@
 //! * [`zonotope`] — theory validators for §2 (Lemmas 2.1–2.3, Props 2.4–2.6).
 //! * [`metrics`], [`experiments`], [`config`] — measurement + drivers.
 
+// Every unsafe operation inside an `unsafe fn` must sit in an explicit
+// `unsafe { }` block with its own `// SAFETY:` justification (the xtask
+// `safety-comments` pass warns on undocumented blocks in `runtime/`).
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod baselines;
 pub mod comm;
 pub mod config;

@@ -284,6 +284,9 @@ pub struct SendPtr<T>(*mut T);
 // dereferences go through the `unsafe` [`SendPtr::slice`], whose caller
 // contract (disjoint in-bounds ranges) is what makes the writes sound.
 unsafe impl<T: Send> Send for SendPtr<T> {}
+// SAFETY: same argument as `Send` — shared references to the wrapper
+// expose no safe dereference, so cross-thread sharing is sound as long
+// as every `slice` call honours the disjointness contract.
 unsafe impl<T: Send> Sync for SendPtr<T> {}
 
 impl<T> SendPtr<T> {
@@ -298,7 +301,10 @@ impl<T> SendPtr<T> {
     /// overlap any range handed to a concurrently running shard.
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn slice(&self, start: usize, len: usize) -> &mut [T] {
-        std::slice::from_raw_parts_mut(self.0.add(start), len)
+        // SAFETY: forwarded caller contract — `[start, start + len)` is
+        // in bounds of the original allocation and disjoint from every
+        // range handed to a concurrently running shard.
+        unsafe { std::slice::from_raw_parts_mut(self.0.add(start), len) }
     }
 }
 

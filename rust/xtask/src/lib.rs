@@ -1,21 +1,44 @@
 //! Static analysis for this repository: `cargo xtask analyze`.
 //!
-//! Two lints, both driven by the machine-readable `xtask:rules` block in
-//! `ARCHITECTURE.md` (so the prose diagram and the enforced rules are the
-//! same artifact and drift is impossible):
+//! Five lints, all driven by fenced machine-readable blocks in the docs
+//! (so the prose spec and the enforced rules are the same artifact and
+//! drift is impossible):
 //!
 //! * **Layering** — every `use crate::X` edge in `rust/src` must appear
-//!   in the `layer` table.  A module may always use itself; identifiers
-//!   that are not top-level modules (the `anyhow!`/`bail!`/`ensure!`
-//!   macros re-exported at the crate root) are ignored.
+//!   in the `layer` table of ARCHITECTURE.md's `xtask:rules` block.  A
+//!   module may always use itself; identifiers that are not top-level
+//!   modules (the `anyhow!`/`bail!`/`ensure!` macros re-exported at the
+//!   crate root) are ignored.
 //! * **Panic lint** — files named by `deny-panic` (the wire-facing
 //!   decoders and transports) may not contain `.unwrap()`, `.expect(`,
 //!   `panic!(`, `unreachable!(`, `todo!(`, or `unimplemented!(` outside
 //!   `#[cfg(test)]` modules, unless the site carries a
 //!   `// lint: allow(panic) — <justification>` annotation on the same
 //!   line or in the comment block immediately above it.
+//! * **Frames lint** — the `xtask:frames` block in `docs/PROTOCOL.md`
+//!   declares every wire frame (tag number, `TAG_*` constant, name,
+//!   direction) and every size-cap constant; `check_frames` cross-checks
+//!   it against `federated/protocol.rs` (constant values, decode `match`
+//!   arms per direction) and the cap constants' defining files.  An
+//!   undocumented tag, a documented-but-missing constant, a tag
+//!   collision, an unhandled tag, or a cap value drift is a violation.
+//! * **Determinism lint** — files named by `deterministic` (the modules
+//!   whose byte-identicality across transports is load-bearing) may not
+//!   use order-unstable or wall-clock APIs: `HashMap`/`HashSet`
+//!   (unordered iteration), `Instant::now`/`SystemTime`,
+//!   `thread_rng`/`rand::random`, or `std::env` reads — outside an
+//!   annotated `// lint: allow(nondeterminism) — <justification>` site.
+//! * **Cast lint** — files named by `deny-cast` (the wire-facing
+//!   encoders/decoders) may not contain bare narrowing or
+//!   float-truncating `as` casts (`as u8/u16/u32/i8/i16/i32/f32/_`);
+//!   length and id fields must go through checked `try_from`-style
+//!   helpers, or carry a `// lint: allow(cast) — <justification>`
+//!   annotation proving the value is bounded by construction.
 //!
-//! Both scanners run on [`strip_noise`]-sanitized text, so tokens inside
+//! A sixth, warn-only pass: files named by `safety-comments` must carry
+//! a `// SAFETY: …` (or `/// # Safety`) comment on every `unsafe` site.
+//!
+//! All scanners run on [`strip_noise`]-sanitized text, so tokens inside
 //! comments, doc examples, and string literals never match.  See
 //! `docs/ANALYSIS.md` for the policy and `tests/analyze_gauntlet.rs` for
 //! the seeded-violation fixtures proving the lints actually fire.
@@ -34,11 +57,21 @@ pub struct Rules {
     pub exempt: BTreeSet<String>,
     /// `deny-panic <file>` — paths subject to the panic lint.
     pub deny_panic: BTreeSet<String>,
+    /// `deterministic <file-or-dir/>` — paths subject to the
+    /// determinism lint (byte-identicality contract).
+    pub deterministic: BTreeSet<String>,
+    /// `deny-cast <file>` — paths subject to the narrowing-cast lint.
+    pub deny_cast: BTreeSet<String>,
+    /// `safety-comments <file-or-dir/>` — paths whose `unsafe` sites
+    /// must carry `// SAFETY:` comments (warn-only).
+    pub safety_comments: BTreeSet<String>,
 }
 
-/// One lint finding, pointing at `rust/src`-relative `file:line`.
+/// One lint finding, pointing at `rust/src`-relative `file:line` (or a
+/// repo-relative doc path for spec-side findings).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Violation {
+    pub lint: &'static str,
     pub file: String,
     pub line: usize,
     pub message: String,
@@ -46,11 +79,16 @@ pub struct Violation {
 
 impl fmt::Display for Violation {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "rust/src/{}:{}: {}", self.file, self.line, self.message)
+        if self.file.ends_with(".md") {
+            write!(f, "{}:{}: [{}] {}", self.file, self.line, self.lint, self.message)
+        } else {
+            write!(f, "rust/src/{}:{}: [{}] {}", self.file, self.line, self.lint, self.message)
+        }
     }
 }
 
 const RULES_FENCE: &str = "```text xtask:rules";
+const FRAMES_FENCE: &str = "```text xtask:frames";
 const PANIC_TOKENS: [&str; 6] = [
     ".unwrap()",
     ".expect(",
@@ -59,7 +97,26 @@ const PANIC_TOKENS: [&str; 6] = [
     "todo!(",
     "unimplemented!(",
 ];
-const ALLOW_MARK: &str = "lint: allow(panic)";
+/// APIs whose results depend on iteration order, wall-clock time, an
+/// ambient RNG, or the process environment — all of which break the
+/// byte-identicality contract (`docs/PROTOCOL.md` intro; every
+/// transport must produce identical `final_probs`/ledgers).
+const NONDET_TOKENS: [&str; 7] = [
+    "HashMap",
+    "HashSet",
+    "Instant::now",
+    "SystemTime",
+    "thread_rng",
+    "rand::random",
+    "std::env",
+];
+/// Narrowing / float-truncating `as` targets the cast lint denies in
+/// wire-facing files (`as _` is denied too: an inferred target hides
+/// whether the cast narrows).
+const NARROW_TARGETS: [&str; 8] = ["u8", "u16", "u32", "i8", "i16", "i32", "f32", "_"];
+const ALLOW_PANIC: &str = "lint: allow(panic)";
+const ALLOW_NONDET: &str = "lint: allow(nondeterminism)";
+const ALLOW_CAST: &str = "lint: allow(cast)";
 
 /// Extract and parse the fenced `xtask:rules` block.
 pub fn parse_rules(markdown: &str) -> Result<Rules, String> {
@@ -101,6 +158,12 @@ pub fn parse_rules(markdown: &str) -> Result<Rules, String> {
             rules.exempt.insert(rest.trim().to_string());
         } else if let Some(rest) = trimmed.strip_prefix("deny-panic ") {
             rules.deny_panic.insert(rest.trim().to_string());
+        } else if let Some(rest) = trimmed.strip_prefix("deterministic ") {
+            rules.deterministic.insert(rest.trim().to_string());
+        } else if let Some(rest) = trimmed.strip_prefix("deny-cast ") {
+            rules.deny_cast.insert(rest.trim().to_string());
+        } else if let Some(rest) = trimmed.strip_prefix("safety-comments ") {
+            rules.safety_comments.insert(rest.trim().to_string());
         } else {
             return Err(format!("ARCHITECTURE.md:{lineno}: unknown directive `{trimmed}`"));
         }
@@ -119,6 +182,188 @@ pub fn parse_rules(markdown: &str) -> Result<Rules, String> {
         }
     }
     Ok(rules)
+}
+
+/// Which decoder a frame's direction maps to in `protocol.rs`: frames a
+/// server sends are decoded by the client side (`decode_server`) and
+/// vice versa — the decoder named here is the one whose `match` must
+/// handle the tag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// `server->client` — handled by `decode_server`.
+    ServerToClient,
+    /// `client->server` — handled by `decode_client`.
+    ClientToServer,
+    /// `shard->root` — handled by `decode_shard`.
+    ShardToRoot,
+}
+
+impl Direction {
+    fn parse(s: &str) -> Option<Self> {
+        match s {
+            "server->client" => Some(Self::ServerToClient),
+            "client->server" => Some(Self::ClientToServer),
+            "shard->root" => Some(Self::ShardToRoot),
+            _ => None,
+        }
+    }
+
+    fn decoder(self) -> &'static str {
+        match self {
+            Self::ServerToClient => "fn decode_server",
+            Self::ClientToServer => "fn decode_client",
+            Self::ShardToRoot => "fn decode_shard",
+        }
+    }
+}
+
+/// One `frame <tag> <CONST> <name> <direction>` declaration.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FrameDecl {
+    /// Declared wire tag value.
+    pub tag: u8,
+    /// The `TAG_*` constant that must carry this value in `protocol.rs`.
+    pub const_name: String,
+    /// Human-readable frame name (doc only).
+    pub name: String,
+    /// Who sends it — determines which decoder must handle the tag.
+    pub direction: Direction,
+    /// Line in `docs/PROTOCOL.md`.
+    pub line: usize,
+}
+
+/// One `cap <CONST> <value-expr> <file>` declaration.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CapDecl {
+    /// The cap constant's name (e.g. `MAX_MASK_LEN`).
+    pub name: String,
+    /// Declared value (the doc expression, evaluated).
+    pub value: u64,
+    /// `rust/src`-relative file the constant lives in.
+    pub file: String,
+    /// Line in `docs/PROTOCOL.md`.
+    pub line: usize,
+}
+
+/// The parsed `xtask:frames` block from `docs/PROTOCOL.md`.
+#[derive(Debug, Default)]
+pub struct FrameSpec {
+    /// The declared frame catalogue.
+    pub frames: Vec<FrameDecl>,
+    /// The declared size caps.
+    pub caps: Vec<CapDecl>,
+}
+
+/// Extract and parse the fenced `xtask:frames` block.
+pub fn parse_frames(markdown: &str) -> Result<FrameSpec, String> {
+    let mut spec = FrameSpec::default();
+    let mut in_block = false;
+    let mut seen_block = false;
+    for (idx, line) in markdown.lines().enumerate() {
+        let trimmed = line.trim();
+        if !in_block {
+            if trimmed.starts_with(FRAMES_FENCE) {
+                in_block = true;
+                seen_block = true;
+            }
+            continue;
+        }
+        if trimmed.starts_with("```") {
+            in_block = false;
+            continue;
+        }
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        let lineno = idx + 1;
+        if let Some(rest) = trimmed.strip_prefix("frame ") {
+            let parts: Vec<&str> = rest.split_whitespace().collect();
+            if parts.len() != 4 {
+                return Err(format!(
+                    "docs/PROTOCOL.md:{lineno}: `frame` needs `<tag> <CONST> <name> <direction>`"
+                ));
+            }
+            let (tag, const_name, name, direction) = (parts[0], parts[1], parts[2], parts[3]);
+            let tag: u8 = tag
+                .parse()
+                .map_err(|_| format!("docs/PROTOCOL.md:{lineno}: bad frame tag `{tag}`"))?;
+            let direction = Direction::parse(direction).ok_or_else(|| {
+                format!(
+                    "docs/PROTOCOL.md:{lineno}: bad direction `{direction}` \
+                     (want server->client | client->server | shard->root)"
+                )
+            })?;
+            if spec.frames.iter().any(|f| f.tag == tag) {
+                return Err(format!("docs/PROTOCOL.md:{lineno}: duplicate frame tag {tag}"));
+            }
+            if spec.frames.iter().any(|f| f.const_name == const_name) {
+                return Err(format!(
+                    "docs/PROTOCOL.md:{lineno}: duplicate frame constant `{const_name}`"
+                ));
+            }
+            spec.frames.push(FrameDecl {
+                tag,
+                const_name: const_name.to_string(),
+                name: name.to_string(),
+                direction,
+                line: lineno,
+            });
+        } else if let Some(rest) = trimmed.strip_prefix("cap ") {
+            let parts: Vec<&str> = rest.split_whitespace().collect();
+            if parts.len() != 3 {
+                return Err(format!(
+                    "docs/PROTOCOL.md:{lineno}: `cap` needs `<CONST> <value-expr> <file>`"
+                ));
+            }
+            let (name, value, file) = (parts[0], parts[1], parts[2]);
+            let value = eval_const_expr(value).ok_or_else(|| {
+                format!("docs/PROTOCOL.md:{lineno}: cannot evaluate cap expression `{value}`")
+            })?;
+            if spec.caps.iter().any(|c| c.name == name) {
+                return Err(format!("docs/PROTOCOL.md:{lineno}: duplicate cap `{name}`"));
+            }
+            spec.caps.push(CapDecl {
+                name: name.to_string(),
+                value,
+                file: file.to_string(),
+                line: lineno,
+            });
+        } else {
+            return Err(format!("docs/PROTOCOL.md:{lineno}: unknown directive `{trimmed}`"));
+        }
+    }
+    if !seen_block {
+        return Err(format!("no `{FRAMES_FENCE}` block found in docs/PROTOCOL.md"));
+    }
+    if in_block {
+        return Err("unterminated `xtask:frames` block in docs/PROTOCOL.md".into());
+    }
+    Ok(spec)
+}
+
+/// Evaluate a tiny constant expression: decimal integers (underscores
+/// allowed), `*` products, and at most one `<<` shift — the grammar
+/// both the doc caps and the `const … = 1 << 24;` initializers use.
+pub fn eval_const_expr(expr: &str) -> Option<u64> {
+    fn product(term: &str) -> Option<u64> {
+        let mut acc: u64 = 1;
+        for factor in term.split('*') {
+            let digits = factor.replace('_', "");
+            if digits.is_empty() {
+                return None;
+            }
+            acc = acc.checked_mul(digits.parse().ok()?)?;
+        }
+        Some(acc)
+    }
+    let cleaned: String = expr.chars().filter(|c| !c.is_whitespace()).collect();
+    match cleaned.split_once("<<") {
+        Some((base, shift)) => {
+            let s = u32::try_from(product(shift)?).ok()?;
+            product(base)?.checked_shl(s)
+        }
+        None => product(&cleaned),
+    }
 }
 
 /// Blank out comments, string literals, and char literals, preserving
@@ -304,8 +549,64 @@ fn test_mod_spans(san: &str) -> Vec<(usize, usize)> {
     spans
 }
 
+fn is_ident_byte(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Does `line` contain `tok` with non-identifier characters on both
+/// sides?  (`HashMap` must not match inside `AHashMapLike`; `std::env`
+/// may be followed by `::var`.)
+fn has_token(line: &str, tok: &str) -> bool {
+    find_token(line, tok).is_some()
+}
+
+/// Position of the first boundary-respecting occurrence of `tok`.
+fn find_token(hay: &str, tok: &str) -> Option<usize> {
+    let b = hay.as_bytes();
+    let mut from = 0usize;
+    while let Some(rel) = hay[from..].find(tok) {
+        let at = from + rel;
+        let pre_ok = at == 0 || !is_ident_byte(b[at - 1]);
+        let end = at + tok.len();
+        let post_ok = end >= b.len() || !is_ident_byte(b[end]);
+        if pre_ok && post_ok {
+            return Some(at);
+        }
+        from = at + 1;
+    }
+    None
+}
+
 /// Panic lint for one `deny-panic` file.
 pub fn check_panics(rel: &str, src: &str) -> Vec<Violation> {
+    scan_tokens(rel, src, "panic", &PANIC_TOKENS, ALLOW_PANIC, |tok| {
+        format!("`{tok}` in wire-facing code without a `// {ALLOW_PANIC} — …` annotation")
+    })
+}
+
+/// Determinism lint for one `deterministic` file: no order-unstable or
+/// wall-clock APIs outside an annotated allowlist.
+pub fn check_determinism(rel: &str, src: &str) -> Vec<Violation> {
+    scan_tokens(rel, src, "determinism", &NONDET_TOKENS, ALLOW_NONDET, |tok| {
+        format!(
+            "`{tok}` in a deterministic module (byte-identicality contract) \
+             without a `// {ALLOW_NONDET} — …` annotation"
+        )
+    })
+}
+
+/// Shared scanner: flag `tokens` on non-test sanitized lines unless the
+/// original line (or the contiguous `//` block above it) carries `mark`.
+/// Panic tokens match as substrings; identifier-shaped tokens respect
+/// word boundaries.
+fn scan_tokens(
+    rel: &str,
+    src: &str,
+    lint: &'static str,
+    tokens: &[&str],
+    mark: &str,
+    describe: impl Fn(&str) -> String,
+) -> Vec<Violation> {
     let san = strip_noise(src);
     let spans = test_mod_spans(&san);
     let orig_lines: Vec<&str> = src.lines().collect();
@@ -317,14 +618,18 @@ pub fn check_panics(rel: &str, src: &str) -> Vec<Violation> {
         if spans.iter().any(|&(a, b)| line_start >= a && line_start < b) {
             continue;
         }
-        for tok in PANIC_TOKENS {
-            if sline.contains(tok) && !panic_allowed(&orig_lines, idx) {
+        for &tok in tokens {
+            let hit = if tok.chars().next().is_some_and(|c| c.is_ascii_alphanumeric()) {
+                has_token(sline, tok)
+            } else {
+                sline.contains(tok)
+            };
+            if hit && !annotation_allowed(&orig_lines, idx, mark) {
                 out.push(Violation {
+                    lint,
                     file: rel.to_string(),
                     line: idx + 1,
-                    message: format!(
-                        "`{tok}` in wire-facing code without a `// {ALLOW_MARK} — …` annotation"
-                    ),
+                    message: describe(tok),
                 });
             }
         }
@@ -332,10 +637,85 @@ pub fn check_panics(rel: &str, src: &str) -> Vec<Violation> {
     out
 }
 
+/// Narrowing-cast lint for one `deny-cast` file: no bare
+/// `as u8/u16/u32/i8/i16/i32/f32/_` outside `cfg(test)` and the
+/// annotated allowlist.  Widening casts (`as u64`, `as usize` from
+/// `u32`, …) pass — the lint targets silent truncation, and the wire
+/// fields it guards are all 32-bit or narrower.
+pub fn check_casts(rel: &str, src: &str) -> Vec<Violation> {
+    let san = strip_noise(src);
+    let spans = test_mod_spans(&san);
+    let orig_lines: Vec<&str> = src.lines().collect();
+    let mut out = Vec::new();
+    let mut offset = 0usize;
+    for (idx, sline) in san.lines().enumerate() {
+        let line_start = offset;
+        offset += sline.len() + 1;
+        if spans.iter().any(|&(a, b)| line_start >= a && line_start < b) {
+            continue;
+        }
+        let t = sline.trim_start();
+        // `use x as y;` renames, it never converts.
+        if t.starts_with("use ") || t.starts_with("pub use ") || t.starts_with("pub(crate) use ") {
+            continue;
+        }
+        let mut from = 0usize;
+        while let Some(at) = find_token(&sline[from..], "as").map(|p| from + p) {
+            from = at + 2;
+            let rest = sline[at + 2..].trim_start();
+            let target: String =
+                rest.chars().take_while(|c| c.is_ascii_alphanumeric() || *c == '_').collect();
+            if NARROW_TARGETS.contains(&target.as_str())
+                && !annotation_allowed(&orig_lines, idx, ALLOW_CAST)
+            {
+                out.push(Violation {
+                    lint: "cast",
+                    file: rel.to_string(),
+                    line: idx + 1,
+                    message: format!(
+                        "bare `as {target}` narrowing cast in wire-facing code — use a checked \
+                         `try_from`-style helper or a `// {ALLOW_CAST} — …` annotation"
+                    ),
+                });
+                break; // one finding per line keeps the report readable
+            }
+        }
+    }
+    out
+}
+
+/// Warn-only pass: every non-test `unsafe` site in a `safety-comments`
+/// file must carry a `// SAFETY: …` comment (or a `/// # Safety` doc
+/// section) on the same line or in the comment/attribute block above.
+pub fn check_safety_comments(rel: &str, src: &str) -> Vec<Violation> {
+    let san = strip_noise(src);
+    let spans = test_mod_spans(&san);
+    let orig_lines: Vec<&str> = src.lines().collect();
+    let mut out = Vec::new();
+    let mut offset = 0usize;
+    for (idx, sline) in san.lines().enumerate() {
+        let line_start = offset;
+        offset += sline.len() + 1;
+        if spans.iter().any(|&(a, b)| line_start >= a && line_start < b) {
+            continue;
+        }
+        if has_token(sline, "unsafe") && !safety_documented(&orig_lines, idx) {
+            out.push(Violation {
+                lint: "safety",
+                file: rel.to_string(),
+                line: idx + 1,
+                message: "`unsafe` without a `// SAFETY: …` comment explaining the contract"
+                    .to_string(),
+            });
+        }
+    }
+    out
+}
+
 /// An annotation counts if it is on the flagged line itself or anywhere
 /// in the contiguous `//` comment block directly above it.
-fn panic_allowed(orig_lines: &[&str], idx: usize) -> bool {
-    if orig_lines.get(idx).is_some_and(|l| l.contains(ALLOW_MARK)) {
+fn annotation_allowed(orig_lines: &[&str], idx: usize, mark: &str) -> bool {
+    if orig_lines.get(idx).is_some_and(|l| l.contains(mark)) {
         return true;
     }
     let mut k = idx;
@@ -345,7 +725,29 @@ fn panic_allowed(orig_lines: &[&str], idx: usize) -> bool {
         if !t.starts_with("//") {
             return false;
         }
-        if t.contains(ALLOW_MARK) {
+        if t.contains(mark) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Like [`annotation_allowed`] but for `SAFETY:` — the upward walk also
+/// steps over `#[…]` attribute lines (doc comment, then attribute, then
+/// the `unsafe fn` signature is a common shape).
+fn safety_documented(orig_lines: &[&str], idx: usize) -> bool {
+    let marks = ["SAFETY:", "# Safety"];
+    if orig_lines.get(idx).is_some_and(|l| marks.iter().any(|m| l.contains(m))) {
+        return true;
+    }
+    let mut k = idx;
+    while k > 0 {
+        k -= 1;
+        let t = orig_lines[k].trim_start();
+        if !(t.starts_with("//") || t.starts_with("#[") || t.starts_with("#!")) {
+            return false;
+        }
+        if marks.iter().any(|m| t.contains(m)) {
             return true;
         }
     }
@@ -359,6 +761,7 @@ pub fn check_layering(rules: &Rules, rel: &str, src: &str) -> Vec<Violation> {
     let top = top_raw.strip_suffix(".rs").unwrap_or(top_raw);
     let Some(allowed) = rules.layers.get(top) else {
         return vec![Violation {
+            lint: "layering",
             file: rel.to_string(),
             line: 1,
             message: format!(
@@ -392,6 +795,7 @@ pub fn check_layering(rules: &Rules, rel: &str, src: &str) -> Vec<Violation> {
             }
             if rules.layers.contains_key(&target) && !allowed.contains(&target) {
                 out.push(Violation {
+                    lint: "layering",
                     file: rel.to_string(),
                     line: idx + 1,
                     message: format!(
@@ -456,17 +860,330 @@ fn push_leading_ident(frag: &str, out: &mut Vec<String>) {
     }
 }
 
-/// Run both lints over `<root>/rust/src` against `<root>/ARCHITECTURE.md`.
-pub fn analyze(root: &Path) -> Result<Vec<Violation>, String> {
+/// `const NAME: <ty> = <expr>;` consts parsed out of one sanitized file:
+/// `name -> (expr-text, line)`.
+fn collect_consts(san: &str) -> BTreeMap<String, (String, usize)> {
+    let mut out = BTreeMap::new();
+    for (idx, line) in san.lines().enumerate() {
+        let t = line.trim_start();
+        let t = t.strip_prefix("pub(crate) ").unwrap_or(t);
+        let t = t.strip_prefix("pub ").unwrap_or(t);
+        let Some(rest) = t.strip_prefix("const ") else {
+            continue;
+        };
+        let Some((name, after)) = rest.split_once(':') else {
+            continue;
+        };
+        let Some((_ty, expr)) = after.split_once('=') else {
+            continue;
+        };
+        let expr = expr.trim().trim_end_matches(';').trim();
+        out.insert(name.trim().to_string(), (expr.to_string(), idx + 1));
+    }
+    out
+}
+
+/// The brace-matched body of the fn introduced by `needle` (e.g.
+/// `"fn decode_server"`) in sanitized text.
+fn fn_body<'a>(san: &'a str, needle: &str) -> Option<&'a str> {
+    let at = find_token(san, needle)?;
+    let open = at + san[at..].find('{')?;
+    let bytes = san.as_bytes();
+    let mut depth = 0usize;
+    for (k, &ch) in bytes[open..].iter().enumerate() {
+        if ch == b'{' {
+            depth += 1;
+        } else if ch == b'}' {
+            depth -= 1;
+            if depth == 0 {
+                return Some(&san[open..open + k + 1]);
+            }
+        }
+    }
+    Some(&san[open..])
+}
+
+/// Protocol-conformance lint: cross-check the `xtask:frames` catalogue
+/// against the protocol source (`sources` maps `rust/src`-relative
+/// paths to file contents; `federated/protocol.rs` is the anchor).
+pub fn check_frames(spec: &FrameSpec, sources: &BTreeMap<String, String>) -> Vec<Violation> {
+    const PROTOCOL: &str = "federated/protocol.rs";
+    let mut out = Vec::new();
+    let Some(proto_src) = sources.get(PROTOCOL) else {
+        return vec![Violation {
+            lint: "frames",
+            file: PROTOCOL.to_string(),
+            line: 1,
+            message: "file missing but required by the docs/PROTOCOL.md frames catalogue"
+                .to_string(),
+        }];
+    };
+    let proto_san = strip_noise(proto_src);
+    let consts = collect_consts(&proto_san);
+    let mut tag_consts: Vec<(String, u64, usize)> = Vec::new();
+    for (name, (expr, line)) in &consts {
+        if name.starts_with("TAG_") {
+            if let Some(v) = eval_const_expr(expr) {
+                tag_consts.push((name.clone(), v, *line));
+            }
+        }
+    }
+
+    // Source-side tag collisions: two constants sharing a wire value.
+    let mut by_value: BTreeMap<u64, (Vec<&str>, usize)> = BTreeMap::new();
+    for (name, value, line) in &tag_consts {
+        let entry = by_value.entry(*value).or_insert((Vec::new(), *line));
+        entry.0.push(name.as_str());
+        entry.1 = entry.1.max(*line);
+    }
+    for (value, (names, line)) in &by_value {
+        if names.len() > 1 {
+            out.push(Violation {
+                lint: "frames",
+                file: PROTOCOL.to_string(),
+                line: *line,
+                message: format!(
+                    "tag collision: {} all carry wire tag {value}",
+                    names.iter().map(|n| format!("`{n}`")).collect::<Vec<_>>().join(", ")
+                ),
+            });
+        }
+    }
+
+    // Doc side → source side.
+    for decl in &spec.frames {
+        match tag_consts.iter().find(|(n, _, _)| n == &decl.const_name) {
+            None => out.push(Violation {
+                lint: "frames",
+                file: "docs/PROTOCOL.md".to_string(),
+                line: decl.line,
+                message: format!(
+                    "frame `{}` (tag {}) declares `{}`, but {PROTOCOL} defines no such constant",
+                    decl.name, decl.tag, decl.const_name
+                ),
+            }),
+            Some(&(_, value, line)) => {
+                if value != u64::from(decl.tag) {
+                    out.push(Violation {
+                        lint: "frames",
+                        file: PROTOCOL.to_string(),
+                        line,
+                        message: format!(
+                            "`{}` is {value} in source but docs/PROTOCOL.md declares tag {} \
+                             for frame `{}`",
+                            decl.const_name, decl.tag, decl.name
+                        ),
+                    });
+                }
+                let decoder = decl.direction.decoder();
+                let handled = fn_body(&proto_san, decoder)
+                    .is_some_and(|body| has_token(body, &decl.const_name));
+                if !handled {
+                    out.push(Violation {
+                        lint: "frames",
+                        file: PROTOCOL.to_string(),
+                        line,
+                        message: format!(
+                            "documented frame `{}` (tag {}) is not handled by `{}` — \
+                             no match arm names `{}`",
+                            decl.name,
+                            decl.tag,
+                            decoder.trim_start_matches("fn "),
+                            decl.const_name
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    // Source side → doc side: every TAG_ constant must be catalogued.
+    for (name, value, line) in &tag_consts {
+        if !spec.frames.iter().any(|d| &d.const_name == name) {
+            out.push(Violation {
+                lint: "frames",
+                file: PROTOCOL.to_string(),
+                line: *line,
+                message: format!(
+                    "undocumented wire tag: `{name}` = {value} has no `frame` entry in \
+                     docs/PROTOCOL.md's xtask:frames block"
+                ),
+            });
+        }
+    }
+
+    // Caps: declared value must equal the evaluated source initializer.
+    let mut cap_files: BTreeSet<&str> = spec.caps.iter().map(|c| c.file.as_str()).collect();
+    cap_files.insert(PROTOCOL);
+    for cap in &spec.caps {
+        let Some(src) = sources.get(&cap.file) else {
+            out.push(Violation {
+                lint: "frames",
+                file: "docs/PROTOCOL.md".to_string(),
+                line: cap.line,
+                message: format!("cap `{}` names missing file `{}`", cap.name, cap.file),
+            });
+            continue;
+        };
+        let file_consts = collect_consts(&strip_noise(src));
+        match file_consts.get(&cap.name) {
+            None => out.push(Violation {
+                lint: "frames",
+                file: "docs/PROTOCOL.md".to_string(),
+                line: cap.line,
+                message: format!("cap `{}` is not defined in `{}`", cap.name, cap.file),
+            }),
+            Some((expr, line)) => match eval_const_expr(expr) {
+                Some(v) if v == cap.value => {}
+                Some(v) => out.push(Violation {
+                    lint: "frames",
+                    file: cap.file.clone(),
+                    line: *line,
+                    message: format!(
+                        "cap drift: `{}` is {v} in source but docs/PROTOCOL.md declares {}",
+                        cap.name, cap.value
+                    ),
+                }),
+                None => out.push(Violation {
+                    lint: "frames",
+                    file: cap.file.clone(),
+                    line: *line,
+                    message: format!(
+                        "cap `{}` initializer `{expr}` is not a checkable constant expression",
+                        cap.name
+                    ),
+                }),
+            },
+        }
+    }
+
+    // Every public MAX_* cap in the wire files must be documented.
+    for file in cap_files {
+        let Some(src) = sources.get(file) else {
+            continue;
+        };
+        for (idx, line) in strip_noise(src).lines().enumerate() {
+            let t = line.trim_start();
+            let Some(rest) = t.strip_prefix("pub const MAX_") else {
+                continue;
+            };
+            let ident: String = rest
+                .chars()
+                .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                .collect();
+            let name = format!("MAX_{}", ident.trim_end_matches(':'));
+            if !spec.caps.iter().any(|c| c.name == name) {
+                out.push(Violation {
+                    lint: "frames",
+                    file: file.to_string(),
+                    line: idx + 1,
+                    message: format!(
+                        "undocumented size cap: `{name}` has no `cap` entry in \
+                         docs/PROTOCOL.md's xtask:frames block"
+                    ),
+                });
+            }
+        }
+    }
+
+    out
+}
+
+/// Per-lint pass counts for the analyze summary (what the CI job
+/// summary prints).
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct Stats {
+    /// Files checked by the layering lint.
+    pub layering_files: usize,
+    /// Files checked by the panic lint.
+    pub panic_files: usize,
+    /// Frame declarations cross-checked.
+    pub frames: usize,
+    /// Cap declarations cross-checked.
+    pub caps: usize,
+    /// Files checked by the determinism lint.
+    pub deterministic_files: usize,
+    /// Files checked by the cast lint.
+    pub cast_files: usize,
+    /// Files checked by the safety-comment pass.
+    pub safety_files: usize,
+}
+
+/// The full analyze result: hard violations (exit non-zero), warn-only
+/// findings, and the per-lint pass counts.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Hard findings — any of these fails the run.
+    pub violations: Vec<Violation>,
+    /// Warn-only findings (missing `SAFETY:` comments).
+    pub warnings: Vec<Violation>,
+    /// Per-lint pass counts.
+    pub stats: Stats,
+}
+
+impl Report {
+    /// Count of hard violations attributed to `lint`.
+    pub fn count(&self, lint: &str) -> usize {
+        self.violations.iter().filter(|v| v.lint == lint).count()
+    }
+
+    /// Human-readable per-lint summary lines (also the CI job summary).
+    pub fn summary_lines(&self) -> Vec<String> {
+        let s = &self.stats;
+        let files = |n: usize, lint: &str| {
+            format!("{n} files checked, {} violation(s)", self.count(lint))
+        };
+        vec![
+            format!("  layering:    {}", files(s.layering_files, "layering")),
+            format!("  panic:       {}", files(s.panic_files, "panic")),
+            format!(
+                "  frames:      {} frames + {} caps checked, {} violation(s)",
+                s.frames,
+                s.caps,
+                self.count("frames")
+            ),
+            format!("  determinism: {}", files(s.deterministic_files, "determinism")),
+            format!("  casts:       {}", files(s.cast_files, "cast")),
+            format!(
+                "  safety:      {} files checked, {} missing SAFETY comment(s) [warn-only]",
+                s.safety_files,
+                self.warnings.len()
+            ),
+        ]
+    }
+}
+
+/// Does `rel` fall under any entry of `set`?  Entries ending in `/` are
+/// directory prefixes; anything else matches exactly.
+fn path_matches(set: &BTreeSet<String>, rel: &str) -> bool {
+    set.iter().any(|e| {
+        if let Some(dir) = e.strip_suffix('/') {
+            rel.starts_with(dir) && rel.as_bytes().get(dir.len()) == Some(&b'/')
+        } else {
+            e == rel
+        }
+    })
+}
+
+/// Run every lint over `<root>/rust/src` against `<root>/ARCHITECTURE.md`
+/// and `<root>/docs/PROTOCOL.md`, returning the full report.
+pub fn analyze_report(root: &Path) -> Result<Report, String> {
     let arch_path = root.join("ARCHITECTURE.md");
     let markdown = fs::read_to_string(&arch_path)
         .map_err(|e| format!("{}: {e}", arch_path.display()))?;
     let rules = parse_rules(&markdown)?;
+    let frames_path = root.join("docs").join("PROTOCOL.md");
+    let frames_md = fs::read_to_string(&frames_path)
+        .map_err(|e| format!("{}: {e}", frames_path.display()))?;
+    let spec = parse_frames(&frames_md)?;
+
     let src_root = root.join("rust").join("src");
     let mut files = Vec::new();
     walk(&src_root, &mut files).map_err(|e| format!("{}: {e}", src_root.display()))?;
     files.sort();
-    let mut out = Vec::new();
+
+    let mut report = Report::default();
+    let mut sources: BTreeMap<String, String> = BTreeMap::new();
     for path in &files {
         let rel = path
             .strip_prefix(&src_root)
@@ -477,12 +1194,35 @@ pub fn analyze(root: &Path) -> Result<Vec<Violation>, String> {
             continue;
         }
         let src = fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
-        out.extend(check_layering(&rules, &rel, &src));
+        report.stats.layering_files += 1;
+        report.violations.extend(check_layering(&rules, &rel, &src));
         if rules.deny_panic.contains(&rel) {
-            out.extend(check_panics(&rel, &src));
+            report.stats.panic_files += 1;
+            report.violations.extend(check_panics(&rel, &src));
         }
+        if path_matches(&rules.deterministic, &rel) {
+            report.stats.deterministic_files += 1;
+            report.violations.extend(check_determinism(&rel, &src));
+        }
+        if path_matches(&rules.deny_cast, &rel) {
+            report.stats.cast_files += 1;
+            report.violations.extend(check_casts(&rel, &src));
+        }
+        if path_matches(&rules.safety_comments, &rel) {
+            report.stats.safety_files += 1;
+            report.warnings.extend(check_safety_comments(&rel, &src));
+        }
+        sources.insert(rel, src);
     }
-    Ok(out)
+    report.stats.frames = spec.frames.len();
+    report.stats.caps = spec.caps.len();
+    report.violations.extend(check_frames(&spec, &sources));
+    Ok(report)
+}
+
+/// Back-compat entry point: the hard violations only.
+pub fn analyze(root: &Path) -> Result<Vec<Violation>, String> {
+    analyze_report(root).map(|r| r.violations)
 }
 
 fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
@@ -510,6 +1250,23 @@ layer rng: -
 layer util: rng
 exempt lib.rs
 deny-panic comm/rle.rs
+deterministic comm/
+deny-cast comm/rle.rs
+safety-comments runtime/
+```
+prose after
+";
+
+    const FRAMES_MD: &str = "\
+prose before
+```text xtask:frames
+# frame <tag> <CONST> <name> <direction>
+frame 1 TAG_ROUND Round server->client
+frame 3 TAG_MASK Mask client->server
+frame 8 TAG_SHARD_VOTES ShardVotes shard->root
+
+cap MAX_MASK_LEN 1<<24 federated/protocol.rs
+cap MAX_FRAME_LEN 64*1024*1024 federated/transport.rs
 ```
 prose after
 ";
@@ -522,6 +1279,9 @@ prose after
         assert!(rules.layers["comm"].contains("util"));
         assert!(rules.exempt.contains("lib.rs"));
         assert!(rules.deny_panic.contains("comm/rle.rs"));
+        assert!(rules.deterministic.contains("comm/"));
+        assert!(rules.deny_cast.contains("comm/rle.rs"));
+        assert!(rules.safety_comments.contains("runtime/"));
     }
 
     #[test]
@@ -529,6 +1289,94 @@ prose after
         let bad = RULES_MD.replace("layer comm: rng util", "layer comm: rng nonsuch");
         assert!(parse_rules(&bad).unwrap_err().contains("nonsuch"));
         assert!(parse_rules("no fences here").is_err());
+    }
+
+    #[test]
+    fn frames_block_parses() {
+        let spec = parse_frames(FRAMES_MD).expect("parse");
+        assert_eq!(spec.frames.len(), 3);
+        assert_eq!(spec.frames[0].tag, 1);
+        assert_eq!(spec.frames[0].const_name, "TAG_ROUND");
+        assert_eq!(spec.frames[0].direction, Direction::ServerToClient);
+        assert_eq!(spec.frames[2].direction, Direction::ShardToRoot);
+        assert_eq!(spec.caps.len(), 2);
+        assert_eq!(spec.caps[0].value, 1 << 24);
+        assert_eq!(spec.caps[1].value, 64 * 1024 * 1024);
+    }
+
+    #[test]
+    fn frames_block_rejects_duplicates_and_nonsense() {
+        let dup_tag = FRAMES_MD.replace("frame 3 TAG_MASK", "frame 1 TAG_MASK");
+        assert!(parse_frames(&dup_tag).unwrap_err().contains("duplicate frame tag"));
+        let bad_dir = FRAMES_MD.replace("shard->root", "root->shard");
+        assert!(parse_frames(&bad_dir).unwrap_err().contains("bad direction"));
+        let bad_cap = FRAMES_MD.replace("1<<24", "about-16M");
+        assert!(parse_frames(&bad_cap).unwrap_err().contains("cannot evaluate"));
+        assert!(parse_frames("no frames fence").is_err());
+    }
+
+    #[test]
+    fn const_expr_evaluator_handles_the_grammar() {
+        assert_eq!(eval_const_expr("1 << 24"), Some(1 << 24));
+        assert_eq!(eval_const_expr("64 << 20"), Some(64 << 20));
+        assert_eq!(eval_const_expr("64*1024*1024"), Some(64 * 1024 * 1024));
+        assert_eq!(eval_const_expr("1_000_000"), Some(1_000_000));
+        assert_eq!(eval_const_expr("7"), Some(7));
+        assert_eq!(eval_const_expr("usize::MAX"), None);
+        assert_eq!(eval_const_expr(""), None);
+    }
+
+    fn frames_sources(protocol: &str) -> BTreeMap<String, String> {
+        let mut m = BTreeMap::new();
+        m.insert("federated/protocol.rs".to_string(), protocol.to_string());
+        m.insert(
+            "federated/transport.rs".to_string(),
+            "pub const MAX_FRAME_LEN: usize = 64 * 1024 * 1024;\n".to_string(),
+        );
+        m
+    }
+
+    const PROTO_OK: &str = "\
+const TAG_ROUND: u8 = 1;
+const TAG_MASK: u8 = 3;
+const TAG_SHARD_VOTES: u8 = 8;
+pub const MAX_MASK_LEN: usize = 1 << 24;
+fn decode_server(buf: &[u8]) { match tag { TAG_ROUND => {} _ => {} } }
+fn decode_client(buf: &[u8]) { match tag { TAG_MASK => {} _ => {} } }
+fn decode_shard(buf: &[u8]) { match tag { TAG_SHARD_VOTES => {} _ => {} } }
+";
+
+    #[test]
+    fn frames_check_passes_on_conforming_source() {
+        let spec = parse_frames(FRAMES_MD).expect("parse");
+        let v = check_frames(&spec, &frames_sources(PROTO_OK));
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn frames_check_catches_every_drift_class() {
+        let spec = parse_frames(FRAMES_MD).expect("parse");
+        // value drift
+        let v = check_frames(&spec, &frames_sources(&PROTO_OK.replace("TAG_MASK: u8 = 3", "TAG_MASK: u8 = 4")));
+        assert!(v.iter().any(|v| v.message.contains("is 4 in source")), "{v:?}");
+        // documented but missing constant
+        let v = check_frames(&spec, &frames_sources(&PROTO_OK.replace("const TAG_MASK: u8 = 3;\n", "")));
+        assert!(v.iter().any(|v| v.message.contains("no such constant")), "{v:?}");
+        // undocumented tag
+        let v = check_frames(&spec, &frames_sources(&format!("{PROTO_OK}const TAG_ROGUE: u8 = 12;\n")));
+        assert!(v.iter().any(|v| v.message.contains("undocumented wire tag")), "{v:?}");
+        // tag collision
+        let v = check_frames(&spec, &frames_sources(&format!("{PROTO_OK}const TAG_DUP: u8 = 1;\n")));
+        assert!(v.iter().any(|v| v.message.contains("tag collision")), "{v:?}");
+        // documented but unhandled (wrong decoder)
+        let v = check_frames(&spec, &frames_sources(&PROTO_OK.replace("match tag { TAG_MASK => {} _ => {} } }\nfn decode_shard", "match tag { _ => {} } }\nfn decode_shard")));
+        assert!(v.iter().any(|v| v.message.contains("not handled by `decode_client`")), "{v:?}");
+        // cap drift
+        let v = check_frames(&spec, &frames_sources(&PROTO_OK.replace("1 << 24", "1 << 20")));
+        assert!(v.iter().any(|v| v.message.contains("cap drift")), "{v:?}");
+        // undocumented pub cap
+        let v = check_frames(&spec, &frames_sources(&format!("{PROTO_OK}pub const MAX_OTHER_LEN: usize = 9;\n")));
+        assert!(v.iter().any(|v| v.message.contains("undocumented size cap: `MAX_OTHER_LEN`")), "{v:?}");
     }
 
     #[test]
@@ -593,5 +1441,90 @@ mod tests {
         assert_eq!(v.len(), 1, "{v:?}");
         assert_eq!(v[0].line, 2);
         assert!(v[0].message.contains(".unwrap()"));
+    }
+
+    #[test]
+    fn determinism_lint_flags_unstable_apis_and_respects_allowlist() {
+        let src = "\
+use std::collections::HashMap;
+fn live() {
+    let t = Instant::now();
+    // lint: allow(nondeterminism) — wall time excluded from identity.
+    let w = Instant::now();
+    let fine = AHashMapLike::new();
+}
+#[cfg(test)]
+mod tests {
+    use std::collections::HashSet;
+}
+";
+        let v = check_determinism("comm/ledger.rs", src);
+        assert_eq!(v.len(), 2, "{v:?}");
+        assert!(v[0].message.contains("HashMap"));
+        assert_eq!(v[0].line, 1);
+        assert!(v[1].message.contains("Instant::now"));
+        assert_eq!(v[1].line, 3);
+    }
+
+    #[test]
+    fn cast_lint_flags_narrowing_only_and_respects_allowlist() {
+        let src = "\
+fn live(n: usize, v: u64) {
+    let a = n as u32;
+    let b = v as usize;
+    let c = v as u64;
+    // lint: allow(cast) — low 7 bits explicitly masked.
+    let d = (v & 0x7f) as u8;
+    let e = foo(n) as _;
+    let prose = \"n as u32 in a string\"; // n as u8 in a comment
+}
+#[cfg(test)]
+mod tests {
+    fn t(n: usize) -> u32 { n as u32 }
+}
+";
+        let v = check_casts("federated/protocol.rs", src);
+        assert_eq!(v.len(), 2, "{v:?}");
+        assert!(v[0].message.contains("as u32"));
+        assert_eq!(v[0].line, 2);
+        assert!(v[1].message.contains("as _"));
+        assert_eq!(v[1].line, 7);
+    }
+
+    #[test]
+    fn cast_lint_skips_use_renames() {
+        let src = "use std::io::Read as _;\npub use crate::comm::BitPack as Packer;\n";
+        assert!(check_casts("federated/protocol.rs", src).is_empty());
+    }
+
+    #[test]
+    fn safety_pass_wants_comments_on_unsafe() {
+        let src = "\
+fn live() {
+    let a = unsafe { *p };
+    // SAFETY: p is valid for reads; see the caller contract.
+    let b = unsafe { *p };
+}
+/// Docs.
+///
+/// # Safety
+/// Caller promises `p` is valid.
+#[allow(clippy::missing_safety_doc)]
+pub unsafe fn documented(p: *const u8) {}
+";
+        let v = check_safety_comments("runtime/pool.rs", src);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].line, 2);
+    }
+
+    #[test]
+    fn path_matching_handles_dirs_and_files() {
+        let mut set = BTreeSet::new();
+        set.insert("comm/".to_string());
+        set.insert("federated/engine.rs".to_string());
+        assert!(path_matches(&set, "comm/rle.rs"));
+        assert!(path_matches(&set, "federated/engine.rs"));
+        assert!(!path_matches(&set, "federated/transport.rs"));
+        assert!(!path_matches(&set, "communal/x.rs"));
     }
 }

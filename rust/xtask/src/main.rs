@@ -1,6 +1,10 @@
-//! `cargo xtask analyze [--root <repo-root>]` — run the architecture
-//! lints and exit non-zero on any violation.  Wired into the tier-1 CI
-//! job; see docs/ANALYSIS.md.
+//! `cargo xtask analyze [--root <repo-root>]` — run the conformance
+//! lints and exit non-zero on any hard violation.  Wired into the
+//! tier-1 CI job, where stdout (the per-lint summary) is tee'd into the
+//! GitHub job summary; see docs/ANALYSIS.md.
+//!
+//! Exit codes: 0 clean (warn-only findings allowed), 1 violations,
+//! 2 usage / spec-parse error.
 
 use std::path::PathBuf;
 use std::process::ExitCode;
@@ -31,17 +35,31 @@ fn main() -> ExitCode {
             }
         }
     }
-    match xtask::analyze(&root) {
-        Ok(violations) if violations.is_empty() => {
-            println!("xtask analyze: ok — {} conforms to ARCHITECTURE.md", root.display());
-            ExitCode::SUCCESS
-        }
-        Ok(violations) => {
-            for v in &violations {
+    match xtask::analyze_report(&root) {
+        Ok(report) => {
+            for v in &report.violations {
                 eprintln!("{v}");
             }
-            eprintln!("xtask analyze: {} violation(s)", violations.len());
-            ExitCode::FAILURE
+            for w in &report.warnings {
+                eprintln!("warning: {w}");
+            }
+            let ok = report.violations.is_empty();
+            if ok {
+                println!(
+                    "xtask analyze: ok — {} conforms to ARCHITECTURE.md + docs/PROTOCOL.md",
+                    root.display()
+                );
+            } else {
+                println!("xtask analyze: {} violation(s)", report.violations.len());
+            }
+            for line in report.summary_lines() {
+                println!("{line}");
+            }
+            if ok {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::FAILURE
+            }
         }
         Err(e) => {
             eprintln!("xtask analyze: {e}");

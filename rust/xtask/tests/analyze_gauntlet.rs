@@ -1,11 +1,14 @@
 //! The lint gauntlet: (1) the real tree must be clean, so this test —
 //! which runs in the ordinary tier-1 `cargo test` — enforces the
-//! ARCHITECTURE.md dependency table on every PR even before the
-//! dedicated CI step runs the binary; (2) the seeded-violation fixture
-//! proves the lints actually fire (a linter that never fails is
-//! indistinguishable from one that never runs).
+//! ARCHITECTURE.md rules table and the docs/PROTOCOL.md frame catalogue
+//! on every PR even before the dedicated CI step runs the binary;
+//! (2) the seeded-violation fixture proves all five lints actually fire
+//! (a linter that never fails is indistinguishable from one that never
+//! runs).
 
 use std::path::PathBuf;
+
+use xtask::{Report, Violation};
 
 fn repo_root() -> PathBuf {
     let mut p = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
@@ -21,53 +24,155 @@ fn fixture_root() -> PathBuf {
         .join("seeded_violation")
 }
 
+fn fixture_report() -> Report {
+    xtask::analyze_report(&fixture_root()).expect("analyze should run")
+}
+
+fn render(violations: &[Violation]) -> String {
+    violations.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
+}
+
 #[test]
 fn real_tree_is_clean() {
-    let violations = xtask::analyze(&repo_root()).expect("analyze should run");
+    let report = xtask::analyze_report(&repo_root()).expect("analyze should run");
     assert!(
-        violations.is_empty(),
-        "architecture lint violations:\n{}",
-        violations
-            .iter()
-            .map(|v| v.to_string())
-            .collect::<Vec<_>>()
-            .join("\n")
+        report.violations.is_empty(),
+        "conformance lint violations:\n{}",
+        render(&report.violations)
     );
+    assert!(
+        report.warnings.is_empty(),
+        "missing SAFETY comments:\n{}",
+        render(&report.warnings)
+    );
+    // Stats sanity: every lint actually covered files / declarations —
+    // a lint with an empty scope passes vacuously, which is drift too.
+    let s = &report.stats;
+    assert!(s.layering_files > 10, "{s:?}");
+    assert!(s.panic_files >= 4, "{s:?}");
+    assert!(s.frames >= 10, "{s:?}");
+    assert!(s.caps >= 3, "{s:?}");
+    assert!(s.deterministic_files > 10, "{s:?}");
+    assert!(s.cast_files >= 4, "{s:?}");
+    assert!(s.safety_files >= 2, "{s:?}");
 }
 
 #[test]
 fn seeded_layering_violation_is_caught() {
-    let violations = xtask::analyze(&fixture_root()).expect("analyze should run");
-    let layering: Vec<_> = violations
+    let report = fixture_report();
+    let layering: Vec<_> = report
+        .violations
         .iter()
-        .filter(|v| v.file == "rng/mod.rs")
+        .filter(|v| v.file == "rng/mod.rs" && v.lint == "layering")
         .collect();
-    assert_eq!(layering.len(), 1, "{violations:?}");
+    assert_eq!(layering.len(), 1, "{:?}", report.violations);
     assert!(layering[0].message.contains("must not depend on `federated`"));
 }
 
 #[test]
 fn seeded_panic_violations_are_caught_and_allowlist_respected() {
-    let violations = xtask::analyze(&fixture_root()).expect("analyze should run");
-    let panics: Vec<_> = violations
-        .iter()
-        .filter(|v| v.file == "federated/protocol.rs")
-        .collect();
+    let report = fixture_report();
+    let panics: Vec<_> = report.violations.iter().filter(|v| v.lint == "panic").collect();
     // Exactly the two live sites: the bare unwrap and the bare panic!.
     // The annotated expect, the cfg(test) unwrap, and the tokens inside
     // a string and a comment must NOT be flagged.
     assert_eq!(panics.len(), 2, "{panics:?}");
+    assert!(panics.iter().all(|v| v.file == "federated/protocol.rs"));
     assert!(panics.iter().any(|v| v.message.contains(".unwrap()")));
     assert!(panics.iter().any(|v| v.message.contains("panic!(")));
 }
 
 #[test]
+fn seeded_frame_drift_is_caught() {
+    let report = fixture_report();
+    let frames: Vec<_> = report.violations.iter().filter(|v| v.lint == "frames").collect();
+    let messages = render(&frames.iter().map(|v| (*v).clone()).collect::<Vec<_>>());
+    // Value drift: TAG_MASK is 3 in source, 4 in the doc.
+    assert!(messages.contains("`TAG_MASK` is 3 in source"), "{messages}");
+    // Documented but undefined constant.
+    assert!(messages.contains("`TAG_GHOST`"), "{messages}");
+    assert!(messages.contains("no such constant"), "{messages}");
+    // Defined but unhandled by its decoder.
+    assert!(messages.contains("not handled by `decode_server`"), "{messages}");
+    // Undocumented source-side tag.
+    assert!(messages.contains("undocumented wire tag: `TAG_ROGUE`"), "{messages}");
+    // Tag collision.
+    assert!(messages.contains("tag collision"), "{messages}");
+    // Cap drift: 1 << 20 in source, 1 << 24 declared.
+    assert!(messages.contains("cap drift: `MAX_MASK_LEN`"), "{messages}");
+}
+
+#[test]
+fn seeded_nondeterminism_is_caught_and_allowlist_respected() {
+    let report = fixture_report();
+    let nondet: Vec<_> =
+        report.violations.iter().filter(|v| v.lint == "determinism").collect();
+    // Exactly the two live sites: the HashMap import/use and the bare
+    // Instant::now.  The annotated SystemTime, the cfg(test) HashSet,
+    // and HashMap inside a string must NOT be flagged.
+    assert!(nondet.iter().all(|v| v.file == "federated/sim.rs"), "{nondet:?}");
+    assert!(nondet.iter().any(|v| v.message.contains("`HashMap`")), "{nondet:?}");
+    assert!(
+        nondet.iter().any(|v| v.message.contains("`Instant::now`")),
+        "{nondet:?}"
+    );
+    assert!(
+        !nondet.iter().any(|v| v.message.contains("SystemTime")),
+        "allowlisted SystemTime must pass: {nondet:?}"
+    );
+    assert!(
+        !nondet.iter().any(|v| v.message.contains("HashSet")),
+        "cfg(test) HashSet must pass: {nondet:?}"
+    );
+}
+
+#[test]
+fn seeded_narrowing_casts_are_caught_and_allowlist_respected() {
+    let report = fixture_report();
+    let casts: Vec<_> = report.violations.iter().filter(|v| v.lint == "cast").collect();
+    // Exactly the two live sites: `len as u32` and `id as u8`.  The
+    // annotated masked cast, the widening `as u64`, the cfg(test) cast,
+    // and casts in prose must NOT be flagged.
+    assert_eq!(casts.len(), 2, "{casts:?}");
+    assert!(casts.iter().all(|v| v.file == "federated/protocol.rs"));
+    assert!(casts.iter().any(|v| v.message.contains("as u32")), "{casts:?}");
+    assert!(casts.iter().any(|v| v.message.contains("as u8")), "{casts:?}");
+}
+
+#[test]
+fn seeded_missing_safety_comment_is_a_warning_not_a_violation() {
+    let report = fixture_report();
+    assert!(
+        !report.violations.iter().any(|v| v.lint == "safety"),
+        "safety findings must be warn-only: {:?}",
+        report.violations
+    );
+    let warnings: Vec<_> =
+        report.warnings.iter().filter(|v| v.file == "runtime/pool.rs").collect();
+    // Exactly the one undocumented site; the SAFETY-commented block
+    // must pass.
+    assert_eq!(warnings.len(), 1, "{:?}", report.warnings);
+    assert!(warnings[0].message.contains("SAFETY"));
+}
+
+#[test]
 fn unknown_module_is_a_violation() {
-    let violations = xtask::analyze(&fixture_root()).expect("analyze should run");
-    let unknown: Vec<_> = violations
+    let report = fixture_report();
+    let unknown: Vec<_> = report
+        .violations
         .iter()
         .filter(|v| v.file == "mystery/mod.rs")
         .collect();
-    assert_eq!(unknown.len(), 1, "{violations:?}");
+    assert_eq!(unknown.len(), 1, "{:?}", report.violations);
     assert!(unknown[0].message.contains("no `layer` entry"));
+}
+
+#[test]
+fn fixture_summary_counts_every_lint() {
+    let report = fixture_report();
+    let lines = report.summary_lines().join("\n");
+    for lint in ["layering", "panic", "frames", "determinism", "casts", "safety"] {
+        assert!(lines.contains(lint), "summary missing `{lint}`:\n{lines}");
+    }
+    assert!(report.count("panic") == 2 && report.count("cast") == 2, "{lines}");
 }

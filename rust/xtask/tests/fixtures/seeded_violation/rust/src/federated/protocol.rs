@@ -1,9 +1,39 @@
-//! Fixture: wire-facing file under `deny-panic` with two live
-//! violations and four sites the lint must tolerate.
+//! Fixture: wire-facing file under `deny-panic` and `deny-cast`, with
+//! seeded panic, cast, and frame-catalogue violations next to sites
+//! every lint must tolerate.
 
 use crate::rng::seed;
 
 pub struct Frame;
+
+/// FRAME DRIFT: `TAG_MASK` is 3 here but docs/PROTOCOL.md declares 4;
+/// `TAG_UNHANDLED` is defined but no decoder matches it; `TAG_ROGUE`
+/// is undocumented; `TAG_DUP` collides with `TAG_ROUND` on tag 1; the
+/// documented `TAG_GHOST` does not exist at all.
+pub const TAG_ROUND: u8 = 1;
+pub const TAG_MASK: u8 = 3;
+pub const TAG_UNHANDLED: u8 = 9;
+pub const TAG_ROGUE: u8 = 12;
+pub const TAG_DUP: u8 = 1;
+
+/// CAP DRIFT: docs/PROTOCOL.md declares `1 << 24`.
+pub const MAX_MASK_LEN: usize = 1 << 20;
+
+/// Decodes server-sent frames (client side).
+pub fn decode_server(tag: u8) -> u32 {
+    match tag {
+        TAG_ROUND => 1,
+        _ => 0,
+    }
+}
+
+/// Decodes client-sent frames (server side).
+pub fn decode_client(tag: u8) -> u32 {
+    match tag {
+        TAG_MASK => 1,
+        _ => 0,
+    }
+}
 
 pub fn decode(bytes: &[u8]) -> u32 {
     // VIOLATION 1: bare unwrap on peer-controlled data.
@@ -21,12 +51,29 @@ pub fn decode(bytes: &[u8]) -> u32 {
     u32::from(*head) + s
 }
 
+pub fn encode(len: usize, id: u64) -> (u32, u8) {
+    // VIOLATION 3: bare narrowing cast of a length into a wire field.
+    let wire_len = len as u32;
+    // VIOLATION 4: bare narrowing cast of an id into a byte.
+    let tag = id as u8;
+    // Tolerated: annotated bounded cast.
+    // lint: allow(cast) — low 7 bits explicitly masked; cannot truncate.
+    let low = (id & 0x7f) as u8;
+    // Tolerated: widening casts are not narrowing.
+    let _wide = wire_len as u64;
+    // `len as u32` in prose only; a comment saying id as u8 too.
+    let _prose = "len as u32 in a string";
+    (wire_len, tag ^ low)
+}
+
 #[cfg(test)]
 mod tests {
-    // Tolerated: tests may unwrap freely.
+    // Tolerated: tests may unwrap and cast freely.
     #[test]
     fn roundtrip() {
         let v: Option<u32> = Some(1);
         assert_eq!(v.unwrap(), 1);
+        let n: usize = 7;
+        assert_eq!(n as u32, 7);
     }
 }

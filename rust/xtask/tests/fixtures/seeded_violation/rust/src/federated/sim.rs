@@ -1,0 +1,33 @@
+//! Fixture: aggregation-path file under `deterministic`, with two live
+//! nondeterminism violations and two sites the lint must tolerate.
+
+// VIOLATION 1: HashMap iteration order is unstable across runs.
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub fn aggregate(votes: &[u32]) -> u32 {
+    let mut by_value: HashMap<u32, u32> = HashMap::new();
+    for v in votes {
+        *by_value.entry(*v).or_insert(0) += 1;
+    }
+    // VIOLATION 2: wall clock in an aggregation path.
+    let _t = Instant::now();
+    // Tolerated: annotated telemetry site, excluded from identity.
+    // lint: allow(nondeterminism) — wall time is telemetry only.
+    let _wall = std::time::SystemTime::now();
+    // Tolerated: `AHashMapLike` is not the HashMap token.
+    let _fine = "AHashMapLike in prose; HashMap in a string too";
+    by_value.len() as u32
+}
+
+#[cfg(test)]
+mod tests {
+    // Tolerated: tests may use unordered containers.
+    use std::collections::HashSet;
+
+    #[test]
+    fn dedup() {
+        let s: HashSet<u32> = [1, 1, 2].into_iter().collect();
+        assert_eq!(s.len(), 2);
+    }
+}

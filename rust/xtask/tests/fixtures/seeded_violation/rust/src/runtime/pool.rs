@@ -1,0 +1,13 @@
+//! Fixture: runtime file under `safety-comments`, with one undocumented
+//! `unsafe` site (warn-only finding) and one documented site.
+
+pub fn read_first(p: *const u8) -> u8 {
+    // WARNING: unsafe without a SAFETY comment.
+    unsafe { *p }
+}
+
+pub fn read_second(p: *const u8) -> u8 {
+    // SAFETY: fixture contract — the caller passes a valid, aligned,
+    // readable pointer.
+    unsafe { *p }
+}
