@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# Run a list of `repro testnet` scenarios (names without .toml, resolved
+# under configs/testnet/) and tee one "scenario <name>: PASS|FAIL" line
+# per run into the GitHub step summary.  Every scenario runs even after
+# one fails; the script exits nonzero if any failed.
+set -uo pipefail
+
+SUMMARY="${GITHUB_STEP_SUMMARY:-/dev/null}"
+REPRO=./target/release/repro
+status=0
+
+for name in "$@"; do
+  echo "::group::scenario $name"
+  if "$REPRO" testnet --scenario "configs/testnet/$name.toml" \
+      --out results/testnet; then
+    echo "scenario $name: PASS" | tee -a "$SUMMARY"
+  else
+    echo "scenario $name: FAIL" | tee -a "$SUMMARY"
+    # The per-process logs are the only diagnostics once the fleet is
+    # reaped — surface them in the failing leg's output.
+    for log in "results/testnet/$name"/*.log; do
+      [ -f "$log" ] || continue
+      echo "--- $log (tail) ---"
+      tail -n 40 "$log"
+    done
+    status=1
+  fi
+  echo "::endgroup::"
+done
+
+exit "$status"

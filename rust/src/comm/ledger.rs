@@ -275,6 +275,55 @@ impl CommLedger {
             server_savings: naive_bits as f64 / avg_down.max(1.0),
         }
     }
+
+    /// The `# rounds` CSV section alone — the piece of [`Self::to_csv`]
+    /// that stays byte-identical between a wire shard tree and its
+    /// in-process twin at **any** tree depth (the shard table aggregates
+    /// differently at depth ≥ 3, where the root sees one row per direct
+    /// child's whole subtree).
+    pub fn rounds_csv(&self) -> String {
+        let mut out = String::from("# rounds\nround,downlink_bits,uplink_bits,clients,participants,dropped\n");
+        for (i, r) in self.rounds.iter().enumerate() {
+            out.push_str(&format!(
+                "{i},{},{},{},{},{}\n",
+                r.downlink_bits, r.uplink_bits, r.clients, r.participants, r.dropped
+            ));
+        }
+        out
+    }
+
+    /// Serialize the whole ledger as sectioned CSV (`# rounds`,
+    /// `# shards`, `# edges`; the latter two omitted when empty) — the
+    /// `ledger.csv` artifact every federated CLI run writes, and the
+    /// byte-comparison format `repro testnet` diffs against the
+    /// in-process twin.
+    ///
+    /// `wall_ns` is deliberately excluded: it is the one measured (not
+    /// derived) column, so including it would break byte-identicality
+    /// between a wire run and its simulator twin.
+    pub fn to_csv(&self) -> String {
+        let mut out = self.rounds_csv();
+        if self.shard_rounds.iter().any(|v| !v.is_empty()) {
+            out.push_str("# shards\nround,shard,uplink_bits,downlink_bits,merge_bits,received,dropped\n");
+            for (i, costs) in self.shard_rounds.iter().enumerate() {
+                for c in costs {
+                    out.push_str(&format!(
+                        "{i},{},{},{},{},{},{}\n",
+                        c.shard, c.uplink_bits, c.downlink_bits, c.merge_bits, c.received, c.dropped
+                    ));
+                }
+            }
+        }
+        if self.edge_rounds.iter().any(|v| !v.is_empty()) {
+            out.push_str("# edges\nround,from,to,bits\n");
+            for (i, costs) in self.edge_rounds.iter().enumerate() {
+                for c in costs {
+                    out.push_str(&format!("{i},{},{},{}\n", c.from, c.to, c.bits));
+                }
+            }
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -334,6 +383,49 @@ mod tests {
         assert_eq!(rep.server_savings, 1.0);
         assert_eq!(rep.avg_uplink_bits_per_client, 0.0);
         assert_eq!(rep.avg_downlink_bits_per_client, 0.0);
+    }
+
+    #[test]
+    fn csv_sections_cover_rounds_shards_and_edges_without_wall() {
+        let mut ledger = CommLedger::default();
+        ledger.record(RoundCost {
+            downlink_bits: 100,
+            uplink_bits: 50,
+            clients: 2,
+            participants: 3,
+            dropped: 1,
+            // excluded from the CSV: measured, so never byte-identical
+            // between a wire run and its simulator twin
+            wall_ns: 123_456,
+        });
+        ledger.record_shard_costs(vec![ShardCost {
+            shard: 1,
+            uplink_bits: 50,
+            downlink_bits: 100,
+            merge_bits: 9,
+            received: 2,
+            dropped: 1,
+        }]);
+        ledger.record_edge_costs(vec![EdgeCost { from: 0, to: 1, bits: 7 }]);
+        let csv = ledger.to_csv();
+        assert!(csv.starts_with("# rounds\n"));
+        assert!(csv.contains("0,100,50,2,3,1\n"), "{csv}");
+        assert!(csv.contains("# shards\n"));
+        assert!(csv.contains("0,1,50,100,9,2,1\n"), "{csv}");
+        assert!(csv.contains("# edges\n"));
+        assert!(csv.contains("0,0,1,7\n"), "{csv}");
+        assert!(!csv.contains("123456"), "wall_ns leaked into the CSV:\n{csv}");
+        // the rounds section alone is a prefix of the full document
+        assert!(csv.starts_with(&ledger.rounds_csv()));
+
+        // single-leader, non-gossip ledgers emit only the rounds section
+        let mut plain = CommLedger::default();
+        plain.record(RoundCost::default());
+        plain.record_shard_costs(Vec::new());
+        plain.record_edge_costs(Vec::new());
+        let csv = plain.to_csv();
+        assert!(!csv.contains("# shards"));
+        assert!(!csv.contains("# edges"));
     }
 
     #[test]

@@ -152,6 +152,12 @@ pub enum TransportKind {
     /// partial vote sums merge before aggregation; workers connect to
     /// their own shard's address.
     Sharded,
+    /// Real sockets, multi-process shard tree: every shard leader is a
+    /// separate `repro serve-shard` process speaking `ShardVotes` frames
+    /// up a (possibly multi-level, `federated.tree-parents`) merge tree
+    /// whose root is this process; workers connect to their own shard's
+    /// worker port (see [`tree_addresses`]).
+    ShardedWire,
     /// Real sockets, decentralized: this process is the gossip
     /// coordinator, each `repro serve-peer` node runs a tiny leader for
     /// its `federated.topology` neighbours and masks travel peer-to-peer
@@ -166,10 +172,11 @@ impl TransportKind {
             "pool" => Ok(TransportKind::Pool),
             "tcp" => Ok(TransportKind::Tcp),
             "sharded" => Ok(TransportKind::Sharded),
+            "sharded-wire" => Ok(TransportKind::ShardedWire),
             "gossip-tcp" => Ok(TransportKind::GossipTcp),
-            other => {
-                Err(format!("unknown transport '{other}' (local|pool|tcp|sharded|gossip-tcp)"))
-            }
+            other => Err(format!(
+                "unknown transport '{other}' (local|pool|tcp|sharded|sharded-wire|gossip-tcp)"
+            )),
         }
     }
 
@@ -179,6 +186,7 @@ impl TransportKind {
             TransportKind::Pool => "pool",
             TransportKind::Tcp => "tcp",
             TransportKind::Sharded => "sharded",
+            TransportKind::ShardedWire => "sharded-wire",
             TransportKind::GossipTcp => "gossip-tcp",
         }
     }
@@ -321,6 +329,116 @@ pub fn shard_addresses(
     Ok((0..shards).map(|s| format!("{host}:{}", u32::from(port) + s as u32)).collect())
 }
 
+/// Validate a shard-tree parent table (the `federated.tree-parents`
+/// key): entry `s` names shard `s`'s parent shard, or `None` for a
+/// direct child of the root process.  Shared by config parsing and
+/// `federated::tree::ShardTree` so the two can never disagree about
+/// what a well-formed tree is.
+///
+/// Rules (all checked here, before any socket opens):
+/// * `parents[s]` must be `None` or a shard id `< s` — this makes the
+///   table acyclic by construction (shard 0 is always a root child).
+/// * Every shard's subtree must be a **contiguous** shard-id interval
+///   `[s, s + size)`.  `ShardPlan` gives shards contiguous ascending
+///   client ranges, so contiguous subtrees are what keep a subtree's
+///   clients contiguous too — the invariant the root relies on to keep
+///   contributions globally ascending without per-client wire traffic.
+pub fn validate_tree_parents(parents: &[Option<usize>]) -> Result<(), String> {
+    let shards = parents.len();
+    for (s, p) in parents.iter().enumerate() {
+        if let Some(p) = *p {
+            if p >= s {
+                return Err(format!(
+                    "tree-parents: shard {s} names parent {p}, but a parent \
+                     must be a lower shard id (or 'root')"
+                ));
+            }
+        }
+    }
+    // Subtree sizes: children always carry higher ids, so one reverse
+    // sweep accumulates every subtree before its parent reads it.
+    let mut size = vec![1usize; shards];
+    for s in (0..shards).rev() {
+        if let Some(p) = parents[s] {
+            size[p] += size[s];
+        }
+    }
+    // Contiguity: each node's children (ascending) must tile the id
+    // interval right after it, and the root's children must tile 0..S.
+    let mut check_children = |owner: Option<usize>, start: usize, len: usize| {
+        let mut cursor = start;
+        for c in 0..shards {
+            if parents[c] != owner {
+                continue;
+            }
+            if c != cursor {
+                return Err(format!(
+                    "tree-parents: subtree under {} is not a contiguous shard \
+                     interval (expected child {cursor}, found {c})",
+                    owner.map_or("root".to_string(), |o| format!("shard {o}")),
+                ));
+            }
+            cursor += size[c];
+        }
+        if cursor != start + len {
+            return Err(format!(
+                "tree-parents: subtree under {} covers {} shards, expected {}",
+                owner.map_or("root".to_string(), |o| format!("shard {o}")),
+                cursor - start,
+                len
+            ));
+        }
+        Ok(())
+    };
+    check_children(None, 0, shards)?;
+    for s in 0..shards {
+        check_children(Some(s), s + 1, size[s] - 1)?;
+    }
+    Ok(())
+}
+
+/// The socket layout of a `sharded-wire` run, derived from one base
+/// `--listen` address so every process agrees without coordination.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TreeAddrs {
+    /// The root process's merge listener (the base address itself) —
+    /// top-level `serve-shard` nodes dial this.
+    pub root: String,
+    /// Shard `s`'s worker listener (`base port + 1 + s`) — that shard's
+    /// `serve-client` workers dial this.
+    pub workers: Vec<String>,
+    /// Shard `s`'s merge listener (`base port + 1 + shards + s`) — its
+    /// child shards dial this.  Only bound by shards that have children.
+    pub merges: Vec<String>,
+}
+
+/// Resolve the `sharded-wire` address layout: the root keeps the base
+/// port, shard `s` listens for its workers on `port + 1 + s` and for
+/// its child shards on `port + 1 + shards + s` — the tree analogue of
+/// [`shard_addresses`] / [`peer_addresses`].
+pub fn tree_addresses(base: &str, shards: usize) -> Result<TreeAddrs, String> {
+    if shards == 0 {
+        return Err("need at least one shard".into());
+    }
+    let (host, port) = base
+        .rsplit_once(':')
+        .ok_or_else(|| format!("bad listen address '{base}' (want host:port)"))?;
+    let port: u16 = port.parse().map_err(|_| format!("bad port in '{base}'"))?;
+    // Widen before adding: the derived ports must themselves fit u16.
+    if u32::from(port) + 2 * shards as u32 > u32::from(u16::MAX) {
+        return Err(format!("shard-tree ports starting at {port} overflow 65535"));
+    }
+    Ok(TreeAddrs {
+        root: base.to_string(),
+        workers: (0..shards)
+            .map(|s| format!("{host}:{}", u32::from(port) + 1 + s as u32))
+            .collect(),
+        merges: (0..shards)
+            .map(|s| format!("{host}:{}", u32::from(port) + 1 + (shards + s) as u32))
+            .collect(),
+    })
+}
+
 /// Which `ParticipationPolicy` selects each round's clients.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PolicyKind {
@@ -388,6 +506,12 @@ pub struct FedConfig {
     /// Empty = derive from `--listen` by incrementing the port per
     /// shard; see [`shard_addresses`].
     pub shard_addrs: Vec<String>,
+    /// Shard-tree shape for the `sharded-wire` transport: entry `s` is
+    /// shard `s`'s parent shard, `None` = a direct child of the root
+    /// process (TOML: comma-separated ids or `root`, e.g. `"root,0,0"`
+    /// for a depth-3 chain).  Empty = flat (every shard a root child).
+    /// Validated by [`validate_tree_parents`] at parse time.
+    pub tree_parents: Vec<Option<usize>>,
     /// Which communication graph the gossip transports run over
     /// (ignored by the centralized transports).
     pub topology: TopologyKind,
@@ -420,6 +544,7 @@ impl FedConfig {
             policy: PolicyKind::Uniform,
             shards: 1,
             shard_addrs: Vec::new(),
+            tree_parents: Vec::new(),
             topology: TopologyKind::Complete,
             topology_adj: Vec::new(),
             peer_addrs: Vec::new(),
@@ -429,7 +554,7 @@ impl FedConfig {
     pub const KNOWN_KEYS: &'static [&'static str] = &[
         "clients", "rounds", "local-epochs", "entropy-code-uplink", "participation",
         "round-timeout-ms", "round-timeout-max-ms", "transport", "policy", "shards",
-        "shard-addrs", "topology", "topology-adj", "peer-addrs",
+        "shard-addrs", "tree-parents", "topology", "topology-adj", "peer-addrs",
     ];
 
     pub fn from_toml(doc: &TomlDoc) -> Result<Self, String> {
@@ -454,16 +579,85 @@ impl FedConfig {
         if shards == 0 || shards > clients {
             return Err(format!("federated.shards {shards} must be in 1..={clients}"));
         }
-        // A multi-shard config only makes sense under the sharded
+        // A multi-shard config only makes sense under a sharded
         // transport: workers derive per-shard addresses from `shards`
         // alone, so a single-leader root would silently never see the
         // workers that dialed the other shards' ports.
-        if shards > 1 && transport != TransportKind::Sharded {
+        if shards > 1
+            && transport != TransportKind::Sharded
+            && transport != TransportKind::ShardedWire
+        {
             return Err(format!(
                 "federated.shards = {shards} requires federated.transport = \"sharded\" \
-                 (got \"{}\")",
+                 or \"sharded-wire\" (got \"{}\")",
                 transport.as_str()
             ));
+        }
+        let policy = PolicyKind::parse(&fed_doc.str_or("policy", "uniform"))?;
+        let entropy_code_uplink = fed_doc.bool_or("entropy-code-uplink", false);
+        // The sharded-wire root and its serve-shard processes derive
+        // each round's participants and per-client frame sizes locally
+        // instead of shipping them: that needs the pure uniform policy
+        // (straggler-aware selection depends on root-only drop history)
+        // and the fixed-size raw mask codec (arithmetic frames vary
+        // with mask content the root never sees).
+        if transport == TransportKind::ShardedWire {
+            if policy != PolicyKind::Uniform {
+                return Err(format!(
+                    "federated.transport = \"sharded-wire\" requires federated.policy = \
+                     \"uniform\" (got \"{}\"): shard processes re-derive each round's \
+                     participants from the shared seed alone",
+                    policy.as_str()
+                ));
+            }
+            if entropy_code_uplink {
+                return Err(
+                    "federated.transport = \"sharded-wire\" requires \
+                     federated.entropy-code-uplink = false: the root bills per-client \
+                     uplink from the fixed raw mask frame size"
+                        .into(),
+                );
+            }
+        }
+        // Shard-tree shape: comma-separated parent per shard, `root`
+        // marking direct children of the root process.
+        let tree_parents: Vec<Option<usize>> = {
+            let raw = fed_doc.str_or("tree-parents", "");
+            if raw.trim().is_empty() {
+                Vec::new()
+            } else {
+                let mut parents = Vec::new();
+                for (s, part) in raw.split(',').map(str::trim).enumerate() {
+                    parents.push(if part == "root" {
+                        None
+                    } else {
+                        Some(part.parse::<usize>().map_err(|_| {
+                            format!(
+                                "federated.tree-parents: bad parent '{part}' for shard {s} \
+                                 (want a shard id or 'root')"
+                            )
+                        })?)
+                    });
+                }
+                parents
+            }
+        };
+        if !tree_parents.is_empty() {
+            if transport != TransportKind::ShardedWire {
+                return Err(format!(
+                    "federated.tree-parents requires federated.transport = \"sharded-wire\" \
+                     (got \"{}\")",
+                    transport.as_str()
+                ));
+            }
+            if tree_parents.len() != shards {
+                return Err(format!(
+                    "federated.tree-parents lists {} shards for federated.shards = {shards}",
+                    tree_parents.len()
+                ));
+            }
+            validate_tree_parents(&tree_parents)
+                .map_err(|e| format!("federated.{e}"))?;
         }
         let shard_addrs: Vec<String> = fed_doc
             .str_or("shard-addrs", "")
@@ -476,6 +670,14 @@ impl FedConfig {
                 "federated.shard-addrs has {} entries for {shards} shards",
                 shard_addrs.len()
             ));
+        }
+        if !shard_addrs.is_empty() && transport == TransportKind::ShardedWire {
+            return Err(
+                "federated.shard-addrs is not supported with transport \"sharded-wire\": \
+                 the whole tree derives its ports from the root --listen address \
+                 (see config::tree_addresses)"
+                    .into(),
+            );
         }
         let topology = TopologyKind::parse(&fed_doc.str_or("topology", "complete"))?;
         // Explicit adjacency: one ';'-separated neighbour list per node,
@@ -535,14 +737,15 @@ impl FedConfig {
             clients,
             rounds: fed_doc.usize_or("rounds", 100),
             local_epochs: fed_doc.usize_or("local-epochs", 1),
-            entropy_code_uplink: fed_doc.bool_or("entropy-code-uplink", false),
+            entropy_code_uplink,
             participation,
             round_timeout_ms: fed_doc.usize_or("round-timeout-ms", 0) as u64,
             round_timeout_max_ms: fed_doc.usize_or("round-timeout-max-ms", 0) as u64,
             transport,
-            policy: PolicyKind::parse(&fed_doc.str_or("policy", "uniform"))?,
+            policy,
             shards,
             shard_addrs,
+            tree_parents,
             topology,
             topology_adj,
             peer_addrs,
@@ -628,6 +831,69 @@ mod tests {
         // out-of-range ports are rejected at parse time, never overflow
         assert!(shard_addresses("h:70000", &[], 1).is_err());
         assert!(shard_addresses("h:4294967295", &[], 2).is_err());
+    }
+
+    #[test]
+    fn tree_addresses_lay_out_root_worker_and_merge_ports() {
+        let got = tree_addresses("127.0.0.1:7800", 2).unwrap();
+        assert_eq!(got.root, "127.0.0.1:7800");
+        assert_eq!(got.workers, vec!["127.0.0.1:7801", "127.0.0.1:7802"]);
+        assert_eq!(got.merges, vec!["127.0.0.1:7803", "127.0.0.1:7804"]);
+        assert!(tree_addresses("no-port", 2).is_err());
+        assert!(tree_addresses("h:0", 0).is_err());
+        // worker + merge ports must both fit u16
+        assert!(tree_addresses("h:65531", 3).is_err());
+    }
+
+    #[test]
+    fn tree_parent_tables_validate_shape() {
+        // flat, chain, and a balanced two-level tree are all fine
+        assert!(validate_tree_parents(&[None, None, None]).is_ok());
+        assert!(validate_tree_parents(&[None, Some(0), Some(0)]).is_ok());
+        assert!(validate_tree_parents(&[None, Some(0), None, Some(2)]).is_ok());
+        assert!(validate_tree_parents(&[None, Some(0), Some(1), Some(1)]).is_ok());
+        // a parent must be a lower shard id (acyclic by construction)
+        assert!(validate_tree_parents(&[None, Some(1)]).is_err());
+        assert!(validate_tree_parents(&[None, Some(2), Some(0)]).is_err());
+        // subtrees must be contiguous shard intervals: here shard 0's
+        // subtree would be {0, 2}, skipping root-child 1
+        assert!(validate_tree_parents(&[None, None, Some(0)]).is_err());
+    }
+
+    #[test]
+    fn sharded_wire_config_parses_and_validates() {
+        let doc = TomlDoc::parse(
+            "arch = \"small\"\n[federated]\nclients = 4\ntransport = \"sharded-wire\"\n\
+             shards = 3\ntree-parents = \"root, 0, 0\"\n",
+        )
+        .unwrap();
+        let f = FedConfig::from_toml(&doc).unwrap();
+        assert_eq!(f.transport, TransportKind::ShardedWire);
+        assert_eq!(f.tree_parents, vec![None, Some(0), Some(0)]);
+        assert_eq!(TransportKind::parse("sharded-wire").unwrap().as_str(), "sharded-wire");
+        // flat by default
+        let doc = TomlDoc::parse(
+            "arch = \"small\"\n[federated]\nclients = 4\ntransport = \"sharded-wire\"\nshards = 2\n",
+        )
+        .unwrap();
+        assert!(FedConfig::from_toml(&doc).unwrap().tree_parents.is_empty());
+        for bad in [
+            // derived participants need the uniform policy
+            "clients = 4\ntransport = \"sharded-wire\"\nshards = 2\npolicy = \"straggler-aware\"\n",
+            // derived uplink billing needs the fixed-size raw codec
+            "clients = 4\ntransport = \"sharded-wire\"\nshards = 2\nentropy-code-uplink = true\n",
+            // tree shape errors: wrong length, bad parent id, non-tree transport
+            "clients = 4\ntransport = \"sharded-wire\"\nshards = 3\ntree-parents = \"root, 0\"\n",
+            "clients = 4\ntransport = \"sharded-wire\"\nshards = 2\ntree-parents = \"root, 5\"\n",
+            "clients = 4\ntransport = \"sharded-wire\"\nshards = 2\ntree-parents = \"root, up\"\n",
+            "clients = 4\ntransport = \"sharded\"\nshards = 2\ntree-parents = \"root, 0\"\n",
+            // explicit shard addresses only exist for the in-process-root transport
+            "clients = 4\ntransport = \"sharded-wire\"\nshards = 2\n\
+             shard-addrs = \"a:1, b:2\"\n",
+        ] {
+            let doc = TomlDoc::parse(&format!("arch = \"small\"\n[federated]\n{bad}")).unwrap();
+            assert!(FedConfig::from_toml(&doc).is_err(), "accepted {bad}");
+        }
     }
 
     #[test]

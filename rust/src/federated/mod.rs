@@ -34,6 +34,7 @@ pub mod engine;
 pub mod gossip;
 pub mod protocol;
 pub mod transport;
+pub mod tree;
 
 mod sim;
 
@@ -44,8 +45,10 @@ pub use engine::{
 };
 pub use sim::{
     client_round, run_federated, run_federated_custom, run_federated_parallel,
-    run_federated_sharded, ClientRound, InProcessTransport, PoolTransport, ShardedSimTransport,
+    run_federated_sharded, run_federated_sharded_outages, run_federated_with_drop_schedule,
+    ClientRound, InProcessTransport, PoolTransport, ScheduledDropTransport, ShardedSimTransport,
 };
+pub use tree::{mask_frame_bits, serve_shard, ShardTree, WireTreeTransport};
 
 use crate::comm::{pack_bits, unpack_bits};
 

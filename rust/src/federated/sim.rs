@@ -358,10 +358,14 @@ impl Transport for PoolTransport<'_> {
 /// [`InProcessTransport`]** for any shard count at any participation
 /// (same `client_round` order, and `u32` vote sums merge exactly).
 ///
-/// A failed shard simulates its leader being down for the whole run:
-/// its participants never receive the broadcast (no downlink, no local
-/// training, no uplink) and are reported dropped; no merge frame
-/// arrives from it.
+/// A failed shard simulates its leader being down from a given round
+/// on: its participants never receive the broadcast (no downlink, no
+/// local training, no uplink) and are reported dropped; no merge frame
+/// arrives from it.  An outage starting at round 0 is the
+/// whole-run-failure scenario of the dropout experiment; a later start
+/// is the twin of a `serve-shard` process killed mid-run on a testnet
+/// chaos schedule (`--fail-at-round` exits before broadcasting, so the
+/// kill round itself already bills the subtree as failed).
 pub struct ShardedSimTransport<'a> {
     cfg: &'a FedConfig,
     exec: &'a mut dyn DenseExecutor,
@@ -370,7 +374,9 @@ pub struct ShardedSimTransport<'a> {
     seeds: SeedTree,
     codec: MaskCodec,
     plan: ShardPlan,
-    failed: Vec<usize>,
+    /// `(shard, from_round)` outages: the shard is down for every round
+    /// `>= from_round`.
+    outages: Vec<(usize, u32)>,
     /// This round's encoded `ShardVotes` frames (empty vec = the shard
     /// is failed and no frame arrived).
     pending_votes: Vec<Vec<u8>>,
@@ -398,7 +404,7 @@ impl<'a> ShardedSimTransport<'a> {
             seeds,
             codec,
             plan,
-            failed: Vec::new(),
+            outages: Vec::new(),
             pending_votes: Vec::new(),
         }
     }
@@ -407,9 +413,16 @@ impl<'a> ShardedSimTransport<'a> {
     /// whole-shard-failure scenario of the dropout experiment).
     pub fn with_failed_shards(mut self, failed: &[usize]) -> Self {
         for &s in failed {
-            assert!(s < self.plan.shards(), "failed shard {s} ≥ {}", self.plan.shards());
+            self = self.with_shard_outage(s, 0);
         }
-        self.failed = failed.to_vec();
+        self
+    }
+
+    /// Mark one shard leader as down from `from_round` on — the twin of
+    /// a `serve-shard` process killed on a chaos schedule.
+    pub fn with_shard_outage(mut self, shard: usize, from_round: u32) -> Self {
+        assert!(shard < self.plan.shards(), "failed shard {shard} ≥ {}", self.plan.shards());
+        self.outages.push((shard, from_round));
         self
     }
 
@@ -428,7 +441,7 @@ impl Transport for ShardedSimTransport<'_> {
         let mut shard_costs = Vec::with_capacity(groups.len());
         self.pending_votes.clear();
         for (sid, parts) in groups.iter().copied().enumerate() {
-            if self.failed.contains(&sid) {
+            if self.outages.iter().any(|&(s, from)| s == sid && ctx.round >= from) {
                 // Whole-shard failure: the shard leader is down, so its
                 // participants never see the broadcast and are dropped.
                 dropped.extend_from_slice(parts);
@@ -491,6 +504,128 @@ impl Transport for ShardedSimTransport<'_> {
     /// path the fast tests pin is the one production runs.
     fn aggregate(&mut self, server: &mut Server, _traffic: &RoundTraffic) -> usize {
         super::merge_vote_frames(server, &self.plan, &mut self.pending_votes)
+    }
+
+    fn eval_executor(&mut self) -> &mut dyn DenseExecutor {
+        &mut *self.exec
+    }
+}
+
+/// [`InProcessTransport`] with a deterministic per-round drop schedule —
+/// the replay twin for wire runs whose drop pattern is timing-dependent
+/// (a worker killed and *restarted* mid-run rejoins whenever its
+/// reconnect lands, so the twin takes the drop schedule the real
+/// leader's log reports and replays it exactly).
+///
+/// Semantics per scheduled drop `(round, client)`:
+///
+/// * the client neither trains nor uplinks that round (reported
+///   dropped, aggregation renormalizes without it) — a worker killed by
+///   `--fail-at-round` exits on receiving the round frame, before any
+///   local work;
+/// * its training state is replaced fresh (`LocalZampling::from_parts`
+///   over the same seed subtree), because the process that eventually
+///   rejoins starts from scratch — the only cross-round client state is
+///   the train-sampler cursor, so a fresh state at the rejoin round is
+///   exactly what the restarted `serve-client` process computes.
+///   Resetting at every scheduled drop round is idempotent (the rebuild
+///   is deterministic), so the transport need not know the rejoin round;
+/// * downlink is billed only when the previous round did **not** drop
+///   the client: the first drop of a streak is the kill round, whose
+///   broadcast write succeeded before the worker died; on later rounds
+///   the leader's sweeper has already reaped the dead connection, so no
+///   broadcast is written.
+pub struct ScheduledDropTransport<'a> {
+    cfg: &'a FedConfig,
+    exec: &'a mut dyn DenseExecutor,
+    shards: &'a [Dataset],
+    clients: Vec<LocalZampling>,
+    seeds: SeedTree,
+    codec: MaskCodec,
+    q: Arc<QMatrix>,
+    csc: Arc<crate::sparse::CscView>,
+    /// `(round, client)` pairs, in any order.
+    schedule: Vec<(u32, usize)>,
+}
+
+impl<'a> ScheduledDropTransport<'a> {
+    /// Build over the same parts as [`InProcessTransport`], plus the
+    /// `(round, client)` drop schedule to replay.
+    pub fn new(
+        cfg: &'a FedConfig,
+        exec: &'a mut dyn DenseExecutor,
+        shards: &'a [Dataset],
+        clients: Vec<LocalZampling>,
+        q: Arc<QMatrix>,
+        schedule: &[(u32, usize)],
+    ) -> Self {
+        assert_eq!(shards.len(), cfg.clients, "need one shard per client");
+        assert_eq!(clients.len(), cfg.clients, "need one state per client");
+        for &(_, k) in schedule {
+            assert!(k < cfg.clients, "scheduled drop for client {k} ≥ {}", cfg.clients);
+        }
+        let seeds = SeedTree::new(cfg.train.seed);
+        let codec = codec_for(cfg);
+        let csc = Arc::new(q.to_csc(None));
+        Self { cfg, exec, shards, clients, seeds, codec, q, csc, schedule: schedule.to_vec() }
+    }
+
+    fn is_dropped(&self, round: u32, k: usize) -> bool {
+        self.schedule.iter().any(|&(r, c)| r == round && c == k)
+    }
+
+    /// Fresh client state over the same seed subtree — what a restarted
+    /// `serve-client` process builds before its first round.
+    fn reset_client(&mut self, k: usize) {
+        let sub = self.seeds.subtree("client", k as u64);
+        self.clients[k] = LocalZampling::from_parts(
+            &self.cfg.train,
+            Arc::clone(&self.q),
+            Arc::clone(&self.csc),
+            ProbVector::from_probs(vec![0.5; self.cfg.train.n]),
+            &sub,
+        );
+    }
+}
+
+impl Transport for ScheduledDropTransport<'_> {
+    fn exchange(&mut self, ctx: &RoundCtx<'_>) -> Result<RoundTraffic> {
+        let mut contributions = Vec::with_capacity(ctx.participants.len());
+        let mut dropped = Vec::new();
+        let mut down_bits = 0u64;
+        for &k in ctx.participants {
+            if self.is_dropped(ctx.round, k) {
+                // Kill round: the broadcast write succeeded before the
+                // worker died, so the first drop of a streak still bills
+                // downlink; while the worker stays dead its reaped slot
+                // receives nothing.
+                if ctx.round == 0 || !self.is_dropped(ctx.round - 1, k) {
+                    down_bits += ctx.frame.len() as u64 * 8;
+                }
+                self.reset_client(k);
+                dropped.push(k);
+                continue;
+            }
+            let out = client_round(
+                self.cfg,
+                &mut self.clients[k],
+                &mut *self.exec,
+                &self.shards[k],
+                &self.seeds,
+                ctx.frame,
+                self.codec,
+                k,
+                None,
+            )?;
+            down_bits += out.down_bits;
+            contributions.push(Contribution {
+                client: k,
+                loss: out.loss,
+                up_bits: out.up_bits,
+                packed_mask: out.packed_mask,
+            });
+        }
+        Ok(RoundTraffic { contributions, dropped, down_bits, ..Default::default() })
     }
 
     fn eval_executor(&mut self) -> &mut dyn DenseExecutor {
@@ -624,6 +759,75 @@ pub fn run_federated_sharded(
     );
     let mut transport = ShardedSimTransport::new(cfg, exec, shards, setup.clients, num_shards)
         .with_failed_shards(failed_shards);
+    let mut policy = make_policy(cfg.policy);
+    engine.run(&mut transport, policy.as_mut()).expect("in-process transports are infallible")
+}
+
+/// [`run_federated_sharded`] with `(shard, from_round)` outages instead
+/// of whole-run failures — the in-process twin of a testnet run whose
+/// chaos schedule kills `serve-shard` processes at given rounds.
+#[allow(clippy::too_many_arguments)]
+pub fn run_federated_sharded_outages(
+    cfg: &FedConfig,
+    exec: &mut dyn DenseExecutor,
+    shards: &[Dataset],
+    test: &Dataset,
+    eval_samples: usize,
+    eval_every: usize,
+    num_shards: usize,
+    outages: &[(usize, u32)],
+) -> FedOutcome {
+    assert_eq!(shards.len(), cfg.clients, "need one shard per client");
+    let seeds = SeedTree::new(cfg.train.seed);
+    let setup = init_clients(cfg, &seeds);
+    let engine = RoundEngine::new(
+        cfg,
+        cfg.clients,
+        Arc::clone(&setup.q),
+        setup.init_probs.clone(),
+        test,
+        eval_samples,
+        eval_every,
+        "federated",
+    );
+    let mut transport = ShardedSimTransport::new(cfg, exec, shards, setup.clients, num_shards);
+    for &(s, from) in outages {
+        transport = transport.with_shard_outage(s, from);
+    }
+    let mut policy = make_policy(cfg.policy);
+    engine.run(&mut transport, policy.as_mut()).expect("in-process transports are infallible")
+}
+
+/// [`run_federated`] through [`ScheduledDropTransport`]: replay an
+/// observed `(round, client)` drop schedule deterministically — the
+/// twin for kill-and-restart-a-worker testnet scenarios, whose rejoin
+/// round depends on reconnect timing and is therefore taken from the
+/// real leader's log rather than predicted.
+pub fn run_federated_with_drop_schedule(
+    cfg: &FedConfig,
+    exec: &mut dyn DenseExecutor,
+    shards: &[Dataset],
+    test: &Dataset,
+    eval_samples: usize,
+    eval_every: usize,
+    schedule: &[(u32, usize)],
+) -> FedOutcome {
+    assert_eq!(shards.len(), cfg.clients, "need one shard per client");
+    let seeds = SeedTree::new(cfg.train.seed);
+    let setup = init_clients(cfg, &seeds);
+    let engine = RoundEngine::new(
+        cfg,
+        cfg.clients,
+        Arc::clone(&setup.q),
+        setup.init_probs.clone(),
+        test,
+        eval_samples,
+        eval_every,
+        "federated",
+    );
+    let q = Arc::clone(&setup.q);
+    let mut transport =
+        ScheduledDropTransport::new(cfg, exec, shards, setup.clients, q, schedule);
     let mut policy = make_policy(cfg.policy);
     engine.run(&mut transport, policy.as_mut()).expect("in-process transports are infallible")
 }

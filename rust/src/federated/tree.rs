@@ -1,0 +1,696 @@
+//! The shard tree on the wire: `repro serve-shard` nodes and the root's
+//! [`WireTreeTransport`] — the multi-process generalization of
+//! [`ShardedTransport`](super::transport::ShardedTransport)'s two-level
+//! in-process merge to **arbitrary-depth aggregation trees**.
+//!
+//! ## Topology
+//!
+//! A [`ShardTree`] (from `federated.tree-parents`, or flat when the
+//! table is empty) arranges the `S` shard leaders of a [`ShardPlan`]
+//! into an ordered forest under the root process.  Every shard leader
+//! is its own OS process (`repro serve-shard --shard-id s`):
+//!
+//! * it runs a full [`Leader`] for the clients `ShardPlan::range(s)`
+//!   owns (same accept/reconnect/deadline machinery as the TCP leader);
+//! * it accepts one **merge link** per child shard (the child announces
+//!   itself with the existing `Hello` frame, carrying its *shard* id);
+//! * it dials its parent's merge port (the root's `--listen` address
+//!   for top-level shards) and speaks the existing `ShardVotes` frame
+//!   (tag 8) upward — no new wire tags.
+//!
+//! Per round the node receives the encoded `Round` frame from its
+//! parent, forwards it to its children *first* (so every subtree's
+//! round overlaps its own), broadcasts to its own workers, folds their
+//! masks into a streaming vote sum ([`Leader::collect_votes`]), merges
+//! each child's `ShardVotes` partial sum into it (`u32` adds are exact
+//! and associative — property-tested in
+//! `tests/shard_merge_properties.rs`), and ships one `ShardVotes` frame
+//! upward whose `received` spans its whole subtree.
+//!
+//! ## Byte-identicality
+//!
+//! Shard processes derive each round's participants locally from the
+//! shared seed ([`RoundPlan::for_round`] is pure), which is why the
+//! config layer restricts `sharded-wire` to the uniform policy and the
+//! raw mask codec: the root can bill per-client uplink from the fixed
+//! raw frame size without ever seeing a mask.  A depth-2 tree (root +
+//! leaf shard processes) produces `final_probs` and ledgers
+//! **byte-identical** to the in-process
+//! [`ShardedSimTransport`](super::ShardedSimTransport) twin at the same
+//! seed — including a whole subtree killed mid-run on a chaos schedule
+//! (`--fail-at-round`), which the twin models as a shard outage.  At
+//! depth ≥ 3 the root's shard table aggregates each *direct child's
+//! subtree* into one row (the per-hop splits live in the shard nodes'
+//! logs); the round table and `final_probs` stay byte-identical at any
+//! depth.
+//!
+//! ## Fault model
+//!
+//! Merge links fail by EOF: a dead child (or a chaos self-exit via
+//! `--fail-at-round`, which quits *before* forwarding or broadcasting,
+//! so the kill round is deterministic) is discovered at the read and
+//! its whole subtree is treated as failed for the rest of the run —
+//! participants dropped, zero billed traffic, aggregation renormalized
+//! by whatever arrived, exactly like the simulator's failed shards.
+
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+use crate::comm::ShardCost;
+use crate::config::{tree_addresses, validate_tree_parents, FedConfig};
+use crate::rng::SeedTree;
+use crate::util::error::{Context, Result};
+use crate::zampling::DenseExecutor;
+use crate::{anyhow, bail, ensure};
+
+use super::engine::{
+    Contribution, DeadlinePolicy, RoundCtx, RoundPlan, RoundTraffic, ShardPlan, Transport,
+};
+use super::protocol::{
+    decode_server, decode_shard, encode_client, encode_server, encode_shard, peek_client_frame,
+    peek_server_frame, wire_u32, ClientFrameKind, ClientMsg, MaskCodec, ServerFrameKind, ServerMsg,
+    ShardMsg,
+};
+use super::transport::{read_frame, write_frame, Leader, Worker};
+use super::Server;
+
+/// How long a shard node retries dialing its parent's merge port before
+/// giving up — generous because a parent only starts accepting merge
+/// links after its own workers finish their `Hello` handshakes.
+const PARENT_DIAL_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// The ordered aggregation forest over a [`ShardPlan`]'s shard ids.
+///
+/// Validated shape (see `config::validate_tree_parents`): `parent[s]`
+/// is `None` (a direct child of the root process) or an earlier shard
+/// id, and every subtree covers a contiguous shard-id interval starting
+/// at its own id — a preorder labeling.  Contiguous shard intervals
+/// over a `ShardPlan`'s contiguous client ranges give contiguous
+/// *client* spans per subtree, which is what keeps the root's
+/// contributions globally ascending (the engine's invariant).
+#[derive(Clone, Debug)]
+pub struct ShardTree {
+    parents: Vec<Option<usize>>,
+    children: Vec<Vec<usize>>,
+    root_children: Vec<usize>,
+    /// Subtree size in shards, including the shard itself.
+    subtree: Vec<usize>,
+}
+
+impl ShardTree {
+    /// Build from a validated parent table (`parents[s]` = the shard id
+    /// `s` merges into, `None` for direct children of the root).
+    pub fn from_parents(parents: &[Option<usize>]) -> Result<ShardTree> {
+        validate_tree_parents(parents).map_err(|e| anyhow!("{e}"))?;
+        let shards = parents.len();
+        let mut children = vec![Vec::new(); shards];
+        let mut root_children = Vec::new();
+        for (s, p) in parents.iter().enumerate() {
+            match p {
+                Some(p) => children[*p].push(s),
+                None => root_children.push(s),
+            }
+        }
+        let mut subtree = vec![1usize; shards];
+        for s in (0..shards).rev() {
+            if let Some(p) = parents[s] {
+                subtree[p] += subtree[s];
+            }
+        }
+        Ok(ShardTree { parents: parents.to_vec(), children, root_children, subtree })
+    }
+
+    /// The flat (depth-2) tree: every shard a direct child of the root
+    /// — the topology `ShardedTransport` runs in-process.
+    pub fn flat(shards: usize) -> ShardTree {
+        // A flat table is always valid, so this cannot fail.
+        match Self::from_parents(&vec![None; shards]) {
+            Ok(t) => t,
+            Err(_) => unreachable!("a flat parent table is always valid"), // lint: allow(panic) — `vec![None; s]` trivially satisfies every tree invariant
+        }
+    }
+
+    /// The tree a config describes: `federated.tree-parents` when set,
+    /// otherwise flat over `cfg.shards`.
+    pub fn from_cfg(cfg: &FedConfig) -> Result<ShardTree> {
+        if cfg.tree_parents.is_empty() {
+            Ok(Self::flat(cfg.shards))
+        } else {
+            ensure!(
+                cfg.tree_parents.len() == cfg.shards,
+                "tree-parents has {} entries for {} shards",
+                cfg.tree_parents.len(),
+                cfg.shards
+            );
+            Self::from_parents(&cfg.tree_parents)
+        }
+    }
+
+    /// Shard count.
+    pub fn shards(&self) -> usize {
+        self.parents.len()
+    }
+
+    /// The shard `s` merges into, `None` for direct children of the
+    /// root process.
+    pub fn parent(&self, s: usize) -> Option<usize> {
+        self.parents[s]
+    }
+
+    /// Shard ids that merge into shard `s`, ascending.
+    pub fn children(&self, s: usize) -> &[usize] {
+        &self.children[s]
+    }
+
+    /// Shard ids that merge directly into the root process, ascending.
+    pub fn root_children(&self) -> &[usize] {
+        &self.root_children
+    }
+
+    /// The contiguous shard-id interval rooted at `s` (including `s`).
+    pub fn subtree_shards(&self, s: usize) -> std::ops::Range<usize> {
+        s..s + self.subtree[s]
+    }
+
+    /// The contiguous client-id span shard `s`'s whole subtree owns
+    /// under `plan` — the bound on the `received` count a `ShardVotes`
+    /// frame from `s` may claim.
+    pub fn subtree_clients(&self, plan: &ShardPlan, s: usize) -> std::ops::Range<usize> {
+        let shards = self.subtree_shards(s);
+        plan.range(shards.start).start..plan.range(shards.end - 1).end
+    }
+
+    /// Merge-hop depth: 1 for a flat tree (shard → root), plus one per
+    /// additional ancestor on the longest chain.
+    pub fn depth(&self) -> usize {
+        (0..self.shards())
+            .map(|mut s| {
+                let mut d = 1usize;
+                while let Some(p) = self.parents[s] {
+                    d += 1;
+                    s = p;
+                }
+                d
+            })
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// The encoded size, in bits, of one raw-codec `Mask` uplink frame for
+/// an `n`-entry model — a pure function of `n`, which is what lets the
+/// tree root bill per-client uplink without ever seeing a mask (the
+/// config layer pins `sharded-wire` to the raw codec for exactly this
+/// reason).
+pub fn mask_frame_bits(n: usize) -> u64 {
+    let frame =
+        encode_client(&ClientMsg::Mask { round: 0, client: 0, n, mask: vec![false; n] }, MaskCodec::Raw);
+    frame.len() as u64 * 8
+}
+
+/// One parent→child merge link; `None` once the child's process died
+/// (EOF or write failure) — its whole subtree is failed from then on.
+struct MergeLink {
+    shard: usize,
+    stream: Option<TcpStream>,
+}
+
+/// Accept `expected` merge links on `listener`: each child announces
+/// itself with a `Hello` frame carrying its shard id.  Shared by the
+/// root transport and the shard nodes.
+fn accept_merge_links(listener: &TcpListener, expected: &[usize]) -> Result<Vec<MergeLink>> {
+    let mut links: Vec<MergeLink> =
+        expected.iter().map(|&s| MergeLink { shard: s, stream: None }).collect();
+    for _ in 0..expected.len() {
+        let (mut stream, peer) =
+            listener.accept().with_context(|| "accepting a merge link".to_string())?;
+        stream.set_nodelay(true).ok();
+        let hello = read_frame(&mut stream)
+            .with_context(|| format!("reading the merge-link Hello from {peer}"))?;
+        let (kind, id) = peek_client_frame(&hello)?;
+        ensure!(
+            matches!(kind, ClientFrameKind::Hello),
+            "merge link from {peer} opened with {kind:?}, expected Hello"
+        );
+        let id = id as usize;
+        let slot = links
+            .iter_mut()
+            .find(|l| l.shard == id)
+            .ok_or_else(|| anyhow!("merge link announced unexpected shard id {id}"))?;
+        ensure!(slot.stream.is_none(), "duplicate merge link for shard {id}");
+        slot.stream = Some(stream);
+    }
+    Ok(links)
+}
+
+/// Root [`Transport`] for the wire shard tree: the engine's round loop
+/// over one merge link per direct child of the root, each a
+/// `repro serve-shard` process aggregating its whole subtree.
+///
+/// `exchange` forwards the engine's encoded round frame to every live
+/// child, then reads one `ShardVotes` frame per link; `aggregate`
+/// merges the decoded partial sums (`Server::merge_votes`) and
+/// renormalizes.  Costs are derived, not measured: with the raw codec
+/// pinned, every mask frame is [`mask_frame_bits`] and every broadcast
+/// is `ctx.frame` — so a live child's subtree bills exactly what the
+/// in-process twin bills and the ledgers match byte-for-byte at depth
+/// 2.  Root→child `Round` forwarding and merge-link `Hello`s are not
+/// billed (the simulator has no counterpart for either).
+pub struct WireTreeTransport {
+    plan: ShardPlan,
+    tree: ShardTree,
+    children: Vec<MergeLink>,
+    exec: Box<dyn DenseExecutor>,
+    /// Decoded `(votes, received)` per live child this round, consumed
+    /// by `aggregate` — decoding (and every validation that can fail)
+    /// happens in `exchange`, where errors can propagate as `Result`.
+    pending: Vec<(Vec<u32>, u32)>,
+    /// Cached raw mask-frame size for the current model size.
+    mask_bits: Option<(usize, u64)>,
+}
+
+impl WireTreeTransport {
+    /// Bind `listen` and accept one merge link per direct child of the
+    /// root (the whole subtree below each child is already connected by
+    /// the time it dials, so returning means the full tree is up).
+    pub fn accept(listen: &str, cfg: &FedConfig, exec: Box<dyn DenseExecutor>) -> Result<Self> {
+        let tree = ShardTree::from_cfg(cfg)?;
+        let plan = ShardPlan::new(cfg.clients, cfg.shards);
+        let listener =
+            TcpListener::bind(listen).with_context(|| format!("binding {listen}"))?;
+        let children = accept_merge_links(&listener, tree.root_children())?;
+        Ok(Self { plan, tree, children, exec, pending: Vec::new(), mask_bits: None })
+    }
+
+    /// The client-space partition the tree aggregates.
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// The aggregation forest over the shard ids.
+    pub fn tree(&self) -> &ShardTree {
+        &self.tree
+    }
+
+    fn mask_bits_for(&mut self, n: usize) -> u64 {
+        match self.mask_bits {
+            Some((cached_n, bits)) if cached_n == n => bits,
+            _ => {
+                let bits = mask_frame_bits(n);
+                self.mask_bits = Some((n, bits));
+                bits
+            }
+        }
+    }
+}
+
+impl Transport for WireTreeTransport {
+    fn exchange(&mut self, ctx: &RoundCtx<'_>) -> Result<RoundTraffic> {
+        let mask_bits = self.mask_bits_for(ctx.n);
+        let frame_bits = ctx.frame.len() as u64 * 8;
+
+        // Each direct child's participants are a contiguous window of
+        // the ascending participant list (subtree client spans are
+        // contiguous and ascending in child order).
+        let mut windows: Vec<&[usize]> = Vec::with_capacity(self.children.len());
+        let mut cursor = 0usize;
+        for link in &self.children {
+            let span = self.tree.subtree_clients(&self.plan, link.shard);
+            let start = cursor;
+            while cursor < ctx.participants.len() && ctx.participants[cursor] < span.end {
+                let k = ctx.participants[cursor];
+                ensure!(k >= span.start, "participant {k} below shard {}'s subtree", link.shard);
+                cursor += 1;
+            }
+            windows.push(&ctx.participants[start..cursor]);
+        }
+        ensure!(cursor == ctx.participants.len(), "participant outside every subtree");
+
+        // Forward the round frame to every live child first, so all
+        // subtrees run the round concurrently; a failed write means the
+        // child died earlier — treat its subtree as failed from now on.
+        for link in &mut self.children {
+            if let Some(stream) = link.stream.as_mut() {
+                if write_frame(stream, ctx.frame).is_err() {
+                    link.stream = None;
+                }
+            }
+        }
+
+        // One ShardVotes frame per live child, in child order (child 0's
+        // reply is read while the later subtrees still compute).  EOF
+        // here is the chaos path: the child quit before responding, so
+        // this round already bills it as failed.
+        let mut replies: Vec<Option<(Vec<u32>, u32, u64)>> =
+            Vec::with_capacity(self.children.len());
+        for link in &mut self.children {
+            let Some(stream) = link.stream.as_mut() else {
+                replies.push(None);
+                continue;
+            };
+            let Ok(frame) = read_frame(stream) else {
+                link.stream = None;
+                replies.push(None);
+                continue;
+            };
+            let ShardMsg::ShardVotes { shard, round, received, n, votes } = decode_shard(&frame)?;
+            ensure!(
+                shard as usize == link.shard,
+                "merge link for shard {} sent a frame claiming shard {shard}",
+                link.shard
+            );
+            ensure!(
+                round == ctx.round,
+                "shard {} answered round {round}, expected {}",
+                link.shard,
+                ctx.round
+            );
+            ensure!(n == ctx.n, "shard {} vote length {n} != model size {}", link.shard, ctx.n);
+            replies.push(Some((votes, received, frame.len() as u64 * 8)));
+        }
+
+        // Bill the round.  A live child's subtree looks exactly like the
+        // simulator's live shards (received masks at the fixed raw frame
+        // size, broadcasts at the round-frame size); a dead child is the
+        // simulator's failed shard (participants dropped, zero traffic).
+        let mut contributions = Vec::with_capacity(ctx.participants.len());
+        let mut dropped = Vec::new();
+        let mut down_bits = 0u64;
+        let mut shard_costs = Vec::with_capacity(self.children.len());
+        self.pending.clear();
+        for (i, link) in self.children.iter().enumerate() {
+            let parts = windows[i];
+            match replies[i].take() {
+                None => {
+                    dropped.extend_from_slice(parts);
+                    shard_costs.push(ShardCost {
+                        shard: wire_u32(link.shard),
+                        dropped: wire_u32(parts.len()),
+                        ..Default::default()
+                    });
+                }
+                Some((votes, received, merge_bits)) => {
+                    let r = received as usize;
+                    ensure!(
+                        r <= parts.len(),
+                        "shard {} claims {r} received masks for {} subtree participants",
+                        link.shard,
+                        parts.len()
+                    );
+                    // The root only learns the count, not which subtree
+                    // clients contributed; attributing the first `r` ids
+                    // keeps contributions ascending and bills identical
+                    // per-client bits (raw frames are size-uniform), so
+                    // ledger totals and row counts are unaffected.
+                    for &k in &parts[..r] {
+                        contributions.push(Contribution {
+                            client: k,
+                            loss: 0.0,
+                            up_bits: mask_bits,
+                            packed_mask: Vec::new(),
+                        });
+                    }
+                    dropped.extend_from_slice(&parts[r..]);
+                    down_bits += u64::from(received) * frame_bits;
+                    shard_costs.push(ShardCost {
+                        shard: wire_u32(link.shard),
+                        uplink_bits: u64::from(received) * mask_bits,
+                        downlink_bits: u64::from(received) * frame_bits,
+                        merge_bits,
+                        received,
+                        dropped: wire_u32(parts.len() - r),
+                    });
+                    self.pending.push((votes, received));
+                }
+            }
+        }
+        dropped.sort_unstable();
+        Ok(RoundTraffic { contributions, dropped, down_bits, shard_costs, ..Default::default() })
+    }
+
+    /// Merge the decoded subtree vote sums and renormalize — the same
+    /// algebra as `merge_vote_frames`, but over frames already decoded
+    /// and validated in `exchange` (where failure can be a `Result`).
+    fn aggregate(&mut self, server: &mut Server, _traffic: &RoundTraffic) -> usize {
+        for (votes, received) in self.pending.drain(..) {
+            server.merge_votes(&votes, received as usize);
+        }
+        server.try_aggregate()
+    }
+
+    fn eval_executor(&mut self) -> &mut dyn DenseExecutor {
+        self.exec.as_mut()
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        let frame = encode_server(&ServerMsg::Shutdown);
+        for link in &mut self.children {
+            if let Some(stream) = link.stream.as_mut() {
+                let _ = write_frame(stream, &frame);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Run one shard-leader process (`repro serve-shard --shard-id s`):
+/// lead the clients `ShardPlan::range(s)` owns, aggregate the subtree
+/// below `s`, and merge upward until the parent sends `Shutdown`.
+///
+/// `fail_at_round` is the chaos knob: on receiving that round's frame
+/// the node exits **before** forwarding or broadcasting anything, so
+/// the subtree's death is deterministic — its workers and children see
+/// EOF, and the parent bills the whole subtree as failed from exactly
+/// that round (what the in-process twin models as a shard outage).
+pub fn serve_shard(
+    cfg: &FedConfig,
+    shard: usize,
+    listen: &str,
+    fail_at_round: Option<u32>,
+) -> Result<()> {
+    ensure!(shard < cfg.shards, "shard-id {shard} ≥ shards {}", cfg.shards);
+    let tree = ShardTree::from_cfg(cfg)?;
+    let plan = ShardPlan::new(cfg.clients, cfg.shards);
+    let addrs = tree_addresses(listen, cfg.shards).map_err(|e| anyhow!("{e}"))?;
+    let n = cfg.train.n;
+    let own: Vec<usize> = plan.range(shard).collect();
+
+    // Bind both listeners before anything blocks, so workers' and
+    // children's retry-dials land in a bound backlog regardless of
+    // launch order.
+    let worker_listener = TcpListener::bind(&addrs.workers[shard])
+        .with_context(|| format!("binding worker port {}", addrs.workers[shard]))?;
+    let merge_listener = if tree.children(shard).is_empty() {
+        None
+    } else {
+        Some(
+            TcpListener::bind(&addrs.merges[shard])
+                .with_context(|| format!("binding merge port {}", addrs.merges[shard]))?,
+        )
+    };
+    println!(
+        "[shard {shard}] leading clients {}..{} on {}, {} child shard(s), parent {}",
+        plan.range(shard).start,
+        plan.range(shard).end,
+        addrs.workers[shard],
+        tree.children(shard).len(),
+        match tree.parent(shard) {
+            None => "root".to_string(),
+            Some(p) => format!("shard {p}"),
+        }
+    );
+
+    let mut leader = Leader::from_listener_subset(worker_listener, cfg.clients, &own)?;
+    let mut children = match &merge_listener {
+        Some(listener) => accept_merge_links(listener, tree.children(shard))?,
+        None => Vec::new(),
+    };
+
+    // Dial the parent last: by now this whole subtree is connected, so
+    // the parent (and transitively the root) learns the tree is up the
+    // moment every merge link is in.
+    let parent_addr = match tree.parent(shard) {
+        None => listen.to_string(),
+        Some(p) => addrs.merges[p].clone(),
+    };
+    let mut parent =
+        Worker::connect_retry(&parent_addr, wire_u32(shard), MaskCodec::Raw, PARENT_DIAL_TIMEOUT)?;
+    println!("[shard {shard}] merge link up to {parent_addr}");
+
+    let seeds = SeedTree::new(cfg.train.seed);
+    let deadline = DeadlinePolicy::from_cfg(cfg);
+    loop {
+        let frame = parent.recv_raw().with_context(|| format!("shard {shard}: parent link"))?;
+        match peek_server_frame(&frame)? {
+            ServerFrameKind::Shutdown => {
+                for link in &mut children {
+                    if let Some(stream) = link.stream.as_mut() {
+                        let _ = write_frame(stream, &frame);
+                    }
+                }
+                leader.shutdown()?;
+                println!("[shard {shard}] shutdown");
+                return Ok(());
+            }
+            ServerFrameKind::PeerRound => {
+                bail!("shard {shard}: unexpected gossip PeerRound frame on a merge link")
+            }
+            ServerFrameKind::Round => {
+                let ServerMsg::Round { round, .. } = decode_server(&frame)? else {
+                    bail!("shard {shard}: Round peek decoded to a different frame");
+                };
+                if fail_at_round == Some(round) {
+                    println!("[shard {shard}] failing at round {round} (chaos schedule)");
+                    return Ok(());
+                }
+                // Children first, so every subtree's round overlaps ours.
+                for link in &mut children {
+                    if let Some(stream) = link.stream.as_mut() {
+                        if write_frame(stream, &frame).is_err() {
+                            link.stream = None;
+                        }
+                    }
+                }
+                // This node's own workers: participants are derived
+                // locally from the shared seed (`RoundPlan::for_round`
+                // is pure), never communicated.
+                let rp = RoundPlan::for_round(
+                    cfg.clients,
+                    cfg.participation,
+                    &seeds,
+                    round as usize,
+                );
+                let own_parts: Vec<usize> = rp
+                    .participants
+                    .iter()
+                    .copied()
+                    .filter(|k| plan.range(shard).contains(k))
+                    .collect();
+                let (mut votes, own_received) = if own_parts.is_empty() {
+                    (vec![0u32; n], 0usize)
+                } else {
+                    leader.broadcast_frame(&frame, &own_parts)?;
+                    let receipt = leader.collect_votes(round, &own_parts, n, deadline)?;
+                    let r = receipt.received.len();
+                    (receipt.votes, r)
+                };
+                // Merge each child subtree's partial sum; EOF means the
+                // subtree died — failed for the rest of the run.
+                let mut merged = 0usize;
+                for link in &mut children {
+                    let Some(stream) = link.stream.as_mut() else { continue };
+                    let Ok(cframe) = read_frame(stream) else {
+                        println!("[shard {shard}] child shard {} link lost at round {round}", link.shard);
+                        link.stream = None;
+                        continue;
+                    };
+                    let ShardMsg::ShardVotes { shard: cs, round: cr, received, n: cn, votes: cv } =
+                        decode_shard(&cframe)?;
+                    ensure!(
+                        cs as usize == link.shard,
+                        "shard {shard}: child link {} claims shard {cs}",
+                        link.shard
+                    );
+                    ensure!(
+                        cr == round,
+                        "shard {shard}: child {} answered round {cr}, expected {round}",
+                        link.shard
+                    );
+                    ensure!(
+                        cn == n,
+                        "shard {shard}: child {} vote length {cn} != model size {n}",
+                        link.shard
+                    );
+                    let limit = tree.subtree_clients(&plan, link.shard).len();
+                    ensure!(
+                        received as usize <= limit,
+                        "shard {shard}: child {} claims {received} received masks but its \
+                         subtree owns only {limit} clients",
+                        link.shard
+                    );
+                    for (v, &c) in votes.iter_mut().zip(&cv) {
+                        *v = v
+                            .checked_add(c)
+                            .ok_or_else(|| anyhow!("vote overflow merging shard {}", link.shard))?;
+                    }
+                    merged += received as usize;
+                }
+                let total = own_received + merged;
+                let up = encode_shard(&ShardMsg::ShardVotes {
+                    shard: wire_u32(shard),
+                    round,
+                    received: wire_u32(total),
+                    n,
+                    votes,
+                });
+                println!(
+                    "[shard {shard}] round {round:>3}  received {total} (own {own_received}, \
+                     merged {merged})  merge {}b up",
+                    up.len() * 8
+                );
+                parent.send_frame(&up)?;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_tree_shape() {
+        let t = ShardTree::flat(3);
+        assert_eq!(t.root_children(), &[0, 1, 2]);
+        assert_eq!(t.depth(), 1);
+        for s in 0..3 {
+            assert!(t.children(s).is_empty());
+            assert_eq!(t.parent(s), None);
+            assert_eq!(t.subtree_shards(s), s..s + 1);
+        }
+    }
+
+    #[test]
+    fn chain_and_balanced_trees_expose_subtrees() {
+        // chain: root ← 0 ← 1 ← 2 (depth 3 merge hops)
+        let t = ShardTree::from_parents(&[None, Some(0), Some(1)]).unwrap();
+        assert_eq!(t.root_children(), &[0]);
+        assert_eq!(t.children(0), &[1]);
+        assert_eq!(t.children(1), &[2]);
+        assert_eq!(t.depth(), 3);
+        assert_eq!(t.subtree_shards(0), 0..3);
+        assert_eq!(t.subtree_shards(1), 1..3);
+        let plan = ShardPlan::new(6, 3);
+        assert_eq!(t.subtree_clients(&plan, 0), 0..6);
+        assert_eq!(t.subtree_clients(&plan, 1), 2..6);
+        assert_eq!(t.subtree_clients(&plan, 2), 4..6);
+
+        // balanced: root ← {0, 2}; 0 ← 1; 2 ← 3
+        let t = ShardTree::from_parents(&[None, Some(0), None, Some(2)]).unwrap();
+        assert_eq!(t.root_children(), &[0, 2]);
+        assert_eq!(t.children(0), &[1]);
+        assert_eq!(t.children(2), &[3]);
+        assert_eq!(t.depth(), 2);
+        let plan = ShardPlan::new(8, 4);
+        assert_eq!(t.subtree_clients(&plan, 0), 0..4);
+        assert_eq!(t.subtree_clients(&plan, 2), 4..8);
+    }
+
+    #[test]
+    fn invalid_parent_tables_are_rejected() {
+        assert!(ShardTree::from_parents(&[None, Some(1)]).is_err()); // self/forward
+        assert!(ShardTree::from_parents(&[None, None, Some(0)]).is_err()); // non-contiguous
+    }
+
+    #[test]
+    fn mask_frame_bits_matches_a_real_encoded_frame() {
+        for n in [1usize, 8, 64, 1000] {
+            let mask = vec![true; n];
+            let frame = encode_client(
+                &ClientMsg::Mask { round: 7, client: 3, n, mask },
+                MaskCodec::Raw,
+            );
+            assert_eq!(mask_frame_bits(n), frame.len() as u64 * 8, "n = {n}");
+        }
+    }
+}

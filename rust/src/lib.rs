@@ -27,6 +27,9 @@
 //! * [`runtime`] — the persistent worker pool every hot path shares
 //!   (`runtime::pool`, see PERF.md) and, behind the `pjrt` cargo
 //!   feature, PJRT executable loading and typed step wrappers.
+//! * [`testnet`] — multi-process scenario orchestrator (`repro testnet`):
+//!   spawns wire fleets from declarative TOML, applies chaos schedules,
+//!   and byte-compares runs against their in-process twins.
 //! * [`baselines`] — FedAvg, FedPM (Isik et al.), Zhou supermask.
 //! * [`zonotope`] — theory validators for §2 (Lemmas 2.1–2.3, Props 2.4–2.6).
 //! * [`metrics`], [`experiments`], [`config`] — measurement + drivers.
@@ -47,6 +50,7 @@ pub mod nn;
 pub mod rng;
 pub mod runtime;
 pub mod sparse;
+pub mod testnet;
 pub mod util;
 pub mod zampling;
 pub mod zonotope;

@@ -4,8 +4,14 @@
 //!   train-local      — Local Zampling per a TOML config
 //!   train-federated  — Federated Zampling (in-process sim, or TCP leader)
 //!   serve-client     — TCP worker process (connects to a leader)
+//!   serve-shard      — shard-leader process of the wire aggregation tree
+//!                      (leads its own clients, merges child shards,
+//!                      ships one ShardVotes frame upward per round)
 //!   serve-peer       — gossip node process (tiny leader for its
 //!                      topology neighbours + dials the coordinator)
+//!   testnet          — spawn a whole multi-process fleet from one
+//!                      scenario TOML (roles, tree shape, chaos schedule)
+//!                      and byte-compare it against the in-process twin
 //!   experiment       — regenerate a paper table/figure (fig3|fig4|table1|
 //!                      table4|fig5|fig6|dropout|population|theory)
 //!   comm-report      — Table 1 savings ledger for a config
@@ -19,8 +25,8 @@ use std::path::Path;
 use std::process::ExitCode;
 
 use zampling::config::{
-    peer_addresses, shard_addresses, Backend, FedConfig, PolicyKind, TopologyKind, TrainConfig,
-    TransportKind,
+    peer_addresses, shard_addresses, tree_addresses, Backend, FedConfig, PolicyKind, TopologyKind,
+    TrainConfig, TransportKind,
 };
 use zampling::data::Dataset;
 use zampling::experiments::{self, Scale};
@@ -29,6 +35,7 @@ use zampling::federated::protocol::MaskCodec;
 use zampling::federated::transport::{Leader, ShardedTransport, TcpTransport, Worker};
 use zampling::federated::{
     client_round, make_policy, run_federated, run_federated_parallel, RoundEngine, ShardPlan,
+    ShardTree, WireTreeTransport,
 };
 use zampling::metrics::RunLog;
 use zampling::nn::ArchSpec;
@@ -43,7 +50,9 @@ fn main() -> ExitCode {
         Some("train-local") => cmd_train_local(&args),
         Some("train-federated") => cmd_train_federated(&args),
         Some("serve-client") => cmd_serve_client(&args),
+        Some("serve-shard") => cmd_serve_shard(&args),
         Some("serve-peer") => cmd_serve_peer(&args),
+        Some("testnet") => cmd_testnet(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("comm-report") => cmd_comm_report(&args),
         Some("info") => cmd_info(&args),
@@ -65,14 +74,19 @@ fn main() -> ExitCode {
 const USAGE: &str = "usage: repro <subcommand> [options]
   train-local       --config <toml> [--backend pjrt|native] [--eval-samples N]
   train-federated   --config <toml> [--backend ...]
-                    [--transport local|pool|tcp|sharded|gossip-tcp]
+                    [--transport local|pool|tcp|sharded|sharded-wire|gossip-tcp]
                     [--shards S] [--topology complete|ring|star]
                     [--policy uniform|straggler-aware]
                     [--listen host:port] [--eval-every N]
                     [--participation F] [--round-timeout-ms MS]
                     [--round-timeout-max-ms MS]
   serve-client      --addr host:port[,host:port...] --client-id K --config <toml>
+                    [--fail-at-round R]
+  serve-shard       --addr host:port --shard-id S --config <toml>
+                    [--fail-at-round R]
   serve-peer        --addr host:port --node-id K --config <toml>
+                    [--die-after-round R]
+  testnet           --scenario <toml> [--out results/testnet]
   experiment        --id fig3|fig4|table1|table4|fig5|fig6|dropout|population|theory
                     [--scale ci|paper] [--out results/]
   comm-report       --config <toml>
@@ -86,13 +100,21 @@ transports (one RoundEngine drives them all; see federated::engine):
   sharded  this process is the root of S per-shard leaders; shard s listens
            on --listen's port + s (or federated.shard-addrs), workers dial
            their own shard's address (derived from --client-id)
+  sharded-wire  this process is the root of a tree of serve-shard
+           *processes* (federated.tree-parents; flat when empty); shard s
+           leads workers on --listen's port + 1 + s and merges children on
+           port + 1 + shards + s; uniform policy + raw uplink only
   gossip-tcp  decentralized: this process coordinates rounds, each
            serve-peer node (listening on --listen's port + 1 + node-id, or
            federated.peer-addrs) gossips masks with its federated.topology
            neighbours over its own tiny leader
 policies: uniform (paper) | straggler-aware (deprioritize clients that
   keep missing --round-timeout-ms; heartbeats can extend deadlines up
-  to --round-timeout-max-ms)";
+  to --round-timeout-max-ms)
+chaos knobs (testnet schedules map onto these):
+  --fail-at-round R   serve-client / serve-shard exit cleanly the moment
+                      round R's frame arrives, before doing any round work
+  --die-after-round R serve-peer exits right after reporting round R";
 
 fn load_train_config(args: &Args) -> Result<TrainConfig, String> {
     let path = args.get("config").ok_or("missing --config <toml>")?.to_string();
@@ -144,9 +166,12 @@ fn load_fed_config(args: &Args) -> Result<FedConfig, String> {
     // Re-check shard/transport consistency after the CLI overrides: a
     // multi-shard run under a single-leader transport would hang (the
     // root binds one port while workers dial per-shard ports).
-    if cfg.shards > 1 && cfg.transport != TransportKind::Sharded {
+    if cfg.shards > 1
+        && cfg.transport != TransportKind::Sharded
+        && cfg.transport != TransportKind::ShardedWire
+    {
         return Err(format!(
-            "shards = {} requires --transport sharded (got {})",
+            "shards = {} requires --transport sharded or sharded-wire (got {})",
             cfg.shards,
             cfg.transport.as_str()
         ));
@@ -285,12 +310,14 @@ fn cmd_train_federated(args: &Args) -> Result<(), String> {
             let out = run_federated(&cfg, exec.as_mut(), &shards, &test, eval_samples, eval_every);
             print_fed_outcome(&cfg, &out);
             out.log.save(Path::new(&out_dir)).map_err(|e| format!("saving: {e}"))?;
+            save_fed_artifacts(&out_dir, &out)?;
         }
         TransportKind::Pool => {
             println!("[repro] backend: native (parallel client loop)");
             let out = run_federated_parallel(&cfg, &shards, &test, eval_samples, eval_every, 500);
             print_fed_outcome(&cfg, &out);
             out.log.save(Path::new(&out_dir)).map_err(|e| format!("saving: {e}"))?;
+            save_fed_artifacts(&out_dir, &out)?;
         }
         TransportKind::Tcp => {
             run_tcp_leader(&cfg, &listen, &test, eval_samples, eval_every, &out_dir)?
@@ -298,10 +325,31 @@ fn cmd_train_federated(args: &Args) -> Result<(), String> {
         TransportKind::Sharded => {
             run_sharded_leader(&cfg, &listen, &test, eval_samples, eval_every, &out_dir)?
         }
+        TransportKind::ShardedWire => {
+            run_tree_root(&cfg, &listen, &test, eval_samples, eval_every, &out_dir)?
+        }
         TransportKind::GossipTcp => {
             run_gossip_coordinator(&cfg, &listen, &test, eval_samples, eval_every, &out_dir)?
         }
     }
+    Ok(())
+}
+
+/// Write the byte-comparable run artifacts every federated driver
+/// produces: `final_probs.bin` (the aggregated `p`, little-endian f32s)
+/// and `ledger.csv` (the sectioned comm ledger, wall-clock excluded).
+/// `repro testnet` diffs these files against the in-process twin's.
+fn save_fed_artifacts(out_dir: &str, out: &zampling::federated::FedOutcome) -> Result<(), String> {
+    let dir = Path::new(out_dir);
+    std::fs::create_dir_all(dir).map_err(|e| format!("creating {out_dir}: {e}"))?;
+    let mut probs = Vec::with_capacity(out.final_probs.len() * 4);
+    for p in &out.final_probs {
+        probs.extend_from_slice(&p.to_le_bytes());
+    }
+    std::fs::write(dir.join("final_probs.bin"), probs)
+        .map_err(|e| format!("writing final_probs.bin: {e}"))?;
+    std::fs::write(dir.join("ledger.csv"), out.ledger.to_csv())
+        .map_err(|e| format!("writing ledger.csv: {e}"))?;
     Ok(())
 }
 
@@ -398,6 +446,7 @@ fn run_tcp_leader(
         transport.leader.recv_bytes / 1024
     );
     out.log.save(Path::new(out_dir)).map_err(|e| format!("saving: {e}"))?;
+    save_fed_artifacts(out_dir, &out)?;
     Ok(())
 }
 
@@ -481,6 +530,132 @@ fn run_sharded_leader(
         );
     }
     out.log.save(Path::new(out_dir)).map_err(|e| format!("saving: {e}"))?;
+    save_fed_artifacts(out_dir, &out)?;
+    Ok(())
+}
+
+/// Wire-tree root: the [`RoundEngine`] over a
+/// [`WireTreeTransport`] — one merge link per direct child of the root,
+/// each a `serve-shard` process aggregating its whole subtree (flat
+/// tree = the sharded topology with leaders promoted to processes; see
+/// `federated::tree`).
+fn run_tree_root(
+    cfg: &FedConfig,
+    listen: &str,
+    test: &Dataset,
+    eval_samples: usize,
+    eval_every: usize,
+    out_dir: &str,
+) -> Result<(), String> {
+    use std::sync::Arc;
+    use zampling::sparse::QMatrix;
+
+    let tree = ShardTree::from_cfg(cfg).map_err(|e| format!("{e:#}"))?;
+    let addrs = tree_addresses(listen, cfg.shards)?;
+    println!(
+        "[repro] tree root on {listen}: {} shard(s), depth {}, direct children {:?}",
+        cfg.shards,
+        tree.depth(),
+        tree.root_children()
+    );
+    for s in 0..cfg.shards {
+        println!("[repro] shard {s}: workers at {}, merges at {}", addrs.workers[s], addrs.merges[s]);
+    }
+    let exec = make_executor(&cfg.train)?;
+    let mut transport = WireTreeTransport::accept(listen, cfg, exec).map_err(|e| format!("{e:#}"))?;
+
+    let seeds = SeedTree::new(cfg.train.seed);
+    let q = Arc::new(QMatrix::generate(&cfg.train.arch, cfg.train.n, cfg.train.d, &seeds));
+    let mut init_rng = seeds.rng("p-init", 0);
+    let p0 = ProbVector::init_uniform(cfg.train.n, &mut init_rng).probs().to_vec();
+
+    let engine = RoundEngine::new(
+        cfg,
+        cfg.clients,
+        Arc::clone(&q),
+        p0,
+        test,
+        eval_samples,
+        eval_every,
+        "federated_sharded",
+    )
+    .verbose(true);
+    let mut policy = make_policy(cfg.policy);
+    let out = engine.run(&mut transport, policy.as_mut()).map_err(|e| format!("{e:#}"))?;
+
+    let rep = out.ledger.savings(cfg.train.arch.num_params());
+    println!(
+        "savings: client {:.1}x server {:.1}x; {} client-drops over {} rounds; merge traffic {} KiB",
+        rep.client_savings,
+        rep.server_savings,
+        out.ledger.total_dropped(),
+        cfg.rounds,
+        out.ledger.total_merge_bits() / 8 / 1024
+    );
+    print_throughput(&out.ledger);
+    for (s, (up, down, merge, received, dropped)) in
+        out.ledger.shard_totals().into_iter().enumerate()
+    {
+        println!(
+            "subtree {s}: up {} KiB  down {} KiB  merge {} KiB  received {received}  dropped {dropped}",
+            up / 8 / 1024,
+            down / 8 / 1024,
+            merge / 8 / 1024
+        );
+    }
+    out.log.save(Path::new(out_dir)).map_err(|e| format!("saving: {e}"))?;
+    save_fed_artifacts(out_dir, &out)?;
+    Ok(())
+}
+
+/// Shard-leader process of the wire aggregation tree (`repro
+/// serve-shard`): leads the clients its `ShardPlan` range owns, merges
+/// its child shards' `ShardVotes` frames into its own vote sum, and
+/// ships one frame upward per round.  `--fail-at-round R` is the chaos
+/// knob the testnet harness drives: exit cleanly the moment round `R`'s
+/// frame arrives, before any round work, so the subtree's death is
+/// deterministic.
+fn cmd_serve_shard(args: &Args) -> Result<(), String> {
+    let base = args
+        .get("addr")
+        .ok_or("missing --addr host:port (the tree root's --listen address)")?
+        .to_string();
+    let shard_id = args.usize_or("shard-id", usize::MAX);
+    if shard_id == usize::MAX {
+        return Err("missing --shard-id".into());
+    }
+    let fail_at_round = parse_round_arg(args, "fail-at-round")?;
+    let cfg = load_fed_config(args)?;
+    args.reject_unknown()?;
+    if cfg.transport != TransportKind::ShardedWire {
+        return Err(format!(
+            "serve-shard needs transport = sharded-wire (got {})",
+            cfg.transport.as_str()
+        ));
+    }
+    zampling::federated::serve_shard(&cfg, shard_id, &base, fail_at_round)
+        .map_err(|e| format!("{e:#}"))
+}
+
+/// Parse an optional `--<key> R` round-number chaos knob.
+fn parse_round_arg(args: &Args, key: &str) -> Result<Option<u32>, String> {
+    match args.get(key) {
+        None => Ok(None),
+        Some(v) => v.parse::<u32>().map(Some).map_err(|_| format!("bad --{key} '{v}'")),
+    }
+}
+
+/// `repro testnet` — spawn a whole multi-process fleet from one scenario
+/// TOML and (per the scenario's `compare` mode) byte-check the wire run
+/// against its in-process twin.  All the machinery lives in
+/// [`zampling::testnet`]; this is just argument plumbing.
+fn cmd_testnet(args: &Args) -> Result<(), String> {
+    let scenario = args.get("scenario").ok_or("missing --scenario <toml>")?.to_string();
+    let out = args.str_or("out", "results/testnet");
+    args.reject_unknown()?;
+    let report = zampling::testnet::run_scenario(Path::new(&scenario), Path::new(&out))
+        .map_err(|e| format!("{e:#}"))?;
+    println!("{report}");
     Ok(())
 }
 
@@ -536,6 +711,7 @@ fn run_gossip_coordinator(
         println!("peer {i}: sent {} KiB  received {} KiB", sent / 8 / 1024, recv / 8 / 1024);
     }
     out.log.save(Path::new(out_dir)).map_err(|e| format!("saving: {e}"))?;
+    save_fed_artifacts(out_dir, &out)?;
     Ok(())
 }
 
@@ -553,6 +729,7 @@ fn cmd_serve_peer(args: &Args) -> Result<(), String> {
     if node_id == usize::MAX {
         return Err("missing --node-id".into());
     }
+    let die_after_round = parse_round_arg(args, "die-after-round")?;
     let cfg = load_fed_config(args)?;
     args.reject_unknown()?;
 
@@ -577,8 +754,18 @@ fn cmd_serve_peer(args: &Args) -> Result<(), String> {
     println!("[peer {node_id}] shard rows: {}", shard.len());
 
     let mut exec = make_executor(&cfg.train)?;
-    run_peer(&cfg, &topo, node_id, listener, &peer_addrs, &base, exec.as_mut(), &shard, None)
-        .map_err(|e| format!("{e:#}"))?;
+    run_peer(
+        &cfg,
+        &topo,
+        node_id,
+        listener,
+        &peer_addrs,
+        &base,
+        exec.as_mut(),
+        &shard,
+        die_after_round,
+    )
+    .map_err(|e| format!("{e:#}"))?;
     println!("[peer {node_id}] shutdown");
     Ok(())
 }
@@ -588,7 +775,7 @@ fn cmd_serve_peer(args: &Args) -> Result<(), String> {
 /// shard leader's address from the shared config and its client id).
 fn cmd_serve_client(args: &Args) -> Result<(), String> {
     use std::sync::Arc;
-    use zampling::federated::protocol::{peek_server_frame, ServerFrameKind};
+    use zampling::federated::protocol::{decode_server, peek_server_frame, ServerFrameKind, ServerMsg};
     use zampling::sparse::QMatrix;
 
     let addr_arg = args.get("addr").ok_or("missing --addr host:port")?.to_string();
@@ -596,6 +783,7 @@ fn cmd_serve_client(args: &Args) -> Result<(), String> {
     if client_id == usize::MAX {
         return Err("missing --client-id".into());
     }
+    let fail_at_round = parse_round_arg(args, "fail-at-round")?;
     let cfg = load_fed_config(args)?;
     args.reject_unknown()?;
 
@@ -612,13 +800,19 @@ fn cmd_serve_client(args: &Args) -> Result<(), String> {
     if parts.is_empty() {
         return Err("empty --addr".into());
     }
-    let explicit: &[String] = if parts.len() > 1 { &parts } else { &cfg.shard_addrs };
-    let addrs = shard_addresses(&parts[0], explicit, cfg.shards)?;
     if client_id >= cfg.clients {
         return Err(format!("client-id {client_id} ≥ clients {}", cfg.clients));
     }
     let owner = ShardPlan::new(cfg.clients, cfg.shards).owner(client_id);
-    let addr = addrs[owner].clone();
+    // Under the wire tree the worker-facing ports live in the tree
+    // address plan (shard s leads workers on base + 1 + s); otherwise
+    // the flat sharded rule applies.
+    let addr = if cfg.transport == TransportKind::ShardedWire {
+        tree_addresses(&parts[0], cfg.shards)?.workers[owner].clone()
+    } else {
+        let explicit: &[String] = if parts.len() > 1 { &parts } else { &cfg.shard_addrs };
+        shard_addresses(&parts[0], explicit, cfg.shards)?[owner].clone()
+    };
     if cfg.shards > 1 {
         println!("[worker {client_id}] shard {owner} leader at {addr}");
     }
@@ -642,8 +836,12 @@ fn cmd_serve_client(args: &Args) -> Result<(), String> {
     let mut exec = make_executor(&cfg.train)?;
 
     let codec = if cfg.entropy_code_uplink { MaskCodec::Arithmetic } else { MaskCodec::Raw };
+    // Retry the dial: under testnet the fleet spawns workers and
+    // leaders concurrently (and respawns restarted workers), so the
+    // leader's listener may come up after this process does.
     let mut worker =
-        Worker::connect(&addr, client_id as u32, codec).map_err(|e| format!("{e:#}"))?;
+        Worker::connect_retry(&addr, client_id as u32, codec, std::time::Duration::from_secs(30))
+            .map_err(|e| format!("{e:#}"))?;
     loop {
         // The raw frame feeds the *same* `client_round` body the
         // in-process simulators run, so every transport trains
@@ -652,6 +850,20 @@ fn cmd_serve_client(args: &Args) -> Result<(), String> {
         let frame = worker.recv_raw().map_err(|e| format!("{e:#}"))?;
         match peek_server_frame(&frame).map_err(|e| format!("{e:#}"))? {
             ServerFrameKind::Round => {
+                // Chaos schedule: exit cleanly the moment the doomed
+                // round's frame arrives, before doing any round work —
+                // the leader sees a dead connection and drops us.
+                if let Some(fail_round) = fail_at_round {
+                    let ServerMsg::Round { round, .. } =
+                        decode_server(&frame).map_err(|e| format!("{e:#}"))?
+                    else {
+                        return Err(format!("worker {client_id}: peeked Round, decoded non-Round"));
+                    };
+                    if round == fail_round {
+                        println!("[worker {client_id}] failing at round {round} (chaos schedule)");
+                        return Ok(());
+                    }
+                }
                 // Between local epochs the worker heartbeats, so a
                 // leader running with a deadline cap can tell "slow but
                 // alive" from "dead" and extend the round deadline.  A

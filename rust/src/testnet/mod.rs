@@ -1,0 +1,937 @@
+//! Multi-process test fleets from declarative scenario files
+//! (`repro testnet --scenario configs/testnet/<name>.toml`).
+//!
+//! A scenario describes one wire-transport run end to end: which
+//! federated config to use, where the root listens, which processes to
+//! kill when (the chaos schedule), and how strictly the finished run
+//! must match its **in-process twin** — the simulator transport that
+//! produces byte-identical results by construction
+//! (`ShardedSimTransport` and friends in `federated::sim`).  The
+//! orchestrator spawns the whole fleet (root + `serve-shard` +
+//! `serve-client` / `serve-peer` processes) from the current `repro`
+//! binary, collects every process's log under
+//! `<out>/<scenario-name>/`, waits for the root, and then replays the
+//! same run in process to diff `final_probs.bin` and `ledger.csv`.
+//!
+//! Scenario TOML schema (see `docs/TESTNET.md` for the full story):
+//!
+//! ```toml
+//! [scenario]
+//! name         = "tree-depth2"         # output directory name
+//! config       = "fed_tree_depth2.toml" # relative to the scenario file
+//! listen       = "127.0.0.1:7757"      # root bind address (port plan base)
+//! timeout-secs = 120                   # whole-scenario wall clock cap
+//! compare      = "full"                # full | rounds | probs | none
+//! chaos        = ["kill-shard:1@2"]    # optional kill/restart schedule
+//! expect-log   = ["shard-1:merge"]     # optional "<log>:<substring>" greps
+//! ```
+//!
+//! Chaos grammar — each entry maps onto one process's chaos flag:
+//!
+//! * `kill-shard:S@R` — shard leader `S` exits cleanly the moment round
+//!   `R`'s frame arrives (`serve-shard --fail-at-round R`); its whole
+//!   subtree goes dark for the rest of the run and the root
+//!   renormalizes over the survivors.
+//! * `kill-client:K@R` — worker `K` exits at round `R`
+//!   (`serve-client --fail-at-round R`).  Append `+restart` and the
+//!   orchestrator respawns the worker (without the flag) as soon as it
+//!   observes the exit; the fresh process re-derives all state from the
+//!   shared seed and rejoins via the leader's reconnect path.
+//! * `kill-peer:I@R` — gossip node `I` exits right after reporting
+//!   round `R` (`serve-peer --die-after-round R`).
+//!
+//! Compare modes, strongest first:
+//!
+//! * `full`   — `ledger.csv` and `final_probs.bin` byte-equal to the twin.
+//! * `rounds` — the per-round ledger section and `final_probs.bin`
+//!   byte-equal (per-shard rows may legitimately differ: at tree depth
+//!   ≥ 3 the root bills per-direct-child *subtree* totals, while the
+//!   flat simulator bills per leaf shard).
+//! * `probs`  — `final_probs.bin` only (used where drop billing depends
+//!   on reconnect timing, e.g. kill-and-restart).
+//! * `none`   — completion only (gossip has no centralized twin ledger).
+//!
+//! The kill-and-restart twin replays the *observed* drop schedule: the
+//! exact rounds a client missed depend on reconnect timing, so the
+//! orchestrator parses the root's verbose `round R  dropped clients
+//! [..]` lines and hands them to `run_federated_with_drop_schedule`,
+//! which resets the replayed client exactly like the real restart does.
+//!
+//! Every child is armed with `PR_SET_PDEATHSIG` (SIGKILL on orchestrator
+//! death) *and* tracked in a `Fleet` guard whose `Drop` kills and reaps the
+//! whole fleet — a failing or panicking scenario cannot leak processes.
+//! Spawned pids are appended to `<out>/<name>/pids.txt` so tests can
+//! assert the reaping from outside.
+
+use std::fs::{self, OpenOptions};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use crate::config::{FedConfig, TransportKind};
+use crate::data::Dataset;
+use crate::federated::{
+    run_federated, run_federated_sharded_outages, run_federated_with_drop_schedule, FedOutcome,
+};
+use crate::rng::SeedTree;
+use crate::util::error::{Context, Result};
+use crate::util::toml::TomlDoc;
+use crate::zampling::NativeExecutor;
+use crate::{anyhow, bail, ensure};
+
+/// How often the orchestrator polls the fleet for exits and respawns.
+const POLL_INTERVAL: Duration = Duration::from_millis(20);
+
+/// Grace period after a successful root exit for the rest of the fleet
+/// to drain (workers exit on the `Shutdown` frame); stragglers are
+/// killed and reported, not failed.
+const DRAIN_GRACE: Duration = Duration::from_secs(10);
+
+/// How strictly the wire run must match its in-process twin.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CompareMode {
+    /// `ledger.csv` + `final_probs.bin` byte-equal.
+    Full,
+    /// Per-round ledger section + `final_probs.bin` byte-equal.
+    Rounds,
+    /// `final_probs.bin` byte-equal only.
+    Probs,
+    /// Completion only — no twin run.
+    None,
+}
+
+impl CompareMode {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "full" => Ok(CompareMode::Full),
+            "rounds" => Ok(CompareMode::Rounds),
+            "probs" => Ok(CompareMode::Probs),
+            "none" => Ok(CompareMode::None),
+            other => Err(anyhow!("unknown compare mode '{other}' (full|rounds|probs|none)")),
+        }
+    }
+
+    fn as_str(self) -> &'static str {
+        match self {
+            CompareMode::Full => "full",
+            CompareMode::Rounds => "rounds",
+            CompareMode::Probs => "probs",
+            CompareMode::None => "none",
+        }
+    }
+}
+
+/// One entry of a scenario's kill/restart schedule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChaosEvent {
+    /// `kill-shard:S@R` — shard leader `S` exits when round `R` arrives.
+    KillShard {
+        /// Shard id of the doomed `serve-shard` process.
+        shard: usize,
+        /// Round whose arrival triggers the exit.
+        round: u32,
+    },
+    /// `kill-client:K@R[+restart]` — worker `K` exits at round `R`.
+    KillClient {
+        /// Client id of the doomed `serve-client` process.
+        client: usize,
+        /// Round whose arrival triggers the exit.
+        round: u32,
+        /// Respawn the worker (without the chaos flag) once its exit is
+        /// observed.
+        restart: bool,
+    },
+    /// `kill-peer:I@R` — gossip node `I` exits after reporting round `R`.
+    KillPeer {
+        /// Node id of the doomed `serve-peer` process.
+        peer: usize,
+        /// Last round the peer reports before exiting.
+        round: u32,
+    },
+}
+
+impl ChaosEvent {
+    /// Parse one chaos spec string (the grammar in the module docs).
+    pub fn parse(spec: &str) -> Result<Self> {
+        let (kind, rest) =
+            spec.split_once(':').ok_or_else(|| anyhow!("chaos '{spec}': missing ':'"))?;
+        let (id_s, round_s) =
+            rest.split_once('@').ok_or_else(|| anyhow!("chaos '{spec}': missing '@round'"))?;
+        let restart = round_s.ends_with("+restart");
+        let round_s = round_s.trim_end_matches("+restart");
+        let id: usize =
+            id_s.parse().map_err(|_| anyhow!("chaos '{spec}': bad id '{id_s}'"))?;
+        let round: u32 =
+            round_s.parse().map_err(|_| anyhow!("chaos '{spec}': bad round '{round_s}'"))?;
+        match kind {
+            "kill-shard" if !restart => Ok(ChaosEvent::KillShard { shard: id, round }),
+            "kill-client" => Ok(ChaosEvent::KillClient { client: id, round, restart }),
+            "kill-peer" if !restart => Ok(ChaosEvent::KillPeer { peer: id, round }),
+            _ => Err(anyhow!(
+                "chaos '{spec}': unknown kind '{kind}' \
+                 (kill-shard:S@R | kill-client:K@R[+restart] | kill-peer:I@R)"
+            )),
+        }
+    }
+}
+
+/// A parsed scenario file.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    /// Scenario name — the per-scenario output directory under `--out`.
+    pub name: String,
+    /// Resolved path of the federated config every process loads.
+    pub config: PathBuf,
+    /// Root bind address; every other port derives from it.
+    pub listen: String,
+    /// Whole-scenario wall-clock cap; overrunning it kills the fleet
+    /// and fails the scenario.
+    pub timeout: Duration,
+    /// How strictly to diff the run against the in-process twin.
+    pub compare: CompareMode,
+    /// Kill/restart schedule.
+    pub chaos: Vec<ChaosEvent>,
+    /// Post-run log greps, each `"<log-name>:<substring>"` (e.g.
+    /// `"shard-1:merge"` checks `shard-1.log`).
+    pub expect_log: Vec<(String, String)>,
+}
+
+const SCENARIO_KEYS: &[&str] = &[
+    "scenario.name",
+    "scenario.config",
+    "scenario.listen",
+    "scenario.timeout-secs",
+    "scenario.compare",
+    "scenario.chaos",
+    "scenario.expect-log",
+];
+
+fn str_array(doc: &TomlDoc, key: &str) -> Result<Vec<String>> {
+    let Some(v) = doc.get(key) else { return Ok(Vec::new()) };
+    let arr = v.as_arr().ok_or_else(|| anyhow!("{key} must be an array of strings"))?;
+    arr.iter()
+        .map(|e| {
+            e.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("{key} must be an array of strings"))
+        })
+        .collect()
+}
+
+impl Scenario {
+    /// Parse a scenario document; relative `config` paths resolve
+    /// against `base` (the scenario file's directory).
+    pub fn from_doc(doc: &TomlDoc, base: &Path) -> Result<Self> {
+        doc.check_known_keys(SCENARIO_KEYS).map_err(|e| anyhow!("{e}"))?;
+        let name = doc.str_or("scenario.name", "");
+        ensure!(!name.is_empty(), "scenario.name is required");
+        ensure!(
+            name.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_'),
+            "scenario.name '{name}' must be [a-zA-Z0-9_-] (it becomes a directory)"
+        );
+        let config_raw = doc.str_or("scenario.config", "");
+        ensure!(!config_raw.is_empty(), "scenario.config is required");
+        let config_path = Path::new(&config_raw);
+        let config =
+            if config_path.is_absolute() { config_path.into() } else { base.join(config_path) };
+        let listen = doc.str_or("scenario.listen", "");
+        ensure!(!listen.is_empty(), "scenario.listen is required");
+        let timeout = Duration::from_secs(doc.usize_or("scenario.timeout-secs", 120) as u64);
+        ensure!(!timeout.is_zero(), "scenario.timeout-secs must be > 0");
+        let compare = CompareMode::parse(&doc.str_or("scenario.compare", "full"))?;
+        let chaos = str_array(doc, "scenario.chaos")?
+            .iter()
+            .map(|s| ChaosEvent::parse(s))
+            .collect::<Result<Vec<_>>>()?;
+        let expect_log = str_array(doc, "scenario.expect-log")?
+            .iter()
+            .map(|s| {
+                s.split_once(':')
+                    .map(|(f, n)| (f.to_string(), n.to_string()))
+                    .ok_or_else(|| anyhow!("expect-log '{s}': want '<log-name>:<substring>'"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Scenario { name, config, listen, timeout, compare, chaos, expect_log })
+    }
+
+    /// Load and parse a scenario file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let doc = TomlDoc::load(path).map_err(|e| anyhow!("{e}"))?;
+        let base = path.parent().unwrap_or(Path::new("."));
+        Self::from_doc(&doc, base)
+    }
+
+    /// Chaos entries must name processes the transport actually spawns
+    /// and ids/rounds inside the config's ranges — a typo'd schedule
+    /// silently testing nothing is worse than an error.
+    fn validate_chaos(&self, cfg: &FedConfig) -> Result<()> {
+        for ev in &self.chaos {
+            match *ev {
+                ChaosEvent::KillShard { shard, round } => {
+                    ensure!(
+                        cfg.transport == TransportKind::ShardedWire,
+                        "kill-shard needs transport sharded-wire (shard leaders are \
+                         in-process threads elsewhere)"
+                    );
+                    ensure!(shard < cfg.shards, "kill-shard: shard {shard} ≥ {}", cfg.shards);
+                    ensure!(
+                        (round as usize) < cfg.rounds,
+                        "kill-shard: round {round} ≥ {}",
+                        cfg.rounds
+                    );
+                }
+                ChaosEvent::KillClient { client, round, .. } => {
+                    ensure!(
+                        cfg.transport == TransportKind::Tcp,
+                        "kill-client is only supported under transport tcp (the drop-schedule \
+                         twin replays single-leader logs)"
+                    );
+                    ensure!(client < cfg.clients, "kill-client: client {client} ≥ {}", cfg.clients);
+                    ensure!(
+                        (round as usize) < cfg.rounds,
+                        "kill-client: round {round} ≥ {}",
+                        cfg.rounds
+                    );
+                }
+                ChaosEvent::KillPeer { peer, round } => {
+                    ensure!(
+                        cfg.transport == TransportKind::GossipTcp,
+                        "kill-peer needs transport gossip-tcp"
+                    );
+                    ensure!(peer < cfg.clients, "kill-peer: peer {peer} ≥ {}", cfg.clients);
+                    ensure!(
+                        (round as usize) < cfg.rounds,
+                        "kill-peer: round {round} ≥ {}",
+                        cfg.rounds
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One spawned fleet member.
+struct Proc {
+    name: String,
+    child: Child,
+    /// `Some(args)` = respawn with these args when the exit is observed
+    /// (the `+restart` chaos flavor); taken on use so it fires once.
+    respawn: Option<Vec<String>>,
+}
+
+/// The spawned processes of one scenario run.  Dropping the fleet —
+/// normally, on error, or during a panic unwind — kills and reaps every
+/// child; `PR_SET_PDEATHSIG` covers even SIGKILL of the orchestrator.
+struct Fleet {
+    dir: PathBuf,
+    exe: PathBuf,
+    procs: Vec<Proc>,
+}
+
+impl Fleet {
+    fn new(dir: PathBuf) -> Result<Self> {
+        let exe = std::env::current_exe().context("locating the repro binary")?;
+        Ok(Fleet { dir, exe, procs: Vec::new() })
+    }
+
+    /// Spawn one `repro` child with stdout+stderr appended to
+    /// `<dir>/<name>.log` and its pid recorded in `<dir>/pids.txt`.
+    fn spawn(&mut self, name: &str, args: &[String], respawn: Option<Vec<String>>) -> Result<()> {
+        let log_path = self.dir.join(format!("{name}.log"));
+        let log = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&log_path)
+            .with_context(|| format!("opening {}", log_path.display()))?;
+        let err_log = log.try_clone().context("cloning log handle")?;
+        let mut cmd = Command::new(&self.exe);
+        cmd.args(args).stdin(Stdio::null()).stdout(Stdio::from(log)).stderr(Stdio::from(err_log));
+        arm_pdeathsig(&mut cmd);
+        let child = cmd.spawn().with_context(|| format!("spawning {name}"))?;
+        let pids_path = self.dir.join("pids.txt");
+        let mut pids = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&pids_path)
+            .with_context(|| format!("opening {}", pids_path.display()))?;
+        writeln!(pids, "{} {name}", child.id())
+            .with_context(|| format!("writing {}", pids_path.display()))?;
+        self.procs.push(Proc { name: name.to_string(), child, respawn });
+        Ok(())
+    }
+
+    /// Poll the fleet until the root (always `procs[0]`) exits.  Fires
+    /// pending respawns along the way; a nonzero root exit or blowing
+    /// `timeout` fails the scenario (the `Drop` reaps everything).
+    fn drive(&mut self, timeout: Duration) -> Result<()> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let mut respawns = Vec::new();
+            for p in &mut self.procs {
+                if p.child.try_wait().ok().flatten().is_some() {
+                    if let Some(args) = p.respawn.take() {
+                        respawns.push((format!("{}-restart", p.name), args));
+                    }
+                }
+            }
+            for (name, args) in respawns {
+                self.spawn(&name, &args, None)?;
+            }
+            if let Some(status) = self.procs[0].child.try_wait().context("waiting on root")? {
+                if status.success() {
+                    return Ok(());
+                }
+                bail!(
+                    "root exited with {status}; last lines of root.log:\n{}",
+                    tail(&self.dir.join("root.log"), 15)
+                );
+            }
+            if Instant::now() > deadline {
+                bail!("scenario timed out after {}s (fleet killed)", timeout.as_secs());
+            }
+            std::thread::sleep(POLL_INTERVAL);
+        }
+    }
+
+    /// After a successful root exit, give the rest of the fleet a grace
+    /// period to drain on the `Shutdown` frames, then kill stragglers.
+    /// Returns the names of anything that had to be killed.
+    fn drain(&mut self, grace: Duration) -> Vec<String> {
+        let deadline = Instant::now() + grace;
+        loop {
+            let mut alive = Vec::new();
+            for p in &mut self.procs {
+                if matches!(p.child.try_wait(), Ok(None)) {
+                    alive.push(p.name.clone());
+                }
+            }
+            if alive.is_empty() {
+                return Vec::new();
+            }
+            if Instant::now() > deadline {
+                for p in &mut self.procs {
+                    let _ = p.child.kill();
+                }
+                return alive;
+            }
+            std::thread::sleep(POLL_INTERVAL);
+        }
+    }
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        for p in &mut self.procs {
+            let _ = p.child.kill();
+        }
+        for p in &mut self.procs {
+            let _ = p.child.wait();
+        }
+    }
+}
+
+/// Arm a child so the kernel SIGKILLs it if the orchestrator dies —
+/// the backstop for orchestrator SIGKILL, where `Fleet::drop` never
+/// runs.  (`prctl` is declared by hand; the crate is dependency-free.)
+#[cfg(target_os = "linux")]
+fn arm_pdeathsig(cmd: &mut Command) {
+    use std::os::unix::process::CommandExt;
+    extern "C" {
+        fn prctl(option: i32, arg2: u64, arg3: u64, arg4: u64, arg5: u64) -> i32;
+    }
+    const PR_SET_PDEATHSIG: i32 = 1;
+    const SIGKILL: u64 = 9;
+    // SAFETY: `pre_exec` runs after fork, before exec, in the child;
+    // the closure only makes the `prctl` syscall, which is
+    // async-signal-safe and touches no parent state.
+    unsafe {
+        cmd.pre_exec(|| {
+            // SAFETY: plain value-argument syscall wrapper, no pointers.
+            let rc = unsafe { prctl(PR_SET_PDEATHSIG, SIGKILL, 0, 0, 0) };
+            if rc != 0 {
+                return Err(std::io::Error::last_os_error());
+            }
+            Ok(())
+        });
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+fn arm_pdeathsig(_cmd: &mut Command) {}
+
+/// Last `n` lines of a log file (best effort, for error messages).
+fn tail(path: &Path, n: usize) -> String {
+    let text = fs::read_to_string(path).unwrap_or_default();
+    let lines: Vec<&str> = text.lines().collect();
+    let start = lines.len().saturating_sub(n);
+    lines[start..].join("\n")
+}
+
+/// The chaos flags one process spawns with.
+fn chaos_flags(chaos: &[ChaosEvent], role: &ChaosRole) -> Vec<String> {
+    for ev in chaos {
+        match (*ev, role) {
+            (ChaosEvent::KillShard { shard, round }, ChaosRole::Shard(s)) if shard == *s => {
+                return vec!["--fail-at-round".into(), round.to_string()];
+            }
+            (ChaosEvent::KillClient { client, round, .. }, ChaosRole::Client(k))
+                if client == *k =>
+            {
+                return vec!["--fail-at-round".into(), round.to_string()];
+            }
+            (ChaosEvent::KillPeer { peer, round }, ChaosRole::Peer(i)) if peer == *i => {
+                return vec!["--die-after-round".into(), round.to_string()];
+            }
+            _ => {}
+        }
+    }
+    Vec::new()
+}
+
+enum ChaosRole {
+    Shard(usize),
+    Client(usize),
+    Peer(usize),
+}
+
+/// Does this client's chaos entry ask for a respawn?
+fn wants_restart(chaos: &[ChaosEvent], client: usize) -> bool {
+    chaos.iter().any(|ev| match *ev {
+        ChaosEvent::KillClient { client: c, restart, .. } => c == client && restart,
+        _ => false,
+    })
+}
+
+/// Owned argv from a borrowed slice (the expected `&[&str]` type makes
+/// every element a coercion site, so `&String` members just work).
+fn argv(parts: &[&str]) -> Vec<String> {
+    parts.iter().map(|s| s.to_string()).collect()
+}
+
+/// Run one scenario end to end; returns a human-readable pass report.
+/// Any failure — spawn error, timeout, nonzero root, missing expected
+/// log line, twin divergence — returns `Err` with the fleet reaped.
+pub fn run_scenario(scenario_path: &Path, out_root: &Path) -> Result<String> {
+    let scn = Scenario::load(scenario_path)?;
+    let doc = TomlDoc::load(&scn.config).map_err(|e| anyhow!("{e}"))?;
+    let cfg = FedConfig::from_toml(&doc).map_err(|e| anyhow!("{}: {e}", scn.config.display()))?;
+    ensure!(
+        matches!(
+            cfg.transport,
+            TransportKind::Tcp
+                | TransportKind::Sharded
+                | TransportKind::ShardedWire
+                | TransportKind::GossipTcp
+        ),
+        "scenario '{}': transport {} spawns no processes — use the in-process drivers directly",
+        scn.name,
+        cfg.transport.as_str()
+    );
+    scn.validate_chaos(&cfg)?;
+
+    let out_dir = out_root.join(&scn.name);
+    fs::create_dir_all(&out_dir)
+        .with_context(|| format!("creating {}", out_dir.display()))?;
+    // Stale logs/pids from a previous run would poison the drop-schedule
+    // parse and the reap assertions.
+    for entry in fs::read_dir(&out_dir).with_context(|| format!("listing {}", out_dir.display()))?
+    {
+        let p = entry.context("reading out dir entry")?.path();
+        if p.extension().is_some_and(|e| e == "log") || p.ends_with("pids.txt") {
+            let _ = fs::remove_file(&p);
+        }
+    }
+    let config_arg = scn
+        .config
+        .canonicalize()
+        .with_context(|| format!("resolving {}", scn.config.display()))?
+        .display()
+        .to_string();
+
+    let mut fleet = Fleet::new(out_dir.clone())?;
+    let root_out = out_dir.join("root").display().to_string();
+    let root_args = argv(&[
+        "train-federated",
+        "--config",
+        &config_arg,
+        "--listen",
+        &scn.listen,
+        "--out",
+        &root_out,
+        "--eval-samples",
+        "2",
+    ]);
+    fleet.spawn("root", &root_args, None)?;
+
+    // Every non-root role dials with retry, so spawn order is free; we
+    // still go top-down (shard leaders before workers) to keep startup
+    // fast.
+    if cfg.transport == TransportKind::ShardedWire {
+        for s in 0..cfg.shards {
+            let sid = s.to_string();
+            let mut args = argv(&[
+                "serve-shard",
+                "--addr",
+                &scn.listen,
+                "--shard-id",
+                &sid,
+                "--config",
+                &config_arg,
+            ]);
+            args.extend(chaos_flags(&scn.chaos, &ChaosRole::Shard(s)));
+            fleet.spawn(&format!("shard-{s}"), &args, None)?;
+        }
+    }
+    match cfg.transport {
+        TransportKind::Tcp | TransportKind::Sharded | TransportKind::ShardedWire => {
+            for k in 0..cfg.clients {
+                let kid = k.to_string();
+                let base = argv(&[
+                    "serve-client",
+                    "--addr",
+                    &scn.listen,
+                    "--client-id",
+                    &kid,
+                    "--config",
+                    &config_arg,
+                ]);
+                let mut args = base.clone();
+                args.extend(chaos_flags(&scn.chaos, &ChaosRole::Client(k)));
+                let respawn = wants_restart(&scn.chaos, k).then_some(base);
+                fleet.spawn(&format!("worker-{k}"), &args, respawn)?;
+            }
+        }
+        TransportKind::GossipTcp => {
+            for i in 0..cfg.clients {
+                let nid = i.to_string();
+                let mut args = argv(&[
+                    "serve-peer",
+                    "--addr",
+                    &scn.listen,
+                    "--node-id",
+                    &nid,
+                    "--config",
+                    &config_arg,
+                ]);
+                args.extend(chaos_flags(&scn.chaos, &ChaosRole::Peer(i)));
+                fleet.spawn(&format!("peer-{i}"), &args, None)?;
+            }
+        }
+        _ => {}
+    }
+
+    let spawned = fleet.procs.len();
+    fleet.drive(scn.timeout)?;
+    let killed = fleet.drain(DRAIN_GRACE);
+    drop(fleet); // reap everything before reading logs
+
+    let mut report = vec![format!(
+        "scenario {}: root completed ({spawned} processes, compare={})",
+        scn.name,
+        scn.compare.as_str()
+    )];
+    if !killed.is_empty() {
+        report.push(format!("  note: killed stragglers after root exit: {}", killed.join(", ")));
+    }
+
+    for (log_name, needle) in &scn.expect_log {
+        let path = out_dir.join(format!("{log_name}.log"));
+        let text =
+            fs::read_to_string(&path).with_context(|| format!("reading {}", path.display()))?;
+        ensure!(
+            text.contains(needle),
+            "expected '{needle}' in {log_name}.log — not found"
+        );
+        report.push(format!("  expect-log {log_name}:'{needle}' ok"));
+    }
+
+    if let Some(twin) = run_twin(&cfg, &scn, &out_dir)? {
+        compare_artifacts(scn.compare, &out_dir, &twin, &mut report)?;
+    }
+    report.push(format!("scenario {}: PASS", scn.name));
+    Ok(report.join("\n"))
+}
+
+/// Replicate the root's data/split derivation (the same shared-seed
+/// rules every process uses) and run the in-process twin transport.
+fn run_twin(cfg: &FedConfig, scn: &Scenario, out_dir: &Path) -> Result<Option<FedOutcome>> {
+    if scn.compare == CompareMode::None {
+        return Ok(None);
+    }
+    if cfg.transport == TransportKind::GossipTcp {
+        bail!("compare={} is not supported for gossip-tcp (use none)", scn.compare.as_str());
+    }
+    let seeds = SeedTree::new(cfg.train.seed);
+    let (train, test) = if cfg.train.train_rows >= 60_000 {
+        (Dataset::mnist_or_synthetic(true, &seeds), Dataset::mnist_or_synthetic(false, &seeds))
+    } else {
+        Dataset::synthetic_pair(cfg.train.train_rows, cfg.train.test_rows, &seeds)
+    };
+    let shards = train.partition_iid(cfg.clients, &seeds);
+    let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500);
+    // Eval cadence/samples never touch probs or the ledger; keep the
+    // twin's evaluation minimal.
+    let eval_every = cfg.rounds.max(1);
+    let out = match cfg.transport {
+        TransportKind::Tcp => {
+            let any_kill = scn
+                .chaos
+                .iter()
+                .any(|ev| matches!(ev, ChaosEvent::KillClient { .. }));
+            if any_kill {
+                let log_path = out_dir.join("root.log");
+                let log = fs::read_to_string(&log_path)
+                    .with_context(|| format!("reading {}", log_path.display()))?;
+                let schedule = parse_drop_schedule(&log)?;
+                ensure!(
+                    !schedule.is_empty(),
+                    "kill-client scheduled but the root log reports no dropped rounds"
+                );
+                run_federated_with_drop_schedule(
+                    cfg, &mut exec, &shards, &test, 1, eval_every, &schedule,
+                )
+            } else {
+                run_federated(cfg, &mut exec, &shards, &test, 1, eval_every)
+            }
+        }
+        TransportKind::Sharded | TransportKind::ShardedWire => {
+            let outages: Vec<(usize, u32)> = scn
+                .chaos
+                .iter()
+                .filter_map(|ev| match *ev {
+                    ChaosEvent::KillShard { shard, round } => Some((shard, round)),
+                    _ => None,
+                })
+                .collect();
+            run_federated_sharded_outages(
+                cfg, &mut exec, &shards, &test, 1, eval_every, cfg.shards, &outages,
+            )
+        }
+        _ => bail!("no twin for transport {}", cfg.transport.as_str()),
+    };
+    Ok(Some(out))
+}
+
+/// Parse the root's verbose drop lines (`round {r:>3}  dropped clients
+/// [a, b]`) into a `(round, client)` schedule for the replay twin.
+fn parse_drop_schedule(log: &str) -> Result<Vec<(u32, usize)>> {
+    let mut schedule = Vec::new();
+    for line in log.lines() {
+        let Some(rest) = line.strip_prefix("round ") else { continue };
+        let Some((round_s, ids)) = rest.split_once("  dropped clients [") else { continue };
+        let round: u32 = round_s
+            .trim()
+            .parse()
+            .map_err(|_| anyhow!("unparseable drop line '{line}'"))?;
+        let ids = ids
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("unterminated drop line '{line}'"))?;
+        for id in ids.split(',') {
+            let id = id.trim();
+            if id.is_empty() {
+                continue;
+            }
+            let client: usize =
+                id.parse().map_err(|_| anyhow!("bad client id in drop line '{line}'"))?;
+            schedule.push((round, client));
+        }
+    }
+    Ok(schedule)
+}
+
+/// Little-endian f32 concatenation — the `final_probs.bin` encoding.
+fn probs_bytes(probs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(probs.len() * 4);
+    for p in probs {
+        out.extend_from_slice(&p.to_le_bytes());
+    }
+    out
+}
+
+/// Diff the root's written artifacts against the twin at the scenario's
+/// strictness.  The twin's artifacts are always written next to the
+/// root's (`twin.final_probs.bin`, `twin.ledger.csv`) so a divergence
+/// leaves both sides on disk to inspect.
+fn compare_artifacts(
+    mode: CompareMode,
+    out_dir: &Path,
+    twin: &FedOutcome,
+    report: &mut Vec<String>,
+) -> Result<()> {
+    let twin_probs = probs_bytes(&twin.final_probs);
+    let twin_csv = twin.ledger.to_csv();
+    fs::write(out_dir.join("twin.final_probs.bin"), &twin_probs)
+        .context("writing twin.final_probs.bin")?;
+    fs::write(out_dir.join("twin.ledger.csv"), &twin_csv).context("writing twin.ledger.csv")?;
+
+    let probs_path = out_dir.join("root").join("final_probs.bin");
+    let wire_probs =
+        fs::read(&probs_path).with_context(|| format!("reading {}", probs_path.display()))?;
+    ensure!(
+        wire_probs == twin_probs,
+        "final_probs.bin diverges from the in-process twin \
+         ({} vs {} bytes; see twin.final_probs.bin)",
+        wire_probs.len(),
+        twin_probs.len()
+    );
+    report.push("  final_probs.bin: byte-identical to the in-process twin".to_string());
+    if mode == CompareMode::Probs {
+        return Ok(());
+    }
+
+    let ledger_path = out_dir.join("root").join("ledger.csv");
+    let wire_csv = fs::read_to_string(&ledger_path)
+        .with_context(|| format!("reading {}", ledger_path.display()))?;
+    match mode {
+        CompareMode::Full => {
+            ensure!(
+                wire_csv == twin_csv,
+                "ledger.csv diverges from the in-process twin (see twin.ledger.csv)"
+            );
+            report.push("  ledger.csv: byte-identical to the in-process twin".to_string());
+        }
+        CompareMode::Rounds => {
+            let twin_rounds = twin.ledger.rounds_csv();
+            ensure!(
+                wire_csv.starts_with(&twin_rounds),
+                "per-round ledger section diverges from the in-process twin \
+                 (see twin.ledger.csv)"
+            );
+            report.push("  ledger.csv rounds section: byte-identical to the twin".to_string());
+        }
+        CompareMode::Probs | CompareMode::None => {}
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chaos_specs_parse_and_reject() {
+        assert_eq!(
+            ChaosEvent::parse("kill-shard:1@2").unwrap(),
+            ChaosEvent::KillShard { shard: 1, round: 2 }
+        );
+        assert_eq!(
+            ChaosEvent::parse("kill-client:3@2+restart").unwrap(),
+            ChaosEvent::KillClient { client: 3, round: 2, restart: true }
+        );
+        assert_eq!(
+            ChaosEvent::parse("kill-client:0@5").unwrap(),
+            ChaosEvent::KillClient { client: 0, round: 5, restart: false }
+        );
+        assert_eq!(
+            ChaosEvent::parse("kill-peer:2@1").unwrap(),
+            ChaosEvent::KillPeer { peer: 2, round: 1 }
+        );
+        for bad in [
+            "kill-shard",
+            "kill-shard:1",
+            "kill-shard:x@2",
+            "kill-shard:1@y",
+            "kill-shard:1@2+restart", // restart is a client-only flavor
+            "kill-peer:0@1+restart",
+            "explode:1@2",
+        ] {
+            assert!(ChaosEvent::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn scenario_parses_and_resolves_config_relative_to_base() {
+        let doc = TomlDoc::parse(
+            r#"
+[scenario]
+name = "tree-depth2"
+config = "fed.toml"
+listen = "127.0.0.1:7757"
+timeout-secs = 60
+compare = "rounds"
+chaos = ["kill-shard:1@2"]
+expect-log = ["shard-0:merge"]
+"#,
+        )
+        .unwrap();
+        let scn = Scenario::from_doc(&doc, Path::new("/tmp/scenarios")).unwrap();
+        assert_eq!(scn.name, "tree-depth2");
+        assert_eq!(scn.config, Path::new("/tmp/scenarios/fed.toml"));
+        assert_eq!(scn.timeout, Duration::from_secs(60));
+        assert_eq!(scn.compare, CompareMode::Rounds);
+        assert_eq!(scn.chaos, vec![ChaosEvent::KillShard { shard: 1, round: 2 }]);
+        assert_eq!(scn.expect_log, vec![("shard-0".to_string(), "merge".to_string())]);
+    }
+
+    #[test]
+    fn scenario_rejects_missing_and_unknown_fields() {
+        let missing = TomlDoc::parse("[scenario]\nconfig = \"x.toml\"").unwrap();
+        assert!(Scenario::from_doc(&missing, Path::new(".")).is_err());
+        let unknown =
+            TomlDoc::parse("[scenario]\nname = \"a\"\nconfig = \"x\"\nlisten = \"h:1\"\ntypo = 1")
+                .unwrap();
+        assert!(Scenario::from_doc(&unknown, Path::new(".")).is_err());
+        let bad_compare = TomlDoc::parse(
+            "[scenario]\nname = \"a\"\nconfig = \"x\"\nlisten = \"h:1\"\ncompare = \"maybe\"",
+        )
+        .unwrap();
+        assert!(Scenario::from_doc(&bad_compare, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn drop_schedule_parses_verbose_root_logs() {
+        let log = "\
+[repro] federated zampling: 4 clients, 6 rounds, n=100 d=5 (transport=tcp policy=uniform)
+round   0  sampled 0.2500 ± 0.0100  expected 0.2500  (4 of 4 masks)
+round   2  dropped clients [3]
+round   3  dropped clients [1, 3]
+round   3  sampled 0.2500 ± 0.0100  expected 0.2500  (2 of 4 masks)
+";
+        let schedule = parse_drop_schedule(log).unwrap();
+        assert_eq!(schedule, vec![(2, 3), (3, 1), (3, 3)]);
+    }
+
+    #[test]
+    fn drop_schedule_ignores_logs_without_drop_lines() {
+        let schedule = parse_drop_schedule("round   0  sampled 0.5 ± 0.0\n").unwrap();
+        assert!(schedule.is_empty());
+    }
+
+    #[test]
+    fn probs_bytes_is_little_endian_f32_concatenation() {
+        let bytes = probs_bytes(&[0.5, 1.0]);
+        assert_eq!(bytes.len(), 8);
+        assert_eq!(&bytes[..4], &0.5f32.to_le_bytes());
+        assert_eq!(&bytes[4..], &1.0f32.to_le_bytes());
+    }
+
+    #[test]
+    fn chaos_validation_matches_transport_and_ranges() {
+        let doc = TomlDoc::parse(
+            "arch = \"small\"\ncompression = 8\ntrain-rows = 512\ntest-rows = 128\n\
+             [federated]\nclients = 4\nrounds = 4\nshards = 2\ntransport = \"sharded-wire\"",
+        )
+        .unwrap();
+        let cfg = FedConfig::from_toml(&doc).unwrap();
+        let mut scn = Scenario {
+            name: "t".into(),
+            config: PathBuf::from("x"),
+            listen: "h:1".into(),
+            timeout: Duration::from_secs(1),
+            compare: CompareMode::None,
+            chaos: vec![ChaosEvent::KillShard { shard: 1, round: 2 }],
+            expect_log: Vec::new(),
+        };
+        assert!(scn.validate_chaos(&cfg).is_ok());
+        scn.chaos = vec![ChaosEvent::KillShard { shard: 2, round: 2 }];
+        assert!(scn.validate_chaos(&cfg).is_err(), "shard out of range");
+        scn.chaos = vec![ChaosEvent::KillShard { shard: 0, round: 9 }];
+        assert!(scn.validate_chaos(&cfg).is_err(), "round out of range");
+        scn.chaos = vec![ChaosEvent::KillClient { client: 0, round: 1, restart: false }];
+        assert!(scn.validate_chaos(&cfg).is_err(), "kill-client needs tcp");
+        scn.chaos = vec![ChaosEvent::KillPeer { peer: 0, round: 1 }];
+        assert!(scn.validate_chaos(&cfg).is_err(), "kill-peer needs gossip");
+    }
+}

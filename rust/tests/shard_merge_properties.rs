@@ -16,7 +16,7 @@ use zampling::federated::protocol::{
     decode_shard, encode_client, encode_shard, ClientMsg, MaskCodec, ShardMsg,
 };
 use zampling::federated::transport::Leader;
-use zampling::federated::{DeadlinePolicy, Server, ShardPlan};
+use zampling::federated::{DeadlinePolicy, Server, ShardPlan, ShardTree};
 use zampling::rng::{Rng, Xoshiro256pp};
 use zampling::util::prop::{for_all, Gen};
 
@@ -294,4 +294,142 @@ fn empty_shards_never_skew_the_mean() {
         let want = if i % 2 == 0 { 1.0 } else { 0.5 };
         assert_eq!(p, want, "entry {i}");
     }
+}
+
+/// A generated multi-hop round: a preorder shard forest (depth ≤ 4,
+/// uneven fan-out), a population, per-client drops, and sometimes a
+/// whole dead subtree (the kill-shard chaos analogue).
+#[derive(Debug)]
+struct TreeInput {
+    n: usize,
+    clients: usize,
+    /// Parent table in `ShardTree` form; generated in preorder so every
+    /// subtree is a contiguous id interval (the validator's invariant).
+    parents: Vec<Option<usize>>,
+    /// `masks[k]` is `None` when client `k` dropped this round.
+    masks: Vec<Option<Vec<bool>>>,
+    /// When set, the entire subtree rooted at this shard contributes
+    /// nothing — every one of its clients counts as dropped.
+    dead_shard: Option<usize>,
+}
+
+fn gen_tree_input(g: &mut Gen) -> TreeInput {
+    let n = g.usize_in(1, 200);
+    let clients = g.usize_in(1, 24);
+    let shards = g.usize_in(1, clients);
+    let mut rng = Xoshiro256pp::seed_from(g.seed());
+    // Stack-based preorder walk: each new shard either deepens the
+    // current chain or pops back toward the root first, so subtrees are
+    // contiguous intervals by construction.  The stack is capped at 3
+    // open ancestors, bounding merge depth at 4 hops.
+    let mut parents: Vec<Option<usize>> = vec![None];
+    let mut stack: Vec<usize> = vec![0];
+    for s in 1..shards {
+        let keep = (rng.next_u64() % (stack.len() as u64 + 1)) as usize;
+        stack.truncate(keep.min(3));
+        parents.push(stack.last().copied());
+        stack.push(s);
+    }
+    let drop_rate = g.f64_in(0.0, 1.0);
+    let masks = (0..clients)
+        .map(|_| {
+            if rng.bernoulli(drop_rate) {
+                None
+            } else {
+                Some((0..n).map(|_| rng.bernoulli(0.5)).collect())
+            }
+        })
+        .collect();
+    let dead_shard = if g.bool_p(0.25) { Some(g.usize_in(0, shards - 1)) } else { None };
+    TreeInput { n, clients, parents, masks, dead_shard }
+}
+
+/// Folding vote sums hop by hop through ANY valid tree shape — each
+/// shard merging its children's decoded `ShardVotes` frames into its
+/// own partial sum and re-encoding for its parent — must be
+/// byte-identical to flat single-leader folding of the same surviving
+/// masks: same `received` count, same renormalized probabilities.
+/// This is the algebra `serve-shard` relies on at every depth.
+#[test]
+fn multi_hop_tree_merge_is_byte_identical_to_flat_folding() {
+    for_all("tree-merge-equals-flat", 300, 0x7EE5, gen_tree_input, |input| {
+        let shards = input.parents.len();
+        let plan = ShardPlan::new(input.clients, shards);
+        let tree = ShardTree::from_parents(&input.parents)
+            .map_err(|e| format!("generator produced an invalid tree: {e:#}"))?;
+        let dead = match input.dead_shard {
+            Some(d) => tree.subtree_clients(&plan, d),
+            None => 0..0,
+        };
+
+        // Reference: one flat leader folds every surviving mask.
+        let mut central = Server::new(vec![0.5; input.n]);
+        for (k, mask) in input.masks.iter().enumerate() {
+            if let Some(mask) = mask {
+                if !dead.contains(&k) {
+                    central.receive_mask(&pack_bits(mask));
+                }
+            }
+        }
+        let central_received = central.try_aggregate();
+
+        // Tree: children carry higher ids than their parent, so a
+        // reverse-id sweep visits every child before its parent.  Each
+        // hop folds its own survivors, merges the children's frames
+        // through the real wire codec, and re-emits one frame upward.
+        let mut frames: Vec<Option<Vec<u8>>> = vec![None; shards];
+        for s in (0..shards).rev() {
+            let mut votes = vec![0u32; input.n];
+            let mut received = 0u32;
+            for k in plan.range(s) {
+                let Some(mask) = &input.masks[k] else { continue };
+                if dead.contains(&k) {
+                    continue;
+                }
+                for (v, &b) in votes.iter_mut().zip(mask) {
+                    *v += b as u32;
+                }
+                received += 1;
+            }
+            for &c in tree.children(s) {
+                let frame = frames[c].take().ok_or("child frame missing")?;
+                let ShardMsg::ShardVotes { received: cr, n: cn, votes: cv, .. } =
+                    decode_shard(&frame).map_err(|e| format!("decode hop: {e}"))?;
+                if cn != input.n {
+                    return Err(format!("hop mangled n: {cn} != {}", input.n));
+                }
+                for (v, &cv) in votes.iter_mut().zip(&cv) {
+                    *v += cv;
+                }
+                received += cr;
+            }
+            frames[s] = Some(encode_shard(&ShardMsg::ShardVotes {
+                shard: s as u32,
+                round: 0,
+                received,
+                n: input.n,
+                votes,
+            }));
+        }
+        let mut root = Server::new(vec![0.5; input.n]);
+        for &c in tree.root_children() {
+            let frame = frames[c].take().ok_or("root-child frame missing")?;
+            let ShardMsg::ShardVotes { received, votes, .. } =
+                decode_shard(&frame).map_err(|e| format!("decode root hop: {e}"))?;
+            root.merge_votes(&votes, received as usize);
+        }
+        let merged_received = root.try_aggregate();
+
+        if merged_received != central_received {
+            return Err(format!(
+                "received diverged: tree {merged_received} vs flat {central_received} \
+                 (parents {:?}, dead {:?})",
+                input.parents, input.dead_shard
+            ));
+        }
+        if root.probs != central.probs {
+            return Err("tree-merged probabilities != flat probabilities".into());
+        }
+        Ok(())
+    });
 }

@@ -70,6 +70,20 @@ fn seeded_layering_violation_is_caught() {
 }
 
 #[test]
+fn seeded_testnet_mislayering_is_caught_and_allowed_edge_passes() {
+    let report = fixture_report();
+    let layering: Vec<_> = report
+        .violations
+        .iter()
+        .filter(|v| v.file == "testnet/mod.rs" && v.lint == "layering")
+        .collect();
+    // Exactly the `crate::federated` edge; the allowed `crate::util`
+    // import in the same file must NOT be flagged.
+    assert_eq!(layering.len(), 1, "{:?}", report.violations);
+    assert!(layering[0].message.contains("must not depend on `federated`"));
+}
+
+#[test]
 fn seeded_panic_violations_are_caught_and_allowlist_respected() {
     let report = fixture_report();
     let panics: Vec<_> = report.violations.iter().filter(|v| v.lint == "panic").collect();

@@ -1,0 +1,10 @@
+//! Fixture: the orchestrator layer is restricted to `util` here, so
+//! reaching into `federated` is the seeded testnet mislayering.
+
+use crate::federated::Frame;
+use crate::util::helper;
+
+pub fn mislayered() -> Frame {
+    helper();
+    Frame
+}
