@@ -5,6 +5,9 @@
 //! protocol that sends all m parameters as floats"* — i.e. naive is
 //! `32·m` bits in each direction, per client.
 
+use crate::util::error::Result;
+use crate::{anyhow, bail};
+
 /// One round's measured traffic (bits, per direction, totals over clients).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct RoundCost {
@@ -292,6 +295,100 @@ impl CommLedger {
         out
     }
 
+    /// Serialize the whole ledger — every column of every table,
+    /// **including** the measured `wall_ns` the CSV deliberately omits —
+    /// as the flat little-endian layout the checkpoint embeds.  Unlike
+    /// [`Self::to_csv`] this is a faithful round-trip format: a resumed
+    /// leader must recompute the *same* totals (edge/shard/throughput)
+    /// the pre-kill leader would have, so no column may be dropped.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(8 + self.rounds.len() * 36);
+        out.extend_from_slice(&(self.rounds.len() as u32).to_le_bytes());
+        for r in &self.rounds {
+            out.extend_from_slice(&r.downlink_bits.to_le_bytes());
+            out.extend_from_slice(&r.uplink_bits.to_le_bytes());
+            out.extend_from_slice(&r.clients.to_le_bytes());
+            out.extend_from_slice(&r.participants.to_le_bytes());
+            out.extend_from_slice(&r.dropped.to_le_bytes());
+            out.extend_from_slice(&r.wall_ns.to_le_bytes());
+        }
+        out.extend_from_slice(&(self.shard_rounds.len() as u32).to_le_bytes());
+        for costs in &self.shard_rounds {
+            out.extend_from_slice(&(costs.len() as u32).to_le_bytes());
+            for c in costs {
+                out.extend_from_slice(&c.shard.to_le_bytes());
+                out.extend_from_slice(&c.uplink_bits.to_le_bytes());
+                out.extend_from_slice(&c.downlink_bits.to_le_bytes());
+                out.extend_from_slice(&c.merge_bits.to_le_bytes());
+                out.extend_from_slice(&c.received.to_le_bytes());
+                out.extend_from_slice(&c.dropped.to_le_bytes());
+            }
+        }
+        out.extend_from_slice(&(self.edge_rounds.len() as u32).to_le_bytes());
+        for costs in &self.edge_rounds {
+            out.extend_from_slice(&(costs.len() as u32).to_le_bytes());
+            for c in costs {
+                out.extend_from_slice(&c.from.to_le_bytes());
+                out.extend_from_slice(&c.to.to_le_bytes());
+                out.extend_from_slice(&c.bits.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Decode a ledger serialized by [`Self::to_bytes`].  Hardened the
+    /// same way the wire decoders are: every count is bounds-checked
+    /// against the remaining input *before* allocation (a corrupted
+    /// length field must not become a memory bomb), truncated input is
+    /// an error (never a panic), and trailing garbage is rejected so a
+    /// partially-overwritten checkpoint cannot restore silently.
+    pub fn from_bytes(buf: &[u8]) -> Result<CommLedger> {
+        let mut r = LedgerReader { buf, pos: 0 };
+        let nrounds = r.count("rounds", 36)?;
+        let mut rounds = Vec::with_capacity(nrounds);
+        for _ in 0..nrounds {
+            rounds.push(RoundCost {
+                downlink_bits: r.u64()?,
+                uplink_bits: r.u64()?,
+                clients: r.u32()?,
+                participants: r.u32()?,
+                dropped: r.u32()?,
+                wall_ns: r.u64()?,
+            });
+        }
+        let outer = r.count("shard rounds", 4)?;
+        let mut shard_rounds = Vec::with_capacity(outer);
+        for _ in 0..outer {
+            let inner = r.count("shard costs", 36)?;
+            let mut costs = Vec::with_capacity(inner);
+            for _ in 0..inner {
+                costs.push(ShardCost {
+                    shard: r.u32()?,
+                    uplink_bits: r.u64()?,
+                    downlink_bits: r.u64()?,
+                    merge_bits: r.u64()?,
+                    received: r.u32()?,
+                    dropped: r.u32()?,
+                });
+            }
+            shard_rounds.push(costs);
+        }
+        let outer = r.count("edge rounds", 4)?;
+        let mut edge_rounds = Vec::with_capacity(outer);
+        for _ in 0..outer {
+            let inner = r.count("edge costs", 16)?;
+            let mut costs = Vec::with_capacity(inner);
+            for _ in 0..inner {
+                costs.push(EdgeCost { from: r.u32()?, to: r.u32()?, bits: r.u64()? });
+            }
+            edge_rounds.push(costs);
+        }
+        if r.pos != buf.len() {
+            bail!("{} trailing bytes after the ledger tables", buf.len() - r.pos);
+        }
+        Ok(CommLedger { rounds, shard_rounds, edge_rounds })
+    }
+
     /// Serialize the whole ledger as sectioned CSV (`# rounds`,
     /// `# shards`, `# edges`; the latter two omitted when empty) — the
     /// `ledger.csv` artifact every federated CLI run writes, and the
@@ -323,6 +420,50 @@ impl CommLedger {
             }
         }
         out
+    }
+}
+
+/// Bounds-checked little-endian reader over a serialized ledger.
+struct LedgerReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl LedgerReader<'_> {
+    fn u32(&mut self) -> Result<u32> {
+        match self.buf.get(self.pos..self.pos + 4) {
+            Some(b) => {
+                let mut a = [0u8; 4];
+                a.copy_from_slice(b);
+                self.pos += 4;
+                Ok(u32::from_le_bytes(a))
+            }
+            None => Err(anyhow!("truncated ledger u32 at offset {}", self.pos)),
+        }
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        match self.buf.get(self.pos..self.pos + 8) {
+            Some(b) => {
+                let mut a = [0u8; 8];
+                a.copy_from_slice(b);
+                self.pos += 8;
+                Ok(u64::from_le_bytes(a))
+            }
+            None => Err(anyhow!("truncated ledger u64 at offset {}", self.pos)),
+        }
+    }
+
+    /// Read a table length and check the remaining input can actually
+    /// hold `count` entries of at least `min_entry_bytes` each — the
+    /// pre-allocation guard against corrupted length fields.
+    fn count(&mut self, what: &str, min_entry_bytes: usize) -> Result<usize> {
+        let count = self.u32()? as usize;
+        let remaining = self.buf.len() - self.pos;
+        if count.saturating_mul(min_entry_bytes) > remaining {
+            bail!("ledger {what} count {count} exceeds the {remaining} bytes remaining");
+        }
+        Ok(count)
     }
 }
 
@@ -488,6 +629,107 @@ mod tests {
         // centralized ledgers report an empty table
         assert!(CommLedger::default().node_edge_totals(0).is_empty());
         assert_eq!(CommLedger::default().total_edge_bits(), 0);
+    }
+
+    /// A ledger with every table populated — shard rows, edge rows, and
+    /// measured wall clocks — the worst case for restore asymmetry.
+    fn full_ledger() -> CommLedger {
+        let mut ledger = CommLedger::default();
+        ledger.record(RoundCost {
+            downlink_bits: 640,
+            uplink_bits: 320,
+            clients: 4,
+            participants: 5,
+            dropped: 1,
+            wall_ns: 250_000_000,
+        });
+        ledger.record_shard_costs(vec![
+            ShardCost {
+                shard: 0,
+                uplink_bits: 200,
+                downlink_bits: 400,
+                merge_bits: 64,
+                received: 2,
+                dropped: 0,
+            },
+            ShardCost {
+                shard: 1,
+                uplink_bits: 120,
+                downlink_bits: 240,
+                merge_bits: 64,
+                received: 2,
+                dropped: 1,
+            },
+        ]);
+        ledger.record_edge_costs(vec![
+            EdgeCost { from: 0, to: 1, bits: 80 },
+            EdgeCost { from: 1, to: 0, bits: 80 },
+        ]);
+        ledger.record(RoundCost {
+            downlink_bits: 640,
+            uplink_bits: 320,
+            clients: 5,
+            participants: 5,
+            dropped: 0,
+            wall_ns: 750_000_000,
+        });
+        ledger.record_shard_costs(Vec::new());
+        ledger.record_edge_costs(vec![EdgeCost { from: 2, to: 0, bits: 80 }]);
+        ledger
+    }
+
+    #[test]
+    fn restored_ledger_recomputes_identical_totals() {
+        // The restore-asymmetry regression: every derived total — the
+        // shard/edge tables, throughput (which needs the wall clocks the
+        // CSV drops), savings, drop counts — must come out of a
+        // round-tripped ledger exactly as it would have pre-kill.
+        let original = full_ledger();
+        let restored = CommLedger::from_bytes(&original.to_bytes()).unwrap();
+        assert_eq!(restored.rounds.len(), original.rounds.len());
+        assert_eq!(restored.total_uplink_bits(), original.total_uplink_bits());
+        assert_eq!(restored.total_downlink_bits(), original.total_downlink_bits());
+        assert_eq!(restored.total_dropped(), original.total_dropped());
+        assert_eq!(restored.shard_totals(), original.shard_totals());
+        assert_eq!(restored.total_merge_bits(), original.total_merge_bits());
+        assert_eq!(restored.node_edge_totals(3), original.node_edge_totals(3));
+        assert_eq!(restored.total_edge_bits(), original.total_edge_bits());
+        assert_eq!(restored.total_wall(), original.total_wall());
+        assert_eq!(restored.round_throughput_bps(0), original.round_throughput_bps(0));
+        assert_eq!(restored.cumulative_throughput_bps(), original.cumulative_throughput_bps());
+        let rep_a = original.savings(100);
+        let rep_b = restored.savings(100);
+        assert_eq!(rep_a.client_savings, rep_b.client_savings);
+        assert_eq!(rep_a.server_savings, rep_b.server_savings);
+        // and the CSV artifact a resumed run writes is byte-identical
+        assert_eq!(restored.to_csv(), original.to_csv());
+        // double round-trip is a fixed point
+        assert_eq!(restored.to_bytes(), original.to_bytes());
+    }
+
+    #[test]
+    fn empty_ledger_roundtrips() {
+        let restored = CommLedger::from_bytes(&CommLedger::default().to_bytes()).unwrap();
+        assert!(restored.rounds.is_empty());
+        assert!(restored.shard_rounds.is_empty());
+        assert!(restored.edge_rounds.is_empty());
+    }
+
+    #[test]
+    fn ledger_decode_rejects_corrupt_input_without_panicking() {
+        let bytes = full_ledger().to_bytes();
+        // every truncation point errors, never panics
+        for cut in 0..bytes.len() {
+            assert!(CommLedger::from_bytes(&bytes[..cut]).is_err(), "cut={cut} decoded");
+        }
+        // trailing garbage is rejected (a partially-overwritten file)
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(CommLedger::from_bytes(&long).is_err());
+        // a corrupted round count cannot become a memory bomb
+        let mut forged = bytes.clone();
+        forged[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(CommLedger::from_bytes(&forged).is_err());
     }
 
     #[test]

@@ -471,6 +471,16 @@ impl PolicyKind {
 pub struct FedConfig {
     pub train: TrainConfig,
     pub clients: usize,
+    /// Upper bound on the client id space for elastic runs: training
+    /// data is partitioned over `max_clients` shards and a late `Hello`
+    /// from any id below it is admitted at the next round boundary.
+    /// Must be >= `clients`; equal (the default) means a fixed roster.
+    pub max_clients: usize,
+    /// Write a run checkpoint every this many completed rounds (0 =
+    /// never).  The leader writes `<out>/checkpoint.bin` atomically at
+    /// the round boundary; `repro resume` restarts from it and finishes
+    /// the run byte-identical to an uninterrupted one.
+    pub checkpoint_every: usize,
     pub rounds: usize,
     /// Local epochs per round (the paper trains "each round for up to 100
     /// epochs with early stopping"; CI configs use 1–2).
@@ -534,6 +544,8 @@ impl FedConfig {
         Self {
             train,
             clients: 10,
+            max_clients: 10,
+            checkpoint_every: 0,
             rounds: 100,
             local_epochs: 1,
             entropy_code_uplink: false,
@@ -552,9 +564,10 @@ impl FedConfig {
     }
 
     pub const KNOWN_KEYS: &'static [&'static str] = &[
-        "clients", "rounds", "local-epochs", "entropy-code-uplink", "participation",
-        "round-timeout-ms", "round-timeout-max-ms", "transport", "policy", "shards",
-        "shard-addrs", "tree-parents", "topology", "topology-adj", "peer-addrs",
+        "clients", "max-clients", "checkpoint-every", "rounds", "local-epochs",
+        "entropy-code-uplink", "participation", "round-timeout-ms", "round-timeout-max-ms",
+        "transport", "policy", "shards", "shard-addrs", "tree-parents", "topology",
+        "topology-adj", "peer-addrs",
     ];
 
     pub fn from_toml(doc: &TomlDoc) -> Result<Self, String> {
@@ -575,6 +588,28 @@ impl FedConfig {
         }
         let clients = fed_doc.usize_or("clients", 10);
         let transport = TransportKind::parse(&fed_doc.str_or("transport", "pool"))?;
+        let max_clients = fed_doc.usize_or("max-clients", clients);
+        if max_clients < clients {
+            return Err(format!(
+                "federated.max-clients {max_clients} must be >= federated.clients {clients}"
+            ));
+        }
+        // Elastic membership (a roster that can grow mid-run) only works
+        // on transports whose leader sees every `Hello` itself: the
+        // in-process drivers and the flat TCP leader.  Shard/gossip
+        // processes re-derive participants from the shared config alone
+        // and would silently disagree about the roster.
+        if max_clients > clients
+            && transport != TransportKind::Local
+            && transport != TransportKind::Pool
+            && transport != TransportKind::Tcp
+        {
+            return Err(format!(
+                "federated.max-clients > clients requires federated.transport = \
+                 \"local\", \"pool\", or \"tcp\" (got \"{}\")",
+                transport.as_str()
+            ));
+        }
         let shards = fed_doc.usize_or("shards", 1);
         if shards == 0 || shards > clients {
             return Err(format!("federated.shards {shards} must be in 1..={clients}"));
@@ -735,6 +770,8 @@ impl FedConfig {
         Ok(Self {
             train: TrainConfig::from_toml(&train_doc)?,
             clients,
+            max_clients,
+            checkpoint_every: fed_doc.usize_or("checkpoint-every", 0),
             rounds: fed_doc.usize_or("rounds", 100),
             local_epochs: fed_doc.usize_or("local-epochs", 1),
             entropy_code_uplink,
@@ -924,6 +961,36 @@ mod tests {
         }
         assert_eq!(PolicyKind::parse("uniform").unwrap().as_str(), "uniform");
         assert_eq!(PolicyKind::parse("straggler-aware").unwrap().as_str(), "straggler-aware");
+    }
+
+    #[test]
+    fn max_clients_and_checkpoint_parse_and_validate() {
+        // defaults: fixed roster, no checkpointing
+        let doc = TomlDoc::parse("arch = \"small\"\n[federated]\nclients = 4\n").unwrap();
+        let f = FedConfig::from_toml(&doc).unwrap();
+        assert_eq!(f.max_clients, 4);
+        assert_eq!(f.checkpoint_every, 0);
+        assert_eq!(FedConfig::paper(8).max_clients, FedConfig::paper(8).clients);
+        // an elastic tcp roster with checkpointing
+        let doc = TomlDoc::parse(
+            "arch = \"small\"\n[federated]\nclients = 4\nmax-clients = 6\n\
+             transport = \"tcp\"\ncheckpoint-every = 2\n",
+        )
+        .unwrap();
+        let f = FedConfig::from_toml(&doc).unwrap();
+        assert_eq!(f.max_clients, 6);
+        assert_eq!(f.checkpoint_every, 2);
+        for bad in [
+            // a roster bound below the starting roster is a contradiction
+            "clients = 4\nmax-clients = 3\n",
+            // elastic rosters need a leader that sees every Hello itself
+            "clients = 4\nmax-clients = 6\ntransport = \"sharded\"\nshards = 2\n",
+            "clients = 4\nmax-clients = 6\ntransport = \"sharded-wire\"\nshards = 2\n",
+            "clients = 4\nmax-clients = 6\ntransport = \"gossip-tcp\"\n",
+        ] {
+            let doc = TomlDoc::parse(&format!("arch = \"small\"\n[federated]\n{bad}")).unwrap();
+            assert!(FedConfig::from_toml(&doc).is_err(), "accepted {bad}");
+        }
     }
 
     #[test]

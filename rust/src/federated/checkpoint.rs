@@ -1,0 +1,566 @@
+//! Run-lifecycle checkpoints: everything a killed leader needs to
+//! resume a federated run **byte-identically**.
+//!
+//! The paper's protocol makes this cheap: server and clients share
+//! nothing but the small trainable vector `p`, so a checkpoint is just a
+//! manifest (run geometry + progress cursor), `p` itself, the evaluation
+//! RNG cursor, the straggler history, the metrics log, and the
+//! communication ledger.  Client-side state needs no persistence at all
+//! — `client_round` reseeds each client's batch sampler from
+//! `(seed, client, round)`, so a worker that reconnects after a crash
+//! recomputes exactly the mask it would have sent.
+//!
+//! The on-disk format is little-endian, length-prefixed, and hardened
+//! the same way as the wire codec in [`super::protocol`]: every length
+//! field is bounds-checked against the remaining bytes *before*
+//! allocation, truncated or oversized input returns `Err` (never a
+//! panic), version drift is rejected, and trailing garbage fails the
+//! load so a torn write cannot restore silently.  Writes go through a
+//! temp-file + rename so a crash mid-write leaves the previous
+//! checkpoint intact.
+
+use std::fs;
+use std::path::Path;
+
+use crate::comm::CommLedger;
+use crate::metrics::{RoundRecord, RunLog};
+use crate::util::error::{Context, Result};
+use crate::{anyhow, bail};
+
+use super::protocol::MAX_MASK_LEN;
+
+/// Hard cap on a checkpoint file's size.  `p` dominates: even the
+/// largest mask the wire protocol admits (`MAX_MASK_LEN` probabilities,
+/// 4 bytes each) plus the ledger of a very long run fits comfortably.
+pub const MAX_CHECKPOINT_LEN: usize = 80 * 1024 * 1024;
+
+/// Cap on the embedded run-log name (a CLI-chosen artifact stem).
+const MAX_NAME_LEN: usize = 256;
+
+/// `b"zckp"` little-endian — rejects files that are not checkpoints at
+/// all before any length field is trusted.
+const CKPT_MAGIC: u32 = u32::from_le_bytes(*b"zckp");
+
+/// Current format version; any drift is a hard decode error because a
+/// resumed run must not guess at missing or re-interpreted fields.
+const CKPT_VERSION: u32 = 1;
+
+/// Bytes per serialized [`RoundRecord`] (7 little-endian u64 words).
+const RECORD_BYTES: usize = 56;
+
+/// Run geometry and progress cursor.  The geometry fields are
+/// cross-checked against the config at resume time — a checkpoint from
+/// a different run (different seed, mask length, roster, or schedule)
+/// must be rejected, not silently blended.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CheckpointManifest {
+    /// Root seed of the run's `SeedTree`.
+    pub seed: u64,
+    /// Mask length `n` (number of trainable probabilities).
+    pub n: u32,
+    /// Clients present at launch.
+    pub clients: u32,
+    /// Roster ceiling for elastic membership (`federated.max-clients`).
+    pub max_clients: u32,
+    /// Total rounds the run is scheduled for.
+    pub rounds: u32,
+    /// Shard count (1 for a flat run).
+    pub shards: u32,
+    /// Live population when the checkpoint was written (grows as late
+    /// clients join; never exceeds `max_clients`).
+    pub population: u32,
+    /// First round the resumed engine must execute.  Rounds
+    /// `0..next_round` are complete and their effects are captured in
+    /// the probabilities, history, log, and ledger below.
+    pub next_round: u32,
+    /// Evaluation cadence the engine was running with.
+    pub eval_every: u32,
+    /// Monte-Carlo samples per evaluation.
+    pub eval_samples: u32,
+    /// Participation fraction, stored as `f64::to_bits` so the manifest
+    /// equality check is exact.
+    pub participation_bits: u64,
+}
+
+/// A complete run snapshot at a round boundary.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    /// Run geometry + progress cursor.
+    pub manifest: CheckpointManifest,
+    /// The server's trainable probability vector `p` (length `n`).
+    pub probs: Vec<f32>,
+    /// Exported cursor of the engine's evaluation RNG — the only
+    /// cross-round generator state; all other determinism-path streams
+    /// are re-derived from `(seed, stream, round)`.
+    pub eval_rng: [u64; 4],
+    /// Straggler history (`RoundHistory::misses`), one counter per
+    /// population slot.
+    pub misses: Vec<u32>,
+    /// Run-log artifact stem (e.g. `federated`).
+    pub log_name: String,
+    /// Per-evaluation metric rows logged so far.
+    pub records: Vec<RoundRecord>,
+    /// Communication ledger rows logged so far (round, shard, and edge
+    /// tables — all derived totals recompute from these).
+    pub ledger: CommLedger,
+}
+
+/// Checked `usize -> u32` for length prefixes; counts beyond `u32` can
+/// only arise from a corrupted in-memory state and must fail loudly.
+fn ckpt_u32(v: usize, what: &str) -> Result<u32> {
+    u32::try_from(v).map_err(|_| anyhow!("checkpoint {what} count {v} exceeds u32"))
+}
+
+/// Bounds-checked little-endian reader over the checkpoint buffer.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, len: usize, what: &str) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(len).ok_or_else(|| {
+            anyhow!("checkpoint {what}: length overflows the address space")
+        })?;
+        if end > self.buf.len() {
+            bail!(
+                "checkpoint truncated in {what}: need {len} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            );
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes(b.try_into()?))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes(b.try_into()?))
+    }
+
+    /// Read a `u32` element count and reject it *before* allocation if
+    /// even `count * min_entry_bytes` cannot fit in the remaining bytes
+    /// — a forged length field must not become a memory bomb.
+    fn count(&mut self, what: &str, min_entry_bytes: usize) -> Result<usize> {
+        let raw = self.u32(what)?;
+        let count = raw as usize;
+        let remaining = self.buf.len() - self.pos;
+        if count.saturating_mul(min_entry_bytes) > remaining {
+            bail!(
+                "checkpoint {what} count {count} exceeds the {remaining} bytes remaining"
+            );
+        }
+        Ok(count)
+    }
+}
+
+impl Checkpoint {
+    /// Serialize the snapshot.  Fails only if a collection is too large
+    /// for its `u32` length prefix.
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        let m = &self.manifest;
+        let ledger = self.ledger.to_bytes();
+        let mut out = Vec::with_capacity(
+            128 + self.probs.len() * 4 + self.misses.len() * 4
+                + self.records.len() * RECORD_BYTES
+                + ledger.len(),
+        );
+        out.extend_from_slice(&CKPT_MAGIC.to_le_bytes());
+        out.extend_from_slice(&CKPT_VERSION.to_le_bytes());
+        out.extend_from_slice(&m.seed.to_le_bytes());
+        out.extend_from_slice(&m.participation_bits.to_le_bytes());
+        for word in [
+            m.n,
+            m.clients,
+            m.max_clients,
+            m.rounds,
+            m.shards,
+            m.population,
+            m.next_round,
+            m.eval_every,
+            m.eval_samples,
+        ] {
+            out.extend_from_slice(&word.to_le_bytes());
+        }
+        out.extend_from_slice(&ckpt_u32(self.probs.len(), "probs")?.to_le_bytes());
+        for p in &self.probs {
+            out.extend_from_slice(&p.to_le_bytes());
+        }
+        for word in self.eval_rng {
+            out.extend_from_slice(&word.to_le_bytes());
+        }
+        out.extend_from_slice(&ckpt_u32(self.misses.len(), "misses")?.to_le_bytes());
+        for miss in &self.misses {
+            out.extend_from_slice(&miss.to_le_bytes());
+        }
+        let name = self.log_name.as_bytes();
+        out.extend_from_slice(&ckpt_u32(name.len(), "log name")?.to_le_bytes());
+        out.extend_from_slice(name);
+        out.extend_from_slice(&ckpt_u32(self.records.len(), "records")?.to_le_bytes());
+        for r in &self.records {
+            out.extend_from_slice(&(r.round as u64).to_le_bytes());
+            out.extend_from_slice(&r.mean_sampled_acc.to_bits().to_le_bytes());
+            out.extend_from_slice(&r.sampled_acc_std.to_bits().to_le_bytes());
+            out.extend_from_slice(&r.expected_acc.to_bits().to_le_bytes());
+            out.extend_from_slice(&r.train_loss.to_bits().to_le_bytes());
+            out.extend_from_slice(&r.uplink_bits.to_le_bytes());
+            out.extend_from_slice(&r.downlink_bits.to_le_bytes());
+        }
+        out.extend_from_slice(&ckpt_u32(ledger.len(), "ledger")?.to_le_bytes());
+        out.extend_from_slice(&ledger);
+        Ok(out)
+    }
+
+    /// Decode a snapshot.  Any malformed input — wrong magic, version
+    /// drift, truncation, forged length fields, an oversized manifest,
+    /// internal inconsistency, or trailing bytes — returns `Err`.
+    pub fn from_bytes(buf: &[u8]) -> Result<Checkpoint> {
+        if buf.len() > MAX_CHECKPOINT_LEN {
+            bail!(
+                "checkpoint is {} bytes, beyond the {MAX_CHECKPOINT_LEN}-byte cap",
+                buf.len()
+            );
+        }
+        let mut r = Reader { buf, pos: 0 };
+        let magic = r.u32("magic")?;
+        if magic != CKPT_MAGIC {
+            bail!("not a checkpoint: bad magic {magic:#010x}");
+        }
+        let version = r.u32("version")?;
+        if version != CKPT_VERSION {
+            bail!("unsupported checkpoint version {version} (this build reads {CKPT_VERSION})");
+        }
+        let seed = r.u64("seed")?;
+        let participation_bits = r.u64("participation")?;
+        let n = r.u32("n")?;
+        let clients = r.u32("clients")?;
+        let max_clients = r.u32("max-clients")?;
+        let rounds = r.u32("rounds")?;
+        let shards = r.u32("shards")?;
+        let population = r.u32("population")?;
+        let next_round = r.u32("next-round")?;
+        let eval_every = r.u32("eval-every")?;
+        let eval_samples = r.u32("eval-samples")?;
+        if n as usize > MAX_MASK_LEN {
+            bail!("oversized manifest: n = {n} exceeds MAX_MASK_LEN = {MAX_MASK_LEN}");
+        }
+        if clients == 0 || max_clients < clients || population < clients || population > max_clients
+        {
+            bail!(
+                "inconsistent manifest roster: clients {clients}, population {population}, \
+                 max-clients {max_clients}"
+            );
+        }
+        if next_round > rounds {
+            bail!("inconsistent manifest: next round {next_round} beyond {rounds} rounds");
+        }
+        let nprobs = r.count("probs", 4)?;
+        if nprobs != n as usize {
+            bail!("checkpoint carries {nprobs} probabilities but the manifest declares n = {n}");
+        }
+        let raw = r.take(nprobs * 4, "probs")?;
+        let mut probs = Vec::with_capacity(nprobs);
+        for chunk in raw.chunks_exact(4) {
+            probs.push(f32::from_le_bytes(chunk.try_into()?));
+        }
+        let mut eval_rng = [0u64; 4];
+        for word in &mut eval_rng {
+            *word = r.u64("eval-rng cursor")?;
+        }
+        if eval_rng == [0u64; 4] {
+            bail!("checkpoint eval-rng cursor is the all-zero state (corrupt)");
+        }
+        let nmisses = r.count("misses", 4)?;
+        if nmisses != population as usize {
+            bail!(
+                "checkpoint carries {nmisses} straggler counters but population is {population}"
+            );
+        }
+        let mut misses = Vec::with_capacity(nmisses);
+        for _ in 0..nmisses {
+            misses.push(r.u32("miss counter")?);
+        }
+        let name_len = r.count("log name", 1)?;
+        if name_len > MAX_NAME_LEN {
+            bail!("checkpoint log name is {name_len} bytes (cap {MAX_NAME_LEN})");
+        }
+        let log_name = String::from_utf8(r.take(name_len, "log name")?.to_vec())
+            .context("checkpoint log name is not UTF-8")?;
+        let nrecords = r.count("records", RECORD_BYTES)?;
+        let mut records = Vec::with_capacity(nrecords);
+        for _ in 0..nrecords {
+            let round = usize::try_from(r.u64("record round")?)
+                .context("checkpoint record round exceeds usize")?;
+            records.push(RoundRecord {
+                round,
+                mean_sampled_acc: f64::from_bits(r.u64("record mean acc")?),
+                sampled_acc_std: f64::from_bits(r.u64("record acc std")?),
+                expected_acc: f64::from_bits(r.u64("record expected acc")?),
+                train_loss: f64::from_bits(r.u64("record train loss")?),
+                uplink_bits: r.u64("record uplink bits")?,
+                downlink_bits: r.u64("record downlink bits")?,
+            });
+        }
+        let ledger_len = r.count("ledger", 1)?;
+        let ledger = CommLedger::from_bytes(r.take(ledger_len, "ledger")?)
+            .context("checkpoint ledger section")?;
+        if r.pos != buf.len() {
+            bail!(
+                "checkpoint has {} trailing bytes after the ledger section",
+                buf.len() - r.pos
+            );
+        }
+        Ok(Checkpoint {
+            manifest: CheckpointManifest {
+                seed,
+                n,
+                clients,
+                max_clients,
+                rounds,
+                shards,
+                population,
+                next_round,
+                eval_every,
+                eval_samples,
+                participation_bits,
+            },
+            probs,
+            eval_rng,
+            misses,
+            log_name,
+            records,
+            ledger,
+        })
+    }
+
+    /// Reconstruct the [`RunLog`] captured by this checkpoint.
+    pub fn run_log(&self) -> RunLog {
+        RunLog { name: self.log_name.clone(), rounds: self.records.clone() }
+    }
+
+    /// Write the snapshot atomically: serialize to `<path>.tmp`, then
+    /// rename over `path`.  A crash mid-write leaves the previous
+    /// checkpoint (if any) intact; rename on the same filesystem is the
+    /// atomicity primitive.
+    pub fn write_atomic(&self, path: &Path) -> Result<()> {
+        let bytes = self.to_bytes()?;
+        let mut tmp = path.as_os_str().to_owned();
+        tmp.push(".tmp");
+        let tmp = std::path::PathBuf::from(tmp);
+        fs::write(&tmp, &bytes)
+            .with_context(|| format!("writing checkpoint temp file {}", tmp.display()))?;
+        fs::rename(&tmp, path)
+            .with_context(|| format!("publishing checkpoint {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Load and decode a checkpoint file, enforcing the size cap before
+    /// the buffer is parsed.
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let meta = fs::metadata(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        if meta.len() > MAX_CHECKPOINT_LEN as u64 {
+            bail!(
+                "checkpoint {} is {} bytes, beyond the {MAX_CHECKPOINT_LEN}-byte cap",
+                path.display(),
+                meta.len()
+            );
+        }
+        let bytes = fs::read(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        Self::from_bytes(&bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{EdgeCost, RoundCost, ShardCost};
+
+    fn sample() -> Checkpoint {
+        let mut ledger = CommLedger::default();
+        ledger.record(RoundCost {
+            downlink_bits: 4096,
+            uplink_bits: 1024,
+            clients: 4,
+            participants: 4,
+            dropped: 0,
+            wall_ns: 5_000_000,
+        });
+        ledger.record_shard_costs(vec![ShardCost {
+            shard: 0,
+            uplink_bits: 512,
+            downlink_bits: 2048,
+            merge_bits: 96,
+            received: 2,
+            dropped: 0,
+        }]);
+        ledger.record_edge_costs(vec![EdgeCost { from: 1, to: 0, bits: 512 }]);
+        Checkpoint {
+            manifest: CheckpointManifest {
+                seed: 1,
+                n: 64,
+                clients: 4,
+                max_clients: 6,
+                rounds: 6,
+                shards: 2,
+                population: 5,
+                next_round: 3,
+                eval_every: 1,
+                eval_samples: 2,
+                participation_bits: 1.0f64.to_bits(),
+            },
+            probs: (0..64).map(|i| i as f32 / 64.0).collect(),
+            eval_rng: [11, 22, 33, 44],
+            misses: vec![0, 2, 0, 1, 7],
+            log_name: "federated".to_string(),
+            records: vec![
+                RoundRecord {
+                    round: 0,
+                    mean_sampled_acc: 0.5,
+                    sampled_acc_std: 0.01,
+                    expected_acc: 0.52,
+                    train_loss: 0.7,
+                    uplink_bits: 1024,
+                    downlink_bits: 4096,
+                },
+                RoundRecord {
+                    round: 2,
+                    mean_sampled_acc: 0.6,
+                    sampled_acc_std: 0.02,
+                    expected_acc: 0.61,
+                    train_loss: 0.6,
+                    uplink_bits: 1024,
+                    downlink_bits: 4096,
+                },
+            ],
+            ledger,
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_lossless() {
+        let ckpt = sample();
+        let bytes = ckpt.to_bytes().unwrap();
+        let back = Checkpoint::from_bytes(&bytes).unwrap();
+        assert_eq!(back.manifest, ckpt.manifest);
+        assert_eq!(back.probs, ckpt.probs);
+        assert_eq!(back.eval_rng, ckpt.eval_rng);
+        assert_eq!(back.misses, ckpt.misses);
+        assert_eq!(back.log_name, ckpt.log_name);
+        assert_eq!(back.records, ckpt.records);
+        assert_eq!(back.ledger.to_csv(), ckpt.ledger.to_csv());
+        // Encode is deterministic: the roundtrip is a byte fixed point.
+        assert_eq!(back.to_bytes().unwrap(), bytes);
+    }
+
+    #[test]
+    fn run_log_reconstructs() {
+        let ckpt = sample();
+        let log = ckpt.run_log();
+        assert_eq!(log.name, "federated");
+        assert_eq!(log.rounds.len(), 2);
+        assert_eq!(log.rounds[1].round, 2);
+    }
+
+    #[test]
+    fn every_truncation_errors_never_panics() {
+        let bytes = sample().to_bytes().unwrap();
+        for cut in 0..bytes.len() {
+            assert!(
+                Checkpoint::from_bytes(&bytes[..cut]).is_err(),
+                "truncation at {cut} of {} decoded",
+                bytes.len()
+            );
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected() {
+        let mut bytes = sample().to_bytes().unwrap();
+        bytes.push(0);
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn bad_magic_and_version_drift_are_rejected() {
+        let good = sample().to_bytes().unwrap();
+        let mut bad_magic = good.clone();
+        bad_magic[0] ^= 0xFF;
+        let err = Checkpoint::from_bytes(&bad_magic).unwrap_err();
+        assert!(err.to_string().contains("bad magic"), "{err}");
+        let mut bad_version = good;
+        bad_version[4] = 99;
+        let err = Checkpoint::from_bytes(&bad_version).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+    }
+
+    #[test]
+    fn forged_length_fields_are_rejected_before_allocation() {
+        let good = sample().to_bytes().unwrap();
+        // The probs count sits right after the 60-byte fixed header.
+        let mut forged = good.clone();
+        forged[60..64].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Checkpoint::from_bytes(&forged).is_err());
+        // Forge the ledger length near the tail too.
+        let tail = good.len() - sample().ledger.to_bytes().len() - 4;
+        let mut forged = good;
+        forged[tail..tail + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Checkpoint::from_bytes(&forged).is_err());
+    }
+
+    #[test]
+    fn oversized_manifest_is_rejected() {
+        let mut ckpt = sample();
+        ckpt.manifest.n = u32::MAX; // far beyond MAX_MASK_LEN
+        // Encode with a consistent (small) probs vec: the decoder must
+        // reject on the manifest bound before the probs mismatch.
+        let bytes = ckpt.to_bytes().unwrap();
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("oversized manifest"), "{err}");
+    }
+
+    #[test]
+    fn inconsistent_roster_and_cursor_are_rejected() {
+        let mut ckpt = sample();
+        ckpt.manifest.population = 99; // beyond max_clients
+        assert!(Checkpoint::from_bytes(&ckpt.to_bytes().unwrap()).is_err());
+        let mut ckpt = sample();
+        ckpt.manifest.next_round = 7; // beyond rounds
+        assert!(Checkpoint::from_bytes(&ckpt.to_bytes().unwrap()).is_err());
+        let mut ckpt = sample();
+        ckpt.eval_rng = [0; 4]; // the xoshiro fixed point
+        assert!(Checkpoint::from_bytes(&ckpt.to_bytes().unwrap()).is_err());
+    }
+
+    #[test]
+    fn atomic_write_then_load_roundtrips() {
+        let dir = std::env::temp_dir().join(format!(
+            "ckpt-test-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("checkpoint.bin");
+        let ckpt = sample();
+        ckpt.write_atomic(&path).unwrap();
+        // No temp file left behind.
+        assert!(!dir.join("checkpoint.bin.tmp").exists());
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.manifest, ckpt.manifest);
+        assert_eq!(back.probs, ckpt.probs);
+        // Overwrite goes through the same rename path.
+        let mut second = sample();
+        second.manifest.next_round = 5;
+        second.misses = vec![1, 1, 1, 1, 1];
+        second.write_atomic(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap().manifest.next_round, 5);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

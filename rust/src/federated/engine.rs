@@ -38,6 +38,7 @@
 //! tests in `federated::sim`, `federated::gossip`, and
 //! `tests/federated_integration.rs`.
 
+use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -50,7 +51,9 @@ use crate::rng::{sample_distinct, Rng, SeedTree, Xoshiro256pp};
 use crate::sparse::QMatrix;
 use crate::util::error::Result;
 use crate::zampling::{evaluate, DenseExecutor, ProbVector};
+use crate::{anyhow, bail, ensure};
 
+use super::checkpoint::{Checkpoint, CheckpointManifest};
 use super::protocol::{encode_server, ServerMsg};
 use super::Server;
 
@@ -335,6 +338,16 @@ pub trait Transport {
 
     /// The executor the engine evaluates the global model on.
     fn eval_executor(&mut self) -> &mut dyn DenseExecutor;
+
+    /// Ids of previously-unknown clients (`id >= population`) whose
+    /// `Hello` has arrived since the last round boundary — elastic
+    /// membership.  The engine calls this at every round boundary and
+    /// grows the population to cover the returned ids; transports with a
+    /// fixed roster keep the default (no joins).  Returned ids must be
+    /// ascending and below the config's `max-clients` ceiling.
+    fn poll_joins(&mut self, _round: u32, _population: usize) -> Vec<usize> {
+        Vec::new()
+    }
 
     /// Called once after the last round (e.g. broadcast `Shutdown`).
     fn finish(&mut self) -> Result<()> {
@@ -626,6 +639,16 @@ pub struct RoundEngine<'a> {
     log: RunLog,
     ledger: CommLedger,
     verbose: bool,
+    /// First round `run` executes (0 for a fresh engine; the restored
+    /// `next_round` cursor for a resumed one).
+    start_round: usize,
+    /// Write a checkpoint every K completed rounds (0 = never).
+    checkpoint_every: usize,
+    /// Where the checkpoint file goes (atomic temp + rename).
+    checkpoint_path: Option<PathBuf>,
+    /// Chaos hook: error out at the start of the given round, simulating
+    /// a leader killed mid-run (testnet `kill-root` scenarios).
+    fail_at_round: Option<u32>,
 }
 
 impl<'a> RoundEngine<'a> {
@@ -664,13 +687,117 @@ impl<'a> RoundEngine<'a> {
             log: RunLog::new(log_name),
             ledger: CommLedger::default(),
             verbose: false,
+            start_round: 0,
+            checkpoint_every: 0,
+            checkpoint_path: None,
+            fail_at_round: None,
         }
+    }
+
+    /// Reconstruct an engine mid-run from a [`Checkpoint`]: the restored
+    /// engine executes rounds `next_round..rounds` and is byte-identical
+    /// to the uninterrupted run — the probabilities, straggler history,
+    /// run log, ledger, and evaluation-RNG cursor all continue exactly
+    /// where the snapshot left them, and every other determinism-path
+    /// stream is re-derived from `(seed, stream, round)`.
+    ///
+    /// The manifest is cross-checked against `cfg`: a checkpoint from a
+    /// different run (seed, model size, roster, schedule, participation,
+    /// or shard count drift) is rejected rather than silently blended.
+    pub fn resume(
+        cfg: &'a FedConfig,
+        ckpt: Checkpoint,
+        q: Arc<QMatrix>,
+        test: &'a Dataset,
+    ) -> Result<Self> {
+        let m = &ckpt.manifest;
+        ensure!(m.seed == cfg.train.seed, "checkpoint seed {} != config seed {}", m.seed, cfg.train.seed);
+        ensure!(
+            m.n as usize == cfg.train.n,
+            "checkpoint n {} != config n {}",
+            m.n,
+            cfg.train.n
+        );
+        ensure!(
+            m.clients as usize == cfg.clients,
+            "checkpoint clients {} != config clients {}",
+            m.clients,
+            cfg.clients
+        );
+        ensure!(
+            m.max_clients as usize == cfg.max_clients,
+            "checkpoint max-clients {} != config max-clients {}",
+            m.max_clients,
+            cfg.max_clients
+        );
+        ensure!(
+            m.rounds as usize == cfg.rounds,
+            "checkpoint rounds {} != config rounds {}",
+            m.rounds,
+            cfg.rounds
+        );
+        ensure!(
+            m.shards as usize == cfg.shards,
+            "checkpoint shards {} != config shards {}",
+            m.shards,
+            cfg.shards
+        );
+        ensure!(
+            m.participation_bits == cfg.participation.to_bits(),
+            "checkpoint participation {} != config participation {}",
+            f64::from_bits(m.participation_bits),
+            cfg.participation
+        );
+        let eval_rng = Xoshiro256pp::from_state(ckpt.eval_rng)
+            .ok_or_else(|| anyhow!("checkpoint eval-rng cursor is the all-zero state"))?;
+        let out_dim = cfg.train.arch.output_dim();
+        let mut test_y1h = vec![0.0f32; test.len() * out_dim];
+        one_hot_into(&test.y, out_dim, &mut test_y1h);
+        Ok(Self {
+            cfg,
+            population: m.population as usize,
+            seeds: SeedTree::new(cfg.train.seed),
+            server: Server::new(ckpt.probs),
+            q,
+            test,
+            test_y1h,
+            eval_rng,
+            eval_samples: m.eval_samples as usize,
+            eval_every: m.eval_every as usize,
+            start_round: m.next_round as usize,
+            history: RoundHistory { misses: ckpt.misses },
+            log: RunLog { name: ckpt.log_name, rounds: ckpt.records },
+            ledger: ckpt.ledger,
+            verbose: false,
+            checkpoint_every: 0,
+            checkpoint_path: None,
+            fail_at_round: None,
+        })
     }
 
     /// Print per-round progress (drop reports + eval lines) as rounds
     /// complete — the TCP leader's live output.
     pub fn verbose(mut self, on: bool) -> Self {
         self.verbose = on;
+        self
+    }
+
+    /// Write a checkpoint to `path` after every `every` completed rounds
+    /// (0 disables).  The write happens at the round boundary — after the
+    /// round's aggregation, history, ledger, and eval bookkeeping — so a
+    /// resume replays from exactly that boundary.
+    pub fn checkpoint_to(mut self, every: usize, path: Option<PathBuf>) -> Self {
+        self.checkpoint_every = if path.is_some() { every } else { 0 };
+        self.checkpoint_path = path;
+        self
+    }
+
+    /// Chaos hook: make `run` error out at the start of round `round`
+    /// (before broadcasting), simulating a leader killed mid-run.  The
+    /// testnet's `kill-root` scenarios drive this via
+    /// `--fail-at-round` and then resume from the last checkpoint.
+    pub fn fail_at_round(mut self, round: Option<u32>) -> Self {
+        self.fail_at_round = round;
         self
     }
 
@@ -681,7 +808,30 @@ impl<'a> RoundEngine<'a> {
         policy: &mut dyn ParticipationPolicy,
     ) -> Result<FedOutcome> {
         let deadline = DeadlinePolicy::from_cfg(self.cfg);
-        for round in 0..self.cfg.rounds {
+        for round in self.start_round..self.cfg.rounds {
+            // Elastic membership: admit clients whose `Hello` arrived
+            // since the last boundary.  Population only ever grows; a
+            // departed client ages out through the straggler history
+            // instead of shrinking the roster, so client ids stay
+            // stable for the whole run.
+            let joined = transport.poll_joins(round as u32, self.population);
+            if !joined.is_empty() {
+                for &id in &joined {
+                    ensure!(
+                        id < self.cfg.max_clients,
+                        "joining client {id} beyond max-clients {}",
+                        self.cfg.max_clients
+                    );
+                    self.population = self.population.max(id + 1);
+                }
+                self.history.misses.resize(self.population, 0);
+                if self.verbose {
+                    println!("round {round:>3}  joined clients {joined:?}");
+                }
+            }
+            if self.fail_at_round == Some(round as u32) {
+                bail!("chaos: leader failing at round {round} (fail-at-round schedule)");
+            }
             let plan = policy.select(
                 round,
                 self.population,
@@ -746,6 +896,16 @@ impl<'a> RoundEngine<'a> {
                 round_loss,
             };
             self.eval_and_log(transport, &outcome);
+            // Checkpoint at the round boundary, after all bookkeeping,
+            // so a resume replays from exactly this point.  The final
+            // round never checkpoints — the run's artifacts are about
+            // to be written anyway.
+            if self.checkpoint_every != 0
+                && (round + 1) % self.checkpoint_every == 0
+                && round + 1 < self.cfg.rounds
+            {
+                self.write_checkpoint((round + 1) as u32)?;
+            }
         }
         transport.finish()?;
         Ok(FedOutcome {
@@ -754,6 +914,38 @@ impl<'a> RoundEngine<'a> {
             final_probs: self.server.probs,
             history: self.history,
         })
+    }
+
+    /// Snapshot the run at a round boundary: `next_round` is the first
+    /// round a resume must execute.  Everything the snapshot needs is
+    /// either immutable run geometry (re-checked at resume) or the
+    /// engine's own accumulated state.
+    fn write_checkpoint(&self, next_round: u32) -> Result<()> {
+        let Some(path) = &self.checkpoint_path else {
+            return Ok(());
+        };
+        let ckpt = Checkpoint {
+            manifest: CheckpointManifest {
+                seed: self.cfg.train.seed,
+                n: self.cfg.train.n as u32,
+                clients: self.cfg.clients as u32,
+                max_clients: self.cfg.max_clients as u32,
+                rounds: self.cfg.rounds as u32,
+                shards: self.cfg.shards as u32,
+                population: self.population as u32,
+                next_round,
+                eval_every: self.eval_every as u32,
+                eval_samples: self.eval_samples as u32,
+                participation_bits: self.cfg.participation.to_bits(),
+            },
+            probs: self.server.probs.clone(),
+            eval_rng: self.eval_rng.state(),
+            misses: self.history.misses.clone(),
+            log_name: self.log.name.clone(),
+            records: self.log.rounds.clone(),
+            ledger: self.ledger.clone(),
+        };
+        ckpt.write_atomic(path)
     }
 
     /// Evaluate the global `p` and push the round record when the

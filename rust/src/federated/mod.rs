@@ -30,6 +30,7 @@
 //! full module map and `docs/PROTOCOL.md` for the wire format.
 #![deny(missing_docs)]
 
+pub mod checkpoint;
 pub mod engine;
 pub mod gossip;
 pub mod protocol;
@@ -38,15 +39,17 @@ pub mod tree;
 
 mod sim;
 
+pub use checkpoint::{Checkpoint, CheckpointManifest};
 pub use engine::{
     make_policy, Contribution, DeadlinePolicy, FedOutcome, Flaky, ParticipationPolicy, RoundCtx,
     RoundEngine, RoundHistory, RoundOutcome, RoundPlan, RoundTraffic, ShardPlan, StragglerAware,
     Transport, Uniform,
 };
 pub use sim::{
-    client_round, run_federated, run_federated_custom, run_federated_parallel,
-    run_federated_sharded, run_federated_sharded_outages, run_federated_with_drop_schedule,
-    ClientRound, InProcessTransport, PoolTransport, ScheduledDropTransport, ShardedSimTransport,
+    client_round, resume_federated, run_federated, run_federated_custom, run_federated_elastic,
+    run_federated_parallel, run_federated_sharded, run_federated_sharded_outages,
+    run_federated_with_drop_schedule, ClientRound, InProcessTransport, PoolTransport,
+    ScheduledDropTransport, ShardedSimTransport,
 };
 pub use tree::{mask_frame_bits, serve_shard, ShardTree, WireTreeTransport};
 

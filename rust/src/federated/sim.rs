@@ -109,9 +109,15 @@ pub fn client_round(
     );
     let down_bits = round_msg.len() as u64 * 8;
 
-    // 2. Client local training-by-sampling.
+    // 2. Client local training-by-sampling.  The batch sampler is
+    // reseeded from `(seed, client, round)` so a client's round output
+    // is a pure function of the broadcast it received: a worker that
+    // crashed and reconnected — or a resumed leader replaying an
+    // in-flight round from a checkpoint — recomputes exactly the same
+    // masks as the uninterrupted run.
     client.pv.set_probs(&probs);
     client.reset_optimizer(&cfg.train);
+    client.reseed_sampler(seeds.subtree("client", k as u64).rng("train-sampler", round as u64));
     let mut loss = 0.0;
     for epoch in 0..cfg.local_epochs {
         loss = client.run_epoch(exec, shard, cfg.train.batch);
@@ -144,7 +150,10 @@ pub(super) struct FedSetup {
     pub clients: Vec<LocalZampling>,
 }
 
-pub(super) fn init_clients(cfg: &FedConfig, seeds: &SeedTree) -> FedSetup {
+/// `population` is how many client states to build — `cfg.clients` for
+/// the classical fixed-roster drivers, `cfg.max_clients` for elastic
+/// runs that must be ready to admit late joiners.
+pub(super) fn init_clients(cfg: &FedConfig, seeds: &SeedTree, population: usize) -> FedSetup {
     // Shared-seed initialization: every party derives the same Q; the
     // server owns p(0) ~ U(0,1)^n from the shared stream.
     let q = Arc::new(QMatrix::generate(&cfg.train.arch, cfg.train.n, cfg.train.d, seeds));
@@ -153,7 +162,7 @@ pub(super) fn init_clients(cfg: &FedConfig, seeds: &SeedTree) -> FedSetup {
     let init_probs = ProbVector::init_uniform(cfg.train.n, &mut init_rng).probs().to_vec();
 
     // Client states: local (Q, p) + a per-client seed subtree.
-    let clients: Vec<LocalZampling> = (0..cfg.clients)
+    let clients: Vec<LocalZampling> = (0..population)
         .map(|k| {
             let sub = seeds.subtree("client", k as u64);
             LocalZampling::from_parts(
@@ -185,22 +194,45 @@ pub struct InProcessTransport<'a> {
     clients: Vec<LocalZampling>,
     seeds: SeedTree,
     codec: MaskCodec,
+    /// Scheduled `(round, client)` joins — the in-process twin of a late
+    /// `Hello` from an unknown client id on the TCP leader.  The engine
+    /// polls at every round boundary and admits whichever scheduled ids
+    /// have arrived (see [`Transport::poll_joins`]).
+    joins: Vec<(u32, usize)>,
 }
 
 impl<'a> InProcessTransport<'a> {
     /// Build over a shared executor, per-client data shards, and
-    /// per-client training states (see `init_clients`).
+    /// per-client training states (see `init_clients`).  `shards` may
+    /// cover more clients than the starting roster (`cfg.clients`) when
+    /// a join schedule will grow the population mid-run.
     pub fn new(
         cfg: &'a FedConfig,
         exec: &'a mut dyn DenseExecutor,
         shards: &'a [Dataset],
         clients: Vec<LocalZampling>,
     ) -> Self {
-        assert_eq!(shards.len(), cfg.clients, "need one shard per client");
-        assert_eq!(clients.len(), cfg.clients, "need one state per client");
+        assert!(
+            shards.len() >= cfg.clients,
+            "need at least one shard per starting client ({} < {})",
+            shards.len(),
+            cfg.clients
+        );
+        assert_eq!(clients.len(), shards.len(), "need one state per shard");
         let seeds = SeedTree::new(cfg.train.seed);
         let codec = codec_for(cfg);
-        Self { cfg, exec, shards, clients, seeds, codec }
+        Self { cfg, exec, shards, clients, seeds, codec, joins: Vec::new() }
+    }
+
+    /// Schedule `(round, client)` joins: from `round` on, `client`
+    /// announces itself and is admitted at the next boundary — the sim
+    /// twin of a late worker dialing the leader mid-run.
+    pub fn with_join_schedule(mut self, joins: &[(u32, usize)]) -> Self {
+        for &(_, k) in joins {
+            assert!(k < self.shards.len(), "scheduled join for client {k} without a shard");
+        }
+        self.joins = joins.to_vec();
+        self
     }
 }
 
@@ -229,6 +261,18 @@ impl Transport for InProcessTransport<'_> {
             });
         }
         Ok(RoundTraffic { contributions, down_bits, ..Default::default() })
+    }
+
+    fn poll_joins(&mut self, round: u32, population: usize) -> Vec<usize> {
+        let mut joined: Vec<usize> = self
+            .joins
+            .iter()
+            .filter(|&&(r, k)| r <= round && k >= population)
+            .map(|&(_, k)| k)
+            .collect();
+        joined.sort_unstable();
+        joined.dedup();
+        joined
     }
 
     fn eval_executor(&mut self) -> &mut dyn DenseExecutor {
@@ -525,11 +569,12 @@ impl Transport for ShardedSimTransport<'_> {
 ///   local work;
 /// * its training state is replaced fresh (`LocalZampling::from_parts`
 ///   over the same seed subtree), because the process that eventually
-///   rejoins starts from scratch — the only cross-round client state is
-///   the train-sampler cursor, so a fresh state at the rejoin round is
-///   exactly what the restarted `serve-client` process computes.
-///   Resetting at every scheduled drop round is idempotent (the rebuild
-///   is deterministic), so the transport need not know the rejoin round;
+///   rejoins starts from scratch — and since [`client_round`] reseeds
+///   the train sampler from `(seed, client, round)` every round, a
+///   fresh state at the rejoin round computes exactly what the
+///   restarted `serve-client` process does.  Resetting at every
+///   scheduled drop round is idempotent (the rebuild is deterministic),
+///   so the transport need not know the rejoin round;
 /// * downlink is billed only when the previous round did **not** drop
 ///   the client: the first drop of a streak is the kill round, whose
 ///   broadcast write succeeded before the worker died; on later rounds
@@ -671,7 +716,7 @@ pub fn run_federated_custom(
 ) -> FedOutcome {
     assert_eq!(shards.len(), cfg.clients, "need one shard per client");
     let seeds = SeedTree::new(cfg.train.seed);
-    let setup = init_clients(cfg, &seeds);
+    let setup = init_clients(cfg, &seeds, cfg.clients);
     let engine = RoundEngine::new(
         cfg,
         cfg.clients,
@@ -710,7 +755,7 @@ pub fn run_federated_parallel(
 ) -> FedOutcome {
     assert_eq!(shards.len(), cfg.clients, "need one shard per client");
     let seeds = SeedTree::new(cfg.train.seed);
-    let setup = init_clients(cfg, &seeds);
+    let setup = init_clients(cfg, &seeds, cfg.clients);
     let engine = RoundEngine::new(
         cfg,
         cfg.clients,
@@ -746,7 +791,7 @@ pub fn run_federated_sharded(
 ) -> FedOutcome {
     assert_eq!(shards.len(), cfg.clients, "need one shard per client");
     let seeds = SeedTree::new(cfg.train.seed);
-    let setup = init_clients(cfg, &seeds);
+    let setup = init_clients(cfg, &seeds, cfg.clients);
     let engine = RoundEngine::new(
         cfg,
         cfg.clients,
@@ -779,7 +824,7 @@ pub fn run_federated_sharded_outages(
 ) -> FedOutcome {
     assert_eq!(shards.len(), cfg.clients, "need one shard per client");
     let seeds = SeedTree::new(cfg.train.seed);
-    let setup = init_clients(cfg, &seeds);
+    let setup = init_clients(cfg, &seeds, cfg.clients);
     let engine = RoundEngine::new(
         cfg,
         cfg.clients,
@@ -798,6 +843,71 @@ pub fn run_federated_sharded_outages(
     engine.run(&mut transport, policy.as_mut()).expect("in-process transports are infallible")
 }
 
+/// [`run_federated`] with an elastic roster: the run starts with
+/// `cfg.clients` participants and admits the scheduled `(round, client)`
+/// joins at round boundaries, exactly like the TCP leader admits a late
+/// `Hello` from an unknown client id — the sim twin that replays a wire
+/// run's logged join rounds byte-for-byte.  `shards` must cover every
+/// client that can ever exist (`cfg.max_clients`); joined ids age into
+/// the straggler history like any other client and the round plan
+/// rebalances from the next boundary on.
+#[allow(clippy::too_many_arguments)]
+pub fn run_federated_elastic(
+    cfg: &FedConfig,
+    exec: &mut dyn DenseExecutor,
+    shards: &[Dataset],
+    test: &Dataset,
+    eval_samples: usize,
+    eval_every: usize,
+    joins: &[(u32, usize)],
+) -> FedOutcome {
+    assert_eq!(shards.len(), cfg.max_clients, "need one shard per potential client");
+    let seeds = SeedTree::new(cfg.train.seed);
+    let setup = init_clients(cfg, &seeds, cfg.max_clients);
+    let engine = RoundEngine::new(
+        cfg,
+        cfg.clients,
+        Arc::clone(&setup.q),
+        setup.init_probs.clone(),
+        test,
+        eval_samples,
+        eval_every,
+        "federated",
+    );
+    let mut transport =
+        InProcessTransport::new(cfg, exec, shards, setup.clients).with_join_schedule(joins);
+    let mut policy = make_policy(cfg.policy);
+    engine.run(&mut transport, policy.as_mut()).expect("in-process transports are infallible")
+}
+
+/// Resume an in-process run from a checkpoint — the sequential twin of
+/// `repro resume`: the deterministic parts (Q, client states, data
+/// shards) rebuild from the shared seed, the mutable run state (`p`,
+/// eval RNG cursor, straggler history, run log, comm ledger) comes from
+/// `ckpt`, and the remaining rounds replay byte-identical to a run that
+/// was never stopped.  `shards` must cover the full id space
+/// (`cfg.max_clients`); errors if the checkpoint disagrees with `cfg`.
+pub fn resume_federated(
+    cfg: &FedConfig,
+    exec: &mut dyn DenseExecutor,
+    shards: &[Dataset],
+    test: &Dataset,
+    ckpt: super::Checkpoint,
+) -> Result<FedOutcome> {
+    ensure!(
+        shards.len() == cfg.max_clients,
+        "need one shard per potential client ({} != {})",
+        shards.len(),
+        cfg.max_clients
+    );
+    let seeds = SeedTree::new(cfg.train.seed);
+    let setup = init_clients(cfg, &seeds, cfg.max_clients);
+    let engine = RoundEngine::resume(cfg, ckpt, Arc::clone(&setup.q), test)?;
+    let mut transport = InProcessTransport::new(cfg, exec, shards, setup.clients);
+    let mut policy = make_policy(cfg.policy);
+    engine.run(&mut transport, policy.as_mut())
+}
+
 /// [`run_federated`] through [`ScheduledDropTransport`]: replay an
 /// observed `(round, client)` drop schedule deterministically — the
 /// twin for kill-and-restart-a-worker testnet scenarios, whose rejoin
@@ -814,7 +924,7 @@ pub fn run_federated_with_drop_schedule(
 ) -> FedOutcome {
     assert_eq!(shards.len(), cfg.clients, "need one shard per client");
     let seeds = SeedTree::new(cfg.train.seed);
-    let setup = init_clients(cfg, &seeds);
+    let setup = init_clients(cfg, &seeds, cfg.clients);
     let engine = RoundEngine::new(
         cfg,
         cfg.clients,
@@ -1100,5 +1210,127 @@ mod tests {
         shards.pop();
         let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 256);
         run_federated(&cfg, &mut exec, &shards, &test, 2, 1);
+    }
+
+    #[test]
+    fn checkpoint_resume_is_byte_identical_to_uninterrupted() {
+        let (cfg, shards, test) = tiny_fed(false);
+
+        // Reference: the uninterrupted run.
+        let mut e1 = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 256);
+        let full = run_federated(&cfg, &mut e1, &shards, &test, 4, 1);
+
+        // Interrupted twin: checkpoint every 2 rounds, leader killed at
+        // the start of round 4 — one full round after the last boundary
+        // checkpoint, so the resume replays an in-flight round.
+        let path =
+            std::env::temp_dir().join(format!("zampling-sim-ckpt-{}.bin", std::process::id()));
+        let seeds = SeedTree::new(cfg.train.seed);
+        let setup = init_clients(&cfg, &seeds, cfg.clients);
+        let engine = RoundEngine::new(
+            &cfg,
+            cfg.clients,
+            Arc::clone(&setup.q),
+            setup.init_probs.clone(),
+            &test,
+            4,
+            1,
+            "federated",
+        )
+        .checkpoint_to(2, Some(path.clone()))
+        .fail_at_round(Some(4));
+        let mut e2 = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 256);
+        let mut transport = InProcessTransport::new(&cfg, &mut e2, &shards, setup.clients);
+        let mut policy = make_policy(cfg.policy);
+        let killed = engine.run(&mut transport, policy.as_mut());
+        assert!(killed.is_err(), "the chaos kill must surface as an error");
+        drop(transport);
+
+        // Resume from the checkpoint with freshly built state — exactly
+        // what a restarted leader process does.
+        let ckpt = super::super::checkpoint::Checkpoint::load(&path).unwrap();
+        assert_eq!(ckpt.manifest.next_round, 4, "last boundary before the kill");
+        let setup2 = init_clients(&cfg, &seeds, cfg.clients);
+        let engine2 =
+            RoundEngine::resume(&cfg, ckpt, Arc::clone(&setup2.q), &test).unwrap();
+        let mut e3 = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 256);
+        let mut transport2 = InProcessTransport::new(&cfg, &mut e3, &shards, setup2.clients);
+        let mut policy2 = make_policy(cfg.policy);
+        let resumed = engine2.run(&mut transport2, policy2.as_mut()).unwrap();
+        let _ = std::fs::remove_file(&path);
+
+        assert_eq!(resumed.final_probs, full.final_probs, "resume diverged from the clean run");
+        assert_eq!(resumed.log.rounds, full.log.rounds);
+        assert_eq!(resumed.ledger.to_csv(), full.ledger.to_csv());
+    }
+
+    #[test]
+    fn resume_rejects_a_mismatched_config() {
+        let (cfg, shards, test) = tiny_fed(false);
+        let path =
+            std::env::temp_dir().join(format!("zampling-sim-ckpt-bad-{}.bin", std::process::id()));
+        let seeds = SeedTree::new(cfg.train.seed);
+        let setup = init_clients(&cfg, &seeds, cfg.clients);
+        let engine = RoundEngine::new(
+            &cfg,
+            cfg.clients,
+            Arc::clone(&setup.q),
+            setup.init_probs.clone(),
+            &test,
+            2,
+            1,
+            "federated",
+        )
+        .checkpoint_to(2, Some(path.clone()))
+        .fail_at_round(Some(2));
+        let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 256);
+        let mut transport = InProcessTransport::new(&cfg, &mut exec, &shards, setup.clients);
+        let mut policy = make_policy(cfg.policy);
+        assert!(engine.run(&mut transport, policy.as_mut()).is_err());
+        drop(transport);
+
+        let ckpt = super::super::checkpoint::Checkpoint::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let mut other = cfg.clone();
+        other.train.seed += 1;
+        let setup2 = init_clients(&other, &seeds, other.clients);
+        let err = RoundEngine::resume(&other, ckpt, Arc::clone(&setup2.q), &test);
+        assert!(err.is_err(), "a checkpoint from a different seed must be refused");
+    }
+
+    #[test]
+    fn elastic_joins_grow_the_roster_at_round_boundaries() {
+        let (mut cfg, _, test) = tiny_fed(false);
+        cfg.clients = 3;
+        cfg.max_clients = 4;
+        let seeds = SeedTree::new(cfg.train.seed);
+        let (train, _) = Dataset::synthetic_pair(1024, 256, &seeds);
+        let shards = train.partition_iid(cfg.max_clients, &seeds);
+
+        // Client 3 announces itself at round 2 and joins from there on.
+        let joins = [(2u32, 3usize)];
+        let mut e1 = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 256);
+        let a = run_federated_elastic(&cfg, &mut e1, &shards, &test, 4, 2, &joins);
+        assert_eq!(a.ledger.rounds.len(), cfg.rounds);
+        for (i, r) in a.ledger.rounds.iter().enumerate() {
+            let want = if i < 2 { 3 } else { 4 };
+            assert_eq!(r.participants, want, "round {i} roster");
+            assert_eq!(r.clients, want, "round {i} receipts");
+            assert_eq!(r.dropped, 0);
+        }
+        // Elastic admission is deterministic: the twin reproduces the
+        // run byte-for-byte from the same join schedule.
+        let mut e2 = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 256);
+        let b = run_federated_elastic(&cfg, &mut e2, &shards, &test, 4, 2, &joins);
+        assert_eq!(a.final_probs, b.final_probs);
+        assert_eq!(a.ledger.to_csv(), b.ledger.to_csv());
+        // And with no joins the elastic driver degenerates to the fixed
+        // roster (over the max_clients partition).
+        let mut e3 = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 256);
+        let fixed = run_federated_elastic(&cfg, &mut e3, &shards, &test, 4, 2, &[]);
+        for r in &fixed.ledger.rounds {
+            assert_eq!(r.participants, 3, "no joins: the roster never grows");
+        }
+        assert_ne!(a.final_probs, fixed.final_probs, "the joiner must change the aggregate");
     }
 }

@@ -726,6 +726,22 @@ impl Leader {
         self.slots.iter().filter(|s| s.is_some()).count()
     }
 
+    /// Fold queued connection events (joins, reconnects, deaths) into
+    /// the slot table without blocking.  Callers that need the current
+    /// roster *outside* a broadcast or collection — e.g. elastic join
+    /// admission at a round boundary — drain explicitly; the broadcast
+    /// path drains on its own.
+    pub fn drain_control_events(&mut self) {
+        while let Ok(ev) = self.rx.try_recv() {
+            self.apply_control(ev);
+        }
+    }
+
+    /// Whether client id `k` currently has a live registered connection.
+    pub fn is_connected(&self, k: usize) -> bool {
+        self.slots.get(k).is_some_and(|s| s.is_some())
+    }
+
     /// Drain queued connection events, then wait up to `timeout` for
     /// client `k` to be connected.  Returns whether it is.
     pub fn wait_for_client(&mut self, k: usize, timeout: Duration) -> Result<bool> {
@@ -1094,6 +1110,19 @@ impl TcpTransport {
 }
 
 impl Transport for TcpTransport {
+    /// Elastic membership: report every client id at or beyond the
+    /// current population whose `Hello` has landed — the leader's slot
+    /// table already admits any id below its `expected` bound
+    /// (`cfg.max_clients` for elastic runs), so a late worker dialing in
+    /// mid-run surfaces here and the engine grows the roster at the next
+    /// round boundary.
+    fn poll_joins(&mut self, _round: u32, population: usize) -> Vec<usize> {
+        self.leader.drain_control_events();
+        (population..self.leader.num_clients())
+            .filter(|&k| self.leader.is_connected(k))
+            .collect()
+    }
+
     fn exchange(&mut self, ctx: &RoundCtx<'_>) -> Result<RoundTraffic> {
         let receivers = self.leader.broadcast_frame(ctx.frame, ctx.participants)?;
         let receipt =

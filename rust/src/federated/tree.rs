@@ -520,7 +520,28 @@ pub fn serve_shard(
     let seeds = SeedTree::new(cfg.train.seed);
     let deadline = DeadlinePolicy::from_cfg(cfg);
     loop {
-        let frame = parent.recv_raw().with_context(|| format!("shard {shard}: parent link"))?;
+        // A dead parent (e.g. the root killed mid-run and restarted via
+        // `repro resume`) surfaces here as a failed read: re-dial its
+        // merge port with a fresh `Hello` and keep serving.  The node
+        // holds no cross-round state — votes, participants, and worker
+        // round state all derive from the frame and the shared seed —
+        // so replaying the interrupted round from the resumed parent
+        // produces byte-identical merges.  A clean end of run arrives
+        // as a `Shutdown` frame before the parent closes.
+        let frame = match parent.recv_raw() {
+            Ok(frame) => frame,
+            Err(e) => {
+                println!("[shard {shard}] parent link lost ({e:#}); redialing {parent_addr}");
+                parent = Worker::connect_retry(
+                    &parent_addr,
+                    wire_u32(shard),
+                    MaskCodec::Raw,
+                    PARENT_DIAL_TIMEOUT,
+                )
+                .with_context(|| format!("shard {shard}: redialing parent"))?;
+                continue;
+            }
+        };
         match peek_server_frame(&frame)? {
             ServerFrameKind::Shutdown => {
                 for link in &mut children {
@@ -628,7 +649,20 @@ pub fn serve_shard(
                      merged {merged})  merge {}b up",
                     up.len() * 8
                 );
-                parent.send_frame(&up)?;
+                // A failed merge send is the same fault as a failed
+                // read: the parent died holding our link.  Drop this
+                // round's frame (the resumed parent replays the round)
+                // and reconnect.
+                if parent.send_frame(&up).is_err() {
+                    println!("[shard {shard}] merge send failed; redialing {parent_addr}");
+                    parent = Worker::connect_retry(
+                        &parent_addr,
+                        wire_u32(shard),
+                        MaskCodec::Raw,
+                        PARENT_DIAL_TIMEOUT,
+                    )
+                    .with_context(|| format!("shard {shard}: redialing parent"))?;
+                }
             }
         }
     }

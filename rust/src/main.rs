@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   train-local      — Local Zampling per a TOML config
 //!   train-federated  — Federated Zampling (in-process sim, or TCP leader)
+//!   resume           — restart a federated run from a checkpoint file,
+//!                      byte-identical to the uninterrupted run
 //!   serve-client     — TCP worker process (connects to a leader)
 //!   serve-shard      — shard-leader process of the wire aggregation tree
 //!                      (leads its own clients, merges child shards,
@@ -21,7 +23,7 @@
 //! AOT HLO artifacts on the PJRT CPU client; `--backend native` uses the
 //! pure-Rust oracle (the two are integration-tested to agree).
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
 use zampling::config::{
@@ -34,8 +36,8 @@ use zampling::federated::gossip::{run_gossip_wire, run_peer, Topology};
 use zampling::federated::protocol::MaskCodec;
 use zampling::federated::transport::{Leader, ShardedTransport, TcpTransport, Worker};
 use zampling::federated::{
-    client_round, make_policy, run_federated, run_federated_parallel, RoundEngine, ShardPlan,
-    ShardTree, WireTreeTransport,
+    client_round, make_policy, resume_federated, run_federated, run_federated_elastic,
+    run_federated_parallel, Checkpoint, RoundEngine, ShardPlan, ShardTree, WireTreeTransport,
 };
 use zampling::metrics::RunLog;
 use zampling::nn::ArchSpec;
@@ -49,6 +51,7 @@ fn main() -> ExitCode {
     let result = match args.subcommand.as_deref() {
         Some("train-local") => cmd_train_local(&args),
         Some("train-federated") => cmd_train_federated(&args),
+        Some("resume") => cmd_resume(&args),
         Some("serve-client") => cmd_serve_client(&args),
         Some("serve-shard") => cmd_serve_shard(&args),
         Some("serve-peer") => cmd_serve_peer(&args),
@@ -79,7 +82,9 @@ const USAGE: &str = "usage: repro <subcommand> [options]
                     [--policy uniform|straggler-aware]
                     [--listen host:port] [--eval-every N]
                     [--participation F] [--round-timeout-ms MS]
-                    [--round-timeout-max-ms MS]
+                    [--round-timeout-max-ms MS] [--fail-at-round R]
+  resume            --config <toml> --checkpoint <path> [--backend ...]
+                    [--listen host:port] [--out results/]
   serve-client      --addr host:port[,host:port...] --client-id K --config <toml>
                     [--fail-at-round R]
   serve-shard       --addr host:port --shard-id S --config <toml>
@@ -111,9 +116,18 @@ transports (one RoundEngine drives them all; see federated::engine):
 policies: uniform (paper) | straggler-aware (deprioritize clients that
   keep missing --round-timeout-ms; heartbeats can extend deadlines up
   to --round-timeout-max-ms)
+checkpoint/resume (federated.checkpoint-every > 0 in the config):
+  the leader writes <out>/checkpoint.bin atomically at every K-th round
+  boundary; `repro resume` reloads it and replays the remaining rounds
+  byte-identically (workers reconnect with a fresh Hello).  With
+  federated.max-clients > federated.clients a late `serve-client` with a
+  fresh id joins the roster at the next round boundary (elastic
+  membership; local/pool/tcp transports only).
 chaos knobs (testnet schedules map onto these):
   --fail-at-round R   serve-client / serve-shard exit cleanly the moment
-                      round R's frame arrives, before doing any round work
+                      round R's frame arrives, before doing any round
+                      work; on train-federated the *leader* errors out at
+                      the start of round R, simulating a killed root
   --die-after-round R serve-peer exits right after reporting round R";
 
 fn load_train_config(args: &Args) -> Result<TrainConfig, String> {
@@ -281,11 +295,16 @@ fn cmd_train_federated(args: &Args) -> Result<(), String> {
     let eval_samples = args.usize_or("eval-samples", 100);
     let listen = args.str_or("listen", "127.0.0.1:7707");
     let out_dir = args.str_or("out", "results");
+    let fail_at_round = parse_round_arg(args, "fail-at-round")?;
     args.reject_unknown()?;
 
     let seeds = SeedTree::new(cfg.train.seed);
     let (train, test) = load_splits(&cfg.train);
-    let shards = train.partition_iid(cfg.clients, &seeds);
+    // The data is partitioned over the *maximum* client id space, so a
+    // client that joins late trains on the same shard it would have
+    // owned from round 0 (and the sim twin agrees byte-for-byte).  With
+    // the default max-clients = clients this is the classical split.
+    let shards = train.partition_iid(cfg.max_clients, &seeds);
     println!(
         "[repro] federated zampling: {} clients, {} rounds, n={} d={} (transport={} policy={})",
         cfg.clients,
@@ -304,10 +323,34 @@ fn cmd_train_federated(args: &Args) -> Result<(), String> {
         println!("[repro] pjrt backend: pool transport degrades to sequential (local)");
         transport = TransportKind::Local;
     }
+    // The pool transport's lane split assumes a fixed roster; an elastic
+    // id space runs the same math through the sequential transport.
+    if transport == TransportKind::Pool && cfg.max_clients > cfg.clients {
+        println!("[repro] elastic roster: pool transport degrades to sequential (local)");
+        transport = TransportKind::Local;
+    }
+    if fail_at_round.is_some()
+        && transport != TransportKind::Tcp
+        && transport != TransportKind::Sharded
+        && transport != TransportKind::ShardedWire
+    {
+        return Err(format!(
+            "--fail-at-round on train-federated needs a socket leader transport \
+             (tcp, sharded, or sharded-wire; got {})",
+            transport.as_str()
+        ));
+    }
     match transport {
         TransportKind::Local => {
             let mut exec = make_executor(&cfg.train)?;
-            let out = run_federated(&cfg, exec.as_mut(), &shards, &test, eval_samples, eval_every);
+            let out = if cfg.max_clients > cfg.clients {
+                // No socket, so nobody can dial in late — but the run
+                // uses the elastic data split and id space, matching
+                // what the wire twin of a join scenario starts from.
+                run_federated_elastic(&cfg, exec.as_mut(), &shards, &test, eval_samples, eval_every, &[])
+            } else {
+                run_federated(&cfg, exec.as_mut(), &shards, &test, eval_samples, eval_every)
+            };
             print_fed_outcome(&cfg, &out);
             out.log.save(Path::new(&out_dir)).map_err(|e| format!("saving: {e}"))?;
             save_fed_artifacts(&out_dir, &out)?;
@@ -320,18 +363,121 @@ fn cmd_train_federated(args: &Args) -> Result<(), String> {
             save_fed_artifacts(&out_dir, &out)?;
         }
         TransportKind::Tcp => {
-            run_tcp_leader(&cfg, &listen, &test, eval_samples, eval_every, &out_dir)?
+            run_tcp_leader(&cfg, &listen, &test, eval_samples, eval_every, &out_dir, fail_at_round)?
         }
-        TransportKind::Sharded => {
-            run_sharded_leader(&cfg, &listen, &test, eval_samples, eval_every, &out_dir)?
-        }
+        TransportKind::Sharded => run_sharded_leader(
+            &cfg,
+            &listen,
+            &test,
+            eval_samples,
+            eval_every,
+            &out_dir,
+            fail_at_round,
+        )?,
         TransportKind::ShardedWire => {
-            run_tree_root(&cfg, &listen, &test, eval_samples, eval_every, &out_dir)?
+            run_tree_root(&cfg, &listen, &test, eval_samples, eval_every, &out_dir, fail_at_round)?
         }
         TransportKind::GossipTcp => {
             run_gossip_coordinator(&cfg, &listen, &test, eval_samples, eval_every, &out_dir)?
         }
     }
+    Ok(())
+}
+
+/// Where the leader drops its periodic checkpoint (None disables).
+fn checkpoint_path(cfg: &FedConfig, out_dir: &str) -> Option<PathBuf> {
+    (cfg.checkpoint_every != 0).then(|| Path::new(out_dir).join("checkpoint.bin"))
+}
+
+/// `repro resume` — reload a checkpoint written by a federated leader
+/// and replay the remaining rounds, byte-identical to the uninterrupted
+/// run.  The engine picks up `p`, the eval RNG cursor, the straggler
+/// history, the run log, and the comm ledger from the file; workers
+/// reconnect with a fresh `Hello` (their per-round state is a pure
+/// function of the shared seed and the round's broadcast, so nothing
+/// client-side needs saving).
+fn cmd_resume(args: &Args) -> Result<(), String> {
+    use std::net::TcpListener;
+    use std::sync::Arc;
+    use zampling::sparse::QMatrix;
+
+    let ckpt_file = args.get("checkpoint").ok_or("missing --checkpoint <path>")?.to_string();
+    let listen = args.str_or("listen", "127.0.0.1:7707");
+    let out_dir = args.str_or("out", "results");
+    let cfg = load_fed_config(args)?;
+    args.reject_unknown()?;
+
+    let ckpt = Checkpoint::load(Path::new(&ckpt_file)).map_err(|e| format!("{e:#}"))?;
+    let population = ckpt.manifest.population as usize;
+    println!(
+        "[repro] resuming from {ckpt_file}: round {}/{} with {population} clients",
+        ckpt.manifest.next_round, cfg.rounds
+    );
+
+    let seeds = SeedTree::new(cfg.train.seed);
+    let (train, test) = load_splits(&cfg.train);
+
+    let mut transport = cfg.transport;
+    if transport == TransportKind::Pool {
+        println!("[repro] resume: pool transport degrades to sequential (local)");
+        transport = TransportKind::Local;
+    }
+    if transport == TransportKind::Local {
+        let shards = train.partition_iid(cfg.max_clients, &seeds);
+        let mut exec = make_executor(&cfg.train)?;
+        let out = resume_federated(&cfg, exec.as_mut(), &shards, &test, ckpt)
+            .map_err(|e| format!("{e:#}"))?;
+        print_fed_outcome(&cfg, &out);
+        out.log.save(Path::new(&out_dir)).map_err(|e| format!("saving: {e}"))?;
+        save_fed_artifacts(&out_dir, &out)?;
+        return Ok(());
+    }
+
+    let q = Arc::new(QMatrix::generate(&cfg.train.arch, cfg.train.n, cfg.train.d, &seeds));
+    let exec = make_executor(&cfg.train)?;
+    let engine = RoundEngine::resume(&cfg, ckpt, Arc::clone(&q), &test)
+        .map_err(|e| format!("{e:#}"))?
+        .verbose(true)
+        .checkpoint_to(cfg.checkpoint_every, checkpoint_path(&cfg, &out_dir));
+    let mut policy = make_policy(cfg.policy);
+
+    let out = match transport {
+        TransportKind::Tcp => {
+            println!("[repro] leader listening on {listen}, waiting for {population} workers");
+            let listener =
+                TcpListener::bind(listen.as_str()).map_err(|e| format!("binding {listen}: {e}"))?;
+            // Startup blocks on the checkpointed population (everyone
+            // must see the replayed round's broadcast for the restart to
+            // be byte-identical); slots still cover the elastic id space.
+            let roster: Vec<usize> = (0..population).collect();
+            let leader = Leader::from_listener_subset(listener, cfg.max_clients, &roster)
+                .map_err(|e| format!("{e:#}"))?;
+            let mut transport = TcpTransport::new(leader, exec);
+            engine.run(&mut transport, policy.as_mut()).map_err(|e| format!("{e:#}"))?
+        }
+        TransportKind::Sharded => {
+            let plan = ShardPlan::new(cfg.clients, cfg.shards);
+            let addrs = shard_addresses(&listen, &cfg.shard_addrs, cfg.shards)?;
+            let mut transport =
+                ShardedTransport::accept(&addrs, plan, exec).map_err(|e| format!("{e:#}"))?;
+            engine.run(&mut transport, policy.as_mut()).map_err(|e| format!("{e:#}"))?
+        }
+        TransportKind::ShardedWire => {
+            let mut transport =
+                WireTreeTransport::accept(&listen, &cfg, exec).map_err(|e| format!("{e:#}"))?;
+            engine.run(&mut transport, policy.as_mut()).map_err(|e| format!("{e:#}"))?
+        }
+        _ => {
+            return Err(format!(
+                "resume supports local, pool, tcp, sharded, and sharded-wire transports (got {})",
+                transport.as_str()
+            ))
+        }
+    };
+
+    print_fed_outcome(&cfg, &out);
+    out.log.save(Path::new(&out_dir)).map_err(|e| format!("saving: {e}"))?;
+    save_fed_artifacts(&out_dir, &out)?;
     Ok(())
 }
 
@@ -403,12 +549,20 @@ fn run_tcp_leader(
     eval_samples: usize,
     eval_every: usize,
     out_dir: &str,
+    fail_at_round: Option<u32>,
 ) -> Result<(), String> {
+    use std::net::TcpListener;
     use std::sync::Arc;
     use zampling::sparse::QMatrix;
 
     println!("[repro] leader listening on {listen}, waiting for {} workers", cfg.clients);
-    let leader = Leader::accept(listen, cfg.clients).map_err(|e| format!("{e:#}"))?;
+    // Slots exist for the whole elastic id space, but startup only
+    // blocks on the initial roster — a late worker's `Hello` lands in a
+    // live slot and the engine admits it at the next round boundary.
+    let listener = TcpListener::bind(listen).map_err(|e| format!("binding {listen}: {e}"))?;
+    let startup: Vec<usize> = (0..cfg.clients).collect();
+    let leader = Leader::from_listener_subset(listener, cfg.max_clients, &startup)
+        .map_err(|e| format!("{e:#}"))?;
 
     let seeds = SeedTree::new(cfg.train.seed);
     let q = Arc::new(QMatrix::generate(&cfg.train.arch, cfg.train.n, cfg.train.d, &seeds));
@@ -426,7 +580,9 @@ fn run_tcp_leader(
         eval_every,
         "federated_tcp",
     )
-    .verbose(true);
+    .verbose(true)
+    .checkpoint_to(cfg.checkpoint_every, checkpoint_path(cfg, out_dir))
+    .fail_at_round(fail_at_round);
     let mut transport = TcpTransport::new(leader, exec);
     let mut policy = make_policy(cfg.policy);
     let out = engine.run(&mut transport, policy.as_mut()).map_err(|e| format!("{e:#}"))?;
@@ -462,6 +618,7 @@ fn run_sharded_leader(
     eval_samples: usize,
     eval_every: usize,
     out_dir: &str,
+    fail_at_round: Option<u32>,
 ) -> Result<(), String> {
     use std::sync::Arc;
     use zampling::sparse::QMatrix;
@@ -494,7 +651,9 @@ fn run_sharded_leader(
         eval_every,
         "federated_sharded",
     )
-    .verbose(true);
+    .verbose(true)
+    .checkpoint_to(cfg.checkpoint_every, checkpoint_path(cfg, out_dir))
+    .fail_at_round(fail_at_round);
     let mut policy = make_policy(cfg.policy);
     let out = engine.run(&mut transport, policy.as_mut()).map_err(|e| format!("{e:#}"))?;
 
@@ -546,6 +705,7 @@ fn run_tree_root(
     eval_samples: usize,
     eval_every: usize,
     out_dir: &str,
+    fail_at_round: Option<u32>,
 ) -> Result<(), String> {
     use std::sync::Arc;
     use zampling::sparse::QMatrix;
@@ -579,7 +739,9 @@ fn run_tree_root(
         eval_every,
         "federated_sharded",
     )
-    .verbose(true);
+    .verbose(true)
+    .checkpoint_to(cfg.checkpoint_every, checkpoint_path(cfg, out_dir))
+    .fail_at_round(fail_at_round);
     let mut policy = make_policy(cfg.policy);
     let out = engine.run(&mut transport, policy.as_mut()).map_err(|e| format!("{e:#}"))?;
 
@@ -800,10 +962,16 @@ fn cmd_serve_client(args: &Args) -> Result<(), String> {
     if parts.is_empty() {
         return Err("empty --addr".into());
     }
-    if client_id >= cfg.clients {
-        return Err(format!("client-id {client_id} ≥ clients {}", cfg.clients));
+    // Elastic membership: any id below `max-clients` is a legal worker;
+    // ids at or beyond the starting roster join at a round boundary.
+    if client_id >= cfg.max_clients {
+        return Err(format!("client-id {client_id} ≥ max-clients {}", cfg.max_clients));
     }
-    let owner = ShardPlan::new(cfg.clients, cfg.shards).owner(client_id);
+    // Multi-shard transports run a fixed roster (elastic ids only exist
+    // under shards = 1, enforced at config parse), so the plan over the
+    // starting roster is total for every id that reaches it.
+    let owner =
+        if cfg.shards > 1 { ShardPlan::new(cfg.clients, cfg.shards).owner(client_id) } else { 0 };
     // Under the wire tree the worker-facing ports live in the tree
     // address plan (shard s leads workers on base + 1 + s); otherwise
     // the flat sharded rule applies.
@@ -817,10 +985,12 @@ fn cmd_serve_client(args: &Args) -> Result<(), String> {
         println!("[worker {client_id}] shard {owner} leader at {addr}");
     }
 
-    // Every worker derives the identical data split from the shared seed.
+    // Every worker derives the identical data split from the shared
+    // seed, partitioned over the full elastic id space so a late
+    // joiner's shard matches what the sim twin assigns it.
     let seeds = SeedTree::new(cfg.train.seed);
     let (train, _test) = load_splits(&cfg.train);
-    let shard = train.partition_iid(cfg.clients, &seeds).swap_remove(client_id);
+    let shard = train.partition_iid(cfg.max_clients, &seeds).swap_remove(client_id);
     println!("[worker {client_id}] shard rows: {}", shard.len());
 
     let q = Arc::new(QMatrix::generate(&cfg.train.arch, cfg.train.n, cfg.train.d, &seeds));
@@ -839,15 +1009,31 @@ fn cmd_serve_client(args: &Args) -> Result<(), String> {
     // Retry the dial: under testnet the fleet spawns workers and
     // leaders concurrently (and respawns restarted workers), so the
     // leader's listener may come up after this process does.
-    let mut worker =
-        Worker::connect_retry(&addr, client_id as u32, codec, std::time::Duration::from_secs(30))
-            .map_err(|e| format!("{e:#}"))?;
+    let dial_timeout = std::time::Duration::from_secs(30);
+    let mut worker = Worker::connect_retry(&addr, client_id as u32, codec, dial_timeout)
+        .map_err(|e| format!("{e:#}"))?;
     loop {
         // The raw frame feeds the *same* `client_round` body the
         // in-process simulators run, so every transport trains
         // identical numbers; the dispatch only peeks the header so the
         // probs vector is decoded once (inside `client_round`).
-        let frame = worker.recv_raw().map_err(|e| format!("{e:#}"))?;
+        //
+        // A dead leader (e.g. killed mid-round and then restarted via
+        // `repro resume`) surfaces here as a failed read: re-dial with
+        // a fresh `Hello` and keep serving.  Client round state is
+        // derived from the shared seed and the round's broadcast, so
+        // the replayed round trains exactly what the uninterrupted run
+        // would have.  A clean end of run arrives as a `Shutdown` frame
+        // before the leader closes, so this path only fires on faults.
+        let frame = match worker.recv_raw() {
+            Ok(frame) => frame,
+            Err(e) => {
+                println!("[worker {client_id}] leader link lost ({e:#}); reconnecting");
+                worker = Worker::connect_retry(&addr, client_id as u32, codec, dial_timeout)
+                    .map_err(|e| format!("{e:#}"))?;
+                continue;
+            }
+        };
         match peek_server_frame(&frame).map_err(|e| format!("{e:#}"))? {
             ServerFrameKind::Round => {
                 // Chaos schedule: exit cleanly the moment the doomed
@@ -884,7 +1070,14 @@ fn cmd_serve_client(args: &Args) -> Result<(), String> {
                     Some(&mut beat),
                 )
                 .map_err(|e| format!("{e:#}"))?;
-                worker.send_frame(&out.frame).map_err(|e| format!("{e:#}"))?;
+                // A failed uplink is the same fault as a failed read:
+                // the leader died holding our connection.  Reconnect and
+                // wait for the resumed leader to replay the round.
+                if let Err(e) = worker.send_frame(&out.frame) {
+                    println!("[worker {client_id}] mask send failed ({e:#}); reconnecting");
+                    worker = Worker::connect_retry(&addr, client_id as u32, codec, dial_timeout)
+                        .map_err(|e| format!("{e:#}"))?;
+                }
             }
             ServerFrameKind::PeerRound => {
                 return Err(format!(

@@ -59,7 +59,7 @@ impl Summary {
 }
 
 /// One federated round's record (Fig. 4 series).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RoundRecord {
     pub round: usize,
     pub mean_sampled_acc: f64,

@@ -265,6 +265,47 @@ mod tests {
     }
 
     #[test]
+    fn exported_cursor_continues_every_determinism_path_stream() {
+        // The checkpoint persists one cursor per live generator.  For
+        // every stream tag on the byte-identicality path, drain a
+        // prefix through the *actual* consumer methods (f64, bounded
+        // ints, Bernoulli — not just raw words), export the cursor, and
+        // check the resumed generator's continuation matches the
+        // uninterrupted stream draw-for-draw.
+        let seeds = SeedTree::new(99);
+        for tag in [
+            "round-participants",
+            "straggler-participants",
+            "eval-sampler",
+            "p-init",
+            "uplink-mask",
+            "train-sampler",
+        ] {
+            let mut uninterrupted = seeds.rng(tag, 3);
+            for _ in 0..257 {
+                uninterrupted.next_f64();
+                uninterrupted.next_below(17);
+                uninterrupted.bernoulli(0.3);
+            }
+            let mut resumed = Xoshiro256pp::from_state(uninterrupted.state())
+                .expect("live generators never reach the all-zero state");
+            for i in 0..257 {
+                assert_eq!(resumed.next_f64(), uninterrupted.next_f64(), "{tag} f64 {i}");
+                assert_eq!(
+                    resumed.next_below(1000),
+                    uninterrupted.next_below(1000),
+                    "{tag} below {i}"
+                );
+                assert_eq!(
+                    resumed.bernoulli(0.5),
+                    uninterrupted.bernoulli(0.5),
+                    "{tag} bernoulli {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn sample_distinct_properties() {
         let mut r = Xoshiro256pp::seed_from(5);
         let mut out = Vec::new();

@@ -39,6 +39,21 @@
 //!   shared seed and rejoins via the leader's reconnect path.
 //! * `kill-peer:I@R` — gossip node `I` exits right after reporting
 //!   round `R` (`serve-peer --die-after-round R`).
+//! * `kill-root:R+resume` — the *root* errors out at the start of round
+//!   `R` (`train-federated --fail-at-round R`); the orchestrator
+//!   respawns it as `repro resume --checkpoint <root>/checkpoint.bin`
+//!   (logged to `root-restart.log`), which replays the interrupted
+//!   round from the last checkpoint boundary while the workers (and
+//!   shard processes) reconnect.  The config must set
+//!   `federated.checkpoint-every` so a checkpoint exists by round `R`;
+//!   the finished run is byte-identical to the uninterrupted twin, so
+//!   `compare = "full"` is the natural pairing.
+//! * `join:K@R` — spawn worker `K` (a *new* id:
+//!   `clients <= K < max-clients`) once the root's log reports round
+//!   `R`, exercising elastic admission at the next round boundary.  The
+//!   twin replays the root's observed `round R  joined clients [..]`
+//!   lines through `run_federated_elastic`, so `compare = "full"` holds
+//!   despite the join round depending on connect timing.
 //!
 //! Compare modes, strongest first:
 //!
@@ -72,7 +87,8 @@ use std::time::{Duration, Instant};
 use crate::config::{FedConfig, TransportKind};
 use crate::data::Dataset;
 use crate::federated::{
-    run_federated, run_federated_sharded_outages, run_federated_with_drop_schedule, FedOutcome,
+    run_federated, run_federated_elastic, run_federated_sharded_outages,
+    run_federated_with_drop_schedule, FedOutcome,
 };
 use crate::rng::SeedTree;
 use crate::util::error::{Context, Result};
@@ -149,6 +165,21 @@ pub enum ChaosEvent {
         /// Last round the peer reports before exiting.
         round: u32,
     },
+    /// `kill-root:R+resume` — the root errors out at the start of round
+    /// `R` and is respawned from its last checkpoint via `repro resume`.
+    KillRoot {
+        /// Round whose start triggers the root's exit.
+        round: u32,
+    },
+    /// `join:K@R` — spawn worker `K` (a fresh id beyond the starting
+    /// roster) once the root reports round `R`; the engine admits it at
+    /// the next round boundary.
+    Join {
+        /// Client id of the late worker (`clients <= K < max-clients`).
+        client: usize,
+        /// Root-reported round that triggers the spawn.
+        round: u32,
+    },
 }
 
 impl ChaosEvent {
@@ -156,6 +187,18 @@ impl ChaosEvent {
     pub fn parse(spec: &str) -> Result<Self> {
         let (kind, rest) =
             spec.split_once(':').ok_or_else(|| anyhow!("chaos '{spec}': missing ':'"))?;
+        if kind == "kill-root" {
+            // The root has no id, and a dead root without a resume can
+            // never pass — the suffix is mandatory so the intent is
+            // explicit in the scenario file.
+            let round_s = rest.strip_suffix("+resume").ok_or_else(|| {
+                anyhow!("chaos '{spec}': kill-root takes 'kill-root:R+resume'")
+            })?;
+            let round: u32 = round_s
+                .parse()
+                .map_err(|_| anyhow!("chaos '{spec}': bad round '{round_s}'"))?;
+            return Ok(ChaosEvent::KillRoot { round });
+        }
         let (id_s, round_s) =
             rest.split_once('@').ok_or_else(|| anyhow!("chaos '{spec}': missing '@round'"))?;
         let restart = round_s.ends_with("+restart");
@@ -168,9 +211,11 @@ impl ChaosEvent {
             "kill-shard" if !restart => Ok(ChaosEvent::KillShard { shard: id, round }),
             "kill-client" => Ok(ChaosEvent::KillClient { client: id, round, restart }),
             "kill-peer" if !restart => Ok(ChaosEvent::KillPeer { peer: id, round }),
+            "join" if !restart => Ok(ChaosEvent::Join { client: id, round }),
             _ => Err(anyhow!(
                 "chaos '{spec}': unknown kind '{kind}' \
-                 (kill-shard:S@R | kill-client:K@R[+restart] | kill-peer:I@R)"
+                 (kill-shard:S@R | kill-client:K@R[+restart] | kill-peer:I@R | \
+                  kill-root:R+resume | join:K@R)"
             )),
         }
     }
@@ -306,6 +351,60 @@ impl Scenario {
                         cfg.rounds
                     );
                 }
+                ChaosEvent::KillRoot { round } => {
+                    ensure!(
+                        matches!(
+                            cfg.transport,
+                            TransportKind::Tcp
+                                | TransportKind::Sharded
+                                | TransportKind::ShardedWire
+                        ),
+                        "kill-root needs a leader transport (tcp, sharded, or sharded-wire)"
+                    );
+                    ensure!(
+                        cfg.checkpoint_every > 0,
+                        "kill-root: the config must set federated.checkpoint-every > 0 \
+                         (resume needs a checkpoint to load)"
+                    );
+                    ensure!(
+                        cfg.checkpoint_every <= round as usize,
+                        "kill-root: round {round} precedes the first checkpoint boundary \
+                         (checkpoint-every = {})",
+                        cfg.checkpoint_every
+                    );
+                    ensure!(
+                        (round as usize) < cfg.rounds,
+                        "kill-root: round {round} ≥ {}",
+                        cfg.rounds
+                    );
+                    ensure!(
+                        self.chaos
+                            .iter()
+                            .filter(|e| matches!(e, ChaosEvent::KillRoot { .. }))
+                            .count()
+                            == 1,
+                        "at most one kill-root event per scenario (one checkpoint, one resume)"
+                    );
+                }
+                ChaosEvent::Join { client, round } => {
+                    ensure!(
+                        cfg.transport == TransportKind::Tcp,
+                        "join is only supported under transport tcp (the elastic twin \
+                         replays single-leader admission logs)"
+                    );
+                    ensure!(
+                        client >= cfg.clients && client < cfg.max_clients,
+                        "join: client {client} must be a new id in {}..{} \
+                         (clients..max-clients)",
+                        cfg.clients,
+                        cfg.max_clients
+                    );
+                    ensure!(
+                        (round as usize) < cfg.rounds,
+                        "join: round {round} ≥ {}",
+                        cfg.rounds
+                    );
+                }
             }
         }
         Ok(())
@@ -328,12 +427,24 @@ struct Fleet {
     dir: PathBuf,
     exe: PathBuf,
     procs: Vec<Proc>,
+    /// Index of the process whose exit decides the scenario.  Starts at
+    /// 0 (the first spawn is always the root); moves to the respawned
+    /// process when a `kill-root:R+resume` schedule replaces the root.
+    root: usize,
+}
+
+/// A worker the orchestrator spawns only once the root's log reports
+/// `round` — the `join:K@R` chaos flavor.
+struct PendingJoin {
+    round: u32,
+    name: String,
+    args: Vec<String>,
 }
 
 impl Fleet {
     fn new(dir: PathBuf) -> Result<Self> {
         let exe = std::env::current_exe().context("locating the repro binary")?;
-        Ok(Fleet { dir, exe, procs: Vec::new() })
+        Ok(Fleet { dir, exe, procs: Vec::new(), root: 0 })
     }
 
     /// Spawn one `repro` child with stdout+stderr appended to
@@ -362,31 +473,59 @@ impl Fleet {
         Ok(())
     }
 
-    /// Poll the fleet until the root (always `procs[0]`) exits.  Fires
-    /// pending respawns along the way; a nonzero root exit or blowing
-    /// `timeout` fails the scenario (the `Drop` reaps everything).
-    fn drive(&mut self, timeout: Duration) -> Result<()> {
+    /// Poll the fleet until the root exits.  Fires pending respawns
+    /// along the way — a root that dies with a respawn armed (the
+    /// `kill-root:R+resume` schedule, a deliberately nonzero exit) hands
+    /// the root role to its `resume` replacement — and spawns `joins`
+    /// entries once the root's log reports their trigger round.  A
+    /// nonzero exit of the *final* root, or blowing `timeout`, fails the
+    /// scenario (the `Drop` reaps everything).
+    fn drive(&mut self, timeout: Duration, mut joins: Vec<PendingJoin>) -> Result<()> {
         let deadline = Instant::now() + timeout;
         loop {
             let mut respawns = Vec::new();
-            for p in &mut self.procs {
+            for (i, p) in self.procs.iter_mut().enumerate() {
                 if p.child.try_wait().ok().flatten().is_some() {
                     if let Some(args) = p.respawn.take() {
-                        respawns.push((format!("{}-restart", p.name), args));
+                        respawns.push((i, format!("{}-restart", p.name), args));
                     }
                 }
             }
-            for (name, args) in respawns {
+            for (i, name, args) in respawns {
                 self.spawn(&name, &args, None)?;
-            }
-            if let Some(status) = self.procs[0].child.try_wait().context("waiting on root")? {
-                if status.success() {
-                    return Ok(());
+                if i == self.root {
+                    self.root = self.procs.len() - 1;
                 }
-                bail!(
-                    "root exited with {status}; last lines of root.log:\n{}",
-                    tail(&self.dir.join("root.log"), 15)
-                );
+            }
+            if !joins.is_empty() {
+                let log_name = format!("{}.log", self.procs[self.root].name);
+                let log = fs::read_to_string(self.dir.join(log_name)).unwrap_or_default();
+                if let Some(seen) = last_reported_round(&log) {
+                    let mut i = 0;
+                    while i < joins.len() {
+                        if joins[i].round <= seen {
+                            let j = joins.remove(i);
+                            self.spawn(&j.name, &j.args, None)?;
+                        } else {
+                            i += 1;
+                        }
+                    }
+                }
+            }
+            let root = self.root;
+            if let Some(status) = self.procs[root].child.try_wait().context("waiting on root")? {
+                if self.procs[root].respawn.is_some() {
+                    // Scheduled kill observed between the respawn scan
+                    // and here; the next iteration fires the resume.
+                } else if status.success() {
+                    return Ok(());
+                } else {
+                    let name = self.procs[root].name.clone();
+                    bail!(
+                        "{name} exited with {status}; last lines of {name}.log:\n{}",
+                        tail(&self.dir.join(format!("{name}.log")), 15)
+                    );
+                }
             }
             if Instant::now() > deadline {
                 bail!("scenario timed out after {}s (fleet killed)", timeout.as_secs());
@@ -460,6 +599,21 @@ fn arm_pdeathsig(cmd: &mut Command) {
 
 #[cfg(not(target_os = "linux"))]
 fn arm_pdeathsig(_cmd: &mut Command) {}
+
+/// Highest round number any `round {r:>3}  ...` verbose line in `log`
+/// reports — the trigger signal for `join:K@R` spawns.  `None` until
+/// the first round line appears.
+fn last_reported_round(log: &str) -> Option<u32> {
+    let mut last = None;
+    for line in log.lines() {
+        let Some(rest) = line.strip_prefix("round ") else { continue };
+        let Some(num) = rest.split_whitespace().next() else { continue };
+        if let Ok(r) = num.parse::<u32>() {
+            last = Some(last.map_or(r, |l: u32| l.max(r)));
+        }
+    }
+    last
+}
 
 /// Last `n` lines of a log file (best effort, for error messages).
 fn tail(path: &Path, n: usize) -> String {
@@ -543,6 +697,10 @@ pub fn run_scenario(scenario_path: &Path, out_root: &Path) -> Result<String> {
             let _ = fs::remove_file(&p);
         }
     }
+    // A checkpoint left by a previous run matches this config (same
+    // seed), so a resume could silently load stale state and still
+    // pass — remove it so only this run's checkpoint exists.
+    let _ = fs::remove_file(out_dir.join("root").join("checkpoint.bin"));
     let config_arg = scn
         .config
         .canonicalize()
@@ -552,7 +710,7 @@ pub fn run_scenario(scenario_path: &Path, out_root: &Path) -> Result<String> {
 
     let mut fleet = Fleet::new(out_dir.clone())?;
     let root_out = out_dir.join("root").display().to_string();
-    let root_args = argv(&[
+    let mut root_args = argv(&[
         "train-federated",
         "--config",
         &config_arg,
@@ -563,7 +721,29 @@ pub fn run_scenario(scenario_path: &Path, out_root: &Path) -> Result<String> {
         "--eval-samples",
         "2",
     ]);
-    fleet.spawn("root", &root_args, None)?;
+    let kill_root = scn.chaos.iter().find_map(|ev| match *ev {
+        ChaosEvent::KillRoot { round } => Some(round),
+        _ => None,
+    });
+    let root_respawn = kill_root.map(|round| {
+        root_args.extend(argv(&["--fail-at-round", &round.to_string()]));
+        // `resume` restores eval cadence/samples and the log name from
+        // the checkpoint manifest and rejects unknown flags, so the
+        // respawn argv carries only the run identity.
+        let ckpt = out_dir.join("root").join("checkpoint.bin").display().to_string();
+        argv(&[
+            "resume",
+            "--config",
+            &config_arg,
+            "--checkpoint",
+            &ckpt,
+            "--listen",
+            &scn.listen,
+            "--out",
+            &root_out,
+        ])
+    });
+    fleet.spawn("root", &root_args, root_respawn)?;
 
     // Every non-root role dials with retry, so spawn order is free; we
     // still go top-down (shard leaders before workers) to keep startup
@@ -622,8 +802,29 @@ pub fn run_scenario(scenario_path: &Path, out_root: &Path) -> Result<String> {
         _ => {}
     }
 
+    let pending_joins: Vec<PendingJoin> = scn
+        .chaos
+        .iter()
+        .filter_map(|ev| match *ev {
+            ChaosEvent::Join { client, round } => {
+                let kid = client.to_string();
+                let args = argv(&[
+                    "serve-client",
+                    "--addr",
+                    &scn.listen,
+                    "--client-id",
+                    &kid,
+                    "--config",
+                    &config_arg,
+                ]);
+                Some(PendingJoin { round, name: format!("worker-{client}"), args })
+            }
+            _ => None,
+        })
+        .collect();
+
     let spawned = fleet.procs.len();
-    fleet.drive(scn.timeout)?;
+    fleet.drive(scn.timeout, pending_joins)?;
     let killed = fleet.drain(DRAIN_GRACE);
     drop(fleet); // reap everything before reading logs
 
@@ -669,10 +870,11 @@ fn run_twin(cfg: &FedConfig, scn: &Scenario, out_dir: &Path) -> Result<Option<Fe
     } else {
         Dataset::synthetic_pair(cfg.train.train_rows, cfg.train.test_rows, &seeds)
     };
-    let shards = train.partition_iid(cfg.clients, &seeds);
     let mut exec = NativeExecutor::new(cfg.train.arch.clone(), cfg.train.batch, 500);
     // Eval cadence/samples never touch probs or the ledger; keep the
-    // twin's evaluation minimal.
+    // twin's evaluation minimal.  (A kill-root run needs no special
+    // twin: resume replays the interrupted round from the checkpoint
+    // boundary, so the uninterrupted run IS the reference.)
     let eval_every = cfg.rounds.max(1);
     let out = match cfg.transport {
         TransportKind::Tcp => {
@@ -680,7 +882,22 @@ fn run_twin(cfg: &FedConfig, scn: &Scenario, out_dir: &Path) -> Result<Option<Fe
                 .chaos
                 .iter()
                 .any(|ev| matches!(ev, ChaosEvent::KillClient { .. }));
-            if any_kill {
+            let any_join = scn.chaos.iter().any(|ev| matches!(ev, ChaosEvent::Join { .. }));
+            if any_join {
+                // The admission round depends on connect timing, so the
+                // twin replays the rounds the root actually reported —
+                // the elastic mirror of the drop-schedule replay.
+                let log_path = out_dir.join("root.log");
+                let log = fs::read_to_string(&log_path)
+                    .with_context(|| format!("reading {}", log_path.display()))?;
+                let joins = parse_join_schedule(&log)?;
+                ensure!(
+                    !joins.is_empty(),
+                    "join scheduled but the root log reports no joined clients"
+                );
+                let shards = train.partition_iid(cfg.max_clients, &seeds);
+                run_federated_elastic(cfg, &mut exec, &shards, &test, 1, eval_every, &joins)
+            } else if any_kill {
                 let log_path = out_dir.join("root.log");
                 let log = fs::read_to_string(&log_path)
                     .with_context(|| format!("reading {}", log_path.display()))?;
@@ -689,10 +906,17 @@ fn run_twin(cfg: &FedConfig, scn: &Scenario, out_dir: &Path) -> Result<Option<Fe
                     !schedule.is_empty(),
                     "kill-client scheduled but the root log reports no dropped rounds"
                 );
+                let shards = train.partition_iid(cfg.clients, &seeds);
                 run_federated_with_drop_schedule(
                     cfg, &mut exec, &shards, &test, 1, eval_every, &schedule,
                 )
+            } else if cfg.max_clients > cfg.clients {
+                // Elastic config but nobody joined on schedule: still
+                // mirror the wire run's max-clients data split.
+                let shards = train.partition_iid(cfg.max_clients, &seeds);
+                run_federated_elastic(cfg, &mut exec, &shards, &test, 1, eval_every, &[])
             } else {
+                let shards = train.partition_iid(cfg.clients, &seeds);
                 run_federated(cfg, &mut exec, &shards, &test, 1, eval_every)
             }
         }
@@ -705,6 +929,7 @@ fn run_twin(cfg: &FedConfig, scn: &Scenario, out_dir: &Path) -> Result<Option<Fe
                     _ => None,
                 })
                 .collect();
+            let shards = train.partition_iid(cfg.clients, &seeds);
             run_federated_sharded_outages(
                 cfg, &mut exec, &shards, &test, 1, eval_every, cfg.shards, &outages,
             )
@@ -735,6 +960,34 @@ fn parse_drop_schedule(log: &str) -> Result<Vec<(u32, usize)>> {
             }
             let client: usize =
                 id.parse().map_err(|_| anyhow!("bad client id in drop line '{line}'"))?;
+            schedule.push((round, client));
+        }
+    }
+    Ok(schedule)
+}
+
+/// Parse the root's verbose admission lines (`round {r:>3}  joined
+/// clients [a, b]`) into a `(round, client)` schedule for the elastic
+/// replay twin.
+fn parse_join_schedule(log: &str) -> Result<Vec<(u32, usize)>> {
+    let mut schedule = Vec::new();
+    for line in log.lines() {
+        let Some(rest) = line.strip_prefix("round ") else { continue };
+        let Some((round_s, ids)) = rest.split_once("  joined clients [") else { continue };
+        let round: u32 = round_s
+            .trim()
+            .parse()
+            .map_err(|_| anyhow!("unparseable join line '{line}'"))?;
+        let ids = ids
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("unterminated join line '{line}'"))?;
+        for id in ids.split(',') {
+            let id = id.trim();
+            if id.is_empty() {
+                continue;
+            }
+            let client: usize =
+                id.parse().map_err(|_| anyhow!("bad client id in join line '{line}'"))?;
             schedule.push((round, client));
         }
     }
@@ -828,6 +1081,14 @@ mod tests {
             ChaosEvent::parse("kill-peer:2@1").unwrap(),
             ChaosEvent::KillPeer { peer: 2, round: 1 }
         );
+        assert_eq!(
+            ChaosEvent::parse("kill-root:3+resume").unwrap(),
+            ChaosEvent::KillRoot { round: 3 }
+        );
+        assert_eq!(
+            ChaosEvent::parse("join:5@2").unwrap(),
+            ChaosEvent::Join { client: 5, round: 2 }
+        );
         for bad in [
             "kill-shard",
             "kill-shard:1",
@@ -835,6 +1096,11 @@ mod tests {
             "kill-shard:1@y",
             "kill-shard:1@2+restart", // restart is a client-only flavor
             "kill-peer:0@1+restart",
+            "kill-root:3",        // the resume suffix is mandatory
+            "kill-root:3+restart",
+            "kill-root:x+resume",
+            "join:5@2+restart",
+            "join:5",
             "explode:1@2",
         ] {
             assert!(ChaosEvent::parse(bad).is_err(), "accepted {bad:?}");
@@ -933,5 +1199,89 @@ round   3  sampled 0.2500 ± 0.0100  expected 0.2500  (2 of 4 masks)
         assert!(scn.validate_chaos(&cfg).is_err(), "kill-client needs tcp");
         scn.chaos = vec![ChaosEvent::KillPeer { peer: 0, round: 1 }];
         assert!(scn.validate_chaos(&cfg).is_err(), "kill-peer needs gossip");
+    }
+
+    #[test]
+    fn kill_root_validation_requires_a_reachable_checkpoint() {
+        let doc = TomlDoc::parse(
+            "arch = \"small\"\ncompression = 8\ntrain-rows = 512\ntest-rows = 128\n\
+             [federated]\nclients = 4\nrounds = 6\ntransport = \"tcp\"\n\
+             checkpoint-every = 2",
+        )
+        .unwrap();
+        let cfg = FedConfig::from_toml(&doc).unwrap();
+        let mut scn = Scenario {
+            name: "t".into(),
+            config: PathBuf::from("x"),
+            listen: "h:1".into(),
+            timeout: Duration::from_secs(1),
+            compare: CompareMode::None,
+            chaos: vec![ChaosEvent::KillRoot { round: 3 }],
+            expect_log: Vec::new(),
+        };
+        assert!(scn.validate_chaos(&cfg).is_ok());
+        scn.chaos = vec![ChaosEvent::KillRoot { round: 1 }];
+        assert!(scn.validate_chaos(&cfg).is_err(), "no checkpoint exists before round 2");
+        scn.chaos = vec![ChaosEvent::KillRoot { round: 9 }];
+        assert!(scn.validate_chaos(&cfg).is_err(), "round out of range");
+        scn.chaos =
+            vec![ChaosEvent::KillRoot { round: 2 }, ChaosEvent::KillRoot { round: 4 }];
+        assert!(scn.validate_chaos(&cfg).is_err(), "one resume per scenario");
+        let no_ckpt = TomlDoc::parse(
+            "arch = \"small\"\ncompression = 8\ntrain-rows = 512\ntest-rows = 128\n\
+             [federated]\nclients = 4\nrounds = 6\ntransport = \"tcp\"",
+        )
+        .unwrap();
+        let cfg_no_ckpt = FedConfig::from_toml(&no_ckpt).unwrap();
+        scn.chaos = vec![ChaosEvent::KillRoot { round: 3 }];
+        assert!(scn.validate_chaos(&cfg_no_ckpt).is_err(), "checkpoint-every must be set");
+    }
+
+    #[test]
+    fn join_validation_requires_tcp_and_a_fresh_id() {
+        let doc = TomlDoc::parse(
+            "arch = \"small\"\ncompression = 8\ntrain-rows = 512\ntest-rows = 128\n\
+             [federated]\nclients = 4\nmax-clients = 6\nrounds = 6\ntransport = \"tcp\"",
+        )
+        .unwrap();
+        let cfg = FedConfig::from_toml(&doc).unwrap();
+        let mut scn = Scenario {
+            name: "t".into(),
+            config: PathBuf::from("x"),
+            listen: "h:1".into(),
+            timeout: Duration::from_secs(1),
+            compare: CompareMode::None,
+            chaos: vec![ChaosEvent::Join { client: 4, round: 2 }],
+            expect_log: Vec::new(),
+        };
+        assert!(scn.validate_chaos(&cfg).is_ok());
+        scn.chaos = vec![ChaosEvent::Join { client: 2, round: 2 }];
+        assert!(scn.validate_chaos(&cfg).is_err(), "id already in the starting roster");
+        scn.chaos = vec![ChaosEvent::Join { client: 6, round: 2 }];
+        assert!(scn.validate_chaos(&cfg).is_err(), "id beyond max-clients");
+        scn.chaos = vec![ChaosEvent::Join { client: 4, round: 9 }];
+        assert!(scn.validate_chaos(&cfg).is_err(), "round out of range");
+    }
+
+    #[test]
+    fn join_schedule_parses_verbose_admission_lines() {
+        let log = "\
+[repro] federated zampling: 4 clients, 6 rounds, n=100 d=5 (transport=tcp policy=uniform)
+round   0  sampled 0.2500 ± 0.0100  expected 0.2500  (4 of 4 masks)
+round   2  joined clients [4]
+round   3  joined clients [5, 6]
+round   3  sampled 0.2500 ± 0.0100  expected 0.2500  (6 of 6 masks)
+";
+        let schedule = parse_join_schedule(log).unwrap();
+        assert_eq!(schedule, vec![(2, 4), (3, 5), (3, 6)]);
+        assert!(parse_join_schedule("round   0  sampled 0.5 ± 0.0\n").unwrap().is_empty());
+    }
+
+    #[test]
+    fn last_reported_round_tracks_the_maximum() {
+        assert_eq!(last_reported_round(""), None);
+        assert_eq!(last_reported_round("booting\n"), None);
+        let log = "round   0  sampled 0.5\nround   2  dropped clients [1]\nround   1  x\n";
+        assert_eq!(last_reported_round(log), Some(2));
     }
 }

@@ -102,6 +102,15 @@ impl LocalZampling {
         self.opt = ScoreOptimizer::new(cfg.optimizer, cfg.lr, self.q.n);
     }
 
+    /// Replace the batch-sampler RNG.  Federated clients reseed it from
+    /// `(seed, client, round)` at every round start, making a client's
+    /// round output a pure function of the broadcast it received — a
+    /// worker that crashes and reconnects (or a resumed leader's replay
+    /// of an in-flight round) recomputes exactly the same mask.
+    pub fn reseed_sampler(&mut self, rng: Xoshiro256pp) {
+        self.rng = rng;
+    }
+
     /// Reconstruct the weights for the current regime: `Qz` (sampling a
     /// fresh mask) or `Qp` (continuous).
     ///

@@ -1,0 +1,284 @@
+// Integration tests drive sockets, threads-at-scale, or minutes of
+// compute — out of scope for the interpreted Miri lane, which runs the
+// unit subset instead (see docs/ANALYSIS.md for what is skipped where).
+#![cfg(not(miri))]
+
+//! Fuzz-style tests for the checkpoint codec: **no buffer constructible
+//! from arbitrary bytes may panic** `Checkpoint::from_bytes` —
+//! truncated, bit-flipped, forged-length, version-drifted, oversized,
+//! all of it must come back as `Err` or a valid snapshot, never a crash
+//! or a silently garbage restore.  Driven by the in-tree property
+//! harness (`util::prop`), deterministic seeds throughout.  This file is
+//! the executable appendix of the checkpoint section of
+//! `docs/PROTOCOL.md` — every rule the spec states about malformed
+//! checkpoints is asserted here.
+
+use zampling::comm::{CommLedger, EdgeCost, RoundCost, ShardCost};
+use zampling::federated::checkpoint::MAX_CHECKPOINT_LEN;
+use zampling::federated::protocol::MAX_MASK_LEN;
+use zampling::federated::{Checkpoint, CheckpointManifest};
+use zampling::metrics::RoundRecord;
+use zampling::rng::{Rng, Xoshiro256pp};
+use zampling::util::prop::{for_all, Gen};
+
+fn random_bytes(g: &mut Gen, len: usize) -> Vec<u8> {
+    (0..len).map(|_| g.rng.next_u64() as u8).collect()
+}
+
+/// A random run snapshot, valid by construction: roster invariants
+/// hold, the eval-RNG cursor is nonzero, and the misses table matches
+/// the population.
+fn random_checkpoint(g: &mut Gen) -> Checkpoint {
+    let n = g.usize_in(1, 300);
+    let clients = g.usize_in(1, 8) as u32;
+    let max_clients = clients + g.usize_in(0, 4) as u32;
+    let population = g.usize_in(clients as usize, max_clients as usize) as u32;
+    let rounds = g.usize_in(1, 40) as u32;
+    let next_round = g.usize_in(0, rounds as usize) as u32;
+    let mut ledger = CommLedger::default();
+    for _ in 0..g.usize_in(0, 5) {
+        ledger.record(RoundCost {
+            downlink_bits: g.rng.next_u64() >> 40,
+            uplink_bits: g.rng.next_u64() >> 40,
+            clients: g.usize_in(0, clients as usize) as u32,
+            participants: clients,
+            dropped: g.usize_in(0, clients as usize) as u32,
+            wall_ns: g.rng.next_u64() >> 32,
+        });
+        if g.bool_p(0.5) {
+            ledger.record_shard_costs(vec![ShardCost {
+                shard: 0,
+                uplink_bits: g.rng.next_u64() >> 48,
+                downlink_bits: g.rng.next_u64() >> 48,
+                merge_bits: g.rng.next_u64() >> 48,
+                received: g.usize_in(0, clients as usize) as u32,
+                dropped: 0,
+            }]);
+        }
+        if g.bool_p(0.3) {
+            ledger.record_edge_costs(vec![EdgeCost {
+                from: 1,
+                to: 0,
+                bits: g.rng.next_u64() >> 48,
+            }]);
+        }
+    }
+    let records = (0..g.usize_in(0, 6))
+        .map(|i| RoundRecord {
+            round: i,
+            mean_sampled_acc: g.f64_in(0.0, 1.0),
+            sampled_acc_std: g.f64_in(0.0, 0.1),
+            expected_acc: g.f64_in(0.0, 1.0),
+            train_loss: g.f64_in(0.0, 3.0),
+            uplink_bits: g.rng.next_u64() >> 40,
+            downlink_bits: g.rng.next_u64() >> 40,
+        })
+        .collect();
+    Checkpoint {
+        manifest: CheckpointManifest {
+            seed: g.rng.next_u64(),
+            n: n as u32,
+            clients,
+            max_clients,
+            rounds,
+            shards: g.usize_in(1, 4) as u32,
+            population,
+            next_round,
+            eval_every: g.usize_in(1, 10) as u32,
+            eval_samples: g.usize_in(1, 5) as u32,
+            participation_bits: g.f64_in(0.1, 1.0).to_bits(),
+        },
+        probs: g.f32_vec(n, 0.0, 1.0),
+        // `| 1` keeps the cursor off the all-zero xoshiro fixed point.
+        eval_rng: [g.rng.next_u64() | 1, g.rng.next_u64(), g.rng.next_u64(), g.rng.next_u64()],
+        misses: (0..population).map(|_| g.usize_in(0, 9) as u32).collect(),
+        log_name: "federated".to_string(),
+        records,
+        ledger,
+    }
+}
+
+#[test]
+fn random_checkpoints_roundtrip_to_a_byte_fixed_point() {
+    for_all(
+        "encode → decode → encode is the identity",
+        60,
+        0xC4C4,
+        random_checkpoint,
+        |ckpt| {
+            let bytes = ckpt.to_bytes().map_err(|e| format!("encode failed: {e}"))?;
+            let back = Checkpoint::from_bytes(&bytes)
+                .map_err(|e| format!("valid checkpoint rejected: {e}"))?;
+            if back.manifest != ckpt.manifest {
+                return Err("manifest drifted through the roundtrip".into());
+            }
+            if back.probs != ckpt.probs
+                || back.eval_rng != ckpt.eval_rng
+                || back.misses != ckpt.misses
+                || back.log_name != ckpt.log_name
+                || back.records != ckpt.records
+                || back.ledger.to_csv() != ckpt.ledger.to_csv()
+            {
+                return Err("run state drifted through the roundtrip".into());
+            }
+            let again = back.to_bytes().map_err(|e| format!("re-encode failed: {e}"))?;
+            if again != bytes {
+                return Err("re-encode is not byte-identical".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn every_truncation_of_a_random_checkpoint_errors() {
+    for_all(
+        "from_bytes(prefix) is always Err",
+        40,
+        0x7C07,
+        |g| {
+            let bytes = random_checkpoint(g).to_bytes().expect("encode");
+            let cut = g.usize_in(0, bytes.len() - 1);
+            (bytes, cut)
+        },
+        |(bytes, cut)| match Checkpoint::from_bytes(&bytes[..*cut]) {
+            Err(_) => Ok(()),
+            Ok(_) => Err(format!("truncation at {cut} of {} decoded", bytes.len())),
+        },
+    );
+}
+
+#[test]
+fn bit_flips_error_or_decode_to_the_flipped_canonical_form() {
+    for_all(
+        "single-byte corruption never panics and never decodes garbage",
+        120,
+        0xF11B,
+        |g| {
+            let bytes = random_checkpoint(g).to_bytes().expect("encode");
+            let at = g.usize_in(0, bytes.len() - 1);
+            let bit = 1u8 << g.usize_in(0, 7);
+            (bytes, at, bit)
+        },
+        |(bytes, at, bit)| {
+            let mut bad = bytes.clone();
+            bad[*at] ^= bit;
+            match Checkpoint::from_bytes(&bad) {
+                Err(_) => Ok(()),
+                // A flip inside a payload region (a probability, a miss
+                // counter, a metric) yields a *different but valid*
+                // snapshot.  The encoding is canonical, so the only
+                // acceptable Ok is one that re-encodes to exactly the
+                // mutated buffer — anything else is a garbage decode.
+                Ok(ckpt) => {
+                    let again =
+                        ckpt.to_bytes().map_err(|e| format!("re-encode failed: {e}"))?;
+                    if again == bad {
+                        Ok(())
+                    } else {
+                        Err(format!("byte {at} flip decoded non-canonically"))
+                    }
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn version_drift_is_always_rejected() {
+    for_all(
+        "any version other than the current one errors",
+        60,
+        0xD217,
+        |g| {
+            let bytes = random_checkpoint(g).to_bytes().expect("encode");
+            let version = if g.bool_p(0.5) {
+                g.usize_in(2, 1000) as u32
+            } else {
+                0
+            };
+            (bytes, version)
+        },
+        |(bytes, version)| {
+            let mut bad = bytes.clone();
+            bad[4..8].copy_from_slice(&version.to_le_bytes());
+            match Checkpoint::from_bytes(&bad) {
+                Err(e) if e.to_string().contains("version") => Ok(()),
+                Err(e) => Err(format!("wrong error for version drift: {e}")),
+                Ok(_) => Err(format!("version {version} decoded")),
+            }
+        },
+    );
+}
+
+#[test]
+fn forged_length_fields_error_before_allocation() {
+    for_all(
+        "a forged probs count is rejected, huge or merely wrong",
+        80,
+        0x10EA,
+        |g| {
+            let bytes = random_checkpoint(g).to_bytes().expect("encode");
+            // Offset 60 is the probs count (16B magic/version/seed/
+            // participation + 9 × 4B manifest words).
+            let true_n = u32::from_le_bytes(bytes[60..64].try_into().expect("4 bytes"));
+            let forged: u32 = if g.bool_p(0.5) {
+                u32::MAX - g.usize_in(0, 1 << 16) as u32 // allocation bomb
+            } else {
+                true_n.wrapping_add(g.usize_in(1, 64) as u32) // off by a little
+            };
+            (bytes, forged)
+        },
+        |(bytes, forged)| {
+            let mut bad = bytes.clone();
+            bad[60..64].copy_from_slice(&forged.to_le_bytes());
+            match Checkpoint::from_bytes(&bad) {
+                Err(_) => Ok(()),
+                Ok(_) => Err(format!("forged probs count {forged} decoded")),
+            }
+        },
+    );
+}
+
+#[test]
+fn arbitrary_bytes_never_panic_the_decoder() {
+    for_all(
+        "from_bytes(arbitrary bytes) never panics",
+        400,
+        0xFEED,
+        |g| {
+            let len = g.usize_in(0, 128);
+            let mut buf = random_bytes(g, len);
+            // Half the time, plant the real magic + version so the
+            // deeper manifest and section branches are exercised.
+            if buf.len() >= 8 && g.bool_p(0.5) {
+                buf[..4].copy_from_slice(&u32::from_le_bytes(*b"zckp").to_le_bytes());
+                buf[4..8].copy_from_slice(&1u32.to_le_bytes());
+            }
+            buf
+        },
+        |buf| {
+            // Outcome may be Ok or Err; only a panic is a failure, and
+            // the harness turns panics into test failures for us.
+            let _ = Checkpoint::from_bytes(buf);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn oversized_inputs_and_manifests_are_rejected() {
+    // Beyond the file-size cap: rejected before any parsing.
+    let huge = vec![0u8; MAX_CHECKPOINT_LEN + 1];
+    let err = Checkpoint::from_bytes(&huge).unwrap_err();
+    assert!(err.to_string().contains("cap"), "{err}");
+
+    // A manifest claiming n beyond the wire protocol's mask cap is
+    // rejected on the bound itself, before the probs section is read.
+    let mut g = Gen { rng: Xoshiro256pp::seed_from(0x517E) };
+    let mut ckpt = random_checkpoint(&mut g);
+    ckpt.manifest.n = (MAX_MASK_LEN as u32).saturating_add(1);
+    let bytes = ckpt.to_bytes().expect("encode");
+    let err = Checkpoint::from_bytes(&bytes).unwrap_err();
+    assert!(err.to_string().contains("oversized manifest"), "{err}");
+}

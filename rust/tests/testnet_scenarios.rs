@@ -15,6 +15,11 @@
 //!   subtree from the kill round on,
 //! * a killed-and-restarted worker rejoins mid-run (probs still match
 //!   the drop-schedule twin),
+//! * a **root** killed mid-run resumes from its checkpoint —
+//!   byte-identical to the *uninterrupted* twin, ledger included, for
+//!   both the flat TCP leader and the depth-2 shard tree,
+//! * late joiners with fresh ids are admitted at a round boundary and
+//!   the elastic twin reproduces the grown run byte-for-byte,
 //! * a depth-3 chain bills one same-sized `ShardVotes` merge frame per
 //!   hop, with each hop's `merged` count equal to its subtree total,
 //! * a deliberately failing scenario leaves **no orphaned processes**
@@ -226,6 +231,108 @@ fn depth3_chain_merges_and_bills_every_hop() {
     all_bits.dedup();
     assert_eq!(all_bits.len(), 1, "merge frame sizes differ across hops: {all_bits:?}");
     assert!(all_bits[0] > 0);
+}
+
+/// Kill-the-root chaos: the flat-TCP leader errors out at the start of
+/// round 3, the orchestrator respawns it as `repro resume` from the
+/// checkpoint written at the round-2 boundary, and the workers re-dial
+/// and re-`Hello`.  Resume must be invisible: the finished artifacts
+/// are byte-identical to the **uninterrupted** in-process twin, ledger
+/// included (restored rows + the replayed rounds).
+#[test]
+fn killed_tcp_root_resumes_byte_identical_to_an_uninterrupted_run() {
+    let (output, dir) = run_testnet("tcp-resume.toml", "tcp_resume");
+    assert_pass(&output, "tcp-resume");
+
+    let root_log = read(&dir.join("root.log"));
+    assert!(
+        root_log.contains("leader failing at round 3"),
+        "root did not die on schedule:\n{root_log}"
+    );
+    let restart_log = read(&dir.join("root-restart.log"));
+    assert!(
+        restart_log.contains("resuming from"),
+        "respawned root did not resume from the checkpoint:\n{restart_log}"
+    );
+    assert!(dir.join("root/checkpoint.bin").exists(), "no checkpoint left on disk");
+
+    assert_eq!(
+        read_bytes(&dir.join("root/final_probs.bin")),
+        read_bytes(&dir.join("twin.final_probs.bin")),
+        "resumed final_probs differ from the uninterrupted twin"
+    );
+    assert_eq!(
+        read(&dir.join("root/ledger.csv")),
+        read(&dir.join("twin.ledger.csv")),
+        "resumed ledger differs from the uninterrupted twin"
+    );
+}
+
+/// Same contract one layer up: the **depth-2 shard-tree** root dies at
+/// round 3 and resumes; shard leaders re-dial the fresh root, workers
+/// re-dial their shard leaders, and the whole tree finishes
+/// byte-identical to the uninterrupted twin under `compare = "full"`.
+#[test]
+fn killed_tree_root_resumes_byte_identical_to_an_uninterrupted_run() {
+    let (output, dir) = run_testnet("tree-depth2-resume.toml", "tree_resume");
+    assert_pass(&output, "tree-depth2-resume");
+
+    assert!(
+        read(&dir.join("root.log")).contains("leader failing at round 3"),
+        "root did not die on schedule"
+    );
+    assert!(
+        read(&dir.join("root-restart.log")).contains("resuming from"),
+        "respawned root did not resume from the checkpoint"
+    );
+    // Both shard leaders kept merging after the resume.
+    for s in 0..2 {
+        let bits = merge_bits(&read(&dir.join(format!("shard-{s}.log"))));
+        assert!(bits.len() >= 6, "shard {s}: merges missing after resume: {bits:?}");
+    }
+    assert_eq!(
+        read_bytes(&dir.join("root/final_probs.bin")),
+        read_bytes(&dir.join("twin.final_probs.bin")),
+        "resumed final_probs differ from the uninterrupted twin"
+    );
+    assert_eq!(
+        read(&dir.join("root/ledger.csv")),
+        read(&dir.join("twin.ledger.csv")),
+        "resumed ledger differs from the uninterrupted twin"
+    );
+}
+
+/// Elastic membership: two late workers with fresh ids (4 and 5, above
+/// the starting roster of 4) are spawned mid-run; the leader admits
+/// each at the next round boundary and logs the admission.  The twin
+/// replays the *observed* admission rounds through the elastic
+/// simulator, so the grown run must still match byte-for-byte.
+#[test]
+fn late_joiners_grow_the_population_and_match_the_elastic_twin() {
+    let (output, dir) = run_testnet("tcp-join.toml", "tcp_join");
+    assert_pass(&output, "tcp-join");
+
+    let root_log = read(&dir.join("root.log"));
+    assert!(
+        root_log.contains("joined clients"),
+        "root never admitted a joiner:\n{root_log}"
+    );
+    for k in [4, 5] {
+        assert!(
+            dir.join(format!("worker-{k}.log")).exists(),
+            "late worker {k} never spawned"
+        );
+    }
+    assert_eq!(
+        read_bytes(&dir.join("root/final_probs.bin")),
+        read_bytes(&dir.join("twin.final_probs.bin")),
+        "elastic final_probs differ from the simulator twin"
+    );
+    assert_eq!(
+        read(&dir.join("root/ledger.csv")),
+        read(&dir.join("twin.ledger.csv")),
+        "elastic ledger differs from the simulator twin"
+    );
 }
 
 /// A scenario that blows its 2-second timeout must fail — and must

@@ -87,13 +87,22 @@ fn seeded_testnet_mislayering_is_caught_and_allowed_edge_passes() {
 fn seeded_panic_violations_are_caught_and_allowlist_respected() {
     let report = fixture_report();
     let panics: Vec<_> = report.violations.iter().filter(|v| v.lint == "panic").collect();
-    // Exactly the two live sites: the bare unwrap and the bare panic!.
-    // The annotated expect, the cfg(test) unwrap, and the tokens inside
-    // a string and a comment must NOT be flagged.
-    assert_eq!(panics.len(), 2, "{panics:?}");
-    assert!(panics.iter().all(|v| v.file == "federated/protocol.rs"));
+    // Exactly the three live sites: protocol.rs's bare unwrap and bare
+    // panic!, plus checkpoint.rs's bare expect.  The annotated sites,
+    // the cfg(test) unwraps, and the tokens inside a string and a
+    // comment must NOT be flagged.
+    assert_eq!(panics.len(), 3, "{panics:?}");
+    assert!(panics
+        .iter()
+        .all(|v| v.file == "federated/protocol.rs" || v.file == "federated/checkpoint.rs"));
     assert!(panics.iter().any(|v| v.message.contains(".unwrap()")));
     assert!(panics.iter().any(|v| v.message.contains("panic!(")));
+    assert!(
+        panics
+            .iter()
+            .any(|v| v.file == "federated/checkpoint.rs" && v.message.contains(".expect(")),
+        "{panics:?}"
+    );
 }
 
 #[test]
@@ -121,11 +130,23 @@ fn seeded_nondeterminism_is_caught_and_allowlist_respected() {
     let report = fixture_report();
     let nondet: Vec<_> =
         report.violations.iter().filter(|v| v.lint == "determinism").collect();
-    // Exactly the two live sites: the HashMap import/use and the bare
-    // Instant::now.  The annotated SystemTime, the cfg(test) HashSet,
-    // and HashMap inside a string must NOT be flagged.
-    assert!(nondet.iter().all(|v| v.file == "federated/sim.rs"), "{nondet:?}");
+    // sim.rs seeds the HashMap import/use and the bare Instant::now;
+    // checkpoint.rs seeds a std::env read.  The annotated SystemTime,
+    // the cfg(test) HashSet, and HashMap inside a string must NOT be
+    // flagged.
+    assert!(
+        nondet
+            .iter()
+            .all(|v| v.file == "federated/sim.rs" || v.file == "federated/checkpoint.rs"),
+        "{nondet:?}"
+    );
     assert!(nondet.iter().any(|v| v.message.contains("`HashMap`")), "{nondet:?}");
+    assert!(
+        nondet
+            .iter()
+            .any(|v| v.file == "federated/checkpoint.rs" && v.message.contains("`std::env`")),
+        "{nondet:?}"
+    );
     assert!(
         nondet.iter().any(|v| v.message.contains("`Instant::now`")),
         "{nondet:?}"
@@ -144,13 +165,22 @@ fn seeded_nondeterminism_is_caught_and_allowlist_respected() {
 fn seeded_narrowing_casts_are_caught_and_allowlist_respected() {
     let report = fixture_report();
     let casts: Vec<_> = report.violations.iter().filter(|v| v.lint == "cast").collect();
-    // Exactly the two live sites: `len as u32` and `id as u8`.  The
-    // annotated masked cast, the widening `as u64`, the cfg(test) cast,
-    // and casts in prose must NOT be flagged.
-    assert_eq!(casts.len(), 2, "{casts:?}");
-    assert!(casts.iter().all(|v| v.file == "federated/protocol.rs"));
+    // Exactly the three live sites: protocol.rs's `len as u32` and
+    // `id as u8`, plus checkpoint.rs's `round as u16`.  The annotated
+    // masked casts, the widening `as u64`, the cfg(test) casts, and
+    // casts in prose must NOT be flagged.
+    assert_eq!(casts.len(), 3, "{casts:?}");
+    assert!(casts
+        .iter()
+        .all(|v| v.file == "federated/protocol.rs" || v.file == "federated/checkpoint.rs"));
     assert!(casts.iter().any(|v| v.message.contains("as u32")), "{casts:?}");
     assert!(casts.iter().any(|v| v.message.contains("as u8")), "{casts:?}");
+    assert!(
+        casts
+            .iter()
+            .any(|v| v.file == "federated/checkpoint.rs" && v.message.contains("as u16")),
+        "{casts:?}"
+    );
 }
 
 #[test]
@@ -188,5 +218,24 @@ fn fixture_summary_counts_every_lint() {
     for lint in ["layering", "panic", "frames", "determinism", "casts", "safety"] {
         assert!(lines.contains(lint), "summary missing `{lint}`:\n{lines}");
     }
-    assert!(report.count("panic") == 2 && report.count("cast") == 2, "{lines}");
+    assert!(report.count("panic") == 3 && report.count("cast") == 3, "{lines}");
+}
+
+/// The real tree's `federated/checkpoint.rs` sits under all three
+/// token lints at once (ARCHITECTURE.md); this proves that stacking
+/// the directives on one file fires each of them independently — a
+/// checkpoint decoder that can panic, truncate, or read ambient state
+/// would silently break the byte-identical-resume contract.
+#[test]
+fn seeded_checkpoint_file_fires_every_stacked_directive() {
+    let report = fixture_report();
+    let ckpt: Vec<_> = report
+        .violations
+        .iter()
+        .filter(|v| v.file == "federated/checkpoint.rs")
+        .collect();
+    assert_eq!(ckpt.len(), 3, "{ckpt:?}");
+    for lint in ["panic", "cast", "determinism"] {
+        assert!(ckpt.iter().any(|v| v.lint == lint), "missing `{lint}`: {ckpt:?}");
+    }
 }

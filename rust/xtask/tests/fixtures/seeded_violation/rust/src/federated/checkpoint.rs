@@ -1,0 +1,40 @@
+//! Fixture: checkpoint codec under `deny-panic`, `deny-cast`, and
+//! `deterministic` all at once — one live violation per directive,
+//! next to sites each lint must tolerate.
+
+/// Decodes a checkpoint header from untrusted on-disk bytes.
+pub fn decode_header(bytes: &[u8]) -> u64 {
+    // VIOLATION (panic): bare expect on file-controlled data.
+    let head = bytes.first().expect("checkpoint never empty");
+    // Tolerated: annotated invariant.
+    // lint: allow(panic) — fixture invariant, emptiness just checked.
+    let tail = bytes.last().unwrap();
+    u64::from(*head) + u64::from(*tail)
+}
+
+pub fn encode_round(round: usize, flags: u64) -> (u16, u64) {
+    // VIOLATION (cast): bare narrowing cast of a round counter.
+    let wire_round = round as u16;
+    // Tolerated: annotated bounded cast.
+    // lint: allow(cast) — low byte explicitly masked; cannot truncate.
+    let low = (flags & 0xff) as u8;
+    (wire_round, u64::from(low))
+}
+
+pub fn resume_dir() -> String {
+    // VIOLATION (determinism): ambient env read in the restore path.
+    std::env::var("CKPT_DIR").unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    // Tolerated: tests may unwrap, cast, and read the env freely.
+    #[test]
+    fn header() {
+        let v: Option<u32> = Some(1);
+        assert_eq!(v.unwrap(), 1);
+        let n: usize = 7;
+        assert_eq!(n as u16, 7);
+        let _ = std::env::var("CKPT_DIR");
+    }
+}
